@@ -1,0 +1,88 @@
+//! END-TO-END driver (EXPERIMENTS.md §End-to-end): the paper's §1
+//! motivating workload — K-times-repeated k-fold cross-validation of a
+//! full SLOPE regularization path — run through the Layer-3 coordinator
+//! on a real small workload (the golub leukemia stand-in, 38 × 7129),
+//! with the strong screening rule on and off.
+//!
+//! This exercises every layer in composition: data → coordinator (worker
+//! pool, fold scheduling) → path driver (screening + KKT safeguard) →
+//! FISTA → prox, and reports the paper's headline quantity: the
+//! wall-clock ratio between screened and unscreened fits.
+//!
+//! Run: `cargo run --release --example cross_validation -- --folds 5 --repeats 2`
+
+use slope_screen::cli::Args;
+use slope_screen::coordinator::{cross_validate, CvConfig};
+use slope_screen::data::real::RealDataset;
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{PathOptions, Strategy};
+
+fn main() {
+    let parsed = Args::new("repeated k-fold CV of a SLOPE path on golub (end-to-end driver)")
+        .opt("folds", "5", "folds per repeat")
+        .opt("repeats", "2", "repeats")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("path-length", "100", "path points")
+        .opt("q", "0.01", "BH parameter")
+        .flag("no-screening-baseline", "skip the unscreened baseline")
+        .parse();
+
+    let prob = RealDataset::Golub.load();
+    println!(
+        "workload: golub stand-in, n={} p={} family={}; {}x{}-fold CV over a {}-step path",
+        prob.n(),
+        prob.p(),
+        prob.family.name(),
+        parsed.usize("repeats"),
+        parsed.usize("folds"),
+        parsed.usize("path-length"),
+    );
+
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: parsed.f64("q") });
+    cfg.length = parsed.usize("path-length");
+    let cv_cfg = CvConfig {
+        folds: parsed.usize("folds"),
+        repeats: parsed.usize("repeats"),
+        threads: parsed.usize("threads"),
+        seed: 2020,
+    };
+
+    let mut times = Vec::new();
+    let strategies: Vec<Strategy> = if parsed.bool("no-screening-baseline") {
+        vec![Strategy::StrongSet]
+    } else {
+        vec![Strategy::StrongSet, Strategy::NoScreening]
+    };
+    for strategy in strategies {
+        let opts = PathOptions::new(cfg.clone()).with_strategy(strategy);
+        let res = cross_validate(&prob, &opts, &cv_cfg);
+        let total_viol: usize = res.folds.iter().map(|f| f.violations).sum();
+        let mean_fit: f64 = slope_screen::linalg::ops::mean(
+            &res.folds.iter().map(|f| f.fit_time).collect::<Vec<_>>(),
+        );
+        println!(
+            "\nstrategy={:<8}  wall={:.3}s  ({} fits, mean fit {:.3}s, violations {})",
+            strategy.name(),
+            res.wall_time,
+            res.folds.len(),
+            mean_fit,
+            total_viol
+        );
+        println!(
+            "  model selection: best sigma index {} of {}, held-out deviance {:.4} ± {:.4}",
+            res.best_index,
+            res.sigmas.len(),
+            res.mean_deviance[res.best_index],
+            res.se_deviance[res.best_index]
+        );
+        times.push((strategy.name(), res.wall_time));
+    }
+    if times.len() == 2 {
+        println!(
+            "\nscreening speed-up on this workload: {:.1}x (no-screening {:.2}s / strong {:.2}s)",
+            times[1].1 / times[0].1,
+            times[1].1,
+            times[0].1
+        );
+    }
+}

@@ -1,0 +1,75 @@
+//! Quickstart: fit a SLOPE regularization path with the strong screening
+//! rule, exercising all three layers of the stack:
+//!
+//! * Layer 1/2 — the AOT-compiled JAX/Pallas gradient artifact, loaded and
+//!   executed through PJRT (no Python at run time),
+//! * Layer 3 — the Rust path driver with Algorithm 3 (strong set) and the
+//!   KKT safeguard.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` once beforehand).
+
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::rng::Pcg64;
+use slope_screen::runtime::{default_artifact_dir, ArtifactGradient, Manifest};
+use slope_screen::slope::family::Family;
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{fit_path, FullGradient, NativeGradient, PathOptions};
+
+fn main() -> anyhow::Result<()> {
+    // A small p > n problem with correlated predictors.
+    let spec = SyntheticSpec {
+        n: 100,
+        p: 400,
+        rho: 0.3,
+        design: DesignKind::Compound,
+        beta: BetaSpec::PlusMinus { k: 10, scale: 2.0 },
+        family: Family::Gaussian,
+        noise_sd: 1.0,
+        standardize: true,
+    };
+    let prob = spec.generate(&mut Pcg64::new(7));
+    println!("problem: n={} p={} family={}", prob.n(), prob.p(), prob.family.name());
+
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+    cfg.length = 30;
+    let opts = PathOptions::new(cfg);
+
+    // Fit once with the native gradient engine, once through the
+    // AOT-compiled XLA artifact; the paths must agree.
+    let native_fit = fit_path(&prob, &opts, &NativeGradient(&prob));
+
+    let manifest = Manifest::load(&default_artifact_dir())?;
+    let grad = ArtifactGradient::new(&manifest, &prob)?;
+    println!(
+        "xla engine: bucket {:?}, padding overhead {:.2}x",
+        grad.bucket(),
+        grad.padding_overhead()
+    );
+    let xla_fit = fit_path(&prob, &opts, &grad);
+
+    println!("\nstep  sigma     active  screened  |Δβ| native-vs-xla");
+    let steps = native_fit.steps.len().min(xla_fit.steps.len());
+    for m in 0..steps {
+        let a = native_fit.beta_at(m, prob.p_total());
+        let b = xla_fit.beta_at(m, prob.p_total());
+        let diff = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        let s = &native_fit.steps[m];
+        println!(
+            "{m:>4}  {:<8.4} {:>6}  {:>8}  {:.2e}",
+            s.sigma, s.n_active, s.n_screened_rule, diff
+        );
+        assert!(diff < 1e-6, "engines disagree at step {m}: {diff}");
+    }
+    println!(
+        "\nOK: {} path steps agree across engines (native vs {}), {} violations",
+        steps,
+        grad.label(),
+        native_fit.total_violations
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+"""AOT driver: lower the Layer-2 gradient graphs to HLO *text* artifacts.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts are emitted per (family, n, p[, m]) shape bucket; every shape is
+pre-padded by the Rust runtime to multiples of 64 so the Pallas tiles
+divide evenly (zero rows/columns contribute exactly zero to Xᵀh(Xβ, y) for
+all four families — DESIGN.md §8). ``manifest.json`` indexes the artifacts
+for the runtime.
+
+Usage: ``python -m compile.aot --out ../artifacts [--full]``
+"""
+
+import argparse
+import json
+import os
+
+# float64 end-to-end (see model.py).
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def round64(x: int) -> int:
+    """Round up to the next multiple of 64 (minimum 64)."""
+    return max(64, (x + 63) // 64 * 64)
+
+
+# The curated artifact set: shapes the integration tests, the examples and
+# the XLA-engine CLI paths exercise. (n, p) are already bucketed. `--full`
+# adds the complete experiment matrix of DESIGN.md §5.
+CORE_SHAPES = [
+    # family, n, p, m
+    ("gaussian", 128, 512, 1),       # quickstart / integration tests
+    ("binomial", 128, 512, 1),
+    ("poisson", 128, 512, 1),
+    ("multinomial", 128, 512, 3),
+    ("gaussian", 256, 5056, 1),      # Fig 1 / Fig 6 bucket
+    ("binomial", 64, 7168, 1),       # golub (38 × 7129)
+    ("gaussian", 256, 20032, 1),     # Fig 4 / Table 1 OLS bucket
+]
+
+FULL_SHAPES = CORE_SHAPES + [
+    ("binomial", 256, 20032, 1),     # Fig 4 logistic
+    ("poisson", 256, 20032, 1),      # Fig 4 poisson
+    ("multinomial", 256, 20032, 3),  # Fig 4 multinomial
+    ("gaussian", 256, 10048, 1),     # Fig 2
+    ("gaussian", 128, 64, 1),        # Fig 3 buckets
+    ("gaussian", 128, 128, 1),
+    ("gaussian", 128, 512, 1),
+    ("gaussian", 128, 1024, 1),
+    ("gaussian", 128, 9920, 1),      # arcene
+    ("multinomial", 256, 256, 10),   # zipcode
+    ("poisson", 4416, 64, 1),        # physician (4406 × 25)
+    ("gaussian", 8192, 64, 1),       # cpusmall
+]
+
+SCREEN_SIZES = [512, 5056, 20032]
+
+
+def emit(out_dir: str, full: bool) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    shapes = FULL_SHAPES if full else CORE_SHAPES
+    # dedupe while preserving order
+    seen = set()
+    entries = []
+    for family, n, p, m in shapes:
+        key = (family, n, p, m)
+        if key in seen:
+            continue
+        seen.add(key)
+        fn = model.gradient_fn(family)
+        args = model.abstract_args(family, n, p, m)
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        name = f"grad_{family}_n{n}_p{p}" + (f"_m{m}" if family == "multinomial" else "")
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "kind": "grad",
+                "family": family,
+                "n": n,
+                "p": p,
+                "m": m,
+                "file": name + ".hlo.txt",
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for p in SCREEN_SIZES:
+        fn = model.screen_fn()
+        lowered = jax.jit(fn).lower(*model.abstract_screen_args(p))
+        name = f"screen_p{p}"
+        path = os.path.join(out_dir, name + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append({"kind": "screen", "family": "", "n": 0, "p": p, "m": 1,
+                        "file": name + ".hlo.txt"})
+        print(f"wrote {path}")
+
+    manifest = {"version": 1, "dtype": "f64", "pad_multiple": 64, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true", help="emit the complete experiment matrix")
+    args = ap.parse_args()
+    emit(args.out, args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel and model gradient.
+
+These are the correctness ground truth: no Pallas, no tiling — just the
+textbook expressions. ``python/tests`` asserts the kernels match these to
+tight tolerances over hypothesis-generated shapes and data.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matvec(x, beta):
+    """η = X β."""
+    return x @ beta
+
+
+def tmatvec(x, h):
+    """g = Xᵀ h."""
+    return x.T @ h
+
+
+def matmat(x, b):
+    """E = X B."""
+    return x @ b
+
+
+def tmatmat(x, h):
+    """G = Xᵀ H."""
+    return x.T @ h
+
+
+def screen_cumsum(c_sorted, lam):
+    """cumsum(c − λ) — Algorithm 1's running criterion."""
+    return jnp.cumsum(c_sorted - lam)
+
+
+def gradient_gaussian(x, beta, y):
+    """∇½‖Xβ − y‖² = Xᵀ(Xβ − y)."""
+    return x.T @ (x @ beta - y)
+
+
+def gradient_binomial(x, beta, y):
+    """∇ Σ[log(1+e^η) − yη] = Xᵀ(σ(η) − y)."""
+    return x.T @ (jax.nn.sigmoid(x @ beta) - y)
+
+
+def gradient_poisson(x, beta, y):
+    """∇ Σ[e^η − yη] = Xᵀ(e^η − y)."""
+    return x.T @ (jnp.exp(x @ beta) - y)
+
+
+def gradient_multinomial(x, beta, y_onehot):
+    """∇ Σ[lse(η_i) − η_{i,y_i}] = Xᵀ(softmax(η) − Y)."""
+    return x.T @ (jax.nn.softmax(x @ beta, axis=1) - y_onehot)
+
+
+def prox_sorted_l1(v, lam):
+    """Reference prox of the sorted-ℓ1 norm (stack PAVA, numpy-style);
+    mirrors the Rust implementation for cross-language agreement tests."""
+    import numpy as np
+
+    v = np.asarray(v, dtype=np.float64)
+    lam = np.asarray(lam, dtype=np.float64)
+    p = v.shape[0]
+    order = np.argsort(-np.abs(v), kind="stable")
+    z = np.abs(v)[order] - lam[:p]
+    # stack of (start, end, sum)
+    blocks = []
+    for i in range(p):
+        blk = [i, i, z[i]]
+        while blocks and blocks[-1][2] / (blocks[-1][1] - blocks[-1][0] + 1) <= blk[2] / (
+            blk[1] - blk[0] + 1
+        ):
+            prev = blocks.pop()
+            blk = [prev[0], blk[1], prev[2] + blk[2]]
+        blocks.append(blk)
+    out = np.zeros(p)
+    for start, end, total in blocks:
+        mean = max(total / (end - start + 1), 0.0)
+        for k in range(start, end + 1):
+            idx = order[k]
+            out[idx] = mean * np.sign(v[idx])
+    return out

@@ -1,0 +1,216 @@
+"""Layer-1 Pallas kernels: the O(np) full-design gradient hot spot.
+
+The strong screening rule pays one full-width gradient ``∇f(β) = Xᵀ h(Xβ, y)``
+per path step (paper §2.2.1). On TPU the design matrix never fits in VMEM,
+so both matrix products are expressed as Pallas kernels tiled over the
+predictor dimension:
+
+* :func:`matvec`   — ``η = X β``  : grid over p-blocks, accumulating into
+  the full ``η`` output block (sequential grid ⇒ safe accumulation).
+* :func:`tmatvec`  — ``g = Xᵀ h`` : grid over p-blocks, each block an
+  independent ``(n × bp)ᵀ ⋅ n`` product (embarrassingly parallel over the
+  grid).
+* :func:`matmat` / :func:`tmatmat` — the multinomial (n×m) variants.
+* :func:`screen_cumsum_blocks` — per-block cumulative sums + block totals
+  for the screening criterion ``cumsum(|c|↓ − λ)`` (two-phase scan: the
+  tiny cross-block offset fix-up happens in plain jnp).
+
+The BlockSpec plays the role the paper's column-partitioned BLAS calls play
+in the R implementation: it expresses the HBM↔VMEM streaming schedule.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see DESIGN.md §7); block shapes are still chosen MXU-shaped
+(multiples of 128 where possible) so the same kernels lower for real TPUs.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# All kernels run in interpret mode on CPU (see module docstring).
+INTERPRET = True
+
+# Default VMEM tile over the predictor dimension. 512 columns × 8 B × n≤8k
+# rows keeps X-blocks ≤ 32 MiB in f64 worst-case; the aot driver shrinks it
+# for very tall designs.
+DEFAULT_BLOCK_P = 512
+
+
+def _pick_block(p: int, n: int, block_p: int | None) -> int:
+    """Choose a p-tile that divides p and respects a ~16 MiB VMEM budget."""
+    if block_p is None:
+        budget = 16 * 1024 * 1024 // (8 * max(n, 1))  # f64 bytes per column
+        block_p = max(64, min(DEFAULT_BLOCK_P, budget))
+    block_p = min(block_p, p)
+    while p % block_p != 0:  # shapes are pre-padded to multiples of 64
+        block_p -= 1
+    return max(block_p, 1)
+
+
+def matvec(x, beta, *, block_p: int | None = None):
+    """``η = X β`` tiled over predictor blocks with accumulation."""
+    n, p = x.shape
+    bp = _pick_block(p, n, block_p)
+
+    def kernel(x_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += x_ref[...] @ b_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((bp,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((n,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=INTERPRET,
+    )(x, beta)
+
+
+def tmatvec(x, h, *, block_p: int | None = None):
+    """``g = Xᵀ h`` tiled over predictor blocks."""
+    n, p = x.shape
+    bp = _pick_block(p, n, block_p)
+
+    def kernel(x_ref, h_ref, o_ref):
+        o_ref[...] = x_ref[...].T @ h_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((n,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((p,), x.dtype),
+        interpret=INTERPRET,
+    )(x, h)
+
+
+def matmat(x, b, *, block_p: int | None = None):
+    """``E = X B`` for multinomial coefficients ``B (p × m)``."""
+    n, p = x.shape
+    m = b.shape[1]
+    bp = _pick_block(p, n, block_p)
+
+    def kernel(x_ref, b_ref, o_ref):
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += x_ref[...] @ b_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((bp, m), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, m), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, b)
+
+
+def tmatmat(x, h, *, block_p: int | None = None):
+    """``G = Xᵀ H`` for the multinomial working residual ``H (n × m)``."""
+    n, p = x.shape
+    m = h.shape[1]
+    bp = _pick_block(p, n, block_p)
+
+    def kernel(x_ref, h_ref, o_ref):
+        o_ref[...] = x_ref[...].T @ h_ref[...]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bp,),
+        in_specs=[
+            pl.BlockSpec((n, bp), lambda j: (0, j)),
+            pl.BlockSpec((n, m), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bp, m), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, h)
+
+
+def screen_cumsum_blocks(c_sorted, lam, *, block: int = 1024):
+    """Phase 1 of the screening criterion ``cumsum(c − λ)``: per-block
+    inclusive cumsums and block totals. Phase 2 (cross-block offsets) is a
+    ~p/block-sized jnp cumsum — see :func:`screen_cumsum`."""
+    (p,) = c_sorted.shape
+    bs = min(block, p)
+    while p % bs != 0:
+        bs -= 1
+
+    def kernel(c_ref, l_ref, cs_ref, tot_ref):
+        z = c_ref[...] - l_ref[...]
+        cs = jnp.cumsum(z)
+        cs_ref[...] = cs
+        tot_ref[...] = cs[-1:]
+
+    return pl.pallas_call(
+        kernel,
+        grid=(p // bs,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda j: (j,)),
+            pl.BlockSpec((bs,), lambda j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bs,), lambda j: (j,)),
+            pl.BlockSpec((1,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), c_sorted.dtype),
+            jax.ShapeDtypeStruct((p // bs,), c_sorted.dtype),
+        ],
+        interpret=INTERPRET,
+    )(c_sorted, lam)
+
+
+def screen_cumsum(c_sorted, lam, *, block: int = 1024):
+    """Full screening criterion ``cumsum(c_sorted − λ)`` (Algorithm 1's
+    running sum) as a two-phase Pallas scan."""
+    block_cs, totals = screen_cumsum_blocks(c_sorted, lam, block=block)
+    offsets = jnp.concatenate([jnp.zeros((1,), totals.dtype), jnp.cumsum(totals)[:-1]])
+    (p,) = c_sorted.shape
+    bs = block_cs.shape[0] // offsets.shape[0]
+    return block_cs + jnp.repeat(offsets, bs)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def gradient_gaussian(x, beta, y, block_p=None):
+    """``∇f = Xᵀ(Xβ − y)`` for OLS (paper's primary benchmark family)."""
+    eta = matvec(x, beta, block_p=block_p)
+    return tmatvec(x, eta - y, block_p=block_p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def gradient_binomial(x, beta, y, block_p=None):
+    """``∇f = Xᵀ(σ(Xβ) − y)`` for logistic regression."""
+    eta = matvec(x, beta, block_p=block_p)
+    return tmatvec(x, jax.nn.sigmoid(eta) - y, block_p=block_p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def gradient_poisson(x, beta, y, block_p=None):
+    """``∇f = Xᵀ(exp(Xβ) − y)`` for Poisson regression."""
+    eta = matvec(x, beta, block_p=block_p)
+    return tmatvec(x, jnp.exp(eta) - y, block_p=block_p)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def gradient_multinomial(x, beta, y_onehot, block_p=None):
+    """``∇f = Xᵀ(softmax(XB) − Y)`` for multinomial regression; `beta`
+    is (p, m), `y_onehot` is (n, m); returns (p, m)."""
+    eta = matmat(x, beta, block_p=block_p)
+    probs = jax.nn.softmax(eta, axis=1)
+    return tmatmat(x, probs - y_onehot, block_p=block_p)

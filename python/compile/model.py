@@ -1,0 +1,59 @@
+"""Layer-2 JAX models: the full-design gradient graphs per GLM family.
+
+Each builder returns a jax-jittable function whose only inputs are the
+concrete arrays the Rust coordinator supplies at run time:
+
+* ``gaussian / binomial / poisson``: ``(X (n,p), β (p,), y (n,)) → g (p,)``
+* ``multinomial``:  ``(X (n,p), B (p,m), Y (n,m) one-hot) → G (p,m)``
+* ``screen``:       ``(c_sorted (p,), λ (p,)) → cumsum(c − λ) (p,)``
+
+The gradients call the Layer-1 Pallas kernels (`kernels.slope_grad`), so
+the AOT lowering in `aot.py` bakes the tiling schedule into the same HLO
+artifact the Rust PJRT runtime executes. Everything is float64: the KKT
+thresholds the screening safeguard uses at the small-σ end of the path are
+far below float32 resolution (DESIGN.md §8).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import slope_grad as k
+
+FAMILIES = ("gaussian", "binomial", "poisson", "multinomial")
+
+
+def gradient_fn(family: str):
+    """Return the gradient function for `family` (see module docstring)."""
+    if family == "gaussian":
+        return lambda x, beta, y: (k.gradient_gaussian(x, beta, y),)
+    if family == "binomial":
+        return lambda x, beta, y: (k.gradient_binomial(x, beta, y),)
+    if family == "poisson":
+        return lambda x, beta, y: (k.gradient_poisson(x, beta, y),)
+    if family == "multinomial":
+        return lambda x, beta, y: (k.gradient_multinomial(x, beta, y),)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def screen_fn():
+    """The screening-criterion scan (Algorithm 1's running sum)."""
+    return lambda c, lam: (k.screen_cumsum(c, lam),)
+
+
+def abstract_args(family: str, n: int, p: int, m: int = 1):
+    """ShapeDtypeStructs for lowering the gradient of `family`."""
+    f64 = jnp.float64
+    x = jax.ShapeDtypeStruct((n, p), f64)
+    if family == "multinomial":
+        return (
+            x,
+            jax.ShapeDtypeStruct((p, m), f64),
+            jax.ShapeDtypeStruct((n, m), f64),
+        )
+    return (x, jax.ShapeDtypeStruct((p,), f64), jax.ShapeDtypeStruct((n,), f64))
+
+
+def abstract_screen_args(p: int):
+    """ShapeDtypeStructs for lowering the screening scan."""
+    f64 = jnp.float64
+    return (jax.ShapeDtypeStruct((p,), f64), jax.ShapeDtypeStruct((p,), f64))

@@ -1,0 +1,5 @@
+"""Test session config: float64 everywhere (must precede any tracing)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

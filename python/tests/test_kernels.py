@@ -1,0 +1,173 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes (including non-multiples of the tile size within
+the padding contract), dtypes stay f64 per the AOT contract, and values
+span several orders of magnitude.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import slope_grad as k
+
+RTOL = 1e-12
+ATOL = 1e-10
+
+
+def rand(rng, *shape, scale=1.0):
+    return scale * rng.standard_normal(shape)
+
+
+dims = st.tuples(
+    st.integers(min_value=1, max_value=40),  # n
+    st.integers(min_value=1, max_value=96),  # p
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1), block=st.sampled_from([None, 16, 64]))
+def test_matvec_matches_ref(dims, seed, block):
+    n, p = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, p)
+    b = rand(rng, p, scale=3.0)
+    got = k.matvec(x, b, block_p=block)
+    np.testing.assert_allclose(got, ref.matvec(x, b), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1), block=st.sampled_from([None, 16, 64]))
+def test_tmatvec_matches_ref(dims, seed, block):
+    n, p = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, p)
+    h = rand(rng, n)
+    got = k.tmatvec(x, h, block_p=block)
+    np.testing.assert_allclose(got, ref.tmatvec(x, h), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    dims=dims,
+    m=st.integers(min_value=2, max_value=6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmat_tmatmat_match_ref(dims, m, seed):
+    n, p = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, p)
+    b = rand(rng, p, m)
+    h = rand(rng, n, m)
+    np.testing.assert_allclose(k.matmat(x, b), ref.matmat(x, b), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(k.tmatmat(x, h), ref.tmatmat(x, h), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=400),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([7, 64, 1024]),
+)
+def test_screen_cumsum_matches_ref(p, seed, block):
+    rng = np.random.default_rng(seed)
+    c = np.sort(np.abs(rand(rng, p, scale=2.0)))[::-1].copy()
+    lam = np.sort(np.abs(rand(rng, p)))[::-1].copy()
+    got = k.screen_cumsum(c, lam, block=block)
+    np.testing.assert_allclose(got, ref.screen_cumsum(c, lam), rtol=1e-10, atol=1e-9)
+
+
+@pytest.mark.parametrize("family", ["gaussian", "binomial", "poisson"])
+@settings(max_examples=20, deadline=None)
+@given(dims=dims, seed=st.integers(0, 2**31 - 1))
+def test_gradient_kernels_match_ref(family, dims, seed):
+    n, p = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, p, scale=0.3)
+    beta = rand(rng, p, scale=0.5)
+    if family == "gaussian":
+        y = rand(rng, n)
+        got, want = k.gradient_gaussian(x, beta, y), ref.gradient_gaussian(x, beta, y)
+    elif family == "binomial":
+        y = (rng.random(n) < 0.5).astype(np.float64)
+        got, want = k.gradient_binomial(x, beta, y), ref.gradient_binomial(x, beta, y)
+    else:
+        y = rng.poisson(1.0, n).astype(np.float64)
+        got, want = k.gradient_poisson(x, beta, y), ref.gradient_poisson(x, beta, y)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    dims=dims,
+    m=st.integers(min_value=2, max_value=5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gradient_multinomial_matches_ref(dims, m, seed):
+    n, p = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, p, scale=0.3)
+    beta = rand(rng, p, m, scale=0.5)
+    labels = rng.integers(0, m, n)
+    y = np.eye(m)[labels]
+    got = k.gradient_multinomial(x, beta, y)
+    want = ref.gradient_multinomial(x, beta, y)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-9)
+
+
+def test_zero_padding_preserves_gradient():
+    """The runtime padding contract (DESIGN.md §8): zero rows/columns added
+    to X (and zeros to β/y) leave the gradient of the real coordinates
+    unchanged, for every family."""
+    rng = np.random.default_rng(0)
+    n, p, n2, p2 = 13, 21, 64, 64
+    x = rand(rng, n, p, scale=0.3)
+    beta = rand(rng, p, scale=0.5)
+    xp = np.zeros((n2, p2))
+    xp[:n, :p] = x
+    bp = np.zeros(p2)
+    bp[:p] = beta
+
+    for family, make_y in [
+        ("gaussian", lambda: rand(rng, n)),
+        ("binomial", lambda: (rng.random(n) < 0.5).astype(np.float64)),
+        ("poisson", lambda: rng.poisson(1.0, n).astype(np.float64)),
+    ]:
+        y = make_y()
+        yp = np.zeros(n2)
+        yp[:n] = y
+        fn = getattr(k, f"gradient_{family}")
+        small = fn(x, beta, y)
+        padded = fn(xp, bp, yp)
+        np.testing.assert_allclose(padded[:p], small, rtol=1e-10, atol=1e-9)
+        np.testing.assert_allclose(padded[p:], 0.0, atol=1e-12)
+
+
+def test_zero_padding_multinomial():
+    rng = np.random.default_rng(1)
+    n, p, m, n2, p2 = 9, 17, 3, 64, 64
+    x = rand(rng, n, p, scale=0.3)
+    beta = rand(rng, p, m, scale=0.5)
+    labels = rng.integers(0, m, n)
+    y = np.eye(m)[labels]
+    xp = np.zeros((n2, p2))
+    xp[:n, :p] = x
+    bp = np.zeros((p2, m))
+    bp[:p] = beta
+    yp = np.zeros((n2, m))
+    yp[:n] = y
+    small = k.gradient_multinomial(x, beta, y)
+    padded = k.gradient_multinomial(xp, bp, yp)
+    np.testing.assert_allclose(padded[:p], small, rtol=1e-10, atol=1e-9)
+    np.testing.assert_allclose(padded[p:], 0.0, atol=1e-12)
+
+
+def test_prox_reference_soft_thresholds():
+    got = ref.prox_sorted_l1([3.0, -1.0, 0.5, -4.0], [1.0, 1.0, 1.0, 1.0])
+    np.testing.assert_allclose(got, [2.0, 0.0, 0.0, -3.0])
+
+
+def test_prox_reference_clusters():
+    got = ref.prox_sorted_l1([3.0, 2.5], [2.0, 1.0])
+    np.testing.assert_allclose(got, [1.25, 1.25])

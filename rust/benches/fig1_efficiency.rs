@@ -1,0 +1,69 @@
+//! Figure 1: screened-set vs active-set size along the path for the
+//! strong rule and the (gap-)safe rule, under compound-symmetric
+//! correlation ρ ∈ {0, 0.2, 0.4, 0.6, 0.8}.
+//!
+//! Paper setup: OLS, n = 200, p = 5000, k = p/4, β ~ N(0,1), q = 0.005.
+//! Run: `cargo bench --bench fig1_efficiency -- --scale 1`
+
+use slope_screen::benchkit::Table;
+use slope_screen::cli::Args;
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::rng::Pcg64;
+use slope_screen::slope::family::Family;
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions};
+
+fn main() {
+    let parsed = Args::new("Figure 1: strong vs safe screening efficiency along the path")
+        .opt("scale", "0.5", "problem scale (1 = paper: n=200, p=5000)")
+        .opt("rhos", "0,0.2,0.4,0.6,0.8", "correlation grid")
+        .opt("q", "0.005", "BH parameter")
+        .opt("seed", "2020", "rng seed")
+        .flag("bench", "(cargo bench compatibility)")
+        .parse();
+    let scale = parsed.f64("scale");
+    let n = (200.0 * scale).round().max(20.0) as usize;
+    let p = (5000.0 * scale).round().max(100.0) as usize;
+
+    let mut table = Table::new(
+        &format!("Figure 1 — screening efficiency (OLS, n={n}, p={p}, k=p/4)"),
+        &["rho", "step", "sigma_ratio", "active", "strong", "safe"],
+    );
+    for rho in parsed.f64_list("rhos") {
+        let spec = SyntheticSpec {
+            n,
+            p,
+            rho,
+            design: DesignKind::Compound,
+            beta: BetaSpec::Normal { k: p / 4 },
+            family: Family::Gaussian,
+            noise_sd: 1.0,
+            standardize: true,
+        };
+        let prob = spec.generate(&mut Pcg64::new(parsed.u64("seed")));
+        let cfg = PathConfig::new(LambdaKind::Bh { q: parsed.f64("q") });
+        let mut opts = PathOptions::new(cfg);
+        opts.record_safe = true;
+        let fit = fit_path(&prob, &opts, &NativeGradient(&prob));
+        let smax = fit.sigmas[0];
+        for (i, s) in fit.steps.iter().enumerate() {
+            table.row(vec![
+                format!("{rho}"),
+                i.to_string(),
+                format!("{:.4}", s.sigma / smax),
+                s.n_active.to_string(),
+                s.n_screened_rule.to_string(),
+                s.n_safe.map(|v| v.to_string()).unwrap_or_default(),
+            ]);
+        }
+        println!(
+            "rho={rho}: {} steps, violations={}, max strong set={}",
+            fit.steps.len(),
+            fit.total_violations,
+            fit.steps.iter().map(|s| s.n_screened_rule).max().unwrap_or(0)
+        );
+    }
+    table.print();
+    let path = table.write_csv("fig1_efficiency").expect("csv");
+    println!("\nwrote {}", path.display());
+}

@@ -1,0 +1,131 @@
+//! Figure 4 + Table 1: wall-clock time for fitting the path with vs
+//! without the strong rule, across families and correlation levels, on
+//! the chain design X_j ~ N(ρ X_{j−1}, I).
+//!
+//! Paper setup: p = 20000, n = 200, k = 20, ρ ∈ {0, 0.5, 0.99, 0.999};
+//! OLS/logistic: β from {1..20} w/o replacement, ε ~ N(0, 20I);
+//! Poisson: β from {1/40..20/40}; multinomial: 3 classes.
+//! Table 1 = ratio of the two strategies' times.
+//! Run: `cargo bench --bench fig4_performance -- --scale 1 --reps 3`
+
+use std::time::Instant;
+
+use slope_screen::benchkit::{fmt_secs, Table};
+use slope_screen::cli::Args;
+use slope_screen::data::synth::{
+    draw_response, chain_design, multinomial_beta, BetaSpec,
+};
+use slope_screen::linalg::Design;
+use slope_screen::rng::Pcg64;
+use slope_screen::slope::family::{Family, Problem};
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions, Strategy};
+
+fn make_problem(rng: &mut Pcg64, n: usize, p: usize, k: usize, rho: f64, family: Family) -> Problem {
+    let mut x = chain_design(rng, n, p, rho);
+    let beta = match family {
+        Family::Gaussian | Family::Binomial => {
+            BetaSpec::Ladder { k, step: 1.0 }.draw(rng, p)
+        }
+        Family::Poisson => BetaSpec::Ladder { k, step: 1.0 / 40.0 }.draw(rng, p),
+        Family::Multinomial { classes } => multinomial_beta(rng, p, k, classes),
+    };
+    let noise = (20.0f64).sqrt();
+    let y = draw_response(rng, &x, &beta, family, noise);
+    x.standardize(true, true);
+    let mut y = y;
+    if family == Family::Gaussian {
+        let m = slope_screen::linalg::ops::mean(&y);
+        y.iter_mut().for_each(|v| *v -= m);
+    }
+    Problem::new(Design::Dense(x), y, family)
+}
+
+fn main() {
+    let parsed = Args::new("Figure 4 / Table 1: path wall-time with vs without screening")
+        .opt("scale", "0.25", "problem scale (1 = paper: n=200, p=20000)")
+        .opt("rhos", "0,0.5,0.99,0.999", "correlation grid")
+        .opt("reps", "1", "repetitions (paper uses boxplots over many)")
+        .opt("families", "gaussian,binomial,poisson,multinomial", "family list")
+        .opt("q", "0.005", "BH parameter")
+        .opt("seed", "2023", "rng seed")
+        .flag("bench", "(cargo bench compatibility)")
+        .parse();
+    let scale = parsed.f64("scale");
+    let n = (200.0 * scale).round().max(20.0) as usize;
+    let p = (20_000.0 * scale).round().max(200.0) as usize;
+    let k = 20.min(p / 10).max(2);
+    let reps = parsed.usize("reps");
+
+    let families: Vec<Family> = parsed
+        .get("families")
+        .split(',')
+        .map(|f| match f {
+            "gaussian" => Family::Gaussian,
+            "binomial" => Family::Binomial,
+            "poisson" => Family::Poisson,
+            "multinomial" => Family::Multinomial { classes: 3 },
+            other => panic!("unknown family {other}"),
+        })
+        .collect();
+
+    let mut fig = Table::new(
+        &format!("Figure 4 — wall time per fit (n={n}, p={p}, k={k})"),
+        &["family", "rho", "rep", "strategy", "seconds", "violations"],
+    );
+    let mut tab1 = Table::new(
+        "Table 1 — relative speed-up (no screening / screening)",
+        &["model", "rho", "speedup"],
+    );
+
+    let mut master = Pcg64::new(parsed.u64("seed"));
+    for family in &families {
+        for rho in parsed.f64_list("rhos") {
+            let mut t_screen = Vec::new();
+            let mut t_none = Vec::new();
+            for rep in 0..reps {
+                let mut rng = master.derive(rep as u64);
+                let prob = make_problem(&mut rng, n, p, k, rho, *family);
+                let cfg = PathConfig::new(LambdaKind::Bh { q: parsed.f64("q") });
+                for strategy in [Strategy::StrongSet, Strategy::NoScreening] {
+                    let opts = PathOptions::new(cfg.clone()).with_strategy(strategy);
+                    let t = Instant::now();
+                    let fit = fit_path(&prob, &opts, &NativeGradient(&prob));
+                    let secs = t.elapsed().as_secs_f64();
+                    fig.row(vec![
+                        family.name().to_string(),
+                        format!("{rho}"),
+                        rep.to_string(),
+                        strategy.name().to_string(),
+                        format!("{secs:.4}"),
+                        fit.total_violations.to_string(),
+                    ]);
+                    match strategy {
+                        Strategy::StrongSet => t_screen.push(secs),
+                        _ => t_none.push(secs),
+                    }
+                    println!(
+                        "{:<12} rho={rho:<6} rep={rep} {:<8} {} ({} steps, viol={})",
+                        family.name(),
+                        strategy.name(),
+                        fmt_secs(secs),
+                        fit.steps.len(),
+                        fit.total_violations
+                    );
+                }
+            }
+            let speedup = slope_screen::linalg::ops::mean(&t_none)
+                / slope_screen::linalg::ops::mean(&t_screen);
+            tab1.row(vec![
+                family.name().to_string(),
+                format!("{rho}"),
+                format!("{speedup:.1}"),
+            ]);
+        }
+    }
+    fig.print();
+    tab1.print();
+    fig.write_csv("fig4_performance").expect("csv");
+    tab1.write_csv("table1_speedup").expect("csv");
+    println!("\n(paper Table 1: speed-ups of roughly 8-29x at n=200, p=20000)");
+}

@@ -1,0 +1,87 @@
+//! Figure 7 + Table 2: screening efficiency and violations on the four
+//! real-data stand-ins (arcene, dorothea, gisette, golub), each fit with
+//! sorted-ℓ1 penalized OLS *and* logistic regression.
+//!
+//! Table 2 reports the mean screened-set and active-set sizes over the
+//! path; Figure 7 the per-step proportion screened/active.
+//! Run: `cargo bench --bench fig7_realdata -- --datasets golub,arcene`
+
+use slope_screen::benchkit::Table;
+use slope_screen::cli::Args;
+use slope_screen::data::real::RealDataset;
+use slope_screen::slope::family::Family;
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions};
+
+fn main() {
+    let parsed = Args::new("Figure 7 / Table 2: efficiency on real-data stand-ins")
+        .opt(
+            "datasets",
+            "golub,arcene,dorothea",
+            "datasets (gisette, 6000x4955 dense, is opt-in: its saturated OLS path takes tens of minutes)",
+        )
+        .opt("q", "0.01", "BH parameter")
+        .flag("bench", "(cargo bench compatibility)")
+        .parse();
+
+    let mut fig = Table::new(
+        "Figure 7 — screened/active proportion along the path",
+        &["dataset", "model", "step", "active", "screened"],
+    );
+    let mut tab2 = Table::new(
+        "Table 2 — mean screened and active set sizes",
+        &["dataset", "n", "p", "model", "screened", "active", "violations"],
+    );
+
+    for name in parsed.get("datasets").split(',') {
+        let ds = RealDataset::all()
+            .into_iter()
+            .find(|d| d.name() == name)
+            .unwrap_or_else(|| panic!("unknown dataset {name}"));
+        for family in [Family::Gaussian, Family::Binomial] {
+            let prob = ds.load_with(family, 0x7ab2e + ds.dims().1 as u64);
+            let cfg = PathConfig::new(LambdaKind::Bh { q: parsed.f64("q") });
+            let opts = PathOptions::new(cfg);
+            let fit = fit_path(&prob, &opts, &NativeGradient(&prob));
+            let mut s_sum = 0.0;
+            let mut a_sum = 0.0;
+            let steps = fit.steps.len().saturating_sub(1).max(1) as f64;
+            for (i, s) in fit.steps.iter().enumerate() {
+                if i > 0 {
+                    s_sum += s.n_screened_rule as f64;
+                    a_sum += s.n_active as f64;
+                }
+                fig.row(vec![
+                    ds.name().to_string(),
+                    family.name().to_string(),
+                    i.to_string(),
+                    s.n_active.to_string(),
+                    s.n_screened_rule.to_string(),
+                ]);
+            }
+            tab2.row(vec![
+                ds.name().to_string(),
+                prob.n().to_string(),
+                prob.p().to_string(),
+                family.name().to_string(),
+                format!("{:.1}", s_sum / steps),
+                format!("{:.2}", a_sum / steps),
+                fit.total_violations.to_string(),
+            ]);
+            println!(
+                "{:<9} {:<9} {} steps, mean screened {:.1}, mean active {:.2}, violations {}",
+                ds.name(),
+                family.name(),
+                fit.steps.len(),
+                s_sum / steps,
+                a_sum / steps,
+                fit.total_violations
+            );
+        }
+    }
+    fig.print();
+    tab2.print();
+    fig.write_csv("fig7_realdata").expect("csv");
+    tab2.write_csv("table2_realdata").expect("csv");
+    println!("\n(paper Table 2: screened/active ratios of roughly 1.5-4x; no violations)");
+}

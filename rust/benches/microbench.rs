@@ -1,0 +1,130 @@
+//! Microbenchmarks of the hot kernels (the §Perf iteration log in
+//! EXPERIMENTS.md is built on these): sorted-ℓ1 prox, gemv/gemv_t,
+//! Algorithm 2, the KKT flagger, and the full-gradient engines
+//! (native vs XLA artifact).
+//!
+//! Run: `cargo bench --bench microbench`
+
+use slope_screen::benchkit::{fmt_secs, Table, Timing};
+use slope_screen::cli::Args;
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::linalg::ops::abs_sorted_desc;
+use slope_screen::rng::Pcg64;
+use slope_screen::runtime::{default_artifact_dir, ArtifactGradient, Manifest};
+use slope_screen::slope::family::Family;
+use slope_screen::slope::lambda::bh_sequence;
+use slope_screen::slope::path::FullGradient;
+use slope_screen::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
+use slope_screen::slope::screen::algorithm2_k;
+
+fn main() {
+    let parsed = Args::new("microbenchmarks of the hot kernels")
+        .opt("p", "20000", "vector dimension")
+        .opt("n", "200", "rows for gemv/gradient")
+        .opt("reps", "50", "timed repetitions")
+        .flag("bench", "(cargo bench compatibility)")
+        .parse();
+    let p = parsed.usize("p");
+    let n = parsed.usize("n");
+    let reps = parsed.usize("reps");
+    let mut rng = Pcg64::new(0xbead);
+
+    let mut table = Table::new("microbench", &["kernel", "dim", "median", "per_elem_ns"]);
+    let mut record = |name: &str, dim: usize, t: &Timing| {
+        println!("{name:<24} {:>10}  median {}", dim, fmt_secs(t.median()));
+        table.row(vec![
+            name.to_string(),
+            dim.to_string(),
+            format!("{:.6}", t.median()),
+            format!("{:.2}", t.median() * 1e9 / dim as f64),
+        ]);
+    };
+
+    // prox
+    let v: Vec<f64> = (0..p).map(|_| rng.normal() * 2.0).collect();
+    let lam = bh_sequence(p, 0.05);
+    let mut out = vec![0.0; p];
+    let mut ws = ProxWorkspace::new(p);
+    let t = Timing::measure(3, reps, || {
+        prox_sorted_l1_into(&v, &lam, &mut ws, &mut out);
+        std::hint::black_box(&out);
+    });
+    record("prox_sorted_l1", p, &t);
+
+    // algorithm 2
+    let c = abs_sorted_desc(&v);
+    let t = Timing::measure(3, reps, || {
+        std::hint::black_box(algorithm2_k(&c, &lam));
+    });
+    record("algorithm2_k", p, &t);
+
+    // sort (the p log p part of screening)
+    let t = Timing::measure(3, reps, || {
+        std::hint::black_box(abs_sorted_desc(&v));
+    });
+    record("sort_desc_abs", p, &t);
+
+    // gemv / gemv_t on a dense design
+    let prob = SyntheticSpec {
+        n,
+        p,
+        rho: 0.0,
+        design: DesignKind::Iid,
+        beta: BetaSpec::PlusMinus { k: 10, scale: 1.0 },
+        family: Family::Gaussian,
+        noise_sd: 1.0,
+        standardize: true,
+    }
+    .generate(&mut Pcg64::new(1));
+    let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let mut eta = vec![0.0; n];
+    let t = Timing::measure(3, reps, || {
+        prob.x.gemv(&beta, &mut eta);
+        std::hint::black_box(&eta);
+    });
+    record("gemv (X*b)", n * p, &t);
+
+    let h: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut grad = vec![0.0; p];
+    let t = Timing::measure(3, reps, || {
+        prob.x.gemv_t(&h, &mut grad);
+        std::hint::black_box(&grad);
+    });
+    record("gemv_t (X'h)", n * p, &t);
+
+    // gradient engines, when artifacts cover the shape
+    if let Ok(manifest) = Manifest::load(&default_artifact_dir()) {
+        let small = SyntheticSpec {
+            n: 100,
+            p: 400,
+            rho: 0.0,
+            design: DesignKind::Iid,
+            beta: BetaSpec::PlusMinus { k: 10, scale: 1.0 },
+            family: Family::Gaussian,
+            noise_sd: 1.0,
+            standardize: true,
+        }
+        .generate(&mut Pcg64::new(2));
+        if let Ok(xla) = ArtifactGradient::new(&manifest, &small) {
+            let beta: Vec<f64> = (0..small.p()).map(|_| rng.normal()).collect();
+            let mut eta = vec![0.0; small.n()];
+            small.eta(&beta, &mut eta);
+            let mut h = vec![0.0; small.n()];
+            small.family.h_loss(&eta, &small.y, &mut h);
+            let mut g = vec![0.0; small.p()];
+            let t = Timing::measure(3, reps, || {
+                small.gradient_from_h(&h, &mut g);
+                std::hint::black_box(&g);
+            });
+            record("full_grad native", small.n() * small.p(), &t);
+            let t = Timing::measure(3, reps.min(20), || {
+                xla.full_grad(&beta, &h, &mut g);
+                std::hint::black_box(&g);
+            });
+            record("full_grad xla-artifact", small.n() * small.p(), &t);
+        }
+    }
+
+    table.print();
+    table.write_csv("microbench").expect("csv");
+}

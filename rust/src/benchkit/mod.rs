@@ -1,0 +1,196 @@
+//! Wall-clock benchmarking substrate (no `criterion` offline).
+//!
+//! Each paper figure/table gets a `harness = false` bench binary built on
+//! this module: timed repetitions with warmup, summary statistics
+//! (median, mean, 95% band via percentiles), aligned table printing in the
+//! paper's row format, and CSV emission under `results/`.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+/// Timing summary over repetitions, in seconds.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    /// Raw per-repetition durations (sorted ascending).
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    /// Time `reps` calls of `f` after `warmup` untimed calls.
+    pub fn measure<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        Timing { samples }
+    }
+
+    /// Wrap already-collected samples.
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        Timing { samples }
+    }
+
+    /// Median duration in seconds.
+    pub fn median(&self) -> f64 {
+        crate::linalg::ops::quantile_sorted(&self.samples, 0.5)
+    }
+
+    /// Mean duration in seconds.
+    pub fn mean(&self) -> f64 {
+        crate::linalg::ops::mean(&self.samples)
+    }
+
+    /// Percentile (0..=1).
+    pub fn quantile(&self, q: f64) -> f64 {
+        crate::linalg::ops::quantile_sorted(&self.samples, q)
+    }
+
+    /// Half-width of a normal-approximation 95% CI on the mean.
+    pub fn ci95(&self) -> f64 {
+        let n = self.samples.len() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+        1.96 * (var / n).sqrt()
+    }
+}
+
+/// A results table with aligned printing and CSV output.
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Print aligned to stdout, paper-style.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", header.join("  "));
+        println!("{}", "-".repeat(header.join("  ").len()));
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", line.join("  "));
+        }
+    }
+
+    /// Write as CSV under `results/<name>.csv` (creates the directory).
+    pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
+        let dir = results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Resolve the `results/` directory next to the crate root, independent of
+/// the working directory cargo bench uses.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env_root()).join("results")
+}
+
+/// Resolve the repository root (`CARGO_MANIFEST_DIR` at compile time).
+pub fn env_root() -> &'static str {
+    env!("CARGO_MANIFEST_DIR")
+}
+
+/// Format seconds compactly (`ms` below 1s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1.0 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Format a float with 3 significant decimals.
+pub fn fmt3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_measures_positive() {
+        let t = Timing::measure(1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.median() >= 0.0);
+        assert!(t.mean() >= 0.0);
+    }
+
+    #[test]
+    fn timing_stats_from_known_samples() {
+        let t = Timing::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(t.median(), 2.0);
+        assert_eq!(t.mean(), 2.0);
+        assert_eq!(t.quantile(0.0), 1.0);
+        assert_eq!(t.quantile(1.0), 3.0);
+        assert!(t.ci95() > 0.0);
+    }
+
+    #[test]
+    fn table_roundtrip_csv() {
+        let mut t = Table::new("test", &["a", "b"]);
+        t.row(vec!["1".into(), "x".into()]);
+        let path = t.write_csv("_benchkit_selftest").unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a,b\n1,x\n");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_secs(0.0123), "12.3ms");
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt3(1.23456), "1.235");
+    }
+}

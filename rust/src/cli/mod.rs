@@ -1,0 +1,250 @@
+//! Minimal declarative CLI flag parser (no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value` and boolean `--flag`, with typed
+//! accessors, defaults and a generated `--help`. Used by the `slope-screen`
+//! binary, the examples and every bench harness.
+
+use std::collections::BTreeMap;
+
+/// One registered flag.
+struct Spec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+pub struct Args {
+    program: String,
+    about: &'static str,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Start building a parser for `program`.
+    pub fn new(about: &'static str) -> Self {
+        Self {
+            program: std::env::args().next().unwrap_or_else(|| "prog".into()),
+            about,
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Register a value flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: Some(default.to_string()), is_bool: false });
+        self
+    }
+
+    /// Register a boolean flag (defaults to false).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    /// Parse `std::env::args`; prints help and exits on `--help` or on
+    /// unknown flags.
+    pub fn parse(self) -> Parsed {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(p) => p,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with("usage") { 0 } else { 2 });
+            }
+        }
+    }
+
+    /// Parse an explicit argv (testable core).
+    pub fn parse_from(self, argv: &[String]) -> Result<Parsed, String> {
+        let mut values = self.values.clone();
+        let mut positional = self.positional.clone();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n{}", self.usage()))?;
+                let value = if spec.is_bool {
+                    inline.unwrap_or_else(|| "true".into())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    argv.get(i)
+                        .cloned()
+                        .ok_or_else(|| format!("flag --{name} expects a value"))?
+                };
+                values.insert(name.to_string(), value);
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        // fill defaults
+        for spec in &self.specs {
+            if !values.contains_key(spec.name) {
+                if let Some(d) = &spec.default {
+                    values.insert(spec.name.to_string(), d.clone());
+                } else if spec.is_bool {
+                    values.insert(spec.name.to_string(), "false".into());
+                }
+            }
+        }
+        Ok(Parsed { values, positional })
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("usage: {} [flags]\n{}\n\nflags:\n", self.program, self.about);
+        for spec in &self.specs {
+            let d = match &spec.default {
+                Some(d) => format!(" (default: {d})"),
+                None => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", spec.name, spec.help, d));
+        }
+        s.push_str("  --help               show this message\n");
+        s
+    }
+}
+
+/// Parsed flag values with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Raw string value.
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} was not registered"))
+    }
+
+    /// Typed value; panics with a clear message on parse failure.
+    pub fn get_as<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name);
+        raw.parse()
+            .unwrap_or_else(|e| panic!("flag --{name}={raw}: {e}"))
+    }
+
+    /// `usize` accessor.
+    pub fn usize(&self, name: &str) -> usize {
+        self.get_as(name)
+    }
+
+    /// `f64` accessor.
+    pub fn f64(&self, name: &str) -> f64 {
+        self.get_as(name)
+    }
+
+    /// `u64` accessor.
+    pub fn u64(&self, name: &str) -> u64 {
+        self.get_as(name)
+    }
+
+    /// Boolean accessor.
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.get(name), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of `f64`.
+    pub fn f64_list(&self, name: &str) -> Vec<f64> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("flag --{name}: {e}")))
+            .collect()
+    }
+
+    /// Comma-separated list of `usize`.
+    pub fn usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|e| panic!("flag --{name}: {e}")))
+            .collect()
+    }
+
+    /// Positional arguments (subcommands).
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn parser() -> Args {
+        Args::new("test")
+            .opt("n", "100", "rows")
+            .opt("rho", "0.5", "correlation")
+            .opt("ps", "10,20", "p grid")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parser().parse_from(&argv(&[])).unwrap();
+        assert_eq!(p.usize("n"), 100);
+        assert_eq!(p.f64("rho"), 0.5);
+        assert!(!p.bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let p = parser().parse_from(&argv(&["--n", "7", "--rho=0.9", "--verbose"])).unwrap();
+        assert_eq!(p.usize("n"), 7);
+        assert_eq!(p.f64("rho"), 0.9);
+        assert!(p.bool("verbose"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let p = parser().parse_from(&argv(&["--ps", "1,2,3"])).unwrap();
+        assert_eq!(p.usize_list("ps"), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(parser().parse_from(&argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = parser().parse_from(&argv(&["fit", "--n", "3"])).unwrap();
+        assert_eq!(p.positional(), &["fit".to_string()]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = parser().parse_from(&argv(&["--help"])).unwrap_err();
+        assert!(err.starts_with("usage"));
+        assert!(err.contains("--rho"));
+    }
+}

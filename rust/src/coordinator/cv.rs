@@ -1,0 +1,263 @@
+//! Repeated k-fold cross-validation over SLOPE paths — the paper's §1
+//! motivating workload (`Kkl` fits) — parallelized over the worker pool.
+
+use std::sync::Mutex;
+
+use crate::linalg::Design;
+use crate::pool::par_for_each;
+use crate::rng::Pcg64;
+use crate::slope::family::Problem;
+use crate::slope::path::{fit_path, NativeGradient, PathFit, PathOptions};
+
+/// Cross-validation configuration.
+#[derive(Clone, Debug)]
+pub struct CvConfig {
+    /// Folds per repeat (`k`).
+    pub folds: usize,
+    /// Repeats (`K`).
+    pub repeats: usize,
+    /// Worker threads (0 = machine default).
+    pub threads: usize,
+    /// Master seed for the fold shuffles.
+    pub seed: u64,
+}
+
+impl Default for CvConfig {
+    fn default() -> Self {
+        Self { folds: 5, repeats: 1, threads: 0, seed: 0xcf01d }
+    }
+}
+
+/// Per-(repeat, fold) outcome.
+#[derive(Clone, Debug)]
+pub struct FoldResult {
+    /// Repeat index.
+    pub repeat: usize,
+    /// Fold index.
+    pub fold: usize,
+    /// Validation deviance per path step (aligned with `sigmas`).
+    pub val_deviance: Vec<f64>,
+    /// σ grid of this fold's path.
+    pub sigmas: Vec<f64>,
+    /// Wall time of the path fit (seconds).
+    pub fit_time: f64,
+    /// Violations encountered.
+    pub violations: usize,
+}
+
+/// Aggregated cross-validation result.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    /// All fold results.
+    pub folds: Vec<FoldResult>,
+    /// Common σ grid (truncated to the shortest fold path).
+    pub sigmas: Vec<f64>,
+    /// Mean validation deviance per σ.
+    pub mean_deviance: Vec<f64>,
+    /// Standard error of the validation deviance per σ.
+    pub se_deviance: Vec<f64>,
+    /// Index of the best σ (minimum mean validation deviance).
+    pub best_index: usize,
+    /// Total wall time (seconds).
+    pub wall_time: f64,
+}
+
+/// Run repeated k-fold CV of a SLOPE path on `prob`.
+///
+/// Every fold fits a full path with `opts` on the training split and
+/// scores deviance on the held-out split. Fold jobs run concurrently on a
+/// scoped worker pool; each derives an independent RNG stream keyed by
+/// `(repeat, fold)`, so results do not depend on scheduling order.
+pub fn cross_validate(prob: &Problem, opts: &PathOptions, cfg: &CvConfig) -> CvResult {
+    let t0 = std::time::Instant::now();
+    let n = prob.n();
+    assert!(cfg.folds >= 2, "need at least 2 folds");
+    assert!(n >= cfg.folds, "more folds than observations");
+
+    // Pre-draw fold assignments per repeat (deterministic).
+    let mut master = Pcg64::new(cfg.seed);
+    let assignments: Vec<Vec<usize>> = (0..cfg.repeats)
+        .map(|r| {
+            let mut rng = master.derive(r as u64);
+            let mut idx: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut idx);
+            let mut fold_of = vec![0usize; n];
+            for (pos, &i) in idx.iter().enumerate() {
+                fold_of[i] = pos % cfg.folds;
+            }
+            fold_of
+        })
+        .collect();
+
+    let jobs: Vec<(usize, usize)> = (0..cfg.repeats)
+        .flat_map(|r| (0..cfg.folds).map(move |f| (r, f)))
+        .collect();
+    let results: Mutex<Vec<FoldResult>> = Mutex::new(Vec::with_capacity(jobs.len()));
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(16)
+    } else {
+        cfg.threads
+    };
+
+    par_for_each(jobs.len(), threads, |j| {
+        let (repeat, fold) = jobs[j];
+        let fold_of = &assignments[repeat];
+        let train: Vec<usize> = (0..n).filter(|&i| fold_of[i] != fold).collect();
+        let valid: Vec<usize> = (0..n).filter(|&i| fold_of[i] == fold).collect();
+        let sub = subset_problem(prob, &train);
+        let fit = fit_path(&sub, opts, &NativeGradient(&sub));
+        let val = validation_deviance(prob, &valid, &fit);
+        let fr = FoldResult {
+            repeat,
+            fold,
+            val_deviance: val,
+            sigmas: fit.sigmas.clone(),
+            fit_time: fit.wall_time,
+            violations: fit.total_violations,
+        };
+        results.lock().unwrap().push(fr);
+    });
+
+    let mut folds = results.into_inner().unwrap();
+    folds.sort_by_key(|f| (f.repeat, f.fold));
+
+    // Align on the shortest path (early stopping may shorten folds).
+    let min_len = folds.iter().map(|f| f.sigmas.len()).min().unwrap_or(0);
+    let sigmas: Vec<f64> = folds
+        .first()
+        .map(|f| f.sigmas[..min_len].to_vec())
+        .unwrap_or_default();
+    let mut mean = vec![0.0; min_len];
+    let mut se = vec![0.0; min_len];
+    for s in 0..min_len {
+        let vals: Vec<f64> = folds.iter().map(|f| f.val_deviance[s]).collect();
+        let m = crate::linalg::ops::mean(&vals);
+        mean[s] = m;
+        let var = vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (vals.len().max(2) - 1) as f64;
+        se[s] = (var / vals.len() as f64).sqrt();
+    }
+    let best_index = mean
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+
+    CvResult {
+        folds,
+        sigmas,
+        mean_deviance: mean,
+        se_deviance: se,
+        best_index,
+        wall_time: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Restrict a problem to a row subset.
+pub fn subset_problem(prob: &Problem, rows: &[usize]) -> Problem {
+    let x = match &prob.x {
+        Design::Dense(m) => Design::Dense(m.subset_rows(rows)),
+        Design::Sparse(s) => Design::Sparse(s.subset_rows(rows)),
+    };
+    let y: Vec<f64> = rows.iter().map(|&i| prob.y[i]).collect();
+    Problem::new(x, y, prob.family)
+}
+
+/// Held-out deviance of each path step's solution.
+fn validation_deviance(prob: &Problem, valid: &[usize], fit: &PathFit) -> Vec<f64> {
+    let sub = subset_problem(prob, valid);
+    let pt = prob.p_total();
+    let m = prob.family.n_classes();
+    let nv = valid.len();
+    let mut out = Vec::with_capacity(fit.sigmas.len());
+    let mut eta = vec![0.0; nv * m];
+    let mut h = vec![0.0; nv * m];
+    for step in 0..fit.sigmas.len() {
+        let beta = fit.beta_at(step, pt);
+        sub.eta(&beta, &mut eta);
+        let loss = sub.family.h_loss(&eta, &sub.y, &mut h);
+        out.push(sub.family.deviance(loss, &sub.y) / nv as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+    use crate::slope::family::Family;
+    use crate::slope::lambda::{LambdaKind, PathConfig};
+
+    fn toy_problem(seed: u64) -> Problem {
+        SyntheticSpec {
+            n: 60,
+            p: 30,
+            rho: 0.2,
+            design: DesignKind::Compound,
+            beta: BetaSpec::PlusMinus { k: 4, scale: 2.0 },
+            family: Family::Gaussian,
+            noise_sd: 0.5,
+            standardize: true,
+        }
+        .generate(&mut Pcg64::new(seed))
+    }
+
+    fn toy_opts() -> PathOptions {
+        let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+        cfg.length = 12;
+        PathOptions::new(cfg)
+    }
+
+    #[test]
+    fn cv_runs_all_folds() {
+        let prob = toy_problem(1);
+        let cfg = CvConfig { folds: 4, repeats: 2, threads: 4, seed: 7 };
+        let res = cross_validate(&prob, &toy_opts(), &cfg);
+        assert_eq!(res.folds.len(), 8);
+        assert!(!res.sigmas.is_empty());
+        assert_eq!(res.mean_deviance.len(), res.sigmas.len());
+        assert!(res.best_index < res.sigmas.len());
+    }
+
+    #[test]
+    fn cv_is_deterministic_across_thread_counts() {
+        let prob = toy_problem(2);
+        let cfg1 = CvConfig { folds: 3, repeats: 1, threads: 1, seed: 9 };
+        let cfg4 = CvConfig { folds: 3, repeats: 1, threads: 4, seed: 9 };
+        let r1 = cross_validate(&prob, &toy_opts(), &cfg1);
+        let r4 = cross_validate(&prob, &toy_opts(), &cfg4);
+        assert_eq!(r1.mean_deviance.len(), r4.mean_deviance.len());
+        for (a, b) in r1.mean_deviance.iter().zip(&r4.mean_deviance) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn cv_selects_interior_sigma_for_signal_data() {
+        // With real signal, the best σ should not be the very first
+        // (all-zero model) grid point.
+        let prob = toy_problem(3);
+        let cfg = CvConfig { folds: 5, repeats: 1, threads: 4, seed: 11 };
+        let res = cross_validate(&prob, &toy_opts(), &cfg);
+        assert!(res.best_index > 0, "best_index = {}", res.best_index);
+    }
+
+    #[test]
+    fn subset_problem_shapes() {
+        let prob = toy_problem(4);
+        let sub = subset_problem(&prob, &[0, 5, 10]);
+        assert_eq!(sub.n(), 3);
+        assert_eq!(sub.p(), prob.p());
+        assert_eq!(sub.y[1], prob.y[5]);
+    }
+
+    #[test]
+    fn validation_deviance_decreases_from_null() {
+        let prob = toy_problem(5);
+        let cfg = CvConfig { folds: 3, repeats: 1, threads: 2, seed: 13 };
+        let res = cross_validate(&prob, &toy_opts(), &cfg);
+        // best mean deviance beats the null (first step) deviance
+        assert!(res.mean_deviance[res.best_index] < res.mean_deviance[0]);
+    }
+}

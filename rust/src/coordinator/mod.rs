@@ -1,0 +1,16 @@
+//! Layer-3 coordination: cross-validation and experiment orchestration.
+//!
+//! The paper's motivating workload (§1) is `K`-times repeated `k`-fold
+//! cross-validation over a full regularization path — `K·k·l` model fits.
+//! [`cv`] runs the fold×repeat grid over the [`crate::pool`] worker pool
+//! with per-job derived RNG streams (bit-reproducible regardless of
+//! scheduling), and [`experiment`] provides the shared simulation driver
+//! the paper-figure benches are built on. [`report`] renders/persists
+//! result tables.
+
+pub mod cv;
+pub mod experiment;
+pub mod report;
+
+pub use cv::{cross_validate, CvConfig, CvResult};
+pub use experiment::{run_grid, GridPoint, GridSpec};

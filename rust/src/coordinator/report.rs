@@ -1,0 +1,45 @@
+//! Result persistence: JSON experiment records under `results/`.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::jsonio::Json;
+
+/// Write an experiment record to `results/<name>.json` and return the
+/// path. Records are append-friendly: each run overwrites its own file,
+/// EXPERIMENTS.md references them by name.
+pub fn write_json(name: &str, payload: Json) -> Result<PathBuf> {
+    let dir = crate::benchkit::results_dir();
+    std::fs::create_dir_all(&dir).context("creating results dir")?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, payload.to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Read an experiment record back (used by tests and the CLI `report`
+/// subcommand).
+pub fn read_json(name: &str) -> Result<Json> {
+    let path = crate::benchkit::results_dir().join(format!("{name}.json"));
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_record() {
+        let payload = Json::obj(vec![
+            ("experiment", Json::Str("selftest".into())),
+            ("values", Json::nums(&[1.0, 2.5])),
+        ]);
+        let path = write_json("_report_selftest", payload.clone()).unwrap();
+        let back = read_json("_report_selftest").unwrap();
+        assert_eq!(back, payload);
+        let _ = std::fs::remove_file(path);
+    }
+}

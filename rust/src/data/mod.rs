@@ -1,0 +1,14 @@
+//! Data generation: the synthetic designs of §3.2 and deterministic
+//! simulated stand-ins for the paper's real datasets (§3.3).
+//!
+//! See DESIGN.md §6 for the substitution rationale: the real datasets are
+//! behind external hosts this environment cannot reach, so `real`
+//! fabricates designs matching each dataset's dimensions, sparsity,
+//! response family and correlation texture. The screening phenomena under
+//! study depend on (n, p, correlation, signal sparsity) — all preserved.
+
+pub mod real;
+pub mod synth;
+
+pub use real::RealDataset;
+pub use synth::{chain_design, compound_design, iid_design, SyntheticSpec};

@@ -1,0 +1,383 @@
+//! Deterministic simulated stand-ins for the paper's real datasets
+//! (§3.3, Tables 2–3, Figure 7).
+//!
+//! The originals live on external hosts unreachable from this
+//! environment, so each dataset is replaced by a synthetic design with
+//! the same `n`, `p`, response family, sparsity regime and a correlation
+//! texture imitating the original's provenance (low-rank latent factors
+//! for the microarray/mass-spec data, pixel-neighbour correlation for
+//! zipcode, light correlation for the tabular sets). DESIGN.md §6 records
+//! the substitution argument; the screening behaviour under study depends
+//! on dimensions, correlation and signal sparsity — all preserved.
+
+use crate::linalg::{Csc, Design, Mat};
+use crate::rng::Pcg64;
+use crate::slope::family::{sigmoid, Family, Problem};
+
+/// Identifiers for the seven datasets used in §3.3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RealDataset {
+    /// Mass-spectrometry cancer detection, 100 × 9920, binary response.
+    Arcene,
+    /// Drug discovery, 800 × 88119, sparse binary features, binary response.
+    Dorothea,
+    /// Digit discrimination (4 vs 9), 6000 × 4955, binary response.
+    Gisette,
+    /// Leukemia microarray, 38 × 7129, binary response.
+    Golub,
+    /// Computer-activity tabular data, 8192 × 12, continuous response.
+    Cpusmall,
+    /// Physician-visit counts, 4406 × 25, count response.
+    Physician,
+    /// Handwritten digits, 200 × 256 (16×16 pixels), 10 classes.
+    Zipcode,
+}
+
+impl RealDataset {
+    /// All seven datasets.
+    pub fn all() -> [RealDataset; 7] {
+        [
+            RealDataset::Arcene,
+            RealDataset::Dorothea,
+            RealDataset::Gisette,
+            RealDataset::Golub,
+            RealDataset::Cpusmall,
+            RealDataset::Physician,
+            RealDataset::Zipcode,
+        ]
+    }
+
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RealDataset::Arcene => "arcene",
+            RealDataset::Dorothea => "dorothea",
+            RealDataset::Gisette => "gisette",
+            RealDataset::Golub => "golub",
+            RealDataset::Cpusmall => "cpusmall",
+            RealDataset::Physician => "physician",
+            RealDataset::Zipcode => "zipcode",
+        }
+    }
+
+    /// (n, p) of the original.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            RealDataset::Arcene => (100, 9920),
+            RealDataset::Dorothea => (800, 88_119),
+            RealDataset::Gisette => (6000, 4955),
+            RealDataset::Golub => (38, 7129),
+            RealDataset::Cpusmall => (8192, 12),
+            RealDataset::Physician => (4406, 25),
+            RealDataset::Zipcode => (200, 256),
+        }
+    }
+
+    /// The family each dataset is modelled with in Table 3 (Table 2 uses
+    /// OLS *and* logistic on the first four).
+    pub fn table3_family(&self) -> Family {
+        match self {
+            RealDataset::Cpusmall => Family::Gaussian,
+            RealDataset::Golub => Family::Binomial,
+            RealDataset::Physician => Family::Poisson,
+            RealDataset::Zipcode => Family::Multinomial { classes: 10 },
+            // the remaining sets appear only in Table 2 / Fig 7
+            _ => Family::Binomial,
+        }
+    }
+
+    /// Generate the stand-in with the canonical seed (deterministic).
+    pub fn load(&self) -> Problem {
+        self.load_with(Family::Binomial, 0x5107e_u64 + ordinal(*self) as u64)
+    }
+
+    /// Generate with an explicit family (Table 2 fits OLS *and* logistic
+    /// to binary responses — OLS on {0,1} targets, as the paper does).
+    pub fn load_with(&self, family_for_binary: Family, seed: u64) -> Problem {
+        let mut rng = Pcg64::new(seed);
+        match self {
+            RealDataset::Arcene => {
+                latent_factor_binary(&mut rng, 100, 9920, 40, 30, 3.0, family_for_binary)
+            }
+            RealDataset::Dorothea => dorothea(&mut rng, family_for_binary),
+            RealDataset::Gisette => {
+                latent_factor_binary(&mut rng, 6000, 4955, 60, 50, 2.0, family_for_binary)
+            }
+            RealDataset::Golub => {
+                latent_factor_binary(&mut rng, 38, 7129, 10, 20, 4.0, family_for_binary)
+            }
+            RealDataset::Cpusmall => cpusmall(&mut rng),
+            RealDataset::Physician => physician(&mut rng),
+            RealDataset::Zipcode => zipcode(&mut rng),
+        }
+    }
+}
+
+fn ordinal(d: RealDataset) -> usize {
+    RealDataset::all().iter().position(|&x| x == d).unwrap()
+}
+
+/// Microarray/mass-spec texture: `X = Z W + noise` with `r` latent factors
+/// (giving correlated gene blocks), binary labels from `k` informative
+/// features. Used for arcene, gisette and golub.
+fn latent_factor_binary(
+    rng: &mut Pcg64,
+    n: usize,
+    p: usize,
+    r: usize,
+    k: usize,
+    signal: f64,
+    family: Family,
+) -> Problem {
+    // latent scores per observation
+    let z: Vec<f64> = (0..n * r).map(|_| rng.normal()).collect();
+    let mut x = Mat::zeros(n, p);
+    // factor loadings are sparse: each feature loads on 1–3 factors
+    for j in 0..p {
+        let col = x.col_mut(j);
+        let n_load = 1 + rng.below(3) as usize;
+        let mut loadings = Vec::with_capacity(n_load);
+        for _ in 0..n_load {
+            loadings.push((rng.below(r as u64) as usize, rng.normal()));
+        }
+        for (i, c) in col.iter_mut().enumerate() {
+            let mut v = 0.6 * rng.normal(); // idiosyncratic noise
+            for &(f, w) in &loadings {
+                v += w * z[i * r + f];
+            }
+            *c = v;
+        }
+    }
+    // response from k informative features
+    let mut eta = vec![0.0; n];
+    for j in 0..k.min(p) {
+        let w = signal * rng.sign() / (k as f64).sqrt();
+        for (e, &v) in eta.iter_mut().zip(x.col(j)) {
+            *e += w * v;
+        }
+    }
+    let y: Vec<f64> = eta
+        .iter()
+        .map(|&e| if rng.bernoulli(sigmoid(e)) { 1.0 } else { 0.0 })
+        .collect();
+    x.standardize(true, true);
+    finish_binary(x, y, family)
+}
+
+/// dorothea: sparse binary features (~0.9% density), binary response.
+fn dorothea(rng: &mut Pcg64, family: Family) -> Problem {
+    let (n, p) = RealDataset::Dorothea.dims();
+    let density = 0.009;
+    let k = 60; // informative features
+    let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+    // latent binary "pharmacophore" groups drive correlated activations
+    let r = 50;
+    let groups: Vec<Vec<bool>> = (0..r)
+        .map(|_| (0..n).map(|_| rng.bernoulli(0.08)).collect())
+        .collect();
+    for _ in 0..p {
+        let mut col = Vec::new();
+        let grp = &groups[rng.below(r as u64) as usize];
+        for (i, &g) in grp.iter().enumerate() {
+            let prob = if g { 0.35 } else { density * 0.6 };
+            if rng.bernoulli(prob) {
+                col.push((i, 1.0));
+            }
+        }
+        cols.push(col);
+    }
+    let mut eta = vec![0.0f64; n];
+    for (j, col) in cols.iter().enumerate().take(k) {
+        let w = 1.6 * rng.sign();
+        for &(i, v) in col {
+            eta[i] += w * v;
+        }
+        let _ = j;
+    }
+    let y: Vec<f64> = eta
+        .iter()
+        .map(|&e| if rng.bernoulli(sigmoid(e - 0.4)) { 1.0 } else { 0.0 })
+        .collect();
+    let mut csc = Csc::from_columns(n, &cols);
+    csc.scale_columns();
+    match family {
+        Family::Gaussian => {
+            let mean = crate::linalg::ops::mean(&y);
+            let yc: Vec<f64> = y.iter().map(|v| v - mean).collect();
+            Problem::new(Design::Sparse(csc), yc, Family::Gaussian)
+        }
+        _ => Problem::new(Design::Sparse(csc), y, Family::Binomial),
+    }
+}
+
+/// cpusmall: 12 correlated tabular system-activity features, continuous
+/// response (here: a noisy nonlinear-ish combination).
+fn cpusmall(rng: &mut Pcg64) -> Problem {
+    let (n, p) = RealDataset::Cpusmall.dims();
+    let mut x = crate::data::synth::chain_design(rng, n, p, 0.55);
+    let beta: Vec<f64> = (0..p).map(|j| if j < 6 { rng.normal() * 1.5 } else { 0.0 }).collect();
+    let mut eta = vec![0.0; n];
+    x.gemv(&beta, &mut eta);
+    let mut y: Vec<f64> =
+        eta.iter().map(|&e| e + 0.5 * e.tanh() + rng.normal()).collect();
+    x.standardize(true, true);
+    let mean = crate::linalg::ops::mean(&y);
+    for v in y.iter_mut() {
+        *v -= mean;
+    }
+    Problem::new(Design::Dense(x), y, Family::Gaussian)
+}
+
+/// physician: 25 demographic/insurance covariates, office-visit counts.
+fn physician(rng: &mut Pcg64) -> Problem {
+    let (n, p) = RealDataset::Physician.dims();
+    let mut x = Mat::zeros(n, p);
+    for j in 0..p {
+        // mix of binary indicators and continuous covariates
+        let binary = j % 3 == 0;
+        let col = x.col_mut(j);
+        for c in col.iter_mut() {
+            *c = if binary {
+                if rng.bernoulli(0.4) {
+                    1.0
+                } else {
+                    0.0
+                }
+            } else {
+                rng.normal()
+            };
+        }
+    }
+    let beta: Vec<f64> = (0..p)
+        .map(|j| if j < 8 { 0.12 * rng.sign() * (1.0 + rng.next_f64()) } else { 0.0 })
+        .collect();
+    let mut eta = vec![0.0; n];
+    x.gemv(&beta, &mut eta);
+    let y: Vec<f64> = eta
+        .iter()
+        .map(|&e| rng.poisson((0.8 + e).clamp(-30.0, 3.5).exp()) as f64)
+        .collect();
+    x.standardize(true, true);
+    Problem::new(Design::Dense(x), y, Family::Poisson)
+}
+
+/// zipcode: 16×16 pixel digits, 10 classes; neighbouring pixels correlate
+/// through smooth class templates.
+fn zipcode(rng: &mut Pcg64) -> Problem {
+    let (n, p) = RealDataset::Zipcode.dims();
+    let classes = 10;
+    let side = 16;
+    // smooth random template per class: sum of a few Gaussian bumps
+    let mut templates = vec![vec![0.0f64; p]; classes];
+    for tpl in templates.iter_mut() {
+        for _ in 0..4 {
+            let cx = rng.uniform(2.0, 14.0);
+            let cy = rng.uniform(2.0, 14.0);
+            let amp = rng.uniform(1.0, 2.5);
+            let s2 = rng.uniform(2.0, 8.0);
+            for px in 0..side {
+                for py in 0..side {
+                    let d2 = (px as f64 - cx).powi(2) + (py as f64 - cy).powi(2);
+                    tpl[py * side + px] += amp * (-d2 / (2.0 * s2)).exp();
+                }
+            }
+        }
+    }
+    let mut x = Mat::zeros(n, p);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = (i % classes) as usize;
+        y.push(cls as f64);
+        let tpl = &templates[cls];
+        for j in 0..p {
+            x.set(i, j, tpl[j] + 0.7 * rng.normal());
+        }
+    }
+    x.standardize(true, true);
+    Problem::new(Design::Dense(x), y, Family::Multinomial { classes })
+}
+
+fn finish_binary(x: Mat, y: Vec<f64>, family: Family) -> Problem {
+    match family {
+        Family::Gaussian => {
+            // Table 2 fits OLS straight to the 0/1 labels (centered).
+            let mean = crate::linalg::ops::mean(&y);
+            let yc: Vec<f64> = y.iter().map(|v| v - mean).collect();
+            Problem::new(Design::Dense(x), yc, Family::Gaussian)
+        }
+        _ => Problem::new(Design::Dense(x), y, Family::Binomial),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_paper() {
+        assert_eq!(RealDataset::Arcene.dims(), (100, 9920));
+        assert_eq!(RealDataset::Dorothea.dims(), (800, 88_119));
+        assert_eq!(RealDataset::Gisette.dims(), (6000, 4955));
+        assert_eq!(RealDataset::Golub.dims(), (38, 7129));
+        assert_eq!(RealDataset::Cpusmall.dims(), (8192, 12));
+        assert_eq!(RealDataset::Physician.dims(), (4406, 25));
+        assert_eq!(RealDataset::Zipcode.dims(), (200, 256));
+    }
+
+    #[test]
+    fn golub_standin_has_right_shape_and_labels() {
+        let prob = RealDataset::Golub.load();
+        assert_eq!(prob.n(), 38);
+        assert_eq!(prob.p(), 7129);
+        assert!(prob.y.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(prob.y.iter().any(|&v| v == 1.0));
+        assert!(prob.y.iter().any(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dorothea_standin_is_sparse() {
+        let prob = RealDataset::Dorothea.load();
+        match &prob.x {
+            Design::Sparse(csc) => {
+                let density = csc.nnz() as f64 / (csc.nrows() * csc.ncols()) as f64;
+                assert!(density < 0.05, "density={density}");
+                assert!(density > 0.001, "density={density}");
+            }
+            _ => panic!("dorothea must be sparse"),
+        }
+    }
+
+    #[test]
+    fn zipcode_standin_has_ten_classes() {
+        let prob = RealDataset::Zipcode.load();
+        assert_eq!(prob.family, Family::Multinomial { classes: 10 });
+        let mut seen = [false; 10];
+        for &v in &prob.y {
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn loads_are_deterministic() {
+        let a = RealDataset::Golub.load();
+        let b = RealDataset::Golub.load();
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn ols_variant_centers_response() {
+        let prob = RealDataset::Golub.load_with(Family::Gaussian, 123);
+        assert_eq!(prob.family, Family::Gaussian);
+        assert!(crate::linalg::ops::mean(&prob.y).abs() < 1e-9);
+    }
+
+    #[test]
+    fn physician_counts() {
+        let prob = RealDataset::Physician.load();
+        assert_eq!(prob.family, Family::Poisson);
+        assert!(prob.y.iter().all(|&v| v >= 0.0 && v.fract() == 0.0));
+        // visits shouldn't be degenerate
+        assert!(crate::linalg::ops::mean(&prob.y) > 0.2);
+    }
+}

@@ -1,0 +1,412 @@
+//! Synthetic designs of §3.2.
+//!
+//! * [`compound_design`] — rows iid `N(0, Σ)` with compound symmetry
+//!   `Σ_ij = ρ + (1−ρ)·1{i=j}` (§3.2.1), generated via the one-factor
+//!   identity `x = √ρ·z·1 + √(1−ρ)·ε` (no p×p Cholesky needed).
+//! * [`chain_design`] — the §3.2.3 construction `X_1 ~ N(0, I)`,
+//!   `X_j ~ N(ρ X_{j−1}, I)`.
+//! * [`iid_design`] — independent standard normal columns (Fig. 5).
+//! * Coefficient and response generators for the four families, matching
+//!   the parameter choices quoted in the paper for each experiment.
+
+use crate::linalg::{Design, Mat};
+use crate::rng::Pcg64;
+use crate::slope::family::{Family, Problem};
+
+/// Compound-symmetric design: every pair of predictors has correlation ρ.
+pub fn compound_design(rng: &mut Pcg64, n: usize, p: usize, rho: f64) -> Mat {
+    assert!((0.0..1.0).contains(&rho), "rho must be in [0,1)");
+    let sr = rho.sqrt();
+    let sc = (1.0 - rho).sqrt();
+    let mut x = Mat::zeros(n, p);
+    // factor draws per row
+    let z: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    for j in 0..p {
+        let col = x.col_mut(j);
+        for (i, c) in col.iter_mut().enumerate() {
+            *c = sr * z[i] + sc * rng.normal();
+        }
+    }
+    x
+}
+
+/// Markov-chain design of §3.2.3: `X_j ~ N(ρ X_{j−1}, I)` column-wise.
+pub fn chain_design(rng: &mut Pcg64, n: usize, p: usize, rho: f64) -> Mat {
+    let mut x = Mat::zeros(n, p);
+    for j in 0..p {
+        // borrow discipline: copy the previous column first
+        let prev: Option<Vec<f64>> = if j > 0 { Some(x.col(j - 1).to_vec()) } else { None };
+        let col = x.col_mut(j);
+        match prev {
+            None => {
+                for c in col.iter_mut() {
+                    *c = rng.normal();
+                }
+            }
+            Some(prev) => {
+                for (c, &pv) in col.iter_mut().zip(&prev) {
+                    *c = rho * pv + rng.normal();
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Independent standard-normal columns (Fig. 5's "orthonormal-ish" case).
+pub fn iid_design(rng: &mut Pcg64, n: usize, p: usize) -> Mat {
+    let mut x = Mat::zeros(n, p);
+    for j in 0..p {
+        for c in x.col_mut(j).iter_mut() {
+            *c = rng.normal();
+        }
+    }
+    x
+}
+
+/// How the true β is drawn (the paper varies this across experiments).
+#[derive(Clone, Copy, Debug)]
+pub enum BetaSpec {
+    /// First k entries iid `N(0, 1)` (§3.2.1).
+    Normal {
+        /// Number of nonzero coefficients.
+        k: usize,
+    },
+    /// First k entries sampled from `{−scale, +scale}` (§3.2.1 Fig 2, §3.2.2).
+    PlusMinus {
+        /// Number of nonzero coefficients.
+        k: usize,
+        /// Magnitude.
+        scale: f64,
+    },
+    /// First k entries sampled *without replacement* from
+    /// `{step, 2·step, …, k·step}` (§3.2.3: step=1 for OLS/logistic,
+    /// step=1/40 for Poisson).
+    Ladder {
+        /// Number of nonzero coefficients.
+        k: usize,
+        /// Spacing of the ladder.
+        step: f64,
+    },
+}
+
+impl BetaSpec {
+    /// Draw the coefficient vector of length p.
+    pub fn draw(&self, rng: &mut Pcg64, p: usize) -> Vec<f64> {
+        let mut beta = vec![0.0; p];
+        match *self {
+            BetaSpec::Normal { k } => {
+                for b in beta.iter_mut().take(k.min(p)) {
+                    *b = rng.normal();
+                }
+            }
+            BetaSpec::PlusMinus { k, scale } => {
+                for b in beta.iter_mut().take(k.min(p)) {
+                    *b = scale * rng.sign();
+                }
+            }
+            BetaSpec::Ladder { k, step } => {
+                let k = k.min(p);
+                let ladder: Vec<f64> = (1..=k).map(|i| i as f64 * step).collect();
+                let values = rng.sample_without_replacement(&ladder, k);
+                for (b, v) in beta.iter_mut().zip(values) {
+                    *b = v;
+                }
+            }
+        }
+        beta
+    }
+}
+
+/// Full synthetic-problem specification.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Observations.
+    pub n: usize,
+    /// Predictors.
+    pub p: usize,
+    /// Correlation parameter (meaning depends on `design`).
+    pub rho: f64,
+    /// `"compound" | "chain" | "iid"`.
+    pub design: DesignKind,
+    /// Coefficient spec.
+    pub beta: BetaSpec,
+    /// Response family.
+    pub family: Family,
+    /// Noise standard deviation for OLS / the latent logistic score
+    /// (§3.2.3 uses ε ~ N(0, 20·I) ⇒ sd = √20).
+    pub noise_sd: f64,
+    /// Standardize columns (center + unit norm) and center y for OLS, as
+    /// in §3.1.
+    pub standardize: bool,
+}
+
+/// Design-matrix construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DesignKind {
+    /// Compound symmetry (§3.2.1).
+    Compound,
+    /// Markov chain (§3.2.3).
+    Chain,
+    /// iid columns (Fig. 5).
+    Iid,
+}
+
+impl SyntheticSpec {
+    /// Generate a problem instance.
+    pub fn generate(&self, rng: &mut Pcg64) -> Problem {
+        let mut x = match self.design {
+            DesignKind::Compound => compound_design(rng, self.n, self.p, self.rho),
+            DesignKind::Chain => chain_design(rng, self.n, self.p, self.rho),
+            DesignKind::Iid => iid_design(rng, self.n, self.p),
+        };
+        let beta = self.beta.draw(rng, self.p * self.family.n_classes());
+        // responses are generated on the *unstandardized* design (as in the
+        // paper), standardization happens afterwards
+        let y = draw_response(rng, &x, &beta, self.family, self.noise_sd);
+        if self.standardize {
+            x.standardize(true, true);
+        }
+        let mut y = y;
+        if self.standardize && self.family == Family::Gaussian {
+            let mean = crate::linalg::ops::mean(&y);
+            for v in y.iter_mut() {
+                *v -= mean;
+            }
+        }
+        Problem::new(Design::Dense(x), y, self.family)
+    }
+}
+
+/// Draw a response vector for the given design/coefficients/family.
+pub fn draw_response(
+    rng: &mut Pcg64,
+    x: &Mat,
+    beta: &[f64],
+    family: Family,
+    noise_sd: f64,
+) -> Vec<f64> {
+    let n = x.nrows();
+    let p = x.ncols();
+    let m = family.n_classes();
+    assert_eq!(beta.len(), p * m);
+    let mut eta = vec![0.0; n * m];
+    for l in 0..m {
+        let mut out = vec![0.0; n];
+        x.gemv(&beta[l * p..(l + 1) * p], &mut out);
+        eta[l * n..(l + 1) * n].copy_from_slice(&out);
+    }
+    match family {
+        Family::Gaussian => (0..n).map(|i| eta[i] + noise_sd * rng.normal()).collect(),
+        // §3.2.3: y = sign(Xβ + ε) mapped to {0, 1}.
+        Family::Binomial => (0..n)
+            .map(|i| if eta[i] + noise_sd * rng.normal() > 0.0 { 1.0 } else { 0.0 })
+            .collect(),
+        Family::Poisson => (0..n)
+            .map(|i| rng.poisson(eta[i].clamp(-30.0, 30.0).exp()) as f64)
+            .collect(),
+        Family::Multinomial { classes } => (0..n)
+            .map(|i| {
+                // softmax draw
+                let mut maxe = f64::NEG_INFINITY;
+                for l in 0..classes {
+                    maxe = maxe.max(eta[l * n + i]);
+                }
+                let weights: Vec<f64> =
+                    (0..classes).map(|l| (eta[l * n + i] - maxe).exp()).collect();
+                let total: f64 = weights.iter().sum();
+                let mut u = rng.next_f64() * total;
+                let mut cls = classes - 1;
+                for (l, w) in weights.iter().enumerate() {
+                    if u < *w {
+                        cls = l;
+                        break;
+                    }
+                    u -= w;
+                }
+                cls as f64
+            })
+            .collect(),
+    }
+}
+
+/// §3.2.3 multinomial β: for each of the first k rows, one uniformly-chosen
+/// class gets a value sampled without replacement from `{1, …, k}`.
+pub fn multinomial_beta(rng: &mut Pcg64, p: usize, k: usize, classes: usize) -> Vec<f64> {
+    let mut beta = vec![0.0; p * classes];
+    let ladder: Vec<f64> = (1..=k).map(|i| i as f64).collect();
+    let values = rng.sample_without_replacement(&ladder, k);
+    for (row, v) in values.into_iter().enumerate() {
+        let class = rng.below(classes as u64) as usize;
+        beta[class * p + row] = v;
+    }
+    beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::dot;
+
+    fn col_corr(x: &Mat, a: usize, b: usize) -> f64 {
+        let n = x.nrows() as f64;
+        let ca = x.col(a);
+        let cb = x.col(b);
+        let ma = ca.iter().sum::<f64>() / n;
+        let mb = cb.iter().sum::<f64>() / n;
+        let mut num = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for i in 0..x.nrows() {
+            num += (ca[i] - ma) * (cb[i] - mb);
+            va += (ca[i] - ma) * (ca[i] - ma);
+            vb += (cb[i] - mb) * (cb[i] - mb);
+        }
+        num / (va.sqrt() * vb.sqrt())
+    }
+
+    #[test]
+    fn compound_design_hits_target_correlation() {
+        let mut rng = Pcg64::new(1);
+        let x = compound_design(&mut rng, 4000, 6, 0.6);
+        let mut sum = 0.0;
+        let mut count = 0;
+        for a in 0..6 {
+            for b in (a + 1)..6 {
+                sum += col_corr(&x, a, b);
+                count += 1;
+            }
+        }
+        let mean_corr = sum / count as f64;
+        assert!((mean_corr - 0.6).abs() < 0.05, "corr={mean_corr}");
+    }
+
+    #[test]
+    fn chain_design_decaying_correlation() {
+        let mut rng = Pcg64::new(2);
+        let x = chain_design(&mut rng, 5000, 5, 0.9);
+        let c01 = col_corr(&x, 0, 1);
+        let c04 = col_corr(&x, 0, 4);
+        assert!(c01 > 0.5, "adjacent corr too low: {c01}");
+        assert!(c04 < c01, "correlation should decay along the chain");
+    }
+
+    #[test]
+    fn iid_design_uncorrelated() {
+        let mut rng = Pcg64::new(3);
+        let x = iid_design(&mut rng, 5000, 4);
+        for a in 0..4 {
+            for b in (a + 1)..4 {
+                assert!(col_corr(&x, a, b).abs() < 0.05);
+            }
+        }
+    }
+
+    #[test]
+    fn beta_specs_have_right_support() {
+        let mut rng = Pcg64::new(4);
+        let b1 = BetaSpec::Normal { k: 5 }.draw(&mut rng, 20);
+        assert_eq!(b1.iter().filter(|&&v| v != 0.0).count(), 5);
+        let b2 = BetaSpec::PlusMinus { k: 3, scale: 2.0 }.draw(&mut rng, 10);
+        assert!(b2[..3].iter().all(|&v| v.abs() == 2.0));
+        assert!(b2[3..].iter().all(|&v| v == 0.0));
+        let b3 = BetaSpec::Ladder { k: 4, step: 0.5 }.draw(&mut rng, 10);
+        let mut nz: Vec<f64> = b3.iter().copied().filter(|&v| v != 0.0).collect();
+        nz.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(nz, vec![0.5, 1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn generate_standardizes() {
+        let spec = SyntheticSpec {
+            n: 50,
+            p: 10,
+            rho: 0.3,
+            design: DesignKind::Compound,
+            beta: BetaSpec::PlusMinus { k: 2, scale: 2.0 },
+            family: Family::Gaussian,
+            noise_sd: 1.0,
+            standardize: true,
+        };
+        let mut rng = Pcg64::new(5);
+        let prob = spec.generate(&mut rng);
+        let x = prob.x.as_dense().unwrap();
+        for j in 0..x.ncols() {
+            let col = x.col(j);
+            let norm = dot(col, col).sqrt();
+            assert!((norm - 1.0).abs() < 1e-9);
+        }
+        let ymean = crate::linalg::ops::mean(&prob.y);
+        assert!(ymean.abs() < 1e-9);
+    }
+
+    #[test]
+    fn binomial_response_is_binary() {
+        let spec = SyntheticSpec {
+            n: 100,
+            p: 5,
+            rho: 0.0,
+            design: DesignKind::Iid,
+            beta: BetaSpec::PlusMinus { k: 2, scale: 1.0 },
+            family: Family::Binomial,
+            noise_sd: (20.0f64).sqrt(),
+            standardize: true,
+        };
+        let mut rng = Pcg64::new(6);
+        let prob = spec.generate(&mut rng);
+        assert!(prob.y.iter().all(|&v| v == 0.0 || v == 1.0));
+        // both classes should appear
+        assert!(prob.y.iter().any(|&v| v == 0.0) && prob.y.iter().any(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn multinomial_beta_layout() {
+        let mut rng = Pcg64::new(7);
+        let beta = multinomial_beta(&mut rng, 10, 4, 3);
+        assert_eq!(beta.len(), 30);
+        // exactly 4 nonzeros, all in the first 4 predictor rows
+        let nz: Vec<usize> = beta
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .map(|(i, _)| i % 10)
+            .collect();
+        assert_eq!(nz.len(), 4);
+        assert!(nz.iter().all(|&r| r < 4));
+    }
+
+    #[test]
+    fn poisson_response_nonnegative_integers() {
+        let spec = SyntheticSpec {
+            n: 60,
+            p: 8,
+            rho: 0.5,
+            design: DesignKind::Chain,
+            beta: BetaSpec::Ladder { k: 4, step: 1.0 / 40.0 },
+            family: Family::Poisson,
+            noise_sd: 0.0,
+            standardize: true,
+        };
+        let mut rng = Pcg64::new(8);
+        let prob = spec.generate(&mut rng);
+        assert!(prob.y.iter().all(|&v| v >= 0.0 && v.fract() == 0.0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = SyntheticSpec {
+            n: 20,
+            p: 6,
+            rho: 0.2,
+            design: DesignKind::Compound,
+            beta: BetaSpec::Normal { k: 2 },
+            family: Family::Gaussian,
+            noise_sd: 1.0,
+            standardize: false,
+        };
+        let p1 = spec.generate(&mut Pcg64::new(42));
+        let p2 = spec.generate(&mut Pcg64::new(42));
+        assert_eq!(p1.y, p2.y);
+        assert_eq!(p1.x.as_dense().unwrap().data(), p2.x.as_dense().unwrap().data());
+    }
+}

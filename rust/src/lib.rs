@@ -1,0 +1,37 @@
+//! # slope-screen
+//!
+//! A production-grade reproduction of *The Strong Screening Rule for SLOPE*
+//! (Larsson, Bogdan & Wallin, NeurIPS 2020) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! * [`slope`] — the sorted-ℓ1 machinery: the prox operator, penalty
+//!   sequences, the subdifferential/KKT conditions of Theorem 1, the
+//!   screening rules (Algorithms 1–2), the FISTA solver and the
+//!   regularization-path driver with the strong-set (Algorithm 3) and
+//!   previous-set (Algorithm 4) strategies.
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled JAX/Pallas
+//!   gradient artifacts (`artifacts/*.hlo.txt`) and evaluates full-design
+//!   gradients on the screening/KKT hot path.
+//! * [`coordinator`] — cross-validation and experiment orchestration over a
+//!   worker pool.
+//! * [`data`] — synthetic design generators and simulated stand-ins for the
+//!   paper's real datasets.
+//! * substrates built for the offline environment: [`rng`], [`linalg`],
+//!   [`pool`], [`cli`], [`jsonio`], [`check`] and [`benchkit`].
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! recorded reproduction runs.
+
+pub mod benchkit;
+pub mod check;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod jsonio;
+pub mod linalg;
+pub mod pool;
+pub mod rng;
+pub mod runtime;
+pub mod slope;

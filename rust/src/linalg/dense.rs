@@ -1,0 +1,303 @@
+//! Dense column-major matrix with the column-oriented kernels the SLOPE
+//! path solver spends its time in.
+
+/// Dense `f64` matrix, column-major (`data[j * nrows + i]` is `(i, j)`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of the given shape.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Build from a column-major buffer.
+    pub fn from_col_major(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols, "buffer/shape mismatch");
+        Self { nrows, ncols, data }
+    }
+
+    /// Build from row slices (test convenience).
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let nrows = rows.len();
+        let ncols = if nrows == 0 { 0 } else { rows[0].len() };
+        let mut m = Self::zeros(nrows, ncols);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), ncols, "ragged rows");
+            for (j, &v) in row.iter().enumerate() {
+                m.set(i, j, v);
+            }
+        }
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[j * self.nrows + i]
+    }
+
+    /// Element mutator.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.data[j * self.nrows + i] = v;
+    }
+
+    /// Borrow column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f64] {
+        &self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// Mutably borrow column `j`.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        &mut self.data[j * self.nrows..(j + 1) * self.nrows]
+    }
+
+    /// The raw column-major buffer.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `out = X v`. Column-major axpy accumulation: for each column j,
+    /// `out += v_j * x_j`, with the inner loop auto-vectorizing.
+    pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        out.fill(0.0);
+        for j in 0..self.ncols {
+            let vj = v[j];
+            if vj == 0.0 {
+                continue; // sparse iterates are common on screened paths
+            }
+            let col = self.col(j);
+            for (o, &x) in out.iter_mut().zip(col) {
+                *o += vj * x;
+            }
+        }
+    }
+
+    /// `out = Xᵀ v`: one dot product per column, 4-way unrolled.
+    pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        for j in 0..self.ncols {
+            out[j] = dot(self.col(j), v);
+        }
+    }
+
+    /// `out = X[:, cols] v` where `v.len() == cols.len()`.
+    pub fn gemv_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), cols.len());
+        assert_eq!(out.len(), self.nrows);
+        out.fill(0.0);
+        for (&j, &vj) in cols.iter().zip(v) {
+            if vj == 0.0 {
+                continue;
+            }
+            let col = self.col(j);
+            for (o, &x) in out.iter_mut().zip(col) {
+                *o += vj * x;
+            }
+        }
+    }
+
+    /// `out = X[:, cols]ᵀ v` where `out.len() == cols.len()`.
+    pub fn gemv_t_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), cols.len());
+        assert_eq!(v.len(), self.nrows);
+        for (o, &j) in out.iter_mut().zip(cols) {
+            *o = dot(self.col(j), v);
+        }
+    }
+
+    /// Squared ℓ2 norm of every column.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.ncols).map(|j| dot(self.col(j), self.col(j))).collect()
+    }
+
+    /// Center columns to mean zero and/or scale to unit ℓ2 norm
+    /// (the paper's §3.1 normalization). Constant columns are left at zero
+    /// after centering (their norm would be 0).
+    pub fn standardize(&mut self, center: bool, scale: bool) {
+        let n = self.nrows as f64;
+        for j in 0..self.ncols {
+            let col = self.col_mut(j);
+            if center {
+                let mean = col.iter().sum::<f64>() / n;
+                for x in col.iter_mut() {
+                    *x -= mean;
+                }
+            }
+            if scale {
+                let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+                if norm > 0.0 {
+                    let inv = 1.0 / norm;
+                    for x in col.iter_mut() {
+                        *x *= inv;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Extract rows into a new matrix (used by the CV fold splitter).
+    pub fn subset_rows(&self, rows: &[usize]) -> Mat {
+        let mut out = Mat::zeros(rows.len(), self.ncols);
+        for j in 0..self.ncols {
+            let src = self.col(j);
+            let dst = out.col_mut(j);
+            for (d, &i) in dst.iter_mut().zip(rows) {
+                *d = src[i];
+            }
+        }
+        out
+    }
+
+    /// Dense matrix product `A B` (n×k · k×m). Only used at build/test time
+    /// (e.g. generating correlated designs), not on the solve path.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.ncols, other.nrows);
+        let mut out = Mat::zeros(self.nrows, other.ncols);
+        for j in 0..other.ncols {
+            let bcol = other.col(j);
+            let ocol_start = j * out.nrows;
+            for (l, &b) in bcol.iter().enumerate() {
+                if b == 0.0 {
+                    continue;
+                }
+                let acol = self.col(l);
+                let ocol = &mut out.data[ocol_start..ocol_start + acol.len()];
+                for (o, &a) in ocol.iter_mut().zip(acol) {
+                    *o += b * a;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// 4-way unrolled dot product — the single hottest scalar kernel in the
+/// solver (`Xᵀr` is a dot per column per iteration).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut tail = (s0 + s1) + (s2 + s3);
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut m = Mat::zeros(3, 2);
+        m.set(2, 1, 5.0);
+        assert_eq!(m.get(2, 1), 5.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn gemv_known_values() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let mut out = [0.0; 2];
+        m.gemv(&[1.0, -1.0], &mut out);
+        assert_eq!(out, [-1.0, -1.0]);
+    }
+
+    #[test]
+    fn gemv_t_known_values() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let mut out = [0.0; 2];
+        m.gemv_t(&[1.0, 1.0], &mut out);
+        assert_eq!(out, [4.0, 6.0]);
+    }
+
+    #[test]
+    fn dot_matches_naive_for_odd_lengths() {
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 17] {
+            let a: Vec<f64> = (0..len).map(|i| i as f64 * 0.5).collect();
+            let b: Vec<f64> = (0..len).map(|i| (i as f64) - 2.0).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12, "len={len}");
+        }
+    }
+
+    #[test]
+    fn standardize_unit_columns() {
+        let mut m = Mat::from_rows(&[&[1.0, 10.0], &[2.0, 20.0], &[3.0, 60.0]]);
+        m.standardize(true, true);
+        for j in 0..2 {
+            let col = m.col(j);
+            let mean: f64 = col.iter().sum::<f64>() / 3.0;
+            let norm: f64 = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!(mean.abs() < 1e-12);
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_handles_constant_column() {
+        let mut m = Mat::from_rows(&[&[5.0], &[5.0]]);
+        m.standardize(true, true);
+        assert_eq!(m.col(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn subset_rows_extracts() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
+        let s = m.subset_rows(&[2, 0]);
+        assert_eq!(s.nrows(), 2);
+        assert_eq!(s.get(0, 0), 5.0);
+        assert_eq!(s.get(1, 1), 2.0);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let eye = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0], &[6.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.get(0, 0), 17.0);
+        assert_eq!(c.get(1, 0), 39.0);
+    }
+}

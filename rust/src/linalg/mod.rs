@@ -1,0 +1,172 @@
+//! Dense and sparse linear-algebra substrate.
+//!
+//! No BLAS or `ndarray` is available offline, so the kernels the SLOPE
+//! solver needs are implemented here:
+//!
+//! * [`Mat`] — dense column-major `f64` matrix. Column-major because every
+//!   hot operation in a lasso/SLOPE solver is column-oriented: `Xᵀr`
+//!   (per-column dot products), column subsetting for screened sets, and
+//!   column standardization.
+//! * [`Mat::gemv`] / [`Mat::gemv_t`] — `Xv` and `Xᵀv` with 4-way unrolled
+//!   inner loops (the L3 hot path; see EXPERIMENTS.md §Perf).
+//! * [`sparse::Csc`] — compressed sparse column matrix for the
+//!   dorothea-like sparse binary designs.
+//! * [`Design`] — a dense-or-sparse design wrapper so the solver and the
+//!   screening rule are storage-agnostic.
+
+pub mod dense;
+pub mod ops;
+pub mod sparse;
+
+pub use dense::Mat;
+pub use sparse::Csc;
+
+/// A design matrix: dense or sparse, plus optional column subsetting used
+/// by the screened subproblems.
+#[derive(Clone, Debug)]
+pub enum Design {
+    /// Dense column-major storage.
+    Dense(Mat),
+    /// Compressed sparse column storage.
+    Sparse(Csc),
+}
+
+impl Design {
+    /// Number of rows (observations).
+    pub fn nrows(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.nrows(),
+            Design::Sparse(m) => m.nrows(),
+        }
+    }
+
+    /// Number of columns (predictors).
+    pub fn ncols(&self) -> usize {
+        match self {
+            Design::Dense(m) => m.ncols(),
+            Design::Sparse(m) => m.ncols(),
+        }
+    }
+
+    /// `out = X v` (dense result).
+    pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.gemv(v, out),
+            Design::Sparse(m) => m.gemv(v, out),
+        }
+    }
+
+    /// `out = Xᵀ v`.
+    pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.gemv_t(v, out),
+            Design::Sparse(m) => m.gemv_t(v, out),
+        }
+    }
+
+    /// `out = X[:, cols] v` for a column subset.
+    pub fn gemv_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.gemv_subset(cols, v, out),
+            Design::Sparse(m) => m.gemv_subset(cols, v, out),
+        }
+    }
+
+    /// `out = X[:, cols]ᵀ v`.
+    pub fn gemv_t_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        match self {
+            Design::Dense(m) => m.gemv_t_subset(cols, v, out),
+            Design::Sparse(m) => m.gemv_t_subset(cols, v, out),
+        }
+    }
+
+    /// Squared Euclidean norm of each column.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.col_sq_norms(),
+            Design::Sparse(m) => m.col_sq_norms(),
+        }
+    }
+
+    /// Center (dense only) and scale columns to unit ℓ2 norm, as in the
+    /// paper's setup (§3.1): `x̄_j = 0`, `‖x_j‖₂ = 1`.
+    ///
+    /// Sparse designs are scaled but not centered (centering would
+    /// densify); this matches standard practice for sparse lasso solvers.
+    pub fn standardize(&mut self) {
+        match self {
+            Design::Dense(m) => m.standardize(true, true),
+            Design::Sparse(m) => m.scale_columns(),
+        }
+    }
+
+    /// Borrow the dense matrix, if dense.
+    pub fn as_dense(&self) -> Option<&Mat> {
+        match self {
+            Design::Dense(m) => Some(m),
+            Design::Sparse(_) => None,
+        }
+    }
+
+    /// An upper bound on the spectral norm squared `‖X‖₂²` via the Frobenius
+    /// norm (`‖X‖₂² ≤ ‖X‖_F²`); used to initialize FISTA step sizes.
+    pub fn spectral_bound(&self) -> f64 {
+        self.col_sq_norms().iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_design() -> (Design, Design) {
+        // 3x2 matrix [[1,0],[2,1],[0,3]]
+        let dense = Mat::from_rows(&[&[1.0, 0.0], &[2.0, 1.0], &[0.0, 3.0]]);
+        let sparse = Csc::from_dense(&dense);
+        (Design::Dense(dense), Design::Sparse(sparse))
+    }
+
+    #[test]
+    fn dense_sparse_gemv_agree() {
+        let (d, s) = small_design();
+        let v = [2.0, -1.0];
+        let mut od = [0.0; 3];
+        let mut os = [0.0; 3];
+        d.gemv(&v, &mut od);
+        s.gemv(&v, &mut os);
+        assert_eq!(od, os);
+        assert_eq!(od, [2.0, 3.0, -3.0]);
+    }
+
+    #[test]
+    fn dense_sparse_gemv_t_agree() {
+        let (d, s) = small_design();
+        let v = [1.0, 1.0, 1.0];
+        let mut od = [0.0; 2];
+        let mut os = [0.0; 2];
+        d.gemv_t(&v, &mut od);
+        s.gemv_t(&v, &mut os);
+        assert_eq!(od, os);
+        assert_eq!(od, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn subset_matches_full_on_all_columns() {
+        let (d, _) = small_design();
+        let v = [2.0, -1.0];
+        let mut full = [0.0; 3];
+        let mut sub = [0.0; 3];
+        d.gemv(&v, &mut full);
+        d.gemv_subset(&[0, 1], &v, &mut sub);
+        assert_eq!(full, sub);
+    }
+
+    #[test]
+    fn spectral_bound_dominates_column_norms() {
+        let (d, _) = small_design();
+        let bound = d.spectral_bound();
+        for &c in &d.col_sq_norms() {
+            assert!(bound >= c);
+        }
+    }
+}

@@ -1,0 +1,263 @@
+//! Compressed sparse column (CSC) matrix for sparse binary designs like
+//! dorothea (800 × 88119, ~1% density).
+
+use super::dense::Mat;
+
+/// CSC sparse matrix: `colptr[j]..colptr[j+1]` indexes the nonzeros of
+/// column `j` in `(rowidx, values)`.
+#[derive(Clone, Debug)]
+pub struct Csc {
+    nrows: usize,
+    ncols: usize,
+    colptr: Vec<usize>,
+    rowidx: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from column triplets: for each column a list of `(row, value)`.
+    pub fn from_columns(nrows: usize, cols: &[Vec<(usize, f64)>]) -> Self {
+        let ncols = cols.len();
+        let mut colptr = Vec::with_capacity(ncols + 1);
+        let mut rowidx = Vec::new();
+        let mut values = Vec::new();
+        colptr.push(0);
+        for col in cols {
+            let mut entries = col.clone();
+            entries.sort_unstable_by_key(|&(r, _)| r);
+            for &(r, v) in &entries {
+                assert!(r < nrows, "row index out of range");
+                if v != 0.0 {
+                    rowidx.push(r as u32);
+                    values.push(v);
+                }
+            }
+            colptr.push(rowidx.len());
+        }
+        Self { nrows, ncols, colptr, rowidx, values }
+    }
+
+    /// Densify a `Mat` into CSC form (test/interop convenience).
+    pub fn from_dense(m: &Mat) -> Self {
+        let cols: Vec<Vec<(usize, f64)>> = (0..m.ncols())
+            .map(|j| {
+                m.col(j)
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(i, &v)| (i, v))
+                    .collect()
+            })
+            .collect();
+        Self::from_columns(m.nrows(), &cols)
+    }
+
+    /// Convert to a dense matrix.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.nrows, self.ncols);
+        for j in 0..self.ncols {
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                m.set(self.rowidx[k] as usize, j, self.values[k]);
+            }
+        }
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// `out = X v`.
+    pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        out.fill(0.0);
+        for j in 0..self.ncols {
+            let vj = v[j];
+            if vj == 0.0 {
+                continue;
+            }
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                out[self.rowidx[k] as usize] += vj * self.values[k];
+            }
+        }
+    }
+
+    /// `out = Xᵀ v`.
+    pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        for j in 0..self.ncols {
+            let mut acc = 0.0;
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                acc += self.values[k] * v[self.rowidx[k] as usize];
+            }
+            out[j] = acc;
+        }
+    }
+
+    /// `out = X[:, cols] v`.
+    pub fn gemv_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), cols.len());
+        assert_eq!(out.len(), self.nrows);
+        out.fill(0.0);
+        for (&j, &vj) in cols.iter().zip(v) {
+            if vj == 0.0 {
+                continue;
+            }
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                out[self.rowidx[k] as usize] += vj * self.values[k];
+            }
+        }
+    }
+
+    /// `out = X[:, cols]ᵀ v`.
+    pub fn gemv_t_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), cols.len());
+        for (o, &j) in out.iter_mut().zip(cols) {
+            let mut acc = 0.0;
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                acc += self.values[k] * v[self.rowidx[k] as usize];
+            }
+            *o = acc;
+        }
+    }
+
+    /// Squared ℓ2 norm of every column.
+    pub fn col_sq_norms(&self) -> Vec<f64> {
+        (0..self.ncols)
+            .map(|j| {
+                self.values[self.colptr[j]..self.colptr[j + 1]]
+                    .iter()
+                    .map(|v| v * v)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Scale columns to unit ℓ2 norm (no centering: it would densify).
+    pub fn scale_columns(&mut self) {
+        for j in 0..self.ncols {
+            let norm: f64 = self.values[self.colptr[j]..self.colptr[j + 1]]
+                .iter()
+                .map(|v| v * v)
+                .sum::<f64>()
+                .sqrt();
+            if norm > 0.0 {
+                let inv = 1.0 / norm;
+                for v in &mut self.values[self.colptr[j]..self.colptr[j + 1]] {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+
+    /// Extract rows into a new CSC matrix (CV fold splitting).
+    pub fn subset_rows(&self, rows: &[usize]) -> Csc {
+        // map original row -> new position (or none)
+        let mut map = vec![u32::MAX; self.nrows];
+        for (new, &old) in rows.iter().enumerate() {
+            map[old] = new as u32;
+        }
+        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.ncols];
+        for j in 0..self.ncols {
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                let m = map[self.rowidx[k] as usize];
+                if m != u32::MAX {
+                    cols[j].push((m as usize, self.values[k]));
+                }
+            }
+        }
+        Csc::from_columns(rows.len(), &cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_dense(rng: &mut Pcg64, n: usize, p: usize, density: f64) -> Mat {
+        let mut m = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                if rng.bernoulli(density) {
+                    m.set(i, j, rng.normal());
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn roundtrip_dense_sparse_dense() {
+        let mut rng = Pcg64::new(1);
+        let d = random_dense(&mut rng, 13, 7, 0.3);
+        let s = Csc::from_dense(&d);
+        assert_eq!(s.to_dense(), d);
+    }
+
+    #[test]
+    fn sparse_ops_match_dense_random() {
+        let mut rng = Pcg64::new(2);
+        let d = random_dense(&mut rng, 17, 9, 0.25);
+        let s = Csc::from_dense(&d);
+
+        let v: Vec<f64> = (0..9).map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..17).map(|_| rng.normal()).collect();
+        let (mut od, mut os) = (vec![0.0; 17], vec![0.0; 17]);
+        d.gemv(&v, &mut od);
+        s.gemv(&v, &mut os);
+        for (a, b) in od.iter().zip(&os) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        let (mut td, mut ts) = (vec![0.0; 9], vec![0.0; 9]);
+        d.gemv_t(&w, &mut td);
+        s.gemv_t(&w, &mut ts);
+        for (a, b) in td.iter().zip(&ts) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn subset_rows_matches_dense() {
+        let mut rng = Pcg64::new(3);
+        let d = random_dense(&mut rng, 10, 5, 0.4);
+        let s = Csc::from_dense(&d);
+        let rows = [7, 2, 9, 0];
+        assert_eq!(s.subset_rows(&rows).to_dense(), d.subset_rows(&rows));
+    }
+
+    #[test]
+    fn scale_columns_unit_norm() {
+        let mut rng = Pcg64::new(4);
+        let d = random_dense(&mut rng, 20, 6, 0.5);
+        let mut s = Csc::from_dense(&d);
+        s.scale_columns();
+        for norm in s.col_sq_norms() {
+            if norm > 0.0 {
+                assert!((norm - 1.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_counts_stored() {
+        let s = Csc::from_columns(3, &[vec![(0, 1.0), (2, 2.0)], vec![], vec![(1, 0.0)]]);
+        assert_eq!(s.nnz(), 2); // explicit zero dropped
+    }
+}

@@ -1,0 +1,225 @@
+//! `slope-screen` — CLI for the Strong-Screening-Rule-for-SLOPE stack.
+//!
+//! Subcommands:
+//!   fit     fit a SLOPE path on synthetic or simulated-real data
+//!   cv      repeated k-fold cross-validation over the path
+//!   info    show the AOT artifact manifest and PJRT platform
+//!
+//! Examples:
+//!   slope-screen fit --n 200 --p 5000 --rho 0.4 --family gaussian
+//!   slope-screen fit --dataset golub --screen previous
+//!   slope-screen fit --n 100 --p 500 --grad-engine xla
+//!   slope-screen cv --n 200 --p 1000 --folds 5 --repeats 2
+
+use slope_screen::cli::Args;
+use slope_screen::coordinator::{cross_validate, CvConfig};
+use slope_screen::data::real::RealDataset;
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::rng::Pcg64;
+use slope_screen::runtime::{ArtifactGradient, Engine, Manifest};
+use slope_screen::slope::family::{Family, Problem};
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{
+    fit_path, FullGradient, NativeGradient, PathOptions, Strategy,
+};
+
+fn main() {
+    let parsed = Args::new("slope-screen: SLOPE paths with the strong screening rule")
+        .opt("n", "200", "observations (synthetic data)")
+        .opt("p", "1000", "predictors (synthetic data)")
+        .opt("k", "20", "true support size (synthetic data)")
+        .opt("rho", "0.0", "pairwise correlation (synthetic data)")
+        .opt("design", "compound", "design kind: compound|chain|iid")
+        .opt("family", "gaussian", "gaussian|binomial|poisson|multinomial")
+        .opt("classes", "3", "classes for multinomial")
+        .opt("dataset", "", "simulated real dataset (overrides synthetic): arcene|dorothea|gisette|golub|cpusmall|physician|zipcode")
+        .opt("lambda", "bh", "penalty shape: bh|oscar|lasso|gaussian-seq")
+        .opt("q", "0.1", "BH/OSCAR parameter")
+        .opt("path-length", "100", "number of path points")
+        .opt("screen", "strong", "strategy: none|strong|previous")
+        .opt("grad-engine", "native", "full-gradient engine: native|xla")
+        .opt("folds", "5", "cv folds")
+        .opt("repeats", "1", "cv repeats")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("seed", "42", "rng seed")
+        .flag("no-early-stop", "disable the path termination rules")
+        .parse();
+
+    let cmd = parsed
+        .positional()
+        .first()
+        .cloned()
+        .unwrap_or_else(|| "fit".to_string());
+    match cmd.as_str() {
+        "fit" => cmd_fit(&parsed),
+        "cv" => cmd_cv(&parsed),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown subcommand `{other}` (expected fit|cv|info)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
+    let dataset = parsed.get("dataset");
+    if !dataset.is_empty() {
+        let ds = RealDataset::all()
+            .into_iter()
+            .find(|d| d.name() == dataset)
+            .unwrap_or_else(|| panic!("unknown dataset {dataset}"));
+        let prob = ds.load();
+        println!(
+            "dataset {} (simulated stand-in): n={} p={} family={}",
+            ds.name(),
+            prob.n(),
+            prob.p(),
+            prob.family.name()
+        );
+        return prob;
+    }
+    let family = match parsed.get("family") {
+        "gaussian" => Family::Gaussian,
+        "binomial" => Family::Binomial,
+        "poisson" => Family::Poisson,
+        "multinomial" => Family::Multinomial { classes: parsed.usize("classes") },
+        f => panic!("unknown family {f}"),
+    };
+    let design = match parsed.get("design") {
+        "compound" => DesignKind::Compound,
+        "chain" => DesignKind::Chain,
+        "iid" => DesignKind::Iid,
+        d => panic!("unknown design {d}"),
+    };
+    let k = parsed.usize("k");
+    let spec = SyntheticSpec {
+        n: parsed.usize("n"),
+        p: parsed.usize("p"),
+        rho: parsed.f64("rho"),
+        design,
+        beta: match family {
+            Family::Poisson => BetaSpec::Ladder { k, step: 1.0 / 40.0 },
+            _ => BetaSpec::PlusMinus { k, scale: 2.0 },
+        },
+        family,
+        noise_sd: 1.0,
+        standardize: true,
+    };
+    spec.generate(&mut Pcg64::new(parsed.u64("seed")))
+}
+
+fn build_opts(parsed: &slope_screen::cli::Parsed, prob: &Problem) -> PathOptions {
+    let kind = match parsed.get("lambda") {
+        "bh" => LambdaKind::Bh { q: parsed.f64("q") },
+        "oscar" => LambdaKind::Oscar { q: parsed.f64("q") },
+        "lasso" => LambdaKind::Lasso,
+        "gaussian-seq" => LambdaKind::Gaussian { q: parsed.f64("q"), n: prob.n() },
+        l => panic!("unknown lambda kind {l}"),
+    };
+    let mut cfg = PathConfig::new(kind);
+    cfg.length = parsed.usize("path-length");
+    if parsed.bool("no-early-stop") {
+        cfg = cfg.without_early_stopping();
+    }
+    let strategy = match parsed.get("screen") {
+        "none" => Strategy::NoScreening,
+        "strong" => Strategy::StrongSet,
+        "previous" => Strategy::PreviousSet,
+        s => panic!("unknown strategy {s}"),
+    };
+    PathOptions::new(cfg).with_strategy(strategy)
+}
+
+fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
+    let prob = build_problem(parsed);
+    let opts = build_opts(parsed, &prob);
+    let use_xla = parsed.get("grad-engine") == "xla";
+
+    let fit = if use_xla {
+        let manifest = Manifest::load(&slope_screen::runtime::default_artifact_dir())
+            .expect("artifact manifest");
+        let grad = ArtifactGradient::new(&manifest, &prob).expect("artifact gradient");
+        println!(
+            "grad engine: {} bucket={:?} padding-overhead={:.2}x",
+            grad.label(),
+            grad.bucket(),
+            grad.padding_overhead()
+        );
+        fit_path(&prob, &opts, &grad)
+    } else {
+        fit_path(&prob, &opts, &NativeGradient(&prob))
+    };
+
+    println!(
+        "path: {} steps (requested {}), strategy={}, wall={:.3}s{}",
+        fit.steps.len(),
+        opts.config.length,
+        opts.strategy.name(),
+        fit.wall_time,
+        fit.stopped_early
+            .map(|r| format!(", stopped early: {r}"))
+            .unwrap_or_default()
+    );
+    println!("total violations: {}", fit.total_violations);
+    println!("step  sigma      active  screened  fitted  viol  dev.ratio");
+    for (i, s) in fit.steps.iter().enumerate() {
+        println!(
+            "{i:>4}  {:<9.4} {:>6}  {:>8}  {:>6}  {:>4}  {:>8.4}",
+            s.sigma, s.n_active, s.n_screened_rule, s.n_fitted, s.violations, s.dev_ratio
+        );
+    }
+    let (ts, tv, tk) = slope_screen::slope::path::phase_totals(&fit);
+    println!("phase totals: screen={ts:.4}s solve={tv:.4}s kkt={tk:.4}s");
+}
+
+fn cmd_cv(parsed: &slope_screen::cli::Parsed) {
+    let prob = build_problem(parsed);
+    let opts = build_opts(parsed, &prob);
+    let cfg = CvConfig {
+        folds: parsed.usize("folds"),
+        repeats: parsed.usize("repeats"),
+        threads: parsed.usize("threads"),
+        seed: parsed.u64("seed"),
+    };
+    let res = cross_validate(&prob, &opts, &cfg);
+    println!(
+        "cv: {} folds × {} repeats in {:.3}s ({} fits)",
+        cfg.folds,
+        cfg.repeats,
+        res.wall_time,
+        res.folds.len()
+    );
+    println!(
+        "best sigma = {:.5} (index {}), mean val deviance = {:.4} ± {:.4}",
+        res.sigmas[res.best_index],
+        res.best_index,
+        res.mean_deviance[res.best_index],
+        res.se_deviance[res.best_index]
+    );
+    let total_viol: usize = res.folds.iter().map(|f| f.violations).sum();
+    println!("violations across folds: {total_viol}");
+}
+
+fn cmd_info() {
+    match Engine::cpu() {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    match Manifest::load(&slope_screen::runtime::default_artifact_dir()) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} entries (dtype {}, pad multiple {})",
+                m.entries.len(),
+                m.dtype,
+                m.pad_multiple
+            );
+            for e in &m.entries {
+                println!(
+                    "  {:<8} {:<12} n={:<6} p={:<7} m={:<2} {}",
+                    e.kind, e.family, e.n, e.p, e.m, e.file
+                );
+            }
+        }
+        Err(e) => println!("no artifact manifest: {e}"),
+    }
+}

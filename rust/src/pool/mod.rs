@@ -1,0 +1,205 @@
+//! Worker-pool substrate (no `rayon`/`tokio` offline).
+//!
+//! Provides [`WorkerPool`]: a fixed set of threads fed from a shared
+//! injector queue, plus [`par_for_each`] / [`par_map`] conveniences built
+//! on `std::thread::scope`. The coordinator uses it to run cross-validation
+//! folds and simulation repetitions concurrently; each job gets a derived
+//! RNG so results are independent of scheduling order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<(Vec<Job>, bool)>, // (pending jobs, shutdown flag)
+    signal: Condvar,
+}
+
+/// A fixed-size thread pool with a LIFO injector queue.
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `n` worker threads (`n >= 1`).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new((Vec::new(), false)),
+            signal: Condvar::new(),
+        });
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let q = Arc::clone(&queue);
+            let p = Arc::clone(&pending);
+            handles.push(std::thread::spawn(move || loop {
+                let job = {
+                    let mut guard = q.jobs.lock().unwrap();
+                    loop {
+                        if let Some(job) = guard.0.pop() {
+                            break job;
+                        }
+                        if guard.1 {
+                            return;
+                        }
+                        guard = q.signal.wait(guard).unwrap();
+                    }
+                };
+                job();
+                let mut count = p.0.lock().unwrap();
+                *count -= 1;
+                if *count == 0 {
+                    p.1.notify_all();
+                }
+            }));
+        }
+        Self { queue, pending, handles }
+    }
+
+    /// Pool sized to the machine (`available_parallelism`, capped).
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n.min(16))
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job. Panics in jobs abort the process (fail-fast for the
+    /// experiment harness).
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let mut count = self.pending.0.lock().unwrap();
+            *count += 1;
+        }
+        let mut guard = self.queue.jobs.lock().unwrap();
+        guard.0.push(Box::new(f));
+        drop(guard);
+        self.queue.signal.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let mut count = self.pending.0.lock().unwrap();
+        while *count > 0 {
+            count = self.pending.1.wait(count).unwrap();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.wait();
+        {
+            let mut guard = self.queue.jobs.lock().unwrap();
+            guard.1 = true;
+        }
+        self.queue.signal.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `f(i)` for every `i in 0..n` across `threads` scoped workers.
+/// Work-stealing via a shared atomic counter; blocks until done.
+pub fn par_for_each<F: Fn(usize) + Sync>(n: usize, threads: usize, f: F) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map preserving input order.
+pub fn par_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, threads: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+        par_for_each(n, threads, |i| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        });
+    }
+    out.into_iter().map(|v| v.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = WorkerPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_wait_is_reusable() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn par_for_each_covers_range() {
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        par_for_each(hits.len(), 8, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(100, 7, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_for_each_single_thread_fallback() {
+        let hits: Vec<AtomicU64> = (0..5).map(|_| AtomicU64::new(0)).collect();
+        par_for_each(5, 1, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+}

@@ -1,0 +1,137 @@
+//! Non-trivial distribution samplers: PTRS Poisson and categorical tables.
+
+use super::Pcg64;
+
+/// Poisson sampler for large rates via the PTRS transformed-rejection
+/// algorithm (W. Hörmann, "The transformed rejection method for generating
+/// Poisson random variables", 1993). Valid for `lambda >= 10`.
+pub(crate) fn poisson_ptrs(rng: &mut Pcg64, lambda: f64) -> u64 {
+    let slam = lambda.sqrt();
+    let loglam = lambda.ln();
+    let b = 0.931 + 2.53 * slam;
+    let a = -0.059 + 0.02483 * b;
+    let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+    let v_r = 0.9277 - 3.6224 / (b - 2.0);
+    loop {
+        let u = rng.next_f64() - 0.5;
+        let v = rng.next_f64();
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+        if us >= 0.07 && v <= v_r {
+            return k as u64;
+        }
+        if k < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let lhs = v.ln() + inv_alpha.ln() - (a / (us * us) + b).ln();
+        let rhs = -lambda + k * loglam - ln_gamma(k + 1.0);
+        if lhs <= rhs {
+            return k as u64;
+        }
+    }
+}
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return std::f64::consts::PI.ln()
+            - (std::f64::consts::PI * x).sin().ln()
+            - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = COEF[0];
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+/// Categorical distribution over `k` classes with fixed probabilities,
+/// sampled by inverse CDF (the class counts here are tiny, so a linear walk
+/// beats building an alias table).
+#[derive(Clone, Debug)]
+pub struct Categorical {
+    cdf: Vec<f64>,
+}
+
+impl Categorical {
+    /// Build from (unnormalized) non-negative weights.
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty());
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "weights must sum to a positive finite value");
+        let mut cdf = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for &w in weights {
+            assert!(w >= 0.0, "negative weight");
+            acc += w / total;
+            cdf.push(acc);
+        }
+        *cdf.last_mut().unwrap() = 1.0;
+        Self { cdf }
+    }
+
+    /// Draw a class index in `0..k`.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        match self.cdf.iter().position(|&c| u < c) {
+            Some(i) => i,
+            None => self.cdf.len() - 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        for n in 1..15u64 {
+            let fact: f64 = (1..n).map(|k| k as f64).product::<f64>().max(1.0);
+            let lg = ln_gamma(n as f64);
+            assert!((lg - fact.ln()).abs() < 1e-9, "n={n}: {lg} vs {}", fact.ln());
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Gamma(1/2) = sqrt(pi)
+        let expect = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Pcg64::new(23);
+        let cat = Categorical::new(&[1.0, 2.0, 7.0]);
+        let n = 100_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[cat.sample(&mut rng)] += 1;
+        }
+        let freqs: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        for (f, e) in freqs.iter().zip([0.1, 0.2, 0.7]) {
+            assert!((f - e).abs() < 0.01, "freqs={freqs:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn categorical_rejects_all_zero() {
+        Categorical::new(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,322 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The offline build environment ships no `rand` crate, so this module
+//! implements the generators the experiments need from scratch:
+//!
+//! * [`Pcg64`] — PCG XSL-RR 128/64 (O'Neill 2014), the same generator family
+//!   used by NumPy's default `Generator`. 128-bit LCG state, 64-bit output.
+//! * Distributions: uniform, standard normal (Box–Muller with caching),
+//!   Poisson (Knuth for small means, PTRS transformed rejection for large),
+//!   categorical, Bernoulli/sign.
+//! * Combinatorics: Fisher–Yates shuffle, sampling without replacement.
+//!
+//! Every experiment seed in the benches derives from a master seed via
+//! [`Pcg64::derive`], so runs are exactly reproducible.
+
+mod dist;
+
+pub use dist::Categorical;
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+const PCG_INC: u128 = 0x5851_f42d_4c95_7f2d_1405_7b7e_f767_814f;
+
+/// PCG XSL-RR 128/64 generator.
+///
+/// Deterministic, seedable, and fast (one 128-bit multiply-add per output).
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed with the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator from a seed and a stream id (odd increment is
+    /// derived internally, so any `stream` value is valid).
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = (((stream as u128) << 64) | PCG_INC) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Derive an independent child generator (used to hand one RNG per
+    /// worker/repetition without sharing state).
+    pub fn derive(&mut self, tag: u64) -> Pcg64 {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let stream = self.next_u64() | 1;
+        Pcg64::with_stream(seed, stream)
+    }
+
+    /// Next raw 64-bit output (XSL-RR output function).
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's nearly-divisionless method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal deviate (Box–Muller; pairs are generated lazily and
+    /// the spare is cached on the side).
+    pub fn normal(&mut self) -> f64 {
+        // Box-Muller without caching: marginally slower but state-free,
+        // which keeps `derive`d streams independent of call parity.
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal deviate with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Fill `out` with iid standard normal deviates.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for v in out.iter_mut() {
+            *v = self.normal();
+        }
+    }
+
+    /// Poisson deviate with rate `lambda`.
+    ///
+    /// Uses Knuth's multiplication method for `lambda < 30` and the PTRS
+    /// transformed-rejection sampler (Hörmann 1993) for larger rates.
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        assert!(lambda >= 0.0 && lambda.is_finite());
+        if lambda == 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.next_f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            dist::poisson_ptrs(self, lambda)
+        }
+    }
+
+    /// Random sign: `-1.0` or `1.0` with equal probability.
+    #[inline]
+    pub fn sign(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Bernoulli draw with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `0..n` (order randomized).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n} without replacement");
+        // Partial Fisher-Yates over an index vector; O(n) memory but the
+        // experiment sizes (p <= ~100k) make this a non-issue.
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Sample `k` values from `choices` without replacement.
+    pub fn sample_without_replacement<T: Copy>(&mut self, choices: &[T], k: usize) -> Vec<T> {
+        self.sample_indices(choices.len(), k)
+            .into_iter()
+            .map(|i| choices[i])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_clones() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::new(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Pcg64::new(3);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = rng.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            s1 += x;
+            s2 += x * x;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_small_and_large_mean() {
+        let mut rng = Pcg64::new(5);
+        for &lam in &[0.5, 4.0, 30.0, 120.0] {
+            let n = 50_000;
+            let mut sum = 0.0;
+            let mut sq = 0.0;
+            for _ in 0..n {
+                let x = rng.poisson(lam) as f64;
+                sum += x;
+                sq += x * x;
+            }
+            let mean = sum / n as f64;
+            let var = sq / n as f64 - mean * mean;
+            assert!((mean - lam).abs() < 0.05 * lam.max(1.0), "lam={lam} mean={mean}");
+            assert!((var - lam).abs() < 0.10 * lam.max(1.0), "lam={lam} var={var}");
+        }
+    }
+
+    #[test]
+    fn poisson_zero_rate() {
+        let mut rng = Pcg64::new(5);
+        assert_eq!(rng.poisson(0.0), 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg64::new(13);
+        let idx = rng.sample_indices(100, 20);
+        assert_eq!(idx.len(), 20);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+    }
+
+    #[test]
+    fn derive_streams_are_independent() {
+        let mut master = Pcg64::new(1);
+        let mut a = master.derive(0);
+        let mut b = master.derive(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn sign_is_balanced() {
+        let mut rng = Pcg64::new(17);
+        let n = 10_000;
+        let pos = (0..n).filter(|_| rng.sign() > 0.0).count();
+        assert!((pos as f64 / n as f64 - 0.5).abs() < 0.03);
+    }
+}

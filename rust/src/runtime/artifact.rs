@@ -1,0 +1,167 @@
+//! Artifact manifest: the handshake between `python/compile/aot.py` and
+//! the Rust runtime. Parses `manifest.json`, resolves the smallest shape
+//! bucket covering a problem, and exposes the padding contract.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::jsonio::Json;
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Entry {
+    /// `"grad"` or `"screen"`.
+    pub kind: String,
+    /// Family code (`gaussian`/`binomial`/`poisson`/`multinomial`).
+    pub family: String,
+    /// Padded row bucket.
+    pub n: usize,
+    /// Padded predictor bucket.
+    pub p: usize,
+    /// Classes (1 except multinomial).
+    pub m: usize,
+    /// File name relative to the artifact directory.
+    pub file: String,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// Element dtype (always `f64` — see DESIGN.md §8).
+    pub dtype: String,
+    /// Shapes are padded to multiples of this.
+    pub pad_multiple: usize,
+    /// All artifacts.
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let entries = json
+            .field("entries")
+            .ok_or_else(|| anyhow!("manifest missing `entries`"))?
+            .items()
+            .iter()
+            .map(|e| -> Result<Entry> {
+                Ok(Entry {
+                    kind: field_str(e, "kind")?,
+                    family: field_str(e, "family")?,
+                    n: field_usize(e, "n")?,
+                    p: field_usize(e, "p")?,
+                    m: field_usize(e, "m")?,
+                    file: field_str(e, "file")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dtype: field_str(&json, "dtype").unwrap_or_else(|_| "f64".into()),
+            pad_multiple: field_usize(&json, "pad_multiple").unwrap_or(64),
+            entries,
+        })
+    }
+
+    /// Find the smallest gradient bucket covering `(family, n, p, m)`.
+    pub fn find_grad(&self, family: &str, n: usize, p: usize, m: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.kind == "grad" && e.family == family && e.m == m && e.n >= n && e.p >= p
+            })
+            .min_by_key(|e| e.n * e.p)
+    }
+
+    /// Find the smallest screening-scan bucket covering `p`.
+    pub fn find_screen(&self, p: usize) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "screen" && e.p >= p)
+            .min_by_key(|e| e.p)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+fn field_str(j: &Json, k: &str) -> Result<String> {
+    j.field(k)
+        .and_then(|v| v.as_str())
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("manifest entry missing `{k}`"))
+}
+
+fn field_usize(j: &Json, k: &str) -> Result<usize> {
+    j.field(k)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest entry missing `{k}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest() -> Manifest {
+        let dir = std::env::temp_dir().join("slope_screen_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,"dtype":"f64","pad_multiple":64,"entries":[
+              {"kind":"grad","family":"gaussian","n":128,"p":512,"m":1,"file":"a.hlo.txt"},
+              {"kind":"grad","family":"gaussian","n":256,"p":5056,"m":1,"file":"b.hlo.txt"},
+              {"kind":"grad","family":"multinomial","n":128,"p":512,"m":3,"file":"c.hlo.txt"},
+              {"kind":"screen","family":"","n":0,"p":512,"m":1,"file":"s.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = toy_manifest();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.pad_multiple, 64);
+        assert_eq!(m.dtype, "f64");
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_cover() {
+        let m = toy_manifest();
+        let e = m.find_grad("gaussian", 100, 500, 1).unwrap();
+        assert_eq!(e.file, "a.hlo.txt");
+        let e2 = m.find_grad("gaussian", 200, 500, 1).unwrap();
+        assert_eq!(e2.file, "b.hlo.txt");
+        assert!(m.find_grad("gaussian", 300, 500, 1).is_none());
+        assert!(m.find_grad("poisson", 10, 10, 1).is_none());
+    }
+
+    #[test]
+    fn multinomial_requires_matching_m() {
+        let m = toy_manifest();
+        assert!(m.find_grad("multinomial", 100, 500, 3).is_some());
+        assert!(m.find_grad("multinomial", 100, 500, 4).is_none());
+    }
+
+    #[test]
+    fn screen_lookup() {
+        let m = toy_manifest();
+        assert_eq!(m.find_screen(300).unwrap().p, 512);
+        assert!(m.find_screen(1000).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,191 @@
+//! The XLA-served full-design gradient: implements
+//! [`crate::slope::path::FullGradient`] on top of a compiled artifact.
+//!
+//! Construction pads the (dense) design matrix to its manifest bucket and
+//! uploads it to the device **once**; every call afterwards uploads only
+//! the `p·m` coefficient vector and downloads the `p·m` gradient — the
+//! O(np) product itself runs inside the AOT-compiled JAX/Pallas program.
+//! Zero padding is exact for all four families (DESIGN.md §8, verified in
+//! `python/tests/test_kernels.py::test_zero_padding_preserves_gradient`).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::slope::family::{Family, Problem};
+use crate::slope::path::FullGradient;
+
+use super::artifact::Manifest;
+use super::pjrt::{execute_f64, Engine};
+
+/// Family code used by the Python side.
+pub fn family_code(f: Family) -> &'static str {
+    match f {
+        Family::Gaussian => "gaussian",
+        Family::Binomial => "binomial",
+        Family::Poisson => "poisson",
+        Family::Multinomial { .. } => "multinomial",
+    }
+}
+
+/// Artifact-backed gradient evaluator.
+pub struct ArtifactGradient {
+    exe: xla::PjRtLoadedExecutable,
+    engine: Engine,
+    x_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+    /// true dims
+    n: usize,
+    p: usize,
+    m: usize,
+    /// bucket dims
+    nb: usize,
+    pb: usize,
+}
+
+impl ArtifactGradient {
+    /// Build for a (dense) problem from the artifact directory. Fails with
+    /// a clear message when no bucket covers the shape (re-run
+    /// `make artifacts` or `aot.py --full`).
+    pub fn new(manifest: &Manifest, prob: &Problem) -> Result<ArtifactGradient> {
+        let engine = Engine::cpu()?;
+        Self::with_engine(engine, manifest, prob)
+    }
+
+    /// Build reusing an existing engine.
+    pub fn with_engine(
+        engine: Engine,
+        manifest: &Manifest,
+        prob: &Problem,
+    ) -> Result<ArtifactGradient> {
+        let x = prob
+            .x
+            .as_dense()
+            .ok_or_else(|| anyhow!("XLA gradient engine requires a dense design"))?;
+        let (n, p) = (prob.n(), prob.p());
+        let m = prob.family.n_classes();
+        let code = family_code(prob.family);
+        let entry = manifest.find_grad(code, n, p, m).ok_or_else(|| {
+            anyhow!(
+                "no artifact bucket for family={code} n={n} p={p} m={m}; \
+                 run `python -m compile.aot --full`"
+            )
+        })?;
+        let (nb, pb) = (entry.n, entry.p);
+        let exe = engine.load_hlo(&manifest.path_of(entry))?;
+
+        // Pad X (row-major for XLA) once.
+        let mut xpad = vec![0.0f64; nb * pb];
+        for i in 0..n {
+            for j in 0..p {
+                xpad[i * pb + j] = x.get(i, j);
+            }
+        }
+        let x_buf = engine.upload(&xpad, &[nb, pb])?;
+
+        // Pad y once. Multinomial expects one-hot (nb, m); padded rows are
+        // all-zero (their X row is zero, so they contribute nothing).
+        let y_buf = if m == 1 {
+            let mut ypad = vec![0.0f64; nb];
+            ypad[..n].copy_from_slice(&prob.y);
+            engine.upload(&ypad, &[nb])?
+        } else {
+            let mut ypad = vec![0.0f64; nb * m];
+            for (i, &cls) in prob.y.iter().enumerate() {
+                ypad[i * m + cls as usize] = 1.0;
+            }
+            engine.upload(&ypad, &[nb, m])?
+        };
+
+        Ok(ArtifactGradient { exe, engine, x_buf, y_buf, n, p, m, nb, pb })
+    }
+
+    /// The padded bucket shape (for diagnostics / EXPERIMENTS.md).
+    pub fn bucket(&self) -> (usize, usize) {
+        (self.nb, self.pb)
+    }
+
+    /// Padding overhead factor in FLOPs (`nb·pb / (n·p)`).
+    pub fn padding_overhead(&self) -> f64 {
+        (self.nb * self.pb) as f64 / (self.n * self.p) as f64
+    }
+
+    fn run(&self, beta: &[f64]) -> Result<Vec<f64>> {
+        // beta arrives flattened class-major `[class][predictor]`; the
+        // artifact wants (p, m) row-major = predictor-major.
+        let beta_buf = if self.m == 1 {
+            let mut bpad = vec![0.0f64; self.pb];
+            bpad[..self.p].copy_from_slice(beta);
+            self.engine.upload(&bpad, &[self.pb])?
+        } else {
+            let mut bpad = vec![0.0f64; self.pb * self.m];
+            for l in 0..self.m {
+                for j in 0..self.p {
+                    bpad[j * self.m + l] = beta[l * self.p + j];
+                }
+            }
+            self.engine.upload(&bpad, &[self.pb, self.m])?
+        };
+        let out = execute_f64(&self.exe, &[&self.x_buf, &beta_buf, &self.y_buf])
+            .context("artifact gradient execution")?;
+        // unpad (and transpose back for multinomial)
+        let mut grad = vec![0.0f64; self.p * self.m];
+        if self.m == 1 {
+            grad.copy_from_slice(&out[..self.p]);
+        } else {
+            for l in 0..self.m {
+                for j in 0..self.p {
+                    grad[l * self.p + j] = out[j * self.m + l];
+                }
+            }
+        }
+        Ok(grad)
+    }
+}
+
+impl FullGradient for ArtifactGradient {
+    fn full_grad(&self, beta: &[f64], _h: &[f64], grad: &mut [f64]) {
+        let out = self
+            .run(beta)
+            .expect("artifact gradient execution failed (see stderr)");
+        grad.copy_from_slice(&out);
+    }
+
+    fn label(&self) -> &'static str {
+        "xla-artifact"
+    }
+}
+
+/// Screening-criterion scan served by the `screen_p*` artifact: computes
+/// `cumsum(c↓ − λ)` on-device. Exposed for the quickstart and tests; the
+/// production path keeps this O(p) step native since sorting already
+/// happens host-side.
+pub struct ScreenExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    engine: Engine,
+    pb: usize,
+}
+
+impl ScreenExecutor {
+    /// Load the smallest screen artifact covering `p`.
+    pub fn new(manifest: &Manifest, p: usize) -> Result<ScreenExecutor> {
+        let engine = Engine::cpu()?;
+        let entry = manifest
+            .find_screen(p)
+            .ok_or_else(|| anyhow!("no screen artifact covers p={p}"))?;
+        let exe = engine.load_hlo(&manifest.path_of(entry))?;
+        Ok(ScreenExecutor { exe, engine, pb: entry.p })
+    }
+
+    /// `cumsum(c_sorted − λ)` (length = true p). Padding uses c = 0 and
+    /// λ = λ_min so padded entries never flip the criterion sign upward.
+    pub fn cumsum(&self, c_sorted: &[f64], lambda: &[f64]) -> Result<Vec<f64>> {
+        let p = c_sorted.len();
+        let mut cpad = vec![0.0f64; self.pb];
+        cpad[..p].copy_from_slice(c_sorted);
+        let mut lpad = vec![*lambda.last().unwrap_or(&0.0); self.pb];
+        lpad[..p].copy_from_slice(&lambda[..p]);
+        let cb = self.engine.upload(&cpad, &[self.pb])?;
+        let lb = self.engine.upload(&lpad, &[self.pb])?;
+        let out = execute_f64(&self.exe, &[&cb, &lb])?;
+        Ok(out[..p].to_vec())
+    }
+}

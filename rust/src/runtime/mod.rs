@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas gradient artifacts
+//! (`artifacts/*.hlo.txt`) and serves full-design gradients on the
+//! screening/KKT hot path.
+//!
+//! Python is **never** on this path: `make artifacts` lowers the Layer-2
+//! graphs once; afterwards the Rust binary is self-contained — it parses
+//! the HLO text with the `xla` crate, compiles it on the PJRT CPU client
+//! at startup, and from then on executes device-resident computations
+//! only.
+
+pub mod artifact;
+pub mod gradient;
+pub mod pjrt;
+
+pub use artifact::Manifest;
+pub use gradient::ArtifactGradient;
+pub use pjrt::Engine;
+
+/// Default artifact directory (crate root `artifacts/`).
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,65 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Follows /opt/xla-example/load_hlo: HLO **text** → `HloModuleProto`
+//! (the text parser reassigns instruction ids, sidestepping the 64-bit-id
+//! incompatibility between jax ≥ 0.5 protos and xla_extension 0.5.1) →
+//! `XlaComputation` → `PjRtLoadedExecutable`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus compile helpers.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    /// Platform string (e.g. `"cpu"`), for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Borrow the underlying client.
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Upload an f64 host buffer to the device.
+    pub fn upload(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f64>(data, dims, None)
+            .context("uploading buffer")
+    }
+}
+
+/// Execute with device buffers and return the first output as a flat f64
+/// vector (artifacts are lowered with `return_tuple=True`, so the single
+/// result sits inside a 1-tuple).
+pub fn execute_f64(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<f64>> {
+    let out = exe.execute_b(args).context("executing artifact")?;
+    let lit = out[0][0].to_literal_sync().context("fetching result")?;
+    let tup = lit.to_tuple1().context("unwrapping 1-tuple result")?;
+    tup.to_vec::<f64>().context("converting result to f64")
+}

@@ -1,0 +1,397 @@
+//! The four GLM objectives of the paper's experiments (§3.2.3): sorted-ℓ1
+//! penalized OLS, logistic, Poisson and multinomial regression.
+//!
+//! Each family defines the smooth part `f(β)` of problem (1) through its
+//! linear predictor `η = Xβ` (per class for multinomial): a pointwise
+//! "working residual" `h(η, y)` with `∇f(β) = Xᵀ h(η, y)`, the loss, a
+//! curvature bound for FISTA step sizes, and the deviance used by the
+//! path's early-stopping rules.
+//!
+//! Multinomial coefficients are stored **flattened class-major**:
+//! `coef[l * p + j]` is class `l`, predictor `j` — the sorted-ℓ1 norm is
+//! permutation invariant, so the flattening order is immaterial to the
+//! penalty (this matches the R `SLOPE` package, which penalizes the
+//! whole coefficient matrix).
+
+use crate::linalg::Design;
+
+/// GLM family: the smooth objective `f` of problem (1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Family {
+    /// Ordinary least squares: `f(β) = ½‖Xβ − y‖²`.
+    Gaussian,
+    /// Logistic regression with `y ∈ {0, 1}`.
+    Binomial,
+    /// Poisson regression with counts `y ∈ {0, 1, 2, …}`.
+    Poisson,
+    /// Multinomial (softmax) regression with `y ∈ {0, …, classes−1}`.
+    Multinomial {
+        /// Number of classes `m ≥ 2`.
+        classes: usize,
+    },
+}
+
+impl Family {
+    /// Number of linear predictors per observation (1 except multinomial).
+    pub fn n_classes(&self) -> usize {
+        match *self {
+            Family::Multinomial { classes } => classes,
+            _ => 1,
+        }
+    }
+
+    /// Short name for tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::Gaussian => "OLS",
+            Family::Binomial => "logistic",
+            Family::Poisson => "poisson",
+            Family::Multinomial { .. } => "multinomial",
+        }
+    }
+
+    /// Compute the working residual `h(η, y)` into `h` and return the loss
+    /// `f`. `eta` and `h` have length `n * m` (class-major blocks);
+    /// `y` has length `n`.
+    pub fn h_loss(&self, eta: &[f64], y: &[f64], h: &mut [f64]) -> f64 {
+        let n = y.len();
+        debug_assert_eq!(eta.len(), n * self.n_classes());
+        debug_assert_eq!(h.len(), eta.len());
+        match *self {
+            Family::Gaussian => {
+                let mut loss = 0.0;
+                for i in 0..n {
+                    let r = eta[i] - y[i];
+                    h[i] = r;
+                    loss += 0.5 * r * r;
+                }
+                loss
+            }
+            Family::Binomial => {
+                let mut loss = 0.0;
+                for i in 0..n {
+                    let e = eta[i];
+                    // log(1 + exp(e)) computed stably
+                    loss += if e > 0.0 { e + (-e).exp().ln_1p() } else { e.exp().ln_1p() };
+                    loss -= y[i] * e;
+                    h[i] = sigmoid(e) - y[i];
+                }
+                loss
+            }
+            Family::Poisson => {
+                let mut loss = 0.0;
+                for i in 0..n {
+                    let mu = eta[i].exp();
+                    loss += mu - y[i] * eta[i];
+                    h[i] = mu - y[i];
+                }
+                loss
+            }
+            Family::Multinomial { classes } => {
+                let mut loss = 0.0;
+                for i in 0..n {
+                    // log-sum-exp over classes for observation i
+                    let mut maxe = f64::NEG_INFINITY;
+                    for l in 0..classes {
+                        maxe = maxe.max(eta[l * n + i]);
+                    }
+                    let mut z = 0.0;
+                    for l in 0..classes {
+                        z += (eta[l * n + i] - maxe).exp();
+                    }
+                    let lse = maxe + z.ln();
+                    let yi = y[i] as usize;
+                    debug_assert!(yi < classes);
+                    loss += lse - eta[yi * n + i];
+                    for l in 0..classes {
+                        let p = (eta[l * n + i] - lse).exp();
+                        h[l * n + i] = p - if l == yi { 1.0 } else { 0.0 };
+                    }
+                }
+                loss
+            }
+        }
+    }
+
+    /// Upper bound on the per-observation curvature `sup h'(η)`:
+    /// the FISTA step starts at `L = bound · ‖X‖₂²`. `None` means
+    /// unbounded curvature (Poisson) — the solver then relies purely on
+    /// backtracking from a heuristic initial step.
+    pub fn hessian_bound(&self) -> Option<f64> {
+        match self {
+            Family::Gaussian => Some(1.0),
+            Family::Binomial => Some(0.25),
+            Family::Poisson => None,
+            Family::Multinomial { .. } => Some(0.5),
+        }
+    }
+
+    /// Saturated log-likelihood loss (the loss of a perfect fit), used to
+    /// convert loss to deviance: `dev = 2(loss − loss_saturated)`.
+    pub fn saturated_loss(&self, y: &[f64]) -> f64 {
+        match *self {
+            Family::Gaussian | Family::Binomial | Family::Multinomial { .. } => 0.0,
+            Family::Poisson => y
+                .iter()
+                .map(|&yi| if yi > 0.0 { yi - yi * yi.ln() } else { 0.0 })
+                .sum(),
+        }
+    }
+
+    /// Deviance of a fit with the given loss.
+    pub fn deviance(&self, loss: f64, y: &[f64]) -> f64 {
+        2.0 * (loss - self.saturated_loss(y))
+    }
+
+    /// Null deviance: the deviance of the intercept-free null model
+    /// `η = 0` — matching the path's starting point `β = 0` (the paper
+    /// centers `y` for OLS so the zero model *is* the mean model there).
+    pub fn null_deviance(&self, y: &[f64]) -> f64 {
+        let n = y.len();
+        let m = self.n_classes();
+        let eta = vec![0.0; n * m];
+        let mut h = vec![0.0; n * m];
+        let loss = self.h_loss(&eta, y, &mut h);
+        self.deviance(loss, y)
+    }
+}
+
+/// Numerically stable logistic function.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// A SLOPE problem instance: design, response, family.
+#[derive(Clone, Debug)]
+pub struct Problem {
+    /// Design matrix (dense or sparse).
+    pub x: Design,
+    /// Response: values for OLS/Poisson, {0,1} for logistic, class indices
+    /// (as `f64`) for multinomial.
+    pub y: Vec<f64>,
+    /// Objective family.
+    pub family: Family,
+}
+
+impl Problem {
+    /// Build, validating dimensions and response range.
+    pub fn new(x: Design, y: Vec<f64>, family: Family) -> Self {
+        assert_eq!(x.nrows(), y.len(), "X rows must match y length");
+        match family {
+            Family::Binomial => {
+                assert!(
+                    y.iter().all(|&v| v == 0.0 || v == 1.0),
+                    "binomial response must be 0/1"
+                );
+            }
+            Family::Poisson => {
+                assert!(y.iter().all(|&v| v >= 0.0), "poisson response must be non-negative");
+            }
+            Family::Multinomial { classes } => {
+                assert!(classes >= 2);
+                assert!(
+                    y.iter().all(|&v| v >= 0.0 && v < classes as f64 && v.fract() == 0.0),
+                    "multinomial response must be class indices"
+                );
+            }
+            Family::Gaussian => {}
+        }
+        Self { x, y, family }
+    }
+
+    /// Observations.
+    pub fn n(&self) -> usize {
+        self.x.nrows()
+    }
+
+    /// Predictors (columns of X).
+    pub fn p(&self) -> usize {
+        self.x.ncols()
+    }
+
+    /// Total coefficients `p · m` (the dimension the sorted-ℓ1 norm acts on).
+    pub fn p_total(&self) -> usize {
+        self.p() * self.family.n_classes()
+    }
+
+    /// `η = Xβ` per class into `eta` (length `n·m`); `beta` is flattened
+    /// class-major of length `p·m`.
+    pub fn eta(&self, beta: &[f64], eta: &mut [f64]) {
+        let (n, p, m) = (self.n(), self.p(), self.family.n_classes());
+        debug_assert_eq!(beta.len(), p * m);
+        debug_assert_eq!(eta.len(), n * m);
+        for l in 0..m {
+            self.x.gemv(&beta[l * p..(l + 1) * p], &mut eta[l * n..(l + 1) * n]);
+        }
+    }
+
+    /// Full gradient `∇f(β) = Xᵀ h` per class into `grad` (length `p·m`).
+    pub fn gradient_from_h(&self, h: &[f64], grad: &mut [f64]) {
+        let (n, p, m) = (self.n(), self.p(), self.family.n_classes());
+        debug_assert_eq!(h.len(), n * m);
+        debug_assert_eq!(grad.len(), p * m);
+        for l in 0..m {
+            self.x.gemv_t(&h[l * n..(l + 1) * n], &mut grad[l * p..(l + 1) * p]);
+        }
+    }
+
+    /// Loss and full gradient at `beta` (allocating convenience for tests
+    /// and σ_max computation).
+    pub fn loss_grad(&self, beta: &[f64]) -> (f64, Vec<f64>) {
+        let (n, m) = (self.n(), self.family.n_classes());
+        let mut eta = vec![0.0; n * m];
+        self.eta(beta, &mut eta);
+        let mut h = vec![0.0; n * m];
+        let loss = self.family.h_loss(&eta, &self.y, &mut h);
+        let mut grad = vec![0.0; self.p_total()];
+        self.gradient_from_h(&h, &mut grad);
+        (loss, grad)
+    }
+
+    /// Map flattened coefficient indices to predictor columns: coefficient
+    /// `c` lives on column `c % p` (class `c / p`).
+    pub fn coef_to_col(&self, coef_idx: usize) -> usize {
+        coef_idx % self.p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn toy_design() -> Design {
+        Design::Dense(Mat::from_rows(&[&[1.0, 0.5], &[-0.5, 1.0], &[0.25, -1.0]]))
+    }
+
+    #[test]
+    fn gaussian_loss_and_residual() {
+        let fam = Family::Gaussian;
+        let eta = [1.0, 2.0];
+        let y = [0.0, 4.0];
+        let mut h = [0.0; 2];
+        let loss = fam.h_loss(&eta, &y, &mut h);
+        assert_eq!(h, [1.0, -2.0]);
+        assert_eq!(loss, 0.5 * (1.0 + 4.0));
+    }
+
+    #[test]
+    fn binomial_loss_stable_at_extremes() {
+        let fam = Family::Binomial;
+        let mut h = [0.0; 2];
+        let loss = fam.h_loss(&[50.0, -50.0], &[1.0, 0.0], &mut h);
+        assert!(loss < 1e-10, "perfect separation should have ~0 loss, got {loss}");
+        assert!(h[0].abs() < 1e-10 && h[1].abs() < 1e-10);
+        let loss_bad = fam.h_loss(&[-50.0, 50.0], &[1.0, 0.0], &mut h);
+        assert!(loss_bad > 99.0);
+    }
+
+    #[test]
+    fn binomial_gradient_is_sigmoid_residual() {
+        let fam = Family::Binomial;
+        let mut h = [0.0; 1];
+        fam.h_loss(&[0.0], &[1.0], &mut h);
+        assert!((h[0] - (0.5 - 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_loss_grad() {
+        let fam = Family::Poisson;
+        let mut h = [0.0; 2];
+        let loss = fam.h_loss(&[0.0, 1.0_f64.ln()], &[1.0, 2.0], &mut h);
+        // f = (1 − 0) + (1 − 2·0) = 2 ; h = (1−1, 1−2) = (0, −1)
+        assert!((loss - 2.0).abs() < 1e-12);
+        assert!((h[0] - 0.0).abs() < 1e-12);
+        assert!((h[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multinomial_residual_sums_to_zero_per_obs() {
+        let fam = Family::Multinomial { classes: 3 };
+        let n = 4;
+        let eta: Vec<f64> = (0..3 * n).map(|i| (i as f64) * 0.3 - 1.0).collect();
+        let y = [0.0, 1.0, 2.0, 1.0];
+        let mut h = vec![0.0; 3 * n];
+        let loss = fam.h_loss(&eta, &y, &mut h);
+        assert!(loss > 0.0);
+        for i in 0..n {
+            let s: f64 = (0..3).map(|l| h[l * n + i]).sum();
+            assert!(s.abs() < 1e-12, "h rows must sum to 0, got {s}");
+        }
+    }
+
+    #[test]
+    fn numeric_gradient_check_all_families() {
+        // Finite-difference check of ∇f = Xᵀh on a tiny problem.
+        let families = [
+            Family::Gaussian,
+            Family::Binomial,
+            Family::Poisson,
+            Family::Multinomial { classes: 3 },
+        ];
+        for fam in families {
+            let x = toy_design();
+            let y = match fam {
+                Family::Gaussian => vec![0.3, -0.8, 0.5],
+                Family::Binomial => vec![1.0, 0.0, 1.0],
+                Family::Poisson => vec![2.0, 0.0, 1.0],
+                Family::Multinomial { .. } => vec![0.0, 2.0, 1.0],
+            };
+            let prob = Problem::new(x, y, fam);
+            let pt = prob.p_total();
+            let beta: Vec<f64> = (0..pt).map(|i| 0.1 * (i as f64) - 0.2).collect();
+            let (_, grad) = prob.loss_grad(&beta);
+            let eps = 1e-6;
+            for c in 0..pt {
+                let mut bp = beta.clone();
+                bp[c] += eps;
+                let (lp, _) = prob.loss_grad(&bp);
+                let mut bm = beta.clone();
+                bm[c] -= eps;
+                let (lm, _) = prob.loss_grad(&bm);
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (fd - grad[c]).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "{}: coef {c}: fd={fd} analytic={}",
+                    fam.name(),
+                    grad[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn null_deviance_binomial_balanced() {
+        // Balanced 0/1 with η = 0: loss = n·log 2, deviance = 2n·log 2.
+        let fam = Family::Binomial;
+        let y = [0.0, 1.0, 0.0, 1.0];
+        let expect = 2.0 * 4.0 * (2.0f64).ln();
+        assert!((fam.null_deviance(&y) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn deviance_gaussian_is_rss() {
+        let fam = Family::Gaussian;
+        // loss = ½‖r‖² → deviance = ‖r‖²
+        assert_eq!(fam.deviance(3.0, &[1.0]), 6.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "binomial response")]
+    fn binomial_rejects_bad_labels() {
+        Problem::new(toy_design(), vec![0.0, 2.0, 1.0], Family::Binomial);
+    }
+
+    #[test]
+    fn sigmoid_symmetry() {
+        for x in [-30.0, -1.0, 0.0, 2.5, 40.0] {
+            assert!((sigmoid(x) + sigmoid(-x) - 1.0).abs() < 1e-12);
+        }
+    }
+}

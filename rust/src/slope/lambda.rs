@@ -1,0 +1,255 @@
+//! Penalty sequences and the σ-parameterized regularization path
+//! (paper §3.1.1–§3.1.2).
+
+use crate::linalg::ops::{cumsum, probit};
+
+/// The shape of the λ sequence (§3.1.1). All sequences are used through
+/// the `σ · J(β; λ)` parameterization, so only their *shape* matters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LambdaKind {
+    /// Benjamini–Hochberg: `λ_i = Φ⁻¹(1 − qi/(2p))`.
+    Bh {
+        /// FDR-like parameter `q ∈ (0, 1)`.
+        q: f64,
+    },
+    /// Gaussian modification of BH (requires `n`; reduces to a constant
+    /// sequence for small `q/p`, see §3.1.1).
+    Gaussian {
+        /// FDR-like parameter.
+        q: f64,
+        /// Number of observations.
+        n: usize,
+    },
+    /// OSCAR: linear decay `λ_i = q(p − i) + 1`.
+    Oscar {
+        /// Slope of the linear decay.
+        q: f64,
+    },
+    /// Lasso: constant sequence (all ones) — SLOPE degenerates to the
+    /// lasso and the rule to the classical strong rule (Prop. 3).
+    Lasso,
+}
+
+impl LambdaKind {
+    /// Materialize the sequence of length `p` (non-increasing, ≥ 0).
+    pub fn sequence(&self, p: usize) -> Vec<f64> {
+        let seq = match *self {
+            LambdaKind::Bh { q } => bh_sequence(p, q),
+            LambdaKind::Gaussian { q, n } => gaussian_sequence(p, q, n),
+            LambdaKind::Oscar { q } => {
+                (1..=p).map(|i| q * (p - i) as f64 + 1.0).collect()
+            }
+            LambdaKind::Lasso => vec![1.0; p],
+        };
+        debug_assert!(seq.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+        debug_assert!(seq.last().map_or(true, |&l| l >= 0.0));
+        seq
+    }
+
+    /// Short name for tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LambdaKind::Bh { .. } => "BH",
+            LambdaKind::Gaussian { .. } => "Gaussian",
+            LambdaKind::Oscar { .. } => "OSCAR",
+            LambdaKind::Lasso => "lasso",
+        }
+    }
+}
+
+/// BH sequence: `λ_i^BH = Φ⁻¹(1 − qi/(2p))`, clipped below at 0 (for very
+/// large `q` the probit can turn negative, which a penalty cannot).
+pub fn bh_sequence(p: usize, q: f64) -> Vec<f64> {
+    assert!(q > 0.0 && q < 1.0, "BH parameter q must be in (0,1)");
+    (1..=p)
+        .map(|i| probit(1.0 - q * i as f64 / (2.0 * p as f64)).max(0.0))
+        .collect()
+}
+
+/// Gaussian sequence (§3.1.1): BH corrected upward by the estimated noise
+/// inflation, monotonized, and undefined terms (i = n) handled by carrying
+/// the previous value forward.
+pub fn gaussian_sequence(p: usize, q: f64, n: usize) -> Vec<f64> {
+    let bh = bh_sequence(p, q);
+    let mut out = Vec::with_capacity(p);
+    let mut sum_sq = 0.0f64; // Σ_{j<i} λ_j²
+    for i in 0..p {
+        if i == 0 {
+            out.push(bh[0]);
+        } else {
+            let denom = n as f64 - i as f64; // n − i with 1-based i = i+1 ... paper: n - i
+            let val = if denom <= 1.0 {
+                out[i - 1]
+            } else {
+                bh[i] * (1.0 + sum_sq / denom).sqrt()
+            };
+            // restrict to non-increasing: carry previous value once the
+            // sequence would start increasing
+            out.push(val.min(out[i - 1]));
+        }
+        sum_sq += out[i] * out[i];
+    }
+    out
+}
+
+/// Configuration of the regularization path (§3.1.2).
+#[derive(Clone, Debug)]
+pub struct PathConfig {
+    /// Penalty shape.
+    pub kind: LambdaKind,
+    /// Number of path points `l` (paper default: 100).
+    pub length: usize,
+    /// Terminal ratio `t = σ(l)/σ(1)`; paper: 1e-2 if n < p else 1e-4.
+    /// `None` selects the paper default from the problem dimensions.
+    pub sigma_min_ratio: Option<f64>,
+    /// Early-stop rule 1: unique nonzero magnitudes > n.
+    pub stop_on_saturation: bool,
+    /// Early-stop rule 2: fractional deviance change < 1e-5.
+    pub stop_on_dev_change: bool,
+    /// Early-stop rule 3: deviance ratio > 0.995.
+    pub stop_on_dev_ratio: bool,
+}
+
+impl PathConfig {
+    /// Paper defaults (§3.1.2) for the given penalty shape.
+    pub fn new(kind: LambdaKind) -> Self {
+        Self {
+            kind,
+            length: 100,
+            sigma_min_ratio: None,
+            stop_on_saturation: true,
+            stop_on_dev_change: true,
+            stop_on_dev_ratio: true,
+        }
+    }
+
+    /// Disable all premature-termination rules (Fig. 3 protocol).
+    pub fn without_early_stopping(mut self) -> Self {
+        self.stop_on_saturation = false;
+        self.stop_on_dev_change = false;
+        self.stop_on_dev_ratio = false;
+        self
+    }
+
+    /// Resolve the terminal ratio given problem dimensions.
+    pub fn resolved_min_ratio(&self, n: usize, p: usize) -> f64 {
+        self.sigma_min_ratio.unwrap_or(if n < p { 1e-2 } else { 1e-4 })
+    }
+}
+
+/// `σ(1)`: the smallest σ at which the all-zero solution is optimal,
+/// `σ(1) = max( cumsum(|∇f(0)|↓) ⊘ cumsum(λ) )` (§3.1.2).
+pub fn sigma_max(grad_at_zero: &[f64], lambda: &[f64]) -> f64 {
+    let mut mags: Vec<f64> = grad_at_zero.iter().map(|g| g.abs()).collect();
+    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let cm = cumsum(&mags);
+    let cl = cumsum(lambda);
+    cm.iter()
+        .zip(&cl)
+        .filter(|(_, &l)| l > 0.0)
+        .map(|(&m, &l)| m / l)
+        .fold(0.0f64, f64::max)
+}
+
+/// Geometric grid of `length` σ values from `sigma_max` down to
+/// `ratio * sigma_max`.
+pub fn sigma_grid(sigma_max: f64, ratio: f64, length: usize) -> Vec<f64> {
+    assert!(length >= 1);
+    assert!(sigma_max > 0.0, "sigma_max must be positive (is the gradient at 0 all zero?)");
+    if length == 1 {
+        return vec![sigma_max];
+    }
+    let log_max = sigma_max.ln();
+    let log_min = (sigma_max * ratio).ln();
+    (0..length)
+        .map(|m| (log_max + (log_min - log_max) * m as f64 / (length - 1) as f64).exp())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slope::subdiff::kkt_infeasibility;
+
+    #[test]
+    fn bh_is_positive_nonincreasing() {
+        let lam = bh_sequence(100, 0.1);
+        assert_eq!(lam.len(), 100);
+        assert!(lam.windows(2).all(|w| w[0] >= w[1]));
+        assert!(lam.iter().all(|&l| l >= 0.0));
+        // λ_1 = Φ⁻¹(1 − 0.1/200) = Φ⁻¹(0.9995) ≈ 3.2905
+        assert!((lam[0] - 3.2905).abs() < 1e-3);
+    }
+
+    #[test]
+    fn oscar_is_linear() {
+        let lam = LambdaKind::Oscar { q: 0.5 }.sequence(4);
+        assert_eq!(lam, vec![2.5, 2.0, 1.5, 1.0]);
+    }
+
+    #[test]
+    fn lasso_is_constant() {
+        assert_eq!(LambdaKind::Lasso.sequence(3), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn gaussian_reduces_toward_constant_for_small_n() {
+        // §3.1.1: for p=100, q=0.1 the Gaussian sequence reduces to a
+        // constant whenever n ≤ 82.
+        let lam = gaussian_sequence(100, 0.1, 50);
+        let first = lam[0];
+        assert!(
+            lam.iter().all(|&l| (l - first).abs() < 1e-9),
+            "expected constant sequence, got range {:?}..{:?}",
+            lam.first(),
+            lam.last()
+        );
+    }
+
+    #[test]
+    fn gaussian_decays_for_large_n() {
+        let lam = gaussian_sequence(100, 0.1, 10_000);
+        assert!(lam[0] > lam[99]);
+        assert!(lam.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    }
+
+    #[test]
+    fn sigma_max_makes_zero_optimal() {
+        // At σ = σ_max the zero vector satisfies the stationarity condition;
+        // at σ slightly smaller it does not.
+        let g = [3.0, -1.5, 0.7, 0.1];
+        let lam = bh_sequence(4, 0.2);
+        let smax = sigma_max(&g, &lam);
+        let scaled: Vec<f64> = lam.iter().map(|l| l * smax).collect();
+        assert!(kkt_infeasibility(&g, &scaled) <= 1e-9);
+        let shrunk: Vec<f64> = lam.iter().map(|l| l * smax * 0.999).collect();
+        assert!(kkt_infeasibility(&g, &shrunk) > 0.0);
+    }
+
+    #[test]
+    fn sigma_grid_endpoints_and_monotonicity() {
+        let grid = sigma_grid(10.0, 1e-2, 5);
+        assert_eq!(grid.len(), 5);
+        assert!((grid[0] - 10.0).abs() < 1e-12);
+        assert!((grid[4] - 0.1).abs() < 1e-12);
+        assert!(grid.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn path_config_default_ratio_matches_paper() {
+        let cfg = PathConfig::new(LambdaKind::Lasso);
+        assert_eq!(cfg.resolved_min_ratio(100, 1000), 1e-2); // n < p
+        assert_eq!(cfg.resolved_min_ratio(1000, 10), 1e-4); // n >= p
+    }
+
+    #[test]
+    fn bh_matches_probit_direct() {
+        let p = 10;
+        let q = 0.05;
+        let lam = bh_sequence(p, q);
+        for (i, &l) in lam.iter().enumerate() {
+            let expect = probit(1.0 - q * (i + 1) as f64 / (2.0 * p as f64));
+            assert!((l - expect).abs() < 1e-12);
+        }
+    }
+}

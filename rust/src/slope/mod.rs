@@ -1,0 +1,31 @@
+//! The SLOPE machinery: everything §2 of the paper defines.
+//!
+//! * [`sorted`] — the sorted-ℓ1 norm `J(β; λ)`, the ordering operators
+//!   `O(·)`/`R(·)` and cluster extraction (paper §1.2, eq. 2).
+//! * [`prox`] — the proximal operator of `J` (stack-based PAVA, `O(p)`
+//!   after sorting).
+//! * [`lambda`] — the BH, Gaussian, OSCAR and lasso penalty sequences and
+//!   the σ-parameterized regularization path (§3.1.1–3.1.2).
+//! * [`subdiff`] — Theorem 1: membership test for `∂J(β; λ)` and the KKT
+//!   stationarity check used to safeguard the heuristic rule.
+//! * [`screen`] — Algorithms 1–2, the strong rule for SLOPE, the lasso
+//!   strong rule (Proposition 3) and a gap-safe-style baseline (Figure 1).
+//! * [`family`] — the four GLM objectives of §3.2.3 (OLS, logistic,
+//!   Poisson, multinomial).
+//! * [`fista`] — the accelerated proximal-gradient solver (the paper's
+//!   solver of record) on the *reduced* (screened) problem.
+//! * [`path`] — the regularization-path driver with the no-screening,
+//!   strong-set (Algorithm 3) and previous-set (Algorithm 4) strategies.
+
+pub mod family;
+pub mod fista;
+pub mod lambda;
+pub mod path;
+pub mod prox;
+pub mod screen;
+pub mod sorted;
+pub mod subdiff;
+
+pub use family::{Family, Problem};
+pub use lambda::{LambdaKind, PathConfig};
+pub use path::{PathFit, Strategy};

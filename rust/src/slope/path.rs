@@ -1,0 +1,731 @@
+//! The regularization-path driver (§2.2.4, §3.1.2): fits
+//! `β̂(σ⁽¹⁾), …, β̂(σ⁽ˡ⁾)` with one of three strategies —
+//! no screening, the **strong set** algorithm (Algorithm 3) or the
+//! **previous set** algorithm (Algorithm 4) — safeguarded by KKT checks,
+//! with the paper's three early-termination rules.
+//!
+//! The full-design gradient `Xᵀh` needed by the rule and the KKT checks is
+//! abstracted behind [`FullGradient`], so it can be served either natively
+//! (pure Rust) or by the AOT-compiled JAX/Pallas artifact through the PJRT
+//! runtime (`crate::runtime`).
+
+use std::time::Instant;
+
+use crate::linalg::ops::sq_norm;
+use crate::slope::family::{Family, Problem};
+use crate::slope::fista::{solve, FistaConfig, Reduced};
+use crate::slope::lambda::{sigma_grid, sigma_max, PathConfig};
+use crate::slope::screen::{gap_safe_set, strong_set};
+use crate::slope::sorted::{support, unique_nonzero_magnitudes};
+
+/// Screening strategy along the path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Strategy {
+    /// Fit every predictor at every step (baseline in Figs. 4–5, Tabs. 1, 3).
+    NoScreening,
+    /// Algorithm 3: `E = S(λ⁽ᵐ⁺¹⁾) ∪ T(λ⁽ᵐ⁾)`, KKT-check the full set.
+    StrongSet,
+    /// Algorithm 4: `E = T(λ⁽ᵐ⁾)`, KKT-check the strong set first, then
+    /// the full set.
+    PreviousSet,
+}
+
+impl Strategy {
+    /// Display name used in result tables.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::NoScreening => "none",
+            Strategy::StrongSet => "strong",
+            Strategy::PreviousSet => "previous",
+        }
+    }
+}
+
+/// Provider of the full-design gradient `grad = Xᵀ h` (class-blocked for
+/// multinomial). This is the O(np) operation the screening rule pays per
+/// path step; implementations: native Rust ([`NativeGradient`]) or the
+/// PJRT-loaded JAX/Pallas artifact (`runtime::ArtifactGradient`).
+pub trait FullGradient {
+    /// Full-design gradient at `beta`. Implementations may use either the
+    /// coefficient vector (`beta`, flattened class-major — the XLA
+    /// artifact recomputes `η` on-device) or the already-computed working
+    /// residual (`h`, class-blocked — the native path reuses it and only
+    /// pays the `Xᵀh` product).
+    fn full_grad(&self, beta: &[f64], h: &[f64], grad: &mut [f64]);
+
+    /// Implementation label for logs/EXPERIMENTS.md.
+    fn label(&self) -> &'static str;
+}
+
+/// Pure-Rust gradient evaluator over the problem's own design matrix.
+pub struct NativeGradient<'a>(pub &'a Problem);
+
+impl FullGradient for NativeGradient<'_> {
+    fn full_grad(&self, _beta: &[f64], h: &[f64], grad: &mut [f64]) {
+        self.0.gradient_from_h(h, grad);
+    }
+
+    fn label(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Options controlling a path fit.
+#[derive(Clone, Debug)]
+pub struct PathOptions {
+    /// Penalty shape, path length, termination rules.
+    pub config: PathConfig,
+    /// Screening strategy.
+    pub strategy: Strategy,
+    /// Inner solver configuration.
+    pub fista: FistaConfig,
+    /// Tolerance for KKT violation detection, relative to `σλ₁`.
+    pub kkt_tol: f64,
+    /// Also record the gap-safe screened-set size (Gaussian family only;
+    /// used by the Figure 1 bench).
+    pub record_safe: bool,
+}
+
+impl PathOptions {
+    /// Defaults: strong-set algorithm, paper path config.
+    pub fn new(config: PathConfig) -> Self {
+        Self {
+            config,
+            strategy: Strategy::StrongSet,
+            fista: FistaConfig::default(),
+            kkt_tol: 1e-5,
+            record_safe: false,
+        }
+    }
+
+    /// Builder: set strategy.
+    pub fn with_strategy(mut self, s: Strategy) -> Self {
+        self.strategy = s;
+        self
+    }
+}
+
+/// Per-step diagnostics.
+#[derive(Clone, Debug)]
+pub struct StepInfo {
+    /// Penalty scale σ at this step.
+    pub sigma: f64,
+    /// Active coefficients at the solution.
+    pub n_active: usize,
+    /// Size of the raw strong-rule screened set `S(λ⁽ᵐ⁺¹⁾)`.
+    pub n_screened_rule: usize,
+    /// Final fitted set size (after unions and violation refits).
+    pub n_fitted: usize,
+    /// Gap-safe screened-set size (if recorded).
+    pub n_safe: Option<usize>,
+    /// KKT violations encountered (predictors added after a failed check).
+    pub violations: usize,
+    /// Number of solve/refit rounds (1 = no violations).
+    pub refits: usize,
+    /// Total inner FISTA iterations.
+    pub solver_iterations: usize,
+    /// Model deviance.
+    pub deviance: f64,
+    /// Fraction of null deviance explained.
+    pub dev_ratio: f64,
+    /// Seconds spent in screening.
+    pub t_screen: f64,
+    /// Seconds spent in the reduced solver.
+    pub t_solve: f64,
+    /// Seconds spent in full-gradient + KKT checks.
+    pub t_kkt: f64,
+}
+
+/// Result of a full path fit.
+#[derive(Clone, Debug)]
+pub struct PathFit {
+    /// The σ grid actually visited (may be shorter than requested due to
+    /// early termination).
+    pub sigmas: Vec<f64>,
+    /// The base λ sequence (unscaled).
+    pub lambda_base: Vec<f64>,
+    /// Per-step diagnostics (parallel to `sigmas`).
+    pub steps: Vec<StepInfo>,
+    /// Sparse solutions per step: `(coef index, value)` pairs.
+    pub betas: Vec<Vec<(usize, f64)>>,
+    /// Dense final solution.
+    pub final_beta: Vec<f64>,
+    /// Total violations across the path.
+    pub total_violations: usize,
+    /// Which early-stop rule fired, if any.
+    pub stopped_early: Option<&'static str>,
+    /// Total wall time in seconds.
+    pub wall_time: f64,
+}
+
+impl PathFit {
+    /// Dense solution at step `m`.
+    pub fn beta_at(&self, m: usize, p_total: usize) -> Vec<f64> {
+        let mut out = vec![0.0; p_total];
+        for &(i, v) in &self.betas[m] {
+            out[i] = v;
+        }
+        out
+    }
+}
+
+/// Fit a full SLOPE regularization path.
+pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient) -> PathFit {
+    let t_start = Instant::now();
+    let n = prob.n();
+    let m_classes = prob.family.n_classes();
+    let pt = prob.p_total();
+    let lambda_base = opts.config.kind.sequence(pt);
+
+    // Gradient at β = 0 (needed for σ_max and the first strong set).
+    let mut eta = vec![0.0; n * m_classes];
+    let mut h = vec![0.0; n * m_classes];
+    let loss0 = prob.family.h_loss(&eta, &prob.y, &mut h);
+    let mut grad = vec![0.0; pt];
+    let zero_beta = vec![0.0; pt];
+    evaluator.full_grad(&zero_beta, &h, &mut grad);
+
+    let smax = sigma_max(&grad, &lambda_base);
+    let ratio = opts.config.resolved_min_ratio(n, prob.p());
+    let sigmas_all = sigma_grid(smax, ratio, opts.config.length);
+    let dev_null = prob.family.deviance(loss0, &prob.y);
+
+    let mut fit = PathFit {
+        sigmas: Vec::new(),
+        lambda_base: lambda_base.clone(),
+        steps: Vec::new(),
+        betas: Vec::new(),
+        final_beta: vec![0.0; pt],
+        total_violations: 0,
+        stopped_early: None,
+        wall_time: 0.0,
+    };
+
+    // Step 0: β = 0 by construction of σ_max.
+    fit.sigmas.push(sigmas_all[0]);
+    fit.betas.push(Vec::new());
+    fit.steps.push(StepInfo {
+        sigma: sigmas_all[0],
+        n_active: 0,
+        n_screened_rule: 0,
+        n_fitted: 0,
+        n_safe: opts.record_safe.then_some(0),
+        violations: 0,
+        refits: 0,
+        solver_iterations: 0,
+        deviance: dev_null,
+        dev_ratio: 0.0,
+        t_screen: 0.0,
+        t_solve: 0.0,
+        t_kkt: 0.0,
+    });
+
+    let mut beta_full = vec![0.0; pt];
+    let mut prev_dev = dev_null;
+    // scratch for scaled penalties
+    let mut lam_prev = vec![0.0; pt];
+    let mut lam_cur = vec![0.0; pt];
+
+    for m in 1..sigmas_all.len() {
+        let sig_prev = sigmas_all[m - 1];
+        let sig = sigmas_all[m];
+        for i in 0..pt {
+            lam_prev[i] = lambda_base[i] * sig_prev;
+            lam_cur[i] = lambda_base[i] * sig;
+        }
+
+        // --- screening phase --------------------------------------------
+        let t0 = Instant::now();
+        let prev_support = support(&beta_full);
+        let rule_set = match opts.strategy {
+            Strategy::NoScreening => (0..pt).collect::<Vec<_>>(),
+            _ => strong_set(&grad, &lam_prev, &lam_cur),
+        };
+        let n_screened_rule = match opts.strategy {
+            Strategy::NoScreening => pt,
+            _ => rule_set.len(),
+        };
+        let mut e_set: Vec<usize> = match opts.strategy {
+            Strategy::NoScreening => rule_set.clone(),
+            Strategy::StrongSet => union_sorted(&rule_set, &prev_support),
+            Strategy::PreviousSet => prev_support.clone(),
+        };
+        // Gap-safe comparison (Gaussian only): |Xᵀr| = |grad| for OLS.
+        let n_safe = if opts.record_safe && prob.family == Family::Gaussian {
+            let r_norm_sq = {
+                // r = y − Xβ = −h at the previous solution
+                sq_norm(&h)
+            };
+            let y_dot_r = -crate::linalg::dense::dot(&prob.y, &h);
+            let primal = 0.5 * r_norm_sq
+                + crate::slope::sorted::sl1_norm(&beta_full, &lam_cur);
+            let col_norms: Vec<f64> =
+                prob.x.col_sq_norms().iter().map(|c| c.sqrt()).collect();
+            Some(
+                gap_safe_set(&grad, r_norm_sq, primal, &col_norms, &lam_cur, y_dot_r)
+                    .len(),
+            )
+        } else {
+            opts.record_safe.then_some(pt)
+        };
+        let t_screen = t0.elapsed().as_secs_f64();
+
+        // --- solve + KKT safeguard loop ----------------------------------
+        let mut t_solve = 0.0;
+        let mut t_kkt = 0.0;
+        // Predictors added by failed KKT checks; a *violation* in the
+        // paper's sense (§2.2.3) is such a predictor that is genuinely
+        // active at the step's final solution — KKT flags that refit back
+        // to zero are solver-tolerance noise, not rule failures.
+        let mut added_by_kkt: Vec<usize> = Vec::new();
+        let mut refits = 0;
+        let mut solver_iterations = 0;
+        let kkt_thresh = opts.kkt_tol * sig * lambda_base[0].max(1e-12);
+        // Alg 4 checks the strong set first; track which stage we are in.
+        let mut checked_full = matches!(
+            opts.strategy,
+            Strategy::NoScreening | Strategy::StrongSet
+        );
+        let mut loss;
+        loop {
+            refits += 1;
+            let t1 = Instant::now();
+            let reduced = Reduced::new(prob, e_set.clone());
+            let warm: Vec<f64> = e_set.iter().map(|&c| beta_full[c]).collect();
+            // The inner solve must be at least as accurate as the
+            // violation threshold, else solver noise shows up as phantom
+            // violations (§2.2.3 counts would be meaningless).
+            let mut fista_cfg = opts.fista;
+            if fista_cfg.kkt_tol_abs.is_none() {
+                fista_cfg.kkt_tol_abs = Some(kkt_thresh);
+            }
+            let res = solve(&reduced, &scale_prefix(&lambda_base, sig, e_set.len()), Some(&warm), &fista_cfg);
+            solver_iterations += res.iterations;
+            loss = res.loss;
+            reduced.scatter(&res.beta, &mut beta_full);
+            t_solve += t1.elapsed().as_secs_f64();
+
+            // Full gradient at the candidate (η comes from the reduced
+            // design because off-E coefficients are zero).
+            let t2 = Instant::now();
+            reduced.eta(&res.beta, &mut eta);
+            prob.family.h_loss(&eta, &prob.y, &mut h);
+            evaluator.full_grad(&beta_full, &h, &mut grad);
+
+            // Violation detection: Algorithm 1 on the true gradient
+            // (Prop. 1) restricted to the stage's check set.
+            let candidate_set = kkt_flagged(&grad, &lam_cur, kkt_thresh);
+            let mut viols: Vec<usize> = match opts.strategy {
+                Strategy::PreviousSet if !checked_full => diff_sorted(
+                    &intersect_sorted(&candidate_set, &union_sorted(&rule_set, &prev_support)),
+                    &e_set,
+                ),
+                _ => diff_sorted(&candidate_set, &e_set),
+            };
+            t_kkt += t2.elapsed().as_secs_f64();
+
+            if viols.is_empty() {
+                if checked_full {
+                    break;
+                }
+                // Alg 4: strong set is clean — escalate to the full check.
+                checked_full = true;
+                continue;
+            }
+            added_by_kkt = union_sorted(&added_by_kkt, &viols);
+            e_set = union_sorted(&e_set, &viols);
+            // Anti-creep escalation: when the violation loop keeps finding
+            // more predictors round after round (heavy clustering regimes,
+            // §3.2.3's "almost all predictors enter at the second step"),
+            // widen E to the whole strong-set cover at once instead of
+            // paying one big re-solve per trickle of violations.
+            if refits >= 3 && opts.strategy == Strategy::PreviousSet {
+                e_set = union_sorted(&e_set, &union_sorted(&rule_set, &prev_support));
+            }
+            viols.clear();
+        }
+        // Strong-rule violations (§2.2.3): active predictors the *rule*
+        // discarded. For the previous-set algorithm, stage-1 additions come
+        // from inside the strong set — they are failures of the
+        // previous-set guess, not of the rule — so only predictors outside
+        // S(λ⁽ᵐ⁺¹⁾) ∪ T(λ⁽ᵐ⁾) count.
+        let rule_cover = union_sorted(&rule_set, &prev_support);
+        let violations_total = diff_sorted(&added_by_kkt, &rule_cover)
+            .iter()
+            .filter(|&&c| beta_full[c] != 0.0)
+            .count();
+
+        // --- record -------------------------------------------------------
+        let dev = prob.family.deviance(loss, &prob.y);
+        let dev_ratio = if dev_null > 0.0 { 1.0 - dev / dev_null } else { 0.0 };
+        let active = support(&beta_full);
+        fit.sigmas.push(sig);
+        fit.betas
+            .push(active.iter().map(|&i| (i, beta_full[i])).collect());
+        fit.steps.push(StepInfo {
+            sigma: sig,
+            n_active: active.len(),
+            n_screened_rule,
+            n_fitted: e_set.len(),
+            n_safe,
+            violations: violations_total,
+            refits,
+            solver_iterations,
+            deviance: dev,
+            dev_ratio,
+            t_screen,
+            t_solve,
+            t_kkt,
+        });
+        fit.total_violations += violations_total;
+
+        // --- early termination (§3.1.2) ------------------------------------
+        if opts.config.stop_on_saturation && unique_nonzero_magnitudes(&beta_full) > n {
+            fit.stopped_early = Some("unique magnitudes exceed n");
+            break;
+        }
+        if opts.config.stop_on_dev_change
+            && dev_null > 0.0
+            && ((prev_dev - dev) / dev_null).abs() < 1e-5
+        {
+            fit.stopped_early = Some("deviance change < 1e-5");
+            break;
+        }
+        if opts.config.stop_on_dev_ratio && dev_ratio > 0.995 {
+            fit.stopped_early = Some("deviance ratio > 0.995");
+            break;
+        }
+        prev_dev = dev;
+    }
+
+    fit.final_beta = beta_full;
+    fit.wall_time = t_start.elapsed().as_secs_f64();
+    fit
+}
+
+/// Predictors flagged as possibly active by Algorithm 1 on the true
+/// gradient, with a small tolerance on the running sum (guards against
+/// flagging predictors whose prefix sum is numerically ~0 — the
+/// conservative corner case Prop. 1 describes).
+fn kkt_flagged(grad: &[f64], lam: &[f64], tol: f64) -> Vec<usize> {
+    let ord = crate::linalg::ops::order_desc_abs(grad);
+    let mut flagged = Vec::new();
+    let mut block = Vec::new();
+    let mut sum = 0.0f64;
+    for (pos, &idx) in ord.iter().enumerate() {
+        block.push(idx);
+        sum += grad[idx].abs() - lam[pos];
+        if sum >= tol {
+            flagged.append(&mut block);
+            sum = 0.0;
+        }
+    }
+    flagged.sort_unstable();
+    flagged
+}
+
+fn scale_prefix(lambda_base: &[f64], sigma: f64, len: usize) -> Vec<f64> {
+    lambda_base[..len].iter().map(|l| l * sigma).collect()
+}
+
+/// Union of two ascending index sets.
+pub fn union_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) if x == y => {
+                out.push(x);
+                i += 1;
+                j += 1;
+            }
+            (Some(&x), Some(&y)) if x < y => {
+                out.push(x);
+                i += 1;
+            }
+            (Some(_), Some(&y)) => {
+                out.push(y);
+                j += 1;
+            }
+            (Some(&x), None) => {
+                out.push(x);
+                i += 1;
+            }
+            (None, Some(&y)) => {
+                out.push(y);
+                j += 1;
+            }
+            (None, None) => unreachable!(),
+        }
+    }
+    out
+}
+
+/// `a ∖ b` for ascending index sets.
+pub fn diff_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j >= b.len() || b[j] != x {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// `a ∩ b` for ascending index sets.
+pub fn intersect_sorted(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut j = 0;
+    for &x in a {
+        while j < b.len() && b[j] < x {
+            j += 1;
+        }
+        if j < b.len() && b[j] == x {
+            out.push(x);
+        }
+    }
+    out
+}
+
+/// Cumulative screened-set efficiency of a fit: mean over steps of
+/// `screened / max(active, 1)` (the paper's "efficiency" notion, §3.2.1).
+pub fn mean_efficiency(fit: &PathFit) -> f64 {
+    let vals: Vec<f64> = fit
+        .steps
+        .iter()
+        .skip(1)
+        .map(|s| s.n_screened_rule as f64 / s.n_active.max(1) as f64)
+        .collect();
+    crate::linalg::ops::mean(&vals)
+}
+
+/// Convenience: cumulative sums of per-step wall time per phase.
+pub fn phase_totals(fit: &PathFit) -> (f64, f64, f64) {
+    let mut t = (0.0, 0.0, 0.0);
+    for s in &fit.steps {
+        t.0 += s.t_screen;
+        t.1 += s.t_solve;
+        t.2 += s.t_kkt;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Design, Mat};
+    use crate::rng::Pcg64;
+    use crate::slope::lambda::LambdaKind;
+    use crate::slope::subdiff::kkt_optimal;
+
+    fn gaussian_problem(seed: u64, n: usize, p: usize, k: usize) -> Problem {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                x.set(i, j, rng.normal());
+            }
+        }
+        x.standardize(true, true);
+        let mut eta = vec![0.0; n];
+        let beta: Vec<f64> = (0..p).map(|j| if j < k { 2.0 * rng.sign() } else { 0.0 }).collect();
+        x.gemv(&beta, &mut eta);
+        let y: Vec<f64> = eta.iter().map(|e| e + 0.5 * rng.normal()).collect();
+        Problem::new(Design::Dense(x), y, Family::Gaussian)
+    }
+
+    fn opts(kind: LambdaKind, strategy: Strategy, len: usize) -> PathOptions {
+        let mut cfg = PathConfig::new(kind);
+        cfg.length = len;
+        PathOptions::new(cfg).with_strategy(strategy)
+    }
+
+    #[test]
+    fn first_step_is_zero_solution() {
+        let prob = gaussian_problem(1, 30, 20, 3);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert_eq!(fit.steps[0].n_active, 0);
+        assert!(fit.steps.last().unwrap().n_active > 0);
+    }
+
+    #[test]
+    fn all_strategies_agree_on_solutions() {
+        let prob = gaussian_problem(2, 40, 30, 4);
+        let mk = |s| {
+            let mut o = opts(LambdaKind::Bh { q: 0.1 }, s, 20);
+            o.fista.tol = 1e-9;
+            fit_path(&prob, &o, &NativeGradient(&prob))
+        };
+        let none = mk(Strategy::NoScreening);
+        let strong = mk(Strategy::StrongSet);
+        let prev = mk(Strategy::PreviousSet);
+        let steps = none.steps.len().min(strong.steps.len()).min(prev.steps.len());
+        assert!(steps >= 5);
+        for m in 0..steps {
+            let a = none.beta_at(m, prob.p_total());
+            let b = strong.beta_at(m, prob.p_total());
+            let c = prev.beta_at(m, prob.p_total());
+            for i in 0..prob.p_total() {
+                assert!(
+                    (a[i] - b[i]).abs() < 1e-4,
+                    "strong differs at step {m} coef {i}: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+                assert!(
+                    (a[i] - c[i]).abs() < 1e-4,
+                    "previous differs at step {m} coef {i}: {} vs {}",
+                    a[i],
+                    c[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solutions_satisfy_kkt_along_path() {
+        let prob = gaussian_problem(3, 30, 25, 3);
+        let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 12);
+        o.fista.tol = 1e-10;
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        for (m, &sig) in fit.sigmas.iter().enumerate().skip(1) {
+            let beta = fit.beta_at(m, prob.p_total());
+            let (_, grad) = prob.loss_grad(&beta);
+            let lam: Vec<f64> = fit.lambda_base.iter().map(|l| l * sig).collect();
+            assert!(
+                kkt_optimal(&beta, &grad, &lam, 1e-4 * sig * fit.lambda_base[0]),
+                "step {m} fails KKT"
+            );
+        }
+    }
+
+    #[test]
+    fn screened_set_smaller_than_full_for_p_gg_n() {
+        let prob = gaussian_problem(4, 20, 200, 5);
+        let o = opts(LambdaKind::Bh { q: 0.05 }, Strategy::StrongSet, 15);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        let sizes: Vec<usize> =
+            fit.steps.iter().skip(1).map(|s| s.n_screened_rule).collect();
+        // Screening is never vacuous (the whole point of the rule)...
+        assert!(sizes.iter().all(|&s| s < prob.p()), "vacuous screening: {sizes:?}");
+        // ...and is strongly selective early in the path, where the paper
+        // reports its largest wins (Figs. 1–2).
+        assert!(sizes[0] < prob.p() / 2, "weak early screening: {sizes:?}");
+    }
+
+    #[test]
+    fn screened_set_contains_active_set() {
+        // The safeguarded fit must end each step with E ⊇ active set.
+        let prob = gaussian_problem(5, 25, 80, 4);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 15);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        for s in fit.steps.iter().skip(1) {
+            assert!(s.n_fitted >= s.n_active);
+        }
+    }
+
+    #[test]
+    fn lasso_sequence_matches_lasso_screening() {
+        // With constant λ the strong rule reduces to the lasso rule
+        // (Prop. 3) and the path still solves to optimality.
+        let prob = gaussian_problem(6, 30, 40, 3);
+        let o = opts(LambdaKind::Lasso, Strategy::StrongSet, 10);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert!(fit.steps.last().unwrap().n_active > 0);
+    }
+
+    #[test]
+    fn early_stop_dev_ratio_fires_for_easy_problem() {
+        // Strong signal, tiny noise: deviance ratio crosses 0.995 quickly.
+        let mut rng = Pcg64::new(7);
+        let n = 100;
+        let p = 10;
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                x.set(i, j, rng.normal());
+            }
+        }
+        x.standardize(true, true);
+        let beta: Vec<f64> = (0..p).map(|j| if j < 3 { 5.0 } else { 0.0 }).collect();
+        let mut eta = vec![0.0; n];
+        x.gemv(&beta, &mut eta);
+        let y: Vec<f64> = eta.iter().map(|e| e + 1e-4 * rng.normal()).collect();
+        let prob = Problem::new(Design::Dense(x), y, Family::Gaussian);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 100);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert!(fit.stopped_early.is_some());
+        assert!(fit.steps.len() < 100);
+    }
+
+    #[test]
+    fn set_algebra_helpers() {
+        assert_eq!(union_sorted(&[1, 3, 5], &[2, 3, 6]), vec![1, 2, 3, 5, 6]);
+        assert_eq!(diff_sorted(&[1, 2, 3, 4], &[2, 4]), vec![1, 3]);
+        assert_eq!(intersect_sorted(&[1, 2, 3], &[2, 3, 9]), vec![2, 3]);
+        assert_eq!(union_sorted(&[], &[]), Vec::<usize>::new());
+        assert_eq!(diff_sorted(&[], &[1]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn logistic_path_runs() {
+        let mut rng = Pcg64::new(8);
+        let n = 40;
+        let p = 60;
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                x.set(i, j, rng.normal());
+            }
+        }
+        x.standardize(true, true);
+        let mut eta = vec![0.0; n];
+        let beta: Vec<f64> = (0..p).map(|j| if j < 3 { 3.0 } else { 0.0 }).collect();
+        x.gemv(&beta, &mut eta);
+        let y: Vec<f64> = eta
+            .iter()
+            .map(|&e| if rng.bernoulli(crate::slope::family::sigmoid(4.0 * e)) { 1.0 } else { 0.0 })
+            .collect();
+        let prob = Problem::new(Design::Dense(x), y, Family::Binomial);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 15);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert!(fit.steps.last().unwrap().n_active > 0);
+        assert!(fit.steps.iter().all(|s| s.dev_ratio >= -1e-9));
+    }
+
+    #[test]
+    fn multinomial_path_runs() {
+        let mut rng = Pcg64::new(9);
+        let n = 45;
+        let p = 12;
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                x.set(i, j, rng.normal());
+            }
+        }
+        x.standardize(true, true);
+        let y: Vec<f64> = (0..n).map(|i| (i % 3) as f64).collect();
+        let prob = Problem::new(Design::Dense(x), y, Family::Multinomial { classes: 3 });
+        let o = opts(LambdaKind::Bh { q: 0.2 }, Strategy::StrongSet, 10);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert_eq!(fit.lambda_base.len(), p * 3);
+        assert!(!fit.steps.is_empty());
+    }
+
+    #[test]
+    fn cumsum_sanity_for_flagging() {
+        // kkt_flagged flags exactly the prefix whose running sum crosses 0.
+        let grad = [2.0, 0.1, 0.05];
+        let lam = [1.0, 0.9, 0.8];
+        let flagged = kkt_flagged(&grad, &lam, 1e-12);
+        assert_eq!(flagged, vec![0]);
+        let none = kkt_flagged(&[0.5, 0.1, 0.05], &lam, 1e-12);
+        assert!(none.is_empty());
+    }
+}

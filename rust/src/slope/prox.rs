@@ -1,0 +1,346 @@
+//! Proximal operator of the sorted-ℓ1 norm.
+//!
+//! `prox_J(v; λ) = argmin_b ½‖b − v‖² + Σ_j λ_j |b|_(j)`
+//!
+//! Computed by the stack-based algorithm of Bogdan et al. (2015, Alg. 3 /
+//! "FastProxSL1"): sort `|v|` descending, subtract λ, then run a
+//! nonincreasing isotonic regression (pool-adjacent-violators with a block
+//! stack), clip at zero, undo the permutation and restore signs. `O(p)`
+//! after the `O(p log p)` sort — the very cost the screening rule is
+//! designed to amortize (footnote 3 of the paper).
+
+use crate::linalg::ops::order_desc_abs;
+
+/// Block of pooled coordinates during PAVA.
+#[derive(Clone, Copy)]
+struct Block {
+    start: usize,
+    end: usize, // inclusive
+    sum: f64,
+}
+
+impl Block {
+    #[inline]
+    fn mean(&self) -> f64 {
+        self.sum / (self.end - self.start + 1) as f64
+    }
+}
+
+/// Evaluate the prox into a fresh vector. `lambda` must be non-increasing,
+/// non-negative, with `lambda.len() >= v.len()`.
+pub fn prox_sorted_l1(v: &[f64], lambda: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; v.len()];
+    let mut ws = ProxWorkspace::new(v.len());
+    prox_sorted_l1_into(v, lambda, &mut ws, &mut out);
+    out
+}
+
+/// Reusable scratch buffers for the prox (the FISTA inner loop calls the
+/// prox once per iteration; reusing the workspace removes all allocation
+/// from the hot path — see EXPERIMENTS.md §Perf).
+pub struct ProxWorkspace {
+    order: Vec<usize>,
+    z: Vec<f64>,
+    blocks: Vec<Block>,
+}
+
+impl ProxWorkspace {
+    /// Workspace for problems up to `p` coordinates.
+    pub fn new(p: usize) -> Self {
+        Self {
+            order: Vec::with_capacity(p),
+            z: Vec::with_capacity(p),
+            blocks: Vec::with_capacity(p),
+        }
+    }
+}
+
+/// In-place prox: writes the result into `out` (same length as `v`).
+pub fn prox_sorted_l1_into(
+    v: &[f64],
+    lambda: &[f64],
+    ws: &mut ProxWorkspace,
+    out: &mut [f64],
+) {
+    let p = v.len();
+    assert!(lambda.len() >= p, "lambda shorter than v ({} < {p})", lambda.len());
+    assert_eq!(out.len(), p);
+    debug_assert!(lambda.windows(2).all(|w| w[0] >= w[1]), "lambda must be non-increasing");
+    if p == 0 {
+        return;
+    }
+
+    // 1. Sort |v| descending, remembering the permutation.
+    ws.order.clear();
+    ws.order.extend_from_slice(&order_desc_abs(v));
+
+    // 2. z = |v|↓ − λ.
+    ws.z.clear();
+    ws.z.extend(ws.order.iter().zip(lambda).map(|(&i, &l)| v[i].abs() - l));
+
+    // 3. Nonincreasing isotonic regression via a block stack: maintain
+    //    strictly decreasing block means; merge when violated.
+    ws.blocks.clear();
+    for (i, &zi) in ws.z.iter().enumerate() {
+        let mut blk = Block { start: i, end: i, sum: zi };
+        while let Some(&prev) = ws.blocks.last() {
+            if prev.mean() <= blk.mean() {
+                ws.blocks.pop();
+                blk = Block { start: prev.start, end: blk.end, sum: prev.sum + blk.sum };
+            } else {
+                break;
+            }
+        }
+        ws.blocks.push(blk);
+    }
+
+    // 4. Clip at zero, undo permutation, restore signs. (`f64::signum`
+    //    maps ±0.0 to ±1.0, so exact-zero inputs are special-cased to keep
+    //    the output support clean.)
+    for blk in &ws.blocks {
+        let m = blk.mean().max(0.0);
+        for k in blk.start..=blk.end {
+            let idx = ws.order[k];
+            out[idx] = if v[idx] == 0.0 { 0.0 } else { m * v[idx].signum() };
+        }
+    }
+}
+
+/// Independent reference prox for cross-checking the stack version: an
+/// O(p²)-worst-case PAVA that maintains explicit block boundaries and
+/// restarts the violation scan from the beginning after every merge —
+/// structurally different from (and much slower than) the production
+/// stack algorithm, but obviously correct.
+pub fn prox_sorted_l1_reference(v: &[f64], lambda: &[f64]) -> Vec<f64> {
+    let p = v.len();
+    if p == 0 {
+        return Vec::new();
+    }
+    let order = order_desc_abs(v);
+    let z: Vec<f64> = order.iter().zip(lambda).map(|(&i, &l)| v[i].abs() - l).collect();
+    // Blocks as (start, end inclusive, sum); merge any adjacent pair whose
+    // means violate the non-increasing constraint, rescanning from scratch.
+    let mut blocks: Vec<(usize, usize, f64)> = (0..p).map(|i| (i, i, z[i])).collect();
+    let mean = |b: &(usize, usize, f64)| b.2 / (b.1 - b.0 + 1) as f64;
+    loop {
+        let mut violation = None;
+        for i in 0..blocks.len() - 1 {
+            if mean(&blocks[i]) <= mean(&blocks[i + 1]) {
+                violation = Some(i);
+                break;
+            }
+        }
+        match violation {
+            None => break,
+            Some(i) => {
+                let merged = (blocks[i].0, blocks[i + 1].1, blocks[i].2 + blocks[i + 1].2);
+                blocks.splice(i..=i + 1, [merged]);
+            }
+        }
+    }
+    let mut out = vec![0.0; p];
+    for blk in &blocks {
+        let m = mean(blk).max(0.0);
+        for k in blk.0..=blk.1 {
+            let idx = order[k];
+            out[idx] = if v[idx] == 0.0 { 0.0 } else { m * v[idx].signum() };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{all_close, ensure, forall, gen, Config};
+    use crate::slope::sorted::sl1_norm;
+
+    /// Objective the prox minimizes.
+    fn prox_objective(b: &[f64], v: &[f64], lambda: &[f64]) -> f64 {
+        let quad: f64 = b.iter().zip(v).map(|(bi, vi)| 0.5 * (bi - vi) * (bi - vi)).sum();
+        quad + sl1_norm(b, lambda)
+    }
+
+    #[test]
+    fn soft_threshold_when_lambda_constant() {
+        // Constant λ => elementwise soft thresholding.
+        let v = [3.0, -1.0, 0.5, -4.0];
+        let lam = [1.0; 4];
+        let got = prox_sorted_l1(&v, &lam);
+        assert_eq!(got, vec![2.0, 0.0, 0.0, -3.0]);
+    }
+
+    #[test]
+    fn zero_lambda_is_identity() {
+        let v = [3.0, -1.0, 0.5];
+        assert_eq!(prox_sorted_l1(&v, &[0.0; 3]), v.to_vec());
+    }
+
+    #[test]
+    fn large_lambda_kills_everything() {
+        let v = [3.0, -1.0, 0.5];
+        assert_eq!(prox_sorted_l1(&v, &[100.0; 3]), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn clustering_of_close_values() {
+        // λ = (2, 1): gap forces v = (3, 2.5) into a tie (averaging).
+        // z = (3-2, 2.5-1) = (1, 1.5) violates monotonicity => pooled to 1.25.
+        let got = prox_sorted_l1(&[3.0, 2.5], &[2.0, 1.0]);
+        assert!((got[0] - 1.25).abs() < 1e-12);
+        assert!((got[1] - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preserves_signs_and_order() {
+        let v = [-5.0, 4.0, -3.0];
+        let lam = [1.0, 0.5, 0.25];
+        let got = prox_sorted_l1(&v, &lam);
+        assert!(got[0] < 0.0 && got[1] > 0.0 && got[2] < 0.0);
+        // magnitudes stay ordered like the input magnitudes
+        assert!(got[0].abs() >= got[1].abs());
+        assert!(got[1].abs() >= got[2].abs());
+    }
+
+    #[test]
+    fn output_magnitude_ordering_matches_input() {
+        // The prox never swaps magnitude ranks (rearrangement property).
+        forall(
+            Config { cases: 200, seed: 0xabcd },
+            |rng| {
+                let v = gen::normal_vec(rng, 1, 30);
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, lam)
+            },
+            |(v, lam)| {
+                let b = prox_sorted_l1(v, lam);
+                let vo = order_desc_abs(v);
+                for w in vo.windows(2) {
+                    ensure(
+                        b[w[0]].abs() >= b[w[1]].abs() - 1e-12,
+                        format!("rank swap at {w:?}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn objective_beats_perturbations() {
+        // The prox output minimizes the objective: random perturbations
+        // never do better.
+        forall(
+            Config { cases: 100, seed: 0x1234 },
+            |rng| {
+                let v = gen::normal_vec(rng, 1, 12);
+                let lam = gen::lambda_seq(rng, v.len());
+                let dirs: Vec<Vec<f64>> =
+                    (0..8).map(|_| (0..v.len()).map(|_| rng.normal()).collect()).collect();
+                (v, lam, dirs)
+            },
+            |(v, lam, dirs)| {
+                let b = prox_sorted_l1(v, lam);
+                let fb = prox_objective(&b, v, lam);
+                for d in dirs {
+                    for eps in [1e-3, 1e-2, 0.1, 1.0] {
+                        let cand: Vec<f64> =
+                            b.iter().zip(d).map(|(bi, di)| bi + eps * di).collect();
+                        let fc = prox_objective(&cand, v, lam);
+                        ensure(
+                            fc >= fb - 1e-9,
+                            format!("perturbation improved objective: {fc} < {fb}"),
+                        )?;
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prox_is_nonexpansive() {
+        forall(
+            Config { cases: 100, seed: 0x77 },
+            |rng| {
+                let v = gen::normal_vec(rng, 1, 20);
+                let w: Vec<f64> = v.iter().map(|x| x + 0.5 * rng.normal()).collect();
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, w, lam)
+            },
+            |(v, w, lam)| {
+                let pv = prox_sorted_l1(v, lam);
+                let pw = prox_sorted_l1(w, lam);
+                let d_in: f64 = v.iter().zip(w).map(|(a, b)| (a - b) * (a - b)).sum();
+                let d_out: f64 = pv.iter().zip(&pw).map(|(a, b)| (a - b) * (a - b)).sum();
+                ensure(d_out <= d_in + 1e-9, format!("expansive: {d_out} > {d_in}"))
+            },
+        );
+    }
+
+    #[test]
+    fn workspace_reuse_is_consistent() {
+        let mut ws = ProxWorkspace::new(8);
+        let lam = [2.0, 1.5, 1.0, 0.5];
+        let mut out1 = vec![0.0; 4];
+        let mut out2 = vec![0.0; 4];
+        prox_sorted_l1_into(&[4.0, -3.0, 2.0, -1.0], &lam, &mut ws, &mut out1);
+        prox_sorted_l1_into(&[4.0, -3.0, 2.0, -1.0], &lam, &mut ws, &mut out2);
+        assert_eq!(out1, out2);
+        assert_eq!(out1, prox_sorted_l1(&[4.0, -3.0, 2.0, -1.0], &lam));
+    }
+
+    #[test]
+    fn handles_zeros_in_input() {
+        let got = prox_sorted_l1(&[0.0, 2.0, 0.0], &[0.5, 0.5, 0.5]);
+        assert_eq!(got, vec![0.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(prox_sorted_l1(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn fast_matches_reference() {
+        forall(
+            Config { cases: 300, seed: 0x5e5e },
+            |rng| {
+                let v = if rng.bernoulli(0.5) {
+                    gen::normal_vec(rng, 1, 25)
+                } else {
+                    gen::tied_vec(rng, 1, 25)
+                };
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, lam)
+            },
+            |(v, lam)| {
+                let fast = prox_sorted_l1(v, lam);
+                let slow = prox_sorted_l1_reference(v, lam);
+                all_close(&fast, &slow, 1e-10)
+            },
+        );
+    }
+
+    #[test]
+    fn agrees_with_subdifferential_optimality() {
+        use crate::slope::subdiff;
+        forall(
+            Config { cases: 150, seed: 0x99 },
+            |rng| {
+                let v = gen::tied_vec(rng, 1, 15);
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, lam)
+            },
+            |(v, lam)| {
+                let b = prox_sorted_l1(v, lam);
+                // Optimality of the prox: v − b ∈ ∂J(b; λ).
+                let g: Vec<f64> = v.iter().zip(&b).map(|(vi, bi)| vi - bi).collect();
+                ensure(
+                    subdiff::in_subdifferential(&b, &g, lam, 1e-8),
+                    "v - prox(v) not in subdifferential",
+                )
+            },
+        );
+    }
+}

@@ -1,0 +1,270 @@
+//! The screening rules of §2.2: Algorithm 1 (exact support superset from a
+//! gradient), Algorithm 2 (its linear-time form), the strong rule for
+//! SLOPE, the lasso strong rule (Proposition 3) and a gap-safe-style
+//! baseline used in Figure 1.
+
+use crate::linalg::ops::order_desc_abs;
+
+/// Algorithm 1 of the paper, operating on a *pre-sorted* criterion vector
+/// `c` (descending) and a non-increasing `λ`. Returns the predicted
+/// support positions **in sorted order** (i.e. indices into `c`).
+///
+/// `S, B ← ∅; for i: B ← B ∪ {i}; if Σ_{j∈B}(c_j − λ_j) ≥ 0 then
+/// S ← S ∪ B; B ← ∅`.
+pub fn algorithm1(c_sorted: &[f64], lambda: &[f64]) -> Vec<usize> {
+    debug_assert!(c_sorted.windows(2).all(|w| w[0] >= w[1]), "c must be sorted descending");
+    let mut s = Vec::new();
+    let mut b_start = 0usize;
+    let mut b_sum = 0.0f64;
+    for i in 0..c_sorted.len() {
+        b_sum += c_sorted[i] - lambda[i];
+        if b_sum >= 0.0 {
+            s.extend(b_start..=i);
+            b_start = i + 1;
+            b_sum = 0.0;
+        }
+    }
+    s
+}
+
+/// Algorithm 2: the fast form returning only `k`, the predicted number of
+/// active predictors (the active set is the first `k` positions of the
+/// ordering permutation). Single pass, `O(p)`.
+pub fn algorithm2_k(c_sorted: &[f64], lambda: &[f64]) -> usize {
+    debug_assert!(c_sorted.windows(2).all(|w| w[0] >= w[1]), "c must be sorted descending");
+    let p = c_sorted.len();
+    let mut i = 1usize;
+    let mut k = 0usize;
+    let mut s = 0.0f64;
+    while i + k <= p {
+        s += c_sorted[i + k - 1] - lambda[i + k - 1]; // 1-based paper indexing
+        if s >= 0.0 {
+            k += i;
+            i = 1;
+            s = 0.0;
+        } else {
+            i += 1;
+        }
+    }
+    k
+}
+
+/// The **strong rule for SLOPE** (§2.2.2): given the gradient at the
+/// previous path point `grad = ∇f(β̂(λ⁽ᵐ⁾))` and the two penalty vectors,
+/// build `c := |∇f(β̂(λ⁽ᵐ⁾))| + λ⁽ᵐ⁾ − λ⁽ᵐ⁺¹⁾` (aligned by the gradient's
+/// magnitude ordering), run Algorithm 1/2, and return the screened set as
+/// **predictor indices**.
+///
+/// `lambda_prev` and `lambda_next` are the full non-increasing penalty
+/// vectors at steps m and m+1 (with the σ scaling already applied).
+pub fn strong_set(grad: &[f64], lambda_prev: &[f64], lambda_next: &[f64]) -> Vec<usize> {
+    let p = grad.len();
+    debug_assert_eq!(lambda_prev.len(), p);
+    debug_assert_eq!(lambda_next.len(), p);
+    // Sort |grad| descending and add the unit-slope-bound slack in rank
+    // order: c_j = |g|_(j) + (λ_prev_j − λ_next_j).
+    let ord = order_desc_abs(grad);
+    let mut c: Vec<f64> = ord
+        .iter()
+        .enumerate()
+        .map(|(j, &idx)| grad[idx].abs() + lambda_prev[j] - lambda_next[j])
+        .collect();
+    // The slack can perturb monotonicity; re-sort the criterion (the rule
+    // applies |·|↓ to the whole expression) keeping track of predictors.
+    let mut pairs: Vec<(f64, usize)> = c.drain(..).zip(ord).collect();
+    pairs.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    let c_sorted: Vec<f64> = pairs.iter().map(|&(v, _)| v).collect();
+    let k = algorithm2_k(&c_sorted, lambda_next);
+    let mut set: Vec<usize> = pairs[..k].iter().map(|&(_, idx)| idx).collect();
+    set.sort_unstable();
+    set
+}
+
+/// The classical **strong rule for the lasso** (Tibshirani et al. 2012):
+/// keep predictor j iff `|g_j| ≥ 2λ⁽ᵐ⁺¹⁾ − λ⁽ᵐ⁾` (scalar penalties).
+pub fn lasso_strong_set(grad: &[f64], lam_prev: f64, lam_next: f64) -> Vec<usize> {
+    let thresh = 2.0 * lam_next - lam_prev;
+    grad.iter()
+        .enumerate()
+        .filter(|(_, g)| g.abs() >= thresh)
+        .map(|(j, _)| j)
+        .collect()
+}
+
+/// Gap-safe-style sphere test for SLOPE (the "SAFE" comparator in Fig. 1).
+///
+/// A dual-feasible point for `min ½‖y − Xβ‖² + σJ(β;λ)` is `θ = r/s` where
+/// `r = y − Xβ` and `s ≥ 1` rescales the residual until `Xᵀθ` satisfies the
+/// sorted-ℓ1 dual constraint `cumsum(|Xᵀθ|↓ − σλ) ≤ 0`. With duality gap
+/// `G`, every dual-optimal `θ*` lies in the ball `B(θ, √(2G))`, so
+/// predictor j is *certifiably* inactive when
+/// `|x_jᵀθ| + √(2G)·‖x_j‖ < σλ_p` (the smallest weight — the only
+/// per-coordinate bound valid for the sorted-ℓ1 dual ball, which is what
+/// makes the safe rule so much more conservative than the strong rule).
+///
+/// `xt_theta` = `Xᵀr` at the current primal point, `r_norm_sq = ‖r‖²`,
+/// `primal` = current primal objective, `col_norms` = ‖x_j‖₂.
+pub fn gap_safe_set(
+    xt_r: &[f64],
+    r_norm_sq: f64,
+    primal: f64,
+    col_norms: &[f64],
+    lambda: &[f64],
+    y_dot_r: f64,
+) -> Vec<usize> {
+    let p = xt_r.len();
+    // Dual feasibility scaling: find the smallest s >= 1 with
+    // cumsum(|Xᵀr|↓/s − λ) ≤ 0, i.e. s = max_k cumsum(|Xᵀr|↓)_k / cumsum(λ)_k.
+    let mut mags: Vec<f64> = xt_r.iter().map(|v| v.abs()).collect();
+    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut acc_m = 0.0;
+    let mut acc_l = 0.0;
+    let mut s = 1.0f64;
+    for (m, l) in mags.iter().zip(lambda) {
+        acc_m += m;
+        acc_l += l;
+        if acc_l > 0.0 {
+            s = s.max(acc_m / acc_l);
+        }
+    }
+    // Dual objective of the scaled point θ = r/s:
+    // D(θ) = ⟨y, θ⟩ − ½‖θ‖².
+    let dual = y_dot_r / s - 0.5 * r_norm_sq / (s * s);
+    let gap = (primal - dual).max(0.0);
+    let radius = (2.0 * gap).sqrt();
+    let lam_min = *lambda.last().unwrap_or(&0.0);
+    (0..p)
+        .filter(|&j| xt_r[j].abs() / s + radius * col_norms[j] >= lam_min)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{ensure, forall, gen, Config};
+    use crate::linalg::ops::abs_sorted_desc;
+
+    #[test]
+    fn algorithm1_all_below_lambda_discards_all() {
+        assert!(algorithm1(&[0.5, 0.4, 0.1], &[1.0, 0.9, 0.8]).is_empty());
+    }
+
+    #[test]
+    fn algorithm1_all_above_keeps_all() {
+        assert_eq!(algorithm1(&[2.0, 1.5, 1.2], &[1.0, 0.9, 0.8]), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn algorithm1_redistribution_keeps_cluster() {
+        // c = (1.5, 1.5), λ = (2, 0.5): prefix −0.5 then +0.5 ⇒ both kept
+        // as one block once the running sum turns non-negative.
+        assert_eq!(algorithm1(&[1.5, 1.5], &[2.0, 0.5]), vec![0, 1]);
+    }
+
+    #[test]
+    fn algorithm1_tail_left_out() {
+        // First passes alone, tail never recovers.
+        assert_eq!(algorithm1(&[3.0, 0.1, 0.1], &[1.0, 0.9, 0.8]), vec![0]);
+    }
+
+    #[test]
+    fn algorithm2_matches_algorithm1_prefix_size() {
+        forall(
+            Config { cases: 500, seed: 0xa1a2 },
+            |rng| {
+                let c = {
+                    let mut v = gen::normal_vec(rng, 1, 40);
+                    v.iter_mut().for_each(|x| *x = x.abs());
+                    v.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+                    v
+                };
+                let lam = gen::lambda_seq(rng, c.len());
+                (c, lam)
+            },
+            |(c, lam)| {
+                let s1 = algorithm1(c, lam);
+                let k = algorithm2_k(c, lam);
+                ensure(s1.len() == k, format!("alg1 |S|={} vs alg2 k={k}", s1.len()))?;
+                // Algorithm 1's result is always a prefix 0..k.
+                ensure(
+                    s1.iter().copied().eq(0..k),
+                    format!("alg1 not a prefix: {s1:?}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn strong_set_equals_lasso_strong_rule_for_constant_lambda() {
+        // Proposition 3.
+        forall(
+            Config { cases: 300, seed: 0xbb },
+            |rng| {
+                let g = gen::normal_vec(rng, 1, 30);
+                let lam_prev = 1.0 + rng.next_f64();
+                let lam_next = lam_prev * (0.5 + 0.5 * rng.next_f64());
+                (g, lam_prev, lam_next)
+            },
+            |(g, lam_prev, lam_next)| {
+                let p = g.len();
+                let lp = vec![*lam_prev; p];
+                let ln = vec![*lam_next; p];
+                let slope = strong_set(g, &lp, &ln);
+                let lasso = lasso_strong_set(g, *lam_prev, *lam_next);
+                ensure(slope == lasso, format!("slope {slope:?} vs lasso {lasso:?}"))
+            },
+        );
+    }
+
+    #[test]
+    fn strong_set_is_monotone_in_lambda_gap() {
+        // Widening the λ-gap (bigger slack) can only grow the screened set.
+        let g = [0.9, -0.7, 0.5, 0.2, -0.1];
+        let lam: Vec<f64> = vec![1.0, 0.8, 0.6, 0.4, 0.2];
+        let next_small: Vec<f64> = lam.iter().map(|l| l * 0.95).collect();
+        let next_big: Vec<f64> = lam.iter().map(|l| l * 0.6).collect();
+        let s_small = strong_set(&g, &lam, &next_small);
+        let s_big = strong_set(&g, &lam, &next_big);
+        for j in &s_small {
+            assert!(s_big.contains(j), "{j} lost when gap widened");
+        }
+    }
+
+    #[test]
+    fn strong_set_with_exact_gradient_is_superset_of_alg1_support() {
+        // With λ_prev = λ_next the rule reduces to Algorithm 1 on |g|↓.
+        forall(
+            Config { cases: 200, seed: 0xcc },
+            |rng| {
+                let g = gen::normal_vec(rng, 1, 25);
+                let lam = gen::lambda_seq(rng, g.len());
+                (g, lam)
+            },
+            |(g, lam)| {
+                let s = strong_set(g, lam, lam);
+                let sorted = abs_sorted_desc(g);
+                let k = algorithm2_k(&sorted, lam);
+                ensure(s.len() == k, format!("|S|={} vs k={k}", s.len()))
+            },
+        );
+    }
+
+    #[test]
+    fn gap_safe_keeps_everything_at_huge_gap() {
+        // With a large duality gap nothing can be certified inactive.
+        let kept = gap_safe_set(&[0.1, 0.1], 100.0, 100.0, &[1.0, 1.0], &[1.0, 0.5], 0.0);
+        assert_eq!(kept, vec![0, 1]);
+    }
+
+    #[test]
+    fn gap_safe_discards_at_zero_gap() {
+        // Zero gap + small correlations: coordinates below λ_p go.
+        // primal == dual at optimum: craft y·r and ‖r‖² so gap = 0.
+        let r_norm_sq: f64 = 1.0;
+        let y_dot_r = 1.0;
+        let primal = y_dot_r - 0.5 * r_norm_sq; // equals dual at s=1
+        let kept = gap_safe_set(&[0.9, 0.05], r_norm_sq, primal, &[1.0, 1.0], &[1.0, 0.5], y_dot_r);
+        assert!(kept.contains(&0));
+        assert!(!kept.contains(&1));
+    }
+}

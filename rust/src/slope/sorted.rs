@@ -1,0 +1,142 @@
+//! The sorted-ℓ1 norm and the ordering machinery of §1.2.
+
+use crate::linalg::ops::order_desc_abs;
+
+/// The sorted-ℓ1 norm `J(β; λ) = Σ_j λ_j |β|_(j)` with `λ` non-increasing.
+pub fn sl1_norm(beta: &[f64], lambda: &[f64]) -> f64 {
+    debug_assert!(beta.len() <= lambda.len());
+    let mut mags: Vec<f64> = beta.iter().map(|b| b.abs()).collect();
+    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.iter().zip(lambda).map(|(m, l)| m * l).sum()
+}
+
+/// Scaled norm `σ · J(β; λ)` (the path parameterization of §3.1.2).
+pub fn sl1_norm_scaled(beta: &[f64], lambda: &[f64], sigma: f64) -> f64 {
+    sigma * sl1_norm(beta, lambda)
+}
+
+/// The permutation `O(x)` (descending by absolute value) — identical to
+/// [`order_desc_abs`], re-exported here under the paper's name.
+pub fn ordering(x: &[f64]) -> Vec<usize> {
+    order_desc_abs(x)
+}
+
+/// The rank operator `R(x)`: `rank[i]` is the 0-based position of `x[i]`
+/// in the descending-absolute ordering (paper Example 1, 0-indexed).
+pub fn ranks(x: &[f64]) -> Vec<usize> {
+    let ord = ordering(x);
+    let mut rank = vec![0usize; x.len()];
+    for (pos, &idx) in ord.iter().enumerate() {
+        rank[idx] = pos;
+    }
+    rank
+}
+
+/// Clusters `A_i` of eq. (2): groups of indices with equal `|β|`, reported
+/// in descending magnitude order. Each cluster carries its magnitude.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cluster {
+    /// Common absolute value of the cluster.
+    pub magnitude: f64,
+    /// Member indices into `β` (ascending index order).
+    pub members: Vec<usize>,
+}
+
+/// Extract the clusters of equal `|β_j|`, descending by magnitude.
+/// Exact float equality defines a cluster, as in eq. (2) — SLOPE solutions
+/// carry *exact* ties because the prox maps ties to ties.
+pub fn clusters(beta: &[f64]) -> Vec<Cluster> {
+    let ord = ordering(beta);
+    let mut out: Vec<Cluster> = Vec::new();
+    for &idx in &ord {
+        let mag = beta[idx].abs();
+        match out.last_mut() {
+            Some(c) if c.magnitude == mag => c.members.push(idx),
+            _ => out.push(Cluster { magnitude: mag, members: vec![idx] }),
+        }
+    }
+    for c in &mut out {
+        c.members.sort_unstable();
+    }
+    out
+}
+
+/// Number of *unique nonzero* coefficient magnitudes — early-stopping
+/// rule 1 of §3.1.2 compares this against `n`.
+pub fn unique_nonzero_magnitudes(beta: &[f64]) -> usize {
+    clusters(beta).iter().filter(|c| c.magnitude > 0.0).count()
+}
+
+/// Support (indices of nonzero coefficients).
+pub fn support(beta: &[f64]) -> Vec<usize> {
+    beta.iter()
+        .enumerate()
+        .filter(|(_, &b)| b != 0.0)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_is_weighted_sorted_sum() {
+        // |β|↓ = [6,5,3,3], λ = [4,3,2,1] => 24+15+6+3 = 48
+        let beta = [-3.0, 5.0, 3.0, 6.0];
+        let lambda = [4.0, 3.0, 2.0, 1.0];
+        assert_eq!(sl1_norm(&beta, &lambda), 48.0);
+    }
+
+    #[test]
+    fn norm_reduces_to_l1_for_constant_lambda() {
+        let beta = [1.0, -2.0, 0.5];
+        let lambda = [2.0, 2.0, 2.0];
+        assert!((sl1_norm(&beta, &lambda) - 2.0 * 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordering_and_ranks_match_paper_example() {
+        // Example 1: β = (−3, 5, 3, 6); O = (4,2,1,3); R = (3,2,4,1), 1-based.
+        let beta = [-3.0, 5.0, 3.0, 6.0];
+        assert_eq!(ordering(&beta), vec![3, 1, 0, 2]);
+        assert_eq!(ranks(&beta), vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn clusters_match_paper_example() {
+        // Example 1: A_1 = {1, 3} (1-based) = {0, 2} for |β| = 3.
+        let beta = [-3.0, 5.0, 3.0, 6.0];
+        let cs = clusters(&beta);
+        assert_eq!(cs.len(), 3);
+        assert_eq!(cs[0], Cluster { magnitude: 6.0, members: vec![3] });
+        assert_eq!(cs[1], Cluster { magnitude: 5.0, members: vec![1] });
+        assert_eq!(cs[2], Cluster { magnitude: 3.0, members: vec![0, 2] });
+    }
+
+    #[test]
+    fn zero_cluster_counted_separately() {
+        let beta = [0.0, 2.0, 0.0, 2.0];
+        let cs = clusters(&beta);
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].members, vec![1, 3]);
+        assert_eq!(cs[1].magnitude, 0.0);
+        assert_eq!(unique_nonzero_magnitudes(&beta), 1);
+    }
+
+    #[test]
+    fn support_basic() {
+        assert_eq!(support(&[0.0, 1.0, 0.0, -2.0]), vec![1, 3]);
+        assert!(support(&[0.0]).is_empty());
+    }
+
+    #[test]
+    fn norm_is_permutation_and_sign_invariant() {
+        let lambda = [3.0, 2.0, 1.0];
+        let a = sl1_norm(&[1.0, -2.0, 3.0], &lambda);
+        let b = sl1_norm(&[3.0, 1.0, 2.0], &lambda);
+        let c = sl1_norm(&[-3.0, 2.0, -1.0], &lambda);
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+    }
+}

@@ -1,0 +1,166 @@
+//! Theorem 1: the subdifferential of the sorted-ℓ1 norm, and the KKT
+//! stationarity check `0 ∈ ∇f(β) + ∂J(β; λ)` that safeguards the
+//! heuristic screening rule (§2.2.2).
+
+use crate::linalg::ops::cumsum;
+use crate::slope::sorted::clusters;
+
+/// Membership test `g ∈ ∂J(β; λ)` per Theorem 1.
+///
+/// For each cluster `A_i` of equal `|β|` (eq. 2):
+/// * `cumsum(|g_{A_i}|↓ − λ_{R_{A_i}}) ≤ tol` elementwise, where the λ
+///   block is the slice of λ at the cluster's global rank positions, and
+/// * if the cluster is active (`β_{A_i} ≠ 0`), additionally
+///   `Σ_{j∈A_i} (|g_j| − λ_{R(g)_j}) = 0` (within `tol`) and
+///   `sign(g_j) = sign(β_j)` for all members.
+pub fn in_subdifferential(beta: &[f64], g: &[f64], lambda: &[f64], tol: f64) -> bool {
+    assert_eq!(beta.len(), g.len());
+    assert!(lambda.len() >= beta.len());
+    let cls = clusters(beta);
+    let mut lambda_pos = 0usize; // global rank cursor into λ
+    for cl in &cls {
+        let card = cl.members.len();
+        let lam_block = &lambda[lambda_pos..lambda_pos + card];
+        // |g| over the cluster, sorted descending (the subdifferential is
+        // invariant to within-cluster permutations — Remark 1).
+        let mut gmag: Vec<f64> = cl.members.iter().map(|&j| g[j].abs()).collect();
+        gmag.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        let diffs: Vec<f64> = gmag.iter().zip(lam_block).map(|(gi, li)| gi - li).collect();
+        let cs = cumsum(&diffs);
+        if cs.iter().any(|&c| c > tol) {
+            return false;
+        }
+        if cl.magnitude > 0.0 {
+            // active cluster: the total must be exactly zero...
+            let total = cs.last().copied().unwrap_or(0.0);
+            if total.abs() > tol {
+                return false;
+            }
+            // ...and subgradient signs must match coefficient signs.
+            for &j in &cl.members {
+                if g[j] != 0.0 && g[j].signum() != beta[j].signum() {
+                    return false;
+                }
+            }
+        }
+        lambda_pos += card;
+    }
+    true
+}
+
+/// KKT stationarity check for the SLOPE problem `min f(β) + J(β; λ)`:
+/// verifies `−∇f(β) ∈ ∂J(β; λ)`.
+pub fn kkt_optimal(beta: &[f64], grad: &[f64], lambda: &[f64], tol: f64) -> bool {
+    let neg: Vec<f64> = grad.iter().map(|g| -g).collect();
+    in_subdifferential(beta, &neg, lambda, tol)
+}
+
+/// Maximum KKT infeasibility of the *inactive-set condition*: the largest
+/// positive prefix of `cumsum(|g|↓ − λ)`. Zero (≤ tol) at any stationary
+/// point; used as a solver convergence diagnostic and in the safeguarded
+/// screening loop.
+pub fn kkt_infeasibility(grad: &[f64], lambda: &[f64]) -> f64 {
+    let mut mags: Vec<f64> = grad.iter().map(|g| g.abs()).collect();
+    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut acc = 0.0f64;
+    let mut worst = 0.0f64;
+    for (m, l) in mags.iter().zip(lambda) {
+        acc += m - l;
+        worst = worst.max(acc);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{ensure, forall, gen, Config};
+    use crate::slope::prox::prox_sorted_l1;
+
+    #[test]
+    fn zero_beta_small_gradient_is_member() {
+        // β = 0: need cumsum(|g|↓ − λ) ≤ 0.
+        let beta = [0.0, 0.0];
+        let lambda = [2.0, 1.0];
+        assert!(in_subdifferential(&beta, &[1.5, 1.0], &lambda, 1e-12));
+        assert!(in_subdifferential(&beta, &[2.0, 1.0], &lambda, 1e-12));
+        // |g|↓ = (2.5, 0): first prefix breaks.
+        assert!(!in_subdifferential(&beta, &[0.0, 2.5], &lambda, 1e-12));
+        // prefixes: 1.9-2 = -0.1, then +1.5-1 = 0.4 > 0: breaks.
+        assert!(!in_subdifferential(&beta, &[1.9, 1.5], &lambda, 1e-12));
+    }
+
+    #[test]
+    fn active_cluster_requires_exact_total() {
+        let beta = [1.0];
+        let lambda = [2.0];
+        assert!(in_subdifferential(&beta, &[2.0], &lambda, 1e-12));
+        assert!(!in_subdifferential(&beta, &[1.5], &lambda, 1e-12)); // total < 0
+        assert!(!in_subdifferential(&beta, &[2.5], &lambda, 1e-12)); // prefix > 0
+        assert!(!in_subdifferential(&beta, &[-2.0], &lambda, 1e-12)); // sign flip
+    }
+
+    #[test]
+    fn tied_cluster_allows_redistribution() {
+        // β = (1, 1): the cluster {0,1} uses λ = (3, 1); any |g| with
+        // |g|↓ prefix sums ≤ (3, 4) and total = 4 works.
+        let beta = [1.0, 1.0];
+        let lambda = [3.0, 1.0];
+        assert!(in_subdifferential(&beta, &[3.0, 1.0], &lambda, 1e-12));
+        assert!(in_subdifferential(&beta, &[2.0, 2.0], &lambda, 1e-12));
+        assert!(in_subdifferential(&beta, &[2.5, 1.5], &lambda, 1e-12));
+        // prefix violation: 3.5 > 3
+        assert!(!in_subdifferential(&beta, &[3.5, 0.5], &lambda, 1e-12));
+        // wrong total
+        assert!(!in_subdifferential(&beta, &[2.0, 1.0], &lambda, 1e-12));
+    }
+
+    #[test]
+    fn prox_fixed_point_is_kkt_optimal() {
+        // β* = prox(β* − ∇f(β*)) ⇔ KKT; here f(β) = ½‖β − v‖² so
+        // ∇f(β*) = β* − v and the condition is v − β* ∈ ∂J(β*).
+        forall(
+            Config { cases: 200, seed: 0x31 },
+            |rng| {
+                let v = gen::tied_vec(rng, 1, 20);
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, lam)
+            },
+            |(v, lam)| {
+                let b = prox_sorted_l1(v, lam);
+                let grad: Vec<f64> = b.iter().zip(v).map(|(bi, vi)| bi - vi).collect();
+                ensure(kkt_optimal(&b, &grad, lam, 1e-8), "prox output fails KKT")
+            },
+        );
+    }
+
+    #[test]
+    fn infeasibility_zero_iff_inactive_condition_holds() {
+        let lambda = [2.0, 1.0, 0.5];
+        assert_eq!(kkt_infeasibility(&[1.0, 0.5, 0.2], &lambda), 0.0);
+        assert!(kkt_infeasibility(&[2.5, 0.0, 0.0], &lambda) > 0.0);
+        // redistribution: |g|↓ = (1.5, 1.5, 0): cumsum(−0.5, 0, −0.5) ≤ 0
+        assert_eq!(kkt_infeasibility(&[1.5, 1.5, 0.0], &lambda), 0.0);
+    }
+
+    #[test]
+    fn infeasibility_matches_membership_at_zero() {
+        forall(
+            Config { cases: 200, seed: 0x32 },
+            |rng| {
+                let g = gen::normal_vec(rng, 1, 15);
+                let lam = gen::lambda_seq(rng, g.len());
+                (g, lam)
+            },
+            |(g, lam)| {
+                let zero = vec![0.0; g.len()];
+                let member = in_subdifferential(&zero, g, lam, 1e-12);
+                let infeas = kkt_infeasibility(g, lam);
+                ensure(
+                    member == (infeas <= 1e-12),
+                    format!("member={member} infeas={infeas}"),
+                )
+            },
+        );
+    }
+}

