@@ -1,0 +1,140 @@
+//! End-to-end serving demo: start the SLOPE fit server on a Unix socket,
+//! then drive it through a client exactly as an external process would —
+//! cold path fit, cached repeat, warm-started refinement, a `fit_point`
+//! stream that reuses the previous point's screened state, predictions,
+//! and a stats snapshot.
+//!
+//! Run: `cargo run --release --example serving`
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("the serving demo drives the unix-socket transport; unavailable on this platform");
+}
+
+#[cfg(unix)]
+fn main() {
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use slope_screen::jsonio::Json;
+    use slope_screen::serve::client::connect_with_retry;
+    use slope_screen::serve::protocol::{request_line, synth_dataset_json};
+    use slope_screen::serve::{Server, ServerConfig};
+
+    let sock = std::env::temp_dir().join(format!("slope-serving-demo-{}.sock", std::process::id()));
+    let server = Arc::new(Server::new(ServerConfig { threads: 0, queue: 16, cache: true }));
+    let server_thread = {
+        let server = Arc::clone(&server);
+        let sock = sock.clone();
+        std::thread::spawn(move || server.serve_unix(&sock))
+    };
+
+    let mut client = connect_with_retry(&sock, 100, 10).expect("server socket");
+    let dataset = || synth_dataset_json(200, 2000, 20, 0.3, "gaussian", 2020);
+    let mut id = 0u64;
+    let mut send = |client: &mut slope_screen::serve::client::Client,
+                    op: &str,
+                    fields: Vec<(&str, Json)>| {
+        id += 1;
+        let line = request_line(id, op, fields);
+        let t0 = Instant::now();
+        let resp = client.round_trip(&line).expect("round trip");
+        let elapsed = t0.elapsed().as_secs_f64();
+        let json = Json::parse(&resp).expect("response JSON");
+        assert_eq!(json.field("ok"), Some(&Json::Bool(true)), "request failed: {resp}");
+        (json.field("result").unwrap().clone(), elapsed)
+    };
+
+    println!("== fit_path: cold fit vs cache hit vs warm sibling fit ==");
+    let (cold, t_cold) = send(
+        &mut client,
+        "fit_path",
+        vec![("dataset", dataset()), ("q", Json::Num(0.02)), ("path_length", Json::Num(40.0))],
+    );
+    println!(
+        "cold   : {:>8.1}ms  source={:<9} strategy={:<8} steps={}",
+        t_cold * 1e3,
+        cold.field("source").unwrap().as_str().unwrap(),
+        cold.field("strategy").unwrap().as_str().unwrap(),
+        cold.field("steps").unwrap().as_usize().unwrap(),
+    );
+    let (hit, t_hit) = send(
+        &mut client,
+        "fit_path",
+        vec![("dataset", dataset()), ("q", Json::Num(0.02)), ("path_length", Json::Num(40.0))],
+    );
+    println!(
+        "repeat : {:>8.1}ms  source={:<9} ({}x faster than the cold fit)",
+        t_hit * 1e3,
+        hit.field("source").unwrap().as_str().unwrap(),
+        (t_cold / t_hit.max(1e-9)).round(),
+    );
+    let (warm, t_warm) = send(
+        &mut client,
+        "fit_path",
+        vec![("dataset", dataset()), ("q", Json::Num(0.02)), ("path_length", Json::Num(60.0))],
+    );
+    println!(
+        "refine : {:>8.1}ms  source={:<9} strategy={:<8} (longer path, warm-started)",
+        t_warm * 1e3,
+        warm.field("source").unwrap().as_str().unwrap(),
+        warm.field("strategy").unwrap().as_str().unwrap(),
+    );
+
+    println!("\n== fit_point stream: previous-set screening across requests ==");
+    for (i, ratio) in [0.5, 0.45, 0.4, 0.35, 0.3].iter().enumerate() {
+        let (point, t) = send(
+            &mut client,
+            "fit_point",
+            vec![
+                ("dataset", dataset()),
+                ("q", Json::Num(0.02)),
+                ("sigma_ratio", Json::Num(*ratio)),
+            ],
+        );
+        println!(
+            "point {} : sigma_ratio={:.2}  {:>7.1}ms  warm={:<5} strategy={:<8} active={:<4} fitted={:<5} iters={}",
+            i,
+            ratio,
+            t * 1e3,
+            point.field("warm").unwrap().to_string(),
+            point.field("strategy").unwrap().as_str().unwrap(),
+            point.field("n_active").unwrap().as_usize().unwrap(),
+            point.field("n_fitted").unwrap().as_usize().unwrap(),
+            point.field("solver_iterations").unwrap().as_usize().unwrap(),
+        );
+    }
+
+    println!("\n== predict on fresh rows ==");
+    let rows: Vec<Json> = (0..3)
+        .map(|i| {
+            Json::nums(&(0..2000).map(|j| (((i * 37 + j * 13) % 11) as f64 - 5.0) * 0.05).collect::<Vec<f64>>())
+        })
+        .collect();
+    let (pred, t_pred) = send(
+        &mut client,
+        "predict",
+        vec![
+            ("dataset", dataset()),
+            ("q", Json::Num(0.02)),
+            ("path_length", Json::Num(40.0)),
+            ("x", Json::Arr(rows)),
+        ],
+    );
+    println!(
+        "scored {} rows in {:.1}ms at step {} (model from cache: {})",
+        pred.field("eta").unwrap().items().len(),
+        t_pred * 1e3,
+        pred.field("step").unwrap().as_usize().unwrap(),
+        pred.field("source").unwrap().as_str().unwrap() == "cache",
+    );
+
+    println!("\n== stats ==");
+    let (stats, _) = send(&mut client, "stats", vec![]);
+    println!("{}", stats.to_string());
+
+    let (_, _) = send(&mut client, "shutdown", vec![]);
+    drop(client);
+    server_thread.join().expect("server thread").expect("server exit");
+    println!("\nserver shut down cleanly");
+}

@@ -1,4 +1,11 @@
-"""Test session config: float64 everywhere (must precede any tracing)."""
+"""Test session config: put `python/` on the import path (the `compile`
+package is not installed) and force float64 everywhere (must precede any
+tracing)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 import jax
 

@@ -4,6 +4,9 @@ conditions independently, so the two implementations are pinned to the
 same mathematical object from both sides."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import ref

@@ -1,0 +1,220 @@
+//! Serve-layer throughput: requests/sec through the in-process server
+//! core for cold fits (cache off) vs warm-start-cached repeats (cache
+//! on), for both `fit_path` and `fit_point`, plus a concurrent burst that
+//! exercises request coalescing and the bounded scheduler.
+//!
+//! Writes `results/serve_throughput.csv` and the machine-readable
+//! `BENCH_serve.json` at the repository root — the serve perf trajectory
+//! is tracked from this file.
+//!
+//! Run: `cargo bench --bench serve_throughput -- --requests 20`
+
+use std::io::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use slope_screen::benchkit::Table;
+use slope_screen::cli::Args;
+use slope_screen::jsonio::Json;
+use slope_screen::serve::protocol::{request_line, synth_dataset_json};
+use slope_screen::serve::{Server, ServerConfig};
+
+struct Scenario {
+    name: &'static str,
+    requests: usize,
+    total_s: f64,
+}
+
+impl Scenario {
+    fn req_per_s(&self) -> f64 {
+        self.requests as f64 / self.total_s.max(1e-12)
+    }
+}
+
+fn drive(server: &Server, lines: &[String]) -> f64 {
+    let t0 = Instant::now();
+    for line in lines {
+        let resp = server.handle_line(line);
+        assert!(
+            resp.contains("\"ok\":true"),
+            "request failed in bench: {resp}"
+        );
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let parsed = Args::new("serve throughput: warm-start cache on vs off")
+        .opt("n", "100", "observations")
+        .opt("p", "1000", "predictors")
+        .opt("k", "10", "true support size")
+        .opt("requests", "20", "requests per scenario")
+        .opt("q", "0.05", "BH parameter")
+        .opt("path-length", "20", "path length for fit_path scenarios")
+        .opt("threads", "0", "server worker threads (0 = auto)")
+        .opt("seed", "2020", "dataset seed")
+        .flag("bench", "(cargo bench compatibility)")
+        .parse();
+    let n = parsed.usize("n");
+    let p = parsed.usize("p");
+    let k = parsed.usize("k");
+    let requests = parsed.usize("requests").max(2);
+    let q = parsed.f64("q");
+    let path_length = parsed.usize("path-length");
+    let threads = parsed.usize("threads");
+    let seed = parsed.u64("seed");
+
+    let dataset = || synth_dataset_json(n, p, k, 0.2, "gaussian", seed);
+    let fit_path_line = |id: u64| {
+        request_line(
+            id,
+            "fit_path",
+            vec![
+                ("dataset", dataset()),
+                ("q", Json::Num(q)),
+                ("path_length", Json::Num(path_length as f64)),
+            ],
+        )
+    };
+    let fit_point_line = |id: u64, ratio: f64| {
+        request_line(
+            id,
+            "fit_point",
+            vec![
+                ("dataset", dataset()),
+                ("q", Json::Num(q)),
+                ("sigma_ratio", Json::Num(ratio)),
+            ],
+        )
+    };
+
+    let mut scenarios: Vec<Scenario> = Vec::new();
+
+    // fit_path, cache disabled: every request is a full cold fit.
+    {
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: false });
+        let lines: Vec<String> = (0..requests).map(|i| fit_path_line(i as u64)).collect();
+        let total_s = drive(&server, &lines);
+        scenarios.push(Scenario { name: "fit_path_cold", requests, total_s });
+    }
+    // fit_path, cache enabled: one cold fit, then warm-start-cached hits.
+    {
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: true });
+        let lines: Vec<String> = (0..requests).map(|i| fit_path_line(i as u64)).collect();
+        let total_s = drive(&server, &lines);
+        scenarios.push(Scenario { name: "fit_path_warm_cache", requests, total_s });
+    }
+    // fit_point, cache disabled: every point re-solved from σ_max.
+    {
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: false });
+        let lines: Vec<String> = (0..requests)
+            .map(|i| fit_point_line(i as u64, 0.5 - 0.2 * (i % 5) as f64 / 5.0))
+            .collect();
+        let total_s = drive(&server, &lines);
+        scenarios.push(Scenario { name: "fit_point_cold", requests, total_s });
+    }
+    // fit_point, cache enabled: each request warm-starts from the last
+    // point's coefficients, gradient and screened support.
+    {
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: true });
+        let lines: Vec<String> = (0..requests)
+            .map(|i| fit_point_line(i as u64, 0.5 - 0.2 * (i % 5) as f64 / 5.0))
+            .collect();
+        let total_s = drive(&server, &lines);
+        scenarios.push(Scenario { name: "fit_point_warm_cache", requests, total_s });
+    }
+    // concurrent burst: 4 connections ask for the same cold model at
+    // once — coalescing runs one fit and shares it.
+    {
+        let server = Arc::new(Server::new(ServerConfig { threads, queue: 64, cache: true }));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..4 {
+                let server = Arc::clone(&server);
+                let line = fit_path_line(100 + c);
+                scope.spawn(move || {
+                    let resp = server.handle_line(&line);
+                    assert!(resp.contains("\"ok\":true"), "{resp}");
+                });
+            }
+        });
+        let total_s = t0.elapsed().as_secs_f64();
+        let cold = server.metrics.counters.cold_fits.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(cold, 1, "coalescing must run exactly one cold fit");
+        scenarios.push(Scenario { name: "fit_path_burst4_coalesced", requests: 4, total_s });
+    }
+
+    let mut table = Table::new(
+        &format!("serve throughput (n={n}, p={p}, {requests} requests/scenario)"),
+        &["scenario", "requests", "total_s", "req_per_s"],
+    );
+    for s in &scenarios {
+        table.row(vec![
+            s.name.to_string(),
+            s.requests.to_string(),
+            format!("{:.4}", s.total_s),
+            format!("{:.2}", s.req_per_s()),
+        ]);
+    }
+    table.print();
+    let csv = table.write_csv("serve_throughput").expect("csv");
+    println!("\nwrote {}", csv.display());
+
+    let find = |name: &str| scenarios.iter().find(|s| s.name == name).expect("scenario");
+    let path_speedup = find("fit_path_warm_cache").req_per_s() / find("fit_path_cold").req_per_s();
+    let point_speedup =
+        find("fit_point_warm_cache").req_per_s() / find("fit_point_cold").req_per_s();
+    println!(
+        "speedup: fit_path warm-cache {path_speedup:.1}x, fit_point warm-cache {point_speedup:.1}x"
+    );
+    assert!(
+        path_speedup > 1.0,
+        "warm-start cache must beat cold fits (got {path_speedup:.2}x)"
+    );
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("serve_throughput".to_string())),
+        (
+            "config",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("p", Json::Num(p as f64)),
+                ("k", Json::Num(k as f64)),
+                ("q", Json::Num(q)),
+                ("path_length", Json::Num(path_length as f64)),
+                ("requests", Json::Num(requests as f64)),
+            ]),
+        ),
+        (
+            "scenarios",
+            Json::Arr(
+                scenarios
+                    .iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::Str(s.name.to_string())),
+                            ("requests", Json::Num(s.requests as f64)),
+                            ("total_s", Json::Num(s.total_s)),
+                            ("req_per_s", Json::Num(s.req_per_s())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedup",
+            Json::obj(vec![
+                ("fit_path_warm_over_cold", Json::Num(path_speedup)),
+                ("fit_point_warm_over_cold", Json::Num(point_speedup)),
+            ]),
+        ),
+        ("table", table.to_json()),
+    ]);
+    let out_path = std::path::Path::new(slope_screen::benchkit::env_root())
+        .parent()
+        .map(|repo| repo.join("BENCH_serve.json"))
+        .expect("repo root");
+    let mut f = std::fs::File::create(&out_path).expect("BENCH_serve.json");
+    writeln!(f, "{}", payload.to_string()).expect("write BENCH_serve.json");
+    println!("wrote {}", out_path.display());
+}

@@ -114,6 +114,31 @@ impl Table {
         }
     }
 
+    /// Machine-readable form: `{"title": ..., "columns": [...],
+    /// "rows": [[...], ...]}` over [`crate::jsonio`] — benches persist
+    /// these so the perf trajectory is diffable across PRs.
+    pub fn to_json(&self) -> crate::jsonio::Json {
+        use crate::jsonio::Json;
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|cell| Json::Str(cell.clone())).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
     /// Write as CSV under `results/<name>.csv` (creates the directory).
     pub fn write_csv(&self, name: &str) -> std::io::Result<std::path::PathBuf> {
         let dir = results_dir();
@@ -185,6 +210,21 @@ mod tests {
         let content = std::fs::read_to_string(&path).unwrap();
         assert_eq!(content, "a,b\n1,x\n");
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn table_to_json_round_trips() {
+        let mut t = Table::new("perf", &["scenario", "req_per_s"]);
+        t.row(vec!["warm".into(), "123.4".into()]);
+        let j = t.to_json();
+        assert_eq!(j.field("title").unwrap().as_str(), Some("perf"));
+        assert_eq!(j.field("columns").unwrap().items().len(), 2);
+        let rows = j.field("rows").unwrap().items();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].items()[0].as_str(), Some("warm"));
+        // serialized form parses back identically
+        let re = crate::jsonio::Json::parse(&j.to_string()).unwrap();
+        assert_eq!(re, j);
     }
 
     #[test]

@@ -19,6 +19,7 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+#[allow(clippy::inherent_to_string)] // no Display on purpose: to_string is the one serializer
 impl Json {
     /// Parse a JSON document.
     pub fn parse(src: &str) -> Result<Json, String> {
@@ -44,7 +45,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity tokens; `null` keeps the
+                    // emitted line parseable (protocol responses must
+                    // never poison an NDJSON stream).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -359,5 +365,95 @@ mod tests {
     fn builder_helpers() {
         let v = Json::obj(vec![("k", Json::nums(&[1.0, 2.0]))]);
         assert_eq!(v.to_string(), r#"{"k":[1,2]}"#);
+    }
+
+    // --- serve-protocol round-trip guarantees ---------------------------
+    // The serve layer frames every request/response as one JSON line, so
+    // parse → to_string → parse must be the identity on everything the
+    // protocol can carry.
+
+    #[test]
+    fn roundtrip_escapes_and_unicode() {
+        let v = Json::obj(vec![(
+            "text",
+            Json::Str("line1\nline2\ttab \"quoted\" back\\slash \r bell\u{7} é λ ↓".into()),
+        )]);
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(re, v);
+        // and a parse-first direction with \u escapes in the source
+        let src = r#"{"a": "x é \n \\ \" / y", "b": "AZ"}"#;
+        let v1 = Json::parse(src).unwrap();
+        let v2 = Json::parse(&v1.to_string()).unwrap();
+        assert_eq!(v1, v2);
+        assert_eq!(v1.field("b").unwrap().as_str(), Some("AZ"));
+    }
+
+    #[test]
+    fn roundtrip_numeric_precision() {
+        // Shortest-roundtrip float formatting must reparse to identical
+        // bits; integers must survive the integer fast path.
+        let vals = [
+            0.1,
+            2.0 / 3.0,
+            1e-300,
+            -1.5e300,
+            123_456_789.123_456_79,
+            f64::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            1.0,
+            -42.0,
+            999_999_999_999_999.0,   // just below the 1e15 integer cutoff
+            9_007_199_254_740_992.0, // 2^53, above the cutoff
+            f64::EPSILON,
+        ];
+        for &x in &vals {
+            let v = Json::Num(x);
+            let re = Json::parse(&v.to_string()).unwrap();
+            match re {
+                Json::Num(y) => assert_eq!(
+                    y, x,
+                    "value {x:?} reparsed as {y:?} (serialized {})",
+                    v.to_string()
+                ),
+                other => panic!("non-numeric reparse: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::obj(vec![("v", Json::Num(x))]).to_string();
+            assert_eq!(s, r#"{"v":null}"#);
+            // the emitted line stays valid JSON
+            assert!(Json::parse(&s).is_ok());
+        }
+    }
+
+    #[test]
+    fn roundtrip_deeply_nested() {
+        let mut v = Json::Num(1.0);
+        for i in 0..40 {
+            v = Json::obj(vec![
+                ("level", Json::Num(i as f64)),
+                ("child", Json::Arr(vec![v, Json::Null, Json::Bool(i % 2 == 0)])),
+                ("empty_obj", Json::Obj(std::collections::BTreeMap::new())),
+                ("empty_arr", Json::Arr(Vec::new())),
+            ]);
+        }
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(re, v);
+    }
+
+    #[test]
+    fn roundtrip_fixed_protocol_document() {
+        let src = r#"{"id": 3, "op": "fit_path", "dataset": {"kind": "inline", "x": [[1.5, -2.25], [0.0, 3.0]], "y": [1, 0]}, "q": 0.05, "nested": [{"deep": [true, false, null, "s\ttr"]}]}"#;
+        let v1 = Json::parse(src).unwrap();
+        let s = v1.to_string();
+        let v2 = Json::parse(&s).unwrap();
+        assert_eq!(v1, v2);
+        // second serialization is a fixed point
+        assert_eq!(s, v2.to_string());
     }
 }

@@ -16,13 +16,16 @@
 //!   gradients on the screening/KKT hot path.
 //! * [`coordinator`] — cross-validation and experiment orchestration over a
 //!   worker pool.
+//! * [`serve`] — a long-running, multi-threaded fit server with a
+//!   fingerprinted warm-start cache and batched scheduling: the screening
+//!   rule amortized across *requests*, not just across path steps.
 //! * [`data`] — synthetic design generators and simulated stand-ins for the
 //!   paper's real datasets.
 //! * substrates built for the offline environment: [`rng`], [`linalg`],
 //!   [`pool`], [`cli`], [`jsonio`], [`check`] and [`benchkit`].
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
-//! recorded reproduction runs.
+//! See `DESIGN.md` for the layer map, experiment index and the serve
+//! protocol, and `EXPERIMENTS.md` for the recorded reproduction runs.
 
 pub mod benchkit;
 pub mod check;
@@ -34,4 +37,5 @@ pub mod linalg;
 pub mod pool;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod slope;

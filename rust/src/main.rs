@@ -4,12 +4,16 @@
 //!   fit     fit a SLOPE path on synthetic or simulated-real data
 //!   cv      repeated k-fold cross-validation over the path
 //!   info    show the AOT artifact manifest and PJRT platform
+//!   serve   run the fit server (Unix socket or stdio transport)
+//!   client  send newline-delimited JSON requests to a running server
 //!
 //! Examples:
 //!   slope-screen fit --n 200 --p 5000 --rho 0.4 --family gaussian
 //!   slope-screen fit --dataset golub --screen previous
 //!   slope-screen fit --n 100 --p 500 --grad-engine xla
 //!   slope-screen cv --n 200 --p 1000 --folds 5 --repeats 2
+//!   slope-screen serve --socket /tmp/slope-serve.sock
+//!   slope-screen client --json '{"id":1,"op":"stats"}'
 
 use slope_screen::cli::Args;
 use slope_screen::coordinator::{cross_validate, CvConfig};
@@ -43,6 +47,11 @@ fn main() {
         .opt("threads", "0", "worker threads (0 = auto)")
         .opt("seed", "42", "rng seed")
         .flag("no-early-stop", "disable the path termination rules")
+        .opt("socket", "/tmp/slope-serve.sock", "serve/client: unix socket path")
+        .opt("queue", "64", "serve: admission-queue capacity (backpressure bound)")
+        .opt("json", "", "client: a single request line to send")
+        .flag("stdio", "serve: speak NDJSON over stdin/stdout instead of a socket")
+        .flag("no-cache", "serve: disable the warm-start/model cache")
         .parse();
 
     let cmd = parsed
@@ -54,8 +63,10 @@ fn main() {
         "fit" => cmd_fit(&parsed),
         "cv" => cmd_cv(&parsed),
         "info" => cmd_info(),
+        "serve" => cmd_serve(&parsed),
+        "client" => cmd_client(&parsed),
         other => {
-            eprintln!("unknown subcommand `{other}` (expected fit|cv|info)");
+            eprintln!("unknown subcommand `{other}` (expected fit|cv|info|serve|client)");
             std::process::exit(2);
         }
     }
@@ -198,6 +209,104 @@ fn cmd_cv(parsed: &slope_screen::cli::Parsed) {
     );
     let total_viol: usize = res.folds.iter().map(|f| f.violations).sum();
     println!("violations across folds: {total_viol}");
+}
+
+fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
+    use slope_screen::serve::{Server, ServerConfig};
+    let cfg = ServerConfig {
+        threads: parsed.usize("threads"),
+        queue: parsed.usize("queue"),
+        cache: !parsed.bool("no-cache"),
+    };
+    let server = std::sync::Arc::new(Server::new(cfg));
+    if parsed.bool("stdio") {
+        eprintln!("slope-screen serve: NDJSON on stdin/stdout (send {{\"op\":\"shutdown\"}} to stop)");
+        let stdin = std::io::stdin();
+        let stdout = std::io::stdout();
+        if let Err(e) = server.serve_lines(stdin.lock(), stdout.lock()) {
+            eprintln!("serve: transport error: {e}");
+            std::process::exit(1);
+        }
+        eprintln!("slope-screen serve: shut down cleanly");
+        return;
+    }
+    serve_socket(parsed, &server);
+}
+
+#[cfg(unix)]
+fn serve_socket(parsed: &slope_screen::cli::Parsed, server: &std::sync::Arc<slope_screen::serve::Server>) {
+    let path = std::path::PathBuf::from(parsed.get("socket"));
+    eprintln!(
+        "slope-screen serve: listening on {} ({} worker threads, queue {})",
+        path.display(),
+        parsed.usize("threads"),
+        parsed.usize("queue")
+    );
+    if let Err(e) = server.serve_unix(&path) {
+        eprintln!("serve: socket error: {e}");
+        std::process::exit(1);
+    }
+    eprintln!("slope-screen serve: shut down cleanly");
+}
+
+#[cfg(not(unix))]
+fn serve_socket(
+    _parsed: &slope_screen::cli::Parsed,
+    _server: &std::sync::Arc<slope_screen::serve::Server>,
+) {
+    eprintln!("serve: unix-domain sockets are unavailable on this platform; use --stdio");
+    std::process::exit(2);
+}
+
+#[cfg(not(unix))]
+fn cmd_client(_parsed: &slope_screen::cli::Parsed) {
+    eprintln!("client: requires unix-domain sockets, unavailable on this platform");
+    std::process::exit(2);
+}
+
+#[cfg(unix)]
+fn cmd_client(parsed: &slope_screen::cli::Parsed) {
+    use std::io::BufRead as _;
+    let path = std::path::PathBuf::from(parsed.get("socket"));
+    let mut client = match slope_screen::serve::client::connect_with_retry(&path, 20, 50) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("client: cannot connect to {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    };
+    let inline = parsed.get("json");
+    if !inline.is_empty() {
+        match client.round_trip(inline) {
+            Ok(resp) => println!("{resp}"),
+            Err(e) => {
+                eprintln!("client: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    // No --json: read request lines from stdin, print response lines.
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("client: stdin error: {e}");
+                std::process::exit(1);
+            }
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match client.round_trip(&line) {
+            Ok(resp) => println!("{resp}"),
+            Err(e) => {
+                eprintln!("client: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
 }
 
 fn cmd_info() {

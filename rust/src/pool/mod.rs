@@ -1,22 +1,25 @@
 //! Worker-pool substrate (no `rayon`/`tokio` offline).
 //!
 //! Provides [`WorkerPool`]: a fixed set of threads fed from a shared
-//! injector queue, plus [`par_for_each`] / [`par_map`] conveniences built
-//! on `std::thread::scope`. The coordinator uses it to run cross-validation
-//! folds and simulation repetitions concurrently; each job gets a derived
-//! RNG so results are independent of scheduling order.
+//! FIFO injector queue, plus [`par_for_each`] / [`par_map`] conveniences
+//! built on `std::thread::scope`. The coordinator uses it to run
+//! cross-validation folds and simulation repetitions concurrently; each
+//! job gets a derived RNG so results are independent of scheduling order.
+//! FIFO dispatch matters for the serve layer: the oldest admitted request
+//! is always the next one served, so no client starves under load.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 struct Queue {
-    jobs: Mutex<(Vec<Job>, bool)>, // (pending jobs, shutdown flag)
+    jobs: Mutex<(VecDeque<Job>, bool)>, // (pending jobs, shutdown flag)
     signal: Condvar,
 }
 
-/// A fixed-size thread pool with a LIFO injector queue.
+/// A fixed-size thread pool with a FIFO injector queue.
 pub struct WorkerPool {
     queue: Arc<Queue>,
     pending: Arc<(Mutex<usize>, Condvar)>,
@@ -28,7 +31,7 @@ impl WorkerPool {
     pub fn new(n: usize) -> Self {
         let n = n.max(1);
         let queue = Arc::new(Queue {
-            jobs: Mutex::new((Vec::new(), false)),
+            jobs: Mutex::new((VecDeque::new(), false)),
             signal: Condvar::new(),
         });
         let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
@@ -40,7 +43,7 @@ impl WorkerPool {
                 let job = {
                     let mut guard = q.jobs.lock().unwrap();
                     loop {
-                        if let Some(job) = guard.0.pop() {
+                        if let Some(job) = guard.0.pop_front() {
                             break job;
                         }
                         if guard.1 {
@@ -79,7 +82,7 @@ impl WorkerPool {
             *count += 1;
         }
         let mut guard = self.queue.jobs.lock().unwrap();
-        guard.0.push(Box::new(f));
+        guard.0.push_back(Box::new(f));
         drop(guard);
         self.queue.signal.notify_one();
     }

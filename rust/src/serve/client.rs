@@ -1,0 +1,65 @@
+//! Blocking newline-delimited JSON client for the serve socket transport
+//! (the `client` CLI subcommand and `examples/serving.rs` use it).
+
+#[cfg(unix)]
+pub use unix_impl::{connect_with_retry, Client};
+
+#[cfg(unix)]
+mod unix_impl {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+    use std::path::Path;
+    use std::time::Duration;
+
+    /// One connection to a serve socket.
+    pub struct Client {
+        reader: BufReader<UnixStream>,
+        writer: UnixStream,
+    }
+
+    impl Client {
+        /// Connect to a serve socket.
+        pub fn connect(path: &Path) -> std::io::Result<Client> {
+            let stream = UnixStream::connect(path)?;
+            let reader = BufReader::new(stream.try_clone()?);
+            Ok(Client { reader, writer: stream })
+        }
+
+        /// Send one request line and read the matching response line.
+        pub fn round_trip(&mut self, request: &str) -> std::io::Result<String> {
+            self.writer.write_all(request.trim().as_bytes())?;
+            self.writer.write_all(b"\n")?;
+            self.writer.flush()?;
+            let mut line = String::new();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ));
+            }
+            Ok(line.trim_end().to_string())
+        }
+    }
+
+    /// Connect with retries — for clients racing a just-spawned server.
+    pub fn connect_with_retry(
+        path: &Path,
+        attempts: usize,
+        delay_ms: u64,
+    ) -> std::io::Result<Client> {
+        let mut last_err = None;
+        for _ in 0..attempts.max(1) {
+            match Client::connect(path) {
+                Ok(client) => return Ok(client),
+                Err(e) => {
+                    last_err = Some(e);
+                    std::thread::sleep(Duration::from_millis(delay_ms));
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::NotFound, "serve socket never appeared")
+        }))
+    }
+}

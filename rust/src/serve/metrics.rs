@@ -1,0 +1,146 @@
+//! Serving metrics: request counters and per-op latency quantiles,
+//! reusing [`crate::benchkit::Timing`] for the summary statistics and
+//! rendered as JSON for the `stats` request.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::benchkit::Timing;
+use crate::jsonio::Json;
+
+/// Cap on retained latency samples per op (oldest half dropped on
+/// overflow — the quantiles track recent behavior).
+const MAX_SAMPLES: usize = 4096;
+
+/// Monotonic request/cache counters.
+#[derive(Default)]
+pub struct Counters {
+    /// Request lines received.
+    pub requests: AtomicU64,
+    /// Error responses produced.
+    pub errors: AtomicU64,
+    /// Fit requests served from the model cache.
+    pub cache_hits: AtomicU64,
+    /// Fit requests coalesced onto an in-flight identical fit.
+    pub coalesced: AtomicU64,
+    /// Cold (unseeded) fits executed.
+    pub cold_fits: AtomicU64,
+    /// Warm (seeded) fits executed.
+    pub warm_fits: AtomicU64,
+    /// Rows scored by `predict`.
+    pub predictions: AtomicU64,
+}
+
+/// Server metrics: counters plus per-op latency histograms.
+pub struct Metrics {
+    started: Instant,
+    /// The counters (bumped directly by the server).
+    pub counters: Counters,
+    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+impl Metrics {
+    /// Fresh metrics with the uptime clock started.
+    pub fn new() -> Metrics {
+        Metrics {
+            started: Instant::now(),
+            counters: Counters::default(),
+            latencies: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Record one op latency in seconds.
+    pub fn record(&self, op: &str, seconds: f64) {
+        let mut map = self.latencies.lock().unwrap();
+        let samples = map.entry(op.to_string()).or_default();
+        if samples.len() >= MAX_SAMPLES {
+            samples.drain(..MAX_SAMPLES / 2);
+        }
+        samples.push(seconds);
+    }
+
+    /// JSON snapshot: uptime, counters, and per-op latency quantiles.
+    pub fn snapshot(&self) -> Json {
+        let c = &self.counters;
+        let counters = Json::obj(vec![
+            ("requests", Json::Num(c.requests.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::Num(c.errors.load(Ordering::Relaxed) as f64)),
+            ("cache_hits", Json::Num(c.cache_hits.load(Ordering::Relaxed) as f64)),
+            ("coalesced", Json::Num(c.coalesced.load(Ordering::Relaxed) as f64)),
+            ("cold_fits", Json::Num(c.cold_fits.load(Ordering::Relaxed) as f64)),
+            ("warm_fits", Json::Num(c.warm_fits.load(Ordering::Relaxed) as f64)),
+            ("predictions", Json::Num(c.predictions.load(Ordering::Relaxed) as f64)),
+        ]);
+        let mut ops = BTreeMap::new();
+        for (op, samples) in self.latencies.lock().unwrap().iter() {
+            if samples.is_empty() {
+                continue;
+            }
+            let t = Timing::from_samples(samples.clone());
+            ops.insert(
+                op.clone(),
+                Json::obj(vec![
+                    ("count", Json::Num(samples.len() as f64)),
+                    ("median_s", Json::Num(t.median())),
+                    ("mean_s", Json::Num(t.mean())),
+                    ("p95_s", Json::Num(t.quantile(0.95))),
+                    ("max_s", Json::Num(t.quantile(1.0))),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("counters", counters),
+            ("latency", Json::Obj(ops)),
+        ])
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reports_counters_and_quantiles() {
+        let m = Metrics::new();
+        m.counters.requests.fetch_add(3, Ordering::Relaxed);
+        m.record("fit_path", 0.5);
+        m.record("fit_path", 1.5);
+        m.record("stats", 0.001);
+        let snap = m.snapshot();
+        let counters = snap.field("counters").unwrap();
+        assert_eq!(counters.field("requests").unwrap().as_f64(), Some(3.0));
+        let lat = snap.field("latency").unwrap();
+        let fp = lat.field("fit_path").unwrap();
+        assert_eq!(fp.field("count").unwrap().as_f64(), Some(2.0));
+        assert_eq!(fp.field("median_s").unwrap().as_f64(), Some(1.0));
+        assert!(snap.field("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn sample_buffer_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(MAX_SAMPLES + 100) {
+            m.record("op", i as f64);
+        }
+        let snap = m.snapshot();
+        let count = snap
+            .field("latency")
+            .unwrap()
+            .field("op")
+            .unwrap()
+            .field("count")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(count <= MAX_SAMPLES);
+    }
+}

@@ -1,0 +1,43 @@
+//! `serve` — a screening-aware SLOPE fit server.
+//!
+//! The paper's point is that the strong screening rule makes full SLOPE
+//! paths cheap in the p ≫ n regime. This layer turns that into a *service*
+//! property: a long-running, multi-threaded server that answers
+//! `fit_path` / `fit_point` / `predict` / `stats` / `shutdown` requests
+//! over newline-delimited JSON, amortizing gradients, warm starts and
+//! screened working sets **across requests**, not just across path steps.
+//!
+//! Components:
+//!
+//! * [`protocol`] — the request/response codec built on [`crate::jsonio`]
+//!   (no serde offline), including dataset specs (synthetic, simulated-real
+//!   or inline client data) and model specs (λ shape + path config).
+//! * [`registry`] — the dataset/model registry: datasets are interned by a
+//!   64-bit FNV-1a fingerprint of their spec (or raw bytes, for inline
+//!   data); fitted models are cached under `(fingerprint, model key)`
+//!   together with a [`crate::slope::path::PathSeed`] warm-start state.
+//!   Concurrent identical requests are *coalesced*: one fit runs, everyone
+//!   shares the result.
+//! * [`scheduler`] — dispatches fit jobs onto the [`crate::pool`] worker
+//!   pool behind a bounded admission queue (backpressure: submitters block
+//!   when the queue is full), and picks the screening strategy per job —
+//!   [`crate::slope::path::Strategy::StrongSet`] for cold fits,
+//!   [`crate::slope::path::Strategy::PreviousSet`] when a cached seed makes
+//!   the previous-set guess (Algorithm 4) cheap and accurate.
+//! * [`metrics`] — request counters and latency quantiles (reusing
+//!   [`crate::benchkit::Timing`]), exposed through the `stats` request.
+//! * [`server`] — the transports: newline-delimited JSON over
+//!   stdin/stdout or a Unix-domain socket. Zero external crates.
+//! * [`client`] — a small blocking client for the socket transport (the
+//!   `client` CLI subcommand and the serving example use it).
+//!
+//! See `DESIGN.md` §Serve for the protocol reference.
+
+pub mod client;
+pub mod metrics;
+pub mod protocol;
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,860 @@
+//! Request/response codec for the serve layer: newline-delimited JSON over
+//! [`crate::jsonio`] (no serde offline).
+//!
+//! A request line is an object `{"id": <u64>, "op": <str>, ...}`. The
+//! response line echoes the id: `{"id": ..., "ok": true, "result": {...}}`
+//! or `{"id": ..., "ok": false, "error": "..."}`.
+//!
+//! Ops: `fit_path`, `fit_point`, `predict`, `stats`, `shutdown`. Fit ops
+//! carry a `dataset` spec and model fields (`lambda`, `q`, `path_length`,
+//! `screen`); `fit_point` adds `sigma_ratio`; `predict` adds `x` (rows)
+//! and optionally `step`.
+
+use crate::data::real::RealDataset;
+use crate::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use crate::jsonio::Json;
+use crate::linalg::{Design, Mat};
+use crate::rng::Pcg64;
+use crate::slope::family::{Family, Problem};
+use crate::slope::lambda::{LambdaKind, PathConfig};
+use crate::slope::path::PathOptions;
+
+/// How a request describes the data to fit on.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Synthetic design generated server-side from a seed (§3.2 setups).
+    Synth {
+        /// Observations.
+        n: usize,
+        /// Predictors.
+        p: usize,
+        /// True support size.
+        k: usize,
+        /// Correlation parameter.
+        rho: f64,
+        /// `compound|chain|iid`.
+        design: String,
+        /// `gaussian|binomial|poisson|multinomial`.
+        family: String,
+        /// Classes (multinomial only).
+        classes: usize,
+        /// Generator seed — part of the fingerprint, so two clients asking
+        /// for the same spec share one interned dataset.
+        seed: u64,
+    },
+    /// One of the paper's simulated real-dataset stand-ins (§3.3).
+    Real {
+        /// Dataset name (`golub`, `arcene`, ...).
+        name: String,
+    },
+    /// Client-supplied data inlined in the request.
+    Inline {
+        /// Design rows (each of length p).
+        x: Vec<Vec<f64>>,
+        /// Response (length n).
+        y: Vec<f64>,
+        /// Response family.
+        family: String,
+        /// Classes (multinomial only).
+        classes: usize,
+        /// Center+scale columns server-side.
+        standardize: bool,
+    },
+}
+
+/// 64-bit FNV-1a over a byte stream (dataset fingerprints).
+pub fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a initial basis.
+pub const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn parse_family(family: &str, classes: usize) -> Result<Family, String> {
+    match family {
+        "gaussian" | "" => Ok(Family::Gaussian),
+        "binomial" => Ok(Family::Binomial),
+        "poisson" => Ok(Family::Poisson),
+        "multinomial" => {
+            if classes < 2 {
+                return Err(format!("multinomial needs classes >= 2, got {classes}"));
+            }
+            Ok(Family::Multinomial { classes })
+        }
+        other => Err(format!(
+            "unknown family `{other}` (expected gaussian|binomial|poisson|multinomial)"
+        )),
+    }
+}
+
+impl DatasetSpec {
+    /// Parse the `dataset` field of a request.
+    pub fn parse(j: &Json) -> Result<DatasetSpec, String> {
+        let kind = str_field(j, "kind", "synth")?;
+        match kind.as_str() {
+            "synth" => Ok(DatasetSpec::Synth {
+                n: usize_field(j, "n", 100)?,
+                p: usize_field(j, "p", 500)?,
+                k: usize_field(j, "k", 10)?,
+                rho: f64_field(j, "rho", 0.0)?,
+                design: str_field(j, "design", "compound")?,
+                family: str_field(j, "family", "gaussian")?,
+                classes: usize_field(j, "classes", 3)?,
+                seed: usize_field(j, "seed", 42)? as u64,
+            }),
+            "real" => Ok(DatasetSpec::Real { name: str_field(j, "name", "")? }),
+            "inline" => {
+                let x_json = req_field(j, "x")?;
+                let mut x = Vec::new();
+                for row in x_json.items() {
+                    let mut r = Vec::new();
+                    for v in row.items() {
+                        r.push(v.as_f64().ok_or("inline x must be numeric rows")?);
+                    }
+                    x.push(r);
+                }
+                let y: Vec<f64> = req_field(j, "y")?
+                    .items()
+                    .iter()
+                    .map(|v| v.as_f64().ok_or("inline y must be numeric"))
+                    .collect::<Result<_, _>>()?;
+                Ok(DatasetSpec::Inline {
+                    x,
+                    y,
+                    family: str_field(j, "family", "gaussian")?,
+                    classes: usize_field(j, "classes", 3)?,
+                    standardize: bool_field(j, "standardize", true)?,
+                })
+            }
+            other => Err(format!("unknown dataset kind `{other}` (expected synth|real|inline)")),
+        }
+    }
+
+    /// Content fingerprint: equal specs (including generator seeds and, for
+    /// inline data, the raw bytes) intern to the same registry entry.
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            DatasetSpec::Synth { n, p, k, rho, design, family, classes, seed } => {
+                let canon = format!(
+                    "synth:n={n}:p={p}:k={k}:rho={rho}:design={design}:family={family}:classes={classes}:seed={seed}"
+                );
+                fnv1a(FNV_BASIS, canon.as_bytes())
+            }
+            DatasetSpec::Real { name } => fnv1a(FNV_BASIS, format!("real:{name}").as_bytes()),
+            DatasetSpec::Inline { x, y, family, classes, standardize } => {
+                let mut h = fnv1a(
+                    FNV_BASIS,
+                    format!("inline:family={family}:classes={classes}:std={standardize}").as_bytes(),
+                );
+                for row in x {
+                    h = fnv1a(h, &(row.len() as u64).to_le_bytes());
+                    for v in row {
+                        h = fnv1a(h, &v.to_bits().to_le_bytes());
+                    }
+                }
+                for v in y {
+                    h = fnv1a(h, &v.to_bits().to_le_bytes());
+                }
+                h
+            }
+        }
+    }
+
+    /// Short human label for logs and responses.
+    pub fn label(&self) -> String {
+        match self {
+            DatasetSpec::Synth { n, p, family, .. } => format!("synth[{family} n={n} p={p}]"),
+            DatasetSpec::Real { name } => format!("real[{name}]"),
+            DatasetSpec::Inline { x, y, family, .. } => {
+                format!("inline[{family} n={} p={}]", y.len(), x.first().map_or(0, Vec::len))
+            }
+        }
+    }
+
+    /// Materialize the problem instance. Validates everything that would
+    /// otherwise panic inside `Problem::new` or the path driver, so a bad
+    /// request yields an error response rather than a dead worker.
+    ///
+    /// For inline data with `standardize = true`, the returned transform
+    /// records the column means/scales so `predict` can map raw client
+    /// rows into the model's coordinates. Synthetic/real datasets are
+    /// generated server-side directly in model coordinates (`transform:
+    /// None`) — clients never observe a raw coordinate system for them.
+    pub fn materialize(&self) -> Result<Materialized, String> {
+        match self {
+            DatasetSpec::Synth { n, p, k, rho, design, family, classes, seed } => {
+                if *n == 0 || *p == 0 {
+                    return Err("synth dataset needs n > 0 and p > 0".to_string());
+                }
+                if !(0.0..1.0).contains(rho) {
+                    return Err(format!("rho must be in [0,1), got {rho}"));
+                }
+                let fam = parse_family(family, *classes)?;
+                let design = match design.as_str() {
+                    "compound" => DesignKind::Compound,
+                    "chain" => DesignKind::Chain,
+                    "iid" => DesignKind::Iid,
+                    other => return Err(format!("unknown design `{other}`")),
+                };
+                let spec = SyntheticSpec {
+                    n: *n,
+                    p: *p,
+                    rho: *rho,
+                    design,
+                    beta: match fam {
+                        Family::Poisson => BetaSpec::Ladder { k: *k, step: 1.0 / 40.0 },
+                        _ => BetaSpec::PlusMinus { k: *k, scale: 2.0 },
+                    },
+                    family: fam,
+                    noise_sd: 1.0,
+                    standardize: true,
+                };
+                Ok(Materialized {
+                    problem: spec.generate(&mut Pcg64::new(*seed)),
+                    transform: None,
+                    intercept: 0.0,
+                })
+            }
+            DatasetSpec::Real { name } => RealDataset::all()
+                .into_iter()
+                .find(|d| d.name() == name)
+                .map(|d| Materialized { problem: d.load(), transform: None, intercept: 0.0 })
+                .ok_or_else(|| format!("unknown real dataset `{name}`")),
+            DatasetSpec::Inline { x, y, family, classes, standardize } => {
+                let n = x.len();
+                if n == 0 {
+                    return Err("inline dataset has no rows".to_string());
+                }
+                let p = x[0].len();
+                if p == 0 {
+                    return Err("inline dataset has no columns".to_string());
+                }
+                for (i, row) in x.iter().enumerate() {
+                    if row.len() != p {
+                        return Err(format!("inline row {i} has {} values, expected {p}", row.len()));
+                    }
+                }
+                if y.len() != n {
+                    return Err(format!("inline y has {} values, expected {n}", y.len()));
+                }
+                if let Some(i) = y.iter().position(|v| !v.is_finite()) {
+                    return Err(format!("inline y[{i}] is not finite"));
+                }
+                let fam = parse_family(family, *classes)?;
+                match fam {
+                    Family::Binomial => {
+                        if !y.iter().all(|&v| v == 0.0 || v == 1.0) {
+                            return Err("binomial response must be 0/1".to_string());
+                        }
+                    }
+                    Family::Poisson => {
+                        if !y.iter().all(|&v| v >= 0.0) {
+                            return Err("poisson response must be non-negative".to_string());
+                        }
+                    }
+                    Family::Multinomial { classes } => {
+                        if !y
+                            .iter()
+                            .all(|&v| v >= 0.0 && v < classes as f64 && v.fract() == 0.0)
+                        {
+                            return Err("multinomial response must be class indices".to_string());
+                        }
+                    }
+                    Family::Gaussian => {}
+                }
+                let mut mat = Mat::zeros(n, p);
+                for (i, row) in x.iter().enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        if !v.is_finite() {
+                            return Err(format!("inline x[{i}][{j}] is not finite"));
+                        }
+                        mat.set(i, j, v);
+                    }
+                }
+                let transform = if *standardize {
+                    let n_f = n as f64;
+                    let mut means = Vec::with_capacity(p);
+                    let mut inv_norms = Vec::with_capacity(p);
+                    for j in 0..p {
+                        let col = mat.col(j);
+                        let mean = col.iter().sum::<f64>() / n_f;
+                        let norm = col
+                            .iter()
+                            .map(|v| (v - mean) * (v - mean))
+                            .sum::<f64>()
+                            .sqrt();
+                        means.push(mean);
+                        inv_norms.push(if norm > 0.0 { 1.0 / norm } else { 0.0 });
+                    }
+                    mat.standardize(true, true);
+                    Some(ColumnTransform { means, inv_norms })
+                } else {
+                    None
+                };
+                // With a centered design the intercept-free model cannot
+                // absorb mean(y); center gaussian responses and keep the
+                // offset so predictions return to the client's scale.
+                let mut y_fit = y.clone();
+                let mut intercept = 0.0;
+                if *standardize && fam == Family::Gaussian {
+                    intercept = crate::linalg::ops::mean(&y_fit);
+                    for v in y_fit.iter_mut() {
+                        *v -= intercept;
+                    }
+                }
+                Ok(Materialized {
+                    problem: Problem::new(Design::Dense(mat), y_fit, fam),
+                    transform,
+                    intercept,
+                })
+            }
+        }
+    }
+}
+
+/// Column standardization applied to a design before fitting; kept so
+/// `predict` can map raw client rows into the model's coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnTransform {
+    /// Per-column mean subtracted before scaling.
+    pub means: Vec<f64>,
+    /// Per-column reciprocal of the centered ℓ2 norm (0 for constant
+    /// columns, matching [`Mat::standardize`]).
+    pub inv_norms: Vec<f64>,
+}
+
+impl ColumnTransform {
+    /// Map one raw feature row into model coordinates.
+    pub fn apply(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .zip(self.means.iter().zip(&self.inv_norms))
+            .map(|(&v, (&mean, &inv))| (v - mean) * inv)
+            .collect()
+    }
+}
+
+/// A materialized dataset: the fit-ready problem plus the raw-row →
+/// model-row transform (when one was applied server-side).
+pub struct Materialized {
+    /// The problem the solver fits.
+    pub problem: Problem,
+    /// Transform for mapping prediction rows (None = rows are already in
+    /// model coordinates).
+    pub transform: Option<ColumnTransform>,
+    /// Offset added back to predicted scores (mean of y removed before a
+    /// gaussian fit on a centered design; 0 otherwise).
+    pub intercept: f64,
+}
+
+/// Model-side request fields: penalty shape and path/screen configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    /// `bh|oscar|lasso|gaussian-seq`.
+    pub lambda: String,
+    /// BH/OSCAR/Gaussian parameter.
+    pub q: f64,
+    /// Path length for `fit_path`.
+    pub path_length: usize,
+    /// `auto|none|strong|previous` — `auto` lets the scheduler choose from
+    /// cache state.
+    pub screen: String,
+}
+
+impl ModelSpec {
+    /// Parse model fields (with serving defaults) from a request object.
+    pub fn parse(j: &Json) -> Result<ModelSpec, String> {
+        let spec = ModelSpec {
+            lambda: str_field(j, "lambda", "bh")?,
+            q: f64_field(j, "q", 0.1)?,
+            path_length: usize_field(j, "path_length", 50)?,
+            screen: str_field(j, "screen", "auto")?,
+        };
+        if spec.path_length == 0 {
+            return Err("path_length must be >= 1".to_string());
+        }
+        match spec.lambda.as_str() {
+            "bh" | "gaussian-seq" => {
+                if !(spec.q > 0.0 && spec.q < 1.0) {
+                    return Err(format!("lambda `{}` needs q in (0,1), got {}", spec.lambda, spec.q));
+                }
+            }
+            "oscar" => {
+                if spec.q < 0.0 {
+                    return Err(format!("oscar needs q >= 0, got {}", spec.q));
+                }
+            }
+            "lasso" => {}
+            other => {
+                return Err(format!(
+                    "unknown lambda `{other}` (expected bh|oscar|lasso|gaussian-seq)"
+                ))
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Cache key within a dataset entry. `screen` is deliberately *not*
+    /// part of the identity: screening is a per-job performance strategy
+    /// that never changes the solution (the KKT safeguard guarantees it),
+    /// so requests differing only in `screen` share one fitted model.
+    pub fn key(&self) -> String {
+        format!("{}:q={}:len={}", self.lambda, self.q, self.path_length)
+    }
+
+    /// Cache key for `fit_point` warm-start state: `path_length` only
+    /// shapes `fit_path` grids, so point streams share their state
+    /// across it (only the penalty identity matters).
+    pub fn point_key(&self) -> String {
+        format!("{}:q={}", self.lambda, self.q)
+    }
+
+    /// Build the path options (strategy is chosen later, per job).
+    pub fn path_options(&self, prob: &Problem) -> Result<PathOptions, String> {
+        let kind = match self.lambda.as_str() {
+            "bh" => LambdaKind::Bh { q: self.q },
+            "oscar" => LambdaKind::Oscar { q: self.q },
+            "lasso" => LambdaKind::Lasso,
+            "gaussian-seq" => LambdaKind::Gaussian { q: self.q, n: prob.n() },
+            other => return Err(format!("unknown lambda `{other}`")),
+        };
+        let mut cfg = PathConfig::new(kind);
+        cfg.length = self.path_length;
+        Ok(PathOptions::new(cfg))
+    }
+}
+
+/// A parsed request body.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Fit (or serve from cache) a full path.
+    FitPath {
+        /// Data to fit on.
+        dataset: DatasetSpec,
+        /// Penalty/path configuration.
+        model: ModelSpec,
+    },
+    /// Fit a single path point at `sigma = sigma_ratio · σ_max`.
+    FitPoint {
+        /// Data to fit on.
+        dataset: DatasetSpec,
+        /// Penalty configuration.
+        model: ModelSpec,
+        /// Relative penalty scale in (0, 1].
+        sigma_ratio: f64,
+    },
+    /// Predict linear scores for new rows from a fitted path.
+    Predict {
+        /// Data the model was fitted on.
+        dataset: DatasetSpec,
+        /// Penalty/path configuration identifying the model.
+        model: ModelSpec,
+        /// Rows to score.
+        x: Vec<Vec<f64>>,
+        /// Path step to use (default: last).
+        step: Option<usize>,
+    },
+    /// Server/cache/latency statistics.
+    Stats,
+    /// Stop the server after responding.
+    Shutdown,
+}
+
+/// A request with its client-chosen id.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    /// Echoed back in the response.
+    pub id: u64,
+    /// The operation.
+    pub request: Request,
+}
+
+impl Envelope {
+    /// Parse one request line. Errors carry the request id when the line
+    /// was at least valid JSON (0 otherwise), so error responses still
+    /// correlate with their requests.
+    pub fn parse_line(line: &str) -> Result<Envelope, (u64, String)> {
+        let j = Json::parse(line).map_err(|e| (0, format!("bad request JSON: {e}")))?;
+        let id = usize_field(&j, "id", 0).map_err(|e| (0, e))? as u64;
+        match parse_request(&j) {
+            Ok(request) => Ok(Envelope { id, request }),
+            Err(e) => Err((id, e)),
+        }
+    }
+}
+
+fn parse_request(j: &Json) -> Result<Request, String> {
+    let op = str_field(j, "op", "")?;
+    let request = match op.as_str() {
+        "fit_path" => Request::FitPath {
+            dataset: DatasetSpec::parse(req_field(j, "dataset")?)?,
+            model: ModelSpec::parse(j)?,
+        },
+        "fit_point" => {
+            let ratio = f64_field(j, "sigma_ratio", 0.5)?;
+            if !(ratio > 0.0 && ratio <= 1.0) {
+                return Err(format!("sigma_ratio must be in (0,1], got {ratio}"));
+            }
+            Request::FitPoint {
+                dataset: DatasetSpec::parse(req_field(j, "dataset")?)?,
+                model: ModelSpec::parse(j)?,
+                sigma_ratio: ratio,
+            }
+        }
+        "predict" => {
+            let x_json = req_field(j, "x")?;
+            let mut x = Vec::new();
+            for row in x_json.items() {
+                let mut r = Vec::new();
+                for v in row.items() {
+                    r.push(v.as_f64().ok_or("predict x must be numeric rows")?);
+                }
+                x.push(r);
+            }
+            Request::Predict {
+                dataset: DatasetSpec::parse(req_field(j, "dataset")?)?,
+                model: ModelSpec::parse(j)?,
+                x,
+                step: j.field("step").and_then(Json::as_usize),
+            }
+        }
+        "stats" => Request::Stats,
+        "shutdown" => Request::Shutdown,
+        "" => return Err("request missing `op`".to_string()),
+        other => {
+            return Err(format!(
+                "unknown op `{other}` (expected fit_path|fit_point|predict|stats|shutdown)"
+            ))
+        }
+    };
+    Ok(request)
+}
+
+/// Success response line (no trailing newline).
+pub fn ok_response(id: u64, result: Json) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("result", result),
+    ])
+    .to_string()
+}
+
+/// Error response line (no trailing newline).
+pub fn err_response(id: u64, message: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(message.to_string())),
+    ])
+    .to_string()
+}
+
+/// Build a request line (client-side convenience).
+pub fn request_line(id: u64, op: &str, mut fields: Vec<(&str, Json)>) -> String {
+    let mut all = vec![("id", Json::Num(id as f64)), ("op", Json::Str(op.to_string()))];
+    all.append(&mut fields);
+    Json::obj(all).to_string()
+}
+
+/// JSON for a synthetic-dataset spec (client-side convenience).
+pub fn synth_dataset_json(n: usize, p: usize, k: usize, rho: f64, family: &str, seed: u64) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str("synth".to_string())),
+        ("n", Json::Num(n as f64)),
+        ("p", Json::Num(p as f64)),
+        ("k", Json::Num(k as f64)),
+        ("rho", Json::Num(rho)),
+        ("family", Json::Str(family.to_string())),
+        ("seed", Json::Num(seed as f64)),
+    ])
+}
+
+// --- field helpers -------------------------------------------------------
+// Absent fields take their documented defaults; *present* fields of the
+// wrong type are errors — a client sending `"q": "0.02"` must get a parse
+// error, not a silent fit of the default model.
+
+fn req_field<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.field(key).ok_or_else(|| format!("request missing `{key}`"))
+}
+
+fn str_field(j: &Json, key: &str, default: &str) -> Result<String, String> {
+    match j.field(key) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| format!("field `{key}` must be a string")),
+    }
+}
+
+fn f64_field(j: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match j.field(key) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .ok_or_else(|| format!("field `{key}` must be a number")),
+    }
+}
+
+fn usize_field(j: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match j.field(key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| format!("field `{key}` must be a number"))?;
+            if x < 0.0 || x.fract() != 0.0 {
+                return Err(format!("field `{key}` must be a non-negative integer, got {x}"));
+            }
+            Ok(x as usize)
+        }
+    }
+}
+
+fn bool_field(j: &Json, key: &str, default: bool) -> Result<bool, String> {
+    match j.field(key) {
+        None => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(format!("field `{key}` must be a boolean")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_fit_path_request() {
+        let line = r#"{"id": 7, "op": "fit_path", "dataset": {"kind": "synth", "n": 40, "p": 80, "seed": 1}, "lambda": "bh", "q": 0.05, "path_length": 12}"#;
+        let env = Envelope::parse_line(line).unwrap();
+        assert_eq!(env.id, 7);
+        match env.request {
+            Request::FitPath { dataset, model } => {
+                assert_eq!(model.q, 0.05);
+                assert_eq!(model.path_length, 12);
+                assert_eq!(model.screen, "auto");
+                match dataset {
+                    DatasetSpec::Synth { n, p, .. } => {
+                        assert_eq!((n, p), (40, 80));
+                    }
+                    other => panic!("wrong dataset: {other:?}"),
+                }
+            }
+            other => panic!("wrong request: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        assert!(Envelope::parse_line("not json").is_err());
+        assert!(Envelope::parse_line(r#"{"id": 1}"#).is_err());
+        assert!(Envelope::parse_line(r#"{"id": 1, "op": "dance"}"#).is_err());
+        assert!(Envelope::parse_line(
+            r#"{"id": 1, "op": "fit_point", "dataset": {"kind": "synth"}, "sigma_ratio": 2.0}"#
+        )
+        .is_err());
+        assert!(Envelope::parse_line(
+            r#"{"id": 1, "op": "fit_path", "dataset": {"kind": "synth"}, "q": 7.0}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fingerprints_distinguish_specs() {
+        let a = DatasetSpec::parse(
+            &Json::parse(r#"{"kind": "synth", "n": 50, "p": 100, "seed": 1}"#).unwrap(),
+        )
+        .unwrap();
+        let b = DatasetSpec::parse(
+            &Json::parse(r#"{"kind": "synth", "n": 50, "p": 100, "seed": 2}"#).unwrap(),
+        )
+        .unwrap();
+        let a2 = DatasetSpec::parse(
+            &Json::parse(r#"{"kind": "synth", "n": 50, "p": 100, "seed": 1}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a.fingerprint(), a2.fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn inline_fingerprint_tracks_data() {
+        let mk = |v: f64| DatasetSpec::Inline {
+            x: vec![vec![1.0, v], vec![0.5, 1.0]],
+            y: vec![1.0, 0.0],
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        assert_eq!(mk(2.0).fingerprint(), mk(2.0).fingerprint());
+        assert_ne!(mk(2.0).fingerprint(), mk(2.000001).fingerprint());
+    }
+
+    #[test]
+    fn inline_materialize_validates() {
+        let ragged = DatasetSpec::Inline {
+            x: vec![vec![1.0, 2.0], vec![3.0]],
+            y: vec![0.0, 1.0],
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: false,
+        };
+        assert!(ragged.materialize().is_err());
+        let bad_labels = DatasetSpec::Inline {
+            x: vec![vec![1.0], vec![2.0]],
+            y: vec![0.0, 2.0],
+            family: "binomial".to_string(),
+            classes: 3,
+            standardize: false,
+        };
+        assert!(bad_labels.materialize().is_err());
+        let good = DatasetSpec::Inline {
+            x: vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]],
+            y: vec![0.0, 1.0, 1.0],
+            family: "binomial".to_string(),
+            classes: 3,
+            standardize: false,
+        };
+        let m = good.materialize().unwrap();
+        assert_eq!((m.problem.n(), m.problem.p()), (3, 2));
+        assert!(m.transform.is_none());
+    }
+
+    #[test]
+    fn inline_transform_maps_raw_rows_to_model_coordinates() {
+        let rows = [vec![1.0, 10.0], vec![2.0, 20.0], vec![3.0, 60.0]];
+        let spec = DatasetSpec::Inline {
+            x: rows.to_vec(),
+            y: vec![0.1, 0.2, 0.3],
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        let m = spec.materialize().unwrap();
+        let transform = m.transform.expect("standardized inline data records a transform");
+        let x_model = m.problem.x.as_dense().unwrap();
+        // transforming the original raw rows reproduces the fitted design
+        for (i, row) in rows.iter().enumerate() {
+            let got = transform.apply(row);
+            for j in 0..2 {
+                assert!(
+                    (got[j] - x_model.get(i, j)).abs() < 1e-12,
+                    "row {i} col {j}: {} vs {}",
+                    got[j],
+                    x_model.get(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_typed_fields_are_errors_not_defaults() {
+        // q as a string must not silently fit the default model
+        assert!(Envelope::parse_line(
+            r#"{"id": 1, "op": "fit_path", "dataset": {"kind": "synth"}, "q": "0.02"}"#
+        )
+        .is_err());
+        // negative sizes must not saturate to a default
+        assert!(Envelope::parse_line(
+            r#"{"id": 1, "op": "fit_path", "dataset": {"kind": "synth", "n": -5}}"#
+        )
+        .is_err());
+        assert!(Envelope::parse_line(
+            r#"{"id": 1, "op": "fit_path", "dataset": {"kind": "synth"}, "path_length": "100"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn inline_gaussian_centers_y_and_records_intercept() {
+        let spec = DatasetSpec::Inline {
+            x: vec![vec![1.0], vec![2.0], vec![3.0]],
+            y: vec![101.0, 102.0, 103.0],
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        let m = spec.materialize().unwrap();
+        assert!((m.intercept - 102.0).abs() < 1e-12);
+        assert!(crate::linalg::ops::mean(&m.problem.y).abs() < 1e-12);
+        // non-gaussian responses are never shifted
+        let spec2 = DatasetSpec::Inline {
+            x: vec![vec![1.0], vec![2.0]],
+            y: vec![0.0, 1.0],
+            family: "binomial".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        let m2 = spec2.materialize().unwrap();
+        assert_eq!(m2.intercept, 0.0);
+        assert_eq!(m2.problem.y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn point_key_ignores_path_length() {
+        let j = Json::parse(r#"{"lambda": "bh", "q": 0.05, "path_length": 20}"#).unwrap();
+        let a = ModelSpec::parse(&j).unwrap();
+        let j = Json::parse(r#"{"lambda": "bh", "q": 0.05, "path_length": 80}"#).unwrap();
+        let b = ModelSpec::parse(&j).unwrap();
+        assert_ne!(a.key(), b.key());
+        assert_eq!(a.point_key(), b.point_key());
+    }
+
+    #[test]
+    fn parse_errors_keep_request_id() {
+        let (id, msg) = Envelope::parse_line(r#"{"id": 9, "op": "dance"}"#).unwrap_err();
+        assert_eq!(id, 9);
+        assert!(msg.contains("unknown op"));
+        let (id0, _) = Envelope::parse_line("garbage").unwrap_err();
+        assert_eq!(id0, 0);
+    }
+
+    #[test]
+    fn synth_materialize_matches_spec_dimensions() {
+        let spec = DatasetSpec::Synth {
+            n: 30,
+            p: 50,
+            k: 5,
+            rho: 0.2,
+            design: "compound".to_string(),
+            family: "gaussian".to_string(),
+            classes: 3,
+            seed: 9,
+        };
+        let prob = spec.materialize().unwrap().problem;
+        assert_eq!((prob.n(), prob.p()), (30, 50));
+        // deterministic: same spec, same data
+        let again = spec.materialize().unwrap().problem;
+        assert_eq!(prob.y, again.y);
+    }
+
+    #[test]
+    fn responses_echo_id_and_shape() {
+        let ok = ok_response(12, Json::obj(vec![("x", Json::Num(1.0))]));
+        let j = Json::parse(&ok).unwrap();
+        assert_eq!(j.field("id").unwrap().as_usize(), Some(12));
+        assert_eq!(j.field("ok"), Some(&Json::Bool(true)));
+        let err = err_response(3, "boom");
+        let j = Json::parse(&err).unwrap();
+        assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.field("error").unwrap().as_str(), Some("boom"));
+    }
+
+    #[test]
+    fn request_line_round_trips() {
+        let line = request_line(
+            5,
+            "fit_path",
+            vec![("dataset", synth_dataset_json(20, 30, 3, 0.1, "gaussian", 1))],
+        );
+        let env = Envelope::parse_line(&line).unwrap();
+        assert_eq!(env.id, 5);
+        assert!(matches!(env.request, Request::FitPath { .. }));
+    }
+}

@@ -1,0 +1,454 @@
+//! Dataset/model registry with a fingerprinted warm-start cache.
+//!
+//! Datasets are interned by the 64-bit fingerprint of their
+//! [`DatasetSpec`]; each entry holds the materialized [`Problem`] plus two
+//! caches keyed by model spec:
+//!
+//! * fitted paths ([`CachedModel`]) with the final-point
+//!   [`PathSeed`] — repeated requests are cache hits, refined requests on
+//!   the same dataset warm-start from a sibling model's seed;
+//! * single-point states ([`PointState`]) — a `fit_point` stream reuses
+//!   the previous point's coefficients, gradient and screened support via
+//!   the previous-set strategy, which is where screening pays off across
+//!   requests.
+//!
+//! Concurrent requests for the same (dataset, model) are **coalesced**:
+//! the first one fits, the rest block on a [`BuildGate`] and share the
+//! result — the serving analogue of fitting each path point once.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::slope::family::Problem;
+use crate::slope::path::{PathFit, PathSeed};
+
+use super::protocol::{ColumnTransform, DatasetSpec};
+
+/// A fitted path cached with its warm-start state.
+pub struct CachedModel {
+    /// The fitted path.
+    pub fit: PathFit,
+    /// Warm-start state at the final path point.
+    pub seed: PathSeed,
+    /// Strategy the fit actually used.
+    pub strategy: &'static str,
+    /// Wall time of the original fit (seconds).
+    pub wall_time: f64,
+    /// Times this cache entry was served.
+    pub hits: AtomicU64,
+}
+
+/// Warm-start state for a `fit_point` stream.
+pub struct PointState {
+    /// State at the most recently solved point.
+    pub seed: PathSeed,
+    /// σ_max of this (dataset, λ) pair, for resolving relative σ requests.
+    pub sigma_max: f64,
+}
+
+/// One-shot completion gate for coalesced builds.
+pub struct BuildGate {
+    slot: Mutex<(bool, Option<Arc<CachedModel>>)>,
+    ready: Condvar,
+}
+
+impl BuildGate {
+    fn new() -> BuildGate {
+        BuildGate { slot: Mutex::new((false, None)), ready: Condvar::new() }
+    }
+
+    fn complete(&self, model: Option<Arc<CachedModel>>) {
+        let mut slot = self.slot.lock().unwrap();
+        slot.0 = true;
+        slot.1 = model;
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> Option<Arc<CachedModel>> {
+        let mut slot = self.slot.lock().unwrap();
+        while !slot.0 {
+            slot = self.ready.wait(slot).unwrap();
+        }
+        slot.1.clone()
+    }
+}
+
+enum ModelSlot {
+    Building(Arc<BuildGate>),
+    Ready(Arc<CachedModel>),
+}
+
+/// Cap on interned datasets; the oldest is evicted beyond this (inline
+/// client matrices can be large, and a seed-sweeping client would
+/// otherwise grow the server without bound). In-flight requests keep
+/// their `Arc` alive, so eviction never invalidates running work.
+const MAX_DATASETS: usize = 64;
+
+/// Cap on cached models (and point states) per dataset.
+const MAX_MODELS_PER_DATASET: usize = 32;
+
+/// An interned dataset with its model caches.
+pub struct DatasetEntry {
+    /// Spec fingerprint (the intern key).
+    pub fingerprint: u64,
+    /// Human label from the spec.
+    pub label: String,
+    /// The materialized problem (shared with fit jobs).
+    pub problem: Arc<Problem>,
+    /// Raw-row → model-row transform for predictions (inline data that
+    /// was standardized server-side).
+    pub transform: Option<ColumnTransform>,
+    /// Offset added back to predicted scores (gaussian y-centering).
+    pub intercept: f64,
+    models: Mutex<HashMap<String, ModelSlot>>,
+    points: Mutex<HashMap<String, Arc<PointState>>>,
+}
+
+impl DatasetEntry {
+    /// Cached point state for a model key, if any.
+    pub fn point_state(&self, key: &str) -> Option<Arc<PointState>> {
+        self.points.lock().unwrap().get(key).cloned()
+    }
+
+    /// Replace the point state for a model key (bounded: an arbitrary
+    /// older entry is evicted past the per-dataset cap).
+    pub fn store_point_state(&self, key: &str, state: PointState) {
+        let mut points = self.points.lock().unwrap();
+        if !points.contains_key(key) && points.len() >= MAX_MODELS_PER_DATASET {
+            if let Some(evict) = points.keys().next().cloned() {
+                points.remove(&evict);
+            }
+        }
+        points.insert(key.to_string(), Arc::new(state));
+    }
+
+    /// A warm-start seed from any already-fitted model on this dataset
+    /// (used to prime a fit under a *different* model spec — the
+    /// "refined request" case).
+    pub fn any_ready_seed(&self) -> Option<PathSeed> {
+        let models = self.models.lock().unwrap();
+        for slot in models.values() {
+            if let ModelSlot::Ready(m) = slot {
+                return Some(m.seed.clone());
+            }
+        }
+        None
+    }
+
+    /// Number of fully-built cached models.
+    pub fn ready_models(&self) -> usize {
+        self.models
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, ModelSlot::Ready(_)))
+            .count()
+    }
+}
+
+/// How a model was obtained from [`Registry::model`].
+pub enum Fetched {
+    /// Served straight from cache.
+    Hit(Arc<CachedModel>),
+    /// Another request was building it; this one waited and shared.
+    Coalesced(Arc<CachedModel>),
+    /// Built by this caller (and now cached).
+    Built(Arc<CachedModel>),
+}
+
+impl Fetched {
+    /// The model, regardless of provenance.
+    pub fn model(&self) -> &Arc<CachedModel> {
+        match self {
+            Fetched::Hit(m) | Fetched::Coalesced(m) | Fetched::Built(m) => m,
+        }
+    }
+
+    /// Provenance label for responses/metrics.
+    pub fn source(&self) -> &'static str {
+        match self {
+            Fetched::Hit(_) => "cache",
+            Fetched::Coalesced(_) => "coalesced",
+            Fetched::Built(_) => "fit",
+        }
+    }
+}
+
+/// Interned datasets plus insertion order for eviction.
+#[derive(Default)]
+struct DatasetMap {
+    by_fp: HashMap<u64, Arc<DatasetEntry>>,
+    order: VecDeque<u64>,
+}
+
+/// The server-wide registry.
+pub struct Registry {
+    datasets: Mutex<DatasetMap>,
+    cache_enabled: bool,
+}
+
+impl Registry {
+    /// New registry; `cache_enabled = false` turns every lookup into a
+    /// rebuild (the cold baseline the throughput bench compares against).
+    pub fn new(cache_enabled: bool) -> Registry {
+        Registry { datasets: Mutex::new(DatasetMap::default()), cache_enabled }
+    }
+
+    /// Whether result caching is on.
+    pub fn cache_enabled(&self) -> bool {
+        self.cache_enabled
+    }
+
+    /// Intern a dataset: materialize it on first sight, reuse afterwards.
+    /// Past [`MAX_DATASETS`], the oldest interned dataset is evicted.
+    pub fn dataset(&self, spec: &DatasetSpec) -> Result<Arc<DatasetEntry>, String> {
+        let fp = spec.fingerprint();
+        if let Some(entry) = self.datasets.lock().unwrap().by_fp.get(&fp) {
+            return Ok(Arc::clone(entry));
+        }
+        // Materialize outside the lock — generation can be slow, and two
+        // racing materializations of the same spec are identical anyway.
+        let materialized = spec.materialize()?;
+        let entry = Arc::new(DatasetEntry {
+            fingerprint: fp,
+            label: spec.label(),
+            problem: Arc::new(materialized.problem),
+            transform: materialized.transform,
+            intercept: materialized.intercept,
+            models: Mutex::new(HashMap::new()),
+            points: Mutex::new(HashMap::new()),
+        });
+        let mut map = self.datasets.lock().unwrap();
+        if !map.by_fp.contains_key(&fp) {
+            map.by_fp.insert(fp, entry);
+            map.order.push_back(fp);
+            while map.by_fp.len() > MAX_DATASETS {
+                if let Some(oldest) = map.order.pop_front() {
+                    map.by_fp.remove(&oldest);
+                } else {
+                    break;
+                }
+            }
+        }
+        Ok(Arc::clone(map.by_fp.get(&fp).expect("just interned")))
+    }
+
+    /// Look up a fitted model, building (at most once, concurrently) via
+    /// `build` on a miss. `build` runs on the calling thread; concurrent
+    /// callers for the same key wait on the gate and share the result.
+    pub fn model(
+        &self,
+        entry: &DatasetEntry,
+        key: &str,
+        build: impl FnOnce() -> Result<CachedModel, String>,
+    ) -> Result<Fetched, String> {
+        if !self.cache_enabled {
+            return build().map(|m| Fetched::Built(Arc::new(m)));
+        }
+        let gate = {
+            let mut models = entry.models.lock().unwrap();
+            match models.get(key) {
+                Some(ModelSlot::Ready(m)) => {
+                    m.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Fetched::Hit(Arc::clone(m)));
+                }
+                Some(ModelSlot::Building(g)) => {
+                    let g = Arc::clone(g);
+                    drop(models);
+                    return match g.wait() {
+                        Some(m) => Ok(Fetched::Coalesced(m)),
+                        None => Err("coalesced fit failed; retry".to_string()),
+                    };
+                }
+                None => {
+                    let g = Arc::new(BuildGate::new());
+                    models.insert(key.to_string(), ModelSlot::Building(Arc::clone(&g)));
+                    g
+                }
+            }
+        };
+        match build() {
+            Ok(model) => {
+                let model = Arc::new(model);
+                {
+                    let mut models = entry.models.lock().unwrap();
+                    // Bounded cache: past the cap, evict an arbitrary *ready*
+                    // sibling (never this key, never an in-flight Building
+                    // slot — peers are parked on its gate). Our own slot is
+                    // already in the map as Building, so count it.
+                    if models.len() > MAX_MODELS_PER_DATASET {
+                        let evict = models
+                            .iter()
+                            .find(|(k, slot)| {
+                                k.as_str() != key && matches!(slot, ModelSlot::Ready(_))
+                            })
+                            .map(|(k, _)| k.clone());
+                        if let Some(evict) = evict {
+                            models.remove(&evict);
+                        }
+                    }
+                    models.insert(key.to_string(), ModelSlot::Ready(Arc::clone(&model)));
+                }
+                gate.complete(Some(Arc::clone(&model)));
+                Ok(Fetched::Built(model))
+            }
+            Err(e) => {
+                entry.models.lock().unwrap().remove(key);
+                gate.complete(None);
+                Err(e)
+            }
+        }
+    }
+
+    /// `(datasets, ready models)` across the registry.
+    pub fn counts(&self) -> (usize, usize) {
+        let datasets = self.datasets.lock().unwrap();
+        let models = datasets.by_fp.values().map(|e| e.ready_models()).sum();
+        (datasets.by_fp.len(), models)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slope::path::{fit_path, NativeGradient, PathOptions};
+    use crate::slope::lambda::{LambdaKind, PathConfig};
+    use std::sync::atomic::AtomicUsize;
+
+    fn spec(seed: u64) -> DatasetSpec {
+        DatasetSpec::Synth {
+            n: 25,
+            p: 40,
+            k: 3,
+            rho: 0.1,
+            design: "compound".to_string(),
+            family: "gaussian".to_string(),
+            classes: 3,
+            seed,
+        }
+    }
+
+    fn build_model(entry: &DatasetEntry) -> CachedModel {
+        let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+        cfg.length = 6;
+        let opts = PathOptions::new(cfg);
+        let prob = entry.problem.as_ref();
+        let fit = fit_path(prob, &opts, &NativeGradient(prob));
+        let seed = fit.seed();
+        let wall = fit.wall_time;
+        CachedModel { fit, seed, strategy: "strong", wall_time: wall, hits: AtomicU64::new(0) }
+    }
+
+    #[test]
+    fn datasets_intern_by_fingerprint() {
+        let reg = Registry::new(true);
+        let a = reg.dataset(&spec(1)).unwrap();
+        let b = reg.dataset(&spec(1)).unwrap();
+        let c = reg.dataset(&spec(2)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(reg.counts().0, 2);
+    }
+
+    #[test]
+    fn model_cache_hit_and_miss() {
+        let reg = Registry::new(true);
+        let entry = reg.dataset(&spec(3)).unwrap();
+        let built = reg.model(&entry, "k1", || Ok(build_model(&entry))).unwrap();
+        assert_eq!(built.source(), "fit");
+        let hit = reg.model(&entry, "k1", || panic!("must not rebuild")).unwrap();
+        assert_eq!(hit.source(), "cache");
+        assert_eq!(hit.model().hits.load(Ordering::Relaxed), 1);
+        assert_eq!(reg.counts(), (1, 1));
+    }
+
+    #[test]
+    fn cache_disabled_always_rebuilds() {
+        let reg = Registry::new(false);
+        let entry = reg.dataset(&spec(4)).unwrap();
+        let n_builds = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let f = reg
+                .model(&entry, "k", || {
+                    n_builds.fetch_add(1, Ordering::SeqCst);
+                    Ok(build_model(&entry))
+                })
+                .unwrap();
+            assert_eq!(f.source(), "fit");
+        }
+        assert_eq!(n_builds.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn failed_build_clears_slot() {
+        let reg = Registry::new(true);
+        let entry = reg.dataset(&spec(5)).unwrap();
+        assert!(reg.model(&entry, "k", || Err("nope".to_string())).is_err());
+        // a later request can build successfully
+        let ok = reg.model(&entry, "k", || Ok(build_model(&entry))).unwrap();
+        assert_eq!(ok.source(), "fit");
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let reg = Arc::new(Registry::new(true));
+        let entry = reg.dataset(&spec(6)).unwrap();
+        let builds = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..6 {
+                let reg = Arc::clone(&reg);
+                let entry = Arc::clone(&entry);
+                let builds = Arc::clone(&builds);
+                scope.spawn(move || {
+                    let f = reg
+                        .model(&entry, "shared", || {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            // widen the race window so peers land on the gate
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok(build_model(&entry))
+                        })
+                        .unwrap();
+                    assert!(f.model().fit.steps.len() > 1);
+                });
+            }
+        });
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one build must run");
+    }
+
+    #[test]
+    fn dataset_cache_is_bounded() {
+        let reg = Registry::new(true);
+        let last = MAX_DATASETS as u64 + 4;
+        for seed in 0..=last {
+            reg.dataset(&spec(seed)).unwrap();
+        }
+        let (datasets, _) = reg.counts();
+        assert!(datasets <= MAX_DATASETS, "unbounded registry: {datasets}");
+        // the newest spec is still interned under its fingerprint
+        let again = reg.dataset(&spec(last)).unwrap();
+        assert_eq!(again.fingerprint, spec(last).fingerprint());
+    }
+
+    #[test]
+    fn point_state_round_trip() {
+        let reg = Registry::new(true);
+        let entry = reg.dataset(&spec(7)).unwrap();
+        assert!(entry.point_state("m").is_none());
+        let model = build_model(&entry);
+        entry.store_point_state("m", PointState { seed: model.seed.clone(), sigma_max: 1.5 });
+        let st = entry.point_state("m").unwrap();
+        assert_eq!(st.sigma_max, 1.5);
+        assert_eq!(st.seed.beta.len(), entry.problem.p_total());
+    }
+
+    #[test]
+    fn sibling_seed_available_after_first_fit() {
+        let reg = Registry::new(true);
+        let entry = reg.dataset(&spec(8)).unwrap();
+        assert!(entry.any_ready_seed().is_none());
+        reg.model(&entry, "a", || Ok(build_model(&entry))).unwrap();
+        let seed = entry.any_ready_seed().unwrap();
+        assert_eq!(seed.beta.len(), entry.problem.p_total());
+    }
+}

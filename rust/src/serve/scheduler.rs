@@ -1,0 +1,191 @@
+//! Job dispatch for the serve layer: a bounded admission queue with
+//! backpressure in front of the [`crate::pool::WorkerPool`], plus the
+//! per-job screening-strategy policy.
+//!
+//! Request threads (one per connection) call [`Scheduler::run`] and block
+//! for their result; at most `capacity` jobs are admitted at once, so a
+//! burst of heavy fits queues here instead of oversubscribing the pool.
+//! Panics inside jobs are caught and surfaced as errors — a malformed
+//! problem must produce an error response, not a dead worker.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::pool::WorkerPool;
+use crate::slope::path::Strategy;
+
+/// Admission-gate state: a ticket queue makes waiting strictly FIFO —
+/// under sustained load the longest-parked request is always admitted
+/// next (bare condvar wakeups carry no ordering guarantee).
+#[derive(Default)]
+struct GateState {
+    admitted: usize,
+    next_ticket: u64,
+    now_serving: u64,
+}
+
+/// Bounded-queue dispatcher over a worker pool.
+pub struct Scheduler {
+    pool: WorkerPool,
+    gate: Arc<(Mutex<GateState>, Condvar)>,
+    capacity: usize,
+}
+
+impl Scheduler {
+    /// `threads = 0` sizes the pool to the machine; `capacity` bounds the
+    /// number of admitted (queued + running) jobs.
+    pub fn new(threads: usize, capacity: usize) -> Scheduler {
+        let pool = if threads == 0 {
+            WorkerPool::with_default_size()
+        } else {
+            WorkerPool::new(threads)
+        };
+        Scheduler {
+            pool,
+            gate: Arc::new((Mutex::new(GateState::default()), Condvar::new())),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Worker threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Admission capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Currently admitted jobs.
+    pub fn in_flight(&self) -> usize {
+        self.gate.0.lock().unwrap().admitted
+    }
+
+    /// Run `f` on the pool and block for its result. Applies backpressure
+    /// (blocks while `capacity` jobs are admitted; admission is FIFO by
+    /// arrival) and converts panics into `Err`.
+    pub fn run<T, F>(&self, f: F) -> Result<T, String>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        {
+            let mut state = self.gate.0.lock().unwrap();
+            let ticket = state.next_ticket;
+            state.next_ticket += 1;
+            while state.now_serving != ticket || state.admitted >= self.capacity {
+                state = self.gate.1.wait(state).unwrap();
+            }
+            state.admitted += 1;
+            state.now_serving += 1;
+            // Wake the next ticket holder (it may be admissible already).
+            self.gate.1.notify_all();
+        }
+        let (tx, rx) = mpsc::channel();
+        let gate = Arc::clone(&self.gate);
+        self.pool.submit(move || {
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+            let _ = tx.send(outcome);
+            let mut state = gate.0.lock().unwrap();
+            state.admitted -= 1;
+            gate.1.notify_all();
+        });
+        match rx.recv() {
+            Ok(Ok(value)) => Ok(value),
+            Ok(Err(panic)) => {
+                let msg = if let Some(s) = panic.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = panic.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "unknown panic".to_string()
+                };
+                Err(format!("job panicked: {msg}"))
+            }
+            Err(_) => Err("worker dropped the job result".to_string()),
+        }
+    }
+}
+
+/// Screening-strategy policy: explicit request wins; `auto` uses the
+/// previous-set algorithm (Algorithm 4) when a cached warm-start seed
+/// exists — the previous support is then a good guess and the strong set
+/// only serves as the first KKT check — and the strong-set algorithm
+/// (Algorithm 3) on cold fits.
+pub fn choose_strategy(requested: &str, warm: bool) -> Result<Strategy, String> {
+    Ok(match requested {
+        "none" => Strategy::NoScreening,
+        "strong" => Strategy::StrongSet,
+        "previous" => Strategy::PreviousSet,
+        "auto" | "" => {
+            if warm {
+                Strategy::PreviousSet
+            } else {
+                Strategy::StrongSet
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown screening strategy `{other}` (expected auto|none|strong|previous)"
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_returns_results() {
+        let sched = Scheduler::new(2, 4);
+        assert_eq!(sched.run(|| 2 + 3).unwrap(), 5);
+        assert_eq!(sched.in_flight(), 0);
+    }
+
+    #[test]
+    fn catches_panics() {
+        let sched = Scheduler::new(1, 2);
+        let err = sched.run(|| -> usize { panic!("kaboom {}", 7) }).unwrap_err();
+        assert!(err.contains("kaboom"), "{err}");
+        // the pool survives the panic
+        assert_eq!(sched.run(|| 1usize).unwrap(), 1);
+    }
+
+    #[test]
+    fn backpressure_bounds_admission() {
+        let sched = Arc::new(Scheduler::new(2, 2));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let sched = Arc::clone(&sched);
+                let peak = Arc::clone(&peak);
+                let live = Arc::clone(&live);
+                scope.spawn(move || {
+                    sched
+                        .run(move || {
+                            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            live.fetch_sub(1, Ordering::SeqCst);
+                        })
+                        .unwrap();
+                });
+            }
+        });
+        assert!(peak.load(Ordering::SeqCst) <= 2, "admission cap exceeded");
+    }
+
+    #[test]
+    fn strategy_policy() {
+        assert_eq!(choose_strategy("auto", false).unwrap(), Strategy::StrongSet);
+        assert_eq!(choose_strategy("auto", true).unwrap(), Strategy::PreviousSet);
+        assert_eq!(choose_strategy("none", true).unwrap(), Strategy::NoScreening);
+        assert_eq!(choose_strategy("strong", true).unwrap(), Strategy::StrongSet);
+        assert_eq!(choose_strategy("previous", false).unwrap(), Strategy::PreviousSet);
+        assert!(choose_strategy("sideways", false).is_err());
+    }
+}

@@ -1,0 +1,721 @@
+//! The SLOPE fit server: request handling over newline-delimited JSON,
+//! with stdin/stdout and Unix-domain-socket transports.
+//!
+//! Request handling is synchronous per connection; heavy work (path and
+//! point fits) is dispatched through the [`Scheduler`] onto the worker
+//! pool, so concurrent connections share the machine under backpressure
+//! while the registry coalesces duplicate fits and serves cache hits
+//! without touching the pool at all.
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::jsonio::Json;
+use crate::slope::family::{sigmoid, Family};
+use crate::slope::path::{fit_path_seeded, fit_point, zero_seed, NativeGradient, PathSeed};
+
+use super::metrics::Metrics;
+use super::protocol::{self, DatasetSpec, Envelope, ModelSpec, Request};
+use super::registry::{CachedModel, DatasetEntry, Fetched, PointState, Registry};
+use super::scheduler::{choose_strategy, Scheduler};
+
+/// Server construction parameters.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Worker threads (0 = machine default).
+    pub threads: usize,
+    /// Admission-queue capacity (backpressure bound).
+    pub queue: usize,
+    /// Enable the warm-start/model cache (off = cold baseline).
+    pub cache: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { threads: 0, queue: 64, cache: true }
+    }
+}
+
+/// A running SLOPE fit server (transport-independent core).
+pub struct Server {
+    registry: Registry,
+    sched: Scheduler,
+    /// Request/latency metrics, served by the `stats` op.
+    pub metrics: Metrics,
+    shutdown: AtomicBool,
+}
+
+impl Server {
+    /// Build a server; spawns the worker pool immediately.
+    pub fn new(cfg: ServerConfig) -> Server {
+        Server {
+            registry: Registry::new(cfg.cache),
+            sched: Scheduler::new(cfg.threads, cfg.queue),
+            metrics: Metrics::new(),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// True once a `shutdown` request has been handled.
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Handle one request line; returns the response line (no newline).
+    pub fn handle_line(&self, line: &str) -> String {
+        self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        match Envelope::parse_line(line) {
+            Err((id, e)) => {
+                self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                protocol::err_response(id, &e)
+            }
+            Ok(env) => {
+                let op = op_name(&env.request);
+                match self.dispatch(env.request) {
+                    Ok(result) => {
+                        self.metrics.record(op, t0.elapsed().as_secs_f64());
+                        protocol::ok_response(env.id, result)
+                    }
+                    Err(e) => {
+                        self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                        protocol::err_response(env.id, &e)
+                    }
+                }
+            }
+        }
+    }
+
+    fn dispatch(&self, request: Request) -> Result<Json, String> {
+        match request {
+            Request::FitPath { dataset, model } => self.do_fit_path(&dataset, &model),
+            Request::FitPoint { dataset, model, sigma_ratio } => {
+                self.do_fit_point(&dataset, &model, sigma_ratio)
+            }
+            Request::Predict { dataset, model, x, step } => {
+                self.do_predict(&dataset, &model, &x, step)
+            }
+            Request::Stats => Ok(self.do_stats()),
+            Request::Shutdown => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                Ok(Json::obj(vec![("shutting_down", Json::Bool(true))]))
+            }
+        }
+    }
+
+    /// Fetch the fitted path for (dataset, model): cache hit, coalesced
+    /// wait, or a scheduled fit (warm-started from a sibling model's seed
+    /// when one exists).
+    fn fitted_model(
+        &self,
+        entry: &Arc<DatasetEntry>,
+        model: &ModelSpec,
+    ) -> Result<(Arc<CachedModel>, &'static str), String> {
+        let key = model.key();
+        let fetched = self.registry.model(entry, &key, || {
+            let warm_seed = entry.any_ready_seed();
+            let warm = warm_seed.is_some();
+            let strategy = choose_strategy(&model.screen, warm)?;
+            let opts = model.path_options(entry.problem.as_ref())?.with_strategy(strategy);
+            let prob = Arc::clone(&entry.problem);
+            let fit = self.sched.run(move || {
+                let gradient = NativeGradient(prob.as_ref());
+                fit_path_seeded(prob.as_ref(), &opts, &gradient, warm_seed.as_ref())
+            })?;
+            if warm {
+                self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.metrics.counters.cold_fits.fetch_add(1, Ordering::Relaxed);
+            }
+            let seed = fit.seed();
+            let wall_time = fit.wall_time;
+            Ok(CachedModel {
+                fit,
+                seed,
+                strategy: strategy.name(),
+                wall_time,
+                hits: std::sync::atomic::AtomicU64::new(0),
+            })
+        })?;
+        match &fetched {
+            Fetched::Hit(_) => {
+                self.metrics.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
+            }
+            Fetched::Coalesced(_) => {
+                self.metrics.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+            }
+            Fetched::Built(_) => {}
+        }
+        let source = fetched.source();
+        Ok((Arc::clone(fetched.model()), source))
+    }
+
+    fn do_fit_path(&self, dataset: &DatasetSpec, model: &ModelSpec) -> Result<Json, String> {
+        let entry = self.registry.dataset(dataset)?;
+        let (m, source) = self.fitted_model(&entry, model)?;
+        let fit = &m.fit;
+        Ok(Json::obj(vec![
+            ("dataset", Json::Str(entry.label.clone())),
+            ("fingerprint", Json::Str(format!("{:016x}", entry.fingerprint))),
+            ("model_key", Json::Str(model.key())),
+            ("source", Json::Str(source.to_string())),
+            ("strategy", Json::Str(m.strategy.to_string())),
+            ("steps", Json::Num(fit.steps.len() as f64)),
+            ("sigmas", Json::nums(&fit.sigmas)),
+            (
+                "n_active",
+                Json::Arr(fit.steps.iter().map(|s| Json::Num(s.n_active as f64)).collect()),
+            ),
+            (
+                "n_screened",
+                Json::Arr(
+                    fit.steps.iter().map(|s| Json::Num(s.n_screened_rule as f64)).collect(),
+                ),
+            ),
+            (
+                "dev_ratio",
+                Json::nums(&fit.steps.iter().map(|s| s.dev_ratio).collect::<Vec<f64>>()),
+            ),
+            ("total_violations", Json::Num(fit.total_violations as f64)),
+            ("fit_wall_s", Json::Num(m.wall_time)),
+            (
+                "stopped_early",
+                match fit.stopped_early {
+                    Some(reason) => Json::Str(reason.to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ]))
+    }
+
+    fn do_fit_point(
+        &self,
+        dataset: &DatasetSpec,
+        model: &ModelSpec,
+        sigma_ratio: f64,
+    ) -> Result<Json, String> {
+        let entry = self.registry.dataset(dataset)?;
+        let key = model.point_key();
+        let prior = entry.point_state(&key);
+        let warm = prior.is_some();
+        let strategy = choose_strategy(&model.screen, warm)?;
+        let opts = model.path_options(entry.problem.as_ref())?.with_strategy(strategy);
+        let prob = Arc::clone(&entry.problem);
+        let (point, sigma_max) = self.sched.run(move || {
+            let gradient = NativeGradient(prob.as_ref());
+            let (seed, sigma_max): (PathSeed, f64) = match prior {
+                Some(state) => (state.seed.clone(), state.sigma_max),
+                None => {
+                    let zero = zero_seed(prob.as_ref(), &opts, &gradient);
+                    let smax = zero.sigma;
+                    (zero, smax)
+                }
+            };
+            let point = fit_point(prob.as_ref(), &opts, &gradient, sigma_max * sigma_ratio, &seed);
+            (point, sigma_max)
+        })?;
+        if warm {
+            self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.counters.cold_fits.fetch_add(1, Ordering::Relaxed);
+        }
+        if self.registry.cache_enabled() {
+            entry.store_point_state(&key, PointState { seed: point.seed(), sigma_max });
+        }
+        let nonzeros: Vec<Json> = point
+            .beta
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != 0.0)
+            .take(100)
+            .map(|(i, &v)| Json::Arr(vec![Json::Num(i as f64), Json::Num(v)]))
+            .collect();
+        Ok(Json::obj(vec![
+            ("dataset", Json::Str(entry.label.clone())),
+            ("sigma", Json::Num(point.sigma)),
+            ("sigma_max", Json::Num(sigma_max)),
+            ("warm", Json::Bool(warm)),
+            ("strategy", Json::Str(strategy.name().to_string())),
+            ("n_active", Json::Num(point.n_active as f64)),
+            ("n_screened", Json::Num(point.n_screened_rule as f64)),
+            ("n_fitted", Json::Num(point.n_fitted as f64)),
+            ("violations", Json::Num(point.violations as f64)),
+            ("solver_iterations", Json::Num(point.solver_iterations as f64)),
+            ("deviance", Json::Num(point.deviance)),
+            ("dev_ratio", Json::Num(point.dev_ratio)),
+            ("wall_s", Json::Num(point.wall_time)),
+            ("nonzeros", Json::Arr(nonzeros)),
+        ]))
+    }
+
+    fn do_predict(
+        &self,
+        dataset: &DatasetSpec,
+        model: &ModelSpec,
+        x: &[Vec<f64>],
+        step: Option<usize>,
+    ) -> Result<Json, String> {
+        let entry = self.registry.dataset(dataset)?;
+        let (m, source) = self.fitted_model(&entry, model)?;
+        let prob = entry.problem.as_ref();
+        let p = prob.p();
+        let classes = prob.family.n_classes();
+        let n_steps = m.fit.betas.len();
+        let step = step.unwrap_or(n_steps.saturating_sub(1));
+        if step >= n_steps {
+            return Err(format!("step {step} out of range (path has {n_steps} steps)"));
+        }
+        for (i, row) in x.iter().enumerate() {
+            if row.len() != p {
+                return Err(format!("prediction row {i} has {} features, expected {p}", row.len()));
+            }
+        }
+        let beta = m.fit.beta_at(step, prob.p_total());
+        let mut eta_rows = Vec::with_capacity(x.len());
+        let mut prob_rows = Vec::with_capacity(x.len());
+        for row in x {
+            // Map raw client rows into the model's coordinates when the
+            // design was standardized server-side (inline data).
+            let transformed;
+            let model_row: &[f64] = match &entry.transform {
+                Some(t) => {
+                    transformed = t.apply(row);
+                    transformed.as_slice()
+                }
+                None => row.as_slice(),
+            };
+            let mut scores = Vec::with_capacity(classes);
+            for l in 0..classes {
+                let base = l * p;
+                // entry.intercept restores the y-centering removed before
+                // a gaussian fit (0 for every other dataset kind).
+                let mut s = entry.intercept;
+                for (j, &v) in model_row.iter().enumerate() {
+                    s += v * beta[base + j];
+                }
+                scores.push(s);
+            }
+            if prob.family == Family::Binomial {
+                prob_rows.push(Json::Num(sigmoid(scores[0])));
+            }
+            eta_rows.push(Json::nums(&scores));
+        }
+        self.metrics
+            .counters
+            .predictions
+            .fetch_add(x.len() as u64, Ordering::Relaxed);
+        let mut fields = vec![
+            ("dataset", Json::Str(entry.label.clone())),
+            ("source", Json::Str(source.to_string())),
+            ("step", Json::Num(step as f64)),
+            ("sigma", Json::Num(m.fit.sigmas[step])),
+            ("eta", Json::Arr(eta_rows)),
+        ];
+        if prob.family == Family::Binomial {
+            fields.push(("prob", Json::Arr(prob_rows)));
+        }
+        Ok(Json::obj(fields))
+    }
+
+    fn do_stats(&self) -> Json {
+        let (datasets, models) = self.registry.counts();
+        Json::obj(vec![
+            (
+                "server",
+                Json::obj(vec![
+                    ("threads", Json::Num(self.sched.threads() as f64)),
+                    ("queue_capacity", Json::Num(self.sched.capacity() as f64)),
+                    ("in_flight", Json::Num(self.sched.in_flight() as f64)),
+                    ("cache", Json::Bool(self.registry.cache_enabled())),
+                ]),
+            ),
+            (
+                "registry",
+                Json::obj(vec![
+                    ("datasets", Json::Num(datasets as f64)),
+                    ("models", Json::Num(models as f64)),
+                ]),
+            ),
+            ("metrics", self.metrics.snapshot()),
+        ])
+    }
+
+    /// Serve newline-delimited requests from `reader`, writing responses
+    /// to `writer` — the stdin/stdout transport, also used per-connection
+    /// by the socket transport and directly by tests.
+    pub fn serve_lines<R: BufRead, W: Write>(&self, reader: R, mut writer: W) -> std::io::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let response = self.handle_line(trimmed);
+            writer.write_all(response.as_bytes())?;
+            writer.write_all(b"\n")?;
+            writer.flush()?;
+            if self.is_shutdown() {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve over a Unix-domain socket, one handler thread per
+    /// connection, until a `shutdown` request arrives. Removes any stale
+    /// socket file first and cleans up on exit; open connections are
+    /// actively closed on shutdown so idle clients cannot wedge the
+    /// server in its handler join.
+    #[cfg(unix)]
+    pub fn serve_unix(self: &Arc<Self>, path: &std::path::Path) -> std::io::Result<()> {
+        use std::collections::HashMap;
+        use std::os::unix::net::{UnixListener, UnixStream};
+        let _ = std::fs::remove_file(path);
+        let listener = UnixListener::bind(path)?;
+        listener.set_nonblocking(true)?;
+        // Live connection registry: each handler removes its own entry on
+        // exit (closing the duplicated fd), and finished JoinHandles are
+        // pruned each loop turn — a long-running server does not
+        // accumulate fds or handles from short-lived connections.
+        let live: Arc<Mutex<HashMap<u64, UnixStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut next_id = 0u64;
+        while !self.is_shutdown() {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    let _ = stream.set_nonblocking(false);
+                    match stream.try_clone() {
+                        Ok(tracked) => {
+                            let id = next_id;
+                            next_id += 1;
+                            live.lock().unwrap().insert(id, tracked);
+                            let server = Arc::clone(self);
+                            let live_for_handler = Arc::clone(&live);
+                            handlers.push(std::thread::spawn(move || {
+                                if let Ok(s) = stream.try_clone() {
+                                    let _ = server.serve_lines(BufReader::new(s), stream);
+                                }
+                                live_for_handler.lock().unwrap().remove(&id);
+                            }));
+                        }
+                        // Can't register the connection for shutdown
+                        // cleanup (fd pressure): refuse it rather than
+                        // spawn a handler the join could wait on forever.
+                        Err(_) => drop(stream),
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(e) => {
+                    let _ = std::fs::remove_file(path);
+                    return Err(e);
+                }
+            }
+            handlers.retain(|h| !h.is_finished());
+        }
+        // Give the handler that received `shutdown` a moment to flush its
+        // response to the wire, then unblock handlers still parked in a
+        // read on an idle connection: without the close, joining would
+        // wait forever on clients that never hang up.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        for stream in live.lock().unwrap().values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(path);
+        Ok(())
+    }
+}
+
+fn op_name(request: &Request) -> &'static str {
+    match request {
+        Request::FitPath { .. } => "fit_path",
+        Request::FitPoint { .. } => "fit_point",
+        Request::Predict { .. } => "predict",
+        Request::Stats => "stats",
+        Request::Shutdown => "shutdown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server() -> Server {
+        Server::new(ServerConfig { threads: 2, queue: 8, cache: true })
+    }
+
+    fn parse_ok(response: &str) -> Json {
+        let j = Json::parse(response).unwrap();
+        assert_eq!(
+            j.field("ok"),
+            Some(&Json::Bool(true)),
+            "expected success, got: {response}"
+        );
+        j.field("result").unwrap().clone()
+    }
+
+    fn fit_path_line(id: u64, seed: u64) -> String {
+        protocol::request_line(
+            id,
+            "fit_path",
+            vec![
+                ("dataset", protocol::synth_dataset_json(30, 60, 4, 0.2, "gaussian", seed)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(8.0)),
+            ],
+        )
+    }
+
+    #[test]
+    fn fit_path_cold_then_cached() {
+        let srv = server();
+        let first = parse_ok(&srv.handle_line(&fit_path_line(1, 5)));
+        assert_eq!(first.field("source").unwrap().as_str(), Some("fit"));
+        assert_eq!(first.field("strategy").unwrap().as_str(), Some("strong"));
+        assert!(first.field("steps").unwrap().as_usize().unwrap() >= 2);
+        let second = parse_ok(&srv.handle_line(&fit_path_line(2, 5)));
+        assert_eq!(second.field("source").unwrap().as_str(), Some("cache"));
+        assert_eq!(
+            first.field("sigmas").unwrap().items(),
+            second.field("sigmas").unwrap().items()
+        );
+        assert_eq!(
+            srv.metrics.counters.cache_hits.load(Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn sibling_model_fit_is_warm() {
+        let srv = server();
+        parse_ok(&srv.handle_line(&fit_path_line(1, 6)));
+        // same dataset, different path length => new model key, warm seed
+        let refined = protocol::request_line(
+            2,
+            "fit_path",
+            vec![
+                ("dataset", protocol::synth_dataset_json(30, 60, 4, 0.2, "gaussian", 6)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(12.0)),
+            ],
+        );
+        let result = parse_ok(&srv.handle_line(&refined));
+        assert_eq!(result.field("source").unwrap().as_str(), Some("fit"));
+        assert_eq!(result.field("strategy").unwrap().as_str(), Some("previous"));
+        assert_eq!(srv.metrics.counters.warm_fits.load(Ordering::Relaxed), 1);
+    }
+
+    fn fit_point_line(id: u64, seed: u64, ratio: f64) -> String {
+        protocol::request_line(
+            id,
+            "fit_point",
+            vec![
+                ("dataset", protocol::synth_dataset_json(30, 80, 4, 0.1, "gaussian", seed)),
+                ("q", Json::Num(0.1)),
+                ("sigma_ratio", Json::Num(ratio)),
+            ],
+        )
+    }
+
+    #[test]
+    fn fit_point_warm_start_cycle() {
+        let srv = server();
+        let cold = parse_ok(&srv.handle_line(&fit_point_line(1, 7, 0.4)));
+        assert_eq!(cold.field("warm"), Some(&Json::Bool(false)));
+        assert_eq!(cold.field("strategy").unwrap().as_str(), Some("strong"));
+        let cold_iters = cold.field("solver_iterations").unwrap().as_usize().unwrap();
+        // repeat at the same σ: warm, previous-set, and an immediate solve
+        let warm = parse_ok(&srv.handle_line(&fit_point_line(2, 7, 0.4)));
+        assert_eq!(warm.field("warm"), Some(&Json::Bool(true)));
+        assert_eq!(warm.field("strategy").unwrap().as_str(), Some("previous"));
+        let warm_iters = warm.field("solver_iterations").unwrap().as_usize().unwrap();
+        assert!(warm_iters <= cold_iters, "warm {warm_iters} vs cold {cold_iters}");
+        assert_eq!(
+            cold.field("n_active").unwrap().as_usize(),
+            warm.field("n_active").unwrap().as_usize()
+        );
+        // a refined request (nearby σ) stays warm
+        let refined = parse_ok(&srv.handle_line(&fit_point_line(3, 7, 0.35)));
+        assert_eq!(refined.field("warm"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn predict_scores_rows() {
+        let srv = server();
+        let p = 40;
+        let rows: Vec<Json> = (0..3)
+            .map(|i| Json::nums(&(0..p).map(|j| ((i + j) % 5) as f64 * 0.1).collect::<Vec<f64>>()))
+            .collect();
+        let line = protocol::request_line(
+            9,
+            "predict",
+            vec![
+                ("dataset", protocol::synth_dataset_json(25, p, 3, 0.0, "gaussian", 11)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(6.0)),
+                ("x", Json::Arr(rows)),
+            ],
+        );
+        let result = parse_ok(&srv.handle_line(&line));
+        assert_eq!(result.field("eta").unwrap().items().len(), 3);
+        assert_eq!(srv.metrics.counters.predictions.load(Ordering::Relaxed), 3);
+        // bad row width is a clean error
+        let bad = protocol::request_line(
+            10,
+            "predict",
+            vec![
+                ("dataset", protocol::synth_dataset_json(25, p, 3, 0.0, "gaussian", 11)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(6.0)),
+                ("x", Json::Arr(vec![Json::nums(&[1.0, 2.0])])),
+            ],
+        );
+        let resp = Json::parse(&srv.handle_line(&bad)).unwrap();
+        assert_eq!(resp.field("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn predict_on_inline_dataset_uses_model_coordinates() {
+        let srv = server();
+        // Raw features on wildly different scales: feature 0 ≈ 1000,
+        // feature 1 ≈ 0.01 — both perfectly correlated with y.
+        let x: Vec<Vec<f64>> = (0..12).map(|i| vec![1000.0 + i as f64, 0.001 * i as f64]).collect();
+        let y: Vec<f64> = (0..12).map(|i| 2.0 * i as f64 - 11.0).collect();
+        let dataset = Json::obj(vec![
+            ("kind", Json::Str("inline".to_string())),
+            ("x", Json::Arr(x.iter().map(|r| Json::nums(r)).collect())),
+            ("y", Json::nums(&y)),
+            ("family", Json::Str("gaussian".to_string())),
+        ]);
+        let line = protocol::request_line(
+            1,
+            "predict",
+            vec![
+                ("dataset", dataset),
+                ("lambda", Json::Str("lasso".to_string())),
+                ("path_length", Json::Num(10.0)),
+                ("x", Json::Arr(vec![Json::nums(&x[0]), Json::nums(&x[11])])),
+            ],
+        );
+        let result = parse_ok(&srv.handle_line(&line));
+        let eta = result.field("eta").unwrap().items();
+        assert_eq!(eta.len(), 2);
+        let e0 = eta[0].items()[0].as_f64().unwrap();
+        let e1 = eta[1].items()[0].as_f64().unwrap();
+        // Raw feature values are ~1000; without the server-side transform
+        // the scores would be on that scale. In model coordinates they
+        // must stay on the response scale and preserve the signal order.
+        assert!(e0.abs() < 100.0 && e1.abs() < 100.0, "eta not in model coordinates: {e0} {e1}");
+        assert!(e1 > e0, "predictions lost the signal direction: {e0} vs {e1}");
+    }
+
+    #[test]
+    fn inline_gaussian_predictions_return_to_client_scale() {
+        let srv = server();
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| 500.0 + 3.0 * i as f64).collect();
+        let dataset = Json::obj(vec![
+            ("kind", Json::Str("inline".to_string())),
+            ("x", Json::Arr(x.iter().map(|r| Json::nums(r)).collect())),
+            ("y", Json::nums(&y)),
+            ("family", Json::Str("gaussian".to_string())),
+        ]);
+        let line = protocol::request_line(
+            1,
+            "predict",
+            vec![
+                ("dataset", dataset),
+                ("lambda", Json::Str("lasso".to_string())),
+                ("path_length", Json::Num(12.0)),
+                ("x", Json::Arr(vec![Json::nums(&x[0]), Json::nums(&x[9])])),
+            ],
+        );
+        let result = parse_ok(&srv.handle_line(&line));
+        let eta = result.field("eta").unwrap().items();
+        let e0 = eta[0].items()[0].as_f64().unwrap();
+        let e9 = eta[1].items()[0].as_f64().unwrap();
+        // Scores sit on the client's response scale (~500..527), not the
+        // centered model scale (~±13): the y-centering intercept is
+        // restored.
+        assert!(e0 > 400.0 && e9 > 400.0, "intercept lost: {e0} {e9}");
+        assert!(e9 > e0, "signal direction lost: {e0} vs {e9}");
+    }
+
+    #[test]
+    fn error_responses_echo_the_request_id() {
+        let srv = server();
+        let resp = srv.handle_line(r#"{"id": 41, "op": "fit_point", "dataset": {"kind": "synth"}, "sigma_ratio": 5.0}"#);
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.field("id").unwrap().as_usize(), Some(41));
+    }
+
+    #[test]
+    fn stats_and_errors_and_shutdown() {
+        let srv = server();
+        let bad = srv.handle_line("this is not json");
+        let j = Json::parse(&bad).unwrap();
+        assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
+        let stats = parse_ok(&srv.handle_line(r#"{"id": 1, "op": "stats"}"#));
+        let requests = stats
+            .field("metrics")
+            .unwrap()
+            .field("counters")
+            .unwrap()
+            .field("requests")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(requests >= 2);
+        assert!(!srv.is_shutdown());
+        parse_ok(&srv.handle_line(r#"{"id": 2, "op": "shutdown"}"#));
+        assert!(srv.is_shutdown());
+    }
+
+    #[test]
+    fn serve_lines_round_trips() {
+        let srv = server();
+        let input = format!(
+            "{}\n\n{}\n",
+            fit_path_line(1, 21),
+            r#"{"id": 2, "op": "shutdown"}"#
+        );
+        let mut out: Vec<u8> = Vec::new();
+        srv.serve_lines(std::io::Cursor::new(input.into_bytes()), &mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.field("id").unwrap().as_usize(), Some(1));
+        assert_eq!(first.field("ok"), Some(&Json::Bool(true)));
+        assert!(srv.is_shutdown());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_socket_round_trip() {
+        use super::super::client;
+        let dir = std::env::temp_dir();
+        let sock = dir.join(format!("slope-serve-test-{}.sock", std::process::id()));
+        let srv = Arc::new(server());
+        let srv2 = Arc::clone(&srv);
+        let sock2 = sock.clone();
+        let handle = std::thread::spawn(move || srv2.serve_unix(&sock2));
+        let mut cl = client::connect_with_retry(&sock, 100, 10).expect("connect");
+        let resp = cl.round_trip(&fit_path_line(1, 31)).unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.field("ok"), Some(&Json::Bool(true)));
+        let resp = cl.round_trip(r#"{"id": 2, "op": "shutdown"}"#).unwrap();
+        assert!(Json::parse(&resp).is_ok());
+        drop(cl);
+        handle.join().unwrap().unwrap();
+        assert!(!sock.exists());
+    }
+}

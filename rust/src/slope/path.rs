@@ -156,6 +156,10 @@ pub struct PathFit {
     pub stopped_early: Option<&'static str>,
     /// Total wall time in seconds.
     pub wall_time: f64,
+    /// Full-design gradient at the final solution (parallel to
+    /// `final_beta`); the warm-start state [`PathFit::seed`] hands to the
+    /// next fit.
+    pub final_grad: Vec<f64>,
 }
 
 impl PathFit {
@@ -167,10 +171,197 @@ impl PathFit {
         }
         out
     }
+
+    /// Warm-start state at the final path point, for seeding a later
+    /// [`fit_path_seeded`] or [`fit_point`] on the same problem.
+    pub fn seed(&self) -> PathSeed {
+        PathSeed {
+            sigma: self.sigmas.last().copied().unwrap_or(0.0),
+            beta: self.final_beta.clone(),
+            grad: self.final_grad.clone(),
+        }
+    }
 }
 
-/// Fit a full SLOPE regularization path.
+/// Warm-start state at one path point: a solution `β̂(σ)`, the full-design
+/// gradient at that solution, and the σ it was solved at. This is exactly
+/// what the screening rule needs about the previous point (§2.2.2), so a
+/// cache of `PathSeed`s lets screening pay off *across requests*, not just
+/// across path steps — the serve layer's warm-start cache stores these.
+#[derive(Clone, Debug)]
+pub struct PathSeed {
+    /// Penalty scale the state was solved at.
+    pub sigma: f64,
+    /// Dense solution (length `p_total`).
+    pub beta: Vec<f64>,
+    /// Full gradient `∇f(β)` at `beta` (length `p_total`).
+    pub grad: Vec<f64>,
+}
+
+/// Result of a single-σ safeguarded fit ([`fit_point`]).
+#[derive(Clone, Debug)]
+pub struct PointFit {
+    /// Penalty scale solved at.
+    pub sigma: f64,
+    /// Dense solution.
+    pub beta: Vec<f64>,
+    /// Full gradient at the solution.
+    pub grad: Vec<f64>,
+    /// Size of the raw screened set proposed by the rule.
+    pub n_screened_rule: usize,
+    /// Final fitted set size (after unions and violation refits).
+    pub n_fitted: usize,
+    /// Active coefficients at the solution.
+    pub n_active: usize,
+    /// Strong-rule violations (see [`StepInfo::violations`]).
+    pub violations: usize,
+    /// Solve/refit rounds.
+    pub refits: usize,
+    /// Total inner FISTA iterations.
+    pub solver_iterations: usize,
+    /// Model deviance.
+    pub deviance: f64,
+    /// Fraction of null deviance explained.
+    pub dev_ratio: f64,
+    /// Wall time in seconds.
+    pub wall_time: f64,
+}
+
+impl PointFit {
+    /// Warm-start state at this point, for the next [`fit_point`].
+    pub fn seed(&self) -> PathSeed {
+        PathSeed { sigma: self.sigma, beta: self.beta.clone(), grad: self.grad.clone() }
+    }
+}
+
+/// Fit a full SLOPE regularization path from a cold start.
 pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient) -> PathFit {
+    fit_path_seeded(prob, opts, evaluator, None)
+}
+
+/// Loss, working residual and full gradient at `β = 0` — the shared
+/// bootstrap of [`zero_seed`] and the path driver. `eta` must be
+/// all-zero on entry; `h` and `grad` are filled.
+fn state_at_zero(
+    prob: &Problem,
+    evaluator: &dyn FullGradient,
+    eta: &[f64],
+    h: &mut [f64],
+    grad: &mut [f64],
+) -> f64 {
+    let loss0 = prob.family.h_loss(eta, &prob.y, h);
+    let zero_beta = vec![0.0; grad.len()];
+    evaluator.full_grad(&zero_beta, h, grad);
+    loss0
+}
+
+/// The exact path state at `β = 0`: the full gradient at zero and
+/// `σ_max = σ(1)`. This is both the cold-start seed for [`fit_point`] and
+/// how a caller resolves relative-σ requests (`σ = ratio · σ_max`).
+pub fn zero_seed(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient) -> PathSeed {
+    let n = prob.n();
+    let m_classes = prob.family.n_classes();
+    let pt = prob.p_total();
+    let lambda_base = opts.config.kind.sequence(pt);
+    let eta = vec![0.0; n * m_classes];
+    let mut h = vec![0.0; n * m_classes];
+    let mut grad = vec![0.0; pt];
+    state_at_zero(prob, evaluator, &eta, &mut h, &mut grad);
+    let smax = sigma_max(&grad, &lambda_base);
+    PathSeed { sigma: smax, beta: vec![0.0; pt], grad }
+}
+
+/// Solve the SLOPE problem at a single σ, screened and safeguarded
+/// exactly like one step of [`fit_path`], warm-started from `seed` (the
+/// state at a previously solved point — use [`zero_seed`] when cold).
+///
+/// The KKT safeguard makes this correct for *any* seed: the screening
+/// heuristic only affects how much work the refit loop does. Feeding the
+/// returned [`PointFit::seed`] back in on the next request is what turns
+/// per-path-step screening into per-request screening.
+pub fn fit_point(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    sigma: f64,
+    seed: &PathSeed,
+) -> PointFit {
+    assert!(sigma > 0.0, "sigma must be positive");
+    let t_start = Instant::now();
+    let n = prob.n();
+    let m_classes = prob.family.n_classes();
+    let pt = prob.p_total();
+    let lambda_base = opts.config.kind.sequence(pt);
+    assert_eq!(seed.beta.len(), pt, "seed beta dimension mismatch");
+    assert_eq!(seed.grad.len(), pt, "seed gradient dimension mismatch");
+
+    let dev_null = prob.family.null_deviance(&prob.y);
+    let mut beta_full = seed.beta.clone();
+    let mut grad = seed.grad.clone();
+    let mut eta = vec![0.0; n * m_classes];
+    let mut h = vec![0.0; n * m_classes];
+
+    let mut lam_prev = vec![0.0; pt];
+    let mut lam_cur = vec![0.0; pt];
+    for i in 0..pt {
+        lam_prev[i] = lambda_base[i] * seed.sigma;
+        lam_cur[i] = lambda_base[i] * sigma;
+    }
+    let prev_support = support(&beta_full);
+    let (rule_set, n_screened_rule, e_set) =
+        screening_sets(opts.strategy, pt, &grad, &lam_prev, &lam_cur, &prev_support);
+
+    let out = solve_with_safeguard(
+        prob,
+        opts,
+        evaluator,
+        &lambda_base,
+        sigma,
+        &lam_cur,
+        &rule_set,
+        &prev_support,
+        e_set,
+        &mut beta_full,
+        &mut eta,
+        &mut h,
+        &mut grad,
+    );
+
+    let rule_cover = union_sorted(&rule_set, &prev_support);
+    let violations = diff_sorted(&out.added_by_kkt, &rule_cover)
+        .iter()
+        .filter(|&&c| beta_full[c] != 0.0)
+        .count();
+    let dev = prob.family.deviance(out.loss, &prob.y);
+    let dev_ratio = if dev_null > 0.0 { 1.0 - dev / dev_null } else { 0.0 };
+    let n_active = support(&beta_full).len();
+    PointFit {
+        sigma,
+        beta: beta_full,
+        grad,
+        n_screened_rule,
+        n_fitted: out.e_set.len(),
+        n_active,
+        violations,
+        refits: out.refits,
+        solver_iterations: out.solver_iterations,
+        deviance: dev,
+        dev_ratio,
+        wall_time: t_start.elapsed().as_secs_f64(),
+    }
+}
+
+/// Fit a full SLOPE regularization path, optionally warm-started from the
+/// state of a prior fit on the same problem (`seed.beta` primes the first
+/// reduced solves; the σ grid itself is recomputed from the gradient at
+/// zero, so a seeded fit visits the same grid as a cold one and returns
+/// the same solutions — only faster).
+pub fn fit_path_seeded(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    seed: Option<&PathSeed>,
+) -> PathFit {
     let t_start = Instant::now();
     let n = prob.n();
     let m_classes = prob.family.n_classes();
@@ -180,10 +371,8 @@ pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient
     // Gradient at β = 0 (needed for σ_max and the first strong set).
     let mut eta = vec![0.0; n * m_classes];
     let mut h = vec![0.0; n * m_classes];
-    let loss0 = prob.family.h_loss(&eta, &prob.y, &mut h);
     let mut grad = vec![0.0; pt];
-    let zero_beta = vec![0.0; pt];
-    evaluator.full_grad(&zero_beta, &h, &mut grad);
+    let loss0 = state_at_zero(prob, evaluator, &eta, &mut h, &mut grad);
 
     let smax = sigma_max(&grad, &lambda_base);
     let ratio = opts.config.resolved_min_ratio(n, prob.p());
@@ -199,6 +388,7 @@ pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient
         total_violations: 0,
         stopped_early: None,
         wall_time: 0.0,
+        final_grad: Vec::new(),
     };
 
     // Step 0: β = 0 by construction of σ_max.
@@ -221,6 +411,25 @@ pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient
     });
 
     let mut beta_full = vec![0.0; pt];
+    // Warm start: prime the first reduced solves with a prior solution on
+    // this problem, and make (β, η, h, ∇f) mutually consistent at that
+    // state so step 1's screening and the gap-safe diagnostic see one
+    // coherent point. Correctness is unaffected (every step still solves
+    // to the KKT tolerance); the win is fewer FISTA iterations on repeat
+    // or refined requests. σ_max and the grid were already computed from
+    // the β = 0 gradient above, so the grid is identical to a cold fit's.
+    // (Skipped for single-point grids: with no step to solve, the final
+    // state must remain the consistent β = 0 / ∇f(0) pair at σ_max.)
+    if sigmas_all.len() > 1 {
+        if let Some(s) = seed {
+            if s.beta.len() == pt && s.grad.len() == pt {
+                beta_full.copy_from_slice(&s.beta);
+                grad.copy_from_slice(&s.grad);
+                prob.eta(&beta_full, &mut eta);
+                prob.family.h_loss(&eta, &prob.y, &mut h);
+            }
+        }
+    }
     let mut prev_dev = dev_null;
     // scratch for scaled penalties
     let mut lam_prev = vec![0.0; pt];
@@ -237,19 +446,8 @@ pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient
         // --- screening phase --------------------------------------------
         let t0 = Instant::now();
         let prev_support = support(&beta_full);
-        let rule_set = match opts.strategy {
-            Strategy::NoScreening => (0..pt).collect::<Vec<_>>(),
-            _ => strong_set(&grad, &lam_prev, &lam_cur),
-        };
-        let n_screened_rule = match opts.strategy {
-            Strategy::NoScreening => pt,
-            _ => rule_set.len(),
-        };
-        let mut e_set: Vec<usize> = match opts.strategy {
-            Strategy::NoScreening => rule_set.clone(),
-            Strategy::StrongSet => union_sorted(&rule_set, &prev_support),
-            Strategy::PreviousSet => prev_support.clone(),
-        };
+        let (rule_set, n_screened_rule, e_set) =
+            screening_sets(opts.strategy, pt, &grad, &lam_prev, &lam_cur, &prev_support);
         // Gap-safe comparison (Gaussian only): |Xᵀr| = |grad| for OLS.
         let n_safe = if opts.record_safe && prob.family == Family::Gaussian {
             let r_norm_sq = {
@@ -271,86 +469,32 @@ pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient
         let t_screen = t0.elapsed().as_secs_f64();
 
         // --- solve + KKT safeguard loop ----------------------------------
-        let mut t_solve = 0.0;
-        let mut t_kkt = 0.0;
-        // Predictors added by failed KKT checks; a *violation* in the
-        // paper's sense (§2.2.3) is such a predictor that is genuinely
-        // active at the step's final solution — KKT flags that refit back
-        // to zero are solver-tolerance noise, not rule failures.
-        let mut added_by_kkt: Vec<usize> = Vec::new();
-        let mut refits = 0;
-        let mut solver_iterations = 0;
-        let kkt_thresh = opts.kkt_tol * sig * lambda_base[0].max(1e-12);
-        // Alg 4 checks the strong set first; track which stage we are in.
-        let mut checked_full = matches!(
-            opts.strategy,
-            Strategy::NoScreening | Strategy::StrongSet
+        let out = solve_with_safeguard(
+            prob,
+            opts,
+            evaluator,
+            &lambda_base,
+            sig,
+            &lam_cur,
+            &rule_set,
+            &prev_support,
+            e_set,
+            &mut beta_full,
+            &mut eta,
+            &mut h,
+            &mut grad,
         );
-        let mut loss;
-        loop {
-            refits += 1;
-            let t1 = Instant::now();
-            let reduced = Reduced::new(prob, e_set.clone());
-            let warm: Vec<f64> = e_set.iter().map(|&c| beta_full[c]).collect();
-            // The inner solve must be at least as accurate as the
-            // violation threshold, else solver noise shows up as phantom
-            // violations (§2.2.3 counts would be meaningless).
-            let mut fista_cfg = opts.fista;
-            if fista_cfg.kkt_tol_abs.is_none() {
-                fista_cfg.kkt_tol_abs = Some(kkt_thresh);
-            }
-            let res = solve(&reduced, &scale_prefix(&lambda_base, sig, e_set.len()), Some(&warm), &fista_cfg);
-            solver_iterations += res.iterations;
-            loss = res.loss;
-            reduced.scatter(&res.beta, &mut beta_full);
-            t_solve += t1.elapsed().as_secs_f64();
-
-            // Full gradient at the candidate (η comes from the reduced
-            // design because off-E coefficients are zero).
-            let t2 = Instant::now();
-            reduced.eta(&res.beta, &mut eta);
-            prob.family.h_loss(&eta, &prob.y, &mut h);
-            evaluator.full_grad(&beta_full, &h, &mut grad);
-
-            // Violation detection: Algorithm 1 on the true gradient
-            // (Prop. 1) restricted to the stage's check set.
-            let candidate_set = kkt_flagged(&grad, &lam_cur, kkt_thresh);
-            let mut viols: Vec<usize> = match opts.strategy {
-                Strategy::PreviousSet if !checked_full => diff_sorted(
-                    &intersect_sorted(&candidate_set, &union_sorted(&rule_set, &prev_support)),
-                    &e_set,
-                ),
-                _ => diff_sorted(&candidate_set, &e_set),
-            };
-            t_kkt += t2.elapsed().as_secs_f64();
-
-            if viols.is_empty() {
-                if checked_full {
-                    break;
-                }
-                // Alg 4: strong set is clean — escalate to the full check.
-                checked_full = true;
-                continue;
-            }
-            added_by_kkt = union_sorted(&added_by_kkt, &viols);
-            e_set = union_sorted(&e_set, &viols);
-            // Anti-creep escalation: when the violation loop keeps finding
-            // more predictors round after round (heavy clustering regimes,
-            // §3.2.3's "almost all predictors enter at the second step"),
-            // widen E to the whole strong-set cover at once instead of
-            // paying one big re-solve per trickle of violations.
-            if refits >= 3 && opts.strategy == Strategy::PreviousSet {
-                e_set = union_sorted(&e_set, &union_sorted(&rule_set, &prev_support));
-            }
-            viols.clear();
-        }
+        let loss = out.loss;
+        let e_set = out.e_set;
+        let (refits, solver_iterations) = (out.refits, out.solver_iterations);
+        let (t_solve, t_kkt) = (out.t_solve, out.t_kkt);
         // Strong-rule violations (§2.2.3): active predictors the *rule*
         // discarded. For the previous-set algorithm, stage-1 additions come
         // from inside the strong set — they are failures of the
         // previous-set guess, not of the rule — so only predictors outside
         // S(λ⁽ᵐ⁺¹⁾) ∪ T(λ⁽ᵐ⁾) count.
         let rule_cover = union_sorted(&rule_set, &prev_support);
-        let violations_total = diff_sorted(&added_by_kkt, &rule_cover)
+        let violations_total = diff_sorted(&out.added_by_kkt, &rule_cover)
             .iter()
             .filter(|&&c| beta_full[c] != 0.0)
             .count();
@@ -399,8 +543,159 @@ pub fn fit_path(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradient
     }
 
     fit.final_beta = beta_full;
+    fit.final_grad = grad;
     fit.wall_time = t_start.elapsed().as_secs_f64();
     fit
+}
+
+/// The screening-phase set selection shared by the path driver and
+/// [`fit_point`]: `(rule_set, n_screened_rule, e_set)` for one step from
+/// the previous point's gradient and support.
+fn screening_sets(
+    strategy: Strategy,
+    pt: usize,
+    grad: &[f64],
+    lam_prev: &[f64],
+    lam_cur: &[f64],
+    prev_support: &[usize],
+) -> (Vec<usize>, usize, Vec<usize>) {
+    let rule_set = match strategy {
+        Strategy::NoScreening => (0..pt).collect::<Vec<_>>(),
+        _ => strong_set(grad, lam_prev, lam_cur),
+    };
+    let n_screened_rule = match strategy {
+        Strategy::NoScreening => pt,
+        _ => rule_set.len(),
+    };
+    let e_set = match strategy {
+        Strategy::NoScreening => rule_set.clone(),
+        Strategy::StrongSet => union_sorted(&rule_set, prev_support),
+        Strategy::PreviousSet => prev_support.to_vec(),
+    };
+    (rule_set, n_screened_rule, e_set)
+}
+
+/// Outcome of one safeguarded solve at a single σ.
+struct SolveOutcome {
+    /// Smooth loss at the final solution.
+    loss: f64,
+    /// Final fitted set (ascending coefficient indices).
+    e_set: Vec<usize>,
+    /// Predictors added by failed KKT checks across all rounds.
+    added_by_kkt: Vec<usize>,
+    /// Solve/refit rounds (1 = no violations).
+    refits: usize,
+    /// Total inner FISTA iterations.
+    solver_iterations: usize,
+    /// Seconds in the reduced solver.
+    t_solve: f64,
+    /// Seconds in full-gradient + KKT checks.
+    t_kkt: f64,
+}
+
+/// The solve + KKT safeguard loop shared by [`fit_path_seeded`] (per path
+/// step) and [`fit_point`] (per request): repeatedly solve the reduced
+/// problem on `e_set`, check the Theorem-1 conditions on the true full
+/// gradient, and widen `e_set` until no violation remains. On return
+/// `beta_full`, `eta`, `h` and `grad` hold the state at the final
+/// solution.
+#[allow(clippy::too_many_arguments)]
+fn solve_with_safeguard(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    lambda_base: &[f64],
+    sig: f64,
+    lam_cur: &[f64],
+    rule_set: &[usize],
+    prev_support: &[usize],
+    mut e_set: Vec<usize>,
+    beta_full: &mut [f64],
+    eta: &mut [f64],
+    h: &mut [f64],
+    grad: &mut [f64],
+) -> SolveOutcome {
+    let mut t_solve = 0.0;
+    let mut t_kkt = 0.0;
+    // Predictors added by failed KKT checks; a *violation* in the
+    // paper's sense (§2.2.3) is such a predictor that is genuinely
+    // active at the step's final solution — KKT flags that refit back
+    // to zero are solver-tolerance noise, not rule failures.
+    let mut added_by_kkt: Vec<usize> = Vec::new();
+    let mut refits = 0;
+    let mut solver_iterations = 0;
+    let kkt_thresh = opts.kkt_tol * sig * lambda_base[0].max(1e-12);
+    // Alg 4 checks the strong set first; track which stage we are in.
+    let mut checked_full = matches!(
+        opts.strategy,
+        Strategy::NoScreening | Strategy::StrongSet
+    );
+    let mut loss;
+    loop {
+        refits += 1;
+        let t1 = Instant::now();
+        let reduced = Reduced::new(prob, e_set.clone());
+        let warm: Vec<f64> = e_set.iter().map(|&c| beta_full[c]).collect();
+        // The inner solve must be at least as accurate as the
+        // violation threshold, else solver noise shows up as phantom
+        // violations (§2.2.3 counts would be meaningless).
+        let mut fista_cfg = opts.fista;
+        if fista_cfg.kkt_tol_abs.is_none() {
+            fista_cfg.kkt_tol_abs = Some(kkt_thresh);
+        }
+        let res = solve(&reduced, &scale_prefix(lambda_base, sig, e_set.len()), Some(&warm), &fista_cfg);
+        solver_iterations += res.iterations;
+        loss = res.loss;
+        reduced.scatter(&res.beta, beta_full);
+        t_solve += t1.elapsed().as_secs_f64();
+
+        // Full gradient at the candidate (η comes from the reduced
+        // design because off-E coefficients are zero).
+        let t2 = Instant::now();
+        reduced.eta(&res.beta, eta);
+        prob.family.h_loss(eta, &prob.y, h);
+        evaluator.full_grad(beta_full, h, grad);
+
+        // Violation detection: Algorithm 1 on the true gradient
+        // (Prop. 1) restricted to the stage's check set.
+        let candidate_set = kkt_flagged(grad, lam_cur, kkt_thresh);
+        let viols: Vec<usize> = match opts.strategy {
+            Strategy::PreviousSet if !checked_full => diff_sorted(
+                &intersect_sorted(&candidate_set, &union_sorted(rule_set, prev_support)),
+                &e_set,
+            ),
+            _ => diff_sorted(&candidate_set, &e_set),
+        };
+        t_kkt += t2.elapsed().as_secs_f64();
+
+        if viols.is_empty() {
+            if checked_full {
+                break;
+            }
+            // Alg 4: strong set is clean — escalate to the full check.
+            checked_full = true;
+            continue;
+        }
+        added_by_kkt = union_sorted(&added_by_kkt, &viols);
+        e_set = union_sorted(&e_set, &viols);
+        // Anti-creep escalation: when the violation loop keeps finding
+        // more predictors round after round (heavy clustering regimes,
+        // §3.2.3's "almost all predictors enter at the second step"),
+        // widen E to the whole strong-set cover at once instead of
+        // paying one big re-solve per trickle of violations.
+        if refits >= 3 && opts.strategy == Strategy::PreviousSet {
+            e_set = union_sorted(&e_set, &union_sorted(rule_set, prev_support));
+        }
+    }
+    SolveOutcome {
+        loss,
+        e_set,
+        added_by_kkt,
+        refits,
+        solver_iterations,
+        t_solve,
+        t_kkt,
+    }
 }
 
 /// Predictors flagged as possibly active by Algorithm 1 on the true
@@ -716,6 +1011,74 @@ mod tests {
         let fit = fit_path(&prob, &o, &NativeGradient(&prob));
         assert_eq!(fit.lambda_base.len(), p * 3);
         assert!(!fit.steps.is_empty());
+    }
+
+    #[test]
+    fn zero_seed_matches_sigma_max() {
+        let prob = gaussian_problem(10, 30, 40, 4);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 12);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        let zero = zero_seed(&prob, &o, &NativeGradient(&prob));
+        assert!((zero.sigma - fit.sigmas[0]).abs() < 1e-12 * zero.sigma.max(1.0));
+        assert!(zero.beta.iter().all(|&b| b == 0.0));
+        assert_eq!(zero.grad.len(), prob.p_total());
+    }
+
+    #[test]
+    fn fit_point_matches_path_step() {
+        let prob = gaussian_problem(10, 30, 40, 4);
+        let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 12);
+        o.fista.tol = 1e-9;
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        let zero = zero_seed(&prob, &o, &NativeGradient(&prob));
+        let m = 5.min(fit.sigmas.len() - 1);
+        let point = fit_point(&prob, &o, &NativeGradient(&prob), fit.sigmas[m], &zero);
+        let want = fit.beta_at(m, prob.p_total());
+        for i in 0..prob.p_total() {
+            assert!(
+                (point.beta[i] - want[i]).abs() < 1e-4,
+                "coef {i}: point {} vs path {}",
+                point.beta[i],
+                want[i]
+            );
+        }
+        assert!(point.n_fitted >= point.n_active);
+    }
+
+    #[test]
+    fn fit_point_warm_seed_reuses_state() {
+        let prob = gaussian_problem(11, 30, 60, 4);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10);
+        let ng = NativeGradient(&prob);
+        let zero = zero_seed(&prob, &o, &ng);
+        let sigma = zero.sigma * 0.5;
+        let cold = fit_point(&prob, &o, &ng, sigma, &zero);
+        // Re-solving at the same σ from the returned seed starts at the
+        // optimum: same solution, no more iterations than the cold solve.
+        let warm = fit_point(&prob, &o, &ng, sigma, &cold.seed());
+        assert!(warm.solver_iterations <= cold.solver_iterations);
+        for (a, b) in warm.beta.iter().zip(&cold.beta) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn seeded_path_matches_cold_path() {
+        let prob = gaussian_problem(12, 35, 50, 4);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 12);
+        let ng = NativeGradient(&prob);
+        let cold = fit_path(&prob, &o, &ng);
+        let warm = fit_path_seeded(&prob, &o, &ng, Some(&cold.seed()));
+        let steps = cold.sigmas.len().min(warm.sigmas.len());
+        assert!(steps >= 2);
+        for m in 0..steps {
+            let a = cold.beta_at(m, prob.p_total());
+            let b = warm.beta_at(m, prob.p_total());
+            for i in 0..prob.p_total() {
+                assert!((a[i] - b[i]).abs() < 1e-4, "step {m} coef {i}");
+            }
+        }
+        assert_eq!(warm.final_grad.len(), prob.p_total());
     }
 
     #[test]

@@ -122,6 +122,102 @@ fn strong_rule_dominates_slow_gradients() {
     );
 }
 
+/// Algorithm 1 and Algorithm 2 agree on inputs dense with exact ties and
+/// zeros — in both the criterion *and* the penalty (λ with zero tails is
+/// where the `cumsum ≥ 0` boundary is exercised hardest).
+#[test]
+fn algorithms_agree_on_tied_and_zero_inputs() {
+    forall(
+        Config { cases: 500, seed: 0x208 },
+        |rng| {
+            let mut c: Vec<f64> =
+                slope_screen::check::gen::tied_vec(rng, 0, 30).iter().map(|v| v.abs()).collect();
+            c.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut lam: Vec<f64> = (0..c.len())
+                .map(|_| {
+                    if rng.bernoulli(0.3) {
+                        0.0
+                    } else {
+                        (rng.next_f64() * 8.0).round() / 4.0
+                    }
+                })
+                .collect();
+            lam.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            (c, lam)
+        },
+        |(c, lam)| {
+            let s = algorithm1(c, lam);
+            let k = algorithm2_k(c, lam);
+            ensure(s.len() == k, format!("|S|={} vs k={k}", s.len()))?;
+            ensure(s.iter().copied().eq(0..k), "not a prefix")
+        },
+    );
+}
+
+/// Deterministic edge cases for the two screening algorithms: empty
+/// input, everything discarded, everything kept, and ties at zero.
+#[test]
+fn algorithms_agree_on_edge_cases() {
+    // empty
+    assert!(algorithm1(&[], &[]).is_empty());
+    assert_eq!(algorithm2_k(&[], &[]), 0);
+    // all discarded
+    let c = [0.5, 0.4, 0.1];
+    let lam = [1.0, 0.9, 0.8];
+    assert!(algorithm1(&c, &lam).is_empty());
+    assert_eq!(algorithm2_k(&c, &lam), 0);
+    // all kept
+    let c = [2.0, 1.5, 1.2];
+    assert_eq!(algorithm1(&c, &lam), vec![0, 1, 2]);
+    assert_eq!(algorithm2_k(&c, &lam), 3);
+    // zero criterion against zero penalty: the `≥ 0` boundary keeps all
+    let c = [1.0, 0.0, 0.0];
+    let lam0 = [0.0, 0.0, 0.0];
+    assert_eq!(algorithm1(&c, &lam0), vec![0, 1, 2]);
+    assert_eq!(algorithm2_k(&c, &lam0), 3);
+    // zero tail against a positive penalty: only the head survives
+    let lam1 = [0.5, 0.5, 0.0];
+    assert_eq!(algorithm1(&c, &lam1), vec![0]);
+    assert_eq!(algorithm2_k(&c, &lam1), 1);
+}
+
+/// The sorted-set algebra the path driver is built on, against a
+/// `BTreeSet` oracle.
+#[test]
+fn set_algebra_matches_btreeset_oracle() {
+    use slope_screen::slope::path::{diff_sorted, intersect_sorted, union_sorted};
+    use std::collections::BTreeSet;
+    forall(
+        Config { cases: 500, seed: 0x209 },
+        |rng| {
+            let mut draw = |rng: &mut Pcg64| {
+                let len = rng.below(20) as usize;
+                let mut v: Vec<usize> = (0..len).map(|_| rng.below(30) as usize).collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            };
+            let a = draw(&mut *rng);
+            let b = draw(&mut *rng);
+            (a, b)
+        },
+        |(a, b)| {
+            let sa: BTreeSet<usize> = a.iter().copied().collect();
+            let sb: BTreeSet<usize> = b.iter().copied().collect();
+            let want_union: Vec<usize> = sa.union(&sb).copied().collect();
+            let want_diff: Vec<usize> = sa.difference(&sb).copied().collect();
+            let want_intersect: Vec<usize> = sa.intersection(&sb).copied().collect();
+            ensure(union_sorted(a, b) == want_union, "union mismatch")?;
+            ensure(diff_sorted(a, b) == want_diff, "difference mismatch")?;
+            ensure(intersect_sorted(a, b) == want_intersect, "intersection mismatch")?;
+            // identities the safeguard loop relies on
+            ensure(union_sorted(a, a) == *a, "union not idempotent")?;
+            ensure(diff_sorted(a, a).is_empty(), "self-difference not empty")?;
+            ensure(intersect_sorted(a, &[]).is_empty(), "intersect with empty")
+        },
+    );
+}
+
 /// Prox firm-nonexpansiveness and decomposition: prox(v) + prox-residual
 /// splits v, and the residual is a subgradient at the prox point.
 #[test]
