@@ -9,13 +9,16 @@ use slope_screen::benchkit::{fmt_secs, Table, Timing};
 use slope_screen::cli::Args;
 use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
 use slope_screen::linalg::ops::abs_sorted_desc;
+use slope_screen::linalg::ParConfig;
 use slope_screen::rng::Pcg64;
 use slope_screen::runtime::{default_artifact_dir, ArtifactGradient, Manifest};
 use slope_screen::slope::family::Family;
 use slope_screen::slope::lambda::bh_sequence;
 use slope_screen::slope::path::FullGradient;
 use slope_screen::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
-use slope_screen::slope::screen::algorithm2_k;
+use slope_screen::slope::screen::{
+    algorithm2_k, strong_set_resort_reference, strong_set_with, StrongWorkspace,
+};
 
 fn main() {
     let parsed = Args::new("microbenchmarks of the hot kernels")
@@ -64,6 +67,27 @@ fn main() {
     });
     record("sort_desc_abs", p, &t);
 
+    // the strong rule itself: fused single-workspace ordering vs the
+    // allocate-and-re-sort implementation it replaced (σ-scaled penalty
+    // pair, the path driver's case — the fused form skips the second
+    // sort entirely there)
+    let lam_prev: Vec<f64> = lam.iter().map(|l| l * 0.9).collect();
+    let lam_next: Vec<f64> = lam.iter().map(|l| l * 0.8).collect();
+    let mut sws = StrongWorkspace::default();
+    let t = Timing::measure(3, reps, || {
+        std::hint::black_box(strong_set_with(&v, &lam_prev, &lam_next, &mut sws));
+    });
+    record("strong_set fused", p, &t);
+    assert_eq!(
+        strong_set_with(&v, &lam_prev, &lam_next, &mut sws),
+        strong_set_resort_reference(&v, &lam_prev, &lam_next),
+        "fused strong set must match the reference it replaced"
+    );
+    let t = Timing::measure(3, reps, || {
+        std::hint::black_box(strong_set_resort_reference(&v, &lam_prev, &lam_next));
+    });
+    record("strong_set resort-ref", p, &t);
+
     // gemv / gemv_t on a dense design
     let prob = SyntheticSpec {
         n,
@@ -91,6 +115,19 @@ fn main() {
         std::hint::black_box(&grad);
     });
     record("gemv_t (X'h)", n * p, &t);
+
+    // the same kernels through the threaded backend (machine budget)
+    let par = ParConfig::with_threads(0);
+    let t = Timing::measure(3, reps, || {
+        prob.x.gemv_with(&beta, &mut eta, par);
+        std::hint::black_box(&eta);
+    });
+    record("gemv parallel", n * p, &t);
+    let t = Timing::measure(3, reps, || {
+        prob.x.gemv_t_with(&h, &mut grad, par);
+        std::hint::black_box(&grad);
+    });
+    record("gemv_t parallel", n * p, &t);
 
     // gradient engines, when artifacts cover the shape
     if let Ok(manifest) = Manifest::load(&default_artifact_dir()) {

@@ -1,0 +1,256 @@
+//! Path-level wall-clock benchmark of the parallel compute backend:
+//! full-path Gaussian fits, serial vs threaded `linalg::par` kernels,
+//! cold vs warm-started, across p ∈ {1k, 10k, 100k} at n = 200 (the
+//! paper's p ≫ n regime, where the post-solve `Xᵀr` KKT sweep dominates).
+//!
+//! Correctness is asserted, not assumed: serial and parallel fits must
+//! produce identical violation counts and coefficients to 1e-10 (the
+//! dense parallel kernels are in fact bitwise-deterministic), and the
+//! full run gates on a ≥ 2× parallel speedup at the largest size when at
+//! least 4 threads are available.
+//!
+//! Writes `results/path_speed.csv` and the machine-readable
+//! `BENCH_path.json` at the repository root — the perf trajectory of the
+//! hot path is tracked from this file.
+//!
+//! Run:   `cargo bench --bench path_speed`
+//! Smoke: `cargo bench --bench path_speed -- --smoke` (bounded sizes,
+//!        no speedup gate — the CI job that keeps this harness alive).
+
+
+use slope_screen::benchkit::{fmt_secs, Table};
+use slope_screen::cli::Args;
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::jsonio::Json;
+use slope_screen::linalg::par;
+use slope_screen::rng::Pcg64;
+use slope_screen::slope::family::{Family, Problem};
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{
+    fit_path, fit_path_seeded, NativeGradient, PathFit, PathOptions, Strategy,
+};
+
+struct Run {
+    p: usize,
+    backend: &'static str,
+    start: &'static str,
+    threads: usize,
+    wall_s: f64,
+    steps: usize,
+    violations: usize,
+}
+
+fn make_problem(n: usize, p: usize, k: usize, rho: f64, seed: u64) -> Problem {
+    SyntheticSpec {
+        n,
+        p,
+        rho,
+        design: DesignKind::Compound,
+        beta: BetaSpec::PlusMinus { k, scale: 2.0 },
+        family: Family::Gaussian,
+        noise_sd: 1.0,
+        standardize: true,
+    }
+    .generate(&mut Pcg64::new(seed))
+}
+
+fn opts(q: f64, length: usize, threads: usize) -> PathOptions {
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q });
+    cfg.length = length;
+    PathOptions::new(cfg)
+        .with_strategy(Strategy::StrongSet)
+        .with_threads(threads)
+}
+
+/// Serial and parallel fits of the same problem must be interchangeable:
+/// same grid, same violation counts, coefficients equal to `tol`.
+fn assert_identical(serial: &PathFit, parallel: &PathFit, p: usize, tol: f64) {
+    assert_eq!(
+        serial.steps.len(),
+        parallel.steps.len(),
+        "p={p}: step counts diverged"
+    );
+    assert_eq!(
+        serial.total_violations, parallel.total_violations,
+        "p={p}: violation counts diverged"
+    );
+    for (m, (a, b)) in serial.steps.iter().zip(&parallel.steps).enumerate() {
+        assert_eq!(
+            a.violations, b.violations,
+            "p={p} step {m}: per-step violations diverged"
+        );
+    }
+    let mut max_dev = 0.0f64;
+    for (a, b) in serial.final_beta.iter().zip(&parallel.final_beta) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    assert!(
+        max_dev <= tol,
+        "p={p}: coefficients diverged by {max_dev:e} (> {tol:e})"
+    );
+}
+
+fn main() {
+    let parsed = Args::new("path-level benchmark: serial vs parallel compute backend")
+        .opt("n", "200", "observations")
+        .opt("ps", "1000,10000,100000", "predictor grid")
+        .opt("k", "20", "true support size")
+        .opt("rho", "0.1", "pairwise correlation")
+        .opt("q", "0.1", "BH parameter")
+        .opt("path-length", "50", "path points")
+        .opt("threads", "0", "parallel-backend threads (0 = all cores)")
+        .opt("seed", "2020", "dataset seed")
+        .flag("smoke", "bounded sizes for CI; skips the speedup gate")
+        .flag("bench", "(cargo bench compatibility)")
+        .parse();
+    let smoke = parsed.bool("smoke");
+    let n = parsed.usize("n");
+    let ps: Vec<usize> = if smoke { vec![500, 2000] } else { parsed.usize_list("ps") };
+    let k = parsed.usize("k");
+    let rho = parsed.f64("rho");
+    let q = parsed.f64("q");
+    let path_length = if smoke { 15 } else { parsed.usize("path-length") };
+    let threads = {
+        let t = parsed.usize("threads");
+        if t == 0 {
+            par::global_threads()
+        } else {
+            t
+        }
+    };
+    let seed = parsed.u64("seed");
+
+    println!(
+        "path_speed: n={n}, p in {ps:?}, path-length={path_length}, parallel backend = {threads} threads{}",
+        if smoke { " [smoke]" } else { "" }
+    );
+
+    let mut runs: Vec<Run> = Vec::new();
+    for (pi, &p) in ps.iter().enumerate() {
+        let prob = make_problem(n, p, k.min(p / 2).max(1), rho, seed + pi as u64);
+        let o_serial = opts(q, path_length, 1);
+        let o_par = opts(q, path_length, threads);
+        let ng = NativeGradient(&prob);
+
+        let cold_serial = fit_path(&prob, &o_serial, &ng);
+        let cold_par = fit_path(&prob, &o_par, &ng);
+        assert_identical(&cold_serial, &cold_par, p, 1e-10);
+
+        let warm_serial = fit_path_seeded(&prob, &o_serial, &ng, Some(&cold_serial.seed()));
+        let warm_par = fit_path_seeded(&prob, &o_par, &ng, Some(&cold_par.seed()));
+        assert_identical(&warm_serial, &warm_par, p, 1e-10);
+
+        for (fit, backend, start, t) in [
+            (&cold_serial, "serial", "cold", 1),
+            (&cold_par, "parallel", "cold", threads),
+            (&warm_serial, "serial", "warm", 1),
+            (&warm_par, "parallel", "warm", threads),
+        ] {
+            println!(
+                "  p={p:<7} {backend:<8} {start}  {}  ({} steps, {} violations)",
+                fmt_secs(fit.wall_time),
+                fit.steps.len(),
+                fit.total_violations
+            );
+            runs.push(Run {
+                p,
+                backend,
+                start,
+                threads: t,
+                wall_s: fit.wall_time,
+                steps: fit.steps.len(),
+                violations: fit.total_violations,
+            });
+        }
+    }
+
+    let mut table = Table::new(
+        &format!("path_speed (gaussian, n={n}, strong set, {threads}-thread backend)"),
+        &["p", "backend", "start", "threads", "wall_s", "steps", "violations"],
+    );
+    for r in &runs {
+        table.row(vec![
+            r.p.to_string(),
+            r.backend.to_string(),
+            r.start.to_string(),
+            r.threads.to_string(),
+            format!("{:.4}", r.wall_s),
+            r.steps.to_string(),
+            r.violations.to_string(),
+        ]);
+    }
+    table.print();
+    let csv = table.write_csv("path_speed").expect("csv");
+    println!("\nwrote {}", csv.display());
+
+    let find = |p: usize, backend: &str, start: &str| {
+        runs.iter()
+            .find(|r| r.p == p && r.backend == backend && r.start == start)
+            .expect("run")
+    };
+    let p_max = *ps.iter().max().expect("non-empty p grid");
+    let cold_speedup = find(p_max, "serial", "cold").wall_s
+        / find(p_max, "parallel", "cold").wall_s.max(1e-12);
+    let warm_speedup = find(p_max, "serial", "warm").wall_s
+        / find(p_max, "parallel", "warm").wall_s.max(1e-12);
+    println!(
+        "speedup at p={p_max}: cold {cold_speedup:.2}x, warm {warm_speedup:.2}x ({threads} threads)"
+    );
+    // The acceptance gate: ≥ 2× on the full-path fit at the largest size
+    // whenever ≥ 4 threads back the parallel runs. Smoke runs (CI) keep
+    // the correctness asserts but skip the timing gate — shared runners
+    // make wall-clock guarantees meaningless there.
+    if !smoke && threads >= 4 {
+        assert!(
+            cold_speedup >= 2.0,
+            "parallel backend must be >= 2x at p={p_max} on {threads} threads, got {cold_speedup:.2}x"
+        );
+    }
+
+    let payload = Json::obj(vec![
+        ("bench", Json::Str("path_speed".to_string())),
+        (
+            "config",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("ps", Json::Arr(ps.iter().map(|&p| Json::Num(p as f64)).collect())),
+                ("k", Json::Num(k as f64)),
+                ("rho", Json::Num(rho)),
+                ("q", Json::Num(q)),
+                ("path_length", Json::Num(path_length as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        (
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("p", Json::Num(r.p as f64)),
+                            ("backend", Json::Str(r.backend.to_string())),
+                            ("start", Json::Str(r.start.to_string())),
+                            ("threads", Json::Num(r.threads as f64)),
+                            ("wall_s", Json::Num(r.wall_s)),
+                            ("steps", Json::Num(r.steps as f64)),
+                            ("violations", Json::Num(r.violations as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "speedup",
+            Json::obj(vec![
+                ("p", Json::Num(p_max as f64)),
+                ("cold_parallel_over_serial", Json::Num(cold_speedup)),
+                ("warm_parallel_over_serial", Json::Num(warm_speedup)),
+            ]),
+        ),
+        ("table", table.to_json()),
+    ]);
+    let out_path =
+        slope_screen::benchkit::write_bench_json("path", &payload).expect("BENCH_path.json");
+    println!("wrote {}", out_path.display());
+}

@@ -159,6 +159,22 @@ pub fn results_dir() -> std::path::PathBuf {
     std::path::PathBuf::from(env_root()).join("results")
 }
 
+/// Write a machine-readable `BENCH_<name>.json` at the repository root
+/// (one line of JSON + newline) and return its path — the shared tail of
+/// every bench that feeds the perf trajectory.
+pub fn write_bench_json(
+    name: &str,
+    payload: &crate::jsonio::Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let root = std::path::Path::new(env_root()).parent().ok_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "crate root has no parent")
+    })?;
+    let path = root.join(format!("BENCH_{name}.json"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", payload.to_string())?;
+    Ok(path)
+}
+
 /// Resolve the repository root (`CARGO_MANIFEST_DIR` at compile time).
 pub fn env_root() -> &'static str {
     env!("CARGO_MANIFEST_DIR")

@@ -64,6 +64,7 @@ impl Args {
     pub fn parse_from(self, argv: &[String]) -> Result<Parsed, String> {
         let mut values = self.values.clone();
         let mut positional = self.positional.clone();
+        let mut provided = std::collections::BTreeSet::new();
         let mut i = 0;
         while i < argv.len() {
             let arg = &argv[i];
@@ -91,6 +92,7 @@ impl Args {
                         .ok_or_else(|| format!("flag --{name} expects a value"))?
                 };
                 values.insert(name.to_string(), value);
+                provided.insert(name.to_string());
             } else {
                 positional.push(arg.clone());
             }
@@ -106,7 +108,7 @@ impl Args {
                 }
             }
         }
-        Ok(Parsed { values, positional })
+        Ok(Parsed { values, positional, provided })
     }
 
     fn usage(&self) -> String {
@@ -128,6 +130,7 @@ impl Args {
 pub struct Parsed {
     values: BTreeMap<String, String>,
     positional: Vec<String>,
+    provided: std::collections::BTreeSet<String>,
 }
 
 impl Parsed {
@@ -190,6 +193,14 @@ impl Parsed {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+
+    /// True when the flag was explicitly given on the command line
+    /// (distinguishes a user's `--threads 0` from the registered
+    /// default — process-global settings must only be touched on
+    /// explicit request).
+    pub fn provided(&self, name: &str) -> bool {
+        self.provided.contains(name)
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +250,16 @@ mod tests {
     fn positional_collected() {
         let p = parser().parse_from(&argv(&["fit", "--n", "3"])).unwrap();
         assert_eq!(p.positional(), &["fit".to_string()]);
+    }
+
+    #[test]
+    fn provided_distinguishes_explicit_flags_from_defaults() {
+        let p = parser().parse_from(&argv(&["--n", "100"])).unwrap();
+        assert!(p.provided("n"));
+        assert!(!p.provided("rho")); // default applied, not user-given
+        assert_eq!(p.f64("rho"), 0.5);
+        let q = parser().parse_from(&argv(&["--rho=0.5"])).unwrap();
+        assert!(q.provided("rho")); // explicit, even if equal to the default
     }
 
     #[test]

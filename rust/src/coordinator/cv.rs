@@ -94,9 +94,17 @@ pub fn cross_validate(prob: &Problem, opts: &PathOptions, cfg: &CvConfig) -> CvR
         .collect();
     let results: Mutex<Vec<FoldResult>> = Mutex::new(Vec::with_capacity(jobs.len()));
     let threads = if cfg.threads == 0 {
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(16)
+        crate::linalg::par::detected_parallelism()
     } else {
         cfg.threads
+    };
+    // Fold jobs already saturate the pool; give each fit the per-job
+    // share of the kernel-thread budget so the two parallel layers don't
+    // multiply (an explicit opts.threads wins).
+    let fold_opts = if opts.threads == 0 {
+        opts.clone().with_threads(crate::pool::fit_thread_budget(threads.min(jobs.len())))
+    } else {
+        opts.clone()
     };
 
     par_for_each(jobs.len(), threads, |j| {
@@ -105,7 +113,7 @@ pub fn cross_validate(prob: &Problem, opts: &PathOptions, cfg: &CvConfig) -> CvR
         let train: Vec<usize> = (0..n).filter(|&i| fold_of[i] != fold).collect();
         let valid: Vec<usize> = (0..n).filter(|&i| fold_of[i] == fold).collect();
         let sub = subset_problem(prob, &train);
-        let fit = fit_path(&sub, opts, &NativeGradient(&sub));
+        let fit = fit_path(&sub, &fold_opts, &NativeGradient(&sub));
         let val = validation_deviance(prob, &valid, &fit);
         let fr = FoldResult {
             repeat,
@@ -137,10 +145,13 @@ pub fn cross_validate(prob: &Problem, opts: &PathOptions, cfg: &CvConfig) -> CvR
             / (vals.len().max(2) - 1) as f64;
         se[s] = (var / vals.len() as f64).sqrt();
     }
+    // total_cmp: a NaN fold deviance (diverged fit) must never panic the
+    // selection — NaN orders last, so a finite σ still wins when any
+    // fold produced one.
     let best_index = mean
         .iter()
         .enumerate()
-        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .min_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap_or(0);
 

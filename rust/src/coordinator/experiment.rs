@@ -60,7 +60,7 @@ where
 {
     let jobs = spec.jobs();
     let threads = if spec.threads == 0 {
-        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4).min(16)
+        crate::linalg::par::detected_parallelism()
     } else {
         spec.threads
     };

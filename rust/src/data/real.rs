@@ -10,7 +10,7 @@
 //! the substitution argument; the screening behaviour under study depends
 //! on dimensions, correlation and signal sparsity — all preserved.
 
-use crate::linalg::{Csc, Design, Mat};
+use crate::linalg::{Csc, Design, Mat, ParConfig};
 use crate::rng::Pcg64;
 use crate::slope::family::{sigmoid, Family, Problem};
 
@@ -160,7 +160,7 @@ fn latent_factor_binary(
         .iter()
         .map(|&e| if rng.bernoulli(sigmoid(e)) { 1.0 } else { 0.0 })
         .collect();
-    x.standardize(true, true);
+    x.standardize_with(true, true, ParConfig::default());
     finish_binary(x, y, family)
 }
 
@@ -199,7 +199,7 @@ fn dorothea(rng: &mut Pcg64, family: Family) -> Problem {
         .map(|&e| if rng.bernoulli(sigmoid(e - 0.4)) { 1.0 } else { 0.0 })
         .collect();
     let mut csc = Csc::from_columns(n, &cols);
-    csc.scale_columns();
+    csc.scale_columns_with(ParConfig::default());
     match family {
         Family::Gaussian => {
             let mean = crate::linalg::ops::mean(&y);
@@ -220,7 +220,7 @@ fn cpusmall(rng: &mut Pcg64) -> Problem {
     x.gemv(&beta, &mut eta);
     let mut y: Vec<f64> =
         eta.iter().map(|&e| e + 0.5 * e.tanh() + rng.normal()).collect();
-    x.standardize(true, true);
+    x.standardize_with(true, true, ParConfig::default());
     let mean = crate::linalg::ops::mean(&y);
     for v in y.iter_mut() {
         *v -= mean;
@@ -257,7 +257,7 @@ fn physician(rng: &mut Pcg64) -> Problem {
         .iter()
         .map(|&e| rng.poisson((0.8 + e).clamp(-30.0, 3.5).exp()) as f64)
         .collect();
-    x.standardize(true, true);
+    x.standardize_with(true, true, ParConfig::default());
     Problem::new(Design::Dense(x), y, Family::Poisson)
 }
 
@@ -293,7 +293,7 @@ fn zipcode(rng: &mut Pcg64) -> Problem {
             x.set(i, j, tpl[j] + 0.7 * rng.normal());
         }
     }
-    x.standardize(true, true);
+    x.standardize_with(true, true, ParConfig::default());
     Problem::new(Design::Dense(x), y, Family::Multinomial { classes })
 }
 

@@ -9,7 +9,7 @@
 //! * Coefficient and response generators for the four families, matching
 //!   the parameter choices quoted in the paper for each experiment.
 
-use crate::linalg::{Design, Mat};
+use crate::linalg::{Design, Mat, ParConfig};
 use crate::rng::Pcg64;
 use crate::slope::family::{Family, Problem};
 
@@ -165,7 +165,7 @@ impl SyntheticSpec {
         // paper), standardization happens afterwards
         let y = draw_response(rng, &x, &beta, self.family, self.noise_sd);
         if self.standardize {
-            x.standardize(true, true);
+            x.standardize_with(true, true, ParConfig::default());
         }
         let mut y = y;
         if self.standardize && self.family == Family::Gaussian {

@@ -1,5 +1,13 @@
 //! Dense column-major matrix with the column-oriented kernels the SLOPE
 //! path solver spends its time in.
+//!
+//! Every hot kernel has a `*_with` variant taking a
+//! [`ParConfig`](super::par::ParConfig) thread budget. The parallel forms
+//! partition the *output* into contiguous slabs (rows for `Xv`, columns
+//! for `Xᵀv`), so each element is accumulated in exactly the serial order
+//! — parallel results are bitwise identical to serial ones.
+
+use super::par::{chunk_size, ParConfig};
 
 /// Dense `f64` matrix, column-major (`data[j * nrows + i]` is `(i, j)`).
 #[derive(Clone, Debug, PartialEq)]
@@ -97,6 +105,38 @@ impl Mat {
         }
     }
 
+    /// `out = X v` with a thread budget: the output rows are split into
+    /// contiguous slabs, one scoped thread per slab. Each slab walks the
+    /// columns in the serial order, so the result is bitwise identical to
+    /// [`Mat::gemv`].
+    pub fn gemv_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        let chunks = par.plan(self.nrows, self.ncols);
+        if chunks <= 1 {
+            self.gemv(v, out);
+            return;
+        }
+        let slab = chunk_size(self.nrows, chunks);
+        std::thread::scope(|scope| {
+            for (ci, rows) in out.chunks_mut(slab).enumerate() {
+                let r0 = ci * slab;
+                scope.spawn(move || {
+                    rows.fill(0.0);
+                    for (j, &vj) in v.iter().enumerate() {
+                        if vj == 0.0 {
+                            continue;
+                        }
+                        let col = &self.col(j)[r0..r0 + rows.len()];
+                        for (o, &x) in rows.iter_mut().zip(col) {
+                            *o += vj * x;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
     /// `out = Xᵀ v`: one dot product per column, 4-way unrolled.
     pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.nrows);
@@ -104,6 +144,30 @@ impl Mat {
         for j in 0..self.ncols {
             out[j] = dot(self.col(j), v);
         }
+    }
+
+    /// `out = Xᵀ v` with a thread budget: independent per-column dots,
+    /// the output split into contiguous column slabs. Bitwise identical
+    /// to [`Mat::gemv_t`].
+    pub fn gemv_t_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        let chunks = par.plan(self.ncols, self.nrows);
+        if chunks <= 1 {
+            self.gemv_t(v, out);
+            return;
+        }
+        let slab = chunk_size(self.ncols, chunks);
+        std::thread::scope(|scope| {
+            for (ci, cols) in out.chunks_mut(slab).enumerate() {
+                let j0 = ci * slab;
+                scope.spawn(move || {
+                    for (o, j) in cols.iter_mut().zip(j0..) {
+                        *o = dot(self.col(j), v);
+                    }
+                });
+            }
+        });
     }
 
     /// `out = X[:, cols] v` where `v.len() == cols.len()`.
@@ -122,6 +186,36 @@ impl Mat {
         }
     }
 
+    /// `out = X[:, cols] v` with a thread budget (row slabs over the
+    /// subset, serial accumulation order per element).
+    pub fn gemv_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), cols.len());
+        assert_eq!(out.len(), self.nrows);
+        let chunks = par.plan(self.nrows, cols.len());
+        if chunks <= 1 {
+            self.gemv_subset(cols, v, out);
+            return;
+        }
+        let slab = chunk_size(self.nrows, chunks);
+        std::thread::scope(|scope| {
+            for (ci, rows) in out.chunks_mut(slab).enumerate() {
+                let r0 = ci * slab;
+                scope.spawn(move || {
+                    rows.fill(0.0);
+                    for (&j, &vj) in cols.iter().zip(v) {
+                        if vj == 0.0 {
+                            continue;
+                        }
+                        let col = &self.col(j)[r0..r0 + rows.len()];
+                        for (o, &x) in rows.iter_mut().zip(col) {
+                            *o += vj * x;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
     /// `out = X[:, cols]ᵀ v` where `out.len() == cols.len()`.
     pub fn gemv_t_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
         assert_eq!(out.len(), cols.len());
@@ -131,9 +225,53 @@ impl Mat {
         }
     }
 
+    /// `out = X[:, cols]ᵀ v` with a thread budget (independent dots,
+    /// contiguous slabs of the subset).
+    pub fn gemv_t_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(out.len(), cols.len());
+        assert_eq!(v.len(), self.nrows);
+        let chunks = par.plan(cols.len(), self.nrows);
+        if chunks <= 1 {
+            self.gemv_t_subset(cols, v, out);
+            return;
+        }
+        let slab = chunk_size(cols.len(), chunks);
+        std::thread::scope(|scope| {
+            for (ci, slice) in out.chunks_mut(slab).enumerate() {
+                let sub = &cols[ci * slab..ci * slab + slice.len()];
+                scope.spawn(move || {
+                    for (o, &j) in slice.iter_mut().zip(sub) {
+                        *o = dot(self.col(j), v);
+                    }
+                });
+            }
+        });
+    }
+
     /// Squared ℓ2 norm of every column.
     pub fn col_sq_norms(&self) -> Vec<f64> {
         (0..self.ncols).map(|j| dot(self.col(j), self.col(j))).collect()
+    }
+
+    /// Squared ℓ2 norm of every column, with a thread budget.
+    pub fn col_sq_norms_with(&self, par: ParConfig) -> Vec<f64> {
+        let chunks = par.plan(self.ncols, self.nrows);
+        if chunks <= 1 {
+            return self.col_sq_norms();
+        }
+        let mut out = vec![0.0; self.ncols];
+        let slab = chunk_size(self.ncols, chunks);
+        std::thread::scope(|scope| {
+            for (ci, cols) in out.chunks_mut(slab).enumerate() {
+                let j0 = ci * slab;
+                scope.spawn(move || {
+                    for (o, j) in cols.iter_mut().zip(j0..) {
+                        *o = dot(self.col(j), self.col(j));
+                    }
+                });
+            }
+        });
+        out
     }
 
     /// Center columns to mean zero and/or scale to unit ℓ2 norm
@@ -142,23 +280,32 @@ impl Mat {
     pub fn standardize(&mut self, center: bool, scale: bool) {
         let n = self.nrows as f64;
         for j in 0..self.ncols {
-            let col = self.col_mut(j);
-            if center {
-                let mean = col.iter().sum::<f64>() / n;
-                for x in col.iter_mut() {
-                    *x -= mean;
-                }
-            }
-            if scale {
-                let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
-                if norm > 0.0 {
-                    let inv = 1.0 / norm;
-                    for x in col.iter_mut() {
-                        *x *= inv;
-                    }
-                }
-            }
+            standardize_column(self.col_mut(j), n, center, scale);
         }
+    }
+
+    /// [`Mat::standardize`] with a thread budget: columns are contiguous
+    /// in the column-major buffer, so disjoint column blocks go to
+    /// scoped threads. Per-column arithmetic is unchanged — bitwise
+    /// identical to the serial form.
+    pub fn standardize_with(&mut self, center: bool, scale: bool, par: ParConfig) {
+        let chunks = par.plan(self.ncols, 2 * self.nrows);
+        if chunks <= 1 || self.nrows == 0 {
+            self.standardize(center, scale);
+            return;
+        }
+        let nrows = self.nrows;
+        let n = nrows as f64;
+        let block_cols = chunk_size(self.ncols, chunks);
+        std::thread::scope(|scope| {
+            for block in self.data.chunks_mut(block_cols * nrows) {
+                scope.spawn(move || {
+                    for col in block.chunks_mut(nrows) {
+                        standardize_column(col, n, center, scale);
+                    }
+                });
+            }
+        });
     }
 
     /// Extract rows into a new matrix (used by the CV fold splitter).
@@ -194,6 +341,26 @@ impl Mat {
             }
         }
         out
+    }
+}
+
+/// Center and/or unit-scale one column (`n` = row count as f64).
+#[inline]
+fn standardize_column(col: &mut [f64], n: f64, center: bool, scale: bool) {
+    if center {
+        let mean = col.iter().sum::<f64>() / n;
+        for x in col.iter_mut() {
+            *x -= mean;
+        }
+    }
+    if scale {
+        let norm = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            let inv = 1.0 / norm;
+            for x in col.iter_mut() {
+                *x *= inv;
+            }
+        }
     }
 }
 
@@ -290,6 +457,64 @@ mod tests {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
         let eye = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0]]);
         assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn parallel_kernels_bitwise_match_serial() {
+        use crate::linalg::par::ParConfig;
+        let n = 23;
+        let p = 11;
+        let data: Vec<f64> = (0..n * p).map(|i| ((i * 37 + 11) % 97) as f64 * 0.31 - 15.0).collect();
+        let m = Mat::from_col_major(n, p, data);
+        let v: Vec<f64> = (0..p).map(|j| (j as f64) - 4.0).collect();
+        let w: Vec<f64> = (0..n).map(|i| 0.5 * (i as f64) - 6.0).collect();
+        let cols = [0usize, 2, 3, 7, 10];
+        let vc: Vec<f64> = cols.iter().map(|&j| v[j]).collect();
+        for t in [2usize, 3, 7, 64] {
+            let par = ParConfig::exact(t);
+            let (mut a, mut b) = (vec![0.0; n], vec![0.0; n]);
+            m.gemv(&v, &mut a);
+            m.gemv_with(&v, &mut b, par);
+            assert_eq!(a, b, "gemv t={t}");
+            m.gemv_subset(&cols, &vc, &mut a);
+            m.gemv_subset_with(&cols, &vc, &mut b, par);
+            assert_eq!(a, b, "gemv_subset t={t}");
+            let (mut c, mut d) = (vec![0.0; p], vec![0.0; p]);
+            m.gemv_t(&w, &mut c);
+            m.gemv_t_with(&w, &mut d, par);
+            assert_eq!(c, d, "gemv_t t={t}");
+            let (mut e, mut f) = (vec![0.0; cols.len()], vec![0.0; cols.len()]);
+            m.gemv_t_subset(&cols, &w, &mut e);
+            m.gemv_t_subset_with(&cols, &w, &mut f, par);
+            assert_eq!(e, f, "gemv_t_subset t={t}");
+            assert_eq!(m.col_sq_norms(), m.col_sq_norms_with(par), "col_sq_norms t={t}");
+            let mut ms = m.clone();
+            let mut mp = m.clone();
+            ms.standardize(true, true);
+            mp.standardize_with(true, true, par);
+            assert_eq!(ms, mp, "standardize t={t}");
+        }
+    }
+
+    #[test]
+    fn parallel_kernels_handle_degenerate_shapes() {
+        use crate::linalg::par::ParConfig;
+        let par = ParConfig::exact(7);
+        // n = 0
+        let m = Mat::zeros(0, 3);
+        let mut out: Vec<f64> = Vec::new();
+        m.gemv_with(&[1.0, 2.0, 3.0], &mut out, par);
+        let mut g = vec![9.0; 3];
+        m.gemv_t_with(&[], &mut g, par);
+        assert_eq!(g, vec![0.0; 3]);
+        // p = 1, p < threads
+        let m = Mat::from_rows(&[&[2.0], &[3.0]]);
+        let mut out = vec![0.0; 2];
+        m.gemv_with(&[2.0], &mut out, par);
+        assert_eq!(out, vec![4.0, 6.0]);
+        let mut g = vec![0.0; 1];
+        m.gemv_t_with(&[1.0, 1.0], &mut g, par);
+        assert_eq!(g, vec![5.0]);
     }
 
     #[test]

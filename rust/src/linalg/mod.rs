@@ -13,12 +13,17 @@
 //!   dorothea-like sparse binary designs.
 //! * [`Design`] — a dense-or-sparse design wrapper so the solver and the
 //!   screening rule are storage-agnostic.
+//! * [`par`] — the parallel-execution layer: every hot kernel has a
+//!   `*_with` variant taking a [`ParConfig`] thread budget (hand-rolled
+//!   `std::thread::scope` partitioning; no `rayon` offline).
 
 pub mod dense;
 pub mod ops;
+pub mod par;
 pub mod sparse;
 
 pub use dense::Mat;
+pub use par::ParConfig;
 pub use sparse::Csc;
 
 /// A design matrix: dense or sparse, plus optional column subsetting used
@@ -56,6 +61,14 @@ impl Design {
         }
     }
 
+    /// `out = X v` with a [`ParConfig`] thread budget.
+    pub fn gemv_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        match self {
+            Design::Dense(m) => m.gemv_with(v, out, par),
+            Design::Sparse(m) => m.gemv_with(v, out, par),
+        }
+    }
+
     /// `out = Xᵀ v`.
     pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
         match self {
@@ -64,10 +77,29 @@ impl Design {
         }
     }
 
+    /// `out = Xᵀ v` with a thread budget — the full-gradient KKT sweep
+    /// kernel, the dominant per-path-step cost once screening works.
+    pub fn gemv_t_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        match self {
+            Design::Dense(m) => m.gemv_t_with(v, out, par),
+            Design::Sparse(m) => m.gemv_t_with(v, out, par),
+        }
+    }
+
     /// `out = X[:, cols] v` for a column subset.
     pub fn gemv_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
         match self {
             Design::Dense(m) => m.gemv_subset(cols, v, out),
+            Design::Sparse(m) => m.gemv_subset(cols, v, out),
+        }
+    }
+
+    /// `out = X[:, cols] v` with a thread budget (dense designs split by
+    /// row slab; sparse subsets have no disjoint partition and stay
+    /// serial — screened subsets are small by construction).
+    pub fn gemv_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        match self {
+            Design::Dense(m) => m.gemv_subset_with(cols, v, out, par),
             Design::Sparse(m) => m.gemv_subset(cols, v, out),
         }
     }
@@ -80,11 +112,27 @@ impl Design {
         }
     }
 
+    /// `out = X[:, cols]ᵀ v` with a thread budget.
+    pub fn gemv_t_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        match self {
+            Design::Dense(m) => m.gemv_t_subset_with(cols, v, out, par),
+            Design::Sparse(m) => m.gemv_t_subset_with(cols, v, out, par),
+        }
+    }
+
     /// Squared Euclidean norm of each column.
     pub fn col_sq_norms(&self) -> Vec<f64> {
         match self {
             Design::Dense(m) => m.col_sq_norms(),
             Design::Sparse(m) => m.col_sq_norms(),
+        }
+    }
+
+    /// Squared Euclidean norm of each column, with a thread budget.
+    pub fn col_sq_norms_with(&self, par: ParConfig) -> Vec<f64> {
+        match self {
+            Design::Dense(m) => m.col_sq_norms_with(par),
+            Design::Sparse(m) => m.col_sq_norms_with(par),
         }
     }
 
@@ -97,6 +145,14 @@ impl Design {
         match self {
             Design::Dense(m) => m.standardize(true, true),
             Design::Sparse(m) => m.scale_columns(),
+        }
+    }
+
+    /// [`Design::standardize`] with a thread budget.
+    pub fn standardize_with(&mut self, par: ParConfig) {
+        match self {
+            Design::Dense(m) => m.standardize_with(true, true, par),
+            Design::Sparse(m) => m.scale_columns_with(par),
         }
     }
 

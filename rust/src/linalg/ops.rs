@@ -56,9 +56,13 @@ pub fn cumsum(x: &[f64]) -> Vec<f64> {
 }
 
 /// Sort a copy of `|x|` in decreasing order (the paper's `|x|↓`).
+///
+/// Uses `f64::total_cmp`: a NaN in a gradient (a diverged solve, a bad
+/// request) must not panic the sort — NaNs order first and the KKT
+/// safeguard surfaces the bad fit instead.
 pub fn abs_sorted_desc(x: &[f64]) -> Vec<f64> {
     let mut out: Vec<f64> = x.iter().map(|v| v.abs()).collect();
-    out.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    out.sort_unstable_by(|a, b| b.total_cmp(a));
     out
 }
 
@@ -72,12 +76,14 @@ pub fn order_desc_abs(x: &[f64]) -> Vec<usize> {
     // Sort packed (|value|, index) pairs rather than indices with indirect
     // key lookups — direct key compares are ~2× faster on large p because
     // the comparator stops chasing pointers into `x` (§Perf).
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN in the input
+    // (diverged gradient) must not panic the screening path.
     let mut pairs: Vec<(f64, u32)> = x
         .iter()
         .enumerate()
         .map(|(i, &v)| (v.abs(), i as u32))
         .collect();
-    pairs.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    pairs.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
     pairs.into_iter().map(|(_, i)| i as usize).collect()
 }
 

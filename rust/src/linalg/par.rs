@@ -1,0 +1,199 @@
+//! Parallel-execution layer for the hot linear-algebra kernels.
+//!
+//! No `rayon` is available offline, so parallelism is hand-rolled on
+//! `std::thread::scope`: each kernel partitions its output (or its column
+//! range) into contiguous chunks and runs one scoped thread per chunk.
+//! Two properties drive the design:
+//!
+//! * **Determinism.** Dense kernels partition the *output* (row slabs for
+//!   `Xv`, column slabs for `Xᵀv`), so every output element is accumulated
+//!   in exactly the serial order — parallel and serial results are bitwise
+//!   identical. Only the sparse `Xv` kernel reduces per-thread partial
+//!   accumulators (its scattered writes admit no disjoint output
+//!   partition), which regroups floating-point sums; agreement there is to
+//!   rounding, not bitwise.
+//! * **No oversubscription.** A [`ParConfig`] is a per-call thread
+//!   *budget*, not a pool: `threads == 0` defers to the process-wide
+//!   setting ([`set_global_threads`], CLI `--threads`, or the machine
+//!   default), and callers that already run on a worker pool (serve, CV)
+//!   hand each job `total / workers` threads so kernels never multiply the
+//!   pool's parallelism.
+//!
+//! Scoped threads are spawned per call (~10µs each); the `grain` floor
+//! keeps small problems on the serial path so the reduced solves of a
+//! well-screened path never pay spawn overhead for tiny `E`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread budget override; 0 means "not set, use the
+/// machine default".
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap on the auto-detected thread count (matches the worker pool's cap).
+pub const MAX_AUTO_THREADS: usize = 16;
+
+/// Default minimum scalar operations per thread before a kernel splits.
+/// Below this, thread-spawn latency dominates any parallel win.
+pub const DEFAULT_GRAIN: usize = 32_768;
+
+/// Set the process-wide default thread budget (0 restores auto-detect).
+/// The CLI's `--threads` flag lands here.
+pub fn set_global_threads(n: usize) {
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Resolve the process-wide thread budget: the explicit global setting if
+/// one was made, else `available_parallelism` capped at
+/// [`MAX_AUTO_THREADS`].
+pub fn global_threads() -> usize {
+    let n = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if n > 0 {
+        n
+    } else {
+        detected_parallelism()
+    }
+}
+
+/// The machine's parallelism, capped (1 if detection fails).
+pub fn detected_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_AUTO_THREADS)
+}
+
+/// Per-call parallel-execution budget for the linalg kernels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ParConfig {
+    /// Thread budget; 0 resolves to the process-wide setting at use time.
+    pub threads: usize,
+    /// Minimum scalar operations per thread before splitting (0 disables
+    /// the floor — tests use this to force tiny problems onto the
+    /// parallel path).
+    pub grain: usize,
+}
+
+impl Default for ParConfig {
+    fn default() -> Self {
+        ParConfig { threads: 0, grain: DEFAULT_GRAIN }
+    }
+}
+
+impl ParConfig {
+    /// Always-serial configuration (the old kernel behavior).
+    pub fn serial() -> ParConfig {
+        ParConfig { threads: 1, grain: DEFAULT_GRAIN }
+    }
+
+    /// Budget of `threads` (0 = process-wide setting) with the default
+    /// work floor.
+    pub fn with_threads(threads: usize) -> ParConfig {
+        ParConfig { threads, grain: DEFAULT_GRAIN }
+    }
+
+    /// Exactly `threads` chunks whenever the work has that many partition
+    /// units, regardless of work size. For tests that must exercise the
+    /// parallel code path on small shapes.
+    pub fn exact(threads: usize) -> ParConfig {
+        ParConfig { threads: threads.max(1), grain: 0 }
+    }
+
+    /// The thread budget with the process-wide default applied.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            global_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Number of chunks to split `units` partition units into, given
+    /// `work_per_unit` scalar operations per unit. Returns 1 (serial)
+    /// when the budget is 1, there is at most one unit, or the total work
+    /// is below the grain floor.
+    pub fn plan(&self, units: usize, work_per_unit: usize) -> usize {
+        let t = self.resolved_threads();
+        if t <= 1 || units <= 1 {
+            return 1;
+        }
+        let cap = if self.grain == 0 {
+            t
+        } else {
+            let total = units.saturating_mul(work_per_unit.max(1));
+            (total / self.grain).max(1)
+        };
+        t.min(cap).min(units)
+    }
+}
+
+/// `ceil(len / chunks)` — the slab size the kernels hand `chunks_mut`.
+#[inline]
+pub fn chunk_size(len: usize, chunks: usize) -> usize {
+    debug_assert!(chunks >= 1);
+    (len + chunks - 1) / chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_config_never_splits() {
+        let par = ParConfig::serial();
+        assert_eq!(par.plan(1_000_000, 1_000), 1);
+    }
+
+    #[test]
+    fn exact_config_splits_small_work() {
+        let par = ParConfig::exact(7);
+        assert_eq!(par.plan(100, 1), 7);
+        // ...but never into more chunks than units
+        assert_eq!(par.plan(3, 1), 3);
+        assert_eq!(par.plan(1, 1), 1);
+        assert_eq!(par.plan(0, 1), 1);
+    }
+
+    #[test]
+    fn grain_floor_keeps_tiny_work_serial() {
+        let par = ParConfig { threads: 8, grain: 1000 };
+        assert_eq!(par.plan(10, 10), 1); // 100 ops < grain
+        assert!(par.plan(1000, 1000) > 1); // 1e6 ops >> grain
+    }
+
+    #[test]
+    fn plan_scales_with_work() {
+        let par = ParConfig { threads: 8, grain: 100 };
+        // 250 ops -> at most 2 chunks despite an 8-thread budget
+        assert_eq!(par.plan(250, 1), 2);
+    }
+
+    #[test]
+    fn chunk_size_covers_len() {
+        for len in [0usize, 1, 5, 7, 8, 100] {
+            for chunks in [1usize, 2, 3, 7] {
+                let c = chunk_size(len, chunks);
+                if len > 0 {
+                    assert!(c * chunks >= len);
+                    assert!(c * chunks < len + chunks);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_override_roundtrip() {
+        // NB: global state — restore afterwards so test order can't leak.
+        let before = GLOBAL_THREADS.load(Ordering::Relaxed);
+        set_global_threads(3);
+        assert_eq!(global_threads(), 3);
+        assert_eq!(ParConfig::with_threads(0).resolved_threads(), 3);
+        assert_eq!(ParConfig::with_threads(5).resolved_threads(), 5);
+        set_global_threads(before);
+    }
+
+    #[test]
+    fn detection_is_positive() {
+        assert!(detected_parallelism() >= 1);
+        assert!(detected_parallelism() <= MAX_AUTO_THREADS);
+    }
+}

@@ -1,7 +1,15 @@
 //! Compressed sparse column (CSC) matrix for sparse binary designs like
 //! dorothea (800 × 88119, ~1% density).
+//!
+//! The hot kernels carry `*_with` variants taking a
+//! [`ParConfig`](super::par::ParConfig) thread budget, partitioned by
+//! column ranges. `Xᵀv`-shaped kernels write disjoint output slabs and are
+//! bitwise identical to their serial forms; `Xv` scatters by row index, so
+//! its parallel form reduces per-thread partial accumulators at the
+//! barrier — sums are regrouped and agreement with serial is to rounding.
 
 use super::dense::Mat;
+use super::par::{chunk_size, ParConfig};
 
 /// CSC sparse matrix: `colptr[j]..colptr[j+1]` indexes the nonzeros of
 /// column `j` in `(rowidx, values)`.
@@ -97,6 +105,67 @@ impl Csc {
         }
     }
 
+    /// Mean stored nonzeros per column — the work estimate the parallel
+    /// planner uses.
+    #[inline]
+    fn avg_nnz_per_col(&self) -> usize {
+        self.values.len() / self.ncols.max(1)
+    }
+
+    /// `out = X v` with a thread budget. Column ranges go to scoped
+    /// threads, each accumulating into a private length-`n` buffer that is
+    /// reduced into `out` at the barrier (the scattered row writes admit
+    /// no disjoint output partition). The reduction regroups sums, so the
+    /// result agrees with [`Csc::gemv`] to rounding, not bitwise.
+    pub fn gemv_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), self.ncols);
+        assert_eq!(out.len(), self.nrows);
+        let mut chunks = par.plan(self.ncols, self.avg_nnz_per_col());
+        if par.grain > 0 {
+            // Each extra thread costs an O(n) accumulator + reduction;
+            // don't split further than the nonzeros can repay.
+            chunks = chunks.min((self.values.len() / self.nrows.max(1)).max(1));
+        }
+        if chunks <= 1 {
+            self.gemv(v, out);
+            return;
+        }
+        let span = chunk_size(self.ncols, chunks);
+        let mut partials: Vec<Vec<f64>> = Vec::with_capacity(chunks);
+        std::thread::scope(|scope| {
+            // Step by span (not 0..chunks) so ceil rounding can't spawn
+            // empty-range threads that still allocate O(n) accumulators.
+            let handles: Vec<_> = (0..self.ncols)
+                .step_by(span)
+                .map(|j0| {
+                    let j1 = (j0 + span).min(self.ncols);
+                    scope.spawn(move || {
+                        let mut acc = vec![0.0; self.nrows];
+                        for j in j0..j1 {
+                            let vj = v[j];
+                            if vj == 0.0 {
+                                continue;
+                            }
+                            for k in self.colptr[j]..self.colptr[j + 1] {
+                                acc[self.rowidx[k] as usize] += vj * self.values[k];
+                            }
+                        }
+                        acc
+                    })
+                })
+                .collect();
+            for h in handles {
+                partials.push(h.join().expect("gemv worker panicked"));
+            }
+        });
+        out.fill(0.0);
+        for acc in &partials {
+            for (o, &a) in out.iter_mut().zip(acc) {
+                *o += a;
+            }
+        }
+    }
+
     /// `out = Xᵀ v`.
     pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.nrows);
@@ -108,6 +177,33 @@ impl Csc {
             }
             out[j] = acc;
         }
+    }
+
+    /// `out = Xᵀ v` with a thread budget (disjoint output slabs; bitwise
+    /// identical to [`Csc::gemv_t`]).
+    pub fn gemv_t_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.ncols);
+        let chunks = par.plan(self.ncols, self.avg_nnz_per_col());
+        if chunks <= 1 {
+            self.gemv_t(v, out);
+            return;
+        }
+        let span = chunk_size(self.ncols, chunks);
+        std::thread::scope(|scope| {
+            for (ci, slab) in out.chunks_mut(span).enumerate() {
+                let j0 = ci * span;
+                scope.spawn(move || {
+                    for (o, j) in slab.iter_mut().zip(j0..) {
+                        let mut acc = 0.0;
+                        for k in self.colptr[j]..self.colptr[j + 1] {
+                            acc += self.values[k] * v[self.rowidx[k] as usize];
+                        }
+                        *o = acc;
+                    }
+                });
+            }
+        });
     }
 
     /// `out = X[:, cols] v`.
@@ -137,6 +233,33 @@ impl Csc {
         }
     }
 
+    /// `out = X[:, cols]ᵀ v` with a thread budget (disjoint output
+    /// slabs; bitwise identical to [`Csc::gemv_t_subset`]).
+    pub fn gemv_t_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(out.len(), cols.len());
+        assert_eq!(v.len(), self.nrows);
+        let chunks = par.plan(cols.len(), self.avg_nnz_per_col());
+        if chunks <= 1 {
+            self.gemv_t_subset(cols, v, out);
+            return;
+        }
+        let span = chunk_size(cols.len(), chunks);
+        std::thread::scope(|scope| {
+            for (ci, slab) in out.chunks_mut(span).enumerate() {
+                let sub = &cols[ci * span..ci * span + slab.len()];
+                scope.spawn(move || {
+                    for (o, &j) in slab.iter_mut().zip(sub) {
+                        let mut acc = 0.0;
+                        for k in self.colptr[j]..self.colptr[j + 1] {
+                            acc += self.values[k] * v[self.rowidx[k] as usize];
+                        }
+                        *o = acc;
+                    }
+                });
+            }
+        });
+    }
+
     /// Squared ℓ2 norm of every column.
     pub fn col_sq_norms(&self) -> Vec<f64> {
         (0..self.ncols)
@@ -147,6 +270,30 @@ impl Csc {
                     .sum()
             })
             .collect()
+    }
+
+    /// Squared ℓ2 norm of every column, with a thread budget.
+    pub fn col_sq_norms_with(&self, par: ParConfig) -> Vec<f64> {
+        let chunks = par.plan(self.ncols, self.avg_nnz_per_col());
+        if chunks <= 1 {
+            return self.col_sq_norms();
+        }
+        let mut out = vec![0.0; self.ncols];
+        let span = chunk_size(self.ncols, chunks);
+        std::thread::scope(|scope| {
+            for (ci, slab) in out.chunks_mut(span).enumerate() {
+                let j0 = ci * span;
+                scope.spawn(move || {
+                    for (o, j) in slab.iter_mut().zip(j0..) {
+                        *o = self.values[self.colptr[j]..self.colptr[j + 1]]
+                            .iter()
+                            .map(|v| v * v)
+                            .sum();
+                    }
+                });
+            }
+        });
+        out
     }
 
     /// Scale columns to unit ℓ2 norm (no centering: it would densify).
@@ -164,6 +311,47 @@ impl Csc {
                 }
             }
         }
+    }
+
+    /// [`Csc::scale_columns`] with a thread budget. Column ranges map to
+    /// contiguous disjoint spans of the value buffer (`split_at_mut`), so
+    /// threads scale without sharing; per-column arithmetic is unchanged.
+    pub fn scale_columns_with(&mut self, par: ParConfig) {
+        let chunks = par.plan(self.ncols, 2 * self.avg_nnz_per_col());
+        if chunks <= 1 {
+            self.scale_columns();
+            return;
+        }
+        let ncols = self.ncols;
+        let span = chunk_size(ncols, chunks);
+        let colptr = &self.colptr;
+        let mut rest: &mut [f64] = &mut self.values;
+        let mut offset = 0usize;
+        std::thread::scope(|scope| {
+            let mut j0 = 0usize;
+            while j0 < ncols {
+                let j1 = (j0 + span).min(ncols);
+                let end = colptr[j1];
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(end - offset);
+                rest = tail;
+                let base = offset;
+                offset = end;
+                let ptrs = &colptr[j0..=j1];
+                scope.spawn(move || {
+                    for w in ptrs.windows(2) {
+                        let seg = &mut head[w[0] - base..w[1] - base];
+                        let norm: f64 = seg.iter().map(|v| v * v).sum::<f64>().sqrt();
+                        if norm > 0.0 {
+                            let inv = 1.0 / norm;
+                            for v in seg.iter_mut() {
+                                *v *= inv;
+                            }
+                        }
+                    }
+                });
+                j0 = j1;
+            }
+        });
     }
 
     /// Extract rows into a new CSC matrix (CV fold splitting).
@@ -252,6 +440,40 @@ mod tests {
             if norm > 0.0 {
                 assert!((norm - 1.0).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn parallel_kernels_match_serial() {
+        use crate::linalg::par::ParConfig;
+        let mut rng = Pcg64::new(5);
+        let d = random_dense(&mut rng, 29, 13, 0.35);
+        let s = Csc::from_dense(&d);
+        let v: Vec<f64> = (0..13).map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..29).map(|_| rng.normal()).collect();
+        let cols = [0usize, 3, 4, 9, 12];
+        for t in [2usize, 3, 7, 32] {
+            let par = ParConfig::exact(t);
+            let (mut a, mut b) = (vec![0.0; 29], vec![0.0; 29]);
+            s.gemv(&v, &mut a);
+            s.gemv_with(&v, &mut b, par);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12, "gemv t={t}");
+            }
+            let (mut c, mut e) = (vec![0.0; 13], vec![0.0; 13]);
+            s.gemv_t(&w, &mut c);
+            s.gemv_t_with(&w, &mut e, par);
+            assert_eq!(c, e, "gemv_t t={t}");
+            let (mut f, mut g) = (vec![0.0; cols.len()], vec![0.0; cols.len()]);
+            s.gemv_t_subset(&cols, &w, &mut f);
+            s.gemv_t_subset_with(&cols, &w, &mut g, par);
+            assert_eq!(f, g, "gemv_t_subset t={t}");
+            assert_eq!(s.col_sq_norms(), s.col_sq_norms_with(par), "col_sq_norms t={t}");
+            let mut ss = s.clone();
+            let mut sp = s.clone();
+            ss.scale_columns();
+            sp.scale_columns_with(par);
+            assert_eq!(ss.to_dense(), sp.to_dense(), "scale_columns t={t}");
         }
     }
 

@@ -44,15 +44,23 @@ fn main() {
         .opt("grad-engine", "native", "full-gradient engine: native|xla")
         .opt("folds", "5", "cv folds")
         .opt("repeats", "1", "cv repeats")
-        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("threads", "0", "worker/kernel threads (0 = all cores; fit: parallel linalg backend, cv/serve: pool size)")
         .opt("seed", "42", "rng seed")
         .flag("no-early-stop", "disable the path termination rules")
         .opt("socket", "/tmp/slope-serve.sock", "serve/client: unix socket path")
         .opt("queue", "64", "serve: admission-queue capacity (backpressure bound)")
+        .opt("fit-threads", "0", "serve: kernel threads per fit job (0 = threads split across the pool)")
         .opt("json", "", "client: a single request line to send")
         .flag("stdio", "serve: speak NDJSON over stdin/stdout instead of a socket")
         .flag("no-cache", "serve: disable the warm-start/model cache")
         .parse();
+
+    // An explicit --threads pins the process-wide kernel budget for
+    // every parallel linalg call (the pools still size themselves from
+    // their own flags).
+    if parsed.provided("threads") {
+        slope_screen::linalg::par::set_global_threads(parsed.usize("threads"));
+    }
 
     let cmd = parsed
         .positional()
@@ -143,7 +151,8 @@ fn build_opts(parsed: &slope_screen::cli::Parsed, prob: &Problem) -> PathOptions
 
 fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
     let prob = build_problem(parsed);
-    let opts = build_opts(parsed, &prob);
+    // --threads routes to the parallel backend (0 = process default).
+    let opts = build_opts(parsed, &prob).with_threads(parsed.usize("threads"));
     let use_xla = parsed.get("grad-engine") == "xla";
 
     let fit = if use_xla {
@@ -217,6 +226,7 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
         threads: parsed.usize("threads"),
         queue: parsed.usize("queue"),
         cache: !parsed.bool("no-cache"),
+        fit_threads: parsed.usize("fit-threads"),
     };
     let server = std::sync::Arc::new(Server::new(cfg));
     if parsed.bool("stdio") {

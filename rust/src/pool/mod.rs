@@ -63,10 +63,11 @@ impl WorkerPool {
         Self { queue, pending, handles }
     }
 
-    /// Pool sized to the machine (`available_parallelism`, capped).
+    /// Pool sized to the machine (`available_parallelism`, capped — the
+    /// same probe the `linalg::par` backend uses, so pool and kernel
+    /// budgets always agree).
     pub fn with_default_size() -> Self {
-        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n.min(16))
+        Self::new(crate::linalg::par::detected_parallelism())
     }
 
     /// Number of worker threads.
@@ -108,6 +109,15 @@ impl Drop for WorkerPool {
             let _ = h.join();
         }
     }
+}
+
+/// Kernel-thread budget for one job when up to `workers` jobs may run
+/// concurrently on a pool: the process-wide thread budget split evenly,
+/// never below 1. This is how the serve scheduler and the CV driver keep
+/// the pool's parallelism and the `linalg::par` backend from
+/// multiplying into oversubscription.
+pub fn fit_thread_budget(workers: usize) -> usize {
+    (crate::linalg::par::global_threads() / workers.max(1)).max(1)
 }
 
 /// Run `f(i)` for every `i in 0..n` across `threads` scoped workers.

@@ -291,7 +291,7 @@ impl DatasetSpec {
                         means.push(mean);
                         inv_norms.push(if norm > 0.0 { 1.0 / norm } else { 0.0 });
                     }
-                    mat.standardize(true, true);
+                    mat.standardize_with(true, true, crate::linalg::ParConfig::default());
                     Some(ColumnTransform { means, inv_norms })
                 } else {
                     None
@@ -363,6 +363,11 @@ pub struct ModelSpec {
     /// `auto|none|strong|previous` — `auto` lets the scheduler choose from
     /// cache state.
     pub screen: String,
+    /// Kernel thread budget for this request's fit (0 = the scheduler's
+    /// per-job split of the machine). Like `screen`, a performance knob
+    /// that never changes the solution — deliberately not part of the
+    /// cache identity.
+    pub threads: usize,
 }
 
 impl ModelSpec {
@@ -373,9 +378,13 @@ impl ModelSpec {
             q: f64_field(j, "q", 0.1)?,
             path_length: usize_field(j, "path_length", 50)?,
             screen: str_field(j, "screen", "auto")?,
+            threads: usize_field(j, "threads", 0)?,
         };
         if spec.path_length == 0 {
             return Err("path_length must be >= 1".to_string());
+        }
+        if spec.threads > 256 {
+            return Err(format!("threads must be <= 256, got {}", spec.threads));
         }
         match spec.lambda.as_str() {
             "bh" | "gaussian-seq" => {
@@ -398,10 +407,14 @@ impl ModelSpec {
         Ok(spec)
     }
 
-    /// Cache key within a dataset entry. `screen` is deliberately *not*
-    /// part of the identity: screening is a per-job performance strategy
-    /// that never changes the solution (the KKT safeguard guarantees it),
-    /// so requests differing only in `screen` share one fitted model.
+    /// Cache key within a dataset entry. `screen` and `threads` are
+    /// deliberately *not* part of the identity: both are per-job
+    /// performance strategies that never change the solution beyond
+    /// solver tolerance (the KKT safeguard guarantees it for screening;
+    /// the parallel dense kernels are bitwise-deterministic, and the one
+    /// reduction-based sparse kernel agrees to rounding — far inside the
+    /// fit tolerance), so requests differing only in them share one
+    /// fitted model.
     pub fn key(&self) -> String {
         format!("{}:q={}:len={}", self.lambda, self.q, self.path_length)
     }
@@ -794,6 +807,24 @@ mod tests {
         let m2 = spec2.materialize().unwrap();
         assert_eq!(m2.intercept, 0.0);
         assert_eq!(m2.problem.y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn threads_is_a_perf_knob_not_an_identity() {
+        let a = ModelSpec::parse(&Json::parse(r#"{"lambda": "bh", "q": 0.05}"#).unwrap()).unwrap();
+        let b = ModelSpec::parse(
+            &Json::parse(r#"{"lambda": "bh", "q": 0.05, "threads": 4}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a.threads, 0);
+        assert_eq!(b.threads, 4);
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.point_key(), b.point_key());
+        // absurd budgets are rejected, not obeyed
+        assert!(ModelSpec::parse(
+            &Json::parse(r#"{"lambda": "bh", "q": 0.05, "threads": 100000}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

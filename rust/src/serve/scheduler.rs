@@ -29,21 +29,26 @@ pub struct Scheduler {
     pool: WorkerPool,
     gate: Arc<(Mutex<GateState>, Condvar)>,
     capacity: usize,
+    fit_threads: usize,
 }
 
 impl Scheduler {
     /// `threads = 0` sizes the pool to the machine; `capacity` bounds the
-    /// number of admitted (queued + running) jobs.
+    /// number of admitted (queued + running) jobs. The per-job kernel
+    /// thread budget defaults to the machine budget split across the
+    /// pool's workers (override with [`Scheduler::set_fit_threads`]).
     pub fn new(threads: usize, capacity: usize) -> Scheduler {
         let pool = if threads == 0 {
             WorkerPool::with_default_size()
         } else {
             WorkerPool::new(threads)
         };
+        let fit_threads = crate::pool::fit_thread_budget(pool.size());
         Scheduler {
             pool,
             gate: Arc::new((Mutex::new(GateState::default()), Condvar::new())),
             capacity: capacity.max(1),
+            fit_threads,
         }
     }
 
@@ -55,6 +60,25 @@ impl Scheduler {
     /// Admission capacity.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Kernel threads each fit job may use (the `linalg::par` budget
+    /// handed to [`crate::slope::path::PathOptions::threads`]): with
+    /// `pool.size()` fits running at once, each gets its share of the
+    /// machine so concurrent fits don't oversubscribe it.
+    pub fn fit_threads(&self) -> usize {
+        self.fit_threads
+    }
+
+    /// Override the per-job kernel thread budget (serve's
+    /// `--fit-threads` / `fit_threads` config; 0 restores the automatic
+    /// split).
+    pub fn set_fit_threads(&mut self, fit_threads: usize) {
+        self.fit_threads = if fit_threads == 0 {
+            crate::pool::fit_thread_budget(self.pool.size())
+        } else {
+            fit_threads
+        };
     }
 
     /// Currently admitted jobs.
@@ -177,6 +201,20 @@ mod tests {
             }
         });
         assert!(peak.load(Ordering::SeqCst) <= 2, "admission cap exceeded");
+    }
+
+    #[test]
+    fn fit_thread_budget_splits_the_machine() {
+        let mut sched = Scheduler::new(4, 8);
+        // auto budget: total/workers, at least 1
+        assert!(sched.fit_threads() >= 1);
+        assert!(sched.fit_threads() <= crate::linalg::par::MAX_AUTO_THREADS);
+        // explicit override wins; 0 restores the automatic split
+        sched.set_fit_threads(3);
+        assert_eq!(sched.fit_threads(), 3);
+        sched.set_fit_threads(0);
+        // (compared loosely: another test may race the global setting)
+        assert!(sched.fit_threads() >= 1);
     }
 
     #[test]

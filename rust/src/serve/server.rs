@@ -30,11 +30,15 @@ pub struct ServerConfig {
     pub queue: usize,
     /// Enable the warm-start/model cache (off = cold baseline).
     pub cache: bool,
+    /// Kernel threads per fit job for the `linalg::par` backend (0 = the
+    /// machine budget split across the worker pool, so concurrent fits
+    /// never oversubscribe; a per-request `threads` field overrides it).
+    pub fit_threads: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { threads: 0, queue: 64, cache: true }
+        ServerConfig { threads: 0, queue: 64, cache: true, fit_threads: 0 }
     }
 }
 
@@ -50,11 +54,34 @@ pub struct Server {
 impl Server {
     /// Build a server; spawns the worker pool immediately.
     pub fn new(cfg: ServerConfig) -> Server {
+        let mut sched = Scheduler::new(cfg.threads, cfg.queue);
+        if cfg.fit_threads > 0 {
+            sched.set_fit_threads(cfg.fit_threads);
+        }
         Server {
             registry: Registry::new(cfg.cache),
-            sched: Scheduler::new(cfg.threads, cfg.queue),
+            sched,
             metrics: Metrics::new(),
             shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// The kernel thread budget one fit job runs under: the request's
+    /// explicit `threads` if given, else the scheduler's per-job split.
+    ///
+    /// The override exists so a client the operator trusts can exceed
+    /// the conservative split for a latency-critical fit; it is clamped
+    /// to the process-wide budget, which bounds any *single* job to the
+    /// machine the operator configured. It does not bound the aggregate:
+    /// if every concurrent job requests the full budget the box can be
+    /// transiently oversubscribed by up to the pool width — operators
+    /// who need a hard aggregate cap should leave per-request `threads`
+    /// unset (the default split never oversubscribes).
+    fn job_threads(&self, model: &ModelSpec) -> usize {
+        if model.threads > 0 {
+            model.threads.min(crate::linalg::par::global_threads())
+        } else {
+            self.sched.fit_threads()
         }
     }
 
@@ -118,7 +145,10 @@ impl Server {
             let warm_seed = entry.any_ready_seed();
             let warm = warm_seed.is_some();
             let strategy = choose_strategy(&model.screen, warm)?;
-            let opts = model.path_options(entry.problem.as_ref())?.with_strategy(strategy);
+            let opts = model
+                .path_options(entry.problem.as_ref())?
+                .with_strategy(strategy)
+                .with_threads(self.job_threads(model));
             let prob = Arc::clone(&entry.problem);
             let fit = self.sched.run(move || {
                 let gradient = NativeGradient(prob.as_ref());
@@ -201,7 +231,10 @@ impl Server {
         let prior = entry.point_state(&key);
         let warm = prior.is_some();
         let strategy = choose_strategy(&model.screen, warm)?;
-        let opts = model.path_options(entry.problem.as_ref())?.with_strategy(strategy);
+        let opts = model
+            .path_options(entry.problem.as_ref())?
+            .with_strategy(strategy)
+            .with_threads(self.job_threads(model));
         let prob = Arc::clone(&entry.problem);
         let (point, sigma_max) = self.sched.run(move || {
             let gradient = NativeGradient(prob.as_ref());
@@ -326,6 +359,7 @@ impl Server {
                 "server",
                 Json::obj(vec![
                     ("threads", Json::Num(self.sched.threads() as f64)),
+                    ("fit_threads", Json::Num(self.sched.fit_threads() as f64)),
                     ("queue_capacity", Json::Num(self.sched.capacity() as f64)),
                     ("in_flight", Json::Num(self.sched.in_flight() as f64)),
                     ("cache", Json::Bool(self.registry.cache_enabled())),
@@ -447,7 +481,7 @@ mod tests {
     use super::*;
 
     fn server() -> Server {
-        Server::new(ServerConfig { threads: 2, queue: 8, cache: true })
+        Server::new(ServerConfig { threads: 2, queue: 8, cache: true, ..Default::default() })
     }
 
     fn parse_ok(response: &str) -> Json {
@@ -654,6 +688,38 @@ mod tests {
         let j = Json::parse(&resp).unwrap();
         assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
         assert_eq!(j.field("id").unwrap().as_usize(), Some(41));
+    }
+
+    #[test]
+    fn fit_threads_budget_is_exposed_and_overridable() {
+        let srv = Server::new(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            fit_threads: 3,
+        });
+        let stats = parse_ok(&srv.handle_line(r#"{"id": 1, "op": "stats"}"#));
+        let ft = stats
+            .field("server")
+            .unwrap()
+            .field("fit_threads")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(ft, 3);
+        // a per-request budget is accepted (and does not change the result:
+        // the parallel backend is deterministic)
+        let line = protocol::request_line(
+            2,
+            "fit_path",
+            vec![
+                ("dataset", protocol::synth_dataset_json(20, 30, 3, 0.1, "gaussian", 77)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(5.0)),
+                ("threads", Json::Num(2.0)),
+            ],
+        );
+        parse_ok(&srv.handle_line(&line));
     }
 
     #[test]

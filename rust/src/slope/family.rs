@@ -13,7 +13,7 @@
 //! penalty (this matches the R `SLOPE` package, which penalizes the
 //! whole coefficient matrix).
 
-use crate::linalg::Design;
+use crate::linalg::{Design, ParConfig};
 
 /// GLM family: the smooth objective `f` of problem (1).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -223,21 +223,33 @@ impl Problem {
     /// `η = Xβ` per class into `eta` (length `n·m`); `beta` is flattened
     /// class-major of length `p·m`.
     pub fn eta(&self, beta: &[f64], eta: &mut [f64]) {
+        self.eta_with(beta, eta, ParConfig::serial());
+    }
+
+    /// [`Problem::eta`] with a kernel thread budget.
+    pub fn eta_with(&self, beta: &[f64], eta: &mut [f64], par: ParConfig) {
         let (n, p, m) = (self.n(), self.p(), self.family.n_classes());
         debug_assert_eq!(beta.len(), p * m);
         debug_assert_eq!(eta.len(), n * m);
         for l in 0..m {
-            self.x.gemv(&beta[l * p..(l + 1) * p], &mut eta[l * n..(l + 1) * n]);
+            self.x.gemv_with(&beta[l * p..(l + 1) * p], &mut eta[l * n..(l + 1) * n], par);
         }
     }
 
     /// Full gradient `∇f(β) = Xᵀ h` per class into `grad` (length `p·m`).
     pub fn gradient_from_h(&self, h: &[f64], grad: &mut [f64]) {
+        self.gradient_from_h_with(h, grad, ParConfig::serial());
+    }
+
+    /// [`Problem::gradient_from_h`] with a kernel thread budget — the
+    /// full-design `Xᵀh` sweep is the path driver's dominant non-reduced
+    /// cost, embarrassingly parallel across columns.
+    pub fn gradient_from_h_with(&self, h: &[f64], grad: &mut [f64], par: ParConfig) {
         let (n, p, m) = (self.n(), self.p(), self.family.n_classes());
         debug_assert_eq!(h.len(), n * m);
         debug_assert_eq!(grad.len(), p * m);
         for l in 0..m {
-            self.x.gemv_t(&h[l * n..(l + 1) * n], &mut grad[l * p..(l + 1) * p]);
+            self.x.gemv_t_with(&h[l * n..(l + 1) * n], &mut grad[l * p..(l + 1) * p], par);
         }
     }
 

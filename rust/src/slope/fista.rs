@@ -9,6 +9,7 @@
 //! the largest weights of λ.
 
 use crate::linalg::ops::inf_norm;
+use crate::linalg::ParConfig;
 use crate::slope::family::Problem;
 use crate::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
 use crate::slope::sorted::sl1_norm;
@@ -49,13 +50,19 @@ pub struct FistaResult {
     pub iterations: usize,
     /// Whether the tolerance was met before `max_iter`.
     pub converged: bool,
+    /// Linear predictor `η = X_E β_E` at the solution (length `n·m`,
+    /// a direct kernel product — not the extrapolation cache). The path
+    /// driver's KKT sweep starts from this instead of recomputing it.
+    pub eta: Vec<f64>,
 }
 
 /// The reduced view of a [`Problem`] restricted to coefficient set `E`:
 /// per-class column lists so `η` and gradients touch only screened columns.
 ///
-/// Internal gather/scatter scratch lives behind a `RefCell` so the hot
-/// FISTA loop performs zero allocations per iteration (§Perf).
+/// Gather/scatter scratch is a *per-call* buffer the caller owns (see
+/// [`Reduced::make_scratch`]) — the hot FISTA loop still performs zero
+/// allocations per iteration, and `Reduced` itself is `Sync`, so a shared
+/// reference can cross the scoped threads of the parallel backend.
 pub struct Reduced<'a> {
     prob: &'a Problem,
     /// Flattened coefficient indices in `E` (ascending).
@@ -65,12 +72,16 @@ pub struct Reduced<'a> {
     /// For each class, the positions into the reduced vector of the
     /// entries of that class (parallel to `cols_per_class[class]`).
     pos_per_class: Vec<Vec<usize>>,
-    /// Gather/scatter scratch sized to the largest class slice.
-    scratch: std::cell::RefCell<Vec<f64>>,
+    /// Largest per-class slice — the scratch size `eta`/`gradient` need.
+    max_slice: usize,
+    /// Thread budget for the subset kernels.
+    par: ParConfig,
 }
 
 impl<'a> Reduced<'a> {
     /// Build the reduced view. `coefs` must be ascending and in range.
+    /// The kernel thread budget defaults to the process-wide setting;
+    /// override it with [`Reduced::with_par`].
     pub fn new(prob: &'a Problem, coefs: Vec<usize>) -> Self {
         let p = prob.p();
         let m = prob.family.n_classes();
@@ -89,8 +100,15 @@ impl<'a> Reduced<'a> {
             coefs,
             cols_per_class,
             pos_per_class,
-            scratch: std::cell::RefCell::new(vec![0.0; max_slice]),
+            max_slice,
+            par: ParConfig::default(),
         }
+    }
+
+    /// Builder: set the kernel thread budget.
+    pub fn with_par(mut self, par: ParConfig) -> Self {
+        self.par = par;
+        self
     }
 
     /// Number of reduced coefficients.
@@ -103,33 +121,45 @@ impl<'a> Reduced<'a> {
         self.coefs.is_empty()
     }
 
-    /// `η = X_E β_E` (class-major, length `n·m`). Allocation-free.
-    pub fn eta(&self, beta: &[f64], eta: &mut [f64]) {
+    /// Allocate a gather/scatter scratch buffer for [`Reduced::eta`] /
+    /// [`Reduced::gradient`]. One per solve, reused every iteration.
+    pub fn make_scratch(&self) -> Vec<f64> {
+        vec![0.0; self.max_slice]
+    }
+
+    /// `η = X_E β_E` (class-major, length `n·m`). Allocation-free given a
+    /// [`Reduced::make_scratch`] buffer.
+    pub fn eta(&self, beta: &[f64], eta: &mut [f64], scratch: &mut [f64]) {
         let n = self.prob.n();
         let m = self.prob.family.n_classes();
         debug_assert_eq!(beta.len(), self.len());
         debug_assert_eq!(eta.len(), n * m);
-        let mut scratch = self.scratch.borrow_mut();
+        debug_assert!(scratch.len() >= self.max_slice);
         for (l, cols) in self.cols_per_class.iter().enumerate() {
             let sub = &mut scratch[..cols.len()];
             for (s, &pos) in sub.iter_mut().zip(&self.pos_per_class[l]) {
                 *s = beta[pos];
             }
-            self.prob.x.gemv_subset(cols, sub, &mut eta[l * n..(l + 1) * n]);
+            self.prob
+                .x
+                .gemv_subset_with(cols, sub, &mut eta[l * n..(l + 1) * n], self.par);
         }
     }
 
-    /// Reduced gradient `X_Eᵀ h` (aligned with `coefs`). Allocation-free.
-    pub fn gradient(&self, h: &[f64], grad: &mut [f64]) {
+    /// Reduced gradient `X_Eᵀ h` (aligned with `coefs`). Allocation-free
+    /// given a [`Reduced::make_scratch`] buffer.
+    pub fn gradient(&self, h: &[f64], grad: &mut [f64], scratch: &mut [f64]) {
         let n = self.prob.n();
         debug_assert_eq!(grad.len(), self.len());
-        let mut scratch = self.scratch.borrow_mut();
+        debug_assert!(scratch.len() >= self.max_slice);
         for (l, cols) in self.cols_per_class.iter().enumerate() {
             if cols.is_empty() {
                 continue;
             }
             let out = &mut scratch[..cols.len()];
-            self.prob.x.gemv_t_subset(cols, &h[l * n..(l + 1) * n], out);
+            self.prob
+                .x
+                .gemv_t_subset_with(cols, &h[l * n..(l + 1) * n], out, self.par);
             for (o, &pos) in out.iter().zip(&self.pos_per_class[l]) {
                 grad[pos] = *o;
             }
@@ -148,10 +178,11 @@ impl<'a> Reduced<'a> {
         let mut v: Vec<f64> = (0..k).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
         let mut eta = vec![0.0; n * m];
         let mut w = vec![0.0; k];
+        let mut scratch = self.make_scratch();
         let mut est = 1.0;
         for _ in 0..iters {
-            self.eta(&v, &mut eta);
-            self.gradient(&eta, &mut w);
+            self.eta(&v, &mut eta, &mut scratch);
+            self.gradient(&eta, &mut w, &mut scratch);
             let norm = w.iter().map(|x| x * x).sum::<f64>().sqrt();
             if norm < 1e-300 {
                 return 1.0;
@@ -192,9 +223,17 @@ pub fn solve(
     let lam = &lambda_scaled[..k];
 
     if k == 0 {
+        let eta = vec![0.0; n * m];
         let mut h = vec![0.0; n * m];
-        let loss = prob.family.h_loss(&vec![0.0; n * m], &prob.y, &mut h);
-        return FistaResult { beta: Vec::new(), loss, objective: loss, iterations: 0, converged: true };
+        let loss = prob.family.h_loss(&eta, &prob.y, &mut h);
+        return FistaResult {
+            beta: Vec::new(),
+            loss,
+            objective: loss,
+            iterations: 0,
+            converged: true,
+            eta,
+        };
     }
 
     let mut beta: Vec<f64> = match warm {
@@ -215,13 +254,27 @@ pub fn solve(
     }
     .max(1e-10);
 
-    let mut eta = vec![0.0; n * m];
+    // η caches: the linear predictor is linear in β, so η at the
+    // extrapolated point follows the same momentum recurrence as z itself
+    // — `η(z⁺) = η(cand) + coef·(η(cand) − η(β))`. That replaces one of
+    // the two design-matrix products each FISTA iteration used to pay
+    // (for the Gaussian family this is exactly a cached residual
+    // `r = η − y`, maintained incrementally through `h`). Rounding does
+    // not compound: `eta_beta` and `eta_cand` are direct kernel products
+    // every iteration, so `eta_z` is always one extrapolation step away
+    // from fresh values — exactly like `z` itself.
+    let mut scratch = reduced.make_scratch();
+    let mut eta_z = vec![0.0; n * m];
+    let mut eta_cand = vec![0.0; n * m];
     let mut h = vec![0.0; n * m];
     let mut grad = vec![0.0; k];
     let mut cand = vec![0.0; k];
     let mut step = vec![0.0; k];
     let mut ws = ProxWorkspace::new(k);
     let mut lam_over_l = vec![0.0; k];
+
+    reduced.eta(&z, &mut eta_z, &mut scratch);
+    let mut eta_beta = eta_z.clone(); // z == β at entry
 
     let mut iterations = 0;
     let mut converged = false;
@@ -230,9 +283,8 @@ pub fn solve(
     for iter in 0..cfg.max_iter {
         iterations = iter + 1;
         // Gradient at the extrapolated point z.
-        reduced.eta(&z, &mut eta);
-        let loss_z = prob.family.h_loss(&eta, &prob.y, &mut h);
-        reduced.gradient(&h, &mut grad);
+        let loss_z = prob.family.h_loss(&eta_z, &prob.y, &mut h);
+        reduced.gradient(&h, &mut grad, &mut scratch);
 
         // Backtracking line search on L.
         let mut loss_cand;
@@ -243,8 +295,8 @@ pub fn solve(
                 lam_over_l[i] = lam[i] * inv_l;
             }
             prox_sorted_l1_into(&step, &lam_over_l, &mut ws, &mut cand);
-            reduced.eta(&cand, &mut eta);
-            loss_cand = prob.family.h_loss(&eta, &prob.y, &mut h);
+            reduced.eta(&cand, &mut eta_cand, &mut scratch);
+            loss_cand = prob.family.h_loss(&eta_cand, &prob.y, &mut h);
             // Majorization check: f(cand) ≤ f(z) + ⟨∇f(z), cand−z⟩ + L/2‖cand−z‖².
             let mut lin = 0.0;
             let mut sq = 0.0;
@@ -283,13 +335,19 @@ pub fn solve(
             t = 1.0;
         }
 
-        // Momentum update.
+        // Momentum update, with η carried along the same recurrence.
         let t_next = 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt());
         let coef = (t - 1.0) / t_next;
         for i in 0..k {
             let prev = beta[i];
             beta[i] = cand[i];
             z[i] = cand[i] + coef * (cand[i] - prev);
+        }
+        for i in 0..n * m {
+            let e_prev = eta_beta[i];
+            let e_cand = eta_cand[i];
+            eta_z[i] = e_cand + coef * (e_cand - e_prev);
+            eta_beta[i] = e_cand; // β := cand, so η(β) := η(cand) (a fresh product)
         }
         t = t_next;
 
@@ -300,10 +358,11 @@ pub fn solve(
                     break;
                 }
                 Some(kkt_tol) => {
-                    // Verify true stationarity at beta (not z).
-                    reduced.eta(&beta, &mut eta);
-                    prob.family.h_loss(&eta, &prob.y, &mut h);
-                    reduced.gradient(&h, &mut grad);
+                    // Verify true stationarity at beta (not z). β = cand
+                    // here, so `h` — just computed from the fresh η(cand)
+                    // in the line search — already holds the working
+                    // residual at β; no extra η product is needed.
+                    reduced.gradient(&h, &mut grad, &mut scratch);
                     if crate::slope::subdiff::kkt_optimal(&beta, &grad, lam, kkt_tol) {
                         converged = true;
                         break;
@@ -320,11 +379,12 @@ pub fn solve(
         let _ = loss_cand;
     }
 
-    // Final loss/objective at beta.
-    reduced.eta(&beta, &mut eta);
-    let loss = prob.family.h_loss(&eta, &prob.y, &mut h);
+    // Final loss/objective at beta. `eta_beta` is η(β) from a direct
+    // kernel product at every exit (warm entry included), so no closing
+    // recomputation is needed.
+    let loss = prob.family.h_loss(&eta_beta, &prob.y, &mut h);
     let objective = loss + sl1_norm(&beta, lam);
-    FistaResult { beta, loss, objective, iterations, converged }
+    FistaResult { beta, loss, objective, iterations, converged, eta: eta_beta }
 }
 
 #[cfg(test)]
@@ -451,15 +511,43 @@ mod tests {
         let (_, g_full) = prob.loss_grad(&full);
         let n = prob.n();
         let m = prob.family.n_classes();
+        let mut scratch = red.make_scratch();
         let mut eta = vec![0.0; n * m];
-        red.eta(&beta, &mut eta);
+        red.eta(&beta, &mut eta, &mut scratch);
         let mut h = vec![0.0; n * m];
         prob.family.h_loss(&eta, &prob.y, &mut h);
         let mut g_red = vec![0.0; red.len()];
-        red.gradient(&h, &mut g_red);
+        red.gradient(&h, &mut g_red, &mut scratch);
         for (i, &c) in coefs.iter().enumerate() {
             assert!((g_red[i] - g_full[c]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn reduced_is_sync() {
+        // The parallel backend shares `&Reduced` across scoped threads;
+        // the per-call scratch design (no RefCell) is what makes this hold.
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<Reduced<'static>>();
+    }
+
+    #[test]
+    fn result_eta_is_the_solution_eta() {
+        let prob = random_problem(7, 30, 10, Family::Gaussian);
+        let lam: Vec<f64> = bh_sequence(10, 0.1).iter().map(|l| l * 0.1).collect();
+        let red = full_reduced(&prob);
+        let res = solve(&red, &lam, None, &FistaConfig::default());
+        let mut eta = vec![0.0; prob.n()];
+        let mut scratch = red.make_scratch();
+        red.eta(&res.beta, &mut eta, &mut scratch);
+        assert_eq!(eta.len(), res.eta.len());
+        for (a, b) in eta.iter().zip(&res.eta) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+        // and the recorded loss is the loss of that eta
+        let mut h = vec![0.0; prob.n()];
+        let loss = prob.family.h_loss(&res.eta, &prob.y, &mut h);
+        assert!((loss - res.loss).abs() < 1e-12);
     }
 
     #[test]

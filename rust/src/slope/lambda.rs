@@ -141,7 +141,7 @@ impl PathConfig {
 /// `σ(1) = max( cumsum(|∇f(0)|↓) ⊘ cumsum(λ) )` (§3.1.2).
 pub fn sigma_max(grad_at_zero: &[f64], lambda: &[f64]) -> f64 {
     let mut mags: Vec<f64> = grad_at_zero.iter().map(|g| g.abs()).collect();
-    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.sort_unstable_by(|a, b| b.total_cmp(a)); // NaN-tolerant: a bad y must error, not panic
     let cm = cumsum(&mags);
     let cl = cumsum(lambda);
     cm.iter()

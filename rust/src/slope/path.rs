@@ -12,10 +12,11 @@
 use std::time::Instant;
 
 use crate::linalg::ops::sq_norm;
+use crate::linalg::ParConfig;
 use crate::slope::family::{Family, Problem};
 use crate::slope::fista::{solve, FistaConfig, Reduced};
 use crate::slope::lambda::{sigma_grid, sigma_max, PathConfig};
-use crate::slope::screen::{gap_safe_set, strong_set};
+use crate::slope::screen::{gap_safe_set, strong_set_with, StrongWorkspace};
 use crate::slope::sorted::{support, unique_nonzero_magnitudes};
 
 /// Screening strategy along the path.
@@ -53,6 +54,14 @@ pub trait FullGradient {
     /// pays the `Xᵀh` product).
     fn full_grad(&self, beta: &[f64], h: &[f64], grad: &mut [f64]);
 
+    /// [`FullGradient::full_grad`] with a kernel thread budget. The
+    /// default ignores the budget (engines that run off-CPU, like the
+    /// PJRT artifact, schedule for themselves); the native engine routes
+    /// it into the parallel `Xᵀh` kernel.
+    fn full_grad_with(&self, beta: &[f64], h: &[f64], grad: &mut [f64], _par: ParConfig) {
+        self.full_grad(beta, h, grad);
+    }
+
     /// Implementation label for logs/EXPERIMENTS.md.
     fn label(&self) -> &'static str;
 }
@@ -63,6 +72,10 @@ pub struct NativeGradient<'a>(pub &'a Problem);
 impl FullGradient for NativeGradient<'_> {
     fn full_grad(&self, _beta: &[f64], h: &[f64], grad: &mut [f64]) {
         self.0.gradient_from_h(h, grad);
+    }
+
+    fn full_grad_with(&self, _beta: &[f64], h: &[f64], grad: &mut [f64], par: ParConfig) {
+        self.0.gradient_from_h_with(h, grad, par);
     }
 
     fn label(&self) -> &'static str {
@@ -84,6 +97,13 @@ pub struct PathOptions {
     /// Also record the gap-safe screened-set size (Gaussian family only;
     /// used by the Figure 1 bench).
     pub record_safe: bool,
+    /// Kernel thread budget for the hot linalg (full-gradient sweeps,
+    /// `η` products). 0 defers to the process-wide setting
+    /// (`linalg::par::set_global_threads`, the CLI `--threads` flag, or
+    /// the machine default); 1 forces the serial backend. Callers that
+    /// already run fits on a worker pool (serve, CV) pass their per-job
+    /// budget here so the two layers of parallelism don't multiply.
+    pub threads: usize,
 }
 
 impl PathOptions {
@@ -95,6 +115,7 @@ impl PathOptions {
             fista: FistaConfig::default(),
             kkt_tol: 1e-5,
             record_safe: false,
+            threads: 0,
         }
     }
 
@@ -102,6 +123,17 @@ impl PathOptions {
     pub fn with_strategy(mut self, s: Strategy) -> Self {
         self.strategy = s;
         self
+    }
+
+    /// Builder: set the kernel thread budget (see [`PathOptions::threads`]).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The [`ParConfig`] this fit's kernels run under.
+    pub fn par(&self) -> ParConfig {
+        ParConfig::with_threads(self.threads)
     }
 }
 
@@ -248,10 +280,11 @@ fn state_at_zero(
     eta: &[f64],
     h: &mut [f64],
     grad: &mut [f64],
+    par: ParConfig,
 ) -> f64 {
     let loss0 = prob.family.h_loss(eta, &prob.y, h);
     let zero_beta = vec![0.0; grad.len()];
-    evaluator.full_grad(&zero_beta, h, grad);
+    evaluator.full_grad_with(&zero_beta, h, grad, par);
     loss0
 }
 
@@ -266,7 +299,7 @@ pub fn zero_seed(prob: &Problem, opts: &PathOptions, evaluator: &dyn FullGradien
     let eta = vec![0.0; n * m_classes];
     let mut h = vec![0.0; n * m_classes];
     let mut grad = vec![0.0; pt];
-    state_at_zero(prob, evaluator, &eta, &mut h, &mut grad);
+    state_at_zero(prob, evaluator, &eta, &mut h, &mut grad, opts.par());
     let smax = sigma_max(&grad, &lambda_base);
     PathSeed { sigma: smax, beta: vec![0.0; pt], grad }
 }
@@ -307,9 +340,10 @@ pub fn fit_point(
         lam_prev[i] = lambda_base[i] * seed.sigma;
         lam_cur[i] = lambda_base[i] * sigma;
     }
+    let mut screen_ws = StrongWorkspace::default();
     let prev_support = support(&beta_full);
     let (rule_set, n_screened_rule, e_set) =
-        screening_sets(opts.strategy, pt, &grad, &lam_prev, &lam_cur, &prev_support);
+        screening_sets(opts.strategy, pt, &grad, &lam_prev, &lam_cur, &prev_support, &mut screen_ws);
 
     let out = solve_with_safeguard(
         prob,
@@ -367,12 +401,13 @@ pub fn fit_path_seeded(
     let m_classes = prob.family.n_classes();
     let pt = prob.p_total();
     let lambda_base = opts.config.kind.sequence(pt);
+    let par = opts.par();
 
     // Gradient at β = 0 (needed for σ_max and the first strong set).
     let mut eta = vec![0.0; n * m_classes];
     let mut h = vec![0.0; n * m_classes];
     let mut grad = vec![0.0; pt];
-    let loss0 = state_at_zero(prob, evaluator, &eta, &mut h, &mut grad);
+    let loss0 = state_at_zero(prob, evaluator, &eta, &mut h, &mut grad, par);
 
     let smax = sigma_max(&grad, &lambda_base);
     let ratio = opts.config.resolved_min_ratio(n, prob.p());
@@ -425,15 +460,24 @@ pub fn fit_path_seeded(
             if s.beta.len() == pt && s.grad.len() == pt {
                 beta_full.copy_from_slice(&s.beta);
                 grad.copy_from_slice(&s.grad);
-                prob.eta(&beta_full, &mut eta);
+                prob.eta_with(&beta_full, &mut eta, par);
                 prob.family.h_loss(&eta, &prob.y, &mut h);
             }
         }
     }
     let mut prev_dev = dev_null;
-    // scratch for scaled penalties
+    // scratch for scaled penalties and the screening-rule ordering,
+    // reused across every path step
     let mut lam_prev = vec![0.0; pt];
     let mut lam_cur = vec![0.0; pt];
+    let mut screen_ws = StrongWorkspace::default();
+    // Column norms are invariant along the path: one sweep up front for
+    // the gap-safe diagnostic, not one per step.
+    let safe_col_norms: Vec<f64> = if opts.record_safe && prob.family == Family::Gaussian {
+        prob.x.col_sq_norms_with(par).iter().map(|c| c.sqrt()).collect()
+    } else {
+        Vec::new()
+    };
 
     for m in 1..sigmas_all.len() {
         let sig_prev = sigmas_all[m - 1];
@@ -446,8 +490,15 @@ pub fn fit_path_seeded(
         // --- screening phase --------------------------------------------
         let t0 = Instant::now();
         let prev_support = support(&beta_full);
-        let (rule_set, n_screened_rule, e_set) =
-            screening_sets(opts.strategy, pt, &grad, &lam_prev, &lam_cur, &prev_support);
+        let (rule_set, n_screened_rule, e_set) = screening_sets(
+            opts.strategy,
+            pt,
+            &grad,
+            &lam_prev,
+            &lam_cur,
+            &prev_support,
+            &mut screen_ws,
+        );
         // Gap-safe comparison (Gaussian only): |Xᵀr| = |grad| for OLS.
         let n_safe = if opts.record_safe && prob.family == Family::Gaussian {
             let r_norm_sq = {
@@ -457,10 +508,8 @@ pub fn fit_path_seeded(
             let y_dot_r = -crate::linalg::dense::dot(&prob.y, &h);
             let primal = 0.5 * r_norm_sq
                 + crate::slope::sorted::sl1_norm(&beta_full, &lam_cur);
-            let col_norms: Vec<f64> =
-                prob.x.col_sq_norms().iter().map(|c| c.sqrt()).collect();
             Some(
-                gap_safe_set(&grad, r_norm_sq, primal, &col_norms, &lam_cur, y_dot_r)
+                gap_safe_set(&grad, r_norm_sq, primal, &safe_col_norms, &lam_cur, y_dot_r)
                     .len(),
             )
         } else {
@@ -550,7 +599,8 @@ pub fn fit_path_seeded(
 
 /// The screening-phase set selection shared by the path driver and
 /// [`fit_point`]: `(rule_set, n_screened_rule, e_set)` for one step from
-/// the previous point's gradient and support.
+/// the previous point's gradient and support. `ws` is the reusable
+/// strong-rule ordering workspace (one per fit, reused every step).
 fn screening_sets(
     strategy: Strategy,
     pt: usize,
@@ -558,10 +608,11 @@ fn screening_sets(
     lam_prev: &[f64],
     lam_cur: &[f64],
     prev_support: &[usize],
+    ws: &mut StrongWorkspace,
 ) -> (Vec<usize>, usize, Vec<usize>) {
     let rule_set = match strategy {
         Strategy::NoScreening => (0..pt).collect::<Vec<_>>(),
-        _ => strong_set(grad, lam_prev, lam_cur),
+        _ => strong_set_with(grad, lam_prev, lam_cur, ws),
     };
     let n_screened_rule = match strategy {
         Strategy::NoScreening => pt,
@@ -630,11 +681,12 @@ fn solve_with_safeguard(
         opts.strategy,
         Strategy::NoScreening | Strategy::StrongSet
     );
+    let par = opts.par();
     let mut loss;
     loop {
         refits += 1;
         let t1 = Instant::now();
-        let reduced = Reduced::new(prob, e_set.clone());
+        let reduced = Reduced::new(prob, e_set.clone()).with_par(par);
         let warm: Vec<f64> = e_set.iter().map(|&c| beta_full[c]).collect();
         // The inner solve must be at least as accurate as the
         // violation threshold, else solver noise shows up as phantom
@@ -649,12 +701,14 @@ fn solve_with_safeguard(
         reduced.scatter(&res.beta, beta_full);
         t_solve += t1.elapsed().as_secs_f64();
 
-        // Full gradient at the candidate (η comes from the reduced
-        // design because off-E coefficients are zero).
+        // Full gradient at the candidate. The solver already computed
+        // η = X_E β_E at its solution (off-E coefficients are zero), so
+        // the KKT sweep reuses it — for the Gaussian family this is the
+        // cached residual: only the parallel Xᵀh product remains.
         let t2 = Instant::now();
-        reduced.eta(&res.beta, eta);
+        eta.copy_from_slice(&res.eta);
         prob.family.h_loss(eta, &prob.y, h);
-        evaluator.full_grad(beta_full, h, grad);
+        evaluator.full_grad_with(beta_full, h, grad, par);
 
         // Violation detection: Algorithm 1 on the true gradient
         // (Prop. 1) restricted to the stage's check set.

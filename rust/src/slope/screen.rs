@@ -3,8 +3,6 @@
 //! SLOPE, the lasso strong rule (Proposition 3) and a gap-safe-style
 //! baseline used in Figure 1.
 
-use crate::linalg::ops::order_desc_abs;
-
 /// Algorithm 1 of the paper, operating on a *pre-sorted* criterion vector
 /// `c` (descending) and a non-increasing `λ`. Returns the predicted
 /// support positions **in sorted order** (i.e. indices into `c`).
@@ -12,7 +10,10 @@ use crate::linalg::ops::order_desc_abs;
 /// `S, B ← ∅; for i: B ← B ∪ {i}; if Σ_{j∈B}(c_j − λ_j) ≥ 0 then
 /// S ← S ∪ B; B ← ∅`.
 pub fn algorithm1(c_sorted: &[f64], lambda: &[f64]) -> Vec<usize> {
-    debug_assert!(c_sorted.windows(2).all(|w| w[0] >= w[1]), "c must be sorted descending");
+    // NaN-tolerant monotonicity check (`!(a < b)` instead of `a >= b`):
+    // total_cmp-sorted criteria put NaNs first, which must not trip the
+    // debug assert before the caller can surface the bad fit.
+    debug_assert!(c_sorted.windows(2).all(|w| !(w[0] < w[1])), "c must be sorted descending");
     let mut s = Vec::new();
     let mut b_start = 0usize;
     let mut b_sum = 0.0f64;
@@ -31,7 +32,7 @@ pub fn algorithm1(c_sorted: &[f64], lambda: &[f64]) -> Vec<usize> {
 /// active predictors (the active set is the first `k` positions of the
 /// ordering permutation). Single pass, `O(p)`.
 pub fn algorithm2_k(c_sorted: &[f64], lambda: &[f64]) -> usize {
-    debug_assert!(c_sorted.windows(2).all(|w| w[0] >= w[1]), "c must be sorted descending");
+    debug_assert!(c_sorted.windows(2).all(|w| !(w[0] < w[1])), "c must be sorted descending");
     let p = c_sorted.len();
     let mut i = 1usize;
     let mut k = 0usize;
@@ -58,22 +59,83 @@ pub fn algorithm2_k(c_sorted: &[f64], lambda: &[f64]) -> usize {
 /// `lambda_prev` and `lambda_next` are the full non-increasing penalty
 /// vectors at steps m and m+1 (with the σ scaling already applied).
 pub fn strong_set(grad: &[f64], lambda_prev: &[f64], lambda_next: &[f64]) -> Vec<usize> {
+    strong_set_with(grad, lambda_prev, lambda_next, &mut StrongWorkspace::default())
+}
+
+/// Reusable scratch for [`strong_set_with`]: the `(criterion, predictor)`
+/// pairs and the sorted criterion column. The path driver allocates one
+/// per fit and reuses it at every step — the rule runs once per path
+/// point, and the old implementation's two fresh pair vectors per call
+/// showed up in the screening-phase profile (see EXPERIMENTS.md §Perf).
+#[derive(Debug, Default)]
+pub struct StrongWorkspace {
+    pairs: Vec<(f64, u32)>,
+    crit: Vec<f64>,
+}
+
+/// [`strong_set`] with a caller-owned workspace, fused into a single
+/// ordering pass: pack `(|g|, j)` pairs, sort once descending, add the
+/// slack `λ⁽ᵐ⁾ − λ⁽ᵐ⁺¹⁾` in rank order *in place*, and re-sort only when
+/// the slack actually perturbed monotonicity. On the σ-scaled grids the
+/// path driver uses, the slack is `(σ_m − σ_{m+1})·λ_base` — itself
+/// non-increasing in rank — so the criterion stays sorted and the second
+/// sort (plus both fresh allocations) of the old implementation is gone.
+pub fn strong_set_with(
+    grad: &[f64],
+    lambda_prev: &[f64],
+    lambda_next: &[f64],
+    ws: &mut StrongWorkspace,
+) -> Vec<usize> {
     let p = grad.len();
     debug_assert_eq!(lambda_prev.len(), p);
     debug_assert_eq!(lambda_next.len(), p);
-    // Sort |grad| descending and add the unit-slope-bound slack in rank
-    // order: c_j = |g|_(j) + (λ_prev_j − λ_next_j).
-    let ord = order_desc_abs(grad);
-    let mut c: Vec<f64> = ord
+    ws.pairs.clear();
+    ws.pairs
+        .extend(grad.iter().enumerate().map(|(j, &g)| (g.abs(), j as u32)));
+    // total_cmp (not partial_cmp().unwrap()): one NaN in a gradient must
+    // surface as a bad fit, not panic the whole server.
+    ws.pairs
+        .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    // c_j = |g|_(j) + (λ_prev_j − λ_next_j), written over the magnitudes.
+    let mut sorted = true;
+    let mut prev = f64::INFINITY;
+    for (rank, pair) in ws.pairs.iter_mut().enumerate() {
+        pair.0 += lambda_prev[rank] - lambda_next[rank];
+        sorted &= !(prev < pair.0);
+        prev = pair.0;
+    }
+    if !sorted {
+        ws.pairs
+            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    }
+    ws.crit.clear();
+    ws.crit.extend(ws.pairs.iter().map(|&(c, _)| c));
+    let k = algorithm2_k(&ws.crit, lambda_next);
+    let mut set: Vec<usize> = ws.pairs[..k].iter().map(|&(_, idx)| idx as usize).collect();
+    set.sort_unstable();
+    set
+}
+
+/// The re-sorting `strong_set` implementation [`strong_set_with`]
+/// replaced: fresh pair vectors plus an unconditional second sort on
+/// every call. Kept (hidden) as the frozen oracle the screen proptests
+/// and the `microbench` fused-vs-reference rows both compare against —
+/// one copy, so the two checks can never drift apart.
+#[doc(hidden)]
+pub fn strong_set_resort_reference(
+    grad: &[f64],
+    lambda_prev: &[f64],
+    lambda_next: &[f64],
+) -> Vec<usize> {
+    let ord = crate::linalg::ops::order_desc_abs(grad);
+    let c: Vec<f64> = ord
         .iter()
         .enumerate()
         .map(|(j, &idx)| grad[idx].abs() + lambda_prev[j] - lambda_next[j])
         .collect();
-    // The slack can perturb monotonicity; re-sort the criterion (the rule
-    // applies |·|↓ to the whole expression) keeping track of predictors.
-    let mut pairs: Vec<(f64, usize)> = c.drain(..).zip(ord).collect();
-    pairs.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
-    let c_sorted: Vec<f64> = pairs.iter().map(|&(v, _)| v).collect();
+    let mut pairs: Vec<(f64, usize)> = c.into_iter().zip(ord).collect();
+    pairs.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let c_sorted: Vec<f64> = pairs.iter().map(|&(crit, _)| crit).collect();
     let k = algorithm2_k(&c_sorted, lambda_next);
     let mut set: Vec<usize> = pairs[..k].iter().map(|&(_, idx)| idx).collect();
     set.sort_unstable();
@@ -116,7 +178,7 @@ pub fn gap_safe_set(
     // Dual feasibility scaling: find the smallest s >= 1 with
     // cumsum(|Xᵀr|↓/s − λ) ≤ 0, i.e. s = max_k cumsum(|Xᵀr|↓)_k / cumsum(λ)_k.
     let mut mags: Vec<f64> = xt_r.iter().map(|v| v.abs()).collect();
-    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.sort_unstable_by(|a, b| b.total_cmp(a)); // NaN-tolerant (server hot path)
     let mut acc_m = 0.0;
     let mut acc_l = 0.0;
     let mut s = 1.0f64;
@@ -247,6 +309,64 @@ mod tests {
                 ensure(s.len() == k, format!("|S|={} vs k={k}", s.len()))
             },
         );
+    }
+
+    #[test]
+    fn fused_strong_set_matches_resorting_reference() {
+        forall(
+            Config { cases: 400, seed: 0xf5 },
+            |rng| {
+                let g = gen::normal_vec(rng, 1, 40);
+                let lam_prev = gen::lambda_seq(rng, g.len());
+                // Mix σ-scaled shrinks (monotone slack, the fast path) with
+                // independent sequences (perturbed slack, the re-sort path).
+                let lam_next: Vec<f64> = if rng.bernoulli(0.5) {
+                    let s = 0.4 + 0.5 * rng.next_f64();
+                    lam_prev.iter().map(|l| l * s).collect()
+                } else {
+                    let mut l = gen::lambda_seq(rng, g.len());
+                    for (a, b) in l.iter_mut().zip(&lam_prev) {
+                        *a = a.min(*b); // keep λ_next ≤ λ_prev (a shrinking path)
+                    }
+                    l
+                };
+                (g, lam_prev, lam_next)
+            },
+            |(g, lam_prev, lam_next)| {
+                let mut ws = StrongWorkspace::default();
+                let fused = strong_set_with(g, lam_prev, lam_next, &mut ws);
+                let reference = strong_set_resort_reference(g, lam_prev, lam_next);
+                ensure(fused == reference, format!("fused {fused:?} vs ref {reference:?}"))
+            },
+        );
+    }
+
+    #[test]
+    fn strong_workspace_is_reusable_across_steps() {
+        let g1 = [0.9, -0.7, 0.5, 0.2, -0.1];
+        let g2 = [0.1, 0.8, -0.6, 0.0, 0.3];
+        let lam: Vec<f64> = vec![1.0, 0.8, 0.6, 0.4, 0.2];
+        let next: Vec<f64> = lam.iter().map(|l| l * 0.9).collect();
+        let mut ws = StrongWorkspace::default();
+        let a1 = strong_set_with(&g1, &lam, &next, &mut ws);
+        let a2 = strong_set_with(&g2, &lam, &next, &mut ws);
+        assert_eq!(a1, strong_set(&g1, &lam, &next));
+        assert_eq!(a2, strong_set(&g2, &lam, &next));
+    }
+
+    #[test]
+    fn nan_gradient_does_not_panic_screening() {
+        // A diverged solve must surface as a bad fit, not a server panic.
+        let g = [0.5, f64::NAN, 0.3, -0.9];
+        let lam = [1.0, 0.8, 0.6, 0.4];
+        let next: Vec<f64> = lam.iter().map(|l| l * 0.9).collect();
+        let _ = strong_set(&g, &lam, &next);
+        let _ = gap_safe_set(&g, 1.0, 1.0, &[1.0; 4], &lam, 0.5);
+        let _ = crate::linalg::ops::abs_sorted_desc(&g);
+        let _ = crate::linalg::ops::order_desc_abs(&g);
+        let _ = crate::slope::sorted::sl1_norm(&g, &lam);
+        let _ = crate::slope::subdiff::kkt_infeasibility(&g, &lam);
+        let _ = crate::slope::lambda::sigma_max(&g, &lam);
     }
 
     #[test]

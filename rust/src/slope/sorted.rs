@@ -6,7 +6,7 @@ use crate::linalg::ops::order_desc_abs;
 pub fn sl1_norm(beta: &[f64], lambda: &[f64]) -> f64 {
     debug_assert!(beta.len() <= lambda.len());
     let mut mags: Vec<f64> = beta.iter().map(|b| b.abs()).collect();
-    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.sort_unstable_by(|a, b| b.total_cmp(a)); // NaN-tolerant: never panics the solver
     mags.iter().zip(lambda).map(|(m, l)| m * l).sum()
 }
 

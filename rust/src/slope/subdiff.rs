@@ -24,7 +24,7 @@ pub fn in_subdifferential(beta: &[f64], g: &[f64], lambda: &[f64], tol: f64) -> 
         // |g| over the cluster, sorted descending (the subdifferential is
         // invariant to within-cluster permutations — Remark 1).
         let mut gmag: Vec<f64> = cl.members.iter().map(|&j| g[j].abs()).collect();
-        gmag.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        gmag.sort_unstable_by(|a, b| b.total_cmp(a)); // NaN-tolerant: runs on every KKT check
         let diffs: Vec<f64> = gmag.iter().zip(lam_block).map(|(gi, li)| gi - li).collect();
         let cs = cumsum(&diffs);
         if cs.iter().any(|&c| c > tol) {
@@ -61,7 +61,7 @@ pub fn kkt_optimal(beta: &[f64], grad: &[f64], lambda: &[f64], tol: f64) -> bool
 /// screening loop.
 pub fn kkt_infeasibility(grad: &[f64], lambda: &[f64]) -> f64 {
     let mut mags: Vec<f64> = grad.iter().map(|g| g.abs()).collect();
-    mags.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+    mags.sort_unstable_by(|a, b| b.total_cmp(a));
     let mut acc = 0.0f64;
     let mut worst = 0.0f64;
     for (m, l) in mags.iter().zip(lambda) {

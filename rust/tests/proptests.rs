@@ -4,6 +4,7 @@
 
 use slope_screen::check::{all_close, ensure, forall, gen, Config};
 use slope_screen::linalg::ops::{abs_sorted_desc, order_desc_abs};
+use slope_screen::linalg::{Csc, Mat, ParConfig};
 use slope_screen::rng::Pcg64;
 use slope_screen::slope::prox::{prox_sorted_l1, prox_sorted_l1_reference};
 use slope_screen::slope::screen::{algorithm1, algorithm2_k, strong_set};
@@ -284,6 +285,127 @@ fn sl1_norm_axioms() {
                 (sl1_norm(&scaled, lam) - t * na).abs() <= 1e-9 * (1.0 + t * na),
                 "homogeneity",
             )
+        },
+    );
+}
+
+/// The parallel linalg backend is a pure reformulation of the serial
+/// kernels: `gemv`, `gemv_t`, `gemv_t_subset` and `col_sq_norms` must
+/// agree to 1e-12 across thread counts {1, 2, 7} on dense and sparse
+/// storage, including the degenerate shapes (n = 0, p = 1, p < threads)
+/// where partitioning is trickiest. `ParConfig::exact` disables the
+/// work-size floor so the parallel code path actually runs on these
+/// small inputs.
+#[test]
+fn parallel_kernels_match_serial_across_thread_counts() {
+    const SHAPES: &[(usize, usize)] = &[
+        (0, 3),   // no observations
+        (1, 1),   // scalar
+        (4, 1),   // p = 1
+        (3, 5),   // p < 7 threads
+        (17, 9),  // odd sizes
+        (24, 40), // p > n
+        (64, 13),
+    ];
+    forall(
+        Config { cases: 150, seed: 0x20b },
+        |rng| {
+            let (n, p) = SHAPES[rng.below(SHAPES.len() as u64) as usize];
+            // ~30% structural zeros so the sparse path has real gaps
+            let data: Vec<f64> = (0..n * p)
+                .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+                .collect();
+            let v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let cols: Vec<usize> = (0..p).filter(|_| rng.bernoulli(0.6)).collect();
+            (n, p, data, v, w, cols)
+        },
+        |(n, p, data, v, w, cols)| {
+            let (n, p) = (*n, *p);
+            let dense = Mat::from_col_major(n, p, data.clone());
+            let sparse = Csc::from_dense(&dense);
+            let vc: Vec<f64> = cols.iter().map(|&j| v[j]).collect();
+
+            // serial references
+            let mut xv = vec![0.0; n];
+            dense.gemv(v, &mut xv);
+            let mut xtv = vec![0.0; p];
+            dense.gemv_t(w, &mut xtv);
+            let mut xtv_sub = vec![0.0; cols.len()];
+            dense.gemv_t_subset(cols, w, &mut xtv_sub);
+            let norms = dense.col_sq_norms();
+
+            for threads in [1usize, 2, 7] {
+                let par = ParConfig::exact(threads);
+                let tag = |k: &str| format!("{k} (n={n}, p={p}, t={threads})");
+
+                let mut out = vec![0.0; n];
+                dense.gemv_with(v, &mut out, par);
+                all_close(&out, &xv, 1e-12).map_err(|e| tag(&format!("dense gemv: {e}")))?;
+                sparse.gemv_with(v, &mut out, par);
+                all_close(&out, &xv, 1e-12).map_err(|e| tag(&format!("sparse gemv: {e}")))?;
+                dense.gemv_subset_with(cols, &vc, &mut out, par);
+                let mut sub_ref = vec![0.0; n];
+                dense.gemv_subset(cols, &vc, &mut sub_ref);
+                all_close(&out, &sub_ref, 1e-12)
+                    .map_err(|e| tag(&format!("dense gemv_subset: {e}")))?;
+
+                let mut gout = vec![0.0; p];
+                dense.gemv_t_with(w, &mut gout, par);
+                all_close(&gout, &xtv, 1e-12).map_err(|e| tag(&format!("dense gemv_t: {e}")))?;
+                sparse.gemv_t_with(w, &mut gout, par);
+                all_close(&gout, &xtv, 1e-12).map_err(|e| tag(&format!("sparse gemv_t: {e}")))?;
+
+                let mut sout = vec![0.0; cols.len()];
+                dense.gemv_t_subset_with(cols, w, &mut sout, par);
+                all_close(&sout, &xtv_sub, 1e-12)
+                    .map_err(|e| tag(&format!("dense gemv_t_subset: {e}")))?;
+                sparse.gemv_t_subset_with(cols, w, &mut sout, par);
+                all_close(&sout, &xtv_sub, 1e-12)
+                    .map_err(|e| tag(&format!("sparse gemv_t_subset: {e}")))?;
+
+                all_close(&dense.col_sq_norms_with(par), &norms, 1e-12)
+                    .map_err(|e| tag(&format!("dense col_sq_norms: {e}")))?;
+                all_close(&sparse.col_sq_norms_with(par), &norms, 1e-12)
+                    .map_err(|e| tag(&format!("sparse col_sq_norms: {e}")))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Parallel standardize agrees with serial standardize across thread
+/// counts (dense center+scale; sparse unit-scaling).
+#[test]
+fn parallel_standardize_matches_serial() {
+    forall(
+        Config { cases: 80, seed: 0x20c },
+        |rng| {
+            let n = 1 + rng.below(24) as usize;
+            let p = 1 + rng.below(15) as usize;
+            let data: Vec<f64> = (0..n * p)
+                .map(|_| if rng.bernoulli(0.25) { 0.0 } else { rng.normal() * 3.0 })
+                .collect();
+            (n, p, data)
+        },
+        |(n, p, data)| {
+            let dense = Mat::from_col_major(*n, *p, data.clone());
+            for threads in [1usize, 2, 7] {
+                let par = ParConfig::exact(threads);
+                let mut serial = dense.clone();
+                serial.standardize(true, true);
+                let mut parallel = dense.clone();
+                parallel.standardize_with(true, true, par);
+                all_close(serial.data(), parallel.data(), 1e-12)
+                    .map_err(|e| format!("dense standardize t={threads}: {e}"))?;
+                let mut s_serial = Csc::from_dense(&dense);
+                s_serial.scale_columns();
+                let mut s_par = Csc::from_dense(&dense);
+                s_par.scale_columns_with(par);
+                all_close(s_serial.to_dense().data(), s_par.to_dense().data(), 1e-12)
+                    .map_err(|e| format!("sparse scale t={threads}: {e}"))?;
+            }
+            Ok(())
         },
     );
 }
