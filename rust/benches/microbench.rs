@@ -1,7 +1,8 @@
 //! Microbenchmarks of the hot kernels (the §Perf iteration log in
 //! EXPERIMENTS.md is built on these): sorted-ℓ1 prox, gemv/gemv_t,
-//! Algorithm 2, the KKT flagger, and the full-gradient engines
-//! (native vs XLA artifact).
+//! Algorithm 2, the KKT flagger, the packed vs gather reduced-design
+//! kernels, CV fold extraction (fresh vs pooled scratch), and the
+//! full-gradient engines (native vs XLA artifact).
 //!
 //! Run: `cargo bench --bench microbench`
 
@@ -9,7 +10,7 @@ use slope_screen::benchkit::{fmt_secs, Table, Timing};
 use slope_screen::cli::Args;
 use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
 use slope_screen::linalg::ops::abs_sorted_desc;
-use slope_screen::linalg::ParConfig;
+use slope_screen::linalg::{PackedDesign, ParConfig};
 use slope_screen::rng::Pcg64;
 use slope_screen::runtime::{default_artifact_dir, ArtifactGradient, Manifest};
 use slope_screen::slope::family::Family;
@@ -128,6 +129,56 @@ fn main() {
         std::hint::black_box(&grad);
     });
     record("gemv_t parallel", n * p, &t);
+
+    // reduced-design engines on a screened subset (|E| ≈ p/40, the
+    // screened-path regime): gather-indexed subset kernels vs the packed
+    // contiguous slab, plus the one-off cost of materializing the slab
+    let n_sub = (p / 40).max(4).min(p);
+    let stride = (p / n_sub).max(1);
+    let cols: Vec<usize> = (0..p).step_by(stride).take(n_sub).collect();
+    let vsub: Vec<f64> = cols.iter().map(|&j| beta[j]).collect();
+    let mut gsub = vec![0.0; cols.len()];
+    let t = Timing::measure(3, reps, || {
+        std::hint::black_box(PackedDesign::pack(&prob.x, &cols, ParConfig::serial()));
+    });
+    record("pack materialize", n * cols.len(), &t);
+    let pack = PackedDesign::pack(&prob.x, &cols, ParConfig::serial());
+    let t = Timing::measure(3, reps, || {
+        prob.x.gemv_subset(&cols, &vsub, &mut eta);
+        std::hint::black_box(&eta);
+    });
+    record("gemv gather-subset", n * cols.len(), &t);
+    let t = Timing::measure(3, reps, || {
+        pack.gemv(&vsub, &mut eta);
+        std::hint::black_box(&eta);
+    });
+    record("gemv packed", n * cols.len(), &t);
+    let t = Timing::measure(3, reps, || {
+        prob.x.gemv_t_subset(&cols, &h, &mut gsub);
+        std::hint::black_box(&gsub);
+    });
+    record("gemv_t gather-subset", n * cols.len(), &t);
+    let t = Timing::measure(3, reps, || {
+        pack.gemv_t(&h, &mut gsub);
+        std::hint::black_box(&gsub);
+    });
+    record("gemv_t packed", n * cols.len(), &t);
+
+    // CV fold extraction: fresh allocation per fold vs the pooled
+    // scratch buffer route (coordinator::cv's FoldScratch)
+    if let Some(x) = prob.x.as_dense() {
+        let rows: Vec<usize> = (0..n).filter(|i| i % 5 != 0).collect(); // a 5-fold train split
+        let t = Timing::measure(3, reps, || {
+            std::hint::black_box(x.subset_rows(&rows));
+        });
+        record("subset_rows fresh", rows.len() * p, &t);
+        let mut fold_buf: Vec<f64> = Vec::new();
+        let t = Timing::measure(3, reps, || {
+            x.subset_rows_into(&rows, &mut fold_buf);
+            std::hint::black_box(&fold_buf);
+        });
+        record("subset_rows scratch", rows.len() * p, &t);
+    }
 
     // gradient engines, when artifacts cover the shape
     if let Ok(manifest) = Manifest::load(&default_artifact_dir()) {

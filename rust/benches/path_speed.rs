@@ -1,28 +1,41 @@
-//! Path-level wall-clock benchmark of the parallel compute backend:
-//! full-path Gaussian fits, serial vs threaded `linalg::par` kernels,
-//! cold vs warm-started, across p ∈ {1k, 10k, 100k} at n = 200 (the
-//! paper's p ≫ n regime, where the post-solve `Xᵀr` KKT sweep dominates).
+//! Path-level wall-clock benchmark of the hot-path engines: full-path
+//! Gaussian fits across p ∈ {1k, 10k, 100k} at n = 200 (the paper's
+//! p ≫ n regime), on two axes:
 //!
-//! Correctness is asserted, not assumed: serial and parallel fits must
-//! produce identical violation counts and coefficients to 1e-10 (the
-//! dense parallel kernels are in fact bitwise-deterministic), and the
-//! full run gates on a ≥ 2× parallel speedup at the largest size when at
-//! least 4 threads are available.
+//! * **backend** — serial vs threaded `linalg::par` kernels;
+//! * **engine** — `gather` (subset kernels chasing a column list through
+//!   the full design) vs `packed` (screened columns materialized into a
+//!   contiguous slab per step, with a per-problem `PackCache` so warm
+//!   re-fits adopt the cold fit's slabs — the serve registry's case). At
+//!   p = 100k the late-path screened sets reach the hundreds, the regime
+//!   the packed engine targets.
+//!
+//! Correctness is asserted, not assumed: across backends *and* engines,
+//! fits must produce identical violation counts and coefficients to
+//! 1e-10 (the dense kernels of both engines are bitwise-deterministic
+//! and order-matched, so the real difference is zero). The full run
+//! gates on ≥ 2× parallel-over-serial (cold) and ≥ 1.3× packed-over-
+//! gather (warm, parallel) at the largest size when at least 4 threads
+//! are available.
 //!
 //! Writes `results/path_speed.csv` and the machine-readable
 //! `BENCH_path.json` at the repository root — the perf trajectory of the
 //! hot path is tracked from this file.
 //!
-//! Run:   `cargo bench --bench path_speed`
-//! Smoke: `cargo bench --bench path_speed -- --smoke` (bounded sizes,
-//!        no speedup gate — the CI job that keeps this harness alive).
+//! Run:      `cargo bench --bench path_speed`
+//! Smoke:    `cargo bench --bench path_speed -- --smoke` (bounded sizes,
+//!           no speedup gates — the CI job that keeps this harness alive).
+//! Gather:   `cargo bench --bench path_speed -- --no-pack` (gather engine
+//!           only; CI smokes this too so both code paths stay exercised).
 
+use std::sync::Arc;
 
 use slope_screen::benchkit::{fmt_secs, Table};
 use slope_screen::cli::Args;
 use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
 use slope_screen::jsonio::Json;
 use slope_screen::linalg::par;
+use slope_screen::linalg::PackCache;
 use slope_screen::rng::Pcg64;
 use slope_screen::slope::family::{Family, Problem};
 use slope_screen::slope::lambda::{LambdaKind, PathConfig};
@@ -32,6 +45,7 @@ use slope_screen::slope::path::{
 
 struct Run {
     p: usize,
+    engine: &'static str,
     backend: &'static str,
     start: &'static str,
     threads: usize,
@@ -54,44 +68,42 @@ fn make_problem(n: usize, p: usize, k: usize, rho: f64, seed: u64) -> Problem {
     .generate(&mut Pcg64::new(seed))
 }
 
-fn opts(q: f64, length: usize, threads: usize) -> PathOptions {
+fn opts(q: f64, length: usize, threads: usize, packing: bool) -> PathOptions {
     let mut cfg = PathConfig::new(LambdaKind::Bh { q });
     cfg.length = length;
     PathOptions::new(cfg)
         .with_strategy(Strategy::StrongSet)
         .with_threads(threads)
+        .with_packing(packing)
 }
 
-/// Serial and parallel fits of the same problem must be interchangeable:
-/// same grid, same violation counts, coefficients equal to `tol`.
-fn assert_identical(serial: &PathFit, parallel: &PathFit, p: usize, tol: f64) {
+/// Any two fits of the same problem in this matrix must be
+/// interchangeable: same grid, same violation counts, coefficients equal
+/// to `tol`.
+fn assert_identical(a: &PathFit, b: &PathFit, what: &str, tol: f64) {
+    assert_eq!(a.steps.len(), b.steps.len(), "{what}: step counts diverged");
     assert_eq!(
-        serial.steps.len(),
-        parallel.steps.len(),
-        "p={p}: step counts diverged"
+        a.total_violations, b.total_violations,
+        "{what}: violation counts diverged"
     );
-    assert_eq!(
-        serial.total_violations, parallel.total_violations,
-        "p={p}: violation counts diverged"
-    );
-    for (m, (a, b)) in serial.steps.iter().zip(&parallel.steps).enumerate() {
+    for (m, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
         assert_eq!(
-            a.violations, b.violations,
-            "p={p} step {m}: per-step violations diverged"
+            sa.violations, sb.violations,
+            "{what} step {m}: per-step violations diverged"
         );
     }
     let mut max_dev = 0.0f64;
-    for (a, b) in serial.final_beta.iter().zip(&parallel.final_beta) {
-        max_dev = max_dev.max((a - b).abs());
+    for (x, y) in a.final_beta.iter().zip(&b.final_beta) {
+        max_dev = max_dev.max((x - y).abs());
     }
     assert!(
         max_dev <= tol,
-        "p={p}: coefficients diverged by {max_dev:e} (> {tol:e})"
+        "{what}: coefficients diverged by {max_dev:e} (> {tol:e})"
     );
 }
 
 fn main() {
-    let parsed = Args::new("path-level benchmark: serial vs parallel compute backend")
+    let parsed = Args::new("path-level benchmark: serial vs parallel, packed vs gather")
         .opt("n", "200", "observations")
         .opt("ps", "1000,10000,100000", "predictor grid")
         .opt("k", "20", "true support size")
@@ -100,10 +112,12 @@ fn main() {
         .opt("path-length", "50", "path points")
         .opt("threads", "0", "parallel-backend threads (0 = all cores)")
         .opt("seed", "2020", "dataset seed")
-        .flag("smoke", "bounded sizes for CI; skips the speedup gate")
+        .flag("smoke", "bounded sizes for CI; skips the speedup gates")
+        .flag("no-pack", "gather engine only (skip the packed runs)")
         .flag("bench", "(cargo bench compatibility)")
         .parse();
     let smoke = parsed.bool("smoke");
+    let no_pack = parsed.bool("no-pack");
     let n = parsed.usize("n");
     let ps: Vec<usize> = if smoke { vec![500, 2000] } else { parsed.usize_list("ps") };
     let k = parsed.usize("k");
@@ -119,58 +133,95 @@ fn main() {
         }
     };
     let seed = parsed.u64("seed");
+    let engines: &[&'static str] = if no_pack { &["gather"] } else { &["gather", "packed"] };
 
     println!(
-        "path_speed: n={n}, p in {ps:?}, path-length={path_length}, parallel backend = {threads} threads{}",
+        "path_speed: n={n}, p in {ps:?}, path-length={path_length}, engines {engines:?}, parallel backend = {threads} threads{}",
         if smoke { " [smoke]" } else { "" }
     );
 
     let mut runs: Vec<Run> = Vec::new();
     for (pi, &p) in ps.iter().enumerate() {
         let prob = make_problem(n, p, k.min(p / 2).max(1), rho, seed + pi as u64);
-        let o_serial = opts(q, path_length, 1);
-        let o_par = opts(q, path_length, threads);
         let ng = NativeGradient(&prob);
+        let mut per_engine: Vec<(&'static str, [PathFit; 4])> = Vec::new();
+        for &engine in engines {
+            let packing = engine == "packed";
+            // One pack cache per backend: the cold fit deposits each
+            // step's slab, the warm re-fit adopts it — packing drops out
+            // of the warm path exactly as it does for warm serve
+            // requests. Separate caches keep the cold timings honest.
+            let with_cache = |o: PathOptions| {
+                if packing {
+                    // generous bounds: the bench must measure kernels and
+                    // cache adoption, not eviction policy
+                    let cache = PackCache::new(4 * path_length).with_max_bytes(512 << 20);
+                    o.with_pack_cache(Arc::new(cache))
+                } else {
+                    o
+                }
+            };
+            let o_serial = with_cache(opts(q, path_length, 1, packing));
+            let o_par = with_cache(opts(q, path_length, threads, packing));
 
-        let cold_serial = fit_path(&prob, &o_serial, &ng);
-        let cold_par = fit_path(&prob, &o_par, &ng);
-        assert_identical(&cold_serial, &cold_par, p, 1e-10);
+            let cold_serial = fit_path(&prob, &o_serial, &ng);
+            let cold_par = fit_path(&prob, &o_par, &ng);
+            assert_identical(&cold_serial, &cold_par, &format!("p={p} {engine} cold"), 1e-10);
 
-        let warm_serial = fit_path_seeded(&prob, &o_serial, &ng, Some(&cold_serial.seed()));
-        let warm_par = fit_path_seeded(&prob, &o_par, &ng, Some(&cold_par.seed()));
-        assert_identical(&warm_serial, &warm_par, p, 1e-10);
+            let warm_serial = fit_path_seeded(&prob, &o_serial, &ng, Some(&cold_serial.seed()));
+            let warm_par = fit_path_seeded(&prob, &o_par, &ng, Some(&cold_par.seed()));
+            assert_identical(&warm_serial, &warm_par, &format!("p={p} {engine} warm"), 1e-10);
 
-        for (fit, backend, start, t) in [
-            (&cold_serial, "serial", "cold", 1),
-            (&cold_par, "parallel", "cold", threads),
-            (&warm_serial, "serial", "warm", 1),
-            (&warm_par, "parallel", "warm", threads),
-        ] {
-            println!(
-                "  p={p:<7} {backend:<8} {start}  {}  ({} steps, {} violations)",
-                fmt_secs(fit.wall_time),
-                fit.steps.len(),
-                fit.total_violations
-            );
-            runs.push(Run {
-                p,
-                backend,
-                start,
-                threads: t,
-                wall_s: fit.wall_time,
-                steps: fit.steps.len(),
-                violations: fit.total_violations,
-            });
+            per_engine.push((engine, [cold_serial, cold_par, warm_serial, warm_par]));
+        }
+        // Cross-engine identity: the packed engine must be a pure
+        // performance transformation of the gather one.
+        if let [(_, gather), (_, packed)] = per_engine.as_slice() {
+            let labels = ["cold/serial", "cold/parallel", "warm/serial", "warm/parallel"];
+            for (i, label) in labels.iter().enumerate() {
+                assert_identical(
+                    &gather[i],
+                    &packed[i],
+                    &format!("p={p} gather-vs-packed {label}"),
+                    1e-10,
+                );
+            }
+        }
+        for &(engine, ref fits) in &per_engine {
+            for (fit, start, backend, t) in [
+                (&fits[0], "cold", "serial", 1),
+                (&fits[1], "cold", "parallel", threads),
+                (&fits[2], "warm", "serial", 1),
+                (&fits[3], "warm", "parallel", threads),
+            ] {
+                println!(
+                    "  p={p:<7} {engine:<7} {backend:<8} {start}  {}  ({} steps, {} violations)",
+                    fmt_secs(fit.wall_time),
+                    fit.steps.len(),
+                    fit.total_violations
+                );
+                runs.push(Run {
+                    p,
+                    engine,
+                    backend,
+                    start,
+                    threads: t,
+                    wall_s: fit.wall_time,
+                    steps: fit.steps.len(),
+                    violations: fit.total_violations,
+                });
+            }
         }
     }
 
     let mut table = Table::new(
         &format!("path_speed (gaussian, n={n}, strong set, {threads}-thread backend)"),
-        &["p", "backend", "start", "threads", "wall_s", "steps", "violations"],
+        &["p", "engine", "backend", "start", "threads", "wall_s", "steps", "violations"],
     );
     for r in &runs {
         table.row(vec![
             r.p.to_string(),
+            r.engine.to_string(),
             r.backend.to_string(),
             r.start.to_string(),
             r.threads.to_string(),
@@ -183,30 +234,56 @@ fn main() {
     let csv = table.write_csv("path_speed").expect("csv");
     println!("\nwrote {}", csv.display());
 
-    let find = |p: usize, backend: &str, start: &str| {
+    let default_engine = if no_pack { "gather" } else { "packed" };
+    let find = |p: usize, engine: &str, backend: &str, start: &str| {
         runs.iter()
-            .find(|r| r.p == p && r.backend == backend && r.start == start)
+            .find(|r| r.p == p && r.engine == engine && r.backend == backend && r.start == start)
             .expect("run")
     };
     let p_max = *ps.iter().max().expect("non-empty p grid");
-    let cold_speedup = find(p_max, "serial", "cold").wall_s
-        / find(p_max, "parallel", "cold").wall_s.max(1e-12);
-    let warm_speedup = find(p_max, "serial", "warm").wall_s
-        / find(p_max, "parallel", "warm").wall_s.max(1e-12);
+    let cold_speedup = find(p_max, default_engine, "serial", "cold").wall_s
+        / find(p_max, default_engine, "parallel", "cold").wall_s.max(1e-12);
+    let warm_speedup = find(p_max, default_engine, "serial", "warm").wall_s
+        / find(p_max, default_engine, "parallel", "warm").wall_s.max(1e-12);
     println!(
-        "speedup at p={p_max}: cold {cold_speedup:.2}x, warm {warm_speedup:.2}x ({threads} threads)"
+        "speedup at p={p_max} ({default_engine}): cold {cold_speedup:.2}x, warm {warm_speedup:.2}x ({threads} threads)"
     );
-    // The acceptance gate: ≥ 2× on the full-path fit at the largest size
-    // whenever ≥ 4 threads back the parallel runs. Smoke runs (CI) keep
-    // the correctness asserts but skip the timing gate — shared runners
-    // make wall-clock guarantees meaningless there.
+    let warm_pack_speedup = if no_pack {
+        None
+    } else {
+        let s = find(p_max, "gather", "parallel", "warm").wall_s
+            / find(p_max, "packed", "parallel", "warm").wall_s.max(1e-12);
+        println!("packed over gather at p={p_max} (warm, parallel): {s:.2}x");
+        Some(s)
+    };
+    // The acceptance gates, at the largest size whenever ≥ 4 threads back
+    // the parallel runs: ≥ 2× parallel-over-serial on the cold path, and
+    // ≥ 1.3× packed-over-gather on the warm path (where the pack cache
+    // removes packing and the blocked kernels carry the solve). Smoke
+    // runs (CI) keep the correctness asserts but skip the timing gates —
+    // shared runners make wall-clock guarantees meaningless there.
     if !smoke && threads >= 4 {
         assert!(
             cold_speedup >= 2.0,
             "parallel backend must be >= 2x at p={p_max} on {threads} threads, got {cold_speedup:.2}x"
         );
+        if let Some(s) = warm_pack_speedup {
+            assert!(
+                s >= 1.3,
+                "packed engine must be >= 1.3x over gather on the warm path at p={p_max}, got {s:.2}x"
+            );
+        }
     }
 
+    let mut speedup_fields = vec![
+        ("p", Json::Num(p_max as f64)),
+        ("engine", Json::Str(default_engine.to_string())),
+        ("cold_parallel_over_serial", Json::Num(cold_speedup)),
+        ("warm_parallel_over_serial", Json::Num(warm_speedup)),
+    ];
+    if let Some(s) = warm_pack_speedup {
+        speedup_fields.push(("warm_packed_over_gather", Json::Num(s)));
+    }
     let payload = Json::obj(vec![
         ("bench", Json::Str("path_speed".to_string())),
         (
@@ -220,6 +297,7 @@ fn main() {
                 ("path_length", Json::Num(path_length as f64)),
                 ("threads", Json::Num(threads as f64)),
                 ("smoke", Json::Bool(smoke)),
+                ("no_pack", Json::Bool(no_pack)),
             ]),
         ),
         (
@@ -229,6 +307,7 @@ fn main() {
                     .map(|r| {
                         Json::obj(vec![
                             ("p", Json::Num(r.p as f64)),
+                            ("engine", Json::Str(r.engine.to_string())),
                             ("backend", Json::Str(r.backend.to_string())),
                             ("start", Json::Str(r.start.to_string())),
                             ("threads", Json::Num(r.threads as f64)),
@@ -240,14 +319,7 @@ fn main() {
                     .collect(),
             ),
         ),
-        (
-            "speedup",
-            Json::obj(vec![
-                ("p", Json::Num(p_max as f64)),
-                ("cold_parallel_over_serial", Json::Num(cold_speedup)),
-                ("warm_parallel_over_serial", Json::Num(warm_speedup)),
-            ]),
-        ),
+        ("speedup", Json::obj(speedup_fields)),
         ("table", table.to_json()),
     ]);
     let out_path =

@@ -3,11 +3,48 @@
 
 use std::sync::Mutex;
 
-use crate::linalg::Design;
+use crate::linalg::{Design, Mat};
 use crate::pool::par_for_each;
 use crate::rng::Pcg64;
 use crate::slope::family::Problem;
 use crate::slope::path::{fit_path, NativeGradient, PathFit, PathOptions};
+
+/// Pool of reusable column-major buffers for dense fold extraction.
+/// `K·k` fold jobs run over the CV, but only `threads` are in flight at
+/// once — so the pool converges to at most `threads` buffers, instead of
+/// one fresh `(n − n/k)·p` allocation (plus fault-in) per fold. Fold
+/// jobs `take` a buffer, fill it through [`Mat::subset_rows_into`], wrap
+/// it in the training [`Problem`], and `put` it back after the fit (see
+/// the `subset_rows fresh` vs `subset_rows scratch` microbench rows).
+#[derive(Default)]
+struct FoldScratch {
+    bufs: Mutex<Vec<Vec<f64>>>,
+}
+
+impl FoldScratch {
+    fn take(&self) -> Vec<f64> {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, buf: Vec<f64>) {
+        self.bufs.lock().unwrap().push(buf);
+    }
+}
+
+/// [`subset_problem`] with a pooled buffer for the dense design copy
+/// (sparse designs build exactly-sized CSC buffers either way).
+fn subset_problem_pooled(prob: &Problem, rows: &[usize], scratch: &FoldScratch) -> Problem {
+    let x = match &prob.x {
+        Design::Dense(m) => {
+            let mut buf = scratch.take();
+            m.subset_rows_into(rows, &mut buf);
+            Design::Dense(Mat::from_col_major(rows.len(), m.ncols(), buf))
+        }
+        Design::Sparse(s) => Design::Sparse(s.subset_rows(rows)),
+    };
+    let y: Vec<f64> = rows.iter().map(|&i| prob.y[i]).collect();
+    Problem::new(x, y, prob.family)
+}
 
 /// Cross-validation configuration.
 #[derive(Clone, Debug)]
@@ -101,20 +138,29 @@ pub fn cross_validate(prob: &Problem, opts: &PathOptions, cfg: &CvConfig) -> CvR
     // Fold jobs already saturate the pool; give each fit the per-job
     // share of the kernel-thread budget so the two parallel layers don't
     // multiply (an explicit opts.threads wins).
-    let fold_opts = if opts.threads == 0 {
+    let mut fold_opts = if opts.threads == 0 {
         opts.clone().with_threads(crate::pool::fit_thread_budget(threads.min(jobs.len())))
     } else {
         opts.clone()
     };
+    // A pack cache is keyed by screened set on ONE design; fold fits run
+    // on K different training subsets, so a shared cache could hand one
+    // fold another fold's packed columns. Folds pack locally instead.
+    fold_opts.pack_cache = None;
 
+    let scratch = FoldScratch::default();
     par_for_each(jobs.len(), threads, |j| {
         let (repeat, fold) = jobs[j];
         let fold_of = &assignments[repeat];
         let train: Vec<usize> = (0..n).filter(|&i| fold_of[i] != fold).collect();
         let valid: Vec<usize> = (0..n).filter(|&i| fold_of[i] == fold).collect();
-        let sub = subset_problem(prob, &train);
+        let sub = subset_problem_pooled(prob, &train, &scratch);
         let fit = fit_path(&sub, &fold_opts, &NativeGradient(&sub));
         let val = validation_deviance(prob, &valid, &fit);
+        // Reclaim the training-design buffer for the next fold job.
+        if let Design::Dense(m) = sub.x {
+            scratch.put(m.into_data());
+        }
         let fr = FoldResult {
             repeat,
             fold,
@@ -252,6 +298,25 @@ mod tests {
         let cfg = CvConfig { folds: 5, repeats: 1, threads: 4, seed: 11 };
         let res = cross_validate(&prob, &toy_opts(), &cfg);
         assert!(res.best_index > 0, "best_index = {}", res.best_index);
+    }
+
+    #[test]
+    fn pooled_subset_matches_fresh_subset() {
+        let prob = toy_problem(6);
+        let scratch = FoldScratch::default();
+        let rows: Vec<usize> = (0..prob.n()).filter(|i| i % 3 != 0).collect();
+        let fresh = subset_problem(&prob, &rows);
+        let pooled = subset_problem_pooled(&prob, &rows, &scratch);
+        assert_eq!(pooled.y, fresh.y);
+        let (a, b) = (pooled.x.as_dense().unwrap(), fresh.x.as_dense().unwrap());
+        assert_eq!(a.data(), b.data());
+        // returning the buffer and extracting again reuses it
+        if let Design::Dense(m) = pooled.x {
+            scratch.put(m.into_data());
+        }
+        let again = subset_problem_pooled(&prob, &[0, 2, 4], &scratch);
+        assert_eq!(again.n(), 3);
+        assert_eq!(again.x.as_dense().unwrap().data(), prob.x.as_dense().unwrap().subset_rows(&[0, 2, 4]).data());
     }
 
     #[test]

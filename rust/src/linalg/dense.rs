@@ -310,15 +310,31 @@ impl Mat {
 
     /// Extract rows into a new matrix (used by the CV fold splitter).
     pub fn subset_rows(&self, rows: &[usize]) -> Mat {
-        let mut out = Mat::zeros(rows.len(), self.ncols);
+        let mut buf = Vec::new();
+        self.subset_rows_into(rows, &mut buf);
+        Mat::from_col_major(rows.len(), self.ncols, buf)
+    }
+
+    /// [`Mat::subset_rows`] into a caller-owned column-major buffer
+    /// (cleared and resized) — the CV fold runner recycles one buffer per
+    /// worker instead of allocating a fresh `n·p` matrix per fold.
+    pub fn subset_rows_into(&self, rows: &[usize], buf: &mut Vec<f64>) {
+        let nr = rows.len();
+        buf.clear();
+        buf.resize(nr * self.ncols, 0.0);
         for j in 0..self.ncols {
             let src = self.col(j);
-            let dst = out.col_mut(j);
+            let dst = &mut buf[j * nr..(j + 1) * nr];
             for (d, &i) in dst.iter_mut().zip(rows) {
                 *d = src[i];
             }
         }
-        out
+    }
+
+    /// Consume the matrix, returning its column-major buffer (so a fold
+    /// scratch pool can reclaim it after the fit).
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
     }
 
     /// Dense matrix product `A B` (n×k · k×m). Only used at build/test time

@@ -16,13 +16,19 @@
 //! * [`par`] — the parallel-execution layer: every hot kernel has a
 //!   `*_with` variant taking a [`ParConfig`] thread budget (hand-rolled
 //!   `std::thread::scope` partitioning; no `rayon` offline).
+//! * [`packed`] — screened columns materialized into one contiguous slab
+//!   ([`PackedDesign`]) with blocked kernels, incremental append for the
+//!   KKT safeguard loop, and a per-dataset [`PackCache`] so warm-start
+//!   fits with stable supports skip packing (DESIGN.md §5).
 
 pub mod dense;
 pub mod ops;
+pub mod packed;
 pub mod par;
 pub mod sparse;
 
 pub use dense::Mat;
+pub use packed::{PackCache, PackedDesign, PackedSet};
 pub use par::ParConfig;
 pub use sparse::Csc;
 

@@ -1,0 +1,712 @@
+//! Packed reduced designs: the screened columns of a [`Design`]
+//! materialized into one contiguous column-major buffer, with blocked
+//! kernels tuned for the FISTA inner loop.
+//!
+//! The reduced solver used to pay gather-indexed traffic on every
+//! iteration: `gemv_subset`/`gemv_t_subset` chase a `cols: &[usize]` list
+//! through a design that, at p = 100k, spans hundreds of megabytes while
+//! the screened set touches well under a megabyte of it. A
+//! [`PackedDesign`] copies those columns out **once per path step** into a
+//! dense slab the inner loop then streams:
+//!
+//! * **Packing** is one pass over the screened columns (`O(n·|E|)` — the
+//!   cost of a single reduced product), parallel over column blocks.
+//! * **Incremental append**: when the KKT safeguard admits violators, the
+//!   new columns are appended to the slab — no re-pack of the columns
+//!   already present. A merged traversal order keeps kernel semantics in
+//!   ascending-column order (see below), so appended packs produce
+//!   bitwise-identical results to freshly packed ones.
+//! * **Blocked kernels**: `gemv` walks four columns per pass over the
+//!   output; `gemv_t` computes four column dots per pass over the input,
+//!   each dot with the exact lane pattern of [`dense::dot`]. Both have
+//!   `*_with` parallel forms on the [`ParConfig`] slab machinery that are
+//!   bitwise identical to their serial forms.
+//!
+//! **Ordering contract.** Kernel inputs/outputs are aligned with the
+//! *ascending* column list (the order `Reduced` keeps its coefficients
+//! in), regardless of the physical slot order appends produce. Per output
+//! element, contributions accumulate in ascending-column order and each
+//! column dot uses [`dense::dot`]'s lane pattern — exactly the orders of
+//! the dense gather kernels — so on a dense design the packed engine is
+//! bitwise interchangeable with the gather engine on finite data (sparse
+//! designs agree to rounding: the gather kernels there skip structural
+//! zeros, the packed slab streams them).
+//!
+//! [`PackCache`] keys finished packs by their screened set so fits with
+//! stable supports (the serve layer's warm-start case) skip packing
+//! entirely; `serve::registry` holds one cache per interned dataset.
+
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::dense::dot;
+use super::par::{chunk_size, ParConfig};
+use super::Design;
+
+/// A contiguous column-major copy of a subset of a design's columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedDesign {
+    nrows: usize,
+    /// Design column held in each physical slot (initial pack ascending;
+    /// appended batches land after, each batch ascending).
+    cols: Vec<usize>,
+    /// Slot traversal order sorting `cols` ascending — the order every
+    /// kernel walks, so results never depend on append history.
+    order: Vec<u32>,
+    /// Column-major slab: `data[s * nrows..(s + 1) * nrows]` is slot `s`.
+    data: Vec<f64>,
+}
+
+impl PackedDesign {
+    /// Materialize `cols` (ascending design columns) out of `design`.
+    /// Packing parallelizes over column blocks under `par`.
+    pub fn pack(design: &Design, cols: &[usize], par: ParConfig) -> PackedDesign {
+        debug_assert!(cols.windows(2).all(|w| w[0] < w[1]), "cols must be ascending");
+        let nrows = design.nrows();
+        let mut data = vec![0.0; nrows * cols.len()];
+        fill_columns(design, cols, &mut data, nrows, par);
+        PackedDesign {
+            nrows,
+            cols: cols.to_vec(),
+            order: (0..cols.len() as u32).collect(),
+            data,
+        }
+    }
+
+    /// Append further columns (ascending, disjoint from the ones already
+    /// packed) without touching the existing slab — the safeguard-loop
+    /// path when KKT violations widen the screened set.
+    pub fn append(&mut self, design: &Design, extra: &[usize], par: ParConfig) {
+        debug_assert!(extra.windows(2).all(|w| w[0] < w[1]), "extra must be ascending");
+        debug_assert_eq!(design.nrows(), self.nrows);
+        if extra.is_empty() {
+            return;
+        }
+        let old = self.cols.len();
+        self.cols.extend_from_slice(extra);
+        self.data.resize(self.nrows * self.cols.len(), 0.0);
+        fill_columns(design, extra, &mut self.data[old * self.nrows..], self.nrows, par);
+        // Merge the two ascending runs (existing traversal order + the new
+        // slots) so kernels keep walking columns in ascending order.
+        let mut merged = Vec::with_capacity(self.cols.len());
+        let (mut i, mut s) = (0usize, old);
+        while i < old || s < self.cols.len() {
+            let take_new = match (self.order.get(i), self.cols.get(s)) {
+                (Some(&slot), Some(&new_col)) => {
+                    debug_assert_ne!(self.cols[slot as usize], new_col, "duplicate column");
+                    self.cols[slot as usize] > new_col
+                }
+                (None, Some(_)) => true,
+                _ => false,
+            };
+            if take_new {
+                merged.push(s as u32);
+                s += 1;
+            } else {
+                merged.push(self.order[i]);
+                i += 1;
+            }
+        }
+        self.order = merged;
+    }
+
+    /// Observations.
+    #[inline]
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Packed columns.
+    #[inline]
+    pub fn ncols(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// True when no columns are packed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+
+    /// The design column at ascending rank `t` (the index the `t`-th
+    /// kernel coordinate corresponds to).
+    #[inline]
+    pub fn col_at_rank(&self, t: usize) -> usize {
+        self.cols[self.order[t] as usize]
+    }
+
+    /// The packed column set in ascending order (allocates; used for
+    /// cache verification and tests).
+    pub fn sorted_cols(&self) -> Vec<usize> {
+        self.order.iter().map(|&s| self.cols[s as usize]).collect()
+    }
+
+    #[inline]
+    fn slot(&self, t: usize) -> &[f64] {
+        let s = self.order[t] as usize;
+        &self.data[s * self.nrows..(s + 1) * self.nrows]
+    }
+
+    /// `out = P v` where `v` is aligned with the ascending column list.
+    pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols.len());
+        assert_eq!(out.len(), self.nrows);
+        out.fill(0.0);
+        self.gemv_rows(v, out, 0);
+    }
+
+    /// [`PackedDesign::gemv`] with a thread budget: contiguous row slabs
+    /// of the output, each walking the columns in ascending order —
+    /// bitwise identical to the serial form.
+    pub fn gemv_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), self.cols.len());
+        assert_eq!(out.len(), self.nrows);
+        let chunks = par.plan(self.nrows, self.cols.len());
+        if chunks <= 1 {
+            self.gemv(v, out);
+            return;
+        }
+        let slab = chunk_size(self.nrows, chunks);
+        std::thread::scope(|scope| {
+            for (ci, rows) in out.chunks_mut(slab).enumerate() {
+                let r0 = ci * slab;
+                scope.spawn(move || {
+                    rows.fill(0.0);
+                    self.gemv_rows(v, rows, r0);
+                });
+            }
+        });
+    }
+
+    /// Accumulate `P v` into the row window `rows` starting at `r0`,
+    /// four columns per pass over the window. Each output element
+    /// receives its contributions in ascending-column order (the dense
+    /// gather kernels' per-element order).
+    fn gemv_rows(&self, v: &[f64], rows: &mut [f64], r0: usize) {
+        let k = self.cols.len();
+        let len = rows.len();
+        let mut t = 0;
+        while t + 4 <= k {
+            let (v0, v1, v2, v3) = (v[t], v[t + 1], v[t + 2], v[t + 3]);
+            if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                t += 4;
+                continue; // sparse iterates are common on screened paths
+            }
+            let c0 = &self.slot(t)[r0..r0 + len];
+            let c1 = &self.slot(t + 1)[r0..r0 + len];
+            let c2 = &self.slot(t + 2)[r0..r0 + len];
+            let c3 = &self.slot(t + 3)[r0..r0 + len];
+            for i in 0..len {
+                // Sequential adds, column order — not one fused sum — so
+                // the accumulation order matches the unblocked kernels.
+                let mut o = rows[i];
+                o += v0 * c0[i];
+                o += v1 * c1[i];
+                o += v2 * c2[i];
+                o += v3 * c3[i];
+                rows[i] = o;
+            }
+            t += 4;
+        }
+        while t < k {
+            let vt = v[t];
+            if vt != 0.0 {
+                let c = &self.slot(t)[r0..r0 + len];
+                for (o, &x) in rows.iter_mut().zip(c) {
+                    *o += vt * x;
+                }
+            }
+            t += 1;
+        }
+    }
+
+    /// `out = Pᵀ v`, aligned with the ascending column list.
+    pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.cols.len());
+        self.gemv_t_ranks(v, out, 0);
+    }
+
+    /// [`PackedDesign::gemv_t`] with a thread budget: contiguous rank
+    /// slabs of the output, independent column dots — bitwise identical
+    /// to the serial form.
+    pub fn gemv_t_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        assert_eq!(v.len(), self.nrows);
+        assert_eq!(out.len(), self.cols.len());
+        let chunks = par.plan(self.cols.len(), self.nrows);
+        if chunks <= 1 {
+            self.gemv_t(v, out);
+            return;
+        }
+        let slab = chunk_size(self.cols.len(), chunks);
+        std::thread::scope(|scope| {
+            for (ci, ranks) in out.chunks_mut(slab).enumerate() {
+                let t0 = ci * slab;
+                scope.spawn(move || {
+                    self.gemv_t_ranks(v, ranks, t0);
+                });
+            }
+        });
+    }
+
+    /// Column dots for ranks `t0..t0 + out.len()`, four columns per pass
+    /// over `v`. Each dot uses exactly [`dot`]'s lane pattern, so a rank
+    /// computed inside a 4-block equals the same rank computed alone.
+    fn gemv_t_ranks(&self, v: &[f64], out: &mut [f64], t0: usize) {
+        let mut t = 0;
+        while t + 4 <= out.len() {
+            let quad = dot4(
+                [
+                    self.slot(t0 + t),
+                    self.slot(t0 + t + 1),
+                    self.slot(t0 + t + 2),
+                    self.slot(t0 + t + 3),
+                ],
+                v,
+            );
+            out[t..t + 4].copy_from_slice(&quad);
+            t += 4;
+        }
+        while t < out.len() {
+            out[t] = dot(self.slot(t0 + t), v);
+            t += 1;
+        }
+    }
+
+    /// Bytes held by the packed slab (cache accounting / diagnostics).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f64>()
+    }
+}
+
+/// Four simultaneous column dots in one pass over `v`. Per column the
+/// accumulation replicates [`dot`] exactly — four lane accumulators over
+/// row quads, `(s0 + s1) + (s2 + s3)`, then the tail in order — so each
+/// result is bitwise identical to `dot(col, v)`.
+#[inline]
+fn dot4(cols: [&[f64]; 4], v: &[f64]) -> [f64; 4] {
+    let len = v.len();
+    let quads = len / 4;
+    let mut s = [[0.0f64; 4]; 4];
+    for q in 0..quads {
+        let i = q * 4;
+        for (c, col) in cols.iter().enumerate() {
+            s[c][0] += col[i] * v[i];
+            s[c][1] += col[i + 1] * v[i + 1];
+            s[c][2] += col[i + 2] * v[i + 2];
+            s[c][3] += col[i + 3] * v[i + 3];
+        }
+    }
+    let mut out = [0.0f64; 4];
+    for (c, col) in cols.iter().enumerate() {
+        let mut acc = (s[c][0] + s[c][1]) + (s[c][2] + s[c][3]);
+        for i in quads * 4..len {
+            acc += col[i] * v[i];
+        }
+        out[c] = acc;
+    }
+    out
+}
+
+/// Copy screened columns into a pre-sized destination slab, parallel over
+/// column blocks (disjoint `chunks_mut` spans — bitwise deterministic).
+fn fill_columns(design: &Design, cols: &[usize], dst: &mut [f64], nrows: usize, par: ParConfig) {
+    debug_assert_eq!(dst.len(), nrows * cols.len());
+    if nrows == 0 || cols.is_empty() {
+        return;
+    }
+    let chunks = par.plan(cols.len(), nrows);
+    if chunks <= 1 {
+        for (slot, &j) in cols.iter().enumerate() {
+            copy_col(design, j, &mut dst[slot * nrows..(slot + 1) * nrows]);
+        }
+        return;
+    }
+    let span = chunk_size(cols.len(), chunks);
+    std::thread::scope(|scope| {
+        for (ci, block) in dst.chunks_mut(span * nrows).enumerate() {
+            let sub = &cols[ci * span..ci * span + block.len() / nrows];
+            scope.spawn(move || {
+                for (slot, &j) in sub.iter().enumerate() {
+                    copy_col(design, j, &mut block[slot * nrows..(slot + 1) * nrows]);
+                }
+            });
+        }
+    });
+}
+
+/// One column into a dense destination (sparse columns scatter over a
+/// zero fill).
+fn copy_col(design: &Design, j: usize, dst: &mut [f64]) {
+    match design {
+        Design::Dense(m) => dst.copy_from_slice(m.col(j)),
+        Design::Sparse(s) => s.scatter_col(j, dst),
+    }
+}
+
+/// A finished pack of one screened coefficient set: the set (ascending
+/// flattened coefficient indices — the cache identity) plus one
+/// [`PackedDesign`] per class (single-response families have one). The
+/// class split convention is `slope::fista::Reduced`'s: coefficient `c`
+/// maps to class `c / p`, design column `c % p`.
+#[derive(Clone, Debug)]
+pub struct PackedSet {
+    /// Ascending flattened coefficient indices.
+    pub coefs: Vec<usize>,
+    /// Per-class packed designs.
+    pub packs: Vec<Arc<PackedDesign>>,
+}
+
+impl PackedSet {
+    /// Total slab bytes across classes (cache accounting).
+    pub fn bytes(&self) -> usize {
+        self.packs.iter().map(|p| p.bytes()).sum()
+    }
+}
+
+/// FNV-1a over an ascending index set (length-prefixed so prefixes can't
+/// collide trivially).
+pub fn set_hash(sorted: &[usize]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    mix(sorted.len() as u64);
+    for &c in sorted {
+        mix(c as u64);
+    }
+    h
+}
+
+/// Default byte budget for a [`PackCache`] (the entry capacity still
+/// applies; whichever bound is hit first evicts).
+pub const DEFAULT_PACK_CACHE_BYTES: usize = 64 << 20;
+
+#[derive(Default)]
+struct CacheInner {
+    slots: HashMap<u64, Arc<PackedSet>>,
+    /// Insertion order — eviction is FIFO, so a full-path fit that
+    /// deposits one set per σ-step retires the oldest steps first and a
+    /// warm re-fit walking the same path in order still hits.
+    order: VecDeque<u64>,
+    bytes: usize,
+}
+
+/// Bounded, thread-safe store of finished [`PackedSet`]s keyed by their
+/// screened set, bounded both by entry count and by slab bytes (FIFO
+/// eviction). The serve registry holds one per interned dataset, so a
+/// warm-start request whose support matches a previous fit's adopts the
+/// cached slab and skips packing entirely. Hash collisions are harmless:
+/// a hit is only returned when the stored set equals the requested one.
+///
+/// **Contract:** a cache belongs to exactly one design/problem — the key
+/// is the screened set alone, so sharing a cache across different
+/// designs would serve wrong columns. `slope::path::build_reduced`
+/// additionally refuses hits whose slab row count disagrees with the
+/// problem, and the CV fold runner strips the cache from fold options
+/// (folds fit different training subsets).
+pub struct PackCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    max_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl PackCache {
+    /// Cache holding at most `capacity` packed sets within
+    /// [`DEFAULT_PACK_CACHE_BYTES`]; see [`PackCache::with_max_bytes`].
+    pub fn new(capacity: usize) -> PackCache {
+        PackCache {
+            inner: Mutex::new(CacheInner::default()),
+            capacity: capacity.max(1),
+            max_bytes: DEFAULT_PACK_CACHE_BYTES,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Builder: override the slab byte budget.
+    pub fn with_max_bytes(mut self, max_bytes: usize) -> PackCache {
+        self.max_bytes = max_bytes.max(1);
+        self
+    }
+
+    /// The pack for exactly this ascending coefficient set, if cached.
+    pub fn lookup(&self, sorted_coefs: &[usize]) -> Option<Arc<PackedSet>> {
+        let key = set_hash(sorted_coefs);
+        let inner = self.inner.lock().unwrap();
+        match inner.slots.get(&key) {
+            Some(set) if set.coefs == sorted_coefs => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(set))
+            }
+            _ => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a finished pack under its set identity, evicting oldest
+    /// entries past either bound. A set that alone exceeds the byte
+    /// budget is refused outright — inserting it would flush every
+    /// existing entry (itself included) for nothing.
+    pub fn store(&self, set: Arc<PackedSet>) {
+        debug_assert!(set.coefs.windows(2).all(|w| w[0] < w[1]), "coefs must be ascending");
+        let key = set_hash(&set.coefs);
+        let add = set.bytes();
+        if add > self.max_bytes {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        match inner.slots.insert(key, set) {
+            Some(old) => {
+                // replaced in place: the order entry stays where it was
+                inner.bytes = inner.bytes + add - old.bytes();
+            }
+            None => {
+                inner.bytes += add;
+                inner.order.push_back(key);
+            }
+        }
+        while inner.slots.len() > self.capacity || inner.bytes > self.max_bytes {
+            match inner.order.pop_front() {
+                Some(oldest) => {
+                    if let Some(rm) = inner.slots.remove(&oldest) {
+                        inner.bytes -= rm.bytes();
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Cached set count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total slab bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+impl fmt::Debug for PackCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let (hits, misses) = self.stats();
+        f.debug_struct("PackCache")
+            .field("entries", &self.len())
+            .field("capacity", &self.capacity)
+            .field("bytes", &self.bytes())
+            .field("max_bytes", &self.max_bytes)
+            .field("hits", &hits)
+            .field("misses", &misses)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Csc, Mat};
+    use crate::rng::Pcg64;
+
+    fn random_design(seed: u64, n: usize, p: usize, sparse: bool) -> Design {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                if !sparse || rng.bernoulli(0.4) {
+                    m.set(i, j, rng.normal());
+                }
+            }
+        }
+        if sparse {
+            Design::Sparse(Csc::from_dense(&m))
+        } else {
+            Design::Dense(m)
+        }
+    }
+
+    #[test]
+    fn packed_gemv_matches_gather_bitwise_dense() {
+        let design = random_design(1, 23, 17, false);
+        let cols = vec![0usize, 2, 5, 6, 7, 11, 16];
+        let pack = PackedDesign::pack(&design, &cols, ParConfig::serial());
+        let mut rng = Pcg64::new(2);
+        let v: Vec<f64> = cols.iter().map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..23).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (vec![0.0; 23], vec![0.0; 23]);
+        design.gemv_subset(&cols, &v, &mut a);
+        pack.gemv(&v, &mut b);
+        assert_eq!(a, b, "gemv must be bitwise identical to the dense gather kernel");
+        let (mut c, mut d) = (vec![0.0; cols.len()], vec![0.0; cols.len()]);
+        design.gemv_t_subset(&cols, &w, &mut c);
+        pack.gemv_t(&w, &mut d);
+        assert_eq!(c, d, "gemv_t must be bitwise identical to the dense gather kernel");
+    }
+
+    #[test]
+    fn parallel_packed_kernels_bitwise_match_serial() {
+        for sparse in [false, true] {
+            let design = random_design(3, 29, 21, sparse);
+            let cols: Vec<usize> = (0..21).filter(|j| j % 3 != 1).collect();
+            let pack = PackedDesign::pack(&design, &cols, ParConfig::serial());
+            let mut rng = Pcg64::new(4);
+            let v: Vec<f64> = cols.iter().map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..29).map(|_| rng.normal()).collect();
+            for t in [2usize, 3, 7, 32] {
+                let par = ParConfig::exact(t);
+                let (mut a, mut b) = (vec![0.0; 29], vec![0.0; 29]);
+                pack.gemv(&v, &mut a);
+                pack.gemv_with(&v, &mut b, par);
+                assert_eq!(a, b, "gemv t={t} sparse={sparse}");
+                let (mut c, mut d) = (vec![0.0; cols.len()], vec![0.0; cols.len()]);
+                pack.gemv_t(&w, &mut c);
+                pack.gemv_t_with(&w, &mut d, par);
+                assert_eq!(c, d, "gemv_t t={t} sparse={sparse}");
+            }
+        }
+    }
+
+    #[test]
+    fn append_is_bitwise_equal_to_fresh_pack() {
+        let design = random_design(5, 19, 30, false);
+        let base = vec![3usize, 8, 9, 20];
+        let batch1 = vec![1usize, 12, 28];
+        let batch2 = vec![0usize, 10, 29];
+        let mut inc = PackedDesign::pack(&design, &base, ParConfig::serial());
+        inc.append(&design, &batch1, ParConfig::serial());
+        inc.append(&design, &batch2, ParConfig::exact(3));
+        let mut all: Vec<usize> = base.iter().chain(&batch1).chain(&batch2).copied().collect();
+        all.sort_unstable();
+        let fresh = PackedDesign::pack(&design, &all, ParConfig::serial());
+        assert_eq!(inc.sorted_cols(), all);
+        assert_eq!(fresh.sorted_cols(), all);
+        let mut rng = Pcg64::new(6);
+        let v: Vec<f64> = all.iter().map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..19).map(|_| rng.normal()).collect();
+        let (mut a, mut b) = (vec![0.0; 19], vec![0.0; 19]);
+        inc.gemv(&v, &mut a);
+        fresh.gemv(&v, &mut b);
+        assert_eq!(a, b, "appended gemv must equal fresh pack bitwise");
+        let (mut c, mut d) = (vec![0.0; all.len()], vec![0.0; all.len()]);
+        inc.gemv_t(&w, &mut c);
+        fresh.gemv_t(&w, &mut d);
+        assert_eq!(c, d, "appended gemv_t must equal fresh pack bitwise");
+        for t in 0..all.len() {
+            assert_eq!(inc.col_at_rank(t), all[t]);
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // no rows
+        let design = Design::Dense(Mat::zeros(0, 4));
+        let pack = PackedDesign::pack(&design, &[1, 3], ParConfig::exact(7));
+        let mut out: Vec<f64> = Vec::new();
+        pack.gemv(&[1.0, 2.0], &mut out);
+        let mut g = vec![9.0; 2];
+        pack.gemv_t(&[], &mut g);
+        assert_eq!(g, vec![0.0, 0.0]);
+        // empty subset
+        let design = random_design(7, 5, 3, false);
+        let pack = PackedDesign::pack(&design, &[], ParConfig::serial());
+        assert!(pack.is_empty());
+        let mut out = vec![1.0; 5];
+        pack.gemv(&[], &mut out);
+        assert_eq!(out, vec![0.0; 5]);
+        // single column
+        let pack = PackedDesign::pack(&design, &[2], ParConfig::exact(4));
+        let mut out = vec![0.0; 5];
+        pack.gemv(&[2.0], &mut out);
+        let mut want = vec![0.0; 5];
+        design.gemv_subset(&[2], &[2.0], &mut want);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn cache_round_trip_and_bounds() {
+        let design = random_design(8, 6, 10, false);
+        let cache = PackCache::new(2);
+        assert!(cache.lookup(&[0, 1]).is_none());
+        for cols in [vec![0usize, 1], vec![2usize, 3], vec![4usize, 5]] {
+            let pack = Arc::new(PackedDesign::pack(&design, &cols, ParConfig::serial()));
+            cache.store(Arc::new(PackedSet { coefs: cols, packs: vec![pack] }));
+        }
+        assert!(cache.len() <= 2, "cache must stay bounded");
+        // FIFO: the oldest set was evicted, the two newest survive
+        assert!(cache.lookup(&[0, 1]).is_none(), "oldest entry must be evicted first");
+        let hit = cache.lookup(&[4, 5]).expect("newest set must be cached");
+        assert_eq!(hit.coefs, vec![4, 5]);
+        assert_eq!(hit.packs[0].sorted_cols(), vec![4, 5]);
+        assert!(cache.lookup(&[2, 3]).is_some(), "second-newest must survive");
+        let (hits, misses) = cache.stats();
+        assert!(hits >= 1 && misses >= 1);
+        assert_eq!(cache.bytes(), 2 * (6 * 2 * 8), "byte accounting must track slabs");
+    }
+
+    #[test]
+    fn cache_byte_budget_evicts_oldest() {
+        let design = random_design(10, 8, 12, false);
+        // each 3-column pack is 8 rows × 3 cols × 8 bytes = 192 bytes;
+        // budget fits exactly two of them
+        let cache = PackCache::new(100).with_max_bytes(2 * 192);
+        for cols in [vec![0usize, 1, 2], vec![3usize, 4, 5], vec![6usize, 7, 8]] {
+            let pack = Arc::new(PackedDesign::pack(&design, &cols, ParConfig::serial()));
+            cache.store(Arc::new(PackedSet { coefs: cols, packs: vec![pack] }));
+        }
+        assert_eq!(cache.len(), 2);
+        assert!(cache.bytes() <= 2 * 192);
+        assert!(cache.lookup(&[0, 1, 2]).is_none());
+        assert!(cache.lookup(&[6, 7, 8]).is_some());
+        // replacing an existing key adjusts bytes instead of duplicating
+        let pack = Arc::new(PackedDesign::pack(&design, &[6, 7, 8], ParConfig::serial()));
+        cache.store(Arc::new(PackedSet { coefs: vec![6, 7, 8], packs: vec![pack] }));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.bytes() <= 2 * 192);
+        // a set that alone busts the budget is refused, not allowed to
+        // flush the whole cache
+        let big = Arc::new(PackedDesign::pack(
+            &design,
+            &(0..12).collect::<Vec<_>>(),
+            ParConfig::serial(),
+        ));
+        cache.store(Arc::new(PackedSet { coefs: (0..12).collect(), packs: vec![big] }));
+        assert_eq!(cache.len(), 2, "oversized set must not evict existing entries");
+        assert!(cache.lookup(&(0..12).collect::<Vec<_>>()).is_none());
+    }
+
+    #[test]
+    fn set_hash_discriminates() {
+        assert_ne!(set_hash(&[1, 2, 3]), set_hash(&[1, 2]));
+        assert_ne!(set_hash(&[1, 2, 3]), set_hash(&[1, 2, 4]));
+        assert_eq!(set_hash(&[]), set_hash(&[]));
+    }
+
+    #[test]
+    fn bytes_accounts_for_slab() {
+        let design = random_design(9, 7, 5, false);
+        let pack = PackedDesign::pack(&design, &[0, 2, 4], ParConfig::serial());
+        assert_eq!(pack.bytes(), 7 * 3 * 8);
+    }
+}

@@ -354,23 +354,66 @@ impl Csc {
         });
     }
 
+    /// Scatter column `j` into a dense destination: zero fill, then the
+    /// stored nonzeros. The packed-design engine materializes screened
+    /// sparse columns through this.
+    pub fn scatter_col(&self, j: usize, dst: &mut [f64]) {
+        debug_assert_eq!(dst.len(), self.nrows);
+        dst.fill(0.0);
+        for k in self.colptr[j]..self.colptr[j + 1] {
+            dst[self.rowidx[k] as usize] = self.values[k];
+        }
+    }
+
     /// Extract rows into a new CSC matrix (CV fold splitting).
+    ///
+    /// Direct two-pass build (count, then fill) into exactly-sized
+    /// buffers — the old per-column triplet vectors allocated `2·ncols`
+    /// temporaries per CV fold, which dominated fold setup on wide sparse
+    /// designs. Ascending `rows` (every CV fold split) need no
+    /// per-column re-sort; a permuted subset sorts each column span
+    /// through one reusable scratch buffer.
     pub fn subset_rows(&self, rows: &[usize]) -> Csc {
         // map original row -> new position (or none)
         let mut map = vec![u32::MAX; self.nrows];
         for (new, &old) in rows.iter().enumerate() {
             map[old] = new as u32;
         }
-        let mut cols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); self.ncols];
+        let mut colptr = Vec::with_capacity(self.ncols + 1);
+        colptr.push(0usize);
+        let mut nnz = 0usize;
         for j in 0..self.ncols {
+            for k in self.colptr[j]..self.colptr[j + 1] {
+                if map[self.rowidx[k] as usize] != u32::MAX {
+                    nnz += 1;
+                }
+            }
+            colptr.push(nnz);
+        }
+        let ascending = rows.windows(2).all(|w| w[0] < w[1]);
+        let mut rowidx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for j in 0..self.ncols {
+            let start = rowidx.len();
             for k in self.colptr[j]..self.colptr[j + 1] {
                 let m = map[self.rowidx[k] as usize];
                 if m != u32::MAX {
-                    cols[j].push((m as usize, self.values[k]));
+                    rowidx.push(m);
+                    values.push(self.values[k]);
+                }
+            }
+            if !ascending {
+                scratch.clear();
+                scratch.extend(rowidx[start..].iter().copied().zip(values[start..].iter().copied()));
+                scratch.sort_unstable_by_key(|&(r, _)| r);
+                for (t, &(r, v)) in scratch.iter().enumerate() {
+                    rowidx[start + t] = r;
+                    values[start + t] = v;
                 }
             }
         }
-        Csc::from_columns(rows.len(), &cols)
+        Csc { nrows: rows.len(), ncols: self.ncols, colptr, rowidx, values }
     }
 }
 
@@ -428,6 +471,27 @@ mod tests {
         let s = Csc::from_dense(&d);
         let rows = [7, 2, 9, 0];
         assert_eq!(s.subset_rows(&rows).to_dense(), d.subset_rows(&rows));
+    }
+
+    #[test]
+    fn subset_rows_ascending_matches_dense() {
+        let mut rng = Pcg64::new(6);
+        let d = random_dense(&mut rng, 12, 7, 0.4);
+        let s = Csc::from_dense(&d);
+        let rows = [0usize, 3, 4, 9, 11];
+        assert_eq!(s.subset_rows(&rows).to_dense(), d.subset_rows(&rows));
+    }
+
+    #[test]
+    fn scatter_col_round_trips() {
+        let mut rng = Pcg64::new(7);
+        let d = random_dense(&mut rng, 11, 5, 0.3);
+        let s = Csc::from_dense(&d);
+        let mut dst = vec![9.0; 11];
+        for j in 0..5 {
+            s.scatter_col(j, &mut dst);
+            assert_eq!(&dst[..], d.col(j));
+        }
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! * single-point states ([`PointState`]) — a `fit_point` stream reuses
 //!   the previous point's coefficients, gradient and screened support via
 //!   the previous-set strategy, which is where screening pays off across
-//!   requests.
+//!   requests;
+//! * packed screened-column slabs ([`PackCache`], keyed by screened set)
+//!   — warm requests whose supports repeat a previous fit's adopt the
+//!   existing slab instead of re-materializing it (DESIGN.md §5).
 //!
 //! Concurrent requests for the same (dataset, model) are **coalesced**:
 //! the first one fits, the rest block on a [`BuildGate`] and share the
@@ -20,6 +23,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::linalg::packed::PackCache;
 use crate::slope::family::Problem;
 use crate::slope::path::{PathFit, PathSeed};
 
@@ -88,6 +92,19 @@ const MAX_DATASETS: usize = 64;
 /// Cap on cached models (and point states) per dataset.
 const MAX_MODELS_PER_DATASET: usize = 32;
 
+/// Cap on cached packed screened sets per dataset. Sized above the
+/// default path length (50 σ-steps deposit one set each) so a warm
+/// re-fit of a full path hits on every step; the byte budget below is
+/// the real bound on memory (eviction in the cache is FIFO, so the
+/// oldest path steps retire first).
+const MAX_PACKS_PER_DATASET: usize = 64;
+
+/// Slab byte budget per dataset's pack cache (64 datasets × 32 MB caps
+/// the server-wide pack footprint at 2 GB in the worst case; typical
+/// screened slabs are tens to hundreds of KB, so real usage is far
+/// lower).
+const MAX_PACK_BYTES_PER_DATASET: usize = 32 << 20;
+
 /// An interned dataset with its model caches.
 pub struct DatasetEntry {
     /// Spec fingerprint (the intern key).
@@ -101,11 +118,21 @@ pub struct DatasetEntry {
     pub transform: Option<ColumnTransform>,
     /// Offset added back to predicted scores (gaussian y-centering).
     pub intercept: f64,
+    /// Packed screened-column slabs keyed by screened set (DESIGN.md §5):
+    /// every fit on this dataset shares one cache, so warm requests with
+    /// stable supports adopt an existing slab instead of re-packing.
+    packs: Arc<PackCache>,
     models: Mutex<HashMap<String, ModelSlot>>,
     points: Mutex<HashMap<String, Arc<PointState>>>,
 }
 
 impl DatasetEntry {
+    /// The dataset's shared packed-design cache (hand to
+    /// [`crate::slope::path::PathOptions::with_pack_cache`]).
+    pub fn pack_cache(&self) -> Arc<PackCache> {
+        Arc::clone(&self.packs)
+    }
+
     /// Cached point state for a model key, if any.
     pub fn point_state(&self, key: &str) -> Option<Arc<PointState>> {
         self.points.lock().unwrap().get(key).cloned()
@@ -216,6 +243,9 @@ impl Registry {
             problem: Arc::new(materialized.problem),
             transform: materialized.transform,
             intercept: materialized.intercept,
+            packs: Arc::new(
+                PackCache::new(MAX_PACKS_PER_DATASET).with_max_bytes(MAX_PACK_BYTES_PER_DATASET),
+            ),
             models: Mutex::new(HashMap::new()),
             points: Mutex::new(HashMap::new()),
         });
@@ -332,7 +362,7 @@ mod tests {
     fn build_model(entry: &DatasetEntry) -> CachedModel {
         let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
         cfg.length = 6;
-        let opts = PathOptions::new(cfg);
+        let opts = PathOptions::new(cfg).with_pack_cache(entry.pack_cache());
         let prob = entry.problem.as_ref();
         let fit = fit_path(prob, &opts, &NativeGradient(prob));
         let seed = fit.seed();
@@ -440,6 +470,26 @@ mod tests {
         let st = entry.point_state("m").unwrap();
         assert_eq!(st.sigma_max, 1.5);
         assert_eq!(st.seed.beta.len(), entry.problem.p_total());
+    }
+
+    #[test]
+    fn pack_cache_is_shared_across_fits_on_a_dataset() {
+        let reg = Registry::new(false); // model cache off: every fit runs
+        let entry = reg.dataset(&spec(9)).unwrap();
+        assert!(entry.pack_cache().is_empty());
+        reg.model(&entry, "a", || Ok(build_model(&entry))).unwrap();
+        assert!(!entry.pack_cache().is_empty(), "a fit must deposit packs");
+        let (hits_before, _) = entry.pack_cache().stats();
+        // an identical re-fit repeats the same screened sets -> pack hits
+        reg.model(&entry, "a", || Ok(build_model(&entry))).unwrap();
+        let (hits_after, _) = entry.pack_cache().stats();
+        assert!(
+            hits_after > hits_before,
+            "re-fit must adopt cached packs ({hits_before} -> {hits_after})"
+        );
+        // a different dataset has its own, empty cache
+        let other = reg.dataset(&spec(10)).unwrap();
+        assert!(other.pack_cache().is_empty());
     }
 
     #[test]

@@ -148,7 +148,8 @@ impl Server {
             let opts = model
                 .path_options(entry.problem.as_ref())?
                 .with_strategy(strategy)
-                .with_threads(self.job_threads(model));
+                .with_threads(self.job_threads(model))
+                .with_pack_cache(entry.pack_cache());
             let prob = Arc::clone(&entry.problem);
             let fit = self.sched.run(move || {
                 let gradient = NativeGradient(prob.as_ref());
@@ -234,7 +235,8 @@ impl Server {
         let opts = model
             .path_options(entry.problem.as_ref())?
             .with_strategy(strategy)
-            .with_threads(self.job_threads(model));
+            .with_threads(self.job_threads(model))
+            .with_pack_cache(entry.pack_cache());
         let prob = Arc::clone(&entry.problem);
         let (point, sigma_max) = self.sched.run(move || {
             let gradient = NativeGradient(prob.as_ref());

@@ -8,7 +8,10 @@
 //! because a vector supported on `E` puts its largest magnitudes against
 //! the largest weights of λ.
 
+use std::sync::Arc;
+
 use crate::linalg::ops::inf_norm;
+use crate::linalg::packed::{PackedDesign, PackedSet};
 use crate::linalg::ParConfig;
 use crate::slope::family::Problem;
 use crate::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
@@ -59,6 +62,18 @@ pub struct FistaResult {
 /// The reduced view of a [`Problem`] restricted to coefficient set `E`:
 /// per-class column lists so `η` and gradients touch only screened columns.
 ///
+/// Two interchangeable kernel engines back it:
+///
+/// * **gather** ([`Reduced::new`]) — `gemv_subset`/`gemv_t_subset` chase
+///   the column list through the full design on every call;
+/// * **packed** ([`Reduced::packed`]) — the screened columns are
+///   materialized once into a contiguous [`PackedDesign`] slab per class,
+///   and the inner loop streams that instead (DESIGN.md §5). On dense
+///   designs the two engines are bitwise interchangeable; sparse designs
+///   agree to rounding. [`Reduced::append`] widens the set in place when
+///   the KKT safeguard admits violators — packed slabs grow by appending
+///   only the new columns, never re-packing.
+///
 /// Gather/scatter scratch is a *per-call* buffer the caller owns (see
 /// [`Reduced::make_scratch`]) — the hot FISTA loop still performs zero
 /// allocations per iteration, and `Reduced` itself is `Sync`, so a shared
@@ -72,34 +87,45 @@ pub struct Reduced<'a> {
     /// For each class, the positions into the reduced vector of the
     /// entries of that class (parallel to `cols_per_class[class]`).
     pos_per_class: Vec<Vec<usize>>,
+    /// Packed engine: one contiguous slab per class. `None` = gather.
+    /// `Arc` so a [`crate::linalg::packed::PackCache`] can share slabs
+    /// across fits; [`Reduced::append`] copies-on-write via `make_mut`.
+    packs: Option<Vec<Arc<PackedDesign>>>,
     /// Largest per-class slice — the scratch size `eta`/`gradient` need.
     max_slice: usize,
     /// Thread budget for the subset kernels.
     par: ParConfig,
 }
 
+/// Per-class `(columns, reduced positions)` split of an ascending
+/// flattened coefficient list: coefficient `c` is class `c / p`, design
+/// column `c % p`.
+fn class_split(coefs: &[usize], p: usize, m: usize) -> (Vec<Vec<usize>>, Vec<Vec<usize>>) {
+    let mut cols_per_class: Vec<Vec<usize>> = vec![Vec::new(); m];
+    let mut pos_per_class: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (i, &c) in coefs.iter().enumerate() {
+        debug_assert!(c < p * m);
+        cols_per_class[c / p].push(c % p);
+        pos_per_class[c / p].push(i);
+    }
+    (cols_per_class, pos_per_class)
+}
+
 impl<'a> Reduced<'a> {
-    /// Build the reduced view. `coefs` must be ascending and in range.
-    /// The kernel thread budget defaults to the process-wide setting;
-    /// override it with [`Reduced::with_par`].
+    /// Build the reduced view with the gather engine. `coefs` must be
+    /// ascending and in range. The kernel thread budget defaults to the
+    /// process-wide setting; override it with [`Reduced::with_par`].
     pub fn new(prob: &'a Problem, coefs: Vec<usize>) -> Self {
-        let p = prob.p();
-        let m = prob.family.n_classes();
-        let mut cols_per_class: Vec<Vec<usize>> = vec![Vec::new(); m];
-        let mut pos_per_class: Vec<Vec<usize>> = vec![Vec::new(); m];
-        for (i, &c) in coefs.iter().enumerate() {
-            debug_assert!(c < p * m);
-            let class = c / p;
-            let col = c % p;
-            cols_per_class[class].push(col);
-            pos_per_class[class].push(i);
-        }
+        debug_assert!(coefs.windows(2).all(|w| w[0] < w[1]), "coefs must be ascending");
+        let (cols_per_class, pos_per_class) =
+            class_split(&coefs, prob.p(), prob.family.n_classes());
         let max_slice = cols_per_class.iter().map(Vec::len).max().unwrap_or(0);
         Self {
             prob,
             coefs,
             cols_per_class,
             pos_per_class,
+            packs: None,
             max_slice,
             par: ParConfig::default(),
         }
@@ -109,6 +135,95 @@ impl<'a> Reduced<'a> {
     pub fn with_par(mut self, par: ParConfig) -> Self {
         self.par = par;
         self
+    }
+
+    /// Builder: switch to the packed engine, materializing each class's
+    /// screened columns into a contiguous slab (one `O(n·|E|)` pass,
+    /// parallel under the configured budget). Call after
+    /// [`Reduced::with_par`] so packing itself runs parallel.
+    pub fn packed(mut self) -> Self {
+        if self.packs.is_none() {
+            self.packs = Some(
+                self.cols_per_class
+                    .iter()
+                    .map(|cols| Arc::new(PackedDesign::pack(&self.prob.x, cols, self.par)))
+                    .collect(),
+            );
+        }
+        self
+    }
+
+    /// Build a packed reduced view by adopting the slabs of a cached
+    /// [`PackedSet`] (same coefficient set, packed by an earlier fit) —
+    /// the warm path that skips packing entirely.
+    pub fn from_cached(prob: &'a Problem, set: &PackedSet, par: ParConfig) -> Self {
+        let coefs = set.coefs.clone();
+        debug_assert!(coefs.windows(2).all(|w| w[0] < w[1]), "coefs must be ascending");
+        let (cols_per_class, pos_per_class) =
+            class_split(&coefs, prob.p(), prob.family.n_classes());
+        debug_assert_eq!(set.packs.len(), cols_per_class.len());
+        debug_assert!(set
+            .packs
+            .iter()
+            .zip(&cols_per_class)
+            .all(|(pack, cols)| pack.sorted_cols() == *cols));
+        let max_slice = cols_per_class.iter().map(Vec::len).max().unwrap_or(0);
+        Self {
+            prob,
+            coefs,
+            cols_per_class,
+            pos_per_class,
+            packs: Some(set.packs.clone()),
+            max_slice,
+            par,
+        }
+    }
+
+    /// True when the packed engine backs this view.
+    pub fn is_packed(&self) -> bool {
+        self.packs.is_some()
+    }
+
+    /// Widen the reduced set by `extra` (ascending flattened coefficient
+    /// indices, disjoint from the current set) — the KKT safeguard loop's
+    /// violator admission. Packed slabs grow incrementally (only the new
+    /// columns are materialized; shared slabs copy-on-write), and the
+    /// position bookkeeping is rebuilt so `coefs` stays ascending.
+    pub fn append(&mut self, extra: &[usize]) {
+        if extra.is_empty() {
+            return;
+        }
+        debug_assert!(extra.windows(2).all(|w| w[0] < w[1]), "extra must be ascending");
+        // Disjointness matters: appending an already-packed column would
+        // duplicate a slab slot. (The merge itself tolerates overlap.)
+        debug_assert!(
+            crate::slope::path::intersect_sorted(&self.coefs, extra).is_empty(),
+            "extra must be disjoint from the current set"
+        );
+        let p = self.prob.p();
+        let m = self.prob.family.n_classes();
+        self.coefs = crate::slope::path::union_sorted(&self.coefs, extra);
+        if let Some(packs) = &mut self.packs {
+            let (extra_cols, _) = class_split(extra, p, m);
+            for (pack, cols) in packs.iter_mut().zip(&extra_cols) {
+                if !cols.is_empty() {
+                    Arc::make_mut(pack).append(&self.prob.x, cols, self.par);
+                }
+            }
+        }
+        let (cols_per_class, pos_per_class) = class_split(&self.coefs, p, m);
+        self.cols_per_class = cols_per_class;
+        self.pos_per_class = pos_per_class;
+        self.max_slice = self.cols_per_class.iter().map(Vec::len).max().unwrap_or(0);
+    }
+
+    /// Snapshot the packed slabs for a
+    /// [`crate::linalg::packed::PackCache`] (cheap: `Arc` clones), or
+    /// `None` on the gather engine.
+    pub fn packed_set(&self) -> Option<Arc<PackedSet>> {
+        self.packs.as_ref().map(|packs| {
+            Arc::new(PackedSet { coefs: self.coefs.clone(), packs: packs.clone() })
+        })
     }
 
     /// Number of reduced coefficients.
@@ -128,38 +243,60 @@ impl<'a> Reduced<'a> {
     }
 
     /// `η = X_E β_E` (class-major, length `n·m`). Allocation-free given a
-    /// [`Reduced::make_scratch`] buffer.
+    /// [`Reduced::make_scratch`] buffer. Single-response packed views
+    /// stream the slab directly — no gather at all: positions are the
+    /// identity when there is one class.
     pub fn eta(&self, beta: &[f64], eta: &mut [f64], scratch: &mut [f64]) {
         let n = self.prob.n();
         let m = self.prob.family.n_classes();
         debug_assert_eq!(beta.len(), self.len());
         debug_assert_eq!(eta.len(), n * m);
         debug_assert!(scratch.len() >= self.max_slice);
+        if m == 1 {
+            if let Some(packs) = &self.packs {
+                packs[0].gemv_with(beta, eta, self.par);
+                return;
+            }
+        }
         for (l, cols) in self.cols_per_class.iter().enumerate() {
             let sub = &mut scratch[..cols.len()];
             for (s, &pos) in sub.iter_mut().zip(&self.pos_per_class[l]) {
                 *s = beta[pos];
             }
-            self.prob
-                .x
-                .gemv_subset_with(cols, sub, &mut eta[l * n..(l + 1) * n], self.par);
+            let out = &mut eta[l * n..(l + 1) * n];
+            match &self.packs {
+                Some(packs) => packs[l].gemv_with(sub, out, self.par),
+                None => self.prob.x.gemv_subset_with(cols, sub, out, self.par),
+            }
         }
     }
 
     /// Reduced gradient `X_Eᵀ h` (aligned with `coefs`). Allocation-free
-    /// given a [`Reduced::make_scratch`] buffer.
+    /// given a [`Reduced::make_scratch`] buffer; single-response packed
+    /// views write straight into `grad`.
     pub fn gradient(&self, h: &[f64], grad: &mut [f64], scratch: &mut [f64]) {
         let n = self.prob.n();
         debug_assert_eq!(grad.len(), self.len());
         debug_assert!(scratch.len() >= self.max_slice);
+        if self.prob.family.n_classes() == 1 {
+            if let Some(packs) = &self.packs {
+                packs[0].gemv_t_with(h, grad, self.par);
+                return;
+            }
+        }
         for (l, cols) in self.cols_per_class.iter().enumerate() {
             if cols.is_empty() {
                 continue;
             }
             let out = &mut scratch[..cols.len()];
-            self.prob
-                .x
-                .gemv_t_subset_with(cols, &h[l * n..(l + 1) * n], out, self.par);
+            match &self.packs {
+                Some(packs) => packs[l].gemv_t_with(&h[l * n..(l + 1) * n], out, self.par),
+                None => {
+                    self.prob
+                        .x
+                        .gemv_t_subset_with(cols, &h[l * n..(l + 1) * n], out, self.par)
+                }
+            }
             for (o, &pos) in out.iter().zip(&self.pos_per_class[l]) {
                 grad[pos] = *o;
             }
@@ -521,6 +658,93 @@ mod tests {
         for (i, &c) in coefs.iter().enumerate() {
             assert!((g_red[i] - g_full[c]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn packed_solve_matches_gather_solve_dense() {
+        // On a dense design the packed engine's accumulation orders match
+        // the gather kernels exactly, so whole solves are interchangeable.
+        let prob = random_problem(11, 40, 14, Family::Gaussian);
+        let lam: Vec<f64> = bh_sequence(14, 0.1).iter().map(|l| l * 0.05).collect();
+        let coefs: Vec<usize> = (0..14).filter(|c| c % 3 != 1).collect();
+        let cfg = FistaConfig { max_iter: 20_000, tol: 1e-9, kkt_tol_abs: None };
+        let gather = solve(&Reduced::new(&prob, coefs.clone()), &lam, None, &cfg);
+        let packed = solve(&Reduced::new(&prob, coefs.clone()).packed(), &lam, None, &cfg);
+        assert_eq!(gather.iterations, packed.iterations);
+        assert_eq!(gather.beta, packed.beta, "packed and gather solves must agree bitwise");
+        assert_eq!(gather.eta, packed.eta);
+    }
+
+    #[test]
+    fn append_widens_both_engines_identically() {
+        let prob = random_problem(12, 30, 12, Family::Gaussian);
+        let base: Vec<usize> = vec![1, 4, 7, 10];
+        let extra: Vec<usize> = vec![0, 5, 11];
+        let mut g = Reduced::new(&prob, base.clone());
+        let mut p = Reduced::new(&prob, base.clone()).packed();
+        g.append(&extra);
+        p.append(&extra);
+        assert_eq!(g.coefs, p.coefs);
+        assert_eq!(g.coefs, vec![0, 1, 4, 5, 7, 10, 11]);
+        assert_eq!(g.len(), 7);
+        let beta: Vec<f64> = (0..7).map(|i| 0.3 * i as f64 - 1.0).collect();
+        let mut eg = vec![0.0; prob.n()];
+        let mut ep = vec![0.0; prob.n()];
+        let mut sg = g.make_scratch();
+        let mut sp = p.make_scratch();
+        g.eta(&beta, &mut eg, &mut sg);
+        p.eta(&beta, &mut ep, &mut sp);
+        assert_eq!(eg, ep, "eta after append must match across engines");
+        let h: Vec<f64> = (0..prob.n()).map(|i| (i as f64) * 0.1 - 1.5).collect();
+        let mut gg = vec![0.0; 7];
+        let mut gp = vec![0.0; 7];
+        g.gradient(&h, &mut gg, &mut sg);
+        p.gradient(&h, &mut gp, &mut sp);
+        assert_eq!(gg, gp, "gradient after append must match across engines");
+    }
+
+    #[test]
+    fn packed_set_round_trips_through_cache_adoption() {
+        let prob = random_problem(13, 25, 10, Family::Gaussian);
+        let coefs: Vec<usize> = vec![0, 3, 4, 8];
+        let red = Reduced::new(&prob, coefs.clone()).packed();
+        let set = red.packed_set().expect("packed view must snapshot");
+        assert_eq!(set.coefs, coefs);
+        let adopted = Reduced::from_cached(&prob, &set, crate::linalg::ParConfig::serial());
+        assert!(adopted.is_packed());
+        assert_eq!(adopted.coefs, coefs);
+        let beta = vec![1.0, -0.5, 0.25, 2.0];
+        let mut e1 = vec![0.0; prob.n()];
+        let mut e2 = vec![0.0; prob.n()];
+        let mut s1 = red.make_scratch();
+        let mut s2 = adopted.make_scratch();
+        red.eta(&beta, &mut e1, &mut s1);
+        adopted.eta(&beta, &mut e2, &mut s2);
+        assert_eq!(e1, e2);
+        // gather views have no packed set to share
+        assert!(Reduced::new(&prob, coefs).packed_set().is_none());
+    }
+
+    #[test]
+    fn multinomial_packed_matches_gather() {
+        let prob = random_problem(14, 30, 6, Family::Multinomial { classes: 3 });
+        let coefs = vec![0usize, 2, 7, 11, 13]; // spans all three classes
+        let g = Reduced::new(&prob, coefs.clone());
+        let p = Reduced::new(&prob, coefs).packed();
+        let beta = vec![1.0, -2.0, 0.5, 0.25, -0.75];
+        let n = prob.n();
+        let m = prob.family.n_classes();
+        let (mut eg, mut ep) = (vec![0.0; n * m], vec![0.0; n * m]);
+        let mut sg = g.make_scratch();
+        let mut sp = p.make_scratch();
+        g.eta(&beta, &mut eg, &mut sg);
+        p.eta(&beta, &mut ep, &mut sp);
+        assert_eq!(eg, ep);
+        let h: Vec<f64> = (0..n * m).map(|i| (i as f64) * 0.05 - 1.0).collect();
+        let (mut gg, mut gp) = (vec![0.0; 5], vec![0.0; 5]);
+        g.gradient(&h, &mut gg, &mut sg);
+        p.gradient(&h, &mut gp, &mut sp);
+        assert_eq!(gg, gp);
     }
 
     #[test]

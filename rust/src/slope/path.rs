@@ -9,14 +9,16 @@
 //! (pure Rust) or by the AOT-compiled JAX/Pallas artifact through the PJRT
 //! runtime (`crate::runtime`).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::linalg::ops::sq_norm;
+use crate::linalg::packed::PackCache;
 use crate::linalg::ParConfig;
 use crate::slope::family::{Family, Problem};
 use crate::slope::fista::{solve, FistaConfig, Reduced};
 use crate::slope::lambda::{sigma_grid, sigma_max, PathConfig};
-use crate::slope::screen::{gap_safe_set, strong_set_with, StrongWorkspace};
+use crate::slope::screen::{gap_safe_set, StrongWorkspace};
 use crate::slope::sorted::{support, unique_nonzero_magnitudes};
 
 /// Screening strategy along the path.
@@ -104,10 +106,24 @@ pub struct PathOptions {
     /// already run fits on a worker pool (serve, CV) pass their per-job
     /// budget here so the two layers of parallelism don't multiply.
     pub threads: usize,
+    /// Run reduced solves on the packed engine (screened columns
+    /// materialized into a contiguous slab once per step — DESIGN.md §5)
+    /// instead of per-iteration gather kernels. On dense designs the two
+    /// engines produce bitwise-identical fits; this is a performance
+    /// switch, kept so the gather path stays exercised (`path_speed --
+    /// --no-pack`). Designs too sparse to repay densification are kept
+    /// on the gather kernels regardless (the `packing_profitable`
+    /// density gate).
+    pub packing: bool,
+    /// Shared store of finished packs keyed by screened set. When set,
+    /// each step consults it before packing and deposits its final pack
+    /// after the safeguard loop — warm-start fits with stable supports
+    /// (the serve registry's case) skip packing entirely.
+    pub pack_cache: Option<Arc<PackCache>>,
 }
 
 impl PathOptions {
-    /// Defaults: strong-set algorithm, paper path config.
+    /// Defaults: strong-set algorithm, paper path config, packed engine.
     pub fn new(config: PathConfig) -> Self {
         Self {
             config,
@@ -116,6 +132,8 @@ impl PathOptions {
             kkt_tol: 1e-5,
             record_safe: false,
             threads: 0,
+            packing: true,
+            pack_cache: None,
         }
     }
 
@@ -128,6 +146,22 @@ impl PathOptions {
     /// Builder: set the kernel thread budget (see [`PathOptions::threads`]).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    /// Builder: enable/disable the packed reduced-design engine.
+    pub fn with_packing(mut self, packing: bool) -> Self {
+        self.packing = packing;
+        self
+    }
+
+    /// Builder: attach a shared pack cache. Consulted only while the
+    /// packed engine is enabled (`packing`, the default) — turning
+    /// packing off leaves an attached cache unused. The cache must
+    /// belong to this problem's design: its key is the screened set
+    /// alone (see the [`PackCache`] contract).
+    pub fn with_pack_cache(mut self, cache: Arc<PackCache>) -> Self {
+        self.pack_cache = Some(cache);
         self
     }
 
@@ -359,6 +393,7 @@ pub fn fit_point(
         &mut eta,
         &mut h,
         &mut grad,
+        &mut screen_ws,
     );
 
     let rule_cover = union_sorted(&rule_set, &prev_support);
@@ -532,6 +567,7 @@ pub fn fit_path_seeded(
             &mut eta,
             &mut h,
             &mut grad,
+            &mut screen_ws,
         );
         let loss = out.loss;
         let e_set = out.e_set;
@@ -599,8 +635,11 @@ pub fn fit_path_seeded(
 
 /// The screening-phase set selection shared by the path driver and
 /// [`fit_point`]: `(rule_set, n_screened_rule, e_set)` for one step from
-/// the previous point's gradient and support. `ws` is the reusable
-/// strong-rule ordering workspace (one per fit, reused every step).
+/// the previous point's gradient and support. `ws` is the reusable fused
+/// sweep workspace (one per fit, reused every step): when the preceding
+/// KKT check already ranked this gradient — always the case between path
+/// steps — the strong set consumes that ranking instead of re-sorting,
+/// so each σ-step orders its p-length gradient exactly once.
 fn screening_sets(
     strategy: Strategy,
     pt: usize,
@@ -612,7 +651,12 @@ fn screening_sets(
 ) -> (Vec<usize>, usize, Vec<usize>) {
     let rule_set = match strategy {
         Strategy::NoScreening => (0..pt).collect::<Vec<_>>(),
-        _ => strong_set_with(grad, lam_prev, lam_cur, ws),
+        _ => {
+            if !ws.is_ranked() {
+                ws.rank(grad);
+            }
+            ws.strong_set_ranked(lam_prev, lam_cur)
+        }
     };
     let n_screened_rule = match strategy {
         Strategy::NoScreening => pt,
@@ -644,12 +688,65 @@ struct SolveOutcome {
     t_kkt: f64,
 }
 
+/// Whether the packed engine can beat the gather kernels on this
+/// design. Dense: always (same flops, better locality). Sparse:
+/// densifying screened columns multiplies per-iteration kernel work by
+/// roughly `1/density`, so only designs dense enough to repay the slab
+/// stream qualify — a dorothea-like 1%-dense design stays on the sparse
+/// gather kernels, which touch only stored nonzeros.
+fn packing_profitable(prob: &Problem) -> bool {
+    match &prob.x {
+        crate::linalg::Design::Dense(_) => true,
+        crate::linalg::Design::Sparse(s) => {
+            let cells = s.nrows().saturating_mul(s.ncols()).max(1);
+            // density ≥ 25%: dense streaming beats indexed access there
+            4 * s.nnz() >= cells
+        }
+    }
+}
+
+/// Build the reduced view for one safeguarded solve: packed (consulting
+/// the pack cache when one is attached) or gather, per the options. A
+/// set covering every coefficient gains nothing from packing — it would
+/// just duplicate the design — so it stays on the gather engine, as do
+/// designs too sparse to repay densification ([`packing_profitable`]).
+/// Returns the view plus whether it was adopted from the cache (an
+/// adopted, never-appended view needs no re-deposit).
+fn build_reduced<'a>(
+    prob: &'a Problem,
+    e_set: Vec<usize>,
+    opts: &PathOptions,
+) -> (Reduced<'a>, bool) {
+    let par = opts.par();
+    if opts.packing && e_set.len() < prob.p_total() && packing_profitable(prob) {
+        if let Some(cache) = &opts.pack_cache {
+            if let Some(set) = cache.lookup(&e_set) {
+                // Release-mode identity guard: a cache that (against its
+                // contract) saw a different design must not serve slabs
+                // of the wrong shape — refuse the hit and pack fresh.
+                if set.packs.iter().all(|pk| pk.nrows() == prob.n()) {
+                    return (Reduced::from_cached(prob, &set, par), true);
+                }
+            }
+        }
+        (Reduced::new(prob, e_set).with_par(par).packed(), false)
+    } else {
+        (Reduced::new(prob, e_set).with_par(par), false)
+    }
+}
+
 /// The solve + KKT safeguard loop shared by [`fit_path_seeded`] (per path
 /// step) and [`fit_point`] (per request): repeatedly solve the reduced
 /// problem on `e_set`, check the Theorem-1 conditions on the true full
 /// gradient, and widen `e_set` until no violation remains. On return
 /// `beta_full`, `eta`, `h` and `grad` hold the state at the final
-/// solution.
+/// solution, and `ws` holds the final gradient's magnitude ranking (which
+/// the next step's strong set consumes — the fused sweep).
+///
+/// The reduced view is built **once** per step; violator admissions
+/// append to it (packed slabs grow incrementally, no re-pack), and on a
+/// cache-assisted fit the final pack is deposited for the next fit with
+/// the same support.
 #[allow(clippy::too_many_arguments)]
 fn solve_with_safeguard(
     prob: &Problem,
@@ -665,8 +762,8 @@ fn solve_with_safeguard(
     eta: &mut [f64],
     h: &mut [f64],
     grad: &mut [f64],
+    ws: &mut StrongWorkspace,
 ) -> SolveOutcome {
-    let mut t_solve = 0.0;
     let mut t_kkt = 0.0;
     // Predictors added by failed KKT checks; a *violation* in the
     // paper's sense (§2.2.3) is such a predictor that is genuinely
@@ -682,12 +779,15 @@ fn solve_with_safeguard(
         Strategy::NoScreening | Strategy::StrongSet
     );
     let par = opts.par();
+    let t0 = Instant::now();
+    let (mut reduced, adopted) = build_reduced(prob, e_set.clone(), opts);
+    let mut t_solve = t0.elapsed().as_secs_f64();
+    let mut widened = false;
     let mut loss;
     loop {
         refits += 1;
         let t1 = Instant::now();
-        let reduced = Reduced::new(prob, e_set.clone()).with_par(par);
-        let warm: Vec<f64> = e_set.iter().map(|&c| beta_full[c]).collect();
+        let warm: Vec<f64> = reduced.coefs.iter().map(|&c| beta_full[c]).collect();
         // The inner solve must be at least as accurate as the
         // violation threshold, else solver noise shows up as phantom
         // violations (§2.2.3 counts would be meaningless).
@@ -695,7 +795,12 @@ fn solve_with_safeguard(
         if fista_cfg.kkt_tol_abs.is_none() {
             fista_cfg.kkt_tol_abs = Some(kkt_thresh);
         }
-        let res = solve(&reduced, &scale_prefix(lambda_base, sig, e_set.len()), Some(&warm), &fista_cfg);
+        let res = solve(
+            &reduced,
+            &scale_prefix(lambda_base, sig, reduced.len()),
+            Some(&warm),
+            &fista_cfg,
+        );
         solver_iterations += res.iterations;
         loss = res.loss;
         reduced.scatter(&res.beta, beta_full);
@@ -704,7 +809,10 @@ fn solve_with_safeguard(
         // Full gradient at the candidate. The solver already computed
         // η = X_E β_E at its solution (off-E coefficients are zero), so
         // the KKT sweep reuses it — for the Gaussian family this is the
-        // cached residual: only the parallel Xᵀh product remains.
+        // cached residual: only the parallel Xᵀh product remains. The
+        // resulting gradient is ranked once (`ws.rank`) and that ordering
+        // serves both the violation check here and, after the loop, the
+        // next step's strong set.
         let t2 = Instant::now();
         eta.copy_from_slice(&res.eta);
         prob.family.h_loss(eta, &prob.y, h);
@@ -712,7 +820,8 @@ fn solve_with_safeguard(
 
         // Violation detection: Algorithm 1 on the true gradient
         // (Prop. 1) restricted to the stage's check set.
-        let candidate_set = kkt_flagged(grad, lam_cur, kkt_thresh);
+        ws.rank(grad);
+        let candidate_set = ws.kkt_flagged_ranked(lam_cur, kkt_thresh);
         let viols: Vec<usize> = match opts.strategy {
             Strategy::PreviousSet if !checked_full => diff_sorted(
                 &intersect_sorted(&candidate_set, &union_sorted(rule_set, prev_support)),
@@ -730,15 +839,38 @@ fn solve_with_safeguard(
             checked_full = true;
             continue;
         }
+        let t3 = Instant::now();
         added_by_kkt = union_sorted(&added_by_kkt, &viols);
         e_set = union_sorted(&e_set, &viols);
+        let mut grow = viols;
         // Anti-creep escalation: when the violation loop keeps finding
         // more predictors round after round (heavy clustering regimes,
         // §3.2.3's "almost all predictors enter at the second step"),
         // widen E to the whole strong-set cover at once instead of
         // paying one big re-solve per trickle of violations.
         if refits >= 3 && opts.strategy == Strategy::PreviousSet {
-            e_set = union_sorted(&e_set, &union_sorted(rule_set, prev_support));
+            let cover = union_sorted(rule_set, prev_support);
+            let extra = diff_sorted(&cover, &e_set);
+            if !extra.is_empty() {
+                e_set = union_sorted(&e_set, &extra);
+                grow = union_sorted(&grow, &extra);
+            }
+        }
+        // Incremental admission: only the violator columns join the
+        // packed slab — the columns already packed are untouched.
+        reduced.append(&grow);
+        widened = true;
+        t_solve += t3.elapsed().as_secs_f64();
+    }
+    // Deposit the finished pack so the next fit with this support (warm
+    // serve requests, repeated path sweeps) skips packing entirely. An
+    // adopted view that never widened is already cached verbatim — no
+    // point paying the snapshot and the cache lock for a no-op overwrite.
+    if !adopted || widened {
+        if let Some(cache) = &opts.pack_cache {
+            if let Some(set) = reduced.packed_set() {
+                cache.store(set);
+            }
         }
     }
     SolveOutcome {
@@ -756,7 +888,14 @@ fn solve_with_safeguard(
 /// gradient, with a small tolerance on the running sum (guards against
 /// flagging predictors whose prefix sum is numerically ~0 — the
 /// conservative corner case Prop. 1 describes).
-fn kkt_flagged(grad: &[f64], lam: &[f64], tol: f64) -> Vec<usize> {
+///
+/// Kept (hidden) as the frozen standalone reference for the fused
+/// sweep's [`StrongWorkspace::kkt_flagged_ranked`], which the safeguard
+/// loop uses so the KKT check shares its gradient ordering with the next
+/// step's strong set; `kkt_flagged_ranked_matches_reference` pins the two
+/// together.
+#[doc(hidden)]
+pub fn kkt_flagged(grad: &[f64], lam: &[f64], tol: f64) -> Vec<usize> {
     let ord = crate::linalg::ops::order_desc_abs(grad);
     let mut flagged = Vec::new();
     let mut block = Vec::new();
@@ -1133,6 +1272,167 @@ mod tests {
             }
         }
         assert_eq!(warm.final_grad.len(), prob.p_total());
+    }
+
+    #[test]
+    fn packed_engine_matches_gather_engine_exactly() {
+        // The tentpole's correctness contract: on dense designs the
+        // packed engine is bitwise interchangeable with the gather
+        // engine — identical grids, violation counts, and coefficients.
+        for strategy in [Strategy::StrongSet, Strategy::PreviousSet, Strategy::NoScreening] {
+            let prob = gaussian_problem(20, 30, 80, 5);
+            let gather = {
+                let o = opts(LambdaKind::Bh { q: 0.1 }, strategy, 15).with_packing(false);
+                fit_path(&prob, &o, &NativeGradient(&prob))
+            };
+            let packed = {
+                let o = opts(LambdaKind::Bh { q: 0.1 }, strategy, 15).with_packing(true);
+                fit_path(&prob, &o, &NativeGradient(&prob))
+            };
+            assert_eq!(gather.sigmas.len(), packed.sigmas.len(), "{}", strategy.name());
+            assert_eq!(
+                gather.total_violations, packed.total_violations,
+                "{}: violation counts diverged",
+                strategy.name()
+            );
+            for (a, b) in gather.steps.iter().zip(&packed.steps) {
+                assert_eq!(a.violations, b.violations, "{}", strategy.name());
+                assert_eq!(a.n_fitted, b.n_fitted, "{}", strategy.name());
+                assert_eq!(a.solver_iterations, b.solver_iterations, "{}", strategy.name());
+            }
+            assert_eq!(
+                gather.final_beta,
+                packed.final_beta,
+                "{}: coefficients diverged",
+                strategy.name()
+            );
+            assert_eq!(gather.final_grad, packed.final_grad, "{}", strategy.name());
+        }
+    }
+
+    #[test]
+    fn packed_engine_matches_gather_engine_sparse_to_tolerance() {
+        // Sparse designs are the one place the engines round differently
+        // (the packed slab streams structural zeros the sparse gather
+        // kernels skip), so the agreement contract is solver-level, not
+        // bitwise: same grid, solutions within solver tolerance. Density
+        // 0.4 keeps the design above the packing_profitable threshold so
+        // the packed engine genuinely engages.
+        use crate::linalg::Csc;
+        let mut rng = Pcg64::new(22);
+        let mut dense = Mat::zeros(40, 90);
+        for j in 0..90 {
+            for i in 0..40 {
+                if rng.bernoulli(0.4) {
+                    dense.set(i, j, rng.normal());
+                }
+            }
+        }
+        let mut eta = vec![0.0; 40];
+        let beta: Vec<f64> = (0..90).map(|j| if j < 4 { 2.0 * rng.sign() } else { 0.0 }).collect();
+        dense.gemv(&beta, &mut eta);
+        let y: Vec<f64> = eta.iter().map(|e| e + 0.3 * rng.normal()).collect();
+        let mut x = Design::Sparse(Csc::from_dense(&dense));
+        x.standardize();
+        let prob = Problem::new(x, y, Family::Gaussian);
+        let mk = |packing: bool| {
+            let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 12).with_packing(packing);
+            o.fista.tol = 1e-9;
+            fit_path(&prob, &o, &NativeGradient(&prob))
+        };
+        let gather = mk(false);
+        let packed = mk(true);
+        let steps = gather.sigmas.len().min(packed.sigmas.len());
+        assert!(steps >= 5);
+        for m in 0..steps {
+            let a = gather.beta_at(m, prob.p_total());
+            let b = packed.beta_at(m, prob.p_total());
+            for i in 0..prob.p_total() {
+                assert!(
+                    (a[i] - b[i]).abs() < 1e-5,
+                    "sparse engines diverged at step {m} coef {i}: {} vs {}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn too_sparse_designs_stay_on_gather_even_when_packing_requested() {
+        // A dorothea-like low-density design must not be densified: the
+        // density gate keeps it on the sparse gather kernels, observable
+        // as an attached pack cache that never receives a deposit.
+        use crate::linalg::packed::PackCache;
+        use crate::linalg::Csc;
+        let mut rng = Pcg64::new(23);
+        let mut dense = Mat::zeros(50, 120);
+        for j in 0..120 {
+            for i in 0..50 {
+                if rng.bernoulli(0.05) {
+                    dense.set(i, j, rng.normal() + 1.0);
+                }
+            }
+        }
+        let y: Vec<f64> = (0..50).map(|_| rng.normal()).collect();
+        let mut x = Design::Sparse(Csc::from_dense(&dense));
+        x.standardize();
+        let prob = Problem::new(x, y, Family::Gaussian);
+        let cache = Arc::new(PackCache::new(64));
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 8)
+            .with_pack_cache(Arc::clone(&cache));
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert!(!fit.steps.is_empty());
+        assert!(cache.is_empty(), "a 5%-dense design must not be packed");
+    }
+
+    #[test]
+    fn pack_cache_turns_repacks_into_hits() {
+        use crate::linalg::packed::PackCache;
+        let prob = gaussian_problem(21, 30, 60, 4);
+        let cache = Arc::new(PackCache::new(64));
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10)
+            .with_pack_cache(Arc::clone(&cache));
+        let first = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert!(!cache.is_empty(), "a fit must deposit packs");
+        let (hits_first, _) = cache.stats();
+        // the identical fit repeats the same screened sets, so packing is
+        // replaced by cache adoption — and adoption is bitwise invisible
+        let again = fit_path(&prob, &o, &NativeGradient(&prob));
+        let (hits_again, _) = cache.stats();
+        assert!(
+            hits_again > hits_first,
+            "repeat fit must adopt cached packs (hits {hits_first} -> {hits_again})"
+        );
+        assert_eq!(first.sigmas.len(), again.sigmas.len());
+        assert_eq!(first.final_beta, again.final_beta);
+        // and an uncached but otherwise identical fit agrees too
+        let plain = fit_path(
+            &prob,
+            &opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10),
+            &NativeGradient(&prob),
+        );
+        assert_eq!(plain.final_beta, first.final_beta);
+    }
+
+    #[test]
+    fn kkt_flagged_ranked_matches_reference() {
+        use crate::check::{ensure, forall, gen, Config};
+        forall(
+            Config { cases: 300, seed: 0x2f1 },
+            |rng| {
+                let g = gen::normal_vec(rng, 1, 40);
+                let lam = gen::lambda_seq(rng, g.len());
+                (g, lam)
+            },
+            |(g, lam)| {
+                let mut ws = StrongWorkspace::default();
+                ws.rank(g);
+                let ranked = ws.kkt_flagged_ranked(lam, 1e-9);
+                let reference = kkt_flagged(g, lam, 1e-9);
+                ensure(ranked == reference, format!("{ranked:?} vs {reference:?}"))
+            },
+        );
     }
 
     #[test]

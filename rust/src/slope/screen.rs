@@ -62,58 +62,150 @@ pub fn strong_set(grad: &[f64], lambda_prev: &[f64], lambda_next: &[f64]) -> Vec
     strong_set_with(grad, lambda_prev, lambda_next, &mut StrongWorkspace::default())
 }
 
-/// Reusable scratch for [`strong_set_with`]: the `(criterion, predictor)`
-/// pairs and the sorted criterion column. The path driver allocates one
-/// per fit and reuses it at every step — the rule runs once per path
-/// point, and the old implementation's two fresh pair vectors per call
-/// showed up in the screening-phase profile (see EXPERIMENTS.md §Perf).
+/// Reusable scratch for the fused gradient sweep: the `(criterion,
+/// predictor)` pairs and the sorted criterion column. The path driver
+/// allocates one per fit and reuses it at every step.
+///
+/// The workspace also carries the sweep's *fusion state*: after
+/// [`StrongWorkspace::rank`] the pairs hold the gradient's magnitude
+/// ordering, which both the KKT violation check
+/// ([`StrongWorkspace::kkt_flagged_ranked`]) and the next step's strong
+/// set ([`StrongWorkspace::strong_set_ranked`]) consume — one `O(p log p)`
+/// ordering per gradient evaluation instead of one per consumer. Together
+/// with the path driver reusing the solver's final `η` for the gradient
+/// itself, a σ-step reads the design once and ranks its gradient once.
 #[derive(Debug, Default)]
 pub struct StrongWorkspace {
     pairs: Vec<(f64, u32)>,
     crit: Vec<f64>,
+    /// True while `pairs` hold `(|g|, j)` for the most recent
+    /// [`StrongWorkspace::rank`] call (cleared when the strong-set pass
+    /// overwrites the magnitudes with the slack-adjusted criterion).
+    ranked: bool,
 }
 
-/// [`strong_set`] with a caller-owned workspace, fused into a single
-/// ordering pass: pack `(|g|, j)` pairs, sort once descending, add the
-/// slack `λ⁽ᵐ⁾ − λ⁽ᵐ⁺¹⁾` in rank order *in place*, and re-sort only when
-/// the slack actually perturbed monotonicity. On the σ-scaled grids the
-/// path driver uses, the slack is `(σ_m − σ_{m+1})·λ_base` — itself
-/// non-increasing in rank — so the criterion stays sorted and the second
-/// sort (plus both fresh allocations) of the old implementation is gone.
+impl StrongWorkspace {
+    /// Rank a gradient once: pack `(|g|, j)` pairs and sort descending.
+    /// `total_cmp` (not `partial_cmp().unwrap()`): one NaN in a gradient
+    /// must surface as a bad fit, not panic the whole server.
+    pub fn rank(&mut self, grad: &[f64]) {
+        self.pairs.clear();
+        self.pairs
+            .extend(grad.iter().enumerate().map(|(j, &g)| (g.abs(), j as u32)));
+        self.pairs
+            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        self.ranked = true;
+    }
+
+    /// True while the workspace holds a gradient ranking that no consumer
+    /// has overwritten yet.
+    pub fn is_ranked(&self) -> bool {
+        self.ranked
+    }
+
+    /// Algorithm 1 on the ranked magnitudes with a tolerance on the
+    /// running sum — the KKT violation flagger, sharing the ranking the
+    /// next step's strong set will consume. Returns ascending predictor
+    /// indices. Must follow a [`StrongWorkspace::rank`] of the gradient
+    /// being checked.
+    pub fn kkt_flagged_ranked(&self, lam: &[f64], tol: f64) -> Vec<usize> {
+        debug_assert!(self.ranked, "kkt_flagged_ranked needs a fresh rank()");
+        let mut flagged = Vec::new();
+        let mut block_start = 0usize;
+        let mut sum = 0.0f64;
+        for (pos, &(mag, _)) in self.pairs.iter().enumerate() {
+            sum += mag - lam[pos];
+            if sum >= tol {
+                flagged.extend(self.pairs[block_start..=pos].iter().map(|&(_, j)| j as usize));
+                block_start = pos + 1;
+                sum = 0.0;
+            }
+        }
+        flagged.sort_unstable();
+        flagged
+    }
+
+    /// The strong rule consuming the current ranking: add the slack
+    /// `λ⁽ᵐ⁾ − λ⁽ᵐ⁺¹⁾` in rank order *in place*, re-sort only when the
+    /// slack actually perturbed monotonicity (never on the σ-scaled grids
+    /// the path driver uses), and run the short-circuiting Algorithm 2.
+    /// Overwrites the magnitudes, so the ranking is spent afterwards.
+    pub fn strong_set_ranked(&mut self, lambda_prev: &[f64], lambda_next: &[f64]) -> Vec<usize> {
+        debug_assert!(self.ranked, "strong_set_ranked needs a fresh rank()");
+        self.ranked = false;
+        // c_j = |g|_(j) + (λ_prev_j − λ_next_j), written over the magnitudes.
+        let mut sorted = true;
+        let mut prev = f64::INFINITY;
+        for (rank, pair) in self.pairs.iter_mut().enumerate() {
+            pair.0 += lambda_prev[rank] - lambda_next[rank];
+            sorted &= !(prev < pair.0);
+            prev = pair.0;
+        }
+        if !sorted {
+            self.pairs
+                .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        }
+        self.crit.clear();
+        self.crit.extend(self.pairs.iter().map(|&(c, _)| c));
+        let k = algorithm2_k_short(&self.crit, lambda_next);
+        let mut set: Vec<usize> =
+            self.pairs[..k].iter().map(|&(_, idx)| idx as usize).collect();
+        set.sort_unstable();
+        set
+    }
+}
+
+/// [`strong_set`] with a caller-owned workspace: one fused ordering pass
+/// (see [`StrongWorkspace`]). The path driver goes through the ranked
+/// form directly so the KKT check's ordering is reused; this wrapper
+/// ranks and consumes in one call.
 pub fn strong_set_with(
     grad: &[f64],
     lambda_prev: &[f64],
     lambda_next: &[f64],
     ws: &mut StrongWorkspace,
 ) -> Vec<usize> {
-    let p = grad.len();
-    debug_assert_eq!(lambda_prev.len(), p);
-    debug_assert_eq!(lambda_next.len(), p);
-    ws.pairs.clear();
-    ws.pairs
-        .extend(grad.iter().enumerate().map(|(j, &g)| (g.abs(), j as u32)));
-    // total_cmp (not partial_cmp().unwrap()): one NaN in a gradient must
-    // surface as a bad fit, not panic the whole server.
-    ws.pairs
-        .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
-    // c_j = |g|_(j) + (λ_prev_j − λ_next_j), written over the magnitudes.
-    let mut sorted = true;
-    let mut prev = f64::INFINITY;
-    for (rank, pair) in ws.pairs.iter_mut().enumerate() {
-        pair.0 += lambda_prev[rank] - lambda_next[rank];
-        sorted &= !(prev < pair.0);
-        prev = pair.0;
+    debug_assert_eq!(lambda_prev.len(), grad.len());
+    debug_assert_eq!(lambda_next.len(), grad.len());
+    ws.rank(grad);
+    ws.strong_set_ranked(lambda_prev, lambda_next)
+}
+
+/// [`algorithm2_k`] with the sorted-threshold short-circuit: when the
+/// running block sum is negative and the criterion has fallen to or below
+/// the smallest penalty weight, no later prefix can recover — `c` is
+/// non-increasing and every remaining `λ_j ≥ λ_p`, so every remaining
+/// increment `c_j − λ_j ≤ 0` and the sum stays negative. The scan then
+/// stops after `O(k + t)` entries (`t` = entries above `λ_p`) instead of
+/// `O(p)` — on a well-screened path step almost the whole tail is
+/// skipped. Exact: returns precisely [`algorithm2_k`]'s answer (the
+/// frozen reference path keeps the full scan so the regression tests pin
+/// this).
+fn algorithm2_k_short(c_sorted: &[f64], lambda: &[f64]) -> usize {
+    debug_assert!(c_sorted.windows(2).all(|w| !(w[0] < w[1])), "c must be sorted descending");
+    let p = c_sorted.len();
+    if p == 0 {
+        return 0;
     }
-    if !sorted {
-        ws.pairs
-            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    let lam_min = lambda[p - 1];
+    let mut i = 1usize;
+    let mut k = 0usize;
+    let mut s = 0.0f64;
+    while i + k <= p {
+        let pos = i + k - 1;
+        s += c_sorted[pos] - lambda[pos];
+        if s >= 0.0 {
+            k += i;
+            i = 1;
+            s = 0.0;
+        } else {
+            if c_sorted[pos] <= lam_min {
+                break;
+            }
+            i += 1;
+        }
     }
-    ws.crit.clear();
-    ws.crit.extend(ws.pairs.iter().map(|&(c, _)| c));
-    let k = algorithm2_k(&ws.crit, lambda_next);
-    let mut set: Vec<usize> = ws.pairs[..k].iter().map(|&(_, idx)| idx as usize).collect();
-    set.sort_unstable();
-    set
+    k
 }
 
 /// The re-sorting `strong_set` implementation [`strong_set_with`]
@@ -339,6 +431,102 @@ mod tests {
                 ensure(fused == reference, format!("fused {fused:?} vs ref {reference:?}"))
             },
         );
+    }
+
+    #[test]
+    fn algorithm2_short_circuit_matches_full_scan() {
+        forall(
+            Config { cases: 500, seed: 0xf6 },
+            |rng| {
+                let mut c: Vec<f64> = gen::normal_vec(rng, 1, 60).iter().map(|v| v.abs()).collect();
+                // long sub-threshold tails: the short-circuit's target case
+                if rng.bernoulli(0.5) {
+                    for v in c.iter_mut().skip(5) {
+                        *v *= 0.01;
+                    }
+                }
+                c.sort_unstable_by(|a, b| b.total_cmp(a));
+                let lam = gen::lambda_seq(rng, c.len());
+                (c, lam)
+            },
+            |(c, lam)| {
+                let short = algorithm2_k_short(c, lam);
+                let full = algorithm2_k(c, lam);
+                ensure(short == full, format!("short={short} vs full={full}"))
+            },
+        );
+    }
+
+    #[test]
+    fn algorithm2_short_circuit_edge_cases() {
+        assert_eq!(algorithm2_k_short(&[], &[]), 0);
+        // everything exactly at the smallest weight: no early break may
+        // drop the redistribution (c_j − λ_j = 0 increments keep s at 0)
+        let c = [0.5, 0.5, 0.5];
+        let lam = [0.5, 0.5, 0.5];
+        assert_eq!(algorithm2_k_short(&c, &lam), algorithm2_k(&c, &lam));
+        // tail exactly at λ_p with a negative running sum must break
+        // without changing the answer
+        let c = [2.0, 0.1, 0.1, 0.1];
+        let lam = [1.0, 0.9, 0.8, 0.1];
+        assert_eq!(algorithm2_k_short(&c, &lam), algorithm2_k(&c, &lam));
+        // zero penalty tail: λ_p = 0, nothing non-negative may be skipped
+        let c = [1.0, 0.0, 0.0];
+        let lam = [0.5, 0.25, 0.0];
+        assert_eq!(algorithm2_k_short(&c, &lam), algorithm2_k(&c, &lam));
+    }
+
+    #[test]
+    fn short_circuited_strong_set_pins_to_resort_reference() {
+        // The satellite regression: the fused + short-circuited strong set
+        // must agree with the frozen re-sorting reference on inputs with
+        // dominant sub-threshold tails (where the short-circuit actually
+        // fires) and on redistribution-heavy ties.
+        forall(
+            Config { cases: 400, seed: 0xf7 },
+            |rng| {
+                let p = 10 + rng.below(80) as usize;
+                let mut g = gen::normal_vec(rng, p, p);
+                // crush the tail so only a handful of entries clear λ_p
+                for v in g.iter_mut().skip(4) {
+                    *v *= 0.02;
+                }
+                let lam_prev = gen::lambda_seq(rng, p);
+                let s = 0.5 + 0.45 * rng.next_f64();
+                let lam_next: Vec<f64> = lam_prev.iter().map(|l| l * s).collect();
+                (g, lam_prev, lam_next)
+            },
+            |(g, lam_prev, lam_next)| {
+                let mut ws = StrongWorkspace::default();
+                let fused = strong_set_with(g, lam_prev, lam_next, &mut ws);
+                let reference = strong_set_resort_reference(g, lam_prev, lam_next);
+                ensure(fused == reference, format!("fused {fused:?} vs ref {reference:?}"))
+            },
+        );
+    }
+
+    #[test]
+    fn ranked_sweep_shares_one_ordering() {
+        let g = [0.9, -0.7, 0.5, 0.2, -0.1, 1.4];
+        let lam: Vec<f64> = vec![1.2, 1.0, 0.8, 0.6, 0.4, 0.2];
+        let next: Vec<f64> = lam.iter().map(|l| l * 0.9).collect();
+        let mut ws = StrongWorkspace::default();
+        assert!(!ws.is_ranked());
+        ws.rank(&g);
+        assert!(ws.is_ranked());
+        // the KKT flagger reads the ranking without consuming it...
+        let flagged = ws.kkt_flagged_ranked(&lam, 1e-12);
+        assert!(ws.is_ranked());
+        // ...and matches Algorithm 1 on |g|↓ mapped back to indices
+        let ord = crate::linalg::ops::order_desc_abs(&g);
+        let sorted = abs_sorted_desc(&g);
+        let mut want: Vec<usize> = algorithm1(&sorted, &lam).iter().map(|&r| ord[r]).collect();
+        want.sort_unstable();
+        assert_eq!(flagged, want);
+        // the strong set consumes the ranking and equals the fresh form
+        let ranked = ws.strong_set_ranked(&lam, &next);
+        assert!(!ws.is_ranked());
+        assert_eq!(ranked, strong_set(&g, &lam, &next));
     }
 
     #[test]

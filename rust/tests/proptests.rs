@@ -4,7 +4,7 @@
 
 use slope_screen::check::{all_close, ensure, forall, gen, Config};
 use slope_screen::linalg::ops::{abs_sorted_desc, order_desc_abs};
-use slope_screen::linalg::{Csc, Mat, ParConfig};
+use slope_screen::linalg::{Csc, Design, Mat, PackedDesign, ParConfig};
 use slope_screen::rng::Pcg64;
 use slope_screen::slope::prox::{prox_sorted_l1, prox_sorted_l1_reference};
 use slope_screen::slope::screen::{algorithm1, algorithm2_k, strong_set};
@@ -368,6 +368,136 @@ fn parallel_kernels_match_serial_across_thread_counts() {
                     .map_err(|e| tag(&format!("dense col_sq_norms: {e}")))?;
                 all_close(&sparse.col_sq_norms_with(par), &norms, 1e-12)
                     .map_err(|e| tag(&format!("sparse col_sq_norms: {e}")))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The packed reduced-design engine is a pure reformulation of the
+/// gather kernels: `PackedDesign::gemv(_t)` must agree with
+/// `gemv_subset`/`gemv_t_subset` to 1e-12 on dense and sparse storage,
+/// across thread counts {1, 2, 7}, including the degenerate shapes
+/// (n = 0, p = 1) and subsets (∅, all columns) where slab partitioning
+/// and packing are trickiest. On dense storage the agreement is in fact
+/// bitwise (the packed kernels replicate the gather accumulation
+/// orders); the shared 1e-12 bound also covers the sparse kernels, which
+/// regroup sums when the slab streams structural zeros.
+#[test]
+fn packed_kernels_match_gather_kernels() {
+    const SHAPES: &[(usize, usize)] = &[
+        (0, 3),   // no observations
+        (1, 1),   // scalar
+        (4, 1),   // p = 1
+        (3, 5),   // p < 7 threads
+        (17, 9),  // odd sizes
+        (24, 40), // p > n
+        (64, 13),
+    ];
+    forall(
+        Config { cases: 150, seed: 0x20d },
+        |rng| {
+            let (n, p) = SHAPES[rng.below(SHAPES.len() as u64) as usize];
+            let data: Vec<f64> = (0..n * p)
+                .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+                .collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let cols: Vec<usize> = match rng.below(3) {
+                0 => Vec::new(),               // subset = ∅
+                1 => (0..p).collect(),         // subset = all
+                _ => (0..p).filter(|_| rng.bernoulli(0.5)).collect(),
+            };
+            // ~25% exact zeros in the reduced iterate (screened-path case)
+            let vc: Vec<f64> = cols
+                .iter()
+                .map(|_| if rng.bernoulli(0.25) { 0.0 } else { rng.normal() })
+                .collect();
+            (n, p, data, w, cols, vc)
+        },
+        |(n, p, data, w, cols, vc)| {
+            let (n, p) = (*n, *p);
+            let dense = Mat::from_col_major(n, p, data.clone());
+            let designs =
+                [Design::Dense(dense.clone()), Design::Sparse(Csc::from_dense(&dense))];
+            for (di, design) in designs.iter().enumerate() {
+                let kind = if di == 0 { "dense" } else { "sparse" };
+                let mut want_ev = vec![0.0; n];
+                design.gemv_subset(cols, vc, &mut want_ev);
+                let mut want_gr = vec![0.0; cols.len()];
+                design.gemv_t_subset(cols, w, &mut want_gr);
+                for threads in [1usize, 2, 7] {
+                    let par = ParConfig::exact(threads);
+                    let pack = PackedDesign::pack(design, cols, par);
+                    let tag = |k: &str, e: &str| {
+                        format!("{kind} {k} (n={n}, p={p}, |E|={}, t={threads}): {e}", cols.len())
+                    };
+                    let mut ev = vec![0.0; n];
+                    pack.gemv_with(vc, &mut ev, par);
+                    all_close(&ev, &want_ev, 1e-12).map_err(|e| tag("gemv", &e))?;
+                    let mut ev2 = vec![0.0; n];
+                    pack.gemv(vc, &mut ev2);
+                    ensure(ev == ev2, tag("gemv", "parallel != serial"))?;
+                    let mut gr = vec![0.0; cols.len()];
+                    pack.gemv_t_with(w, &mut gr, par);
+                    all_close(&gr, &want_gr, 1e-12).map_err(|e| tag("gemv_t", &e))?;
+                    let mut gr2 = vec![0.0; cols.len()];
+                    pack.gemv_t(w, &mut gr2);
+                    ensure(gr == gr2, tag("gemv_t", "parallel != serial"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Growing a pack incrementally (the KKT safeguard's violator admission)
+/// is indistinguishable from packing the final set fresh: same ascending
+/// column view, same kernel results — the merged traversal order makes
+/// append history invisible.
+#[test]
+fn incremental_append_matches_fresh_pack() {
+    forall(
+        Config { cases: 120, seed: 0x20e },
+        |rng| {
+            let n = rng.below(25) as usize; // 0..=24 rows
+            let p = 2 + rng.below(30) as usize;
+            let data: Vec<f64> = (0..n * p)
+                .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() })
+                .collect();
+            // random partition of a random subset into base + 3 batches
+            let mut batches: Vec<Vec<usize>> = vec![Vec::new(); 4];
+            let mut all: Vec<usize> = Vec::new();
+            for c in 0..p {
+                if rng.bernoulli(0.6) {
+                    batches[rng.below(4) as usize].push(c);
+                    all.push(c);
+                }
+            }
+            let v: Vec<f64> = all.iter().map(|_| rng.normal()).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (n, p, data, batches, all, v, w)
+        },
+        |(n, p, data, batches, all, v, w)| {
+            let dense = Mat::from_col_major(*n, *p, data.clone());
+            let designs =
+                [Design::Dense(dense.clone()), Design::Sparse(Csc::from_dense(&dense))];
+            for design in &designs {
+                let mut inc = PackedDesign::pack(design, &batches[0], ParConfig::serial());
+                for (bi, batch) in batches[1..].iter().enumerate() {
+                    let par = if bi % 2 == 0 { ParConfig::exact(3) } else { ParConfig::serial() };
+                    inc.append(design, batch, par);
+                }
+                let fresh = PackedDesign::pack(design, all, ParConfig::serial());
+                ensure(inc.sorted_cols() == *all, "appended column view diverged")?;
+                ensure(inc.ncols() == all.len(), "ncols diverged")?;
+                let (mut a, mut b) = (vec![0.0; *n], vec![0.0; *n]);
+                inc.gemv(v, &mut a);
+                fresh.gemv(v, &mut b);
+                ensure(a == b, "gemv: appended pack != fresh pack")?;
+                let (mut c, mut d) = (vec![0.0; all.len()], vec![0.0; all.len()]);
+                inc.gemv_t(w, &mut c);
+                fresh.gemv_t(w, &mut d);
+                ensure(c == d, "gemv_t: appended pack != fresh pack")?;
             }
             Ok(())
         },
