@@ -4,19 +4,33 @@
 //! Paper rows: cpusmall/OLS (8192×12), golub/logistic (38×7129),
 //! physician/poisson (4406×25), zipcode/multinomial (200×256, 10 cls).
 //! The claim: big wins when p ≫ n, no noticeable drawback when n ≫ p.
+//!
+//! `--datasets` entries are [`DataSource`] specs, so file-backed data
+//! runs through the same harness as the stand-ins:
+//!
+//!   cargo bench --bench tab3_realdata_perf -- \
+//!     --datasets cpusmall,file:/tmp/standins/golub.csv@binomial
+//!
+//! (`slope-screen export --dataset golub --out /tmp/standins` writes the
+//! file; see EXPERIMENTS.md §"Reproducing Table 3 from files".)
+//!
 //! Run: `cargo bench --bench tab3_realdata_perf`
 
 use std::time::Instant;
 
 use slope_screen::benchkit::{fmt_secs, Table};
 use slope_screen::cli::Args;
-use slope_screen::data::real::RealDataset;
+use slope_screen::coordinator::DataSource;
 use slope_screen::slope::lambda::{LambdaKind, PathConfig};
 use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions, Strategy};
 
 fn main() {
     let parsed = Args::new("Table 3: real-data wall time with/without screening")
-        .opt("datasets", "cpusmall,golub,physician,zipcode", "datasets")
+        .opt(
+            "datasets",
+            "cpusmall,golub,physician,zipcode",
+            "stand-in names and/or file:PATH[@family[:classes]] specs",
+        )
         .opt("q", "0.05", "BH parameter")
         .flag("bench", "(cargo bench compatibility)")
         .parse();
@@ -25,18 +39,10 @@ fn main() {
         "Table 3 — wall-clock seconds per path fit",
         &["dataset", "model", "n", "p", "no_screening_s", "screening_s", "speedup"],
     );
-    for name in parsed.get("datasets").split(',') {
-        let ds = RealDataset::all()
-            .into_iter()
-            .find(|d| d.name() == name)
-            .unwrap_or_else(|| panic!("unknown dataset {name}"));
-        let prob = match ds {
-            RealDataset::Golub => ds.load(), // binomial
-            _ => {
-                let fam = ds.table3_family();
-                ds.load_with(fam, 0x7ab3 + ds.dims().0 as u64)
-            }
-        };
+    for spec in parsed.get("datasets").split(',') {
+        let src = DataSource::parse(spec).unwrap_or_else(|e| panic!("--datasets: {e}"));
+        let prob = src.load().unwrap_or_else(|e| panic!("--datasets {spec}: {e}"));
+        let name = src.name();
         let cfg = PathConfig::new(LambdaKind::Bh { q: parsed.f64("q") });
         let mut secs = [0.0f64; 2];
         for (i, strategy) in [Strategy::NoScreening, Strategy::StrongSet].iter().enumerate() {
@@ -46,7 +52,7 @@ fn main() {
             secs[i] = t.elapsed().as_secs_f64();
             println!(
                 "{:<10} {:<12} {:<9} {} ({} steps, viol={})",
-                ds.name(),
+                name,
                 prob.family.name(),
                 strategy.name(),
                 fmt_secs(secs[i]),
@@ -55,7 +61,7 @@ fn main() {
             );
         }
         tab.row(vec![
-            ds.name().to_string(),
+            name,
             prob.family.name().to_string(),
             prob.n().to_string(),
             prob.p().to_string(),

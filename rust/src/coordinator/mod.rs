@@ -13,4 +13,4 @@ pub mod experiment;
 pub mod report;
 
 pub use cv::{cross_validate, CvConfig, CvResult};
-pub use experiment::{run_grid, GridPoint, GridSpec};
+pub use experiment::{run_grid, DataSource, GridPoint, GridSpec};

@@ -1,5 +1,8 @@
 //! Data generation: the synthetic designs of §3.2 and deterministic
-//! simulated stand-ins for the paper's real datasets (§3.3).
+//! simulated stand-ins for the paper's real datasets (§3.3), plus
+//! export helpers ([`real::write_csv`] / [`real::write_svmlight`],
+//! [`real::RealDataset::export`]) so the stand-ins double as round-trip
+//! fixtures for the [`crate::ingest`] readers.
 //!
 //! See DESIGN.md §6 for the substitution rationale: the real datasets are
 //! behind external hosts this environment cannot reach, so `real`

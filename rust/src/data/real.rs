@@ -10,9 +10,26 @@
 //! the substitution argument; the screening behaviour under study depends
 //! on dimensions, correlation and signal sparsity — all preserved.
 
+use std::io;
+use std::path::{Path, PathBuf};
+
 use crate::linalg::{Csc, Design, Mat, ParConfig};
 use crate::rng::Pcg64;
 use crate::slope::family::{sigmoid, Family, Problem};
+
+/// Write a problem as dense CSV (`x1,…,xp,y` header, response last) with
+/// shortest-round-trip float formatting — export → ingest is bitwise.
+/// Delegates to [`crate::ingest::export::write_csv`].
+pub fn write_csv(prob: &Problem, path: &Path) -> io::Result<()> {
+    crate::ingest::export::write_csv(prob, path)
+}
+
+/// Write a problem as svmlight (`# … p=<p>` header, `label idx:val …`
+/// rows, 1-based ascending indices). Delegates to
+/// [`crate::ingest::export::write_svmlight`].
+pub fn write_svmlight(prob: &Problem, path: &Path) -> io::Result<()> {
+    crate::ingest::export::write_svmlight(prob, path)
+}
 
 /// Identifiers for the seven datasets used in §3.3.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +106,28 @@ impl RealDataset {
     /// Generate the stand-in with the canonical seed (deterministic).
     pub fn load(&self) -> Problem {
         self.load_with(Family::Binomial, 0x5107e_u64 + ordinal(*self) as u64)
+    }
+
+    /// Export the stand-in (canonical seed) to `dir` in its natural
+    /// format — sparse designs as `<name>.svm`, dense as `<name>.csv` —
+    /// so the seven paper datasets double as ingest round-trip fixtures.
+    /// Returns the written path.
+    pub fn export(&self, dir: &Path) -> io::Result<PathBuf> {
+        self.export_problem(&self.load(), dir)
+    }
+
+    /// [`RealDataset::export`] for an already-loaded problem (avoids
+    /// regenerating a gisette-scale design just to write it out).
+    pub fn export_problem(&self, prob: &Problem, dir: &Path) -> io::Result<PathBuf> {
+        let path = match &prob.x {
+            Design::Sparse(_) => dir.join(format!("{}.svm", self.name())),
+            Design::Dense(_) => dir.join(format!("{}.csv", self.name())),
+        };
+        match &prob.x {
+            Design::Sparse(_) => write_svmlight(prob, &path)?,
+            Design::Dense(_) => write_csv(prob, &path)?,
+        }
+        Ok(path)
     }
 
     /// Generate with an explicit family (Table 2 fits OLS *and* logistic

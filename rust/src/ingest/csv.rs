@@ -1,0 +1,257 @@
+//! Streaming dense-CSV reader.
+//!
+//! Dialect: comma-separated, optional header line (auto-detected by
+//! default), RFC-4180 quoting (`"a,b"`, doubled `""` for a literal
+//! quote), full-line `#` comments, blank lines, LF or CRLF endings.
+//! One column is the response ([`IngestOptions::y_col`], last by
+//! default — matching [`super::export::write_csv`]); every other column
+//! is a predictor.
+//!
+//! Two passes over the file, both through the reused-buffer
+//! [`LineReader`](super::LineReader):
+//!
+//! * **Pass 1 (skim)** — resolve the header question from the first data
+//!   line, pin the field count, and count data rows. No numeric parsing
+//!   beyond the first line, so this pass is I/O-bound.
+//! * **Pass 2 (fill)** — allocate the exact `n·p` column-major buffer
+//!   and the length-`n` response, then parse every field straight into
+//!   place. Ragged rows and non-finite values abort with line-numbered
+//!   typed errors.
+//!
+//! Both passes hash the raw bytes; a mismatch (file mutated mid-ingest)
+//! is [`IngestError::Changed`].
+
+use std::path::Path;
+
+use crate::linalg::{Design, Mat};
+
+use super::{parse_finite, Format, Ingested, IngestError, IngestOptions, LineReader, YCol};
+
+/// Load a dense CSV file as a [`Problem`](crate::slope::family::Problem).
+pub fn load_csv(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestError> {
+    // ---- pass 1: header, field count, row count -------------------------
+    let mut r1 = LineReader::open(path, opts.chunk_bytes)?;
+    let mut n_rows = 0usize;
+    let mut n_fields = 0usize;
+    let mut has_header = false;
+    let mut seen_first = false;
+    let mut scratch = String::new();
+    while r1.next_line()? {
+        let Some(line) = data_line(r1.line()) else { continue };
+        if !seen_first {
+            seen_first = true;
+            let mut any_non_numeric = false;
+            n_fields = for_each_field(line, r1.lineno(), &mut scratch, |field, _| {
+                if field.trim().parse::<f64>().is_err() {
+                    any_non_numeric = true;
+                }
+                Ok(())
+            })?;
+            if n_fields < 2 {
+                return Err(IngestError::Structure {
+                    line: r1.lineno(),
+                    msg: format!(
+                        "need at least one feature column and one response column, got {n_fields} field(s)"
+                    ),
+                });
+            }
+            has_header = opts.header.unwrap_or(any_non_numeric);
+            if !has_header {
+                n_rows += 1;
+            }
+        } else {
+            n_rows += 1;
+        }
+    }
+    if n_rows == 0 {
+        return Err(IngestError::Empty { path: path.to_path_buf() });
+    }
+
+    // ---- pass 2: parse into exactly-sized buffers -----------------------
+    let p = n_fields - 1;
+    let y_idx = match opts.y_col {
+        YCol::First => 0,
+        YCol::Last => n_fields - 1,
+    };
+    let mut xbuf = vec![0.0f64; n_rows * p];
+    let mut y = Vec::with_capacity(n_rows);
+    let mut r2 = LineReader::open(path, opts.chunk_bytes)?;
+    let mut row = 0usize;
+    let mut skipped_header = false;
+    while r2.next_line()? {
+        let lineno = r2.lineno();
+        let Some(line) = data_line(r2.line()) else { continue };
+        if has_header && !skipped_header {
+            skipped_header = true;
+            continue;
+        }
+        if row >= n_rows {
+            return Err(IngestError::Changed { path: path.to_path_buf() });
+        }
+        let count = for_each_field(line, lineno, &mut scratch, |field, k| {
+            let v = parse_finite(field, lineno)?;
+            if k == y_idx {
+                y.push(v);
+            } else if k < n_fields {
+                let j = if k < y_idx { k } else { k - 1 };
+                xbuf[j * n_rows + row] = v;
+            }
+            Ok(())
+        })?;
+        if count != n_fields {
+            return Err(IngestError::Structure {
+                line: lineno,
+                msg: format!("row has {count} fields, expected {n_fields}"),
+            });
+        }
+        row += 1;
+    }
+    if row != n_rows || y.len() != n_rows || r2.hash() != r1.hash() {
+        return Err(IngestError::Changed { path: path.to_path_buf() });
+    }
+
+    let x = Design::Dense(Mat::from_col_major(n_rows, p, xbuf));
+    let (problem, stats, intercept) = super::finish(x, y, opts)?;
+    Ok(Ingested { problem, fingerprint: r1.hash(), format: Format::Csv, stats, intercept })
+}
+
+/// Skip blank lines and full-line `#` comments.
+fn data_line(line: &str) -> Option<&str> {
+    let t = line.trim_start();
+    if t.is_empty() || t.starts_with('#') {
+        None
+    } else {
+        Some(line)
+    }
+}
+
+/// Walk the comma-separated fields of one line, honoring RFC-4180 quoting
+/// (embedded commas, doubled `""` escapes). Unquoted fields are trimmed.
+/// Calls `f(field, index)` per field and returns the field count.
+/// `scratch` backs unescaped quoted fields without per-line allocation.
+fn for_each_field(
+    line: &str,
+    lineno: usize,
+    scratch: &mut String,
+    mut f: impl FnMut(&str, usize) -> Result<(), IngestError>,
+) -> Result<usize, IngestError> {
+    let bytes = line.as_bytes();
+    let len = bytes.len();
+    let mut pos = 0usize;
+    let mut count = 0usize;
+    loop {
+        while pos < len && (bytes[pos] == b' ' || bytes[pos] == b'\t') {
+            pos += 1;
+        }
+        if pos < len && bytes[pos] == b'"' {
+            // quoted field
+            pos += 1;
+            scratch.clear();
+            let mut start = pos;
+            let mut escaped = false;
+            loop {
+                if pos >= len {
+                    return Err(IngestError::Parse {
+                        line: lineno,
+                        msg: "unterminated quoted field".to_string(),
+                    });
+                }
+                if bytes[pos] == b'"' {
+                    if pos + 1 < len && bytes[pos + 1] == b'"' {
+                        scratch.push_str(&line[start..pos]);
+                        scratch.push('"');
+                        pos += 2;
+                        start = pos;
+                        escaped = true;
+                    } else {
+                        break;
+                    }
+                } else {
+                    pos += 1;
+                }
+            }
+            if escaped {
+                scratch.push_str(&line[start..pos]);
+            }
+            let field: &str = if escaped { scratch.as_str() } else { &line[start..pos] };
+            pos += 1; // closing quote
+            while pos < len && (bytes[pos] == b' ' || bytes[pos] == b'\t') {
+                pos += 1;
+            }
+            if pos < len && bytes[pos] != b',' {
+                return Err(IngestError::Parse {
+                    line: lineno,
+                    msg: "unexpected characters after closing quote".to_string(),
+                });
+            }
+            f(field, count)?;
+        } else {
+            let start = pos;
+            while pos < len && bytes[pos] != b',' {
+                pos += 1;
+            }
+            f(line[start..pos].trim(), count)?;
+        }
+        count += 1;
+        if pos >= len {
+            break;
+        }
+        pos += 1; // the comma
+        if pos >= len {
+            // trailing comma: one final empty field (rejected downstream
+            // by the numeric parse, with this line's number)
+            f("", count)?;
+            count += 1;
+            break;
+        }
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fields(line: &str) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut scratch = String::new();
+        for_each_field(line, 1, &mut scratch, |field, _| {
+            out.push(field.to_string());
+            Ok(())
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn splitter_handles_plain_fields() {
+        assert_eq!(fields("1,2.5, -3 "), vec!["1", "2.5", "-3"]);
+        assert_eq!(fields("solo"), vec!["solo"]);
+    }
+
+    #[test]
+    fn splitter_handles_quotes_and_escapes() {
+        assert_eq!(fields(r#""a,b",2"#), vec!["a,b", "2"]);
+        assert_eq!(fields(r#""he said ""hi""",1"#), vec![r#"he said "hi""#, "1"]);
+        assert_eq!(fields(r#" "3" , 4"#), vec!["3", "4"]);
+    }
+
+    #[test]
+    fn splitter_rejects_malformed_quotes() {
+        let mut scratch = String::new();
+        assert!(matches!(
+            for_each_field(r#""open,1"#, 7, &mut scratch, |_, _| Ok(())),
+            Err(IngestError::Parse { line: 7, .. })
+        ));
+        assert!(for_each_field(r#""a"b,1"#, 1, &mut scratch, |_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_are_skipped() {
+        assert!(data_line("").is_none());
+        assert!(data_line("   ").is_none());
+        assert!(data_line("# note").is_none());
+        assert!(data_line("  # indented note").is_none());
+        assert!(data_line("1,2").is_some());
+    }
+}

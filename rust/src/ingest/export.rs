@@ -1,0 +1,146 @@
+//! Export a [`Problem`] to the ingest formats.
+//!
+//! Values are written with Rust's `Display` for `f64`, which emits the
+//! shortest decimal that parses back to exactly the same bits — so
+//! export → ingest (with `standardize` off) reproduces the design and
+//! response **bitwise**, and the paper's seven simulated stand-ins
+//! double as round-trip fixtures for the readers (the proptests and the
+//! differential gate in `tests/integration_ingest.rs` pin this).
+
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use crate::linalg::Design;
+use crate::slope::family::Problem;
+
+/// Write a dense problem as CSV: header `x1,…,xp,y`, one row per
+/// observation, response last (the reader's default [`super::YCol`]).
+/// Sparse designs are refused — use [`write_svmlight`], densifying a
+/// dorothea-scale design would multiply the file by `1/density`.
+pub fn write_csv(prob: &Problem, path: &Path) -> io::Result<()> {
+    let m = prob.x.as_dense().ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            "write_csv needs a dense design; use write_svmlight for sparse problems",
+        )
+    })?;
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for j in 0..m.ncols() {
+        write!(w, "x{},", j + 1)?;
+    }
+    writeln!(w, "y")?;
+    for i in 0..m.nrows() {
+        for j in 0..m.ncols() {
+            write!(w, "{},", m.get(i, j))?;
+        }
+        writeln!(w, "{}", prob.y[i])?;
+    }
+    w.flush()
+}
+
+/// Write a problem (dense or sparse) as svmlight: a
+/// `# slope-screen svmlight n=<n> p=<p>` header comment (so the reader
+/// recovers `p` even when trailing columns are all-zero), then
+/// `label idx:val …` rows with 1-based ascending indices. Only stored
+/// nonzeros are emitted.
+pub fn write_svmlight(prob: &Problem, path: &Path) -> io::Result<()> {
+    let (n, p) = (prob.n(), prob.p());
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "# slope-screen svmlight n={n} p={p}")?;
+    match &prob.x {
+        Design::Dense(m) => {
+            for i in 0..n {
+                write!(w, "{}", prob.y[i])?;
+                for j in 0..p {
+                    let v = m.get(i, j);
+                    // bit test, not `v != 0.0`: -0.0 compares equal to
+                    // zero but must be emitted (as `-0`) or the bitwise
+                    // round-trip contract breaks for negative zeros.
+                    if v.to_bits() != 0 {
+                        write!(w, " {}:{}", j + 1, v)?;
+                    }
+                }
+                writeln!(w)?;
+            }
+        }
+        Design::Sparse(s) => {
+            // CSC is column-major; bucket entries by row once (O(nnz)
+            // memory, far below the densified design) to emit row-major.
+            let mut rows: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
+            for j in 0..p {
+                for (i, v) in s.col_entries(j) {
+                    rows[i].push((j as u32, v));
+                }
+            }
+            for (i, row) in rows.iter().enumerate() {
+                write!(w, "{}", prob.y[i])?;
+                for &(j, v) in row {
+                    write!(w, " {}:{}", j + 1, v)?;
+                }
+                writeln!(w)?;
+            }
+        }
+    }
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Csc, Mat};
+    use crate::slope::family::Family;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("slope-export-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn csv_refuses_sparse_designs() {
+        let csc = Csc::from_columns(2, &[vec![(0, 1.0)]]);
+        let prob = Problem::new(Design::Sparse(csc), vec![0.0, 1.0], Family::Gaussian);
+        assert!(write_csv(&prob, &tmp("refuse.csv")).is_err());
+    }
+
+    #[test]
+    fn svmlight_emits_header_and_sorted_indices() {
+        let m = Mat::from_rows(&[&[0.0, 2.0, 0.0], &[1.5, 0.0, -3.0]]);
+        let prob = Problem::new(Design::Dense(m), vec![1.0, 0.0], Family::Binomial);
+        let path = tmp("header.svm");
+        write_svmlight(&prob, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# slope-screen svmlight n=2 p=3");
+        assert_eq!(lines[1], "1 2:2");
+        assert_eq!(lines[2], "0 1:1.5 3:-3");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn svmlight_dense_branch_preserves_negative_zero() {
+        let m = Mat::from_rows(&[&[-0.0, 1.0]]);
+        let prob = Problem::new(Design::Dense(m), vec![0.5], Family::Gaussian);
+        let path = tmp("negzero.svm");
+        write_svmlight(&prob, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().nth(1), Some("0.5 1:-0 2:1"));
+        let opts = crate::ingest::IngestOptions::default().with_standardize(false);
+        let ing = crate::ingest::load_svmlight(&path, &opts).unwrap();
+        let back = match &ing.problem.x {
+            Design::Sparse(s) => s.to_dense(),
+            Design::Dense(_) => panic!("svmlight must ingest sparse"),
+        };
+        assert_eq!(back.get(0, 0).to_bits(), (-0.0f64).to_bits());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_layout_matches_reader_default() {
+        let m = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let prob = Problem::new(Design::Dense(m), vec![0.5, -0.5], Family::Gaussian);
+        let path = tmp("layout.csv");
+        write_csv(&prob, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "x1,x2,y\n1,2,0.5\n3,4,-0.5\n");
+        let _ = std::fs::remove_file(&path);
+    }
+}

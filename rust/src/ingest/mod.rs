@@ -1,0 +1,595 @@
+//! Streaming dataset ingestion: file-backed designs for the solver.
+//!
+//! The paper's real-data experiments (§3.3, Tables 2–3, Fig. 7) run on
+//! file-based datasets — dorothea and friends ship as sparse
+//! svmlight/libsvm files, the tabular sets as dense delimited text. This
+//! layer turns such files into fit-ready [`Problem`]s:
+//!
+//! * [`csv`] — dense CSV: header or headerless, quoted fields (RFC-4180
+//!   doubling), `#` comment lines, blank lines, CRLF or LF endings.
+//! * [`svmlight`] — sparse svmlight/libsvm: `label idx:val …` with
+//!   1-based, strictly increasing indices and `#` comments.
+//! * [`export`] — the inverse direction: [`export::write_csv`] /
+//!   [`export::write_svmlight`] serialize a [`Problem`] with Rust's
+//!   shortest-round-trip float formatting, so export → ingest reproduces
+//!   the matrix **bitwise** (the differential tests pin this).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Bounded memory.** Files are read line-by-line through a reused
+//!    buffer (a dorothea-scale file never materializes as triplet
+//!    vectors); sparse files go through a *two-pass* CSC builder — pass 1
+//!    counts nonzeros per column, pass 2 fills exactly-sized
+//!    `colptr`/`rowidx`/`values` buffers via per-column cursors
+//!    ([`crate::linalg::Csc::from_parts`]). Dense CSV likewise counts
+//!    rows first and fills one exact `n·p` column-major buffer. The only
+//!    allocations proportional to the data are the final arrays.
+//! 2. **Strict validation, typed errors.** Ragged rows, malformed
+//!    fields, 0-based/duplicate/out-of-order sparse indices, non-finite
+//!    values (including `nan`/`inf` literals, which `str::parse::<f64>`
+//!    happily accepts) and family-incompatible responses are
+//!    [`IngestError`]s — a bad file can never NaN-poison a fit. The same
+//!    [`check_finite`] guard runs *after* standardization, closing the
+//!    overflow hole where finite-but-huge inputs standardize to NaN
+//!    (serve's inline datasets route through it too).
+//! 3. **Content fingerprinting.** Both passes FNV-1a the raw bytes; the
+//!    hashes must agree (a file mutating between passes is detected, not
+//!    silently mis-assembled) and the result is the [`Ingested`]
+//!    fingerprint the serve registry interns datasets by — so re-fits on
+//!    the same file content hit the warm-start and pack caches no matter
+//!    which path name the request used.
+//!
+//! Standardization routes through the [`ParConfig`] parallel backend
+//! exactly like the in-memory dataset builders (dense: center + unit
+//! ℓ2-scale; sparse: scale only — centering would densify), recording
+//! the per-column transform so serve's `predict` can map raw client rows
+//! into model coordinates.
+
+pub mod csv;
+pub mod export;
+pub mod svmlight;
+
+pub use csv::load_csv;
+pub use export::{write_csv, write_svmlight};
+pub use svmlight::load_svmlight;
+
+use std::fmt;
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::{Path, PathBuf};
+
+use crate::linalg::{ops, Design, ParConfig};
+use crate::slope::family::{Family, Problem};
+
+/// 64-bit FNV-1a over a byte stream. The canonical implementation for
+/// every content fingerprint in the crate (the serve layer re-exports
+/// it).
+pub fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a initial basis.
+pub const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// FNV-1a a file's raw bytes in bounded chunks, continuing from `seed`.
+/// The serve registry keys file-backed datasets by this (plus the spec
+/// prefix), so equal content at different paths interns to one entry.
+pub fn hash_file(seed: u64, path: &Path) -> std::io::Result<u64> {
+    let mut reader = BufReader::with_capacity(64 << 10, File::open(path)?);
+    let mut buf = [0u8; 64 << 10];
+    let mut h = seed;
+    loop {
+        let n = reader.read(&mut buf)?;
+        if n == 0 {
+            return Ok(h);
+        }
+        h = fnv1a(h, &buf[..n]);
+    }
+}
+
+/// A typed ingestion failure. Line numbers are 1-based; `line == 0`
+/// means the problem surfaced after parsing (e.g. standardization
+/// overflow) and has no single source line.
+#[derive(Debug)]
+pub enum IngestError {
+    /// Underlying I/O failure (open, read, invalid UTF-8).
+    Io {
+        /// File being read.
+        path: PathBuf,
+        /// The OS error.
+        err: std::io::Error,
+    },
+    /// A field or token failed to parse.
+    Parse {
+        /// 1-based source line.
+        line: usize,
+        /// What went wrong.
+        msg: String,
+    },
+    /// The parsed data violates a structural rule (ragged rows, 0-based /
+    /// duplicate / out-of-order sparse indices, index beyond the declared
+    /// feature count).
+    Structure {
+        /// 1-based source line (0 = file-level).
+        line: usize,
+        /// Which rule broke.
+        msg: String,
+    },
+    /// A non-finite value (`nan`/`inf` literal, an overflowing decimal
+    /// like `1e999`, or a post-standardization overflow at `line == 0`).
+    NonFinite {
+        /// 1-based source line (0 = after standardization).
+        line: usize,
+        /// The offending value/location.
+        msg: String,
+    },
+    /// The response column is invalid for the requested family.
+    Response {
+        /// Which constraint failed.
+        msg: String,
+    },
+    /// The file contains no data rows.
+    Empty {
+        /// File being read.
+        path: PathBuf,
+    },
+    /// The file changed between the two streaming passes (row counts or
+    /// content hashes disagree).
+    Changed {
+        /// File being read.
+        path: PathBuf,
+    },
+    /// The path's extension maps to no known format.
+    Unsupported {
+        /// File being read.
+        path: PathBuf,
+    },
+}
+
+impl fmt::Display for IngestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IngestError::Io { path, err } => write!(f, "{}: {err}", path.display()),
+            IngestError::Parse { line, msg } => write!(f, "line {line}: {msg}"),
+            IngestError::Structure { line: 0, msg } => write!(f, "{msg}"),
+            IngestError::Structure { line, msg } => write!(f, "line {line}: {msg}"),
+            IngestError::NonFinite { line: 0, msg } => {
+                write!(f, "non-finite value after standardization: {msg}")
+            }
+            IngestError::NonFinite { line, msg } => {
+                write!(f, "line {line}: non-finite value: {msg}")
+            }
+            IngestError::Response { msg } => write!(f, "response: {msg}"),
+            IngestError::Empty { path } => write!(f, "{}: no data rows", path.display()),
+            IngestError::Changed { path } => {
+                write!(f, "{}: file changed between the two ingest passes", path.display())
+            }
+            IngestError::Unsupported { path } => write!(
+                f,
+                "{}: unsupported extension (expected .csv or .svm/.svmlight/.libsvm)",
+                path.display()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IngestError {}
+
+/// Which CSV column holds the response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum YCol {
+    /// Response is the first column.
+    First,
+    /// Response is the last column (the default; matches
+    /// [`export::write_csv`]).
+    Last,
+}
+
+/// Detected/declared file format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Dense delimited text.
+    Csv,
+    /// Sparse svmlight/libsvm.
+    Svmlight,
+}
+
+/// Ingestion configuration.
+#[derive(Clone, Debug)]
+pub struct IngestOptions {
+    /// Response family the data is fitted with (drives response
+    /// validation; binomial maps svmlight-style `-1` labels to `0`).
+    pub family: Family,
+    /// Standardize server-side: dense columns centered + unit ℓ2-scaled,
+    /// sparse columns scaled only, gaussian `y` centered (the removed
+    /// mean is recorded as [`Ingested::intercept`]). Pass `false` when
+    /// the file is already in model coordinates (e.g. our own exports).
+    pub standardize: bool,
+    /// Authoritative feature count for sparse files (indices beyond it
+    /// are errors). `None` infers `p` from the writer's `# … p=<p>`
+    /// header comment or, failing that, the largest index seen.
+    pub n_features: Option<usize>,
+    /// Which CSV column holds the response.
+    pub y_col: YCol,
+    /// CSV header handling: `Some(true)` = first data line is a header,
+    /// `Some(false)` = data starts immediately, `None` = auto-detect
+    /// (header iff any first-line field fails to parse as a number).
+    pub header: Option<bool>,
+    /// Thread budget for the standardization kernels.
+    pub par: ParConfig,
+    /// I/O buffer capacity in bytes (the bound on bytes held per read).
+    pub chunk_bytes: usize,
+}
+
+impl Default for IngestOptions {
+    fn default() -> Self {
+        IngestOptions {
+            family: Family::Gaussian,
+            standardize: true,
+            n_features: None,
+            y_col: YCol::Last,
+            header: None,
+            par: ParConfig::default(),
+            chunk_bytes: 1 << 20,
+        }
+    }
+}
+
+impl IngestOptions {
+    /// Builder: set the response family.
+    pub fn with_family(mut self, family: Family) -> Self {
+        self.family = family;
+        self
+    }
+
+    /// Builder: enable/disable standardization.
+    pub fn with_standardize(mut self, standardize: bool) -> Self {
+        self.standardize = standardize;
+        self
+    }
+
+    /// Builder: pin the sparse feature count.
+    pub fn with_n_features(mut self, p: usize) -> Self {
+        self.n_features = Some(p);
+        self
+    }
+
+    /// Builder: set the CSV response column.
+    pub fn with_y_col(mut self, y_col: YCol) -> Self {
+        self.y_col = y_col;
+        self
+    }
+
+    /// Builder: set the kernel thread budget for standardization.
+    pub fn with_par(mut self, par: ParConfig) -> Self {
+        self.par = par;
+        self
+    }
+}
+
+/// Per-column standardization applied at ingest (dense: mean + inverse
+/// centered norm; sparse: means are all zero). Mirrors the serve layer's
+/// `ColumnTransform` so file-backed datasets support `predict` on raw
+/// client rows.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColumnStats {
+    /// Mean subtracted from each column (zeros for sparse designs).
+    pub means: Vec<f64>,
+    /// Reciprocal of each column's (centered) ℓ2 norm; 0 for constant
+    /// columns, matching [`crate::linalg::Mat::standardize`].
+    pub inv_norms: Vec<f64>,
+}
+
+/// A successfully ingested dataset.
+#[derive(Debug)]
+pub struct Ingested {
+    /// The fit-ready problem.
+    pub problem: Problem,
+    /// FNV-1a fingerprint of the file's raw bytes.
+    pub fingerprint: u64,
+    /// Which reader produced it.
+    pub format: Format,
+    /// Standardization applied (None when `standardize` was off).
+    pub stats: Option<ColumnStats>,
+    /// Mean removed from a gaussian response before the fit (0 unless
+    /// standardizing a gaussian problem).
+    pub intercept: f64,
+}
+
+/// Ingest a file, dispatching on extension: `.csv` → [`load_csv`],
+/// `.svm`/`.svmlight`/`.libsvm` → [`load_svmlight`].
+pub fn load_path(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestError> {
+    let ext = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .map(str::to_ascii_lowercase)
+        .unwrap_or_default();
+    match ext.as_str() {
+        "csv" => load_csv(path, opts),
+        "svm" | "svmlight" | "libsvm" => load_svmlight(path, opts),
+        _ => Err(IngestError::Unsupported { path: path.to_path_buf() }),
+    }
+}
+
+/// Reject non-finite entries anywhere in a design/response pair. Raw file
+/// values are already finite-checked at parse time; this closes the
+/// remaining hole where finite-but-huge inputs overflow *during*
+/// standardization (`mean = ∞` ⇒ centered column of `-∞` ⇒ `-∞ · 0 =
+/// NaN`). The serve layer runs the same guard on inline request data.
+pub fn check_finite(x: &Design, y: &[f64]) -> Result<(), String> {
+    match x {
+        Design::Dense(m) => {
+            if let Some(idx) = m.data().iter().position(|v| !v.is_finite()) {
+                let n = m.nrows().max(1);
+                return Err(format!(
+                    "design entry (row {}, column {}) is not finite",
+                    idx % n,
+                    idx / n
+                ));
+            }
+        }
+        Design::Sparse(s) => {
+            if s.values().iter().any(|v| !v.is_finite()) {
+                return Err("sparse design holds a non-finite value".to_string());
+            }
+        }
+    }
+    if let Some(i) = y.iter().position(|v| !v.is_finite()) {
+        return Err(format!("response[{i}] is not finite"));
+    }
+    Ok(())
+}
+
+/// Validate a response vector against a family without constructing the
+/// `Problem` (whose constructor panics — file input must error instead).
+fn validate_response(family: Family, y: &[f64]) -> Result<(), IngestError> {
+    let bad = |msg: String| Err(IngestError::Response { msg });
+    match family {
+        Family::Gaussian => Ok(()),
+        Family::Binomial => {
+            match y.iter().position(|&v| v != 0.0 && v != 1.0) {
+                Some(i) => bad(format!("binomial response must be 0/1 (or ±1); row {i} is {}", y[i])),
+                None => Ok(()),
+            }
+        }
+        Family::Poisson => match y.iter().position(|&v| v < 0.0) {
+            Some(i) => bad(format!("poisson response must be non-negative; row {i} is {}", y[i])),
+            None => Ok(()),
+        },
+        Family::Multinomial { classes } => {
+            if classes < 2 {
+                return bad(format!("multinomial needs classes >= 2, got {classes}"));
+            }
+            match y
+                .iter()
+                .position(|&v| !(v >= 0.0 && v < classes as f64 && v.fract() == 0.0))
+            {
+                Some(i) => bad(format!(
+                    "multinomial response must be class indices in 0..{classes}; row {i} is {}",
+                    y[i]
+                )),
+                None => Ok(()),
+            }
+        }
+    }
+}
+
+/// Standardize in place through the parallel backend, recording the
+/// transform. The recorded means/norms replicate the kernels' exact
+/// arithmetic (same summation order), so `stats.apply(raw_row)`
+/// reproduces the standardized matrix bitwise.
+///
+/// The stats pass deliberately duplicates work `standardize_with`
+/// redoes internally (same pattern as serve's inline datasets): the
+/// recorded transform must be bitwise-exactly what the kernel applied,
+/// and the kernel's API doesn't return it. The extra O(n·p) pass is a
+/// one-off per ingest, well under the parse cost.
+fn standardize_design(x: &mut Design, par: ParConfig) -> ColumnStats {
+    match x {
+        Design::Dense(m) => {
+            let n = m.nrows() as f64;
+            let p = m.ncols();
+            let mut means = Vec::with_capacity(p);
+            let mut inv_norms = Vec::with_capacity(p);
+            for j in 0..p {
+                let col = m.col(j);
+                let mean = col.iter().sum::<f64>() / n;
+                let norm = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>().sqrt();
+                means.push(mean);
+                inv_norms.push(if norm > 0.0 { 1.0 / norm } else { 0.0 });
+            }
+            m.standardize_with(true, true, par);
+            ColumnStats { means, inv_norms }
+        }
+        Design::Sparse(s) => {
+            let inv_norms: Vec<f64> = s
+                .col_sq_norms_with(par)
+                .iter()
+                .map(|&q| {
+                    let norm = q.sqrt();
+                    if norm > 0.0 {
+                        1.0 / norm
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            s.scale_columns_with(par);
+            ColumnStats { means: vec![0.0; s.ncols()], inv_norms }
+        }
+    }
+}
+
+/// Shared tail of both loaders: map ±1 binomial labels, validate the
+/// response, standardize, center gaussian `y`, and run the post-transform
+/// finiteness guard.
+fn finish(
+    mut x: Design,
+    mut y: Vec<f64>,
+    opts: &IngestOptions,
+) -> Result<(Problem, Option<ColumnStats>, f64), IngestError> {
+    if opts.family == Family::Binomial {
+        for v in y.iter_mut() {
+            if *v == -1.0 {
+                *v = 0.0;
+            }
+        }
+    }
+    validate_response(opts.family, &y)?;
+    let stats = if opts.standardize { Some(standardize_design(&mut x, opts.par)) } else { None };
+    let mut intercept = 0.0;
+    if opts.standardize && opts.family == Family::Gaussian {
+        intercept = ops::mean(&y);
+        for v in y.iter_mut() {
+            *v -= intercept;
+        }
+    }
+    check_finite(&x, &y).map_err(|msg| IngestError::NonFinite { line: 0, msg })?;
+    Ok((Problem::new(x, y, opts.family), stats, intercept))
+}
+
+/// Streaming line reader shared by both passes of both formats: reuses
+/// one buffer (bounded memory), tracks 1-based line numbers, strips the
+/// trailing `\n`/`\r\n`, and FNV-1a's the *raw* bytes so the two passes
+/// can prove they read identical content.
+pub(crate) struct LineReader {
+    path: PathBuf,
+    reader: BufReader<File>,
+    buf: String,
+    lineno: usize,
+    hash: u64,
+}
+
+impl LineReader {
+    pub(crate) fn open(path: &Path, chunk_bytes: usize) -> Result<LineReader, IngestError> {
+        let file = File::open(path)
+            .map_err(|err| IngestError::Io { path: path.to_path_buf(), err })?;
+        Ok(LineReader {
+            path: path.to_path_buf(),
+            reader: BufReader::with_capacity(chunk_bytes.clamp(4096, 64 << 20), file),
+            buf: String::new(),
+            lineno: 0,
+            hash: FNV_BASIS,
+        })
+    }
+
+    /// Advance to the next line; `false` at EOF. The line (sans newline)
+    /// is then available through [`LineReader::line`].
+    pub(crate) fn next_line(&mut self) -> Result<bool, IngestError> {
+        use std::io::BufRead as _;
+        self.buf.clear();
+        let n = self
+            .reader
+            .read_line(&mut self.buf)
+            .map_err(|err| IngestError::Io { path: self.path.clone(), err })?;
+        if n == 0 {
+            return Ok(false);
+        }
+        self.hash = fnv1a(self.hash, self.buf.as_bytes());
+        self.lineno += 1;
+        if self.buf.ends_with('\n') {
+            self.buf.pop();
+        }
+        if self.buf.ends_with('\r') {
+            self.buf.pop();
+        }
+        Ok(true)
+    }
+
+    pub(crate) fn line(&self) -> &str {
+        &self.buf
+    }
+
+    pub(crate) fn lineno(&self) -> usize {
+        self.lineno
+    }
+
+    pub(crate) fn hash(&self) -> u64 {
+        self.hash
+    }
+}
+
+/// Parse one numeric field, rejecting the non-finite values `f64::from_str`
+/// accepts (`nan`, `inf`, `infinity`, case-insensitive) and decimals that
+/// overflow to infinity (`1e999`).
+pub(crate) fn parse_finite(s: &str, line: usize) -> Result<f64, IngestError> {
+    let t = s.trim();
+    let v: f64 = t
+        .parse()
+        .map_err(|_| IngestError::Parse { line, msg: format!("`{t}` is not a number") })?;
+    if !v.is_finite() {
+        return Err(IngestError::NonFinite { line, msg: format!("`{t}`") });
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn fnv1a_matches_known_vector() {
+        // FNV-1a("a") from the reference implementation.
+        assert_eq!(fnv1a(FNV_BASIS, b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a(FNV_BASIS, b"ab"), fnv1a(FNV_BASIS, b"ba"));
+    }
+
+    #[test]
+    fn parse_finite_rejects_nan_and_overflow() {
+        assert!(parse_finite("1.5", 1).is_ok());
+        assert!(parse_finite(" -2e3 ", 1).is_ok());
+        assert!(matches!(parse_finite("nan", 3), Err(IngestError::NonFinite { line: 3, .. })));
+        assert!(matches!(parse_finite("inf", 4), Err(IngestError::NonFinite { .. })));
+        assert!(matches!(parse_finite("1e999", 5), Err(IngestError::NonFinite { .. })));
+        assert!(matches!(parse_finite("abc", 6), Err(IngestError::Parse { line: 6, .. })));
+    }
+
+    #[test]
+    fn check_finite_catches_poisoned_designs() {
+        let m = Mat::from_rows(&[&[1.0, f64::NAN], &[0.0, 1.0]]);
+        assert!(check_finite(&Design::Dense(m), &[0.0, 1.0]).is_err());
+        let ok = Mat::from_rows(&[&[1.0, 2.0]]);
+        assert!(check_finite(&Design::Dense(ok.clone()), &[0.0]).is_ok());
+        assert!(check_finite(&Design::Dense(ok), &[f64::INFINITY]).is_err());
+    }
+
+    #[test]
+    fn binomial_pm1_labels_map_to_01() {
+        let x = Design::Dense(Mat::from_rows(&[&[1.0], &[2.0]]));
+        let opts = IngestOptions::default()
+            .with_family(Family::Binomial)
+            .with_standardize(false);
+        let (prob, _, _) = finish(x, vec![-1.0, 1.0], &opts).unwrap();
+        assert_eq!(prob.y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn response_validation_is_typed_not_a_panic() {
+        let x = Design::Dense(Mat::from_rows(&[&[1.0], &[2.0]]));
+        let opts = IngestOptions::default()
+            .with_family(Family::Poisson)
+            .with_standardize(false);
+        match finish(x, vec![1.0, -3.0], &opts) {
+            Err(IngestError::Response { msg }) => assert!(msg.contains("non-negative")),
+            other => panic!("expected Response error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn standardization_overflow_is_rejected_not_nan() {
+        // mean overflows to +inf, centering yields -inf, scaling by the
+        // zero inverse-norm yields NaN — the post-transform guard fires.
+        let x = Design::Dense(Mat::from_rows(&[&[1e308], &[1e308], &[-1e308]]));
+        let opts = IngestOptions::default().with_standardize(true);
+        match finish(x, vec![0.0, 1.0, 2.0], &opts) {
+            Err(IngestError::NonFinite { line: 0, .. }) => {}
+            other => panic!("expected post-standardization NonFinite, got {other:?}"),
+        }
+    }
+}

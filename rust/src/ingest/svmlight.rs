@@ -1,0 +1,278 @@
+//! Streaming svmlight/libsvm reader with the memory-budgeted two-pass
+//! CSC builder.
+//!
+//! Record syntax: `label idx:val idx:val …` with whitespace separators,
+//! **1-based** feature indices that must be strictly increasing within a
+//! row (duplicates and out-of-order indices are typed errors — silently
+//! reordering would mask writer bugs), and `#` starting a comment that
+//! runs to end of line. Blank lines are skipped. Binomial `-1` labels
+//! are mapped to `0` by the shared finish step, so both the ±1 and 0/1
+//! label conventions ingest cleanly.
+//!
+//! The feature count `p` is resolved in priority order: an explicit
+//! [`IngestOptions::n_features`], a `p=<p>` token in a *full-line*
+//! comment before the first data line (our
+//! [`super::export::write_svmlight`] emits
+//! `# slope-screen svmlight n=<n> p=<p>`; trailing data-line comments
+//! are never parsed for hints), else the largest index seen — bounded
+//! by [`DEFAULT_MAX_FEATURES`] unless `n_features` raises it. The hint
+//! matters: svmlight cannot represent trailing all-zero columns, and a
+//! dorothea-scale design losing its last column would silently change
+//! every fit.
+//!
+//! **Two passes, exact allocation.** A dorothea-scale file (~10⁵ columns,
+//! ~10⁶ nonzeros) must not materialize per-column triplet vectors — the
+//! seed's `Csc::from_columns` clones and sorts each column, tripling peak
+//! memory. Instead pass 1 streams the file counting nonzeros per column
+//! (labels and values are not even parsed), then `colptr` is the prefix
+//! sum, `rowidx`/`values` are allocated at exactly `nnz`, and pass 2
+//! streams again writing each entry through a per-column cursor. Rows
+//! arrive in ascending row order, so every column's row indices are
+//! built sorted — [`Csc::from_parts`] validates the invariants. Peak
+//! transient memory beyond the final arrays: one line buffer plus the
+//! `p`-length cursor vector.
+
+use std::path::Path;
+
+use crate::linalg::{Csc, Design};
+
+use super::{parse_finite, Format, Ingested, IngestError, IngestOptions, LineReader};
+
+/// Largest feature index accepted without an explicit
+/// [`IngestOptions::n_features`]: pass 1 allocates a counts slot per
+/// column, so an unbounded index would let one malformed token
+/// (`1 999999999999:1`) abort the process on a terabyte allocation
+/// instead of returning a typed error — fatal for the long-running fit
+/// server, whose `dataset_from_file` op feeds this loader. 2²⁴ columns
+/// (a 128 MB counts vector) is two orders of magnitude above the
+/// paper's widest design; operators with genuinely wider data state it
+/// explicitly via `n_features`, which is then the bound.
+pub const DEFAULT_MAX_FEATURES: usize = 1 << 24;
+
+/// Load an svmlight/libsvm file as a sparse
+/// [`Problem`](crate::slope::family::Problem).
+pub fn load_svmlight(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestError> {
+    // ---- pass 1: per-column nonzero counts ------------------------------
+    let mut r1 = LineReader::open(path, opts.chunk_bytes)?;
+    let mut counts: Vec<usize> = Vec::new();
+    let mut n_rows = 0usize;
+    let mut p_hint = opts.n_features;
+    let hint_is_authoritative = opts.n_features.is_some();
+    let mut seen_data = false;
+    let max_features = opts.n_features.unwrap_or(DEFAULT_MAX_FEATURES);
+    while r1.next_line()? {
+        let lineno = r1.lineno();
+        let (data, comment) = split_comment(r1.line());
+        let data = data.trim();
+        if data.is_empty() {
+            // The `p=` hint is honored only from *full-line* comments
+            // before any data (the export header's position) — a stray
+            // `p=<N>` in a trailing data-line comment must not silently
+            // widen the design.
+            if let Some(comment) = comment {
+                if !seen_data && p_hint.is_none() {
+                    if let Some(hint) = parse_p_hint(comment) {
+                        if hint > max_features {
+                            return Err(IngestError::Structure {
+                                line: lineno,
+                                msg: format!(
+                                    "header p={hint} exceeds the feature cap {max_features} \
+                                     (set IngestOptions::n_features to raise it)"
+                                ),
+                            });
+                        }
+                        p_hint = Some(hint);
+                    }
+                }
+            }
+            continue;
+        }
+        seen_data = true;
+        n_rows += 1;
+        let mut tokens = data.split_ascii_whitespace();
+        let _label = tokens.next().expect("non-empty line has a first token");
+        let mut prev = 0usize;
+        for tok in tokens {
+            let idx = parse_index(tok, lineno)?;
+            if idx <= prev {
+                return Err(IngestError::Structure {
+                    line: lineno,
+                    msg: format!(
+                        "feature index {idx} after {prev}: indices must be strictly increasing \
+                         (duplicate or out-of-order)"
+                    ),
+                });
+            }
+            prev = idx;
+            if idx > max_features {
+                let what = if hint_is_authoritative { "n_features" } else { "the feature cap" };
+                return Err(IngestError::Structure {
+                    line: lineno,
+                    msg: format!(
+                        "feature index {idx} exceeds {what} {max_features}{}",
+                        if hint_is_authoritative {
+                            ""
+                        } else {
+                            " (set IngestOptions::n_features to raise it)"
+                        }
+                    ),
+                });
+            }
+            if idx > counts.len() {
+                counts.resize(idx, 0);
+            }
+            counts[idx - 1] += 1;
+        }
+    }
+    if n_rows == 0 {
+        return Err(IngestError::Empty { path: path.to_path_buf() });
+    }
+    if n_rows > u32::MAX as usize {
+        return Err(IngestError::Structure {
+            line: 0,
+            msg: format!("{n_rows} rows exceed the CSC row-index range"),
+        });
+    }
+    // A header hint may only widen the design (declare trailing empty
+    // columns); an index beyond it is a malformed file.
+    if let Some(p) = p_hint {
+        if counts.len() > p {
+            return Err(IngestError::Structure {
+                line: 0,
+                msg: format!("feature index {} exceeds the declared p={p}", counts.len()),
+            });
+        }
+    }
+    let p = p_hint.unwrap_or(0).max(counts.len());
+    counts.resize(p, 0);
+
+    // Exact-size CSC buffers: colptr as the prefix sum of the counts,
+    // per-column write cursors starting at each column's span.
+    let mut colptr = Vec::with_capacity(p + 1);
+    colptr.push(0usize);
+    let mut nnz = 0usize;
+    for &c in &counts {
+        nnz += c;
+        colptr.push(nnz);
+    }
+    let mut cursor: Vec<usize> = colptr[..p].to_vec();
+    let mut rowidx = vec![0u32; nnz];
+    let mut values = vec![0.0f64; nnz];
+    let mut y = Vec::with_capacity(n_rows);
+
+    // ---- pass 2: fill ---------------------------------------------------
+    let mut r2 = LineReader::open(path, opts.chunk_bytes)?;
+    let mut row = 0usize;
+    while r2.next_line()? {
+        let lineno = r2.lineno();
+        let (data, _comment) = split_comment(r2.line());
+        let data = data.trim();
+        if data.is_empty() {
+            continue;
+        }
+        if row >= n_rows {
+            return Err(IngestError::Changed { path: path.to_path_buf() });
+        }
+        let mut tokens = data.split_ascii_whitespace();
+        let label = tokens.next().expect("non-empty line has a first token");
+        y.push(parse_finite(label, lineno)?);
+        for tok in tokens {
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| IngestError::Parse {
+                line: lineno,
+                msg: format!("`{tok}`: expected `index:value`"),
+            })?;
+            let idx = parse_index_parts(idx_s, tok, lineno)?;
+            let v = parse_finite(val_s, lineno)?;
+            let j = idx - 1;
+            if j >= p {
+                // an index pass 1 never saw: the file changed
+                return Err(IngestError::Changed { path: path.to_path_buf() });
+            }
+            let k = cursor[j];
+            if k >= colptr[j + 1] {
+                // more entries than pass 1 counted: the file changed
+                return Err(IngestError::Changed { path: path.to_path_buf() });
+            }
+            rowidx[k] = row as u32;
+            values[k] = v;
+            cursor[j] += 1;
+        }
+        row += 1;
+    }
+    if row != n_rows || r2.hash() != r1.hash() {
+        return Err(IngestError::Changed { path: path.to_path_buf() });
+    }
+    debug_assert!(cursor.iter().zip(colptr.iter().skip(1)).all(|(c, e)| c == e));
+
+    let x = Design::Sparse(Csc::from_parts(n_rows, p, colptr, rowidx, values));
+    let (problem, stats, intercept) = super::finish(x, y, opts)?;
+    Ok(Ingested { problem, fingerprint: r1.hash(), format: Format::Svmlight, stats, intercept })
+}
+
+/// Split a line at the first `#`: `(data, Some(comment))` or `(line, None)`.
+fn split_comment(line: &str) -> (&str, Option<&str>) {
+    match line.find('#') {
+        Some(pos) => (&line[..pos], Some(&line[pos + 1..])),
+        None => (line, None),
+    }
+}
+
+/// Scan a comment for a `p=<usize>` token (the export header's feature
+/// count, which svmlight data alone cannot represent when trailing
+/// columns are all-zero).
+fn parse_p_hint(comment: &str) -> Option<usize> {
+    comment
+        .split_ascii_whitespace()
+        .find_map(|tok| tok.strip_prefix("p=").and_then(|v| v.parse().ok()))
+}
+
+/// Parse a `index:value` token's 1-based index (pass 1 never touches the
+/// value — cheap skim).
+fn parse_index(tok: &str, line: usize) -> Result<usize, IngestError> {
+    let (idx_s, _) = tok.split_once(':').ok_or_else(|| IngestError::Parse {
+        line,
+        msg: format!("`{tok}`: expected `index:value`"),
+    })?;
+    parse_index_parts(idx_s, tok, line)
+}
+
+fn parse_index_parts(idx_s: &str, tok: &str, line: usize) -> Result<usize, IngestError> {
+    let idx: usize = idx_s.parse().map_err(|_| IngestError::Parse {
+        line,
+        msg: format!("`{tok}`: `{idx_s}` is not a feature index"),
+    })?;
+    if idx == 0 {
+        return Err(IngestError::Structure {
+            line,
+            msg: "svmlight feature indices are 1-based; got index 0".to_string(),
+        });
+    }
+    Ok(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comment_splitting() {
+        assert_eq!(split_comment("1 2:3 # note"), ("1 2:3 ", Some(" note")));
+        assert_eq!(split_comment("1 2:3"), ("1 2:3", None));
+        assert_eq!(split_comment("# all comment"), ("", Some(" all comment")));
+    }
+
+    #[test]
+    fn p_hint_parses_from_header_comment() {
+        assert_eq!(parse_p_hint(" slope-screen svmlight n=800 p=88119"), Some(88119));
+        assert_eq!(parse_p_hint(" nothing here"), None);
+        assert_eq!(parse_p_hint(" p=notanumber"), None);
+    }
+
+    #[test]
+    fn index_validation() {
+        assert_eq!(parse_index("3:1.5", 1).unwrap(), 3);
+        assert!(matches!(parse_index("0:1", 2), Err(IngestError::Structure { line: 2, .. })));
+        assert!(matches!(parse_index("x:1", 3), Err(IngestError::Parse { line: 3, .. })));
+        assert!(matches!(parse_index("12", 4), Err(IngestError::Parse { line: 4, .. })));
+    }
+}

@@ -20,7 +20,12 @@
 //!   fingerprinted warm-start cache and batched scheduling: the screening
 //!   rule amortized across *requests*, not just across path steps.
 //! * [`data`] — synthetic design generators and simulated stand-ins for the
-//!   paper's real datasets.
+//!   paper's real datasets, with export helpers so the stand-ins double as
+//!   file fixtures.
+//! * [`ingest`] — streaming dataset ingestion: dense CSV and sparse
+//!   svmlight/libsvm readers with bounded-memory two-pass builders, strict
+//!   typed validation and content fingerprinting (`fit --data file.csv`,
+//!   serve's `dataset_from_file`).
 //! * substrates built for the offline environment: [`rng`], [`linalg`],
 //!   [`pool`], [`cli`], [`jsonio`], [`check`] and [`benchkit`].
 //!
@@ -32,6 +37,7 @@ pub mod check;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod ingest;
 pub mod jsonio;
 pub mod linalg;
 pub mod pool;

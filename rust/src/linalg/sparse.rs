@@ -45,6 +45,39 @@ impl Csc {
         Self { nrows, ncols, colptr, rowidx, values }
     }
 
+    /// Assemble from raw CSC buffers — the streaming ingest layer's
+    /// two-pass builder writes exactly-sized `colptr`/`rowidx`/`values`
+    /// directly and hands them over here, never materializing per-column
+    /// triplet vectors. Validates the invariants every kernel relies on
+    /// (monotone `colptr` covering the buffers, row indices in range and
+    /// strictly increasing within each column) in one O(nnz) sweep;
+    /// violations panic, because the builders construct these
+    /// deterministically — a violation is a builder bug, not bad input.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        colptr: Vec<usize>,
+        rowidx: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Self {
+        assert_eq!(colptr.len(), ncols + 1, "colptr must have ncols + 1 entries");
+        assert_eq!(colptr[0], 0, "colptr must start at 0");
+        assert_eq!(*colptr.last().unwrap(), rowidx.len(), "colptr must cover the buffers");
+        assert_eq!(rowidx.len(), values.len(), "rowidx/values length mismatch");
+        for j in 0..ncols {
+            assert!(colptr[j] <= colptr[j + 1], "colptr must be non-decreasing");
+            let col = &rowidx[colptr[j]..colptr[j + 1]];
+            for (k, &r) in col.iter().enumerate() {
+                assert!((r as usize) < nrows, "row index out of range");
+                assert!(
+                    k == 0 || col[k - 1] < r,
+                    "row indices must be strictly increasing within a column"
+                );
+            }
+        }
+        Self { nrows, ncols, colptr, rowidx, values }
+    }
+
     /// Densify a `Mat` into CSC form (test/interop convenience).
     pub fn from_dense(m: &Mat) -> Self {
         let cols: Vec<Vec<(usize, f64)>> = (0..m.ncols())
@@ -87,6 +120,22 @@ impl Csc {
     #[inline]
     pub fn nnz(&self) -> usize {
         self.values.len()
+    }
+
+    /// The stored values buffer (finiteness audits, diagnostics).
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Iterate column `j`'s stored `(row, value)` entries in ascending
+    /// row order (the export writers walk columns through this).
+    pub fn col_entries(&self, j: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let span = self.colptr[j]..self.colptr[j + 1];
+        self.rowidx[span.clone()]
+            .iter()
+            .zip(&self.values[span])
+            .map(|(&r, &v)| (r as usize, v))
     }
 
     /// `out = X v`.
@@ -545,5 +594,34 @@ mod tests {
     fn nnz_counts_stored() {
         let s = Csc::from_columns(3, &[vec![(0, 1.0), (2, 2.0)], vec![], vec![(1, 0.0)]]);
         assert_eq!(s.nnz(), 2); // explicit zero dropped
+    }
+
+    #[test]
+    fn from_parts_matches_from_columns() {
+        let cols = vec![vec![(0usize, 1.0), (2, 2.0)], vec![], vec![(1, 3.0)]];
+        let a = Csc::from_columns(3, &cols);
+        let b = Csc::from_parts(3, 3, vec![0, 2, 2, 3], vec![0, 2, 1], vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.to_dense(), b.to_dense());
+        assert_eq!(b.nnz(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn from_parts_rejects_unsorted_rows() {
+        Csc::from_parts(3, 1, vec![0, 2], vec![2, 0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn col_entries_round_trips() {
+        let mut rng = Pcg64::new(8);
+        let d = random_dense(&mut rng, 9, 4, 0.4);
+        let s = Csc::from_dense(&d);
+        for j in 0..4 {
+            for (i, v) in s.col_entries(j) {
+                assert_eq!(d.get(i, j), v);
+            }
+            let rows: Vec<usize> = s.col_entries(j).map(|(i, _)| i).collect();
+            assert!(rows.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 }

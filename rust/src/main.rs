@@ -1,8 +1,9 @@
 //! `slope-screen` — CLI for the Strong-Screening-Rule-for-SLOPE stack.
 //!
 //! Subcommands:
-//!   fit     fit a SLOPE path on synthetic or simulated-real data
+//!   fit     fit a SLOPE path on synthetic, simulated-real or file data
 //!   cv      repeated k-fold cross-validation over the path
+//!   export  write a simulated stand-in as a .csv/.svm ingest fixture
 //!   info    show the AOT artifact manifest and PJRT platform
 //!   serve   run the fit server (Unix socket or stdio transport)
 //!   client  send newline-delimited JSON requests to a running server
@@ -10,8 +11,11 @@
 //! Examples:
 //!   slope-screen fit --n 200 --p 5000 --rho 0.4 --family gaussian
 //!   slope-screen fit --dataset golub --screen previous
+//!   slope-screen fit --data genes.csv --family binomial
+//!   slope-screen fit --data dorothea.svm --family binomial --no-standardize
 //!   slope-screen fit --n 100 --p 500 --grad-engine xla
 //!   slope-screen cv --n 200 --p 1000 --folds 5 --repeats 2
+//!   slope-screen export --dataset golub --out /tmp/standins
 //!   slope-screen serve --socket /tmp/slope-serve.sock
 //!   slope-screen client --json '{"id":1,"op":"stats"}'
 
@@ -37,6 +41,9 @@ fn main() {
         .opt("family", "gaussian", "gaussian|binomial|poisson|multinomial")
         .opt("classes", "3", "classes for multinomial")
         .opt("dataset", "", "simulated real dataset (overrides synthetic): arcene|dorothea|gisette|golub|cpusmall|physician|zipcode")
+        .opt("data", "", "fit/cv: ingest a dataset file (.csv dense, .svm/.svmlight sparse; overrides --dataset); --family/--classes set the response")
+        .flag("no-standardize", "data: ingest columns as-is (file already in model coordinates)")
+        .opt("out", ".", "export: output directory")
         .opt("lambda", "bh", "penalty shape: bh|oscar|lasso|gaussian-seq")
         .opt("q", "0.1", "BH/OSCAR parameter")
         .opt("path-length", "100", "number of path points")
@@ -70,17 +77,43 @@ fn main() {
     match cmd.as_str() {
         "fit" => cmd_fit(&parsed),
         "cv" => cmd_cv(&parsed),
+        "export" => cmd_export(&parsed),
         "info" => cmd_info(),
         "serve" => cmd_serve(&parsed),
         "client" => cmd_client(&parsed),
         other => {
-            eprintln!("unknown subcommand `{other}` (expected fit|cv|info|serve|client)");
+            eprintln!("unknown subcommand `{other}` (expected fit|cv|export|info|serve|client)");
             std::process::exit(2);
         }
     }
 }
 
 fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
+    let data = parsed.get("data");
+    if !data.is_empty() {
+        use slope_screen::ingest::{load_path, IngestOptions};
+        let family = Family::parse(parsed.get("family"), parsed.usize("classes"))
+            .unwrap_or_else(|e| panic!("--family: {e}"));
+        let opts = IngestOptions::default()
+            .with_family(family)
+            .with_standardize(!parsed.bool("no-standardize"));
+        let ing = load_path(std::path::Path::new(data), &opts)
+            .unwrap_or_else(|e| panic!("--data {data}: {e}"));
+        let prob = ing.problem;
+        let nnz = match &prob.x {
+            slope_screen::linalg::Design::Sparse(csc) => csc.nnz(),
+            slope_screen::linalg::Design::Dense(m) => m.nrows() * m.ncols(),
+        };
+        println!(
+            "ingested {data}: n={} p={} nnz={} family={} fingerprint={:016x}",
+            prob.n(),
+            prob.p(),
+            nnz,
+            prob.family.name(),
+            ing.fingerprint
+        );
+        return prob;
+    }
     let dataset = parsed.get("dataset");
     if !dataset.is_empty() {
         let ds = RealDataset::all()
@@ -97,13 +130,8 @@ fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
         );
         return prob;
     }
-    let family = match parsed.get("family") {
-        "gaussian" => Family::Gaussian,
-        "binomial" => Family::Binomial,
-        "poisson" => Family::Poisson,
-        "multinomial" => Family::Multinomial { classes: parsed.usize("classes") },
-        f => panic!("unknown family {f}"),
-    };
+    let family = Family::parse(parsed.get("family"), parsed.usize("classes"))
+        .unwrap_or_else(|e| panic!("--family: {e}"));
     let design = match parsed.get("design") {
         "compound" => DesignKind::Compound,
         "chain" => DesignKind::Chain,
@@ -218,6 +246,45 @@ fn cmd_cv(parsed: &slope_screen::cli::Parsed) {
     );
     let total_viol: usize = res.folds.iter().map(|f| f.violations).sum();
     println!("violations across folds: {total_viol}");
+}
+
+/// Write a simulated stand-in to disk in its natural ingest format
+/// (sparse → `<name>.svm`, dense → `<name>.csv`), so the paper's file
+/// workflows — `fit --data`, serve's `dataset_from_file`, the Table-3
+/// bench's `file:` specs — can run against reproducible fixtures.
+fn cmd_export(parsed: &slope_screen::cli::Parsed) {
+    let name = parsed.get("dataset");
+    if name.is_empty() {
+        eprintln!("export: --dataset is required (arcene|dorothea|gisette|golub|cpusmall|physician|zipcode)");
+        std::process::exit(2);
+    }
+    let ds = RealDataset::all()
+        .into_iter()
+        .find(|d| d.name() == name)
+        .unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let dir = std::path::PathBuf::from(parsed.get("out"));
+    if let Err(e) = std::fs::create_dir_all(&dir) {
+        eprintln!("export: cannot create {}: {e}", dir.display());
+        std::process::exit(1);
+    }
+    let prob = ds.load();
+    let path = ds
+        .export_problem(&prob, &dir)
+        .unwrap_or_else(|e| panic!("export {}: {e}", ds.name()));
+    println!(
+        "wrote {} (n={} p={} family={}; ingest with `fit --data {} --family {} --no-standardize`)",
+        path.display(),
+        prob.n(),
+        prob.p(),
+        prob.family.name(),
+        path.display(),
+        match prob.family {
+            Family::Gaussian => "gaussian",
+            Family::Binomial => "binomial",
+            Family::Poisson => "poisson",
+            Family::Multinomial { .. } => "multinomial",
+        }
+    );
 }
 
 fn cmd_serve(parsed: &slope_screen::cli::Parsed) {

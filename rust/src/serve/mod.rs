@@ -3,9 +3,13 @@
 //! The paper's point is that the strong screening rule makes full SLOPE
 //! paths cheap in the p ≫ n regime. This layer turns that into a *service*
 //! property: a long-running, multi-threaded server that answers
-//! `fit_path` / `fit_point` / `predict` / `stats` / `shutdown` requests
-//! over newline-delimited JSON, amortizing gradients, warm starts and
-//! screened working sets **across requests**, not just across path steps.
+//! `fit_path` / `fit_point` / `predict` / `dataset_from_file` / `stats` /
+//! `shutdown` requests over newline-delimited JSON, amortizing gradients,
+//! warm starts and screened working sets **across requests**, not just
+//! across path steps. Datasets may be synthetic specs, the paper's
+//! stand-ins, inline client matrices, or server-side files ingested
+//! through [`crate::ingest`] (content-fingerprinted, so renamed copies
+//! share one cache entry).
 //!
 //! Components:
 //!

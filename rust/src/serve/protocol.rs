@@ -5,10 +5,12 @@
 //! response line echoes the id: `{"id": ..., "ok": true, "result": {...}}`
 //! or `{"id": ..., "ok": false, "error": "..."}`.
 //!
-//! Ops: `fit_path`, `fit_point`, `predict`, `stats`, `shutdown`. Fit ops
-//! carry a `dataset` spec and model fields (`lambda`, `q`, `path_length`,
-//! `screen`); `fit_point` adds `sigma_ratio`; `predict` adds `x` (rows)
-//! and optionally `step`.
+//! Ops: `fit_path`, `fit_point`, `predict`, `dataset_from_file`, `stats`,
+//! `shutdown`. Fit ops carry a `dataset` spec (`synth`, `real`, `inline`
+//! or `file`) and model fields (`lambda`, `q`, `path_length`, `screen`);
+//! `fit_point` adds `sigma_ratio`; `predict` adds `x` (rows) and
+//! optionally `step`; `dataset_from_file` registers a server-side data
+//! file (content-fingerprinted) ahead of any fit.
 
 use crate::data::real::RealDataset;
 use crate::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
@@ -60,36 +62,32 @@ pub enum DatasetSpec {
         /// Center+scale columns server-side.
         standardize: bool,
     },
+    /// A server-side data file ingested through [`crate::ingest`]
+    /// (`.csv` dense, `.svm`/`.svmlight`/`.libsvm` sparse). Fingerprinted
+    /// by file *content*, so re-registrations and renamed copies intern
+    /// to the same entry and the warm-start/pack caches keep working.
+    File {
+        /// Server-side path.
+        path: String,
+        /// Response family.
+        family: String,
+        /// Classes (multinomial only).
+        classes: usize,
+        /// Standardize at ingest (off when the file is already in model
+        /// coordinates, e.g. our own exports).
+        standardize: bool,
+    },
 }
 
-/// 64-bit FNV-1a over a byte stream (dataset fingerprints).
-pub fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
-    let mut h = seed;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
-    h
-}
-
-/// FNV-1a initial basis.
-pub const FNV_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+// The canonical FNV-1a lives in the ingest layer (file fingerprints use
+// it too); re-exported here so existing callers keep their import path.
+pub use crate::ingest::{fnv1a, FNV_BASIS};
 
 fn parse_family(family: &str, classes: usize) -> Result<Family, String> {
-    match family {
-        "gaussian" | "" => Ok(Family::Gaussian),
-        "binomial" => Ok(Family::Binomial),
-        "poisson" => Ok(Family::Poisson),
-        "multinomial" => {
-            if classes < 2 {
-                return Err(format!("multinomial needs classes >= 2, got {classes}"));
-            }
-            Ok(Family::Multinomial { classes })
-        }
-        other => Err(format!(
-            "unknown family `{other}` (expected gaussian|binomial|poisson|multinomial)"
-        )),
+    if family.is_empty() {
+        return Ok(Family::Gaussian);
     }
+    Family::parse(family, classes)
 }
 
 impl DatasetSpec {
@@ -131,7 +129,24 @@ impl DatasetSpec {
                     standardize: bool_field(j, "standardize", true)?,
                 })
             }
-            other => Err(format!("unknown dataset kind `{other}` (expected synth|real|inline)")),
+            "file" => {
+                let path = req_field(j, "path")?
+                    .as_str()
+                    .ok_or("field `path` must be a string")?
+                    .to_string();
+                if path.is_empty() {
+                    return Err("field `path` must not be empty".to_string());
+                }
+                Ok(DatasetSpec::File {
+                    path,
+                    family: str_field(j, "family", "gaussian")?,
+                    classes: usize_field(j, "classes", 3)?,
+                    standardize: bool_field(j, "standardize", true)?,
+                })
+            }
+            other => {
+                Err(format!("unknown dataset kind `{other}` (expected synth|real|inline|file)"))
+            }
         }
     }
 
@@ -162,6 +177,19 @@ impl DatasetSpec {
                 }
                 h
             }
+            DatasetSpec::File { path, family, classes, standardize } => {
+                let h = fnv1a(
+                    FNV_BASIS,
+                    format!("file:family={family}:classes={classes}:std={standardize}:")
+                        .as_bytes(),
+                );
+                // Content fingerprint: identical bytes at any path intern
+                // to one entry (warm-start/pack caches survive renames).
+                // An unreadable file falls back to hashing the path; its
+                // materialize then reports the real I/O error.
+                crate::ingest::hash_file(h, std::path::Path::new(path))
+                    .unwrap_or_else(|_| fnv1a(h, path.as_bytes()))
+            }
         }
     }
 
@@ -172,6 +200,13 @@ impl DatasetSpec {
             DatasetSpec::Real { name } => format!("real[{name}]"),
             DatasetSpec::Inline { x, y, family, .. } => {
                 format!("inline[{family} n={} p={}]", y.len(), x.first().map_or(0, Vec::len))
+            }
+            DatasetSpec::File { path, family, .. } => {
+                let name = std::path::Path::new(path)
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .unwrap_or(path.as_str());
+                format!("file[{family} {name}]")
             }
         }
     }
@@ -307,11 +342,30 @@ impl DatasetSpec {
                         *v -= intercept;
                     }
                 }
+                // Entry values are finite, but standardization can still
+                // overflow (huge columns: mean = ∞ ⇒ NaN after scaling).
+                // The ingest-layer guard keeps such data out of the
+                // solver — an error response, never a NaN-poisoned fit.
+                let design = Design::Dense(mat);
+                crate::ingest::check_finite(&design, &y_fit)
+                    .map_err(|e| format!("inline dataset: {e}"))?;
                 Ok(Materialized {
-                    problem: Problem::new(Design::Dense(mat), y_fit, fam),
+                    problem: Problem::new(design, y_fit, fam),
                     transform,
                     intercept,
                 })
+            }
+            DatasetSpec::File { path, family, classes, standardize } => {
+                let fam = parse_family(family, *classes)?;
+                let opts = crate::ingest::IngestOptions::default()
+                    .with_family(fam)
+                    .with_standardize(*standardize);
+                let ing = crate::ingest::load_path(std::path::Path::new(path), &opts)
+                    .map_err(|e| format!("ingest `{path}`: {e}"))?;
+                let transform = ing
+                    .stats
+                    .map(|s| ColumnTransform { means: s.means, inv_norms: s.inv_norms });
+                Ok(Materialized { problem: ing.problem, transform, intercept: ing.intercept })
             }
         }
     }
@@ -471,6 +525,13 @@ pub enum Request {
         /// Path step to use (default: last).
         step: Option<usize>,
     },
+    /// Register (intern) a server-side data file without fitting: the
+    /// file is ingested, fingerprinted by content and cached, so later
+    /// fit requests for it skip materialization entirely.
+    RegisterDataset {
+        /// The file-backed dataset to intern.
+        dataset: DatasetSpec,
+    },
     /// Server/cache/latency statistics.
     Stats,
     /// Stop the server after responding.
@@ -535,12 +596,19 @@ fn parse_request(j: &Json) -> Result<Request, String> {
                 step: j.field("step").and_then(Json::as_usize),
             }
         }
+        "dataset_from_file" | "dataset-from-file" => {
+            let dataset = DatasetSpec::parse(req_field(j, "dataset")?)?;
+            if !matches!(dataset, DatasetSpec::File { .. }) {
+                return Err("dataset_from_file requires a dataset of kind `file`".to_string());
+            }
+            Request::RegisterDataset { dataset }
+        }
         "stats" => Request::Stats,
         "shutdown" => Request::Shutdown,
         "" => return Err("request missing `op`".to_string()),
         other => {
             return Err(format!(
-                "unknown op `{other}` (expected fit_path|fit_point|predict|stats|shutdown)"
+                "unknown op `{other}` (expected fit_path|fit_point|predict|dataset_from_file|stats|shutdown)"
             ))
         }
     };
@@ -807,6 +875,103 @@ mod tests {
         let m2 = spec2.materialize().unwrap();
         assert_eq!(m2.intercept, 0.0);
         assert_eq!(m2.problem.y, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn inline_overflow_during_standardization_is_rejected() {
+        // Every raw entry is finite, but the column mean overflows to ∞,
+        // centering yields -∞ and the zero inverse-norm scale yields NaN
+        // — the ingest-layer guard must turn this into an error response
+        // instead of handing the solver a NaN design (regression: before
+        // the guard, this materialized successfully).
+        let spec = DatasetSpec::Inline {
+            x: vec![vec![1e308], vec![1e308], vec![-1e308]],
+            y: vec![0.0, 1.0, 2.0],
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        let err = spec.materialize().err().expect("overflowing inline data must be rejected");
+        assert!(err.contains("not finite"), "unexpected error: {err}");
+        // the same data without standardization is finite and accepted
+        let raw = DatasetSpec::Inline {
+            x: vec![vec![1e308], vec![1e308], vec![-1e308]],
+            y: vec![0.0, 1.0, 2.0],
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: false,
+        };
+        assert!(raw.materialize().is_ok());
+    }
+
+    fn tmp_file(name: &str, contents: &str) -> std::path::PathBuf {
+        let path = std::env::temp_dir()
+            .join(format!("slope-protocol-{}-{name}", std::process::id()));
+        std::fs::write(&path, contents).unwrap();
+        path
+    }
+
+    #[test]
+    fn file_spec_fingerprints_by_content_not_path() {
+        let a = tmp_file("fp-a.csv", "x1,y\n1,0\n2,1\n");
+        let b = tmp_file("fp-b.csv", "x1,y\n1,0\n2,1\n");
+        let c = tmp_file("fp-c.csv", "x1,y\n1,0\n2,2\n");
+        let spec = |p: &std::path::Path| DatasetSpec::File {
+            path: p.to_str().unwrap().to_string(),
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        assert_eq!(spec(&a).fingerprint(), spec(&b).fingerprint());
+        assert_ne!(spec(&a).fingerprint(), spec(&c).fingerprint());
+        // the spec prefix is part of the identity: same bytes, other family
+        let other_family = DatasetSpec::File {
+            path: a.to_str().unwrap().to_string(),
+            family: "binomial".to_string(),
+            classes: 3,
+            standardize: true,
+        };
+        assert_ne!(spec(&a).fingerprint(), other_family.fingerprint());
+        for p in [a, b, c] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    #[test]
+    fn file_spec_materializes_and_missing_files_error() {
+        let path = tmp_file("mat.csv", "x1,x2,y\n1,0,0.5\n0,1,-0.5\n2,2,0\n");
+        let spec = DatasetSpec::File {
+            path: path.to_str().unwrap().to_string(),
+            family: "gaussian".to_string(),
+            classes: 3,
+            standardize: false,
+        };
+        let m = spec.materialize().unwrap();
+        assert_eq!((m.problem.n(), m.problem.p()), (3, 2));
+        assert!(m.transform.is_none());
+        assert_eq!(m.problem.y, vec![0.5, -0.5, 0.0]);
+        let _ = std::fs::remove_file(&path);
+        let err = spec.materialize().err().expect("missing file must error");
+        assert!(err.contains("ingest"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn dataset_from_file_op_parses_and_requires_file_kind() {
+        let line = r#"{"id": 3, "op": "dataset_from_file", "dataset": {"kind": "file", "path": "/tmp/x.csv", "family": "binomial"}}"#;
+        let env = Envelope::parse_line(line).unwrap();
+        assert!(matches!(
+            env.request,
+            Request::RegisterDataset { dataset: DatasetSpec::File { .. } }
+        ));
+        // hyphenated spelling accepted too
+        let line = r#"{"id": 3, "op": "dataset-from-file", "dataset": {"kind": "file", "path": "/tmp/x.csv"}}"#;
+        assert!(Envelope::parse_line(line).is_ok());
+        // non-file specs are rejected for this op
+        let line = r#"{"id": 3, "op": "dataset_from_file", "dataset": {"kind": "synth"}}"#;
+        assert!(Envelope::parse_line(line).is_err());
+        // empty paths are rejected at parse time
+        let line = r#"{"id": 3, "op": "fit_path", "dataset": {"kind": "file", "path": ""}}"#;
+        assert!(Envelope::parse_line(line).is_err());
     }
 
     #[test]

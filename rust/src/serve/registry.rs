@@ -237,6 +237,19 @@ impl Registry {
         // Materialize outside the lock — generation can be slow, and two
         // racing materializations of the same spec are identical anyway.
         let materialized = spec.materialize()?;
+        // File-backed specs are fingerprinted by *content*, and the file
+        // is re-read by materialize: if it changed in between, the entry
+        // would be permanently cached under the wrong key and serve fits
+        // of the wrong data. Re-fingerprint after materializing and
+        // refuse the intern on a mismatch (synthetic/real/inline specs
+        // are deterministic, so this recheck is only ever observable for
+        // files — and costs one extra streamed read on a cold intern).
+        if spec.fingerprint() != fp {
+            return Err(format!(
+                "dataset `{}` changed while being registered; retry",
+                spec.label()
+            ));
+        }
         let entry = Arc::new(DatasetEntry {
             fingerprint: fp,
             label: spec.label(),

@@ -124,6 +124,7 @@ impl Server {
             Request::Predict { dataset, model, x, step } => {
                 self.do_predict(&dataset, &model, &x, step)
             }
+            Request::RegisterDataset { dataset } => self.do_register(&dataset),
             Request::Stats => Ok(self.do_stats()),
             Request::Shutdown => {
                 self.shutdown.store(true, Ordering::SeqCst);
@@ -354,6 +355,26 @@ impl Server {
         Ok(Json::obj(fields))
     }
 
+    /// Intern a file-backed dataset ahead of any fit: the file is
+    /// ingested (streaming, validated) and cached under its content
+    /// fingerprint, so subsequent fit/predict requests naming the same
+    /// file skip materialization and share the entry's warm-start and
+    /// pack caches.
+    fn do_register(&self, dataset: &DatasetSpec) -> Result<Json, String> {
+        let entry = self.registry.dataset(dataset)?;
+        let prob = entry.problem.as_ref();
+        let sparse = matches!(prob.x, crate::linalg::Design::Sparse(_));
+        Ok(Json::obj(vec![
+            ("dataset", Json::Str(entry.label.clone())),
+            ("fingerprint", Json::Str(format!("{:016x}", entry.fingerprint))),
+            ("n", Json::Num(prob.n() as f64)),
+            ("p", Json::Num(prob.p() as f64)),
+            ("family", Json::Str(prob.family.name().to_string())),
+            ("sparse", Json::Bool(sparse)),
+            ("standardized", Json::Bool(entry.transform.is_some())),
+        ]))
+    }
+
     fn do_stats(&self) -> Json {
         let (datasets, models) = self.registry.counts();
         Json::obj(vec![
@@ -473,6 +494,7 @@ fn op_name(request: &Request) -> &'static str {
         Request::FitPath { .. } => "fit_path",
         Request::FitPoint { .. } => "fit_point",
         Request::Predict { .. } => "predict",
+        Request::RegisterDataset { .. } => "dataset_from_file",
         Request::Stats => "stats",
         Request::Shutdown => "shutdown",
     }
@@ -681,6 +703,80 @@ mod tests {
         // restored.
         assert!(e0 > 400.0 && e9 > 400.0, "intercept lost: {e0} {e9}");
         assert!(e9 > e0, "signal direction lost: {e0} vs {e9}");
+    }
+
+    #[test]
+    fn dataset_from_file_registers_and_fits_from_cache_entry() {
+        let srv = server();
+        let path = std::env::temp_dir()
+            .join(format!("slope-serve-file-{}.csv", std::process::id()));
+        std::fs::write(&path, "x1,x2,y\n1,0,0.1\n0,1,0.4\n1,1,0.9\n2,0,0.2\n").unwrap();
+        let dataset = Json::obj(vec![
+            ("kind", Json::Str("file".to_string())),
+            ("path", Json::Str(path.to_str().unwrap().to_string())),
+            ("family", Json::Str("gaussian".to_string())),
+        ]);
+        let reg = protocol::request_line(1, "dataset_from_file", vec![("dataset", dataset.clone())]);
+        let result = parse_ok(&srv.handle_line(&reg));
+        assert_eq!(result.field("n").unwrap().as_usize(), Some(4));
+        assert_eq!(result.field("p").unwrap().as_usize(), Some(2));
+        assert_eq!(result.field("sparse"), Some(&Json::Bool(false)));
+        assert_eq!(result.field("standardized"), Some(&Json::Bool(true)));
+        let fp = result.field("fingerprint").unwrap().as_str().unwrap().to_string();
+        // a fit naming the same file reuses the interned entry
+        let fit = protocol::request_line(
+            2,
+            "fit_path",
+            vec![
+                ("dataset", dataset),
+                ("lambda", Json::Str("lasso".to_string())),
+                ("path_length", Json::Num(5.0)),
+            ],
+        );
+        let fitted = parse_ok(&srv.handle_line(&fit));
+        assert_eq!(fitted.field("fingerprint").unwrap().as_str(), Some(fp.as_str()));
+        let _ = std::fs::remove_file(&path);
+        // a missing file is an error response that echoes the id
+        let gone = protocol::request_line(
+            3,
+            "dataset_from_file",
+            vec![(
+                "dataset",
+                Json::obj(vec![
+                    ("kind", Json::Str("file".to_string())),
+                    ("path", Json::Str("/nonexistent/slope.csv".to_string())),
+                ]),
+            )],
+        );
+        let resp = Json::parse(&srv.handle_line(&gone)).unwrap();
+        assert_eq!(resp.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.field("id").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn inline_overflow_is_an_error_response_not_a_nan_fit() {
+        let srv = server();
+        let dataset = Json::obj(vec![
+            ("kind", Json::Str("inline".to_string())),
+            (
+                "x",
+                Json::Arr(vec![
+                    Json::nums(&[1e308]),
+                    Json::nums(&[1e308]),
+                    Json::nums(&[-1e308]),
+                ]),
+            ),
+            ("y", Json::nums(&[0.0, 1.0, 2.0])),
+            ("family", Json::Str("gaussian".to_string())),
+        ]);
+        let line = protocol::request_line(
+            7,
+            "fit_path",
+            vec![("dataset", dataset), ("q", Json::Num(0.1)), ("path_length", Json::Num(4.0))],
+        );
+        let resp = Json::parse(&srv.handle_line(&line)).unwrap();
+        assert_eq!(resp.field("ok"), Some(&Json::Bool(false)));
+        assert!(resp.field("error").unwrap().as_str().unwrap().contains("not finite"));
     }
 
     #[test]

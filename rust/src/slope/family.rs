@@ -40,6 +40,26 @@ impl Family {
         }
     }
 
+    /// Parse a family name as used across the CLI, serve and ingest
+    /// layers. `classes` applies to multinomial only.
+    pub fn parse(name: &str, classes: usize) -> Result<Family, String> {
+        match name {
+            "gaussian" | "ols" => Ok(Family::Gaussian),
+            "binomial" | "logistic" => Ok(Family::Binomial),
+            "poisson" => Ok(Family::Poisson),
+            "multinomial" => {
+                if classes < 2 {
+                    Err(format!("multinomial needs classes >= 2, got {classes}"))
+                } else {
+                    Ok(Family::Multinomial { classes })
+                }
+            }
+            other => Err(format!(
+                "unknown family `{other}` (expected gaussian|binomial|poisson|multinomial)"
+            )),
+        }
+    }
+
     /// Short name for tables.
     pub fn name(&self) -> &'static str {
         match self {
@@ -376,6 +396,16 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn family_parse_names_and_aliases() {
+        assert_eq!(Family::parse("gaussian", 0), Ok(Family::Gaussian));
+        assert_eq!(Family::parse("ols", 0), Ok(Family::Gaussian));
+        assert_eq!(Family::parse("logistic", 0), Ok(Family::Binomial));
+        assert_eq!(Family::parse("multinomial", 4), Ok(Family::Multinomial { classes: 4 }));
+        assert!(Family::parse("multinomial", 1).is_err());
+        assert!(Family::parse("tobit", 2).is_err());
     }
 
     #[test]

@@ -1,0 +1,559 @@
+//! Ingest subsystem integration tests: golden fixtures, the
+//! export → ingest → fit differential gate over the seven paper
+//! stand-ins, and the serve `dataset_from_file` path.
+//!
+//! Numeric contracts (DESIGN.md §9): exports use shortest-round-trip
+//! float formatting, so ingesting an export with `standardize` off
+//! reproduces the design **bitwise** — same-storage fit comparisons are
+//! exact and asserted at ≤1e-10 with exact violation counts. Dense and
+//! sparse storage of the *same* data round differently in the kernels
+//! (different summation orders), so cross-storage comparisons are
+//! asserted at solver level, mirroring
+//! `packed_engine_matches_gather_engine_sparse_to_tolerance`.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicU64;
+
+use slope_screen::data::real::{write_csv, write_svmlight, RealDataset};
+use slope_screen::ingest::{self, IngestError, IngestOptions, YCol};
+use slope_screen::jsonio::Json;
+use slope_screen::linalg::{Csc, Design, Mat};
+use slope_screen::rng::Pcg64;
+use slope_screen::serve::protocol::{self, DatasetSpec};
+use slope_screen::serve::registry::{CachedModel, Registry};
+use slope_screen::serve::{Server, ServerConfig};
+use slope_screen::slope::family::{sigmoid, Family, Problem};
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{
+    fit_path, fit_point, zero_seed, NativeGradient, PathOptions, Strategy,
+};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("slope-ingest-it-{}-{name}", std::process::id()))
+}
+
+/// Ingest options for files already in model coordinates.
+fn raw(family: Family) -> IngestOptions {
+    IngestOptions::default().with_family(family).with_standardize(false)
+}
+
+// --- golden fixtures -----------------------------------------------------
+
+#[test]
+fn fixture_dense_header_quoting_crlf() {
+    // CRLF endings, a comment line, a blank line, quoted fields with an
+    // embedded comma, quoted numerics — the parsed matrix is pinned.
+    let ing = ingest::load_csv(&fixture("dense_header.csv"), &raw(Family::Gaussian)).unwrap();
+    let prob = &ing.problem;
+    assert_eq!((prob.n(), prob.p()), (3, 2));
+    let x = prob.x.as_dense().unwrap();
+    let expect = Mat::from_rows(&[&[1.5, 2.0], &[3.0, -4.25], &[-0.5, 6.5]]);
+    assert_eq!(x, &expect);
+    assert_eq!(prob.y, vec![0.5, 1.0, 0.0]);
+    assert_eq!(ing.format, ingest::Format::Csv);
+    assert!(ing.stats.is_none());
+}
+
+#[test]
+fn fixture_dense_noheader_and_y_first() {
+    let ing = ingest::load_csv(&fixture("dense_noheader.csv"), &raw(Family::Gaussian)).unwrap();
+    let x = ing.problem.x.as_dense().unwrap().clone();
+    assert_eq!(x, Mat::from_rows(&[&[1.0, 2.0], &[4.0, 5.0]]));
+    assert_eq!(ing.problem.y, vec![3.0, 6.0]);
+    // the response column is configurable
+    let opts = raw(Family::Gaussian).with_y_col(YCol::First);
+    let ing = ingest::load_csv(&fixture("dense_noheader.csv"), &opts).unwrap();
+    let x = ing.problem.x.as_dense().unwrap().clone();
+    assert_eq!(x, Mat::from_rows(&[&[2.0, 3.0], &[5.0, 6.0]]));
+    assert_eq!(ing.problem.y, vec![1.0, 4.0]);
+}
+
+#[test]
+fn fixture_ragged_rows_rejected() {
+    match ingest::load_csv(&fixture("ragged.csv"), &raw(Family::Gaussian)) {
+        Err(IngestError::Structure { line: 2, msg }) => {
+            assert!(msg.contains("2 fields, expected 3"), "msg: {msg}")
+        }
+        other => panic!("expected Structure at line 2, got {other:?}"),
+    }
+}
+
+#[test]
+fn fixture_nonfinite_csv_rejected() {
+    // `nan` parses as a valid f64 — it must still be refused.
+    match ingest::load_csv(&fixture("nonfinite.csv"), &raw(Family::Gaussian)) {
+        Err(IngestError::NonFinite { line: 2, .. }) => {}
+        other => panic!("expected NonFinite at line 2, got {other:?}"),
+    }
+}
+
+#[test]
+fn fixture_svmlight_golden() {
+    // Header `p=5` hint (two trailing all-zero columns), an inline
+    // comment, a blank line, and a bare-label row with no features.
+    let ing = ingest::load_svmlight(&fixture("tiny.svm"), &raw(Family::Binomial)).unwrap();
+    let prob = &ing.problem;
+    assert_eq!((prob.n(), prob.p()), (3, 5));
+    assert_eq!(prob.y, vec![1.0, 0.0, 1.0]);
+    match &prob.x {
+        Design::Sparse(csc) => {
+            assert_eq!(csc.nnz(), 3);
+            let expect = Mat::from_rows(&[
+                &[0.5, 0.0, 0.0, -2.0, 0.0],
+                &[0.0, 1.25, 0.0, 0.0, 0.0],
+                &[0.0, 0.0, 0.0, 0.0, 0.0],
+            ]);
+            assert_eq!(csc.to_dense(), expect);
+        }
+        other => panic!("svmlight must build sparse, got {other:?}"),
+    }
+    assert_eq!(ing.format, ingest::Format::Svmlight);
+}
+
+#[test]
+fn fixture_svmlight_duplicate_and_out_of_order_indices_rejected() {
+    for name in ["dup_index.svm", "unordered.svm"] {
+        match ingest::load_svmlight(&fixture(name), &raw(Family::Binomial)) {
+            Err(IngestError::Structure { line: 1, msg }) => {
+                assert!(msg.contains("strictly increasing"), "{name}: {msg}")
+            }
+            other => panic!("{name}: expected Structure at line 1, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn fixture_svmlight_nonfinite_rejected() {
+    match ingest::load_svmlight(&fixture("nonfinite.svm"), &raw(Family::Gaussian)) {
+        Err(IngestError::NonFinite { line: 1, .. }) => {}
+        other => panic!("expected NonFinite at line 1, got {other:?}"),
+    }
+}
+
+#[test]
+fn fixture_like_negative_labels_map_to_zero() {
+    // Classic svmlight ±1 labels ingest as 0/1 under binomial.
+    let path = tmp("pm1.svm");
+    std::fs::write(&path, "-1 1:2\n1 2:1\n").unwrap();
+    let ing = ingest::load_svmlight(&path, &raw(Family::Binomial)).unwrap();
+    assert_eq!(ing.problem.y, vec![0.0, 1.0]);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fixture_like_huge_index_is_a_typed_error_not_an_allocation() {
+    // One malformed token must not abort the process on a terabyte
+    // counts allocation — fatal for the fit server.
+    let path = tmp("huge.svm");
+    std::fs::write(&path, "1 999999999999:1\n").unwrap();
+    match ingest::load_svmlight(&path, &raw(Family::Binomial)) {
+        Err(IngestError::Structure { line: 1, msg }) => {
+            assert!(msg.contains("feature cap"), "msg: {msg}")
+        }
+        other => panic!("expected Structure at line 1, got {other:?}"),
+    }
+    // an explicit n_features is the bound instead
+    std::fs::write(&path, "1 5:1\n").unwrap();
+    let opts = raw(Family::Binomial).with_n_features(3);
+    match ingest::load_svmlight(&path, &opts) {
+        Err(IngestError::Structure { line: 1, msg }) => {
+            assert!(msg.contains("n_features"), "msg: {msg}")
+        }
+        other => panic!("expected Structure at line 1, got {other:?}"),
+    }
+    // a huge header hint is refused the same way
+    std::fs::write(&path, "# p=999999999999\n1 1:1\n").unwrap();
+    assert!(matches!(
+        ingest::load_svmlight(&path, &raw(Family::Binomial)),
+        Err(IngestError::Structure { line: 1, .. })
+    ));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn fixture_like_trailing_comment_p_hint_is_ignored() {
+    // Only full-line header comments may declare p — a stray `p=<N>` in
+    // a data line's trailing comment must not widen the design.
+    let path = tmp("hint.svm");
+    std::fs::write(&path, "1 1:0.5 # subsampled from p=999\n0 2:1\n").unwrap();
+    let ing = ingest::load_svmlight(&path, &raw(Family::Binomial)).unwrap();
+    assert_eq!(ing.problem.p(), 2, "trailing-comment hint must be ignored");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn standardize_routes_through_parallel_backend_and_records_transform() {
+    let path = tmp("std.csv");
+    std::fs::write(&path, "x1,x2,y\n1,10,101\n2,20,102\n3,60,103\n").unwrap();
+    let opts = IngestOptions::default(); // gaussian, standardize on
+    let ing = ingest::load_csv(&path, &opts).unwrap();
+    let x = ing.problem.x.as_dense().unwrap();
+    for j in 0..2 {
+        let col = x.col(j);
+        let mean: f64 = col.iter().sum::<f64>() / 3.0;
+        let norm: f64 = col.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!(mean.abs() < 1e-12 && (norm - 1.0).abs() < 1e-12);
+    }
+    // gaussian y centered, offset recorded
+    assert!((ing.intercept - 102.0).abs() < 1e-12);
+    assert!(ing.problem.y.iter().sum::<f64>().abs() < 1e-12);
+    // the recorded transform maps raw rows onto the fitted design bitwise
+    let stats = ing.stats.as_ref().unwrap();
+    let raw_rows = [[1.0, 10.0], [2.0, 20.0], [3.0, 60.0]];
+    for (i, row) in raw_rows.iter().enumerate() {
+        for j in 0..2 {
+            let mapped = (row[j] - stats.means[j]) * stats.inv_norms[j];
+            assert_eq!(mapped, x.get(i, j), "row {i} col {j}");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn two_pass_mismatch_is_detected() {
+    // A second pass over different bytes must not mis-assemble silently.
+    // Simulate by handing the reader a file, ingesting OK, then checking
+    // the fingerprint tracks content (the in-run Changed guard itself is
+    // exercised by both loaders' hash comparison on every ingest).
+    let path = tmp("fp.csv");
+    std::fs::write(&path, "x1,y\n1,2\n").unwrap();
+    let a = ingest::load_csv(&path, &raw(Family::Gaussian)).unwrap().fingerprint;
+    std::fs::write(&path, "x1,y\n1,3\n").unwrap();
+    let b = ingest::load_csv(&path, &raw(Family::Gaussian)).unwrap().fingerprint;
+    assert_ne!(a, b);
+    let _ = std::fs::remove_file(&path);
+}
+
+// --- the differential gate ----------------------------------------------
+
+/// Acceptance gate: for each of the seven stand-ins, export → ingest →
+/// `fit_path` must match the in-memory fit — violations exact,
+/// coefficients ≤ 1e-10 (the ingested design is bitwise identical, so
+/// the fits are too; the tolerance is pure headroom). Dorothea runs
+/// sparse through the two-pass CSC builder. Path lengths are bounded per
+/// dataset to keep the gate test-sized — the equality under test is
+/// configuration-independent.
+#[test]
+fn differential_gate_export_ingest_fit_matches_in_memory() {
+    let dir = std::env::temp_dir().join(format!("slope-gate-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cases: &[(RealDataset, usize)] = &[
+        (RealDataset::Arcene, 6),
+        (RealDataset::Dorothea, 5),
+        (RealDataset::Gisette, 3),
+        (RealDataset::Golub, 6),
+        (RealDataset::Cpusmall, 8),
+        (RealDataset::Physician, 6),
+        (RealDataset::Zipcode, 5),
+    ];
+    for &(ds, len) in cases {
+        let prob = ds.load();
+        let family = prob.family;
+        let was_sparse = matches!(prob.x, Design::Sparse(_));
+        let path = ds.export_problem(&prob, &dir).unwrap();
+        let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+        cfg.length = len;
+        let opts = PathOptions::new(cfg);
+        let a = fit_path(&prob, &opts, &NativeGradient(&prob));
+        drop(prob); // gisette-scale: keep one design in memory at a time
+        let ing = ingest::load_path(&path, &raw(family))
+            .unwrap_or_else(|e| panic!("{}: ingest: {e}", ds.name()));
+        assert_eq!(
+            matches!(ing.problem.x, Design::Sparse(_)),
+            was_sparse,
+            "{}: storage class changed through export/ingest",
+            ds.name()
+        );
+        let b = fit_path(&ing.problem, &opts, &NativeGradient(&ing.problem));
+        assert_eq!(a.sigmas.len(), b.sigmas.len(), "{}: path lengths differ", ds.name());
+        assert_eq!(
+            a.total_violations,
+            b.total_violations,
+            "{}: violation totals differ",
+            ds.name()
+        );
+        for (m, (sa, sb)) in a.steps.iter().zip(&b.steps).enumerate() {
+            assert_eq!(sa.violations, sb.violations, "{} step {m}", ds.name());
+            assert_eq!(sa.n_active, sb.n_active, "{} step {m}", ds.name());
+            assert_eq!(sa.n_screened_rule, sb.n_screened_rule, "{} step {m}", ds.name());
+        }
+        let worst = a
+            .final_beta
+            .iter()
+            .zip(&b.final_beta)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f64, f64::max);
+        assert!(worst <= 1e-10, "{}: max coefficient delta {worst}", ds.name());
+        let _ = std::fs::remove_file(&path);
+    }
+    let _ = std::fs::remove_dir(&dir);
+}
+
+// --- serve: dataset_from_file -------------------------------------------
+
+/// A dorothea-textured miniature: sparse binary features from latent
+/// groups, binomial response, columns pre-scaled to unit norm (model
+/// coordinates, so every route ingests identical values).
+fn mini_dorothea(seed: u64) -> Problem {
+    let mut rng = Pcg64::new(seed);
+    let (n, p, k) = (60usize, 150usize, 6usize);
+    let r = 8;
+    let groups: Vec<Vec<bool>> =
+        (0..r).map(|_| (0..n).map(|_| rng.bernoulli(0.15)).collect()).collect();
+    let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(p);
+    for _ in 0..p {
+        let grp = &groups[rng.below(r as u64) as usize];
+        let mut col = Vec::new();
+        for (i, &g) in grp.iter().enumerate() {
+            let on = if g { 0.4 } else { 0.03 };
+            if rng.bernoulli(on) {
+                col.push((i, 1.0));
+            }
+        }
+        cols.push(col);
+    }
+    let mut eta = vec![0.0f64; n];
+    for col in cols.iter().take(k) {
+        let w = 1.5 * rng.sign();
+        for &(i, v) in col {
+            eta[i] += w * v;
+        }
+    }
+    let mut y: Vec<f64> = eta
+        .iter()
+        .map(|&e| if rng.bernoulli(sigmoid(e - 0.2)) { 1.0 } else { 0.0 })
+        .collect();
+    // both classes present regardless of the draw
+    y[0] = 0.0;
+    y[1] = 1.0;
+    let mut csc = Csc::from_columns(n, &cols);
+    csc.scale_columns();
+    Problem::new(Design::Sparse(csc), y, Family::Binomial)
+}
+
+fn parse_ok(response: &str) -> Json {
+    let j = Json::parse(response).unwrap();
+    assert_eq!(j.field("ok"), Some(&Json::Bool(true)), "expected success: {response}");
+    j.field("result").unwrap().clone()
+}
+
+fn file_dataset_json(path: &Path) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str("file".to_string())),
+        ("path", Json::Str(path.to_str().unwrap().to_string())),
+        ("family", Json::Str("binomial".to_string())),
+        ("standardize", Json::Bool(false)),
+    ])
+}
+
+fn inline_dataset_json(prob: &Problem) -> Json {
+    let dense = match &prob.x {
+        Design::Sparse(csc) => csc.to_dense(),
+        Design::Dense(m) => m.clone(),
+    };
+    let rows: Vec<Json> = (0..dense.nrows())
+        .map(|i| Json::nums(&(0..dense.ncols()).map(|j| dense.get(i, j)).collect::<Vec<f64>>()))
+        .collect();
+    Json::obj(vec![
+        ("kind", Json::Str("inline".to_string())),
+        ("x", Json::Arr(rows)),
+        ("y", Json::nums(&prob.y)),
+        ("family", Json::Str("binomial".to_string())),
+        ("standardize", Json::Bool(false)),
+    ])
+}
+
+#[test]
+fn serve_dataset_from_file_fit_matches_inline_and_in_memory() {
+    let prob = mini_dorothea(0xd0a);
+    let file = tmp("mini-dorothea.svm");
+    write_svmlight(&prob, &file).unwrap();
+    // fit_threads = 1 pins the kernels to their serial (bitwise
+    // reference) forms, so the in-process replica below is exact.
+    let srv = Server::new(ServerConfig { threads: 2, queue: 8, cache: true, fit_threads: 1 });
+
+    // register the file ahead of fitting
+    let reg = protocol::request_line(
+        1,
+        "dataset_from_file",
+        vec![("dataset", file_dataset_json(&file))],
+    );
+    let registered = parse_ok(&srv.handle_line(&reg));
+    assert_eq!(registered.field("n").unwrap().as_usize(), Some(prob.n()));
+    assert_eq!(registered.field("p").unwrap().as_usize(), Some(prob.p()));
+    assert_eq!(registered.field("sparse"), Some(&Json::Bool(true)));
+
+    // fit the file-backed dataset and the identical inline dataset
+    let model = |id: u64, dataset: Json| {
+        protocol::request_line(
+            id,
+            "fit_path",
+            vec![
+                ("dataset", dataset),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(8.0)),
+            ],
+        )
+    };
+    let from_file = parse_ok(&srv.handle_line(&model(2, file_dataset_json(&file))));
+    let from_inline = parse_ok(&srv.handle_line(&model(3, inline_dataset_json(&prob))));
+
+    // Violations and screened/active trajectories agree exactly; the
+    // σ-grids agree to cross-storage rounding (dense inline vs sparse
+    // file sum in different orders, so this is solver-level, not
+    // bitwise — see the module doc).
+    assert_eq!(
+        from_file.field("total_violations").unwrap().as_f64(),
+        from_inline.field("total_violations").unwrap().as_f64()
+    );
+    assert_eq!(
+        from_file.field("steps").unwrap().as_usize(),
+        from_inline.field("steps").unwrap().as_usize()
+    );
+    let na_f = from_file.field("n_active").unwrap().items();
+    let na_i = from_inline.field("n_active").unwrap().items();
+    assert_eq!(na_f, na_i, "active-set trajectories diverged");
+    for (sf, si) in from_file
+        .field("sigmas")
+        .unwrap()
+        .items()
+        .iter()
+        .zip(from_inline.field("sigmas").unwrap().items())
+    {
+        let (sf, si) = (sf.as_f64().unwrap(), si.as_f64().unwrap());
+        assert!((sf - si).abs() <= 1e-9 * sf.abs(), "sigma grids diverged: {sf} vs {si}");
+    }
+
+    // fit_point through the file spec ≡ the same computation in-process
+    // on the ingested problem (identical CSC bytes, serial kernels):
+    // violations exact, coefficients ≤ 1e-10.
+    let point_req = protocol::request_line(
+        4,
+        "fit_point",
+        vec![
+            ("dataset", file_dataset_json(&file)),
+            ("q", Json::Num(0.1)),
+            ("sigma_ratio", Json::Num(0.4)),
+            ("screen", Json::Str("strong".to_string())),
+        ],
+    );
+    let served = parse_ok(&srv.handle_line(&point_req));
+    let ing = ingest::load_path(&file, &raw(Family::Binomial)).unwrap();
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+    cfg.length = 50; // ModelSpec's serving default
+    let opts = PathOptions::new(cfg)
+        .with_strategy(Strategy::StrongSet)
+        .with_threads(1);
+    let ng = NativeGradient(&ing.problem);
+    let seed = zero_seed(&ing.problem, &opts, &ng);
+    let local = fit_point(&ing.problem, &opts, &ng, seed.sigma * 0.4, &seed);
+    assert_eq!(
+        served.field("violations").unwrap().as_usize(),
+        Some(local.violations),
+        "served violations differ from in-memory"
+    );
+    assert_eq!(served.field("n_active").unwrap().as_usize(), Some(local.n_active));
+    for pair in served.field("nonzeros").unwrap().items() {
+        let idx = pair.items()[0].as_usize().unwrap();
+        let val = pair.items()[1].as_f64().unwrap();
+        assert!(
+            (val - local.beta[idx]).abs() <= 1e-10,
+            "coef {idx}: served {val} vs local {}",
+            local.beta[idx]
+        );
+    }
+
+    // warm-start cache: an identical re-fit is a cache hit; a sibling
+    // model on the same file entry warm-starts (previous-set strategy).
+    let again = parse_ok(&srv.handle_line(&model(5, file_dataset_json(&file))));
+    assert_eq!(again.field("source").unwrap().as_str(), Some("cache"));
+    let sibling = protocol::request_line(
+        6,
+        "fit_path",
+        vec![
+            ("dataset", file_dataset_json(&file)),
+            ("q", Json::Num(0.1)),
+            ("path_length", Json::Num(12.0)),
+        ],
+    );
+    let warm = parse_ok(&srv.handle_line(&sibling));
+    assert_eq!(warm.field("source").unwrap().as_str(), Some("fit"));
+    assert_eq!(warm.field("strategy").unwrap().as_str(), Some("previous"));
+
+    let _ = std::fs::remove_file(&file);
+}
+
+#[test]
+fn registry_interns_file_datasets_by_content_and_shares_pack_cache() {
+    // Dense file (above the packing density gate) so fits deposit packs.
+    let mut rng = Pcg64::new(0xf11e);
+    let n = 30;
+    let p = 50;
+    let mut m = Mat::zeros(n, p);
+    for j in 0..p {
+        for i in 0..n {
+            m.set(i, j, rng.normal());
+        }
+    }
+    let mut y = vec![0.0f64; n];
+    m.gemv(
+        &(0..p).map(|j| if j < 3 { 1.0 } else { 0.0 }).collect::<Vec<f64>>(),
+        &mut y,
+    );
+    for v in y.iter_mut() {
+        *v += 0.1 * rng.normal();
+    }
+    let prob = Problem::new(Design::Dense(m), y, Family::Gaussian);
+    let file_a = tmp("reg-a.csv");
+    write_csv(&prob, &file_a).unwrap();
+    let file_b = tmp("reg-b.csv");
+    std::fs::copy(&file_a, &file_b).unwrap();
+
+    let spec = |p: &Path| DatasetSpec::File {
+        path: p.to_str().unwrap().to_string(),
+        family: "gaussian".to_string(),
+        classes: 3,
+        standardize: false,
+    };
+    let reg = Registry::new(false); // model cache off: every fit runs
+    let entry_a = reg.dataset(&spec(&file_a)).unwrap();
+    let entry_b = reg.dataset(&spec(&file_b)).unwrap();
+    assert!(
+        std::sync::Arc::ptr_eq(&entry_a, &entry_b),
+        "same bytes at two paths must intern to one entry"
+    );
+
+    let build = || {
+        let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+        cfg.length = 6;
+        let opts = PathOptions::new(cfg).with_pack_cache(entry_a.pack_cache());
+        let prob = entry_a.problem.as_ref();
+        let fit = fit_path(prob, &opts, &NativeGradient(prob));
+        let seed = fit.seed();
+        let wall = fit.wall_time;
+        Ok(CachedModel {
+            fit,
+            seed,
+            strategy: "strong",
+            wall_time: wall,
+            hits: AtomicU64::new(0),
+        })
+    };
+    assert!(entry_a.pack_cache().is_empty());
+    reg.model(&entry_a, "m", build).unwrap();
+    assert!(!entry_a.pack_cache().is_empty(), "a fit must deposit packs");
+    let (hits_before, _) = entry_a.pack_cache().stats();
+    reg.model(&entry_b, "m", build).unwrap();
+    let (hits_after, _) = entry_a.pack_cache().stats();
+    assert!(
+        hits_after > hits_before,
+        "a re-fit through the content-interned entry must adopt cached packs \
+         ({hits_before} -> {hits_after})"
+    );
+    let _ = std::fs::remove_file(&file_a);
+    let _ = std::fs::remove_file(&file_b);
+}

@@ -540,6 +540,169 @@ fn parallel_standardize_matches_serial() {
     );
 }
 
+/// Export → ingest round-trips are *bitwise*: `write_csv` /
+/// `write_svmlight` use shortest-round-trip float formatting, and the
+/// readers (with `standardize` off) must reproduce exactly the matrix
+/// and response that were written — dense through the CSV row filler,
+/// sparse through the two-pass CSC builder (including trailing all-zero
+/// columns recovered from the `p=` header hint).
+#[test]
+fn ingest_round_trips_exports_bitwise() {
+    use slope_screen::data::real::{write_csv, write_svmlight};
+    use slope_screen::ingest::{self, IngestOptions};
+    use slope_screen::slope::family::{Family, Problem};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    forall(
+        Config { cases: 40, seed: 0x20d },
+        |rng| {
+            let n = 1 + rng.below(18) as usize;
+            let p = 1 + rng.below(12) as usize;
+            let data: Vec<f64> = (0..n * p)
+                .map(|_| if rng.bernoulli(0.3) { 0.0 } else { rng.normal() * 2.5 })
+                .collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (n, p, data, y)
+        },
+        |(n, p, data, y)| {
+            let case = CASE.fetch_add(1, Ordering::Relaxed);
+            let dense = Mat::from_col_major(*n, *p, data.clone());
+            let raw = IngestOptions::default().with_standardize(false);
+            // dense CSV
+            let prob = Problem::new(Design::Dense(dense.clone()), y.clone(), Family::Gaussian);
+            let path = std::env::temp_dir()
+                .join(format!("slope-prop-rt-{}-{case}.csv", std::process::id()));
+            write_csv(&prob, &path).map_err(|e| e.to_string())?;
+            let ing = ingest::load_csv(&path, &raw).map_err(|e| format!("csv: {e}"))?;
+            let _ = std::fs::remove_file(&path);
+            let got = ing.problem.x.as_dense().ok_or("csv must ingest dense")?;
+            ensure(
+                got.data().iter().zip(dense.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "CSV round-trip is not bitwise",
+            )?;
+            ensure(
+                ing.problem.y.iter().zip(y).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "CSV response round-trip is not bitwise",
+            )?;
+            // sparse svmlight (the CSC two-pass builder)
+            let csc = Csc::from_dense(&dense);
+            let sprob = Problem::new(Design::Sparse(csc), y.clone(), Family::Gaussian);
+            let path = std::env::temp_dir()
+                .join(format!("slope-prop-rt-{}-{case}.svm", std::process::id()));
+            write_svmlight(&sprob, &path).map_err(|e| e.to_string())?;
+            let ing = ingest::load_svmlight(&path, &raw).map_err(|e| format!("svm: {e}"))?;
+            let _ = std::fs::remove_file(&path);
+            let back = match &ing.problem.x {
+                Design::Sparse(s) => s.to_dense(),
+                Design::Dense(_) => return Err("svmlight must ingest sparse".to_string()),
+            };
+            ensure(
+                (back.nrows(), back.ncols()) == (*n, *p),
+                format!("svm shape {}x{} != {n}x{p}", back.nrows(), back.ncols()),
+            )?;
+            ensure(
+                back.data().iter().zip(dense.data()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "svmlight round-trip is not bitwise",
+            )?;
+            ensure(
+                ing.problem.y.iter().zip(y).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "svmlight response round-trip is not bitwise",
+            )
+        },
+    );
+}
+
+/// A fit on an ingested dense export is bitwise identical to the fit on
+/// the in-memory `Mat` it came from, across kernel thread counts — the
+/// ingest pipeline adds no numeric noise, and the parallel dense
+/// kernels keep their bitwise-determinism contract through it. Problem
+/// sizes are chosen so `n·p` clears the parallel grain floor (the
+/// kernels genuinely split).
+#[test]
+fn ingested_dense_fit_matches_in_memory_fit_bitwise_across_threads() {
+    use slope_screen::data::real::write_csv;
+    use slope_screen::ingest::{self, IngestOptions};
+    use slope_screen::linalg::ops;
+    use slope_screen::slope::family::{Family, Problem};
+    use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+    use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static CASE: AtomicUsize = AtomicUsize::new(0);
+    forall(
+        Config { cases: 6, seed: 0x20e },
+        |rng| {
+            let n = 50 + rng.below(20) as usize;
+            let p = 560 + rng.below(80) as usize;
+            let seed = rng.next_u64();
+            (n, p, seed)
+        },
+        |&(n, p, seed)| {
+            let case = CASE.fetch_add(1, Ordering::Relaxed);
+            let mut rng = Pcg64::new(seed);
+            let mut x = Mat::zeros(n, p);
+            for j in 0..p {
+                for i in 0..n {
+                    x.set(i, j, rng.normal());
+                }
+            }
+            x.standardize(true, true);
+            let mut y = vec![0.0f64; n];
+            let beta: Vec<f64> =
+                (0..p).map(|j| if j < 5 { 2.0 * rng.sign() } else { 0.0 }).collect();
+            x.gemv(&beta, &mut y);
+            for v in y.iter_mut() {
+                *v += 0.3 * rng.normal();
+            }
+            let mean = ops::mean(&y);
+            for v in y.iter_mut() {
+                *v -= mean;
+            }
+            let prob = Problem::new(Design::Dense(x), y, Family::Gaussian);
+            let path = std::env::temp_dir()
+                .join(format!("slope-prop-fit-{}-{case}.csv", std::process::id()));
+            write_csv(&prob, &path).map_err(|e| e.to_string())?;
+            let opts = IngestOptions::default()
+                .with_family(Family::Gaussian)
+                .with_standardize(false);
+            let ing = ingest::load_csv(&path, &opts).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            let mut reference: Option<(usize, Vec<f64>)> = None;
+            for threads in [1usize, 2, 7] {
+                let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+                cfg.length = 6;
+                let o = PathOptions::new(cfg).with_threads(threads);
+                let a = fit_path(&prob, &o, &NativeGradient(&prob));
+                let b = fit_path(&ing.problem, &o, &NativeGradient(&ing.problem));
+                ensure(
+                    a.total_violations == b.total_violations,
+                    format!("t={threads}: violations {} vs {}", a.total_violations, b.total_violations),
+                )?;
+                ensure(
+                    a.final_beta
+                        .iter()
+                        .zip(&b.final_beta)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                    format!("t={threads}: ingested fit != in-memory fit bitwise"),
+                )?;
+                match &reference {
+                    None => reference = Some((a.total_violations, a.final_beta.clone())),
+                    Some((viol, beta_ref)) => {
+                        ensure(
+                            *viol == a.total_violations
+                                && beta_ref
+                                    .iter()
+                                    .zip(&a.final_beta)
+                                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                            format!("t={threads}: fit differs across thread counts"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// End-to-end invariant: for random small problems, the fitted path's
 /// screened sets never (after the safeguard) miss an active predictor,
 /// across both heuristic strategies.
