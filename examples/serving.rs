@@ -22,7 +22,7 @@ fn main() {
     use slope_screen::serve::{Server, ServerConfig};
 
     let sock = std::env::temp_dir().join(format!("slope-serving-demo-{}.sock", std::process::id()));
-    let server = Arc::new(Server::new(ServerConfig { threads: 0, queue: 16, cache: true, fit_threads: 0 }));
+    let server = Arc::new(Server::new(ServerConfig { threads: 0, queue: 16, cache: true, fit_threads: 0, ..Default::default() }));
     let server_thread = {
         let server = Arc::clone(&server);
         let sock = sock.clone();

@@ -16,7 +16,7 @@ use slope_screen::runtime::{default_artifact_dir, ArtifactGradient, Manifest};
 use slope_screen::slope::family::Family;
 use slope_screen::slope::lambda::bh_sequence;
 use slope_screen::slope::path::FullGradient;
-use slope_screen::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
+use slope_screen::slope::prox::{prox_sorted_l1, prox_sorted_l1_into, ProxWorkspace};
 use slope_screen::slope::screen::{
     algorithm2_k, strong_set_resort_reference, strong_set_with, StrongWorkspace,
 };
@@ -54,6 +54,20 @@ fn main() {
         std::hint::black_box(&out);
     });
     record("prox_sorted_l1", p, &t);
+
+    // the FISTA hot-loop prox, alloc-free (persistent workspace: the
+    // pair sort runs in workspace buffers) vs the allocating entry point
+    // it replaced (fresh order/pair vectors per call — the old per-
+    // iteration cost)
+    let t = Timing::measure(3, reps, || {
+        prox_sorted_l1_into(&v, &lam, &mut ws, &mut out);
+        std::hint::black_box(&out);
+    });
+    record("fista iter alloc-free", p, &t);
+    let t = Timing::measure(3, reps, || {
+        std::hint::black_box(prox_sorted_l1(&v, &lam));
+    });
+    record("fista iter alloc-ref", p, &t);
 
     // algorithm 2
     let c = abs_sorted_desc(&v);

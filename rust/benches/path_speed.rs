@@ -1,6 +1,6 @@
 //! Path-level wall-clock benchmark of the hot-path engines: full-path
 //! Gaussian fits across p ∈ {1k, 10k, 100k} at n = 200 (the paper's
-//! p ≫ n regime), on two axes:
+//! p ≫ n regime), on three axes:
 //!
 //! * **backend** — serial vs threaded `linalg::par` kernels;
 //! * **engine** — `gather` (subset kernels chasing a column list through
@@ -9,14 +9,24 @@
 //!   re-fits adopt the cold fit's slabs — the serve registry's case). At
 //!   p = 100k the late-path screened sets reach the hundreds, the regime
 //!   the packed engine targets.
+//! * **screen** — the `strong` KKT-safeguarded baseline vs the `hybrid`
+//!   duality-gap strategy (safe universe + gap certificates, DESIGN.md
+//!   §10), which replaces most full-p gradient sweeps with partial
+//!   universe sweeps. Each cell records `full_grad_sweeps`
+//!   (p-equivalents) so the sweep reduction is tracked, not inferred
+//!   from wall time.
 //!
 //! Correctness is asserted, not assumed: across backends *and* engines,
 //! fits must produce identical violation counts and coefficients to
 //! 1e-10 (the dense kernels of both engines are bitwise-deterministic
-//! and order-matched, so the real difference is zero). The full run
-//! gates on ≥ 2× parallel-over-serial (cold) and ≥ 1.3× packed-over-
-//! gather (warm, parallel) at the largest size when at least 4 threads
-//! are available.
+//! and order-matched, so the real difference is zero); hybrid fits must
+//! match the strong baseline exactly on violations and to 1e-9 on
+//! coefficients (1e-6 in smoke runs — the stopping rules differ, so the
+//! contract is certificate-level, not bitwise). The full run gates on
+//! ≥ 2× parallel-over-serial (cold), ≥ 1.3× packed-over-gather (warm,
+//! parallel), and ≥ 30% fewer full-gradient sweeps for hybrid vs strong
+//! (warm, parallel) at the largest size when at least 4 threads are
+//! available.
 //!
 //! Writes `results/path_speed.csv` and the machine-readable
 //! `BENCH_path.json` at the repository root — the perf trajectory of the
@@ -24,9 +34,12 @@
 //!
 //! Run:      `cargo bench --bench path_speed`
 //! Smoke:    `cargo bench --bench path_speed -- --smoke` (bounded sizes,
-//!           no speedup gates — the CI job that keeps this harness alive).
+//!           no speedup/sweep gates — the CI job that keeps this harness
+//!           alive).
 //! Gather:   `cargo bench --bench path_speed -- --no-pack` (gather engine
 //!           only; CI smokes this too so both code paths stay exercised).
+//! Policy:   `cargo bench --bench path_speed -- --screen hybrid` (one
+//!           screening policy only; default `both` runs the comparison).
 
 use std::sync::Arc;
 
@@ -48,10 +61,12 @@ struct Run {
     engine: &'static str,
     backend: &'static str,
     start: &'static str,
+    screen: &'static str,
     threads: usize,
     wall_s: f64,
     steps: usize,
     violations: usize,
+    full_grad_sweeps: f64,
 }
 
 fn make_problem(n: usize, p: usize, k: usize, rho: f64, seed: u64) -> Problem {
@@ -68,11 +83,17 @@ fn make_problem(n: usize, p: usize, k: usize, rho: f64, seed: u64) -> Problem {
     .generate(&mut Pcg64::new(seed))
 }
 
-fn opts(q: f64, length: usize, threads: usize, packing: bool) -> PathOptions {
+fn opts(
+    q: f64,
+    length: usize,
+    threads: usize,
+    packing: bool,
+    strategy: Strategy,
+) -> PathOptions {
     let mut cfg = PathConfig::new(LambdaKind::Bh { q });
     cfg.length = length;
     PathOptions::new(cfg)
-        .with_strategy(Strategy::StrongSet)
+        .with_strategy(strategy)
         .with_threads(threads)
         .with_packing(packing)
 }
@@ -112,12 +133,19 @@ fn main() {
         .opt("path-length", "50", "path points")
         .opt("threads", "0", "parallel-backend threads (0 = all cores)")
         .opt("seed", "2020", "dataset seed")
+        .opt("screen", "both", "screening policy axis: strong|hybrid|both")
         .flag("smoke", "bounded sizes for CI; skips the speedup gates")
         .flag("no-pack", "gather engine only (skip the packed runs)")
         .flag("bench", "(cargo bench compatibility)")
         .parse();
     let smoke = parsed.bool("smoke");
     let no_pack = parsed.bool("no-pack");
+    let (run_strong, run_hybrid) = match parsed.get("screen") {
+        "strong" => (true, false),
+        "hybrid" => (false, true),
+        "both" => (true, true),
+        s => panic!("unknown --screen {s} (expected strong|hybrid|both)"),
+    };
     let n = parsed.usize("n");
     let ps: Vec<usize> = if smoke { vec![500, 2000] } else { parsed.usize_list("ps") };
     let k = parsed.usize("k");
@@ -136,58 +164,44 @@ fn main() {
     let engines: &[&'static str] = if no_pack { &["gather"] } else { &["gather", "packed"] };
 
     println!(
-        "path_speed: n={n}, p in {ps:?}, path-length={path_length}, engines {engines:?}, parallel backend = {threads} threads{}",
+        "path_speed: n={n}, p in {ps:?}, path-length={path_length}, engines {engines:?}, screens strong={run_strong}/hybrid={run_hybrid}, parallel backend = {threads} threads{}",
         if smoke { " [smoke]" } else { "" }
     );
+    let default_engine = if no_pack { "gather" } else { "packed" };
 
     let mut runs: Vec<Run> = Vec::new();
     for (pi, &p) in ps.iter().enumerate() {
         let prob = make_problem(n, p, k.min(p / 2).max(1), rho, seed + pi as u64);
         let ng = NativeGradient(&prob);
-        let mut per_engine: Vec<(&'static str, [PathFit; 4])> = Vec::new();
-        for &engine in engines {
-            let packing = engine == "packed";
-            // One pack cache per backend: the cold fit deposits each
-            // step's slab, the warm re-fit adopts it — packing drops out
-            // of the warm path exactly as it does for warm serve
-            // requests. Separate caches keep the cold timings honest.
-            let with_cache = |o: PathOptions| {
-                if packing {
-                    // generous bounds: the bench must measure kernels and
-                    // cache adoption, not eviction policy
-                    let cache = PackCache::new(4 * path_length).with_max_bytes(512 << 20);
-                    o.with_pack_cache(Arc::new(cache))
-                } else {
-                    o
-                }
-            };
-            let o_serial = with_cache(opts(q, path_length, 1, packing));
-            let o_par = with_cache(opts(q, path_length, threads, packing));
-
+        let with_cache = |o: PathOptions, packing: bool| {
+            if packing {
+                // One pack cache per cell: the cold fit deposits each
+                // step's slab, the warm re-fit adopts it — packing drops
+                // out of the warm path exactly as for warm serve
+                // requests. Generous bounds: the bench must measure
+                // kernels and cache adoption, not eviction policy.
+                let cache = PackCache::new(4 * path_length).with_max_bytes(512 << 20);
+                o.with_pack_cache(Arc::new(cache))
+            } else {
+                o
+            }
+        };
+        // cold/serial, cold/parallel, warm/serial, warm/parallel for one
+        // (engine, strategy) cell, with the serial-vs-parallel identity
+        // check every cell must pass.
+        let run_cell = |packing: bool, strategy: Strategy, what: &str| -> [PathFit; 4] {
+            let o_serial = with_cache(opts(q, path_length, 1, packing, strategy), packing);
+            let o_par = with_cache(opts(q, path_length, threads, packing, strategy), packing);
             let cold_serial = fit_path(&prob, &o_serial, &ng);
             let cold_par = fit_path(&prob, &o_par, &ng);
-            assert_identical(&cold_serial, &cold_par, &format!("p={p} {engine} cold"), 1e-10);
-
+            assert_identical(&cold_serial, &cold_par, &format!("p={p} {what} cold"), 1e-10);
             let warm_serial = fit_path_seeded(&prob, &o_serial, &ng, Some(&cold_serial.seed()));
             let warm_par = fit_path_seeded(&prob, &o_par, &ng, Some(&cold_par.seed()));
-            assert_identical(&warm_serial, &warm_par, &format!("p={p} {engine} warm"), 1e-10);
-
-            per_engine.push((engine, [cold_serial, cold_par, warm_serial, warm_par]));
-        }
-        // Cross-engine identity: the packed engine must be a pure
-        // performance transformation of the gather one.
-        if let [(_, gather), (_, packed)] = per_engine.as_slice() {
-            let labels = ["cold/serial", "cold/parallel", "warm/serial", "warm/parallel"];
-            for (i, label) in labels.iter().enumerate() {
-                assert_identical(
-                    &gather[i],
-                    &packed[i],
-                    &format!("p={p} gather-vs-packed {label}"),
-                    1e-10,
-                );
-            }
-        }
-        for &(engine, ref fits) in &per_engine {
+            assert_identical(&warm_serial, &warm_par, &format!("p={p} {what} warm"), 1e-10);
+            [cold_serial, cold_par, warm_serial, warm_par]
+        };
+        let labels = ["cold/serial", "cold/parallel", "warm/serial", "warm/parallel"];
+        let mut record = |engine: &'static str, screen: &'static str, fits: &[PathFit; 4]| {
             for (fit, start, backend, t) in [
                 (&fits[0], "cold", "serial", 1),
                 (&fits[1], "cold", "parallel", threads),
@@ -195,73 +209,175 @@ fn main() {
                 (&fits[3], "warm", "parallel", threads),
             ] {
                 println!(
-                    "  p={p:<7} {engine:<7} {backend:<8} {start}  {}  ({} steps, {} violations)",
+                    "  p={p:<7} {engine:<7} {screen:<7} {backend:<8} {start}  {}  ({} steps, {} violations, {:.2} sweeps)",
                     fmt_secs(fit.wall_time),
                     fit.steps.len(),
-                    fit.total_violations
+                    fit.total_violations,
+                    fit.total_grad_sweeps
                 );
                 runs.push(Run {
                     p,
                     engine,
                     backend,
                     start,
+                    screen,
                     threads: t,
                     wall_s: fit.wall_time,
                     steps: fit.steps.len(),
                     violations: fit.total_violations,
+                    full_grad_sweeps: fit.total_grad_sweeps,
                 });
             }
+        };
+
+        let mut strong_default: Option<[PathFit; 4]> = None;
+        if run_strong {
+            let mut per_engine: Vec<(&'static str, [PathFit; 4])> = Vec::new();
+            for &engine in engines {
+                let packing = engine == "packed";
+                let fits = run_cell(packing, Strategy::StrongSet, &format!("{engine} strong"));
+                per_engine.push((engine, fits));
+            }
+            // Cross-engine identity: the packed engine must be a pure
+            // performance transformation of the gather one.
+            if let [(_, gather), (_, packed)] = per_engine.as_slice() {
+                for (i, label) in labels.iter().enumerate() {
+                    assert_identical(
+                        &gather[i],
+                        &packed[i],
+                        &format!("p={p} gather-vs-packed {label}"),
+                        1e-10,
+                    );
+                }
+            }
+            for &(engine, ref fits) in &per_engine {
+                record(engine, "strong", fits);
+            }
+            strong_default = per_engine
+                .iter()
+                .position(|&(e, _)| e == default_engine)
+                .map(|i| per_engine.swap_remove(i).1);
+        }
+        if run_hybrid {
+            // The screening-policy axis runs on the default engine only —
+            // the engine comparison above already isolates gather vs
+            // packed, and the policies share those kernels.
+            let packing = default_engine == "packed";
+            let fits = run_cell(packing, Strategy::GapHybrid, &format!("{default_engine} hybrid"));
+            // Hybrid vs strong: coefficients to the certificate tolerance
+            // (the stopping rules differ, so this is a solver-level
+            // contract, not bitwise) and — on full runs — exact violation
+            // counts. Smoke compares coefficients only: the two
+            // strategies build their rule covers from different inputs
+            // (exact vs bound-inflated strong sets), so a genuine
+            // strong-rule violation can legitimately be attributed
+            // differently, and the acceptance gate is defined at the full
+            // sizes anyway.
+            if let Some(strong) = &strong_default {
+                for (i, label) in labels.iter().enumerate() {
+                    let (a, b) = (&strong[i], &fits[i]);
+                    let what = format!("p={p} strong-vs-hybrid {label}");
+                    if smoke {
+                        assert_eq!(a.steps.len(), b.steps.len(), "{what}: step counts diverged");
+                        let mut max_dev = 0.0f64;
+                        for (x, y) in a.final_beta.iter().zip(&b.final_beta) {
+                            max_dev = max_dev.max((x - y).abs());
+                        }
+                        assert!(max_dev <= 1e-6, "{what}: coefficients diverged by {max_dev:e}");
+                    } else {
+                        assert_identical(a, b, &what, 1e-9);
+                    }
+                }
+            }
+            record(default_engine, "hybrid", &fits);
         }
     }
 
     let mut table = Table::new(
-        &format!("path_speed (gaussian, n={n}, strong set, {threads}-thread backend)"),
-        &["p", "engine", "backend", "start", "threads", "wall_s", "steps", "violations"],
+        &format!("path_speed (gaussian, n={n}, {threads}-thread backend)"),
+        &[
+            "p",
+            "engine",
+            "screen",
+            "backend",
+            "start",
+            "threads",
+            "wall_s",
+            "steps",
+            "violations",
+            "full_grad_sweeps",
+        ],
     );
     for r in &runs {
         table.row(vec![
             r.p.to_string(),
             r.engine.to_string(),
+            r.screen.to_string(),
             r.backend.to_string(),
             r.start.to_string(),
             r.threads.to_string(),
             format!("{:.4}", r.wall_s),
             r.steps.to_string(),
             r.violations.to_string(),
+            format!("{:.3}", r.full_grad_sweeps),
         ]);
     }
     table.print();
     let csv = table.write_csv("path_speed").expect("csv");
     println!("\nwrote {}", csv.display());
 
-    let default_engine = if no_pack { "gather" } else { "packed" };
-    let find = |p: usize, engine: &str, backend: &str, start: &str| {
+    let base_screen = if run_strong { "strong" } else { "hybrid" };
+    let find = |p: usize, engine: &str, screen: &str, backend: &str, start: &str| {
         runs.iter()
-            .find(|r| r.p == p && r.engine == engine && r.backend == backend && r.start == start)
+            .find(|r| {
+                r.p == p
+                    && r.engine == engine
+                    && r.screen == screen
+                    && r.backend == backend
+                    && r.start == start
+            })
             .expect("run")
     };
     let p_max = *ps.iter().max().expect("non-empty p grid");
-    let cold_speedup = find(p_max, default_engine, "serial", "cold").wall_s
-        / find(p_max, default_engine, "parallel", "cold").wall_s.max(1e-12);
-    let warm_speedup = find(p_max, default_engine, "serial", "warm").wall_s
-        / find(p_max, default_engine, "parallel", "warm").wall_s.max(1e-12);
+    let cold_speedup = find(p_max, default_engine, base_screen, "serial", "cold").wall_s
+        / find(p_max, default_engine, base_screen, "parallel", "cold").wall_s.max(1e-12);
+    let warm_speedup = find(p_max, default_engine, base_screen, "serial", "warm").wall_s
+        / find(p_max, default_engine, base_screen, "parallel", "warm").wall_s.max(1e-12);
     println!(
-        "speedup at p={p_max} ({default_engine}): cold {cold_speedup:.2}x, warm {warm_speedup:.2}x ({threads} threads)"
+        "speedup at p={p_max} ({default_engine}, {base_screen}): cold {cold_speedup:.2}x, warm {warm_speedup:.2}x ({threads} threads)"
     );
-    let warm_pack_speedup = if no_pack {
+    let warm_pack_speedup = if no_pack || !run_strong {
         None
     } else {
-        let s = find(p_max, "gather", "parallel", "warm").wall_s
-            / find(p_max, "packed", "parallel", "warm").wall_s.max(1e-12);
+        let s = find(p_max, "gather", "strong", "parallel", "warm").wall_s
+            / find(p_max, "packed", "strong", "parallel", "warm").wall_s.max(1e-12);
         println!("packed over gather at p={p_max} (warm, parallel): {s:.2}x");
         Some(s)
     };
+    // The screening-policy comparison: full-gradient sweep work on the
+    // warm parallel path at the largest size — the quantity the hybrid
+    // strategy exists to reduce.
+    let sweep_reduction = if run_strong && run_hybrid {
+        let strong = find(p_max, default_engine, "strong", "parallel", "warm").full_grad_sweeps;
+        let hybrid = find(p_max, default_engine, "hybrid", "parallel", "warm").full_grad_sweeps;
+        let reduction = 1.0 - hybrid / strong.max(1e-12);
+        println!(
+            "full-gradient sweeps at p={p_max} (warm, parallel): strong {strong:.2}, hybrid {hybrid:.2} ({:.0}% fewer)",
+            reduction * 100.0
+        );
+        Some(reduction)
+    } else {
+        None
+    };
     // The acceptance gates, at the largest size whenever ≥ 4 threads back
-    // the parallel runs: ≥ 2× parallel-over-serial on the cold path, and
+    // the parallel runs: ≥ 2× parallel-over-serial on the cold path,
     // ≥ 1.3× packed-over-gather on the warm path (where the pack cache
-    // removes packing and the blocked kernels carry the solve). Smoke
-    // runs (CI) keep the correctness asserts but skip the timing gates —
-    // shared runners make wall-clock guarantees meaningless there.
+    // removes packing and the blocked kernels carry the solve), and
+    // ≥ 30% fewer full-gradient sweeps for the gap-certified hybrid on
+    // the warm parallel path. Smoke runs (CI) keep the correctness
+    // asserts but skip the gates — shared runners make wall-clock
+    // guarantees meaningless there, and the smoke sizes are below the
+    // regime the sweep gate targets.
     if !smoke && threads >= 4 {
         assert!(
             cold_speedup >= 2.0,
@@ -271,6 +387,13 @@ fn main() {
             assert!(
                 s >= 1.3,
                 "packed engine must be >= 1.3x over gather on the warm path at p={p_max}, got {s:.2}x"
+            );
+        }
+        if let Some(r) = sweep_reduction {
+            assert!(
+                r >= 0.30,
+                "hybrid screening must cut >= 30% of full-gradient sweeps at p={p_max} (warm, parallel), got {:.0}%",
+                r * 100.0
             );
         }
     }
@@ -283,6 +406,9 @@ fn main() {
     ];
     if let Some(s) = warm_pack_speedup {
         speedup_fields.push(("warm_packed_over_gather", Json::Num(s)));
+    }
+    if let Some(r) = sweep_reduction {
+        speedup_fields.push(("hybrid_sweep_reduction", Json::Num(r)));
     }
     let payload = Json::obj(vec![
         ("bench", Json::Str("path_speed".to_string())),
@@ -298,6 +424,7 @@ fn main() {
                 ("threads", Json::Num(threads as f64)),
                 ("smoke", Json::Bool(smoke)),
                 ("no_pack", Json::Bool(no_pack)),
+                ("screen", Json::Str(parsed.get("screen").to_string())),
             ]),
         ),
         (
@@ -308,12 +435,14 @@ fn main() {
                         Json::obj(vec![
                             ("p", Json::Num(r.p as f64)),
                             ("engine", Json::Str(r.engine.to_string())),
+                            ("screen", Json::Str(r.screen.to_string())),
                             ("backend", Json::Str(r.backend.to_string())),
                             ("start", Json::Str(r.start.to_string())),
                             ("threads", Json::Num(r.threads as f64)),
                             ("wall_s", Json::Num(r.wall_s)),
                             ("steps", Json::Num(r.steps as f64)),
                             ("violations", Json::Num(r.violations as f64)),
+                            ("full_grad_sweeps", Json::Num(r.full_grad_sweeps)),
                         ])
                     })
                     .collect(),

@@ -91,21 +91,21 @@ fn main() {
 
     // fit_path, cache disabled: every request is a full cold fit.
     {
-        let server = Server::new(ServerConfig { threads, queue: 64, cache: false, fit_threads: 0 });
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: false, fit_threads: 0, ..Default::default() });
         let lines: Vec<String> = (0..requests).map(|i| fit_path_line(i as u64)).collect();
         let total_s = drive(&server, &lines);
         scenarios.push(Scenario { name: "fit_path_cold", requests, total_s });
     }
     // fit_path, cache enabled: one cold fit, then warm-start-cached hits.
     {
-        let server = Server::new(ServerConfig { threads, queue: 64, cache: true, fit_threads: 0 });
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: true, fit_threads: 0, ..Default::default() });
         let lines: Vec<String> = (0..requests).map(|i| fit_path_line(i as u64)).collect();
         let total_s = drive(&server, &lines);
         scenarios.push(Scenario { name: "fit_path_warm_cache", requests, total_s });
     }
     // fit_point, cache disabled: every point re-solved from σ_max.
     {
-        let server = Server::new(ServerConfig { threads, queue: 64, cache: false, fit_threads: 0 });
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: false, fit_threads: 0, ..Default::default() });
         let lines: Vec<String> = (0..requests)
             .map(|i| fit_point_line(i as u64, 0.5 - 0.2 * (i % 5) as f64 / 5.0))
             .collect();
@@ -115,7 +115,7 @@ fn main() {
     // fit_point, cache enabled: each request warm-starts from the last
     // point's coefficients, gradient and screened support.
     {
-        let server = Server::new(ServerConfig { threads, queue: 64, cache: true, fit_threads: 0 });
+        let server = Server::new(ServerConfig { threads, queue: 64, cache: true, fit_threads: 0, ..Default::default() });
         let lines: Vec<String> = (0..requests)
             .map(|i| fit_point_line(i as u64, 0.5 - 0.2 * (i % 5) as f64 / 5.0))
             .collect();
@@ -125,7 +125,7 @@ fn main() {
     // concurrent burst: 4 connections ask for the same cold model at
     // once — coalescing runs one fit and shares it.
     {
-        let server = Arc::new(Server::new(ServerConfig { threads, queue: 64, cache: true, fit_threads: 0 }));
+        let server = Arc::new(Server::new(ServerConfig { threads, queue: 64, cache: true, fit_threads: 0, ..Default::default() }));
         let t0 = Instant::now();
         std::thread::scope(|scope| {
             for c in 0..4 {

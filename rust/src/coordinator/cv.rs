@@ -147,6 +147,11 @@ pub fn cross_validate(prob: &Problem, opts: &PathOptions, cfg: &CvConfig) -> CvR
     // on K different training subsets, so a shared cache could hand one
     // fold another fold's packed columns. Folds pack locally instead.
     fold_opts.pack_cache = None;
+    // Same design-identity argument for shared column norms: the parent
+    // design's norms do not describe a row-subset training design, and
+    // the gap-driven sphere tests must never certify discards from the
+    // wrong geometry. Folds compute their own.
+    fold_opts.col_norms = None;
 
     let scratch = FoldScratch::default();
     par_for_each(jobs.len(), threads, |j| {

@@ -142,6 +142,13 @@ impl Design {
         }
     }
 
+    /// Column Euclidean norms `‖x_j‖₂` — the one definition every
+    /// consumer (safe sphere tests, the gap-safe diagnostic, the serve
+    /// registry's per-dataset cache) shares.
+    pub fn col_norms_with(&self, par: ParConfig) -> Vec<f64> {
+        self.col_sq_norms_with(par).iter().map(|c| c.sqrt()).collect()
+    }
+
     /// Center (dense only) and scale columns to unit ℓ2 norm, as in the
     /// paper's setup (§3.1): `x̄_j = 0`, `‖x_j‖₂ = 1`.
     ///

@@ -66,6 +66,18 @@ pub fn abs_sorted_desc(x: &[f64]) -> Vec<f64> {
     out
 }
 
+/// Sort packed `(|value|, index)` pairs descending by magnitude with the
+/// ascending-index tiebreak — **the** ordering comparator of the stack
+/// (`total_cmp`, not `partial_cmp().unwrap()`: a NaN must not panic the
+/// screening path). [`order_desc_abs`], the screening workspace's
+/// ranking and the prox's in-workspace sort all share this one
+/// definition, because their bitwise agreement is a pinned contract —
+/// a comparator edit must change all of them at once.
+#[inline]
+pub fn sort_pairs_desc_abs(pairs: &mut [(f64, u32)]) {
+    pairs.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+}
+
 /// Permutation `O(x)` that sorts `|x|` in decreasing order: returns indices
 /// `ord` such that `|x[ord[0]]| >= |x[ord[1]]| >= ...`. Ties are broken by
 /// original index for determinism. (`sort_unstable_by` — the stable sort
@@ -76,14 +88,12 @@ pub fn order_desc_abs(x: &[f64]) -> Vec<usize> {
     // Sort packed (|value|, index) pairs rather than indices with indirect
     // key lookups — direct key compares are ~2× faster on large p because
     // the comparator stops chasing pointers into `x` (§Perf).
-    // `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN in the input
-    // (diverged gradient) must not panic the screening path.
     let mut pairs: Vec<(f64, u32)> = x
         .iter()
         .enumerate()
         .map(|(i, &v)| (v.abs(), i as u32))
         .collect();
-    pairs.sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+    sort_pairs_desc_abs(&mut pairs);
     pairs.into_iter().map(|(_, i)| i as usize).collect()
 }
 

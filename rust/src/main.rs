@@ -47,7 +47,8 @@ fn main() {
         .opt("lambda", "bh", "penalty shape: bh|oscar|lasso|gaussian-seq")
         .opt("q", "0.1", "BH/OSCAR parameter")
         .opt("path-length", "100", "number of path points")
-        .opt("screen", "strong", "strategy: none|strong|previous")
+        .opt("screen", "strong", "strategy: none|strong|previous|safe|hybrid")
+        .opt("gap-tol", "0", "relative duality-gap tolerance for safe/hybrid screening (0 = library default; serve caps it at 1e-4)")
         .opt("grad-engine", "native", "full-gradient engine: native|xla")
         .opt("folds", "5", "cv folds")
         .opt("repeats", "1", "cv repeats")
@@ -172,9 +173,16 @@ fn build_opts(parsed: &slope_screen::cli::Parsed, prob: &Problem) -> PathOptions
         "none" => Strategy::NoScreening,
         "strong" => Strategy::StrongSet,
         "previous" => Strategy::PreviousSet,
+        "safe" => Strategy::SafeOnly,
+        "hybrid" => Strategy::GapHybrid,
         s => panic!("unknown strategy {s}"),
     };
-    PathOptions::new(cfg).with_strategy(strategy)
+    let mut opts = PathOptions::new(cfg).with_strategy(strategy);
+    let gap_tol = parsed.f64("gap-tol");
+    if gap_tol > 0.0 {
+        opts = opts.with_gap_tol(gap_tol);
+    }
+    opts
 }
 
 fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
@@ -218,6 +226,10 @@ fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
     }
     let (ts, tv, tk) = slope_screen::slope::path::phase_totals(&fit);
     println!("phase totals: screen={ts:.4}s solve={tv:.4}s kkt={tk:.4}s");
+    println!("full-gradient sweeps (p-equivalents): {:.2}", fit.total_grad_sweeps);
+    if fit.steps.iter().any(|s| !s.solver_converged) {
+        println!("warning: some inner solves hit max_iter before certifying — tighten --gap-tol/--path-length or raise fista.max_iter");
+    }
 }
 
 fn cmd_cv(parsed: &slope_screen::cli::Parsed) {
@@ -294,6 +306,7 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
         queue: parsed.usize("queue"),
         cache: !parsed.bool("no-cache"),
         fit_threads: parsed.usize("fit-threads"),
+        gap_tol: parsed.f64("gap-tol"),
     };
     let server = std::sync::Arc::new(Server::new(cfg));
     if parsed.bool("stdio") {

@@ -414,14 +414,19 @@ pub struct ModelSpec {
     pub q: f64,
     /// Path length for `fit_path`.
     pub path_length: usize,
-    /// `auto|none|strong|previous` — `auto` lets the scheduler choose from
-    /// cache state.
+    /// `auto|none|strong|previous|safe|hybrid` — `auto` lets the
+    /// scheduler choose from cache state.
     pub screen: String,
     /// Kernel thread budget for this request's fit (0 = the scheduler's
     /// per-job split of the machine). Like `screen`, a performance knob
     /// that never changes the solution — deliberately not part of the
     /// cache identity.
     pub threads: usize,
+    /// Relative duality-gap tolerance for the gap-driven screens
+    /// (`safe`/`hybrid`); 0 defers to the server-wide default. Bounded to
+    /// the tolerance regime `(0, 1e-4]` so it stays a solver knob, and —
+    /// like `screen`/`threads` — excluded from the cache identity.
+    pub gap_tol: f64,
 }
 
 impl ModelSpec {
@@ -433,12 +438,19 @@ impl ModelSpec {
             path_length: usize_field(j, "path_length", 50)?,
             screen: str_field(j, "screen", "auto")?,
             threads: usize_field(j, "threads", 0)?,
+            gap_tol: f64_field(j, "gap_tol", 0.0)?,
         };
         if spec.path_length == 0 {
             return Err("path_length must be >= 1".to_string());
         }
         if spec.threads > 256 {
             return Err(format!("threads must be <= 256, got {}", spec.threads));
+        }
+        // 0 = server default; explicit values must stay in the tolerance
+        // regime (a large "tolerance" would change solutions, which the
+        // cache identity assumes it cannot). `!(..)` also rejects NaN.
+        if spec.gap_tol != 0.0 && !(spec.gap_tol > 0.0 && spec.gap_tol <= 1e-4) {
+            return Err(format!("gap_tol must be in (0, 1e-4], got {}", spec.gap_tol));
         }
         match spec.lambda.as_str() {
             "bh" | "gaussian-seq" => {
@@ -461,14 +473,16 @@ impl ModelSpec {
         Ok(spec)
     }
 
-    /// Cache key within a dataset entry. `screen` and `threads` are
-    /// deliberately *not* part of the identity: both are per-job
-    /// performance strategies that never change the solution beyond
-    /// solver tolerance (the KKT safeguard guarantees it for screening;
-    /// the parallel dense kernels are bitwise-deterministic, and the one
-    /// reduction-based sparse kernel agrees to rounding — far inside the
-    /// fit tolerance), so requests differing only in them share one
-    /// fitted model.
+    /// Cache key within a dataset entry. `screen`, `threads` and
+    /// `gap_tol` are deliberately *not* part of the identity: all three
+    /// are per-job performance strategies that never change the solution
+    /// beyond solver tolerance (the KKT safeguard guarantees it for the
+    /// heuristic screens, the duality-gap certificate for the gap-driven
+    /// ones — `gap_tol` is bounded to the tolerance regime at parse
+    /// time; the parallel dense kernels are bitwise-deterministic, and
+    /// the one reduction-based sparse kernel agrees to rounding — far
+    /// inside the fit tolerance), so requests differing only in them
+    /// share one fitted model.
     pub fn key(&self) -> String {
         format!("{}:q={}:len={}", self.lambda, self.q, self.path_length)
     }
@@ -491,7 +505,11 @@ impl ModelSpec {
         };
         let mut cfg = PathConfig::new(kind);
         cfg.length = self.path_length;
-        Ok(PathOptions::new(cfg))
+        let mut opts = PathOptions::new(cfg);
+        if self.gap_tol > 0.0 {
+            opts = opts.with_gap_tol(self.gap_tol);
+        }
+        Ok(opts)
     }
 }
 
@@ -990,6 +1008,42 @@ mod tests {
             &Json::parse(r#"{"lambda": "bh", "q": 0.05, "threads": 100000}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn gap_tol_is_a_perf_knob_not_an_identity() {
+        let a = ModelSpec::parse(&Json::parse(r#"{"lambda": "bh", "q": 0.05}"#).unwrap()).unwrap();
+        let b = ModelSpec::parse(
+            &Json::parse(r#"{"lambda": "bh", "q": 0.05, "gap_tol": 1e-9, "screen": "hybrid"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a.gap_tol, 0.0);
+        assert_eq!(b.gap_tol, 1e-9);
+        assert_eq!(b.screen, "hybrid");
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.point_key(), b.point_key());
+        // out-of-regime "tolerances" are rejected, not cached
+        for bad in [r#""gap_tol": 0.5"#, r#""gap_tol": -1e-9"#, r#""gap_tol": 1e-3"#] {
+            let line = format!(r#"{{"lambda": "bh", "q": 0.05, {bad}}}"#);
+            assert!(ModelSpec::parse(&Json::parse(&line).unwrap()).is_err(), "{bad}");
+        }
+        // a valid gap_tol flows into the path options
+        let prob = crate::data::synth::SyntheticSpec {
+            n: 10,
+            p: 4,
+            rho: 0.0,
+            design: crate::data::synth::DesignKind::Iid,
+            beta: crate::data::synth::BetaSpec::PlusMinus { k: 1, scale: 1.0 },
+            family: crate::slope::family::Family::Gaussian,
+            noise_sd: 1.0,
+            standardize: true,
+        }
+        .generate(&mut crate::rng::Pcg64::new(5));
+        let opts = b.path_options(&prob).unwrap();
+        assert_eq!(opts.gap_tol, 1e-9);
+        let default_opts = a.path_options(&prob).unwrap();
+        assert!(default_opts.gap_tol > 0.0, "library default stays in place");
     }
 
     #[test]

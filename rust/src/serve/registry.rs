@@ -122,6 +122,10 @@ pub struct DatasetEntry {
     /// every fit on this dataset shares one cache, so warm requests with
     /// stable supports adopt an existing slab instead of re-packing.
     packs: Arc<PackCache>,
+    /// Column norms `‖x_j‖` of the design, computed once on first use —
+    /// the gap-driven screens' sphere tests need them (fit-invariant, so
+    /// per-request `fit_point` streams must not re-pay the O(n·p) pass).
+    col_norms: Mutex<Option<Arc<Vec<f64>>>>,
     models: Mutex<HashMap<String, ModelSlot>>,
     points: Mutex<HashMap<String, Arc<PointState>>>,
 }
@@ -131,6 +135,19 @@ impl DatasetEntry {
     /// [`crate::slope::path::PathOptions::with_pack_cache`]).
     pub fn pack_cache(&self) -> Arc<PackCache> {
         Arc::clone(&self.packs)
+    }
+
+    /// Column norms of this dataset's design, computed lazily on first
+    /// use and shared by every later gap-driven fit (hand to
+    /// [`crate::slope::path::PathOptions::with_col_norms`]).
+    pub fn col_norms(&self, par: crate::linalg::ParConfig) -> Arc<Vec<f64>> {
+        let mut slot = self.col_norms.lock().unwrap();
+        if let Some(norms) = &*slot {
+            return Arc::clone(norms);
+        }
+        let norms: Arc<Vec<f64>> = Arc::new(self.problem.x.col_norms_with(par));
+        *slot = Some(Arc::clone(&norms));
+        norms
     }
 
     /// Cached point state for a model key, if any.
@@ -259,6 +276,7 @@ impl Registry {
             packs: Arc::new(
                 PackCache::new(MAX_PACKS_PER_DATASET).with_max_bytes(MAX_PACK_BYTES_PER_DATASET),
             ),
+            col_norms: Mutex::new(None),
             models: Mutex::new(HashMap::new()),
             points: Mutex::new(HashMap::new()),
         });
@@ -483,6 +501,17 @@ mod tests {
         let st = entry.point_state("m").unwrap();
         assert_eq!(st.sigma_max, 1.5);
         assert_eq!(st.seed.beta.len(), entry.problem.p_total());
+    }
+
+    #[test]
+    fn col_norms_are_computed_once_per_dataset() {
+        let reg = Registry::new(true);
+        let entry = reg.dataset(&spec(31)).unwrap();
+        let a = entry.col_norms(crate::linalg::ParConfig::serial());
+        let b = entry.col_norms(crate::linalg::ParConfig::serial());
+        assert!(Arc::ptr_eq(&a, &b), "second call must reuse the cached vector");
+        assert_eq!(a.len(), entry.problem.p());
+        assert!(a.iter().all(|&n| n.is_finite() && n >= 0.0));
     }
 
     #[test]

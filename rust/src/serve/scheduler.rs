@@ -142,6 +142,8 @@ pub fn choose_strategy(requested: &str, warm: bool) -> Result<Strategy, String> 
         "none" => Strategy::NoScreening,
         "strong" => Strategy::StrongSet,
         "previous" => Strategy::PreviousSet,
+        "safe" => Strategy::SafeOnly,
+        "hybrid" => Strategy::GapHybrid,
         "auto" | "" => {
             if warm {
                 Strategy::PreviousSet
@@ -151,7 +153,7 @@ pub fn choose_strategy(requested: &str, warm: bool) -> Result<Strategy, String> 
         }
         other => {
             return Err(format!(
-                "unknown screening strategy `{other}` (expected auto|none|strong|previous)"
+                "unknown screening strategy `{other}` (expected auto|none|strong|previous|safe|hybrid)"
             ))
         }
     })
@@ -224,6 +226,9 @@ mod tests {
         assert_eq!(choose_strategy("none", true).unwrap(), Strategy::NoScreening);
         assert_eq!(choose_strategy("strong", true).unwrap(), Strategy::StrongSet);
         assert_eq!(choose_strategy("previous", false).unwrap(), Strategy::PreviousSet);
+        assert_eq!(choose_strategy("safe", false).unwrap(), Strategy::SafeOnly);
+        assert_eq!(choose_strategy("hybrid", true).unwrap(), Strategy::GapHybrid);
+        assert!(choose_strategy("gap", false).is_err());
         assert!(choose_strategy("sideways", false).is_err());
     }
 }

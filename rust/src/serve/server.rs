@@ -34,11 +34,19 @@ pub struct ServerConfig {
     /// machine budget split across the worker pool, so concurrent fits
     /// never oversubscribe; a per-request `threads` field overrides it).
     pub fit_threads: usize,
+    /// Server-wide relative duality-gap tolerance for the gap-driven
+    /// screens (`safe`/`hybrid`); 0 keeps the library default. A
+    /// per-request `gap_tol` field overrides it. Like `fit_threads`, a
+    /// performance knob outside every cache identity — which is exactly
+    /// why [`Server::new`] enforces the same `(0, 1e-4]` bound the
+    /// per-request parser does: a loose "tolerance" would change cached
+    /// solutions.
+    pub gap_tol: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { threads: 0, queue: 64, cache: true, fit_threads: 0 }
+        ServerConfig { threads: 0, queue: 64, cache: true, fit_threads: 0, gap_tol: 0.0 }
     }
 }
 
@@ -49,11 +57,23 @@ pub struct Server {
     /// Request/latency metrics, served by the `stats` op.
     pub metrics: Metrics,
     shutdown: AtomicBool,
+    /// Server default for requests that leave `gap_tol` at 0.
+    gap_tol: f64,
 }
 
 impl Server {
     /// Build a server; spawns the worker pool immediately.
+    ///
+    /// Panics if `cfg.gap_tol` is outside `{0} ∪ (0, 1e-4]` — the model
+    /// cache's identity excludes `gap_tol` on the grounds that it stays
+    /// in the tolerance regime, so an out-of-regime server default must
+    /// be a startup error, not a cache poisoner.
     pub fn new(cfg: ServerConfig) -> Server {
+        assert!(
+            cfg.gap_tol == 0.0 || (cfg.gap_tol > 0.0 && cfg.gap_tol <= 1e-4),
+            "ServerConfig::gap_tol must be 0 (library default) or in (0, 1e-4], got {}",
+            cfg.gap_tol
+        );
         let mut sched = Scheduler::new(cfg.threads, cfg.queue);
         if cfg.fit_threads > 0 {
             sched.set_fit_threads(cfg.fit_threads);
@@ -63,6 +83,7 @@ impl Server {
             sched,
             metrics: Metrics::new(),
             shutdown: AtomicBool::new(false),
+            gap_tol: cfg.gap_tol,
         }
     }
 
@@ -146,11 +167,22 @@ impl Server {
             let warm_seed = entry.any_ready_seed();
             let warm = warm_seed.is_some();
             let strategy = choose_strategy(&model.screen, warm)?;
-            let opts = model
+            let mut opts = model
                 .path_options(entry.problem.as_ref())?
                 .with_strategy(strategy)
                 .with_threads(self.job_threads(model))
                 .with_pack_cache(entry.pack_cache());
+            // `path_options` already folded in a per-request gap_tol; the
+            // server default only fills the gap when the request left it
+            // unset. Gap-driven fits also share the dataset's cached
+            // column norms so the sphere tests never re-pay the O(n·p)
+            // norm pass per request.
+            if model.gap_tol == 0.0 && self.gap_tol > 0.0 {
+                opts = opts.with_gap_tol(self.gap_tol);
+            }
+            if strategy.is_gap_driven() {
+                opts = opts.with_col_norms(entry.col_norms(opts.par()));
+            }
             let prob = Arc::clone(&entry.problem);
             let fit = self.sched.run(move || {
                 let gradient = NativeGradient(prob.as_ref());
@@ -211,6 +243,11 @@ impl Server {
                 Json::nums(&fit.steps.iter().map(|s| s.dev_ratio).collect::<Vec<f64>>()),
             ),
             ("total_violations", Json::Num(fit.total_violations as f64)),
+            ("full_grad_sweeps", Json::Num(fit.total_grad_sweeps)),
+            (
+                "solver_converged",
+                Json::Bool(fit.steps.iter().all(|s| s.solver_converged)),
+            ),
             ("fit_wall_s", Json::Num(m.wall_time)),
             (
                 "stopped_early",
@@ -233,11 +270,22 @@ impl Server {
         let prior = entry.point_state(&key);
         let warm = prior.is_some();
         let strategy = choose_strategy(&model.screen, warm)?;
-        let opts = model
+        let mut opts = model
             .path_options(entry.problem.as_ref())?
             .with_strategy(strategy)
             .with_threads(self.job_threads(model))
             .with_pack_cache(entry.pack_cache());
+        // Same precedence as the path-fit site: per-request gap_tol was
+        // applied by `path_options`; the server default fills unset
+        // requests, and gap-driven point fits reuse the dataset's cached
+        // column norms (the per-request fit_point stream is exactly the
+        // case where re-sweeping norms per call would cancel the win).
+        if model.gap_tol == 0.0 && self.gap_tol > 0.0 {
+            opts = opts.with_gap_tol(self.gap_tol);
+        }
+        if strategy.is_gap_driven() {
+            opts = opts.with_col_norms(entry.col_norms(opts.par()));
+        }
         let prob = Arc::clone(&entry.problem);
         let (point, sigma_max) = self.sched.run(move || {
             let gradient = NativeGradient(prob.as_ref());
@@ -279,6 +327,15 @@ impl Server {
             ("n_fitted", Json::Num(point.n_fitted as f64)),
             ("violations", Json::Num(point.violations as f64)),
             ("solver_iterations", Json::Num(point.solver_iterations as f64)),
+            ("solver_converged", Json::Bool(point.solver_converged)),
+            ("full_grad_sweeps", Json::Num(point.full_grad_sweeps)),
+            (
+                "gap",
+                match point.gap {
+                    Some(g) => Json::Num(g),
+                    None => Json::Null,
+                },
+            ),
             ("deviance", Json::Num(point.deviance)),
             ("dev_ratio", Json::Num(point.dev_ratio)),
             ("wall_s", Json::Num(point.wall_time)),
@@ -795,6 +852,7 @@ mod tests {
             queue: 8,
             cache: true,
             fit_threads: 3,
+            ..Default::default()
         });
         let stats = parse_ok(&srv.handle_line(r#"{"id": 1, "op": "stats"}"#));
         let ft = stats
@@ -818,6 +876,57 @@ mod tests {
             ],
         );
         parse_ok(&srv.handle_line(&line));
+    }
+
+    #[test]
+    fn hybrid_screen_and_gap_tol_share_the_model_cache() {
+        // `screen: hybrid` + `gap_tol` are performance knobs: the fitted
+        // model they produce is interchangeable with the strong-rule one,
+        // so a follow-up request differing only in them must be a cache
+        // hit, not a refit.
+        let srv = server();
+        let req = |id: u64, extra: Vec<(&'static str, Json)>| {
+            let mut fields = vec![
+                ("dataset", protocol::synth_dataset_json(25, 40, 3, 0.1, "gaussian", 91)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(6.0)),
+            ];
+            fields.extend(extra);
+            protocol::request_line(id, "fit_path", fields)
+        };
+        let first = parse_ok(&srv.handle_line(&req(
+            1,
+            vec![
+                ("screen", Json::Str("hybrid".to_string())),
+                ("gap_tol", Json::Num(1e-9)),
+            ],
+        )));
+        assert_eq!(
+            first.field("strategy").unwrap().as_str(),
+            Some("hybrid"),
+            "explicit hybrid screen must be honored"
+        );
+        assert_eq!(first.field("source").unwrap().as_str(), Some("fit"));
+        let second =
+            parse_ok(&srv.handle_line(&req(2, vec![("screen", Json::Str("strong".to_string()))])));
+        assert_eq!(second.field("source").unwrap().as_str(), Some("cache"));
+        // same fitted grid either way
+        assert_eq!(
+            first.field("steps").unwrap().as_usize(),
+            second.field("steps").unwrap().as_usize()
+        );
+        // a safe-only fit also goes through end to end
+        let third = parse_ok(&srv.handle_line(&protocol::request_line(
+            3,
+            "fit_path",
+            vec![
+                ("dataset", protocol::synth_dataset_json(25, 40, 3, 0.1, "gaussian", 92)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(5.0)),
+                ("screen", Json::Str("safe".to_string())),
+            ],
+        )));
+        assert_eq!(third.field("total_violations").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -1,0 +1,449 @@
+//! Fenchel duality for the SLOPE problem `min_β f(Xβ) + J(β; λ)`.
+//!
+//! The dual is `max_θ D(θ) = −f*(−θ)` subject to `Xᵀθ` lying in the
+//! sorted-ℓ1 dual unit ball — the cumulative-sum feasibility condition
+//! `cumsum(|Xᵀθ|↓ − λ) ≤ 0` of Theorem 1 (the same test
+//! [`crate::slope::subdiff::kkt_infeasibility`] applies to a gradient).
+//! Any primal candidate β and any feasible θ satisfy the weak-duality
+//! inequality `P(β) ≥ D(θ)`, so `gap = P(β) − D(θ)` is a *certificate*:
+//! `gap ≤ ε` proves β is within ε of optimal in objective value. At the
+//! optimum the unique dual solution is `θ* = −h*`, the negated working
+//! residual, which is why a near-optimal β yields a near-optimal dual
+//! point by simply rescaling `−h` into feasibility
+//! ([`dual_feasible_scale`]).
+//!
+//! The solver uses the gap two ways (DESIGN.md §10):
+//!
+//! * **certified stopping** — [`crate::slope::fista`]'s `gap_tol_abs`
+//!   mode replaces the displacement heuristic with `gap ≤ tol`;
+//! * **safe screening** — the gap bounds the distance from θ to θ*
+//!   (`‖θ − θ*‖ ≤ √(2·L·gap)` for an `L`-smooth loss), which powers the
+//!   Elvira–Herzet-style sphere tests in [`crate::slope::safe`].
+
+use crate::slope::family::Family;
+
+/// Outcome of a duality-gap evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct GapResult {
+    /// `primal − dual_obj`. Nonnegative up to rounding (weak duality);
+    /// consumers clamp at zero before taking square roots.
+    pub gap: f64,
+    /// Primal objective `f(β) + J(β; λ)` at the candidate.
+    pub primal: f64,
+    /// Dual objective `D(θ) = −f*(−θ)` of the scaled dual point.
+    pub dual_obj: f64,
+    /// The feasibility scaling `s ≥ 1` with `θ = −h/s`.
+    pub scale: f64,
+}
+
+/// Smallest `s ≥ 1` making `θ = −h/s` dual-feasible:
+/// `s = max(1, max_k cumsum(|Xᵀh|↓)_k / cumsum(λ)_k)` — the σ_max
+/// computation of §3.1.2 specialized to the current residual.
+///
+/// `mags_desc` must hold `|Xᵀh|` sorted descending; `lambda` is the
+/// matching non-increasing (σ-scaled) penalty vector with
+/// `lambda.len() >= mags_desc.len()`. When a prefix of `λ` sums to zero
+/// while the magnitudes do not, no finite scaling is feasible and the
+/// scale is `+∞` (θ = 0, which is always feasible). A NaN magnitude
+/// (diverged solve) also returns `+∞` — an explicit check, because
+/// `f64::max` would silently discard the NaN and certify a scale of 1 —
+/// so a bad gradient degrades to the trivial dual point, never to a
+/// bogus certificate.
+pub fn dual_feasible_scale(mags_desc: &[f64], lambda: &[f64]) -> f64 {
+    debug_assert!(
+        mags_desc.windows(2).all(|w| !(w[0] < w[1])),
+        "mags must be sorted descending"
+    );
+    debug_assert!(lambda.len() >= mags_desc.len());
+    let mut acc_m = 0.0f64;
+    let mut acc_l = 0.0f64;
+    let mut s = 1.0f64;
+    for (m, l) in mags_desc.iter().zip(lambda) {
+        acc_m += m;
+        acc_l += l;
+        if acc_m.is_nan() {
+            return f64::INFINITY;
+        }
+        if acc_l > 0.0 {
+            s = s.max(acc_m / acc_l);
+        } else if acc_m > 0.0 {
+            return f64::INFINITY;
+        }
+    }
+    s
+}
+
+/// `x ln x`, continuously extended by 0 at `x = 0`.
+#[inline]
+fn xlogx(x: f64) -> f64 {
+    if x > 0.0 {
+        x * x.ln()
+    } else {
+        0.0
+    }
+}
+
+/// Dual objective `D(θ) = −f*(−θ)` of the scaled dual point `θ = −h/s`,
+/// where `h` is the working residual at the primal candidate
+/// (`∇f(β) = Xᵀh`) and `s ≥ 1` the feasibility scaling.
+///
+/// Per family (conjugates of the per-observation losses in `η`):
+///
+/// * Gaussian — `f*(u) = ⟨u, y⟩ + ½‖u‖²`, so `D = ⟨y, θ⟩ − ½‖θ‖²`
+///   (the classic gap-safe dual of the residual).
+/// * Binomial — with `v = y − θ ∈ [0, 1]`,
+///   `D = −Σ [v ln v + (1−v) ln(1−v)]` (binary entropy). `θ = −h/s`
+///   puts `v` on the segment between `y` and `sigmoid(η)`, so the
+///   domain constraint holds for every `s ≥ 1`.
+/// * Poisson — with `v = y − θ ≥ 0`, `D = Σ [v − v ln v]`.
+/// * Multinomial — with `q = onehot(y) − θ` per observation (a convex
+///   combination of the one-hot label and the softmax probabilities,
+///   hence in the simplex), `D = −Σ q ln q`.
+///
+/// An infinite `s` yields `θ = 0` — always feasible, giving the trivial
+/// dual value.
+pub fn dual_objective(family: Family, h: &[f64], y: &[f64], scale: f64) -> f64 {
+    let inv = if scale.is_finite() { 1.0 / scale } else { 0.0 };
+    match family {
+        Family::Gaussian => {
+            let mut dot = 0.0;
+            let mut sq = 0.0;
+            for (hi, yi) in h.iter().zip(y) {
+                let t = -hi * inv;
+                dot += yi * t;
+                sq += t * t;
+            }
+            dot - 0.5 * sq
+        }
+        Family::Binomial => {
+            let mut d = 0.0;
+            for (hi, yi) in h.iter().zip(y) {
+                // v = y − θ = y + h/s; clamp is a pure rounding guard —
+                // mathematically v ∈ [min(y, σ(η)), max(y, σ(η))] ⊆ [0,1].
+                let v = (yi + hi * inv).clamp(0.0, 1.0);
+                d -= xlogx(v) + xlogx(1.0 - v);
+            }
+            d
+        }
+        Family::Poisson => {
+            let mut d = 0.0;
+            for (hi, yi) in h.iter().zip(y) {
+                // v = y + h/s = y(1 − 1/s) + μ/s ≥ 0.
+                let v = (yi + hi * inv).max(0.0);
+                d += v - xlogx(v);
+            }
+            d
+        }
+        Family::Multinomial { classes } => {
+            let n = y.len();
+            debug_assert_eq!(h.len(), n * classes);
+            let mut d = 0.0;
+            for i in 0..n {
+                let yi = y[i] as usize;
+                for l in 0..classes {
+                    let ind = if l == yi { 1.0 } else { 0.0 };
+                    let q = (ind + h[l * n + i] * inv).clamp(0.0, 1.0);
+                    d -= xlogx(q);
+                }
+            }
+            d
+        }
+    }
+}
+
+/// Duality gap of a primal candidate from its cached solver state: `h`
+/// is the working residual at β, `loss = f(β)`, `penalty = J(β; λ)`
+/// (σ already folded into `lambda`), and `grad_mags_desc` holds
+/// `|Xᵀh|` sorted descending over the coordinates the problem is posed
+/// on (all `p·m` for the full problem, the reduced set for a reduced
+/// solve — with the matching `lambda` prefix). No design product is
+/// paid here: the caller already owns the gradient.
+pub fn duality_gap(
+    family: Family,
+    y: &[f64],
+    h: &[f64],
+    loss: f64,
+    penalty: f64,
+    grad_mags_desc: &[f64],
+    lambda: &[f64],
+) -> GapResult {
+    let scale = dual_feasible_scale(grad_mags_desc, lambda);
+    let dual_obj = dual_objective(family, h, y, scale);
+    let primal = loss + penalty;
+    GapResult { gap: primal - dual_obj, primal, dual_obj, scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{ensure, forall, gen, Config};
+    use crate::linalg::ops::abs_sorted_desc;
+    use crate::linalg::{Design, Mat, ParConfig};
+    use crate::rng::Pcg64;
+    use crate::slope::family::Problem;
+    use crate::slope::fista::{solve, FistaConfig, Reduced};
+    use crate::slope::lambda::bh_sequence;
+    use crate::slope::prox::prox_sorted_l1;
+    use crate::slope::sorted::sl1_norm;
+    use crate::slope::subdiff::kkt_optimal;
+
+    fn random_problem(seed: u64, n: usize, p: usize, family: Family) -> Problem {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                x.set(i, j, rng.normal());
+            }
+        }
+        x.standardize(true, true);
+        let beta_true: Vec<f64> = (0..p).map(|j| if j < 3 { 1.5 } else { 0.0 }).collect();
+        let mut eta = vec![0.0; n];
+        x.gemv(&beta_true, &mut eta);
+        let y: Vec<f64> = match family {
+            Family::Gaussian => eta.iter().map(|e| e + 0.2 * rng.normal()).collect(),
+            Family::Binomial => eta
+                .iter()
+                .map(|&e| {
+                    if rng.bernoulli(crate::slope::family::sigmoid(e)) {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                })
+                .collect(),
+            Family::Poisson => eta
+                .iter()
+                .map(|&e| rng.poisson(e.clamp(-2.0, 2.0).exp()) as f64)
+                .collect(),
+            Family::Multinomial { classes } => (0..n).map(|i| (i % classes) as f64).collect(),
+        };
+        Problem::new(Design::Dense(x), y, family)
+    }
+
+    /// Gap of a full-problem candidate, gradients through the threaded
+    /// backend.
+    fn full_gap(prob: &Problem, beta: &[f64], lam: &[f64], threads: usize) -> GapResult {
+        let par = ParConfig::with_threads(threads);
+        let n = prob.n();
+        let m = prob.family.n_classes();
+        let mut eta = vec![0.0; n * m];
+        prob.eta_with(beta, &mut eta, par);
+        let mut h = vec![0.0; n * m];
+        let loss = prob.family.h_loss(&eta, &prob.y, &mut h);
+        let mut grad = vec![0.0; prob.p_total()];
+        prob.gradient_from_h_with(&h, &mut grad, par);
+        let mags = abs_sorted_desc(&grad);
+        duality_gap(prob.family, &prob.y, &h, loss, sl1_norm(beta, lam), &mags, lam)
+    }
+
+    #[test]
+    fn scale_is_at_least_one_and_enforces_feasibility() {
+        let mags = [3.0, 1.0, 0.5];
+        let lam = [1.0, 0.8, 0.6];
+        let s = dual_feasible_scale(&mags, &lam);
+        assert!(s >= 1.0);
+        // after scaling, every prefix is feasible
+        let mut acc = 0.0;
+        let mut lacc = 0.0;
+        for (m, l) in mags.iter().zip(&lam) {
+            acc += m / s;
+            lacc += l;
+            assert!(acc <= lacc + 1e-12, "prefix infeasible after scaling");
+        }
+        // already-feasible magnitudes scale by exactly 1
+        assert_eq!(dual_feasible_scale(&[0.5, 0.1], &[1.0, 0.9]), 1.0);
+        // zero penalty with mass has no finite feasible scaling
+        assert!(dual_feasible_scale(&[1.0], &[0.0]).is_infinite());
+        assert_eq!(dual_feasible_scale(&[], &[]), 1.0);
+        // NaN magnitudes must not certify a finite scale (f64::max would
+        // silently discard them)
+        assert!(dual_feasible_scale(&[f64::NAN, 1.0], &[1.0, 0.5]).is_infinite());
+    }
+
+    #[test]
+    fn gaussian_dual_matches_residual_formula() {
+        // D(θ) = ⟨y, θ⟩ − ½‖θ‖² with θ = r/s, r = y − η = −h.
+        let y = [1.0, -2.0, 0.5];
+        let h = [-0.4, 0.3, 1.0]; // h = η − y, so r = −h
+        let s = 2.0;
+        let d = dual_objective(Family::Gaussian, &h, &y, s);
+        let r = [0.4, -0.3, -1.0];
+        let want: f64 = y.iter().zip(&r).map(|(yi, ri)| yi * ri / s).sum::<f64>()
+            - 0.5 * r.iter().map(|ri| (ri / s) * (ri / s)).sum::<f64>();
+        assert!((d - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gap_vanishes_at_the_prox_fixed_point() {
+        // X = I: the SLOPE solution is prox(y; λ) exactly, so the gap at
+        // it must be numerically zero for the Gaussian family.
+        let n = 6;
+        let mut x = Mat::zeros(n, n);
+        for i in 0..n {
+            x.set(i, i, 1.0);
+        }
+        let y = vec![3.0, -2.0, 1.5, 0.3, -0.2, 0.05];
+        let prob = Problem::new(Design::Dense(x), y.clone(), Family::Gaussian);
+        let lam: Vec<f64> = bh_sequence(n, 0.2).iter().map(|l| l * 0.4).collect();
+        let beta = prox_sorted_l1(&y, &lam);
+        let g = full_gap(&prob, &beta, &lam, 1);
+        assert!(g.gap.abs() < 1e-10, "gap at the exact solution: {}", g.gap);
+        assert!(g.scale >= 1.0);
+    }
+
+    #[test]
+    fn null_model_gap_is_zero_for_binomial_and_multinomial() {
+        // At β = 0 with σ = σ_max scaling folded in so that 0 is optimal,
+        // primal = dual for the entropy families (checked at the natural
+        // feasible scaling of the zero-point residual).
+        for family in [Family::Binomial, Family::Multinomial { classes: 3 }] {
+            let prob = random_problem(5, 40, 6, family);
+            let pt = prob.p_total();
+            let (loss, grad) = prob.loss_grad(&vec![0.0; pt]);
+            let lam_base = bh_sequence(pt, 0.1);
+            let smax = crate::slope::lambda::sigma_max(&grad, &lam_base);
+            let lam: Vec<f64> = lam_base.iter().map(|l| l * smax).collect();
+            let n = prob.n();
+            let m = prob.family.n_classes();
+            let mut h = vec![0.0; n * m];
+            prob.family.h_loss(&vec![0.0; n * m], &prob.y, &mut h);
+            let mags = abs_sorted_desc(&grad);
+            let g = duality_gap(prob.family, &prob.y, &h, loss, 0.0, &mags, &lam);
+            // σ_max makes −∇f(0) exactly feasible: s = 1 and the dual of
+            // θ = −h(0) equals the null loss.
+            assert!(
+                (g.scale - 1.0).abs() < 1e-9,
+                "{}: scale {}",
+                prob.family.name(),
+                g.scale
+            );
+            assert!(
+                g.gap.abs() < 1e-8 * loss.abs().max(1.0),
+                "{}: null gap {}",
+                prob.family.name(),
+                g.gap
+            );
+        }
+    }
+
+    #[test]
+    fn dual_gap_is_nonnegative_and_certifies_kkt() {
+        // The satellite proptest: across families and thread budgets,
+        // (a) weak duality holds at arbitrary candidates, and (b) a
+        // gap-certified solve satisfies the Theorem-1 KKT conditions at a
+        // tolerance matching the certificate.
+        let families = [
+            Family::Gaussian,
+            Family::Binomial,
+            Family::Poisson,
+            Family::Multinomial { classes: 3 },
+        ];
+        let threads = [1usize, 2, 7];
+        let mut case = 0u64;
+        for &family in &families {
+            for &t in &threads {
+                case += 1;
+                forall(
+                    Config { cases: 12, seed: 0xd0a1 + case },
+                    |rng| {
+                        let n = 15 + rng.below(25) as usize;
+                        let p = 4 + rng.below(10) as usize;
+                        let seed = rng.below(1 << 30);
+                        let beta: Vec<f64> = (0..p * family.n_classes())
+                            .map(|_| if rng.bernoulli(0.4) { 0.4 * rng.normal() } else { 0.0 })
+                            .collect();
+                        (n, p, seed, beta)
+                    },
+                    |(n, p, seed, beta)| {
+                        let prob = random_problem(*seed, *n, *p, family);
+                        let pt = prob.p_total();
+                        let lam: Vec<f64> =
+                            bh_sequence(pt, 0.15).iter().map(|l| l * 0.1).collect();
+                        // (a) nonnegativity at an arbitrary candidate
+                        let g = full_gap(&prob, beta, &lam, t);
+                        ensure(
+                            g.gap >= -1e-8 * g.primal.abs().max(1.0),
+                            format!("negative gap {} (primal {})", g.gap, g.primal),
+                        )?;
+                        ensure(g.scale >= 1.0, format!("scale {} < 1", g.scale))?;
+                        // (b) gap-certified solve ⇒ KKT at matching tolerance
+                        let red = Reduced::new(&prob, (0..pt).collect())
+                            .with_par(crate::linalg::ParConfig::with_threads(t));
+                        let gap_tol = 1e-9;
+                        let cfg = FistaConfig {
+                            max_iter: 30_000,
+                            tol: 1e-8,
+                            kkt_tol_abs: None,
+                            gap_tol_abs: Some(gap_tol),
+                        };
+                        let res = solve(&red, &lam, None, &cfg);
+                        if !res.converged {
+                            return Ok(()); // surfaced, not certified — nothing to check
+                        }
+                        let gap = res.gap.expect("gap mode records the certificate");
+                        ensure(gap <= gap_tol, format!("certified gap {gap} > {gap_tol}"))?;
+                        ensure(gap >= -1e-12, format!("certified gap negative: {gap}"))?;
+                        let (_, grad) = prob.loss_grad(&res.beta);
+                        ensure(
+                            kkt_optimal(&res.beta, &grad, &lam, 1e-4 * (1.0 + lam[0])),
+                            "gap-certified point fails the KKT check",
+                        )
+                    },
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gap_decreases_toward_the_solution() {
+        // Along a crude homotopy from 0 to the solution, the gap at the
+        // endpoint is (weakly) the smallest — a smoke check that the gap
+        // actually tracks optimality for every family.
+        for family in [Family::Gaussian, Family::Binomial, Family::Poisson] {
+            let prob = random_problem(11, 50, 8, family);
+            let lam: Vec<f64> = bh_sequence(8, 0.1).iter().map(|l| l * 0.05).collect();
+            let red = Reduced::new(&prob, (0..8).collect());
+            let cfg = FistaConfig {
+                max_iter: 30_000,
+                tol: 1e-10,
+                kkt_tol_abs: None,
+                gap_tol_abs: Some(1e-10),
+            };
+            let res = solve(&red, &lam, None, &cfg);
+            let g_end = full_gap(&prob, &res.beta, &lam, 1);
+            let g_zero = full_gap(&prob, &vec![0.0; 8], &lam, 1);
+            assert!(g_end.gap <= g_zero.gap + 1e-9, "{}", prob.family.name());
+        }
+    }
+
+    #[test]
+    fn nan_gradient_never_certifies() {
+        let y = [1.0, 0.0];
+        let h = [f64::NAN, 0.5];
+        let mags = abs_sorted_desc(&h);
+        let g = duality_gap(Family::Gaussian, &y, &h, 1.0, 0.0, &mags, &[1.0, 0.5]);
+        assert!(!(g.gap <= 1e100), "NaN gap must fail every tolerance check");
+    }
+
+    #[test]
+    fn lambda_gen_gap_nonneg_for_generated_sequences() {
+        // Generated λ sequences + tied candidates (the prox's edge diet).
+        forall(
+            Config { cases: 60, seed: 0x9a77 },
+            |rng| {
+                let v = gen::tied_vec(rng, 2, 12);
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, lam)
+            },
+            |(v, lam)| {
+                let p = v.len();
+                let prob = random_problem(17, 20, p, Family::Gaussian);
+                let g = full_gap(&prob, v, lam, 1);
+                ensure(
+                    g.gap >= -1e-8 * g.primal.abs().max(1.0),
+                    format!("negative gap {}", g.gap),
+                )
+            },
+        );
+    }
+}

@@ -32,11 +32,20 @@ pub struct FistaConfig {
     /// hold. This is what makes the path's violation counts (Fig. 3)
     /// solver-noise free.
     pub kkt_tol_abs: Option<f64>,
+    /// Gap-certified stopping: when set, hitting the displacement
+    /// criterion additionally evaluates the duality gap of the *reduced*
+    /// problem at the iterate (see [`crate::slope::dual`]) and the solve
+    /// only converges once `gap ≤ gap_tol_abs` — and, if `kkt_tol_abs`
+    /// is also set, the KKT certificate holds too. The η cache makes
+    /// this cost exactly what the KKT mode pays: one reduced `X_Eᵀh`
+    /// product per check, no extra design product for η. The certified
+    /// gap is reported in [`FistaResult::gap`].
+    pub gap_tol_abs: Option<f64>,
 }
 
 impl Default for FistaConfig {
     fn default() -> Self {
-        Self { max_iter: 10_000, tol: 1e-7, kkt_tol_abs: None }
+        Self { max_iter: 10_000, tol: 1e-7, kkt_tol_abs: None, gap_tol_abs: None }
     }
 }
 
@@ -57,6 +66,10 @@ pub struct FistaResult {
     /// a direct kernel product — not the extrapolation cache). The path
     /// driver's KKT sweep starts from this instead of recomputing it.
     pub eta: Vec<f64>,
+    /// Most recently evaluated duality gap of the reduced problem
+    /// (`None` unless the gap-certified mode ran a check). On a
+    /// converged gap-mode solve this is the certificate itself.
+    pub gap: Option<f64>,
 }
 
 /// The reduced view of a [`Problem`] restricted to coefficient set `E`:
@@ -370,6 +383,9 @@ pub fn solve(
             iterations: 0,
             converged: true,
             eta,
+            // An empty reduced problem has a single feasible point — its
+            // own optimum — so the certified gap is identically zero.
+            gap: cfg.gap_tol_abs.map(|_| 0.0),
         };
     }
 
@@ -416,6 +432,10 @@ pub fn solve(
     let mut iterations = 0;
     let mut converged = false;
     let mut tol_eff = cfg.tol;
+    let mut last_gap: Option<f64> = None;
+    // Sort scratch for the gap certificate's |∇| magnitudes — allocated
+    // once, so the certificate checks stay off the allocator too.
+    let mut mag_buf: Vec<f64> = Vec::with_capacity(if cfg.gap_tol_abs.is_some() { k } else { 0 });
 
     for iter in 0..cfg.max_iter {
         iterations = iter + 1;
@@ -489,26 +509,45 @@ pub fn solve(
         t = t_next;
 
         if disp <= tol_eff * scale {
-            match cfg.kkt_tol_abs {
-                None => {
-                    converged = true;
-                    break;
-                }
-                Some(kkt_tol) => {
-                    // Verify true stationarity at beta (not z). β = cand
-                    // here, so `h` — just computed from the fresh η(cand)
-                    // in the line search — already holds the working
-                    // residual at β; no extra η product is needed.
-                    reduced.gradient(&h, &mut grad, &mut scratch);
-                    if crate::slope::subdiff::kkt_optimal(&beta, &grad, lam, kkt_tol) {
-                        converged = true;
-                        break;
-                    }
-                    // Not there yet: demand more progress before checking
-                    // again (bounded so we terminate at max_iter).
-                    tol_eff = (tol_eff * 0.25).max(1e-16);
+            if cfg.kkt_tol_abs.is_none() && cfg.gap_tol_abs.is_none() {
+                converged = true;
+                break;
+            }
+            // Verify true certificates at beta (not z). β = cand here, so
+            // `h` — just computed from the fresh η(cand) in the line
+            // search — already holds the working residual at β; only the
+            // reduced X_Eᵀh product is paid, no extra η product.
+            reduced.gradient(&h, &mut grad, &mut scratch);
+            let mut certified = true;
+            if let Some(gap_tol) = cfg.gap_tol_abs {
+                mag_buf.clear();
+                mag_buf.extend(grad.iter().map(|g| g.abs()));
+                mag_buf.sort_unstable_by(|a, b| b.total_cmp(a));
+                let gr = crate::slope::dual::duality_gap(
+                    prob.family,
+                    &prob.y,
+                    &h,
+                    loss_cand,
+                    sl1_norm(&beta, lam),
+                    &mag_buf,
+                    lam,
+                );
+                last_gap = Some(gr.gap);
+                certified &= gr.gap <= gap_tol;
+            }
+            if certified {
+                if let Some(kkt_tol) = cfg.kkt_tol_abs {
+                    certified &=
+                        crate::slope::subdiff::kkt_optimal(&beta, &grad, lam, kkt_tol);
                 }
             }
+            if certified {
+                converged = true;
+                break;
+            }
+            // Not there yet: demand more progress before checking again
+            // (bounded so we terminate at max_iter).
+            tol_eff = (tol_eff * 0.25).max(1e-16);
         }
         // Mild step-size recovery so one conservative backtrack does not
         // slow the whole path.
@@ -521,7 +560,7 @@ pub fn solve(
     // recomputation is needed.
     let loss = prob.family.h_loss(&eta_beta, &prob.y, &mut h);
     let objective = loss + sl1_norm(&beta, lam);
-    FistaResult { beta, loss, objective, iterations, converged, eta: eta_beta }
+    FistaResult { beta, loss, objective, iterations, converged, eta: eta_beta, gap: last_gap }
 }
 
 #[cfg(test)]
@@ -568,7 +607,7 @@ mod tests {
         let prob = random_problem(1, 40, 12, Family::Gaussian);
         let lam: Vec<f64> = bh_sequence(12, 0.1).iter().map(|l| l * 0.05).collect();
         let red = full_reduced(&prob);
-        let res = solve(&red, &lam, None, &FistaConfig { max_iter: 20_000, tol: 1e-10, kkt_tol_abs: None });
+        let res = solve(&red, &lam, None, &FistaConfig { max_iter: 20_000, tol: 1e-10, ..Default::default() });
         assert!(res.converged);
         let (_, grad) = prob.loss_grad(&res.beta);
         assert!(
@@ -583,9 +622,67 @@ mod tests {
         let prob = random_problem(2, 60, 10, Family::Binomial);
         let lam: Vec<f64> = bh_sequence(10, 0.1).iter().map(|l| l * 0.02).collect();
         let red = full_reduced(&prob);
-        let res = solve(&red, &lam, None, &FistaConfig { max_iter: 30_000, tol: 1e-10, kkt_tol_abs: None });
+        let res = solve(&red, &lam, None, &FistaConfig { max_iter: 30_000, tol: 1e-10, ..Default::default() });
         let (_, grad) = prob.loss_grad(&res.beta);
         assert!(kkt_optimal(&res.beta, &grad, &lam, 1e-5));
+    }
+
+    #[test]
+    fn gap_certified_mode_converges_and_matches_kkt_mode() {
+        let prob = random_problem(21, 40, 12, Family::Gaussian);
+        let lam: Vec<f64> = bh_sequence(12, 0.1).iter().map(|l| l * 0.05).collect();
+        let red = full_reduced(&prob);
+        let gap_cfg = FistaConfig {
+            max_iter: 30_000,
+            tol: 1e-9,
+            kkt_tol_abs: None,
+            gap_tol_abs: Some(1e-10),
+        };
+        let gap_res = solve(&red, &lam, None, &gap_cfg);
+        assert!(gap_res.converged, "gap mode must converge");
+        let gap = gap_res.gap.expect("gap mode records its certificate");
+        assert!(gap <= 1e-10 && gap >= -1e-12, "certified gap out of range: {gap}");
+        let kkt_cfg = FistaConfig {
+            max_iter: 30_000,
+            tol: 1e-9,
+            kkt_tol_abs: Some(1e-8),
+            gap_tol_abs: None,
+        };
+        let kkt_res = solve(&red, &lam, None, &kkt_cfg);
+        assert!(kkt_res.gap.is_none(), "kkt mode must not report a gap");
+        for (a, b) in gap_res.beta.iter().zip(&kkt_res.beta) {
+            assert!((a - b).abs() < 1e-5, "stopping modes disagree: {a} vs {b}");
+        }
+        // both certificates together are strictly tighter than either
+        let both_cfg = FistaConfig {
+            max_iter: 30_000,
+            tol: 1e-9,
+            kkt_tol_abs: Some(1e-8),
+            gap_tol_abs: Some(1e-10),
+        };
+        let both = solve(&red, &lam, None, &both_cfg);
+        assert!(both.converged);
+        assert!(both.gap.unwrap() <= 1e-10);
+        let (_, g) = prob.loss_grad(&both.beta);
+        assert!(kkt_optimal(&both.beta, &g, &lam, 1e-8));
+    }
+
+    #[test]
+    fn unreachable_gap_target_surfaces_as_nonconverged() {
+        // A gap tolerance below the numeric floor must exhaust max_iter
+        // and report converged = false, never a bogus certificate.
+        let prob = random_problem(22, 30, 8, Family::Gaussian);
+        let lam: Vec<f64> = bh_sequence(8, 0.1).iter().map(|l| l * 0.05).collect();
+        let red = full_reduced(&prob);
+        let cfg = FistaConfig {
+            max_iter: 200,
+            tol: 1e-9,
+            kkt_tol_abs: None,
+            gap_tol_abs: Some(-1.0), // below weak duality: unreachable
+        };
+        let res = solve(&red, &lam, None, &cfg);
+        assert!(!res.converged);
+        assert_eq!(res.iterations, 200);
     }
 
     #[test]
@@ -606,7 +703,7 @@ mod tests {
             &full_reduced(&prob),
             &lam,
             None,
-            &FistaConfig { max_iter: 30_000, tol: 1e-11, kkt_tol_abs: None },
+            &FistaConfig { max_iter: 30_000, tol: 1e-11, ..Default::default() },
         );
         let support: Vec<usize> = full
             .beta
@@ -617,7 +714,7 @@ mod tests {
             .collect();
         assert!(!support.is_empty() && support.len() < 10, "need partial support");
         let red = Reduced::new(&prob, support.clone());
-        let sub = solve(&red, &lam, None, &FistaConfig { max_iter: 30_000, tol: 1e-11, kkt_tol_abs: None });
+        let sub = solve(&red, &lam, None, &FistaConfig { max_iter: 30_000, tol: 1e-11, ..Default::default() });
         let mut scattered = vec![0.0; 10];
         red.scatter(&sub.beta, &mut scattered);
         for (a, b) in scattered.iter().zip(&full.beta) {
@@ -630,8 +727,8 @@ mod tests {
         let prob = random_problem(5, 50, 15, Family::Gaussian);
         let lam: Vec<f64> = bh_sequence(15, 0.1).iter().map(|l| l * 0.1).collect();
         let red = full_reduced(&prob);
-        let cold = solve(&red, &lam, None, &FistaConfig { max_iter: 50_000, tol: 1e-9, kkt_tol_abs: None });
-        let warm = solve(&red, &lam, Some(&cold.beta), &FistaConfig { max_iter: 50_000, tol: 1e-9, kkt_tol_abs: None });
+        let cold = solve(&red, &lam, None, &FistaConfig { max_iter: 50_000, tol: 1e-9, ..Default::default() });
+        let warm = solve(&red, &lam, Some(&cold.beta), &FistaConfig { max_iter: 50_000, tol: 1e-9, ..Default::default() });
         assert!(warm.iterations <= cold.iterations);
     }
 
@@ -667,7 +764,7 @@ mod tests {
         let prob = random_problem(11, 40, 14, Family::Gaussian);
         let lam: Vec<f64> = bh_sequence(14, 0.1).iter().map(|l| l * 0.05).collect();
         let coefs: Vec<usize> = (0..14).filter(|c| c % 3 != 1).collect();
-        let cfg = FistaConfig { max_iter: 20_000, tol: 1e-9, kkt_tol_abs: None };
+        let cfg = FistaConfig { max_iter: 20_000, tol: 1e-9, ..Default::default() };
         let gather = solve(&Reduced::new(&prob, coefs.clone()), &lam, None, &cfg);
         let packed = solve(&Reduced::new(&prob, coefs.clone()).packed(), &lam, None, &cfg);
         assert_eq!(gather.iterations, packed.iterations);

@@ -12,16 +12,26 @@
 //!   strong rule (Proposition 3) and a gap-safe-style baseline (Figure 1).
 //! * [`family`] — the four GLM objectives of §3.2.3 (OLS, logistic,
 //!   Poisson, multinomial).
+//! * [`dual`] — Fenchel duality: dual-feasible points from the working
+//!   residual, per-family dual objectives, and the duality-gap
+//!   certificate the solver and the hybrid screen both run on.
+//! * [`safe`] — Elvira–Herzet-style sphere tests: *certified* per-σ
+//!   discards from a dual point and its gap, with a reference-point
+//!   bound so re-tests cost no design product.
 //! * [`fista`] — the accelerated proximal-gradient solver (the paper's
-//!   solver of record) on the *reduced* (screened) problem.
+//!   solver of record) on the *reduced* (screened) problem, with
+//!   displacement, KKT-verified and gap-certified stopping modes.
 //! * [`path`] — the regularization-path driver with the no-screening,
-//!   strong-set (Algorithm 3) and previous-set (Algorithm 4) strategies.
+//!   strong-set (Algorithm 3), previous-set (Algorithm 4), safe-only and
+//!   gap-hybrid (safe + strong working set) strategies.
 
+pub mod dual;
 pub mod family;
 pub mod fista;
 pub mod lambda;
 pub mod path;
 pub mod prox;
+pub mod safe;
 pub mod screen;
 pub mod sorted;
 pub mod subdiff;

@@ -1,8 +1,12 @@
 //! The regularization-path driver (§2.2.4, §3.1.2): fits
-//! `β̂(σ⁽¹⁾), …, β̂(σ⁽ˡ⁾)` with one of three strategies —
-//! no screening, the **strong set** algorithm (Algorithm 3) or the
-//! **previous set** algorithm (Algorithm 4) — safeguarded by KKT checks,
-//! with the paper's three early-termination rules.
+//! `β̂(σ⁽¹⁾), …, β̂(σ⁽ˡ⁾)` with one of five strategies —
+//! no screening, the **strong set** algorithm (Algorithm 3), the
+//! **previous set** algorithm (Algorithm 4) — both safeguarded by
+//! full-gradient KKT checks — or the duality-gap-driven pair:
+//! **safe-only** (certified sphere-test universe, no heuristic) and the
+//! **gap hybrid** (strong working set + safe universe + gap
+//! certificates, DESIGN.md §10), with the paper's three
+//! early-termination rules.
 //!
 //! The full-design gradient `Xᵀh` needed by the rule and the KKT checks is
 //! abstracted behind [`FullGradient`], so it can be served either natively
@@ -18,6 +22,7 @@ use crate::linalg::ParConfig;
 use crate::slope::family::{Family, Problem};
 use crate::slope::fista::{solve, FistaConfig, Reduced};
 use crate::slope::lambda::{sigma_grid, sigma_max, PathConfig};
+use crate::slope::safe::SafeScreener;
 use crate::slope::screen::{gap_safe_set, StrongWorkspace};
 use crate::slope::sorted::{support, unique_nonzero_magnitudes};
 
@@ -31,6 +36,18 @@ pub enum Strategy {
     /// Algorithm 4: `E = T(λ⁽ᵐ⁾)`, KKT-check the strong set first, then
     /// the full set.
     PreviousSet,
+    /// Certified screening only: `E` is the whole sphere-test survivor
+    /// universe (every predictor not *provably* zero at this σ — see
+    /// [`crate::slope::safe`]), solved to a duality-gap certificate. No
+    /// heuristic, hence no violations by construction; far more
+    /// conservative than the strong rule (the Fig. 1 comparison).
+    SafeOnly,
+    /// Celer-style hybrid (DESIGN.md §10): solve on the strong set to an
+    /// inner gap, certify with a global duality gap computed over the
+    /// sphere-test-shrunken safe universe, and expand by the top-K
+    /// ranked violators when the certificate fails — most σ-steps pay a
+    /// partial-universe gradient sweep instead of a full one.
+    GapHybrid,
 }
 
 impl Strategy {
@@ -40,7 +57,15 @@ impl Strategy {
             Strategy::NoScreening => "none",
             Strategy::StrongSet => "strong",
             Strategy::PreviousSet => "previous",
+            Strategy::SafeOnly => "safe",
+            Strategy::GapHybrid => "hybrid",
         }
+    }
+
+    /// True for the strategies driven by the duality-gap certificate
+    /// (universe sweeps + gap stopping) instead of the full-p KKT sweep.
+    pub fn is_gap_driven(&self) -> bool {
+        matches!(self, Strategy::SafeOnly | Strategy::GapHybrid)
     }
 }
 
@@ -120,6 +145,20 @@ pub struct PathOptions {
     /// after the safeguard loop — warm-start fits with stable supports
     /// (the serve registry's case) skip packing entirely.
     pub pack_cache: Option<Arc<PackCache>>,
+    /// Relative duality-gap tolerance for the gap-driven strategies
+    /// ([`Strategy::GapHybrid`], [`Strategy::SafeOnly`]): a step is
+    /// accepted once `gap ≤ gap_tol · max(1, |primal|)`. Ignored by the
+    /// KKT-safeguarded strategies. Tight by default so gap-certified
+    /// fits are interchangeable with strong-rule fits to well below any
+    /// reported tolerance.
+    pub gap_tol: f64,
+    /// Precomputed column norms `‖x_j‖` for the gap-driven strategies'
+    /// sphere tests. `None` (the default) computes them per fit — fine
+    /// for paths, where one O(n·p) pass amortizes over the whole grid,
+    /// but a per-request [`fit_point`] stream should share them (the
+    /// serve registry caches one copy per dataset). Must belong to this
+    /// problem's design; a wrong-length vector is ignored.
+    pub col_norms: Option<Arc<Vec<f64>>>,
 }
 
 impl PathOptions {
@@ -134,12 +173,29 @@ impl PathOptions {
             threads: 0,
             packing: true,
             pack_cache: None,
+            gap_tol: 1e-10,
+            col_norms: None,
         }
     }
 
     /// Builder: set strategy.
     pub fn with_strategy(mut self, s: Strategy) -> Self {
         self.strategy = s;
+        self
+    }
+
+    /// Builder: set the relative duality-gap tolerance (see
+    /// [`PathOptions::gap_tol`]).
+    pub fn with_gap_tol(mut self, gap_tol: f64) -> Self {
+        assert!(gap_tol > 0.0, "gap_tol must be positive");
+        self.gap_tol = gap_tol;
+        self
+    }
+
+    /// Builder: share precomputed design column norms with the
+    /// gap-driven strategies (see [`PathOptions::col_norms`]).
+    pub fn with_col_norms(mut self, col_norms: Arc<Vec<f64>>) -> Self {
+        self.col_norms = Some(col_norms);
         self
     }
 
@@ -200,6 +256,22 @@ pub struct StepInfo {
     pub t_solve: f64,
     /// Seconds spent in full-gradient + KKT checks.
     pub t_kkt: f64,
+    /// Whether every inner solve of this step met its certificate before
+    /// `max_iter`. A `false` here means the step's violation count may
+    /// include solver noise — surfaced so a non-converged inner solve
+    /// can never masquerade as a screening-rule violation.
+    pub solver_converged: bool,
+    /// Full-design-equivalent gradient sweeps this step paid: each
+    /// safeguard round's full `Xᵀh` counts 1.0; the gap-driven
+    /// strategies' universe sweeps count `|U| / p` (step 0 records the
+    /// β = 0 bootstrap sweep).
+    pub full_grad_sweeps: f64,
+    /// Safe-universe size at the end of the step (gap-driven strategies
+    /// only).
+    pub n_universe: Option<usize>,
+    /// Certified duality gap at the accepted solution (gap-driven
+    /// strategies only).
+    pub gap: Option<f64>,
 }
 
 /// Result of a full path fit.
@@ -224,8 +296,15 @@ pub struct PathFit {
     pub wall_time: f64,
     /// Full-design gradient at the final solution (parallel to
     /// `final_beta`); the warm-start state [`PathFit::seed`] hands to the
-    /// next fit.
+    /// next fit. Exact for every strategy — gap-driven fits refresh it
+    /// with one closing full sweep when the last step swept only a
+    /// partial universe.
     pub final_grad: Vec<f64>,
+    /// Total full-design-equivalent gradient sweeps across the fit
+    /// (Σ [`StepInfo::full_grad_sweeps`], plus the closing refresh when
+    /// a gap-driven fit needed one) — the quantity the `path_speed`
+    /// screening-policy gate compares.
+    pub total_grad_sweeps: f64,
 }
 
 impl PathFit {
@@ -291,6 +370,14 @@ pub struct PointFit {
     pub dev_ratio: f64,
     /// Wall time in seconds.
     pub wall_time: f64,
+    /// Whether every inner solve met its certificate (see
+    /// [`StepInfo::solver_converged`]).
+    pub solver_converged: bool,
+    /// Full-design-equivalent gradient sweeps paid (see
+    /// [`StepInfo::full_grad_sweeps`]).
+    pub full_grad_sweeps: f64,
+    /// Certified duality gap at the solution (gap-driven strategies only).
+    pub gap: Option<f64>,
 }
 
 impl PointFit {
@@ -376,25 +463,79 @@ pub fn fit_point(
     }
     let mut screen_ws = StrongWorkspace::default();
     let prev_support = support(&beta_full);
-    let (rule_set, n_screened_rule, e_set) =
-        screening_sets(opts.strategy, pt, &grad, &lam_prev, &lam_cur, &prev_support, &mut screen_ws);
-
-    let out = solve_with_safeguard(
-        prob,
-        opts,
-        evaluator,
-        &lambda_base,
-        sigma,
-        &lam_cur,
-        &rule_set,
-        &prev_support,
-        e_set,
-        &mut beta_full,
-        &mut eta,
-        &mut h,
-        &mut grad,
-        &mut screen_ws,
-    );
+    let (out, rule_set, n_screened_rule) = if opts.strategy.is_gap_driven() {
+        // Establish the dual state at the seed: η/h/loss at `seed.beta`,
+        // with `seed.grad` as the (exact) sphere reference. For warm
+        // seeds this is what turns per-step safe screening into
+        // per-request safe screening.
+        prob.eta_with(&beta_full, &mut eta, opts.par());
+        let seed_loss = prob.family.h_loss(&eta, &prob.y, &mut h);
+        let mut gs = GapState::new(prob, opts, &h, &grad, seed_loss);
+        let sc = gap_screening(
+            prob,
+            opts,
+            &mut gs,
+            &lam_prev,
+            &lam_cur,
+            &prev_support,
+            &beta_full,
+            &h,
+            &mut screen_ws,
+        );
+        let rule_set = sc.rule_set;
+        let n_screened_rule = rule_set.len();
+        let mut out = solve_with_gap(
+            prob,
+            opts,
+            evaluator,
+            &lambda_base,
+            sigma,
+            &lam_cur,
+            sc.e_set,
+            sc.universe,
+            sc.gap_abs,
+            &mut gs,
+            &mut beta_full,
+            &mut eta,
+            &mut h,
+            &mut grad,
+            &mut screen_ws,
+        );
+        // The returned seed's gradient must be exact over every
+        // coefficient (the next request's screening reference).
+        if !gs.grad_is_exact {
+            evaluator.full_grad_with(&beta_full, &h, &mut grad, opts.par());
+            out.sweeps += 1.0;
+        }
+        (out, rule_set, n_screened_rule)
+    } else {
+        let (rule_set, n_screened_rule, e_set) = screening_sets(
+            opts.strategy,
+            pt,
+            &grad,
+            &lam_prev,
+            &lam_cur,
+            &prev_support,
+            &mut screen_ws,
+        );
+        let out = solve_with_safeguard(
+            prob,
+            opts,
+            evaluator,
+            &lambda_base,
+            sigma,
+            &lam_cur,
+            &rule_set,
+            &prev_support,
+            e_set,
+            &mut beta_full,
+            &mut eta,
+            &mut h,
+            &mut grad,
+            &mut screen_ws,
+        );
+        (out, rule_set, n_screened_rule)
+    };
 
     let rule_cover = union_sorted(&rule_set, &prev_support);
     let violations = diff_sorted(&out.added_by_kkt, &rule_cover)
@@ -417,6 +558,9 @@ pub fn fit_point(
         deviance: dev,
         dev_ratio,
         wall_time: t_start.elapsed().as_secs_f64(),
+        solver_converged: out.converged,
+        full_grad_sweeps: out.sweeps,
+        gap: out.gap,
     }
 }
 
@@ -459,9 +603,11 @@ pub fn fit_path_seeded(
         stopped_early: None,
         wall_time: 0.0,
         final_grad: Vec::new(),
+        total_grad_sweeps: 0.0,
     };
 
-    // Step 0: β = 0 by construction of σ_max.
+    // Step 0: β = 0 by construction of σ_max. Its recorded sweep is the
+    // bootstrap full gradient `state_at_zero` just paid.
     fit.sigmas.push(sigmas_all[0]);
     fit.betas.push(Vec::new());
     fit.steps.push(StepInfo {
@@ -478,7 +624,20 @@ pub fn fit_path_seeded(
         t_screen: 0.0,
         t_solve: 0.0,
         t_kkt: 0.0,
+        solver_converged: true,
+        full_grad_sweeps: 1.0,
+        n_universe: None,
+        gap: None,
     });
+    fit.total_grad_sweeps += 1.0;
+
+    // Gap-driven strategies carry a dual state across steps: the sphere
+    // reference starts at the exact β = 0 gradient just computed.
+    let mut gap_state = if opts.strategy.is_gap_driven() {
+        Some(GapState::new(prob, opts, &h, &grad, loss0))
+    } else {
+        None
+    };
 
     let mut beta_full = vec![0.0; pt];
     // Warm start: prime the first reduced solves with a prior solution on
@@ -496,7 +655,13 @@ pub fn fit_path_seeded(
                 beta_full.copy_from_slice(&s.beta);
                 grad.copy_from_slice(&s.grad);
                 prob.eta_with(&beta_full, &mut eta, par);
-                prob.family.h_loss(&eta, &prob.y, &mut h);
+                let seed_loss = prob.family.h_loss(&eta, &prob.y, &mut h);
+                if let Some(gs) = &mut gap_state {
+                    // The seed state is exact (seed gradients are always
+                    // refreshed over every coefficient) — adopt it as the
+                    // sphere reference: warm fits start with tight bounds.
+                    gs.adopt_exact(&h, &grad, seed_loss);
+                }
             }
         }
     }
@@ -509,7 +674,7 @@ pub fn fit_path_seeded(
     // Column norms are invariant along the path: one sweep up front for
     // the gap-safe diagnostic, not one per step.
     let safe_col_norms: Vec<f64> = if opts.record_safe && prob.family == Family::Gaussian {
-        prob.x.col_sq_norms_with(par).iter().map(|c| c.sqrt()).collect()
+        prob.x.col_norms_with(par)
     } else {
         Vec::new()
     };
@@ -525,17 +690,47 @@ pub fn fit_path_seeded(
         // --- screening phase --------------------------------------------
         let t0 = Instant::now();
         let prev_support = support(&beta_full);
-        let (rule_set, n_screened_rule, e_set) = screening_sets(
-            opts.strategy,
-            pt,
-            &grad,
-            &lam_prev,
-            &lam_cur,
-            &prev_support,
-            &mut screen_ws,
-        );
+        let (rule_set, n_screened_rule, e_set, gap_screen) = match &mut gap_state {
+            Some(gs) => {
+                let mut sc = gap_screening(
+                    prob,
+                    opts,
+                    gs,
+                    &lam_prev,
+                    &lam_cur,
+                    &prev_support,
+                    &beta_full,
+                    &h,
+                    &mut screen_ws,
+                );
+                let n = sc.rule_set.len();
+                // Take, don't clone: the GapScreen's rule_set is not read
+                // again (solve_with_gap consumes e_set/universe/gap_abs),
+                // and `e_set` is only consumed by the safeguarded solve
+                // arm, which is unreachable when a GapScreen exists.
+                let rule = std::mem::take(&mut sc.rule_set);
+                (rule, n, Vec::new(), Some(sc))
+            }
+            None => {
+                let (r, n, e) = screening_sets(
+                    opts.strategy,
+                    pt,
+                    &grad,
+                    &lam_prev,
+                    &lam_cur,
+                    &prev_support,
+                    &mut screen_ws,
+                );
+                (r, n, e, None)
+            }
+        };
         // Gap-safe comparison (Gaussian only): |Xᵀr| = |grad| for OLS.
-        let n_safe = if opts.record_safe && prob.family == Family::Gaussian {
+        // Skipped for the gap-driven strategies, whose `grad` is exact
+        // only on the swept universe — they report `n_universe` instead.
+        let n_safe = if opts.record_safe
+            && prob.family == Family::Gaussian
+            && gap_state.is_none()
+        {
             let r_norm_sq = {
                 // r = y − Xβ = −h at the previous solution
                 sq_norm(&h)
@@ -552,23 +747,42 @@ pub fn fit_path_seeded(
         };
         let t_screen = t0.elapsed().as_secs_f64();
 
-        // --- solve + KKT safeguard loop ----------------------------------
-        let out = solve_with_safeguard(
-            prob,
-            opts,
-            evaluator,
-            &lambda_base,
-            sig,
-            &lam_cur,
-            &rule_set,
-            &prev_support,
-            e_set,
-            &mut beta_full,
-            &mut eta,
-            &mut h,
-            &mut grad,
-            &mut screen_ws,
-        );
+        // --- solve + certificate loop -------------------------------------
+        let out = match (&mut gap_state, gap_screen) {
+            (Some(gs), Some(sc)) => solve_with_gap(
+                prob,
+                opts,
+                evaluator,
+                &lambda_base,
+                sig,
+                &lam_cur,
+                sc.e_set,
+                sc.universe,
+                sc.gap_abs,
+                gs,
+                &mut beta_full,
+                &mut eta,
+                &mut h,
+                &mut grad,
+                &mut screen_ws,
+            ),
+            _ => solve_with_safeguard(
+                prob,
+                opts,
+                evaluator,
+                &lambda_base,
+                sig,
+                &lam_cur,
+                &rule_set,
+                &prev_support,
+                e_set,
+                &mut beta_full,
+                &mut eta,
+                &mut h,
+                &mut grad,
+                &mut screen_ws,
+            ),
+        };
         let loss = out.loss;
         let e_set = out.e_set;
         let (refits, solver_iterations) = (out.refits, out.solver_iterations);
@@ -605,8 +819,13 @@ pub fn fit_path_seeded(
             t_screen,
             t_solve,
             t_kkt,
+            solver_converged: out.converged,
+            full_grad_sweeps: out.sweeps,
+            n_universe: out.n_universe,
+            gap: out.gap,
         });
         fit.total_violations += violations_total;
+        fit.total_grad_sweeps += out.sweeps;
 
         // --- early termination (§3.1.2) ------------------------------------
         if opts.config.stop_on_saturation && unique_nonzero_magnitudes(&beta_full) > n {
@@ -627,6 +846,16 @@ pub fn fit_path_seeded(
         prev_dev = dev;
     }
 
+    // Gap-driven fits may have swept only a partial universe on the last
+    // step; the warm-start contract (`PathFit::final_grad` is exact over
+    // every coefficient) costs them one closing full sweep.
+    if let Some(gs) = &mut gap_state {
+        if !gs.grad_is_exact {
+            evaluator.full_grad_with(&beta_full, &h, &mut grad, par);
+            gs.grad_is_exact = true;
+            fit.total_grad_sweeps += 1.0;
+        }
+    }
     fit.final_beta = beta_full;
     fit.final_grad = grad;
     fit.wall_time = t_start.elapsed().as_secs_f64();
@@ -666,11 +895,14 @@ fn screening_sets(
         Strategy::NoScreening => rule_set.clone(),
         Strategy::StrongSet => union_sorted(&rule_set, prev_support),
         Strategy::PreviousSet => prev_support.to_vec(),
+        Strategy::SafeOnly | Strategy::GapHybrid => {
+            unreachable!("gap-driven strategies screen through gap_screening")
+        }
     };
     (rule_set, n_screened_rule, e_set)
 }
 
-/// Outcome of one safeguarded solve at a single σ.
+/// Outcome of one safeguarded (or gap-certified) solve at a single σ.
 struct SolveOutcome {
     /// Smooth loss at the final solution.
     loss: f64,
@@ -686,6 +918,15 @@ struct SolveOutcome {
     t_solve: f64,
     /// Seconds in full-gradient + KKT checks.
     t_kkt: f64,
+    /// Whether every inner solve met its certificate before `max_iter`.
+    converged: bool,
+    /// Full-design-equivalent gradient sweeps (1.0 per full sweep,
+    /// `|U|/p` per universe sweep).
+    sweeps: f64,
+    /// Final safe-universe size (gap-driven loop only).
+    n_universe: Option<usize>,
+    /// Certified duality gap at acceptance (gap-driven loop only).
+    gap: Option<f64>,
 }
 
 /// Whether the packed engine can beat the gather kernels on this
@@ -772,6 +1013,8 @@ fn solve_with_safeguard(
     let mut added_by_kkt: Vec<usize> = Vec::new();
     let mut refits = 0;
     let mut solver_iterations = 0;
+    let mut converged = true;
+    let mut sweeps = 0.0f64;
     let kkt_thresh = opts.kkt_tol * sig * lambda_base[0].max(1e-12);
     // Alg 4 checks the strong set first; track which stage we are in.
     let mut checked_full = matches!(
@@ -802,6 +1045,7 @@ fn solve_with_safeguard(
             &fista_cfg,
         );
         solver_iterations += res.iterations;
+        converged &= res.converged;
         loss = res.loss;
         reduced.scatter(&res.beta, beta_full);
         t_solve += t1.elapsed().as_secs_f64();
@@ -817,6 +1061,7 @@ fn solve_with_safeguard(
         eta.copy_from_slice(&res.eta);
         prob.family.h_loss(eta, &prob.y, h);
         evaluator.full_grad_with(beta_full, h, grad, par);
+        sweeps += 1.0;
 
         // Violation detection: Algorithm 1 on the true gradient
         // (Prop. 1) restricted to the stage's check set.
@@ -881,6 +1126,434 @@ fn solve_with_safeguard(
         solver_iterations,
         t_solve,
         t_kkt,
+        converged,
+        sweeps,
+        n_universe: None,
+        gap: None,
+    }
+}
+
+/// Upper bound on rounds of the gap-certified loop. The loop provably
+/// makes progress every round (either the working set grows — bounded by
+/// the universe — or the inner tolerance shrinks geometrically), so this
+/// only fires when the gap target sits below the numeric floor; the
+/// failure then surfaces as `solver_converged = false`, never as a
+/// silent bad certificate.
+const MAX_GAP_ROUNDS: usize = 40;
+
+/// Cross-step dual state of the gap-driven strategies: the sphere-test
+/// screener (reference dual point + cached reference magnitudes), the
+/// per-coefficient gradient-magnitude bounds at the *current* residual,
+/// and the loss there. See DESIGN.md §10.
+struct GapState {
+    screener: SafeScreener,
+    /// Upper bounds on `|∇f_j|` at the current residual: exact values on
+    /// the coordinates the last sweep covered, reference-sphere bounds
+    /// everywhere else. Always consistent with the `h` the caller holds.
+    grad_bound: Vec<f64>,
+    /// `f(β)` at the current point.
+    loss: f64,
+    /// True while `grad` (the caller's full gradient buffer) is exact
+    /// over *every* coefficient — set by full sweeps, cleared by
+    /// universe sweeps.
+    grad_is_exact: bool,
+    /// Gather scratch for universe sweeps.
+    scratch: Vec<f64>,
+    /// Per-class column / coefficient lists for universe sweeps —
+    /// reused across rounds so the sweep itself allocates nothing.
+    cols: Vec<usize>,
+    coefs: Vec<usize>,
+    /// Sort buffer for the dual feasibility magnitudes (length `p·m`).
+    mags: Vec<f64>,
+}
+
+impl GapState {
+    /// Build from an exact state: `h`/`grad`/`loss` at one point, with
+    /// `grad` covering every coefficient (the β = 0 bootstrap, or a
+    /// seed's refreshed gradient). Column norms come from
+    /// [`PathOptions::col_norms`] when a valid set is attached (the
+    /// serve registry's per-dataset cache), else from one fresh sweep.
+    fn new(prob: &Problem, opts: &PathOptions, h: &[f64], grad: &[f64], loss: f64) -> Self {
+        let screener = match &opts.col_norms {
+            // Release-mode guard like the pack cache's: norms of the
+            // wrong shape must not poison the sphere tests. The Arc is
+            // shared, not copied — per-request fits stay O(1) here.
+            Some(norms) if norms.len() == prob.p() => {
+                SafeScreener::from_norms(prob.p(), Arc::clone(norms))
+            }
+            _ => SafeScreener::new(prob, opts.par()),
+        };
+        let mut gs = Self {
+            screener,
+            grad_bound: vec![0.0; grad.len()],
+            loss,
+            grad_is_exact: true,
+            scratch: Vec::new(),
+            cols: Vec::new(),
+            coefs: Vec::new(),
+            mags: vec![0.0; grad.len()],
+        };
+        gs.adopt_exact(h, grad, loss);
+        gs
+    }
+
+    /// Adopt an exact full-gradient state as both the current bounds and
+    /// the sphere reference.
+    fn adopt_exact(&mut self, h: &[f64], grad: &[f64], loss: f64) {
+        self.screener.set_reference(h, grad);
+        for (b, g) in self.grad_bound.iter_mut().zip(grad) {
+            *b = g.abs();
+        }
+        self.loss = loss;
+        self.grad_is_exact = true;
+    }
+}
+
+/// One step's screening decision under a gap-driven strategy.
+struct GapScreen {
+    /// Heuristic rule set actually fitted (strong ∩ universe; the whole
+    /// universe for [`Strategy::SafeOnly`]).
+    rule_set: Vec<usize>,
+    /// Initial working set.
+    e_set: Vec<usize>,
+    /// Sphere-test survivors at this σ (always ⊇ the previous support) —
+    /// the set every gradient sweep of the step runs over.
+    universe: Vec<usize>,
+    /// Absolute gap acceptance threshold for the step, resolved from the
+    /// warm point's primal value.
+    gap_abs: f64,
+}
+
+/// `J(β; λ)` when the support is already known: only nonzero entries
+/// contribute, and a vector with `s` nonzeros takes the `s` largest
+/// weights — no full-length sort.
+fn sparse_sl1(beta: &[f64], support: &[usize], lambda: &[f64]) -> f64 {
+    let mut mags: Vec<f64> = support.iter().map(|&j| beta[j].abs()).collect();
+    mags.sort_unstable_by(|a, b| b.total_cmp(a));
+    mags.iter().zip(lambda).map(|(m, l)| m * l).sum()
+}
+
+/// Binary-search membership in an ascending index set.
+fn contains_sorted(set: &[usize], x: usize) -> bool {
+    set.binary_search(&x).is_ok()
+}
+
+/// Gradient sweep restricted to `universe` (ascending flattened
+/// coefficient indices): writes `Xᵀh` into `grad` at exactly those
+/// positions, through the subset kernels of the parallel backend.
+/// Entries outside the universe are left untouched — consumers read
+/// them through [`GapState::grad_bound`], never from `grad`. All
+/// working buffers (`scratch`/`cols`/`coefs`) are caller-owned and
+/// reused across rounds, so a sweep allocates nothing once warm.
+#[allow(clippy::too_many_arguments)]
+fn universe_gradient(
+    prob: &Problem,
+    universe: &[usize],
+    h: &[f64],
+    grad: &mut [f64],
+    par: ParConfig,
+    scratch: &mut Vec<f64>,
+    cols: &mut Vec<usize>,
+    coefs: &mut Vec<usize>,
+) {
+    let n = prob.n();
+    let p = prob.p();
+    let m = prob.family.n_classes();
+    for l in 0..m {
+        cols.clear();
+        coefs.clear();
+        for &c in universe {
+            if c / p == l {
+                cols.push(c % p);
+                coefs.push(c);
+            }
+        }
+        if cols.is_empty() {
+            continue;
+        }
+        if scratch.len() < cols.len() {
+            scratch.resize(cols.len(), 0.0);
+        }
+        let out = &mut scratch[..cols.len()];
+        prob.x.gemv_t_subset_with(cols, &h[l * n..(l + 1) * n], out, par);
+        for (o, &c) in out.iter().zip(coefs.iter()) {
+            grad[c] = *o;
+        }
+    }
+}
+
+/// The screening phase of a gap-driven step, evaluated at the previous
+/// point's state (`beta_full`, `h`, `gs.loss`, `gs.grad_bound` all
+/// mutually consistent):
+///
+/// 1. duality gap of the warm point **for this step's penalty** — no
+///    design product: magnitudes come from the bound vector;
+/// 2. sphere test at radius `√(2·L·gap)` → the step's safe universe
+///    (a *certified* superset of this σ's support);
+/// 3. the strong rule on the bounded magnitudes, clipped to the
+///    universe (skipped for [`Strategy::SafeOnly`], whose working set
+///    is the whole universe).
+fn gap_screening(
+    prob: &Problem,
+    opts: &PathOptions,
+    gs: &mut GapState,
+    lam_prev: &[f64],
+    lam_cur: &[f64],
+    prev_support: &[usize],
+    beta_full: &[f64],
+    h: &[f64],
+    ws: &mut StrongWorkspace,
+) -> GapScreen {
+    let pt = prob.p_total();
+    let penalty = sparse_sl1(beta_full, prev_support, lam_cur);
+    // One O(p log p) ordering per step, shared by the gap's feasibility
+    // magnitudes and (for the hybrid) the strong rule below — the fused
+    // sweep, same as the KKT-safeguarded strategies.
+    ws.rank(&gs.grad_bound);
+    ws.ranked_magnitudes_into(&mut gs.mags);
+    let gr = crate::slope::dual::duality_gap(
+        prob.family,
+        &prob.y,
+        h,
+        gs.loss,
+        penalty,
+        &gs.mags,
+        lam_cur,
+    );
+    let gap_abs = opts.gap_tol * gr.primal.abs().max(1.0);
+    let lam_min = lam_cur.last().copied().unwrap_or(0.0);
+    let universe: Vec<usize> = match SafeScreener::radius(gr.gap, prob.family.hessian_bound()) {
+        Some(radius) if gs.screener.has_reference() => {
+            let kept: Vec<usize> = (0..pt)
+                .filter(|&j| gs.screener.keeps(gs.grad_bound[j], j, gr.scale, radius, lam_min))
+                .collect();
+            // The previous support stays fittable regardless: its
+            // members' warm values seed the solve, and keeping them
+            // costs nothing when the certificate says they are zero —
+            // the solve just returns them to zero.
+            union_sorted(&kept, prev_support)
+        }
+        _ => (0..pt).collect(),
+    };
+    let (rule_set, e_set) = match opts.strategy {
+        Strategy::SafeOnly => (universe.clone(), universe.clone()),
+        _ => {
+            // Consumes the ranking established above.
+            let rule = ws.strong_set_ranked(lam_prev, lam_cur);
+            let rule_set = intersect_sorted(&rule, &universe);
+            let e_set = union_sorted(&rule_set, prev_support);
+            (rule_set, e_set)
+        }
+    };
+    GapScreen { rule_set, e_set, universe, gap_abs }
+}
+
+/// The gap-certified working-set loop (DESIGN.md §10) shared by the path
+/// driver and [`fit_point`] for [`Strategy::GapHybrid`] /
+/// [`Strategy::SafeOnly`]:
+///
+/// repeat — solve the reduced problem on `E` (KKT- and inner-gap
+/// certified), sweep the gradient over the safe *universe* only, compute
+/// the global duality gap (bounds stand in for the discarded
+/// coordinates' magnitudes — conservative, hence sound), and either
+/// accept (`gap ≤ gap_abs`), admit the top-K ranked violators into `E`,
+/// or tighten the inner tolerance when no violator exists. The sphere
+/// test re-runs with each fresh radius, so the universe only shrinks
+/// within the step.
+///
+/// On return `beta_full`/`eta`/`h` hold the accepted state; `grad` is
+/// exact on the universe (and everywhere, after a full-sweep round —
+/// see [`GapState::grad_is_exact`]).
+#[allow(clippy::too_many_arguments)]
+fn solve_with_gap(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    lambda_base: &[f64],
+    sig: f64,
+    lam_cur: &[f64],
+    mut e_set: Vec<usize>,
+    mut universe: Vec<usize>,
+    gap_abs: f64,
+    gs: &mut GapState,
+    beta_full: &mut [f64],
+    eta: &mut [f64],
+    h: &mut [f64],
+    grad: &mut [f64],
+    ws: &mut StrongWorkspace,
+) -> SolveOutcome {
+    let pt = prob.p_total();
+    let par = opts.par();
+    let kkt_thresh = opts.kkt_tol * sig * lambda_base[0].max(1e-12);
+    let lam_min = lam_cur.last().copied().unwrap_or(0.0);
+    let mut added_by_kkt: Vec<usize> = Vec::new();
+    let mut refits = 0usize;
+    let mut solver_iterations = 0usize;
+    let mut sweeps = 0.0f64;
+    let mut converged = true;
+    let mut t_kkt = 0.0;
+    let t0 = Instant::now();
+    let (mut reduced, adopted) = build_reduced(prob, e_set.clone(), opts);
+    let mut t_solve = t0.elapsed().as_secs_f64();
+    let mut widened = false;
+    let mut inner_abs = 0.25 * gap_abs;
+    // When a round ends gap-blocked with nothing to admit, the slack may
+    // come from the reference bounds on the discarded coordinates rather
+    // than from the inner solve — one forced full sweep settles which.
+    let mut force_full = false;
+    let mut loss;
+    let mut gap;
+    loop {
+        refits += 1;
+        let t1 = Instant::now();
+        let warm: Vec<f64> = reduced.coefs.iter().map(|&c| beta_full[c]).collect();
+        // The inner solve carries both certificates: the same KKT
+        // tolerance the safeguarded strategies demand (so gap-hybrid
+        // solutions are interchangeable with strong-rule solutions) plus
+        // the inner gap that drives the global certificate.
+        let mut fista_cfg = opts.fista;
+        if fista_cfg.kkt_tol_abs.is_none() {
+            fista_cfg.kkt_tol_abs = Some(kkt_thresh);
+        }
+        fista_cfg.gap_tol_abs = Some(inner_abs);
+        let res = solve(
+            &reduced,
+            &scale_prefix(lambda_base, sig, reduced.len()),
+            Some(&warm),
+            &fista_cfg,
+        );
+        solver_iterations += res.iterations;
+        converged &= res.converged;
+        loss = res.loss;
+        reduced.scatter(&res.beta, beta_full);
+        t_solve += t1.elapsed().as_secs_f64();
+
+        // --- universe sweep + global gap ---------------------------------
+        let t2 = Instant::now();
+        eta.copy_from_slice(&res.eta);
+        prob.family.h_loss(eta, &prob.y, h);
+        if force_full || 2 * universe.len() > pt || !gs.screener.has_reference() {
+            // A (near-)full universe sweep costs the same as a full one —
+            // take the full product and refresh the sphere reference for
+            // every later bound, for free.
+            evaluator.full_grad_with(beta_full, h, grad, par);
+            sweeps += 1.0;
+            gs.adopt_exact(h, grad, loss);
+            force_full = false;
+        } else {
+            universe_gradient(
+                prob,
+                &universe,
+                h,
+                grad,
+                par,
+                &mut gs.scratch,
+                &mut gs.cols,
+                &mut gs.coefs,
+            );
+            sweeps += universe.len() as f64 / pt.max(1) as f64;
+            let d = gs.screener.ref_distance(h);
+            for j in 0..pt {
+                gs.grad_bound[j] = gs.screener.mag_bound(j, d);
+            }
+            for &j in &universe {
+                gs.grad_bound[j] = grad[j].abs();
+            }
+            gs.loss = loss;
+            gs.grad_is_exact = false;
+        }
+        let penalty = crate::slope::sorted::sl1_norm(&res.beta, lam_cur);
+        // One ordering per round, shared by the gap's feasibility
+        // magnitudes and the violator selection below (the fused sweep).
+        ws.rank(&gs.grad_bound);
+        ws.ranked_magnitudes_into(&mut gs.mags);
+        let gr = crate::slope::dual::duality_gap(
+            prob.family,
+            &prob.y,
+            h,
+            loss,
+            penalty,
+            &gs.mags,
+            lam_cur,
+        );
+        gap = gr.gap;
+        t_kkt += t2.elapsed().as_secs_f64();
+
+        if gap <= gap_abs {
+            break;
+        }
+        if refits >= MAX_GAP_ROUNDS {
+            converged = false;
+            break;
+        }
+
+        // --- expand by the top-K ranked violators / tighten ---------------
+        // (reuses the ranking computed for the gap above — the flagger
+        // reads it without consuming it)
+        let t3 = Instant::now();
+        let top_k = e_set.len().max(10);
+        let viols: Vec<usize> = {
+            let flagged = ws.kkt_flagged_in_rank_order(lam_cur, kkt_thresh);
+            let mut picked: Vec<usize> = flagged
+                .into_iter()
+                .filter(|&j| contains_sorted(&universe, j) && !contains_sorted(&e_set, j))
+                .take(top_k)
+                .collect();
+            picked.sort_unstable();
+            picked
+        };
+        if viols.is_empty() {
+            if !gs.grad_is_exact {
+                // Nothing to admit and the gap was computed with bound
+                // stand-ins: refresh the reference before concluding the
+                // inner solve is the blocker.
+                force_full = true;
+            } else {
+                // Exact gradient, no violator: the inner accuracy is the
+                // blocker.
+                inner_abs *= 0.25;
+            }
+        } else {
+            added_by_kkt = union_sorted(&added_by_kkt, &viols);
+            e_set = union_sorted(&e_set, &viols);
+            reduced.append(&viols);
+            widened = true;
+        }
+        // Shrink the universe with the fresh certificate: discards are
+        // permanent for this σ, so every later sweep gets cheaper.
+        if let Some(radius) = SafeScreener::radius(gap, prob.family.hessian_bound()) {
+            if gs.screener.has_reference() {
+                let kept: Vec<usize> = universe
+                    .iter()
+                    .copied()
+                    .filter(|&j| gs.screener.keeps(gs.grad_bound[j], j, gr.scale, radius, lam_min))
+                    .collect();
+                universe = union_sorted(&kept, &e_set);
+            }
+        }
+        t_solve += t3.elapsed().as_secs_f64();
+    }
+    gs.loss = loss;
+    // Deposit the finished pack exactly like the safeguarded loop.
+    if !adopted || widened {
+        if let Some(cache) = &opts.pack_cache {
+            if let Some(set) = reduced.packed_set() {
+                cache.store(set);
+            }
+        }
+    }
+    SolveOutcome {
+        loss,
+        e_set,
+        added_by_kkt,
+        refits,
+        solver_iterations,
+        t_solve,
+        t_kkt,
+        converged,
+        sweeps,
+        n_universe: Some(universe.len()),
+        gap: Some(gap),
     }
 }
 
@@ -1413,6 +2086,271 @@ mod tests {
             &NativeGradient(&prob),
         );
         assert_eq!(plain.final_beta, first.final_beta);
+    }
+
+    #[test]
+    fn gap_hybrid_matches_strong_baseline() {
+        // The tentpole's correctness contract at test scale: gap-certified
+        // hybrid (and safe-only) fits walk the same grid as the strong
+        // baseline with the same violation counts and matching
+        // coefficients.
+        let prob = gaussian_problem(30, 40, 60, 4);
+        let mk = |s| {
+            let mut o = opts(LambdaKind::Bh { q: 0.1 }, s, 15);
+            o.fista.tol = 1e-9;
+            fit_path(&prob, &o, &NativeGradient(&prob))
+        };
+        let strong = mk(Strategy::StrongSet);
+        for alt in [Strategy::GapHybrid, Strategy::SafeOnly] {
+            let fit = mk(alt);
+            assert!(fit.sigmas.len() >= 5, "{}", alt.name());
+            for (m, s) in fit.steps.iter().enumerate() {
+                assert!(s.solver_converged, "{} step {m} not converged", alt.name());
+                if m > 0 {
+                    let gap = s.gap.expect("gap-driven steps record their certificate");
+                    assert!(gap.is_finite(), "{} step {m} gap {gap}", alt.name());
+                    let nu = s.n_universe.expect("gap-driven steps record the universe");
+                    assert!(nu <= prob.p_total());
+                    assert!(s.n_fitted <= nu, "{}: fitted set outside universe", alt.name());
+                    assert!(s.full_grad_sweeps > 0.0);
+                }
+            }
+            let steps = fit.sigmas.len().min(strong.sigmas.len());
+            for m in 0..steps {
+                let a = fit.beta_at(m, prob.p_total());
+                let b = strong.beta_at(m, prob.p_total());
+                for i in 0..prob.p_total() {
+                    assert!(
+                        (a[i] - b[i]).abs() < 1e-5,
+                        "{} step {m} coef {i}: {} vs {}",
+                        alt.name(),
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+            // Safe-only admits the whole certified universe: violations
+            // are impossible by construction.
+            if alt == Strategy::SafeOnly {
+                assert_eq!(fit.total_violations, 0, "safe-only cannot violate");
+            }
+            assert!(fit.total_grad_sweeps > 0.0);
+            // final_grad must be exact — the warm-seed contract
+            let (_, g) = prob.loss_grad(&fit.final_beta);
+            for (a, b) in fit.final_grad.iter().zip(&g) {
+                assert!((a - b).abs() < 1e-8, "final_grad not exact: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn gap_hybrid_fit_point_matches_strong_fit_point() {
+        let prob = gaussian_problem(31, 30, 50, 4);
+        let mut o_strong = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10);
+        o_strong.fista.tol = 1e-9;
+        let o_hybrid = o_strong.clone().with_strategy(Strategy::GapHybrid);
+        let ng = NativeGradient(&prob);
+        let zero = zero_seed(&prob, &o_strong, &ng);
+        let sigma = zero.sigma * 0.4;
+        let a = fit_point(&prob, &o_strong, &ng, sigma, &zero);
+        let b = fit_point(&prob, &o_hybrid, &ng, sigma, &zero);
+        for (x, y) in a.beta.iter().zip(&b.beta) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+        assert!(b.solver_converged);
+        assert!(b.gap.is_some());
+        assert!(b.full_grad_sweeps > 0.0);
+        // the hybrid point's returned gradient is exact (next-seed contract)
+        let (_, g) = prob.loss_grad(&b.beta);
+        for (x, y) in b.grad.iter().zip(&g) {
+            assert!((x - y).abs() < 1e-8);
+        }
+        // warm re-solve from the hybrid seed sees per-request safe
+        // screening and still agrees
+        let warm = fit_point(&prob, &o_hybrid, &ng, sigma, &b.seed());
+        for (x, y) in warm.beta.iter().zip(&b.beta) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gap_hybrid_seeded_path_matches_cold_and_sweeps_do_not_grow() {
+        let prob = gaussian_problem(32, 30, 80, 4);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::GapHybrid, 12);
+        let ng = NativeGradient(&prob);
+        let cold = fit_path(&prob, &o, &ng);
+        let warm = fit_path_seeded(&prob, &o, &ng, Some(&cold.seed()));
+        let steps = cold.sigmas.len().min(warm.sigmas.len());
+        for m in 0..steps {
+            let a = cold.beta_at(m, prob.p_total());
+            let b = warm.beta_at(m, prob.p_total());
+            for i in 0..prob.p_total() {
+                assert!((a[i] - b[i]).abs() < 1e-4, "step {m} coef {i}");
+            }
+        }
+        // sweep accounting sanity: bounded by rounds, never runaway
+        let round_total: usize = warm.steps.iter().map(|s| s.refits).sum();
+        let bound = (round_total + warm.steps.len()) as f64 + 2.0;
+        assert!(
+            warm.total_grad_sweeps <= bound,
+            "warm sweeps {} exceed {bound}",
+            warm.total_grad_sweeps
+        );
+    }
+
+    #[test]
+    fn gap_hybrid_matches_strong_for_glm_families() {
+        // universe_gradient's class partition, the entropy dual
+        // objectives and the partial-universe sweeps must hold beyond the
+        // Gaussian family — binomial (n·1 residual blocks), multinomial
+        // (class-major blocks) and Poisson (no curvature bound: hybrid
+        // degrades to gap-certified full sweeps) each walk the full
+        // gap-driven loop and must agree with the strong baseline.
+        let mut rng = Pcg64::new(40);
+        let n = 50;
+        let p = 16;
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                x.set(i, j, rng.normal());
+            }
+        }
+        x.standardize(true, true);
+        let mut eta = vec![0.0; n];
+        let beta: Vec<f64> = (0..p).map(|j| if j < 3 { 1.5 } else { 0.0 }).collect();
+        x.gemv(&beta, &mut eta);
+        let cases: Vec<(Family, Vec<f64>)> = vec![
+            (
+                Family::Binomial,
+                eta.iter()
+                    .map(|&e| {
+                        if rng.bernoulli(crate::slope::family::sigmoid(e)) {
+                            1.0
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect(),
+            ),
+            (
+                Family::Multinomial { classes: 3 },
+                (0..n).map(|i| (i % 3) as f64).collect(),
+            ),
+            (
+                Family::Poisson,
+                eta.iter()
+                    .map(|&e| rng.poisson(e.clamp(-2.0, 2.0).exp()) as f64)
+                    .collect(),
+            ),
+        ];
+        for (family, y) in cases {
+            let prob = Problem::new(Design::Dense(x.clone()), y, family);
+            let mk = |s| {
+                let mut o = opts(LambdaKind::Bh { q: 0.1 }, s, 10);
+                o.fista.tol = 1e-9;
+                // headroom for the slower-converging entropy losses
+                o.fista.max_iter = 30_000;
+                fit_path(&prob, &o, &NativeGradient(&prob))
+            };
+            let strong = mk(Strategy::StrongSet);
+            let hybrid = mk(Strategy::GapHybrid);
+            let steps = strong.sigmas.len().min(hybrid.sigmas.len());
+            assert!(steps >= 2, "{}", family.name());
+            for m in 0..steps {
+                let a = strong.beta_at(m, prob.p_total());
+                let b = hybrid.beta_at(m, prob.p_total());
+                for i in 0..prob.p_total() {
+                    assert!(
+                        (a[i] - b[i]).abs() < 1e-4,
+                        "{} step {m} coef {i}: {} vs {}",
+                        family.name(),
+                        a[i],
+                        b[i]
+                    );
+                }
+            }
+            for (m, s) in hybrid.steps.iter().enumerate().skip(1) {
+                assert!(s.solver_converged, "{} step {m}", family.name());
+                assert!(s.gap.is_some(), "{} step {m}", family.name());
+            }
+        }
+    }
+
+    #[test]
+    fn nonconverged_inner_solve_is_surfaced_not_hidden() {
+        // max_iter too small to certify: the step must report
+        // solver_converged = false instead of letting solver noise pose
+        // as screening-rule violations.
+        let prob = gaussian_problem(33, 30, 40, 4);
+        for strategy in [Strategy::StrongSet, Strategy::GapHybrid] {
+            let mut o = opts(LambdaKind::Bh { q: 0.1 }, strategy, 6);
+            o.fista.max_iter = 2;
+            o.fista.tol = 1e-14;
+            let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+            assert!(
+                fit.steps.iter().skip(1).any(|s| !s.solver_converged),
+                "{}: starved solver must surface non-convergence",
+                strategy.name()
+            );
+        }
+    }
+
+    #[test]
+    fn shared_col_norms_do_not_change_hybrid_fits() {
+        // The serve registry hands fits a cached per-dataset norm vector;
+        // it must be a pure performance transformation (dense column
+        // norms are bitwise-deterministic across thread counts).
+        let prob = gaussian_problem(35, 30, 40, 3);
+        let o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::GapHybrid, 10);
+        let norms: Arc<Vec<f64>> = Arc::new(prob.x.col_norms_with(ParConfig::serial()));
+        let with = fit_path(
+            &prob,
+            &o.clone().with_col_norms(Arc::clone(&norms)),
+            &NativeGradient(&prob),
+        );
+        let without = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert_eq!(with.final_beta, without.final_beta);
+        assert_eq!(with.total_grad_sweeps, without.total_grad_sweeps);
+        // wrong-length norms are refused, not trusted
+        let bad = o.with_col_norms(Arc::new(vec![1.0; 3]));
+        let guarded = fit_path(&prob, &bad, &NativeGradient(&prob));
+        assert_eq!(guarded.final_beta, without.final_beta);
+    }
+
+    #[test]
+    fn strategy_names_and_gap_driven_split() {
+        assert_eq!(Strategy::SafeOnly.name(), "safe");
+        assert_eq!(Strategy::GapHybrid.name(), "hybrid");
+        assert!(Strategy::SafeOnly.is_gap_driven());
+        assert!(Strategy::GapHybrid.is_gap_driven());
+        assert!(!Strategy::StrongSet.is_gap_driven());
+        assert!(!Strategy::PreviousSet.is_gap_driven());
+        assert!(!Strategy::NoScreening.is_gap_driven());
+    }
+
+    #[test]
+    fn sweep_accounting_matches_step_records() {
+        let prob = gaussian_problem(34, 25, 30, 3);
+        for strategy in [Strategy::StrongSet, Strategy::GapHybrid] {
+            let o = opts(LambdaKind::Bh { q: 0.1 }, strategy, 8);
+            let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+            let step_sum: f64 = fit.steps.iter().map(|s| s.full_grad_sweeps).sum();
+            // totals equal the per-step sum, plus at most the one closing
+            // refresh a gap-driven fit may pay
+            assert!(
+                fit.total_grad_sweeps >= step_sum - 1e-9
+                    && fit.total_grad_sweeps <= step_sum + 1.0 + 1e-9,
+                "{}: total {} vs step sum {step_sum}",
+                strategy.name(),
+                fit.total_grad_sweeps
+            );
+            // baseline strategies pay exactly one full sweep per refit round
+            if strategy == Strategy::StrongSet {
+                for s in fit.steps.iter().skip(1) {
+                    assert!((s.full_grad_sweeps - s.refits as f64).abs() < 1e-12);
+                }
+            }
+        }
     }
 
     #[test]

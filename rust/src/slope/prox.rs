@@ -37,9 +37,14 @@ pub fn prox_sorted_l1(v: &[f64], lambda: &[f64]) -> Vec<f64> {
 
 /// Reusable scratch buffers for the prox (the FISTA inner loop calls the
 /// prox once per iteration; reusing the workspace removes all allocation
-/// from the hot path — see EXPERIMENTS.md §Perf).
+/// from the hot path — see EXPERIMENTS.md §Perf). The sort itself runs
+/// over the workspace-owned `pairs` buffer, so a warmed workspace makes
+/// [`prox_sorted_l1_into`] allocation-free end to end (previously the
+/// ordering went through [`order_desc_abs`], which builds two fresh
+/// vectors per call — one per FISTA iteration on the hot path).
 pub struct ProxWorkspace {
     order: Vec<usize>,
+    pairs: Vec<(f64, u32)>,
     z: Vec<f64>,
     blocks: Vec<Block>,
 }
@@ -49,6 +54,7 @@ impl ProxWorkspace {
     pub fn new(p: usize) -> Self {
         Self {
             order: Vec::with_capacity(p),
+            pairs: Vec::with_capacity(p),
             z: Vec::with_capacity(p),
             blocks: Vec::with_capacity(p),
         }
@@ -70,9 +76,16 @@ pub fn prox_sorted_l1_into(
         return;
     }
 
-    // 1. Sort |v| descending, remembering the permutation.
+    // 1. Sort |v| descending, remembering the permutation. In-workspace
+    //    (|value|, index) pairs through the shared comparator
+    //    ([`crate::linalg::ops::sort_pairs_desc_abs`], the one
+    //    `order_desc_abs` uses) — bitwise-identical permutation, zero
+    //    allocation once the buffers are warm.
+    ws.pairs.clear();
+    ws.pairs.extend(v.iter().enumerate().map(|(i, &x)| (x.abs(), i as u32)));
+    crate::linalg::ops::sort_pairs_desc_abs(&mut ws.pairs);
     ws.order.clear();
-    ws.order.extend_from_slice(&order_desc_abs(v));
+    ws.order.extend(ws.pairs.iter().map(|&(_, i)| i as usize));
 
     // 2. z = |v|↓ − λ.
     ws.z.clear();
@@ -288,6 +301,40 @@ mod tests {
         prox_sorted_l1_into(&[4.0, -3.0, 2.0, -1.0], &lam, &mut ws, &mut out2);
         assert_eq!(out1, out2);
         assert_eq!(out1, prox_sorted_l1(&[4.0, -3.0, 2.0, -1.0], &lam));
+    }
+
+    #[test]
+    fn workspace_sort_matches_order_desc_abs_bitwise() {
+        // The in-workspace pair sort must reproduce `order_desc_abs`'s
+        // permutation exactly (same comparator, same tiebreak), so the
+        // alloc-free path is bitwise-identical to the old one — ties and
+        // signed zeros included.
+        forall(
+            Config { cases: 200, seed: 0xa110c },
+            |rng| {
+                let v = if rng.bernoulli(0.5) {
+                    gen::tied_vec(rng, 1, 30)
+                } else {
+                    gen::normal_vec(rng, 1, 30)
+                };
+                let lam = gen::lambda_seq(rng, v.len());
+                (v, lam)
+            },
+            |(v, lam)| {
+                let mut ws = ProxWorkspace::new(v.len());
+                let mut out = vec![0.0; v.len()];
+                prox_sorted_l1_into(v, lam, &mut ws, &mut out);
+                ensure(
+                    ws.order == order_desc_abs(v),
+                    format!("permutation drifted: {:?} vs {:?}", ws.order, order_desc_abs(v)),
+                )?;
+                let alloc = prox_sorted_l1(v, lam);
+                ensure(
+                    out.iter().zip(&alloc).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "into-path must be bitwise identical to the allocating path",
+                )
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,366 @@
+//! Elvira–Herzet-style *safe* sphere tests for SLOPE (PAPERS.md: "Safe
+//! rules for the identification of zeros in the solutions of the SLOPE
+//! problem").
+//!
+//! Given any dual-feasible point `θ` with duality gap `G` for an
+//! `L`-smooth loss, every dual-optimal `θ*` lies in the ball
+//! `B(θ, √(2·L·G))` (strong convexity of `f*`). Theorem 1 forces every
+//! *active* coordinate of the optimum to satisfy
+//! `|x_jᵀθ*| = |∇f_j(β*)| ≥ λ_min` (the smallest penalty weight: an
+//! active cluster's trailing prefix sum pins its smallest gradient
+//! magnitude to at least its smallest λ-block entry). So
+//!
+//! ```text
+//! |x_jᵀθ| + r·‖x_j‖ < λ_min   with   r = √(2·L·gap)
+//! ```
+//!
+//! *certifies* `β*_j = 0` — a **permanent per-σ discard**, unlike the
+//! heuristic strong rule, whose discards must be re-checked by a KKT
+//! sweep. λ_min is the only per-coordinate threshold valid for the
+//! sorted-ℓ1 dual ball, which is exactly why the safe rule alone is far
+//! more conservative than the strong rule (Fig. 1) and why the hybrid
+//! strategy layers the two (DESIGN.md §10).
+//!
+//! The screener additionally carries a **reference dual point** so the
+//! test can run *without* a fresh full-design product: with
+//! `c_j = |x_jᵀh_ref|` cached from a genuine full-gradient sweep,
+//! `|x_jᵀh| ≤ c_j + ‖x_j‖·‖h − h_ref‖` bounds every coordinate's
+//! magnitude at the current residual `h` in `O(1)` — upper bounds are
+//! conservative in every consumer (feasibility scaling, sphere test),
+//! so soundness is preserved while the `O(n·p)` sweep shrinks to the
+//! surviving universe.
+
+use std::sync::Arc;
+
+use crate::linalg::ParConfig;
+use crate::slope::family::Problem;
+
+/// Reference-point state for the sphere tests. One per path fit; the
+/// reference is (re)established on every full-gradient sweep for free.
+#[derive(Clone, Debug, Default)]
+pub struct SafeScreener {
+    /// Design columns (`p`, not `p·m`).
+    p: usize,
+    /// `‖x_j‖₂` per design column (length `p`). Shared (`Arc`) so the
+    /// serve registry's per-dataset cache hands them to every request
+    /// without copying.
+    col_norms: Arc<Vec<f64>>,
+    /// Working residual at the reference point (length `n·m`).
+    h_ref: Vec<f64>,
+    /// `|x_jᵀ h_ref|` per flattened coefficient (length `p·m`) — the
+    /// magnitudes of a full gradient, cached when it was last computed.
+    xt_abs_ref: Vec<f64>,
+}
+
+impl SafeScreener {
+    /// Build the screener for a problem: one `O(nnz)` column-norm sweep,
+    /// no reference yet (the first full gradient provides it).
+    pub fn new(prob: &Problem, par: ParConfig) -> Self {
+        Self::from_norms(prob.p(), Arc::new(prob.x.col_norms_with(par)))
+    }
+
+    /// Build from already-computed column norms (`‖x_j‖`, length = design
+    /// columns) — what lets a per-request `fit_point` stream skip both
+    /// the column-norm pass and any copy of it (the serve registry
+    /// caches one shared vector per dataset).
+    pub fn from_norms(p: usize, col_norms: Arc<Vec<f64>>) -> Self {
+        debug_assert_eq!(col_norms.len(), p);
+        Self { p, col_norms, h_ref: Vec::new(), xt_abs_ref: Vec::new() }
+    }
+
+    /// True once a reference dual point has been recorded.
+    pub fn has_reference(&self) -> bool {
+        !self.xt_abs_ref.is_empty()
+    }
+
+    /// Record a reference point from a *full* gradient evaluation:
+    /// `h` is the working residual, `grad = Xᵀh` over every coefficient.
+    pub fn set_reference(&mut self, h: &[f64], grad: &[f64]) {
+        self.h_ref.clear();
+        self.h_ref.extend_from_slice(h);
+        self.xt_abs_ref.clear();
+        self.xt_abs_ref.extend(grad.iter().map(|g| g.abs()));
+    }
+
+    /// `‖h − h_ref‖₂` — the only quantity a bound refresh needs, and it
+    /// lives in `R^{n·m}`, independent of `p`.
+    pub fn ref_distance(&self, h: &[f64]) -> f64 {
+        debug_assert_eq!(h.len(), self.h_ref.len());
+        crate::linalg::ops::dist(h, &self.h_ref)
+    }
+
+    /// Column norm of a flattened coefficient (class-major layout: the
+    /// class shares its column's norm).
+    pub fn col_norm(&self, coef: usize) -> f64 {
+        if self.col_norms.is_empty() {
+            0.0
+        } else {
+            self.col_norms[coef % self.p]
+        }
+    }
+
+    /// Upper bound on `|x_jᵀh|` at residual distance `d` from the
+    /// reference (triangle inequality through the cached reference
+    /// magnitudes). Requires a reference.
+    pub fn mag_bound(&self, coef: usize, d: f64) -> f64 {
+        debug_assert!(self.has_reference());
+        self.xt_abs_ref[coef] + self.col_norm(coef) * d
+    }
+
+    /// Sphere radius `√(2·L·gap)` in dual space for an `L`-smooth loss
+    /// (`L` = [`crate::slope::family::Family::hessian_bound`]); `None`
+    /// for unbounded-curvature families (Poisson), which get no safe
+    /// discards. A NaN gap (diverged solve) yields an *infinite* radius
+    /// — nothing can be certified from a broken certificate — rather
+    /// than the 0 that `gap.max(0.0)` would silently produce.
+    pub fn radius(gap: f64, hessian_bound: Option<f64>) -> Option<f64> {
+        hessian_bound.map(|l| {
+            if gap.is_nan() {
+                f64::INFINITY
+            } else {
+                (2.0 * l * gap.max(0.0)).sqrt()
+            }
+        })
+    }
+
+    /// The sphere test. `mag_h` upper-bounds `|x_jᵀh|` at the current
+    /// point (exact values and [`SafeScreener::mag_bound`]s are both
+    /// valid), `scale ≥ 1` is the dual feasibility scaling (`θ = −h/s`),
+    /// `radius` the current `√(2·L·gap)`, `lam_min` the smallest
+    /// σ-scaled penalty weight. Returns **true when the coefficient must
+    /// be kept** — `false` is a certificate that `β*_j = 0` at this σ.
+    pub fn keeps(&self, mag_h: f64, coef: usize, scale: f64, radius: f64, lam_min: f64) -> bool {
+        let inv = if scale.is_finite() { 1.0 / scale } else { 0.0 };
+        // NaN anywhere makes the comparison false-free: `!(x < y)` keeps
+        // the coefficient, the conservative direction.
+        !(mag_h * inv + radius * self.col_norm(coef) < lam_min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::{ensure, forall, Config};
+    use crate::linalg::ops::abs_sorted_desc;
+    use crate::linalg::{Csc, Design, Mat};
+    use crate::rng::Pcg64;
+    use crate::slope::dual::duality_gap;
+    use crate::slope::family::Family;
+    use crate::slope::lambda::{bh_sequence, sigma_max};
+    use crate::slope::path::{fit_point, zero_seed, NativeGradient, PathOptions, Strategy};
+    use crate::slope::sorted::sl1_norm;
+
+    fn gaussian_problem(seed: u64, n: usize, p: usize, k: usize, sparse: bool) -> Problem {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Mat::zeros(n, p);
+        for j in 0..p {
+            for i in 0..n {
+                if !sparse || rng.bernoulli(0.5) {
+                    x.set(i, j, rng.normal());
+                }
+            }
+        }
+        let beta: Vec<f64> = (0..p).map(|j| if j < k { 2.0 * rng.sign() } else { 0.0 }).collect();
+        let mut eta = vec![0.0; n];
+        x.gemv(&beta, &mut eta);
+        let y: Vec<f64> = eta.iter().map(|e| e + 0.3 * rng.normal()).collect();
+        let mut design = if sparse {
+            Design::Sparse(Csc::from_dense(&x))
+        } else {
+            Design::Dense(x)
+        };
+        design.standardize();
+        Problem::new(design, y, Family::Gaussian)
+    }
+
+    #[test]
+    fn radius_formula_and_families() {
+        assert_eq!(SafeScreener::radius(0.0, Some(1.0)), Some(0.0));
+        let r = SafeScreener::radius(2.0, Some(1.0)).unwrap();
+        assert!((r - 2.0).abs() < 1e-12); // √(2·1·2) = 2
+        let r = SafeScreener::radius(2.0, Some(0.25)).unwrap();
+        assert!((r - 1.0).abs() < 1e-12); // binomial curvature tightens it
+        assert_eq!(SafeScreener::radius(1.0, None), None); // Poisson: no safe rule
+        // negative gap (rounding) clamps to zero radius, not NaN
+        assert_eq!(SafeScreener::radius(-1e-18, Some(1.0)), Some(0.0));
+        // NaN gap: infinite radius (nothing certifiable), never 0
+        assert_eq!(SafeScreener::radius(f64::NAN, Some(1.0)), Some(f64::INFINITY));
+    }
+
+    #[test]
+    fn keeps_is_conservative_on_nan_and_degenerate_shapes() {
+        let s = SafeScreener::default(); // p = 0: no columns at all
+        assert!(s.keeps(f64::NAN, 0, 1.0, 0.0, 1.0) || !s.keeps(0.0, 0, 1.0, 0.0, 1.0));
+        // NaN magnitude must keep (conservative), never panic
+        assert!(s.keeps(f64::NAN, 0, 1.0, 0.5, 1.0));
+        // λ_min = 0: nothing is ever discarded (LHS ≥ 0 can't go below 0)
+        assert!(s.keeps(0.0, 0, 1.0, 0.0, 0.0));
+        // infinite scale (θ = 0) discards iff the radius term alone clears
+        assert!(!s.keeps(5.0, 0, f64::INFINITY, 0.0, 1.0)); // col_norm 0 ⇒ LHS 0 < 1
+    }
+
+    #[test]
+    fn screener_handles_n0_and_p1_designs() {
+        // n = 0: empty residuals, zero norms — no panics anywhere.
+        let prob = Problem::new(Design::Dense(Mat::zeros(0, 3)), Vec::new(), Family::Gaussian);
+        let mut s = SafeScreener::new(&prob, ParConfig::serial());
+        assert_eq!(s.col_norm(2), 0.0);
+        s.set_reference(&[], &[0.0, 0.0, 0.0]);
+        assert!(s.has_reference());
+        assert_eq!(s.ref_distance(&[]), 0.0);
+        assert_eq!(s.mag_bound(1, 0.0), 0.0);
+        // p = 1: single-column design round-trips through the test.
+        let prob = gaussian_problem(3, 10, 1, 1, false);
+        let s1 = SafeScreener::new(&prob, ParConfig::serial());
+        assert!(s1.col_norm(0) > 0.0);
+        assert!(s1.keeps(1.0, 0, 1.0, 1.0, 0.5));
+    }
+
+    #[test]
+    fn mag_bound_dominates_true_magnitude() {
+        // |x_jᵀh| ≤ c_j + ‖x_j‖·‖h − h_ref‖ for arbitrary h, h_ref.
+        forall(
+            Config { cases: 80, seed: 0x5afe },
+            |rng| {
+                let n = 5 + rng.below(20) as usize;
+                let p = 1 + rng.below(8) as usize;
+                let seed = rng.below(1 << 30);
+                let h: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                let h_ref: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+                (n, p, seed, h, h_ref)
+            },
+            |(n, p, seed, h, h_ref)| {
+                let prob = gaussian_problem(*seed, *n, *p, 1.min(*p), false);
+                let mut scr = SafeScreener::new(&prob, ParConfig::serial());
+                let mut gref = vec![0.0; *p];
+                prob.gradient_from_h(h_ref, &mut gref);
+                scr.set_reference(h_ref, &gref);
+                let d = scr.ref_distance(h);
+                let mut g = vec![0.0; *p];
+                prob.gradient_from_h(h, &mut g);
+                for j in 0..*p {
+                    ensure(
+                        g[j].abs() <= scr.mag_bound(j, d) + 1e-9,
+                        format!("bound violated at {j}: |g|={} bound={}", g[j].abs(), scr.mag_bound(j, d)),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn safe_rule_never_discards_active_predictor() {
+        // The satellite proptest: run the sphere test at a loosely-solved
+        // point and check its discards against a *tight* reference fit's
+        // support — a safe discard of a truly active predictor is a
+        // soundness bug, at any gap. Dense and sparse designs.
+        forall(
+            Config { cases: 25, seed: 0x5afe2 },
+            |rng| {
+                let n = 20 + rng.below(20) as usize;
+                let p = 8 + rng.below(30) as usize;
+                let seed = rng.below(1 << 30);
+                let sparse = rng.bernoulli(0.4);
+                let ratio = 0.25 + 0.5 * rng.next_f64();
+                (n, p, seed, sparse, ratio)
+            },
+            |(n, p, seed, sparse, ratio)| {
+                let prob = gaussian_problem(*seed, *n, *p, 3.min(p / 2).max(1), *sparse);
+                let p = prob.p();
+                let lam_base = bh_sequence(p, 0.1);
+                // tight reference fit at σ = ratio·σ_max
+                let mut opts = PathOptions::new(crate::slope::lambda::PathConfig::new(
+                    crate::slope::lambda::LambdaKind::Bh { q: 0.1 },
+                ))
+                .with_strategy(Strategy::StrongSet);
+                opts.fista.tol = 1e-11;
+                let ng = NativeGradient(&prob);
+                let zero = zero_seed(&prob, &opts, &ng);
+                let sigma = zero.sigma * ratio;
+                let tight = fit_point(&prob, &opts, &ng, sigma, &zero);
+                // solidly-active coordinates only: a |β̂_j| at solver-noise
+                // scale can differ from the true optimum's support, which
+                // is a tolerance artifact, not a screening soundness issue
+                let support: Vec<usize> = tight
+                    .beta
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &b)| b.abs() > 1e-6)
+                    .map(|(j, _)| j)
+                    .collect();
+                let lam: Vec<f64> = lam_base.iter().map(|l| l * sigma).collect();
+                // sphere test at a *loose* point: β = 0 with its exact state
+                let beta0 = vec![0.0; p];
+                let (loss0, grad0) = prob.loss_grad(&beta0);
+                let mut h0 = vec![0.0; prob.n()];
+                prob.family.h_loss(&vec![0.0; prob.n()], &prob.y, &mut h0);
+                let mags = abs_sorted_desc(&grad0);
+                let g = duality_gap(
+                    prob.family,
+                    &prob.y,
+                    &h0,
+                    loss0,
+                    sl1_norm(&beta0, &lam),
+                    &mags,
+                    &lam,
+                );
+                let mut scr = SafeScreener::new(&prob, ParConfig::serial());
+                scr.set_reference(&h0, &grad0);
+                let radius = SafeScreener::radius(g.gap, prob.family.hessian_bound())
+                    .expect("gaussian has a curvature bound");
+                let lam_min = *lam.last().unwrap();
+                for &j in &support {
+                    ensure(
+                        scr.keeps(grad0[j].abs(), j, g.scale, radius, lam_min),
+                        format!(
+                            "active predictor {j} discarded (|g|={}, radius={radius}, s={}, λ_min={lam_min})",
+                            grad0[j].abs(),
+                            g.scale
+                        ),
+                    )?;
+                }
+                // and the same soundness through the reference *bounds*
+                let d = scr.ref_distance(&h0); // 0 here, but exercises the path
+                for &j in &support {
+                    ensure(
+                        scr.keeps(scr.mag_bound(j, d), j, g.scale, radius, lam_min),
+                        format!("active predictor {j} discarded via bounds"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn zero_gap_discards_only_below_lambda_min() {
+        // At the optimum (gap 0, radius 0), the test reduces to
+        // |x_jᵀθ*| < λ_min — which Theorem 1 proves is impossible for
+        // active coordinates; inactive small-correlation ones go.
+        let prob = gaussian_problem(9, 30, 10, 2, false);
+        let lam_base = bh_sequence(10, 0.1);
+        let (_, grad0) = prob.loss_grad(&vec![0.0; 10]);
+        let smax = sigma_max(&grad0, &lam_base);
+        let lam: Vec<f64> = lam_base.iter().map(|l| l * smax).collect();
+        // At σ_max, β* = 0 and θ* = −h(0)/1; every |g_j| < λ_min is
+        // certifiably zero (they all are — β* = 0 — but the test may
+        // only discard the sub-λ_min ones).
+        let scr = {
+            let mut s = SafeScreener::new(&prob, ParConfig::serial());
+            let mut h0 = vec![0.0; prob.n()];
+            prob.family.h_loss(&vec![0.0; prob.n()], &prob.y, &mut h0);
+            s.set_reference(&h0, &grad0);
+            s
+        };
+        let lam_min = *lam.last().unwrap();
+        for j in 0..10 {
+            let kept = scr.keeps(grad0[j].abs(), j, 1.0, 0.0, lam_min);
+            assert_eq!(
+                kept,
+                grad0[j].abs() >= lam_min,
+                "zero-radius test must threshold exactly at λ_min"
+            );
+        }
+    }
+}

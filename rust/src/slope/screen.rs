@@ -85,15 +85,15 @@ pub struct StrongWorkspace {
 }
 
 impl StrongWorkspace {
-    /// Rank a gradient once: pack `(|g|, j)` pairs and sort descending.
-    /// `total_cmp` (not `partial_cmp().unwrap()`): one NaN in a gradient
-    /// must surface as a bad fit, not panic the whole server.
+    /// Rank a gradient once: pack `(|g|, j)` pairs and sort descending
+    /// with the shared comparator
+    /// ([`crate::linalg::ops::sort_pairs_desc_abs`] — NaN-tolerant, so
+    /// one NaN in a gradient surfaces as a bad fit, not a server panic).
     pub fn rank(&mut self, grad: &[f64]) {
         self.pairs.clear();
         self.pairs
             .extend(grad.iter().enumerate().map(|(j, &g)| (g.abs(), j as u32)));
-        self.pairs
-            .sort_unstable_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        crate::linalg::ops::sort_pairs_desc_abs(&mut self.pairs);
         self.ranked = true;
     }
 
@@ -103,13 +103,33 @@ impl StrongWorkspace {
         self.ranked
     }
 
+    /// Copy the ranked magnitudes (descending, the comparator's order)
+    /// into `out` — what lets the duality-gap evaluation share the one
+    /// ordering [`StrongWorkspace::rank`] produced instead of re-sorting
+    /// the same vector. Must follow a [`StrongWorkspace::rank`].
+    pub fn ranked_magnitudes_into(&self, out: &mut Vec<f64>) {
+        debug_assert!(self.ranked, "ranked_magnitudes_into needs a fresh rank()");
+        out.clear();
+        out.extend(self.pairs.iter().map(|&(m, _)| m));
+    }
+
     /// Algorithm 1 on the ranked magnitudes with a tolerance on the
     /// running sum — the KKT violation flagger, sharing the ranking the
     /// next step's strong set will consume. Returns ascending predictor
     /// indices. Must follow a [`StrongWorkspace::rank`] of the gradient
     /// being checked.
     pub fn kkt_flagged_ranked(&self, lam: &[f64], tol: f64) -> Vec<usize> {
-        debug_assert!(self.ranked, "kkt_flagged_ranked needs a fresh rank()");
+        let mut flagged = self.kkt_flagged_in_rank_order(lam, tol);
+        flagged.sort_unstable();
+        flagged
+    }
+
+    /// [`StrongWorkspace::kkt_flagged_ranked`] in **rank order** (largest
+    /// gradient magnitude first) instead of ascending index — the order
+    /// the gap-hybrid working set consumes when admitting only the top-K
+    /// violators per expansion round. Same flags, different order.
+    pub fn kkt_flagged_in_rank_order(&self, lam: &[f64], tol: f64) -> Vec<usize> {
+        debug_assert!(self.ranked, "kkt_flagged_in_rank_order needs a fresh rank()");
         let mut flagged = Vec::new();
         let mut block_start = 0usize;
         let mut sum = 0.0f64;
@@ -121,7 +141,6 @@ impl StrongWorkspace {
                 sum = 0.0;
             }
         }
-        flagged.sort_unstable();
         flagged
     }
 
@@ -527,6 +546,35 @@ mod tests {
         let ranked = ws.strong_set_ranked(&lam, &next);
         assert!(!ws.is_ranked());
         assert_eq!(ranked, strong_set(&g, &lam, &next));
+    }
+
+    #[test]
+    fn rank_order_flagger_matches_sorted_flagger() {
+        forall(
+            Config { cases: 200, seed: 0xf8 },
+            |rng| {
+                let g = gen::normal_vec(rng, 1, 50);
+                let lam = gen::lambda_seq(rng, g.len());
+                (g, lam)
+            },
+            |(g, lam)| {
+                let mut ws = StrongWorkspace::default();
+                ws.rank(g);
+                let ranked_order = ws.kkt_flagged_in_rank_order(lam, 1e-9);
+                let ascending = ws.kkt_flagged_ranked(lam, 1e-9);
+                let mut sorted = ranked_order.clone();
+                sorted.sort_unstable();
+                ensure(sorted == ascending, "same flags in both orders")?;
+                // rank order = non-increasing |g|
+                for w in ranked_order.windows(2) {
+                    ensure(
+                        !(g[w[0]].abs() < g[w[1]].abs()),
+                        format!("rank order violated at {w:?}"),
+                    )?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -374,7 +374,7 @@ fn serve_dataset_from_file_fit_matches_inline_and_in_memory() {
     write_svmlight(&prob, &file).unwrap();
     // fit_threads = 1 pins the kernels to their serial (bitwise
     // reference) forms, so the in-process replica below is exact.
-    let srv = Server::new(ServerConfig { threads: 2, queue: 8, cache: true, fit_threads: 1 });
+    let srv = Server::new(ServerConfig { threads: 2, queue: 8, cache: true, fit_threads: 1, ..Default::default() });
 
     // register the file ahead of fitting
     let reg = protocol::request_line(
