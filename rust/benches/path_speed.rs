@@ -12,9 +12,17 @@
 //! * **screen** — the `strong` KKT-safeguarded baseline vs the `hybrid`
 //!   duality-gap strategy (safe universe + gap certificates, DESIGN.md
 //!   §10), which replaces most full-p gradient sweeps with partial
-//!   universe sweeps. Each cell records `full_grad_sweeps`
-//!   (p-equivalents) so the sweep reduction is tracked, not inferred
-//!   from wall time.
+//!   universe sweeps.
+//!
+//! Sweep work is read from the `obs::registry` counters
+//! (`grad_full_sweeps` / `grad_partial_sweeps` / `grad_sweep_cols`,
+//! differenced around each fit), not hand-threaded through the solver's
+//! return value — and each cell asserts the registry agrees with the
+//! solver's own `PathFit::total_grad_sweeps` bookkeeping, so the two
+//! accounting paths check each other. Pack-cache hit/miss deltas ride
+//! along per cell, and the bench gates on the observability contract
+//! itself: with tracing off, a span is a single relaxed load, and a
+//! million disabled spans must cost nanoseconds each.
 //!
 //! Correctness is asserted, not assumed: across backends *and* engines,
 //! fits must produce identical violation counts and coefficients to
@@ -42,6 +50,7 @@
 //!           screening policy only; default `both` runs the comparison).
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use slope_screen::benchkit::{fmt_secs, Table};
 use slope_screen::cli::Args;
@@ -49,12 +58,97 @@ use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
 use slope_screen::jsonio::Json;
 use slope_screen::linalg::par;
 use slope_screen::linalg::PackCache;
+use slope_screen::obs::registry as obsreg;
+use slope_screen::obs::trace;
 use slope_screen::rng::Pcg64;
 use slope_screen::slope::family::{Family, Problem};
 use slope_screen::slope::lambda::{LambdaKind, PathConfig};
 use slope_screen::slope::path::{
     fit_path, fit_path_seeded, NativeGradient, PathFit, PathOptions, Strategy,
 };
+
+/// Registry counters a bench cell cares about, captured as deltas around
+/// each fit (the cells are process-global; this harness is sequential, so
+/// before/after differencing attributes counts exactly).
+#[derive(Clone, Copy, Default)]
+struct Obs {
+    full_sweeps: u64,
+    partial_sweeps: u64,
+    sweep_cols: u64,
+    pack_hits: u64,
+    pack_misses: u64,
+}
+
+impl Obs {
+    fn mark() -> Obs {
+        Obs {
+            full_sweeps: obsreg::GRAD_FULL_SWEEPS.get(),
+            partial_sweeps: obsreg::GRAD_PARTIAL_SWEEPS.get(),
+            sweep_cols: obsreg::GRAD_SWEEP_COLS.get(),
+            pack_hits: obsreg::PACK_CACHE_HITS.get(),
+            pack_misses: obsreg::PACK_CACHE_MISSES.get(),
+        }
+    }
+
+    fn since(before: Obs) -> Obs {
+        let now = Obs::mark();
+        Obs {
+            full_sweeps: now.full_sweeps - before.full_sweeps,
+            partial_sweeps: now.partial_sweeps - before.partial_sweeps,
+            sweep_cols: now.sweep_cols - before.sweep_cols,
+            pack_hits: now.pack_hits - before.pack_hits,
+            pack_misses: now.pack_misses - before.pack_misses,
+        }
+    }
+
+    /// Sweep work in p-equivalents: a full sweep touches p columns, a
+    /// partial sweep its universe — `grad_sweep_cols / p` is the same
+    /// quantity `PathFit::total_grad_sweeps` accumulates term by term.
+    fn sweep_p_equiv(&self, p: usize) -> f64 {
+        self.sweep_cols as f64 / p.max(1) as f64
+    }
+}
+
+/// Run `f`, capture the registry deltas it produced, and assert the
+/// registry's sweep accounting matches the solver's own — the counters
+/// are the source of truth for the report, the solver field the
+/// cross-check.
+fn with_obs<F: FnOnce() -> PathFit>(p: usize, what: &str, f: F) -> (PathFit, Obs) {
+    let before = Obs::mark();
+    let fit = f();
+    let obs = Obs::since(before);
+    let reg = obs.sweep_p_equiv(p);
+    assert!(
+        (reg - fit.total_grad_sweeps).abs() <= 1e-6 * fit.total_grad_sweeps.max(1.0),
+        "{what}: registry sweep columns ({reg:.6} p-equivalents) disagree with \
+         PathFit::total_grad_sweeps ({:.6})",
+        fit.total_grad_sweeps
+    );
+    (fit, obs)
+}
+
+/// The observability overhead contract: with tracing off, `span()` is one
+/// relaxed atomic load returning an inert guard. A million disabled spans
+/// (with a field write each) must be unmeasurable next to any fit — the
+/// bound is three orders of magnitude above the real cost so it never
+/// flakes on loaded runners, while still catching an accidental
+/// allocation or lock on the disabled path.
+fn assert_disabled_tracing_is_free() -> f64 {
+    assert!(trace::disabled(), "bench must run with tracing off");
+    const REPS: u64 = 1_000_000;
+    let t = Instant::now();
+    for i in 0..REPS {
+        let mut s = trace::span(std::hint::black_box("bench_noop"));
+        s.u("i", std::hint::black_box(i));
+    }
+    let per_ns = t.elapsed().as_secs_f64() * 1e9 / REPS as f64;
+    println!("disabled-span overhead: {per_ns:.1} ns/span over {REPS} spans");
+    assert!(
+        per_ns < 1000.0,
+        "disabled span cost {per_ns:.0} ns — the tracing-off path must stay free"
+    );
+    per_ns
+}
 
 struct Run {
     p: usize,
@@ -66,7 +160,13 @@ struct Run {
     wall_s: f64,
     steps: usize,
     violations: usize,
+    /// Registry-derived sweep work in p-equivalents
+    /// (`grad_sweep_cols / p`; asserted equal to the solver's count).
     full_grad_sweeps: f64,
+    full_sweeps: u64,
+    partial_sweeps: u64,
+    pack_hits: u64,
+    pack_misses: u64,
 }
 
 fn make_problem(n: usize, p: usize, k: usize, rho: f64, seed: u64) -> Problem {
@@ -169,6 +269,11 @@ fn main() {
     );
     let default_engine = if no_pack { "gather" } else { "packed" };
 
+    // The observability contract gates the bench before anything is
+    // measured: if disabled spans cost real time, every number below
+    // would be polluted.
+    let span_overhead_ns = assert_disabled_tracing_is_free();
+
     let mut runs: Vec<Run> = Vec::new();
     for (pi, &p) in ps.iter().enumerate() {
         let prob = make_problem(n, p, k.min(p / 2).max(1), rho, seed + pi as u64);
@@ -187,52 +292,68 @@ fn main() {
             }
         };
         // cold/serial, cold/parallel, warm/serial, warm/parallel for one
-        // (engine, strategy) cell, with the serial-vs-parallel identity
-        // check every cell must pass.
-        let run_cell = |packing: bool, strategy: Strategy, what: &str| -> [PathFit; 4] {
+        // (engine, strategy) cell — each fit wrapped in a registry-delta
+        // capture — with the serial-vs-parallel identity check every cell
+        // must pass.
+        let run_cell = |packing: bool, strategy: Strategy, what: &str| -> [(PathFit, Obs); 4] {
             let o_serial = with_cache(opts(q, path_length, 1, packing, strategy), packing);
             let o_par = with_cache(opts(q, path_length, threads, packing, strategy), packing);
-            let cold_serial = fit_path(&prob, &o_serial, &ng);
-            let cold_par = fit_path(&prob, &o_par, &ng);
-            assert_identical(&cold_serial, &cold_par, &format!("p={p} {what} cold"), 1e-10);
-            let warm_serial = fit_path_seeded(&prob, &o_serial, &ng, Some(&cold_serial.seed()));
-            let warm_par = fit_path_seeded(&prob, &o_par, &ng, Some(&cold_par.seed()));
-            assert_identical(&warm_serial, &warm_par, &format!("p={p} {what} warm"), 1e-10);
+            let cold_serial =
+                with_obs(p, &format!("p={p} {what} cold/serial"), || fit_path(&prob, &o_serial, &ng));
+            let cold_par =
+                with_obs(p, &format!("p={p} {what} cold/parallel"), || fit_path(&prob, &o_par, &ng));
+            assert_identical(&cold_serial.0, &cold_par.0, &format!("p={p} {what} cold"), 1e-10);
+            let warm_serial = with_obs(p, &format!("p={p} {what} warm/serial"), || {
+                fit_path_seeded(&prob, &o_serial, &ng, Some(&cold_serial.0.seed()))
+            });
+            let warm_par = with_obs(p, &format!("p={p} {what} warm/parallel"), || {
+                fit_path_seeded(&prob, &o_par, &ng, Some(&cold_par.0.seed()))
+            });
+            assert_identical(&warm_serial.0, &warm_par.0, &format!("p={p} {what} warm"), 1e-10);
             [cold_serial, cold_par, warm_serial, warm_par]
         };
         let labels = ["cold/serial", "cold/parallel", "warm/serial", "warm/parallel"];
-        let mut record = |engine: &'static str, screen: &'static str, fits: &[PathFit; 4]| {
-            for (fit, start, backend, t) in [
-                (&fits[0], "cold", "serial", 1),
-                (&fits[1], "cold", "parallel", threads),
-                (&fits[2], "warm", "serial", 1),
-                (&fits[3], "warm", "parallel", threads),
-            ] {
-                println!(
-                    "  p={p:<7} {engine:<7} {screen:<7} {backend:<8} {start}  {}  ({} steps, {} violations, {:.2} sweeps)",
-                    fmt_secs(fit.wall_time),
-                    fit.steps.len(),
-                    fit.total_violations,
-                    fit.total_grad_sweeps
-                );
-                runs.push(Run {
-                    p,
-                    engine,
-                    backend,
-                    start,
-                    screen,
-                    threads: t,
-                    wall_s: fit.wall_time,
-                    steps: fit.steps.len(),
-                    violations: fit.total_violations,
-                    full_grad_sweeps: fit.total_grad_sweeps,
-                });
-            }
-        };
+        let mut record =
+            |engine: &'static str, screen: &'static str, fits: &[(PathFit, Obs); 4]| {
+                for ((fit, obs), start, backend, t) in [
+                    (&fits[0], "cold", "serial", 1),
+                    (&fits[1], "cold", "parallel", threads),
+                    (&fits[2], "warm", "serial", 1),
+                    (&fits[3], "warm", "parallel", threads),
+                ] {
+                    println!(
+                        "  p={p:<7} {engine:<7} {screen:<7} {backend:<8} {start}  {}  ({} steps, {} violations, {:.2} sweeps = {}F+{}P, pack {}h/{}m)",
+                        fmt_secs(fit.wall_time),
+                        fit.steps.len(),
+                        fit.total_violations,
+                        obs.sweep_p_equiv(p),
+                        obs.full_sweeps,
+                        obs.partial_sweeps,
+                        obs.pack_hits,
+                        obs.pack_misses,
+                    );
+                    runs.push(Run {
+                        p,
+                        engine,
+                        backend,
+                        start,
+                        screen,
+                        threads: t,
+                        wall_s: fit.wall_time,
+                        steps: fit.steps.len(),
+                        violations: fit.total_violations,
+                        full_grad_sweeps: obs.sweep_p_equiv(p),
+                        full_sweeps: obs.full_sweeps,
+                        partial_sweeps: obs.partial_sweeps,
+                        pack_hits: obs.pack_hits,
+                        pack_misses: obs.pack_misses,
+                    });
+                }
+            };
 
-        let mut strong_default: Option<[PathFit; 4]> = None;
+        let mut strong_default: Option<[(PathFit, Obs); 4]> = None;
         if run_strong {
-            let mut per_engine: Vec<(&'static str, [PathFit; 4])> = Vec::new();
+            let mut per_engine: Vec<(&'static str, [(PathFit, Obs); 4])> = Vec::new();
             for &engine in engines {
                 let packing = engine == "packed";
                 let fits = run_cell(packing, Strategy::StrongSet, &format!("{engine} strong"));
@@ -243,8 +364,8 @@ fn main() {
             if let [(_, gather), (_, packed)] = per_engine.as_slice() {
                 for (i, label) in labels.iter().enumerate() {
                     assert_identical(
-                        &gather[i],
-                        &packed[i],
+                        &gather[i].0,
+                        &packed[i].0,
                         &format!("p={p} gather-vs-packed {label}"),
                         1e-10,
                     );
@@ -275,7 +396,7 @@ fn main() {
             // sizes anyway.
             if let Some(strong) = &strong_default {
                 for (i, label) in labels.iter().enumerate() {
-                    let (a, b) = (&strong[i], &fits[i]);
+                    let (a, b) = (&strong[i].0, &fits[i].0);
                     let what = format!("p={p} strong-vs-hybrid {label}");
                     if smoke {
                         assert_eq!(a.steps.len(), b.steps.len(), "{what}: step counts diverged");
@@ -306,6 +427,10 @@ fn main() {
             "steps",
             "violations",
             "full_grad_sweeps",
+            "full_sweeps",
+            "partial_sweeps",
+            "pack_hits",
+            "pack_misses",
         ],
     );
     for r in &runs {
@@ -320,6 +445,10 @@ fn main() {
             r.steps.to_string(),
             r.violations.to_string(),
             format!("{:.3}", r.full_grad_sweeps),
+            r.full_sweeps.to_string(),
+            r.partial_sweeps.to_string(),
+            r.pack_hits.to_string(),
+            r.pack_misses.to_string(),
         ]);
     }
     table.print();
@@ -351,18 +480,28 @@ fn main() {
     } else {
         let s = find(p_max, "gather", "strong", "parallel", "warm").wall_s
             / find(p_max, "packed", "strong", "parallel", "warm").wall_s.max(1e-12);
-        println!("packed over gather at p={p_max} (warm, parallel): {s:.2}x");
+        let w = find(p_max, "packed", "strong", "parallel", "warm");
+        println!(
+            "packed over gather at p={p_max} (warm, parallel): {s:.2}x (pack cache {}h/{}m on the warm fit)",
+            w.pack_hits, w.pack_misses
+        );
         Some(s)
     };
     // The screening-policy comparison: full-gradient sweep work on the
     // warm parallel path at the largest size — the quantity the hybrid
-    // strategy exists to reduce.
+    // strategy exists to reduce. Both sides come from the registry deltas
+    // captured around those fits.
     let sweep_reduction = if run_strong && run_hybrid {
-        let strong = find(p_max, default_engine, "strong", "parallel", "warm").full_grad_sweeps;
-        let hybrid = find(p_max, default_engine, "hybrid", "parallel", "warm").full_grad_sweeps;
-        let reduction = 1.0 - hybrid / strong.max(1e-12);
+        let strong = find(p_max, default_engine, "strong", "parallel", "warm");
+        let hybrid = find(p_max, default_engine, "hybrid", "parallel", "warm");
+        let reduction = 1.0 - hybrid.full_grad_sweeps / strong.full_grad_sweeps.max(1e-12);
         println!(
-            "full-gradient sweeps at p={p_max} (warm, parallel): strong {strong:.2}, hybrid {hybrid:.2} ({:.0}% fewer)",
+            "full-gradient sweeps at p={p_max} (warm, parallel): strong {:.2} ({}F), hybrid {:.2} ({}F+{}P, {:.0}% fewer p-equivalents)",
+            strong.full_grad_sweeps,
+            strong.full_sweeps,
+            hybrid.full_grad_sweeps,
+            hybrid.full_sweeps,
+            hybrid.partial_sweeps,
             reduction * 100.0
         );
         Some(reduction)
@@ -443,12 +582,20 @@ fn main() {
                             ("steps", Json::Num(r.steps as f64)),
                             ("violations", Json::Num(r.violations as f64)),
                             ("full_grad_sweeps", Json::Num(r.full_grad_sweeps)),
+                            ("full_sweeps", Json::Num(r.full_sweeps as f64)),
+                            ("partial_sweeps", Json::Num(r.partial_sweeps as f64)),
+                            ("pack_hits", Json::Num(r.pack_hits as f64)),
+                            ("pack_misses", Json::Num(r.pack_misses as f64)),
                         ])
                     })
                     .collect(),
             ),
         ),
         ("speedup", Json::obj(speedup_fields)),
+        (
+            "obs",
+            Json::obj(vec![("disabled_span_ns", Json::Num(span_overhead_ns))]),
+        ),
         ("table", table.to_json()),
     ]);
     let out_path =

@@ -244,6 +244,68 @@ mod tests {
     }
 
     #[test]
+    fn timing_single_sample_is_degenerate_but_defined() {
+        let t = Timing::from_samples(vec![5.0]);
+        assert_eq!(t.median(), 5.0);
+        assert_eq!(t.mean(), 5.0);
+        assert_eq!(t.quantile(0.0), 5.0);
+        assert_eq!(t.quantile(0.95), 5.0);
+        assert_eq!(t.quantile(1.0), 5.0);
+        // one sample has no spread estimate: ci95 is 0 by definition
+        assert_eq!(t.ci95(), 0.0);
+    }
+
+    #[test]
+    fn timing_quantiles_interpolate_even_and_odd_lengths() {
+        // odd length: the median is the middle sample, exactly
+        let odd = Timing::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(odd.median(), 2.0);
+        // h = (n-1)·q: q=0.25 on [1,2,3] lands at h=0.5 → 1.5
+        assert!((odd.quantile(0.25) - 1.5).abs() < 1e-12);
+        // even length: linear interpolation between the middle pair
+        let even = Timing::from_samples(vec![4.0, 1.0, 3.0, 2.0]);
+        assert_eq!(even.median(), 2.5);
+        // q=0.25 → h=0.75 → 1.75; q=0.95 → h=2.85 → 3.85
+        assert!((even.quantile(0.25) - 1.75).abs() < 1e-12);
+        assert!((even.quantile(0.95) - 3.85).abs() < 1e-12);
+        // out-of-range q clamps to the extremes
+        assert_eq!(even.quantile(-0.5), 1.0);
+        assert_eq!(even.quantile(1.5), 4.0);
+    }
+
+    #[test]
+    fn timing_ci95_matches_hand_computation() {
+        // [1,2,3]: mean 2, sample var 1 → 1.96·sqrt(1/3)
+        let odd = Timing::from_samples(vec![1.0, 2.0, 3.0]);
+        assert!((odd.ci95() - 1.96 * (1.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        // [1,2,3,4]: mean 2.5, sample var 5/3 → 1.96·sqrt(5/12)
+        let even = Timing::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((even.ci95() - 1.96 * (5.0f64 / 12.0).sqrt()).abs() < 1e-12);
+        // identical samples: zero spread
+        let flat = Timing::from_samples(vec![2.0, 2.0, 2.0]);
+        assert_eq!(flat.ci95(), 0.0);
+    }
+
+    #[test]
+    fn table_to_json_escapes_cell_strings() {
+        let mut t = Table::new(r#"quotes " and \ slashes"#, &["name", "value"]);
+        t.row(vec![r#"he said "hi""#.into(), "a\\b\nc\td".into()]);
+        let j = t.to_json();
+        // the serialized line must parse back to the identical structure,
+        // so every quote/backslash/control character survived escaping
+        let text = j.to_string();
+        let re = crate::jsonio::Json::parse(&text).unwrap();
+        assert_eq!(re, j);
+        let rows = re.field("rows").unwrap().items();
+        assert_eq!(rows[0].items()[0].as_str(), Some(r#"he said "hi""#));
+        assert_eq!(rows[0].items()[1].as_str(), Some("a\\b\nc\td"));
+        assert_eq!(
+            re.field("title").unwrap().as_str(),
+            Some(r#"quotes " and \ slashes"#)
+        );
+    }
+
+    #[test]
     fn fmt_helpers() {
         assert_eq!(fmt_secs(0.0123), "12.3ms");
         assert_eq!(fmt_secs(2.5), "2.50s");

@@ -30,6 +30,10 @@ use super::{parse_finite, Format, Ingested, IngestError, IngestOptions, LineRead
 /// Load a dense CSV file as a [`Problem`](crate::slope::family::Problem).
 pub fn load_csv(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestError> {
     // ---- pass 1: header, field count, row count -------------------------
+    let mut pass_span = crate::obs::trace::span("ingest_pass");
+    pass_span.s("format", "csv");
+    pass_span.u("pass", 1);
+    crate::obs::registry::INGEST_PASSES.inc();
     let mut r1 = LineReader::open(path, opts.chunk_bytes)?;
     let mut n_rows = 0usize;
     let mut n_fields = 0usize;
@@ -66,8 +70,15 @@ pub fn load_csv(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestErr
     if n_rows == 0 {
         return Err(IngestError::Empty { path: path.to_path_buf() });
     }
+    pass_span.u("rows", n_rows as u64);
+    drop(pass_span);
+    crate::obs::registry::INGEST_ROWS.add(n_rows as u64);
 
     // ---- pass 2: parse into exactly-sized buffers -----------------------
+    let mut pass_span = crate::obs::trace::span("ingest_pass");
+    pass_span.s("format", "csv");
+    pass_span.u("pass", 2);
+    crate::obs::registry::INGEST_PASSES.inc();
     let p = n_fields - 1;
     let y_idx = match opts.y_col {
         YCol::First => 0,
@@ -109,6 +120,9 @@ pub fn load_csv(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestErr
     if row != n_rows || y.len() != n_rows || r2.hash() != r1.hash() {
         return Err(IngestError::Changed { path: path.to_path_buf() });
     }
+    pass_span.u("rows", row as u64);
+    drop(pass_span);
+    crate::obs::registry::INGEST_ROWS.add(row as u64);
 
     let x = Design::Dense(Mat::from_col_major(n_rows, p, xbuf));
     let (problem, stats, intercept) = super::finish(x, y, opts)?;

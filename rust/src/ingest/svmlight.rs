@@ -53,6 +53,10 @@ pub const DEFAULT_MAX_FEATURES: usize = 1 << 24;
 /// [`Problem`](crate::slope::family::Problem).
 pub fn load_svmlight(path: &Path, opts: &IngestOptions) -> Result<Ingested, IngestError> {
     // ---- pass 1: per-column nonzero counts ------------------------------
+    let mut pass_span = crate::obs::trace::span("ingest_pass");
+    pass_span.s("format", "svmlight");
+    pass_span.u("pass", 1);
+    crate::obs::registry::INGEST_PASSES.inc();
     let mut r1 = LineReader::open(path, opts.chunk_bytes)?;
     let mut counts: Vec<usize> = Vec::new();
     let mut n_rows = 0usize;
@@ -145,6 +149,9 @@ pub fn load_svmlight(path: &Path, opts: &IngestOptions) -> Result<Ingested, Inge
     }
     let p = p_hint.unwrap_or(0).max(counts.len());
     counts.resize(p, 0);
+    pass_span.u("rows", n_rows as u64);
+    drop(pass_span);
+    crate::obs::registry::INGEST_ROWS.add(n_rows as u64);
 
     // Exact-size CSC buffers: colptr as the prefix sum of the counts,
     // per-column write cursors starting at each column's span.
@@ -161,6 +168,10 @@ pub fn load_svmlight(path: &Path, opts: &IngestOptions) -> Result<Ingested, Inge
     let mut y = Vec::with_capacity(n_rows);
 
     // ---- pass 2: fill ---------------------------------------------------
+    let mut pass_span = crate::obs::trace::span("ingest_pass");
+    pass_span.s("format", "svmlight");
+    pass_span.u("pass", 2);
+    crate::obs::registry::INGEST_PASSES.inc();
     let mut r2 = LineReader::open(path, opts.chunk_bytes)?;
     let mut row = 0usize;
     while r2.next_line()? {
@@ -203,6 +214,9 @@ pub fn load_svmlight(path: &Path, opts: &IngestOptions) -> Result<Ingested, Inge
         return Err(IngestError::Changed { path: path.to_path_buf() });
     }
     debug_assert!(cursor.iter().zip(colptr.iter().skip(1)).all(|(c, e)| c == e));
+    pass_span.u("rows", row as u64);
+    drop(pass_span);
+    crate::obs::registry::INGEST_ROWS.add(row as u64);
 
     let x = Design::Sparse(Csc::from_parts(n_rows, p, colptr, rowidx, values));
     let (problem, stats, intercept) = super::finish(x, y, opts)?;

@@ -26,6 +26,10 @@
 //!   svmlight/libsvm readers with bounded-memory two-pass builders, strict
 //!   typed validation and content fingerprinting (`fit --data file.csv`,
 //!   serve's `dataset_from_file`).
+//! * [`obs`] — the observability layer: a global counter/gauge registry
+//!   over the hot seams (kernels, caches, solver, screening), an opt-in
+//!   span/event tracer with a JSONL sink (`--trace`), and the trace
+//!   profiler behind the `profile` subcommand (DESIGN.md §11).
 //! * substrates built for the offline environment: [`rng`], [`linalg`],
 //!   [`pool`], [`cli`], [`jsonio`], [`check`] and [`benchkit`].
 //!
@@ -40,6 +44,7 @@ pub mod data;
 pub mod ingest;
 pub mod jsonio;
 pub mod linalg;
+pub mod obs;
 pub mod pool;
 pub mod rng;
 pub mod runtime;

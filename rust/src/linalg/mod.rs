@@ -32,6 +32,23 @@ pub use packed::{PackCache, PackedDesign, PackedSet};
 pub use par::ParConfig;
 pub use sparse::Csc;
 
+use crate::obs::registry as obsreg;
+
+/// Count one gather-kernel dispatch: the invocation, its element-work
+/// (`rows × cols` cells; for sparse designs this over-counts actual
+/// nonzero work but keeps one definition across storage), and whether
+/// the parallel plan split it (`chunks > 1`) or it ran serially.
+#[inline]
+fn note_gather(calls: &obsreg::Counter, rows: usize, cols: usize, chunks: usize) {
+    calls.inc();
+    obsreg::GATHER_CELLS.add((rows as u64).saturating_mul(cols as u64));
+    if chunks > 1 {
+        obsreg::PARALLEL_CALLS.inc();
+    } else {
+        obsreg::SERIAL_CALLS.inc();
+    }
+}
+
 /// A design matrix: dense or sparse, plus optional column subsetting used
 /// by the screened subproblems.
 #[derive(Clone, Debug)]
@@ -61,6 +78,7 @@ impl Design {
 
     /// `out = X v` (dense result).
     pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
+        note_gather(&obsreg::GEMV_CALLS, self.nrows(), self.ncols(), 1);
         match self {
             Design::Dense(m) => m.gemv(v, out),
             Design::Sparse(m) => m.gemv(v, out),
@@ -69,6 +87,12 @@ impl Design {
 
     /// `out = X v` with a [`ParConfig`] thread budget.
     pub fn gemv_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        note_gather(
+            &obsreg::GEMV_CALLS,
+            self.nrows(),
+            self.ncols(),
+            par.plan(self.nrows(), self.ncols()),
+        );
         match self {
             Design::Dense(m) => m.gemv_with(v, out, par),
             Design::Sparse(m) => m.gemv_with(v, out, par),
@@ -77,6 +101,7 @@ impl Design {
 
     /// `out = Xᵀ v`.
     pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
+        note_gather(&obsreg::GEMV_T_CALLS, self.nrows(), self.ncols(), 1);
         match self {
             Design::Dense(m) => m.gemv_t(v, out),
             Design::Sparse(m) => m.gemv_t(v, out),
@@ -86,6 +111,12 @@ impl Design {
     /// `out = Xᵀ v` with a thread budget — the full-gradient KKT sweep
     /// kernel, the dominant per-path-step cost once screening works.
     pub fn gemv_t_with(&self, v: &[f64], out: &mut [f64], par: ParConfig) {
+        note_gather(
+            &obsreg::GEMV_T_CALLS,
+            self.nrows(),
+            self.ncols(),
+            par.plan(self.ncols(), self.nrows()),
+        );
         match self {
             Design::Dense(m) => m.gemv_t_with(v, out, par),
             Design::Sparse(m) => m.gemv_t_with(v, out, par),
@@ -94,6 +125,7 @@ impl Design {
 
     /// `out = X[:, cols] v` for a column subset.
     pub fn gemv_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        note_gather(&obsreg::GEMV_SUBSET_CALLS, self.nrows(), cols.len(), 1);
         match self {
             Design::Dense(m) => m.gemv_subset(cols, v, out),
             Design::Sparse(m) => m.gemv_subset(cols, v, out),
@@ -104,6 +136,11 @@ impl Design {
     /// row slab; sparse subsets have no disjoint partition and stay
     /// serial — screened subsets are small by construction).
     pub fn gemv_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        let chunks = match self {
+            Design::Dense(_) => par.plan(self.nrows(), cols.len()),
+            Design::Sparse(_) => 1,
+        };
+        note_gather(&obsreg::GEMV_SUBSET_CALLS, self.nrows(), cols.len(), chunks);
         match self {
             Design::Dense(m) => m.gemv_subset_with(cols, v, out, par),
             Design::Sparse(m) => m.gemv_subset(cols, v, out),
@@ -112,6 +149,7 @@ impl Design {
 
     /// `out = X[:, cols]ᵀ v`.
     pub fn gemv_t_subset(&self, cols: &[usize], v: &[f64], out: &mut [f64]) {
+        note_gather(&obsreg::GEMV_T_SUBSET_CALLS, self.nrows(), cols.len(), 1);
         match self {
             Design::Dense(m) => m.gemv_t_subset(cols, v, out),
             Design::Sparse(m) => m.gemv_t_subset(cols, v, out),
@@ -120,6 +158,12 @@ impl Design {
 
     /// `out = X[:, cols]ᵀ v` with a thread budget.
     pub fn gemv_t_subset_with(&self, cols: &[usize], v: &[f64], out: &mut [f64], par: ParConfig) {
+        note_gather(
+            &obsreg::GEMV_T_SUBSET_CALLS,
+            self.nrows(),
+            cols.len(),
+            par.plan(cols.len(), self.nrows()),
+        );
         match self {
             Design::Dense(m) => m.gemv_t_subset_with(cols, v, out, par),
             Design::Sparse(m) => m.gemv_t_subset_with(cols, v, out, par),

@@ -44,6 +44,20 @@ use std::sync::{Arc, Mutex};
 use super::dense::dot;
 use super::par::{chunk_size, ParConfig};
 use super::Design;
+use crate::obs::registry as obsreg;
+
+/// Count one packed-kernel dispatch: the invocation, its element-work,
+/// and the serial/parallel classification of its plan.
+#[inline]
+fn note_packed(calls: &obsreg::Counter, rows: usize, cols: usize, chunks: usize) {
+    calls.inc();
+    obsreg::PACKED_CELLS.add((rows as u64).saturating_mul(cols as u64));
+    if chunks > 1 {
+        obsreg::PARALLEL_CALLS.inc();
+    } else {
+        obsreg::SERIAL_CALLS.inc();
+    }
+}
 
 /// A contiguous column-major copy of a subset of a design's columns.
 #[derive(Clone, Debug, PartialEq)]
@@ -153,6 +167,7 @@ impl PackedDesign {
     pub fn gemv(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.cols.len());
         assert_eq!(out.len(), self.nrows);
+        note_packed(&obsreg::PACKED_GEMV_CALLS, self.nrows, self.cols.len(), 1);
         out.fill(0.0);
         self.gemv_rows(v, out, 0);
     }
@@ -168,6 +183,7 @@ impl PackedDesign {
             self.gemv(v, out);
             return;
         }
+        note_packed(&obsreg::PACKED_GEMV_CALLS, self.nrows, self.cols.len(), chunks);
         let slab = chunk_size(self.nrows, chunks);
         std::thread::scope(|scope| {
             for (ci, rows) in out.chunks_mut(slab).enumerate() {
@@ -226,6 +242,7 @@ impl PackedDesign {
     pub fn gemv_t(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.nrows);
         assert_eq!(out.len(), self.cols.len());
+        note_packed(&obsreg::PACKED_GEMV_T_CALLS, self.nrows, self.cols.len(), 1);
         self.gemv_t_ranks(v, out, 0);
     }
 
@@ -240,6 +257,7 @@ impl PackedDesign {
             self.gemv_t(v, out);
             return;
         }
+        note_packed(&obsreg::PACKED_GEMV_T_CALLS, self.nrows, self.cols.len(), chunks);
         let slab = chunk_size(self.cols.len(), chunks);
         std::thread::scope(|scope| {
             for (ci, ranks) in out.chunks_mut(slab).enumerate() {
@@ -446,10 +464,12 @@ impl PackCache {
         match inner.slots.get(&key) {
             Some(set) if set.coefs == sorted_coefs => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                obsreg::PACK_CACHE_HITS.inc();
                 Some(Arc::clone(set))
             }
             _ => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                obsreg::PACK_CACHE_MISSES.inc();
                 None
             }
         }
@@ -466,6 +486,7 @@ impl PackCache {
         if add > self.max_bytes {
             return;
         }
+        obsreg::PACK_CACHE_STORES.inc();
         let mut inner = self.inner.lock().unwrap();
         match inner.slots.insert(key, set) {
             Some(old) => {
@@ -482,6 +503,7 @@ impl PackCache {
                 Some(oldest) => {
                     if let Some(rm) = inner.slots.remove(&oldest) {
                         inner.bytes -= rm.bytes();
+                        obsreg::PACK_CACHE_EVICTIONS.inc();
                     }
                 }
                 None => break,

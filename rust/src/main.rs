@@ -7,9 +7,12 @@
 //!   info    show the AOT artifact manifest and PJRT platform
 //!   serve   run the fit server (Unix socket or stdio transport)
 //!   client  send newline-delimited JSON requests to a running server
+//!   profile summarize a `--trace` JSONL file (self-time, events, counters)
 //!
 //! Examples:
 //!   slope-screen fit --n 200 --p 5000 --rho 0.4 --family gaussian
+//!   slope-screen fit --n 200 --p 5000 --trace /tmp/fit.jsonl
+//!   slope-screen profile /tmp/fit.jsonl
 //!   slope-screen fit --dataset golub --screen previous
 //!   slope-screen fit --data genes.csv --family binomial
 //!   slope-screen fit --data dorothea.svm --family binomial --no-standardize
@@ -59,6 +62,7 @@ fn main() {
         .opt("queue", "64", "serve: admission-queue capacity (backpressure bound)")
         .opt("fit-threads", "0", "serve: kernel threads per fit job (0 = threads split across the pool)")
         .opt("json", "", "client: a single request line to send")
+        .opt("trace", "", "fit/cv/serve: write a JSONL span/event trace to this path (read it back with `profile`)")
         .flag("stdio", "serve: speak NDJSON over stdin/stdout instead of a socket")
         .flag("no-cache", "serve: disable the warm-start/model cache")
         .parse();
@@ -75,6 +79,15 @@ fn main() {
         .first()
         .cloned()
         .unwrap_or_else(|| "fit".to_string());
+    // --trace turns the observability tracer on for the whole command;
+    // disable() writes the closing registry snapshot and flushes.
+    let trace = parsed.get("trace").to_string();
+    if !trace.is_empty() {
+        if let Err(e) = slope_screen::obs::trace::enable_file(std::path::Path::new(&trace)) {
+            eprintln!("--trace {trace}: {e}");
+            std::process::exit(1);
+        }
+    }
     match cmd.as_str() {
         "fit" => cmd_fit(&parsed),
         "cv" => cmd_cv(&parsed),
@@ -82,10 +95,15 @@ fn main() {
         "info" => cmd_info(),
         "serve" => cmd_serve(&parsed),
         "client" => cmd_client(&parsed),
+        "profile" => cmd_profile(&parsed),
         other => {
-            eprintln!("unknown subcommand `{other}` (expected fit|cv|export|info|serve|client)");
+            eprintln!("unknown subcommand `{other}` (expected fit|cv|export|info|serve|client|profile)");
             std::process::exit(2);
         }
+    }
+    if !trace.is_empty() {
+        slope_screen::obs::trace::disable();
+        eprintln!("trace written to {trace}");
     }
 }
 
@@ -396,6 +414,62 @@ fn cmd_client(parsed: &slope_screen::cli::Parsed) {
                 std::process::exit(1);
             }
         }
+    }
+}
+
+/// Summarize a `--trace` JSONL file: per-span self-time (wall time minus
+/// nested children, so the hot layer is the top row), point-event counts,
+/// and the closing registry snapshot — with the paper's headline number,
+/// gradient-sweep reduction, called out when the counters carry it.
+fn cmd_profile(parsed: &slope_screen::cli::Parsed) {
+    use slope_screen::benchkit::Table;
+    let positional = parsed.positional();
+    let Some(path) = positional.get(1) else {
+        eprintln!("profile: usage: slope-screen profile <trace.jsonl>");
+        std::process::exit(2);
+    };
+    let prof = slope_screen::obs::profile::profile_file(std::path::Path::new(path))
+        .unwrap_or_else(|e| {
+            eprintln!("profile: {e}");
+            std::process::exit(1);
+        });
+    println!("{path}: {} records", prof.records);
+    let mut spans = Table::new(
+        "span self-time",
+        &["span", "count", "total_s", "self_s", "mean_ms", "max_ms"],
+    );
+    for s in &prof.spans {
+        spans.row(vec![
+            s.name.clone(),
+            s.count.to_string(),
+            format!("{:.4}", s.total_us as f64 / 1e6),
+            format!("{:.4}", s.self_us as f64 / 1e6),
+            format!("{:.3}", s.total_us as f64 / 1e3 / s.count.max(1) as f64),
+            format!("{:.3}", s.max_us as f64 / 1e3),
+        ]);
+    }
+    spans.print();
+    if !prof.events.is_empty() {
+        let mut events = Table::new("events", &["event", "count"]);
+        for (name, n) in &prof.events {
+            events.row(vec![name.clone(), n.to_string()]);
+        }
+        events.print();
+    }
+    if !prof.counters.is_empty() {
+        let mut counters = Table::new("counters", &["counter", "value"]);
+        for (name, v) in &prof.counters {
+            counters.row(vec![name.clone(), format!("{v}")]);
+        }
+        counters.print();
+    }
+    let get = |key: &str| prof.counters.iter().find(|(n, _)| n == key).map(|(_, v)| *v);
+    if let (Some(full), Some(partial), Some(cols)) =
+        (get("grad_full_sweeps"), get("grad_partial_sweeps"), get("grad_sweep_cols"))
+    {
+        println!(
+            "\ngradient sweeps: {full:.0} full + {partial:.0} partial, {cols:.0} columns touched"
+        );
     }
 }
 

@@ -1,0 +1,35 @@
+//! Observability substrate: a global counter/gauge registry, a structured
+//! span/event tracer, and trace-profile aggregation (DESIGN.md §11).
+//!
+//! Three pillars, all zero-dependency:
+//!
+//! * [`registry`] — process-global monotonic counters and level gauges on
+//!   lock-free [`std::sync::atomic::AtomicU64`] cells, registered by
+//!   static name. The hot seams (linalg kernels, pack cache, FISTA,
+//!   gradient sweeps, screening sets, serve queue) bump these
+//!   unconditionally: one relaxed `fetch_add` per event is cheaper than
+//!   any branch worth protecting it with. Snapshots render as JSON (the
+//!   serve `metrics` op) and Prometheus text exposition.
+//! * [`trace`] — an opt-in structured tracer: thread-aware spans (start
+//!   time + duration) and point events with typed key/value fields,
+//!   buffered per-thread and drained as JSONL through a process-global
+//!   sink. Off by default; [`trace::disabled`] is a single relaxed atomic
+//!   load, so instrumentation left in the hot path costs a branch and
+//!   nothing else. `--trace out.jsonl` on `fit`/`cv`/`serve` enables it.
+//! * [`profile`] — reads a trace JSONL back and aggregates per-span
+//!   self-time (total minus time attributed to nested spans on the same
+//!   thread), the data behind the `profile` CLI subcommand.
+//!
+//! The overhead contract is testable, not aspirational: counters are
+//! always compiled in and never branch; spans compile to a load+branch
+//! when disabled; and `tests/integration_obs.rs` asserts that fits with
+//! tracing enabled are *bitwise identical* to uninstrumented ones across
+//! thread budgets — instrumentation must observe the solver, never
+//! perturb it.
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{snapshot, Counter, Kind};
+pub use trace::{disabled, event, span, Span};

@@ -1,0 +1,199 @@
+//! Trace-profile aggregation: read a JSONL trace back and summarize
+//! per-span self-time, event counts, and the final counter snapshot.
+//!
+//! Self-time nests spans per thread: spans on one `tid` whose intervals
+//! are contained in another's are children, and a parent's self-time is
+//! its duration minus the time spent in its children. RAII spans nest
+//! properly by construction, so a simple interval-stack sweep over the
+//! start-sorted spans recovers the tree without parent ids in the
+//! records.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::jsonio::Json;
+
+/// Aggregate over every completed span with one name.
+#[derive(Clone, Debug)]
+pub struct SpanStat {
+    /// Span name.
+    pub name: String,
+    /// Completed spans observed.
+    pub count: u64,
+    /// Total duration (sum of `dur_us`), microseconds.
+    pub total_us: u64,
+    /// Self-time: total minus time inside nested child spans.
+    pub self_us: u64,
+    /// Longest single span.
+    pub max_us: u64,
+}
+
+/// Aggregated trace profile.
+#[derive(Clone, Debug, Default)]
+pub struct Profile {
+    /// Per-name span aggregates, sorted by self-time (descending).
+    pub spans: Vec<SpanStat>,
+    /// Per-name point-event counts, sorted by name.
+    pub events: Vec<(String, u64)>,
+    /// The final registry snapshot, if the trace carries a `counters`
+    /// record (written by `obs::trace::disable`).
+    pub counters: Vec<(String, f64)>,
+    /// Records parsed (all kinds).
+    pub records: usize,
+}
+
+struct RawSpan {
+    name: String,
+    t_us: u64,
+    dur_us: u64,
+}
+
+/// Parse and aggregate a trace file.
+pub fn profile_file(path: &Path) -> Result<Profile, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read trace {}: {e}", path.display()))?;
+    profile_str(&text)
+}
+
+/// Parse and aggregate trace JSONL text.
+pub fn profile_str(text: &str) -> Result<Profile, String> {
+    let mut by_tid: BTreeMap<u64, Vec<RawSpan>> = BTreeMap::new();
+    let mut events: BTreeMap<String, u64> = BTreeMap::new();
+    let mut counters: Vec<(String, f64)> = Vec::new();
+    let mut records = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+        records += 1;
+        let ev = j.field("ev").and_then(|e| e.as_str()).unwrap_or("");
+        match ev {
+            "span" => {
+                let name = j
+                    .field("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| format!("trace line {}: span without name", lineno + 1))?
+                    .to_string();
+                let t_us = j.field("t_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let dur_us = j.field("dur_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let tid = j.field("tid").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                by_tid.entry(tid).or_default().push(RawSpan { name, t_us, dur_us });
+            }
+            "event" => {
+                let name = j.field("name").and_then(|n| n.as_str()).unwrap_or("?").to_string();
+                *events.entry(name).or_insert(0) += 1;
+            }
+            "counters" => {
+                if let Some(Json::Obj(map)) = j.field("counters") {
+                    counters = map
+                        .iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                        .collect();
+                }
+            }
+            // meta and unknown kinds are counted but not aggregated, so
+            // newer trace writers stay readable by older profilers.
+            _ => {}
+        }
+    }
+
+    let mut agg: BTreeMap<String, SpanStat> = BTreeMap::new();
+    for spans in by_tid.values_mut() {
+        // Start-ordered; at equal starts the longer span is the parent.
+        spans.sort_by(|a, b| a.t_us.cmp(&b.t_us).then(b.dur_us.cmp(&a.dur_us)));
+        // Interval stack: (end_us, index into `spans`); child durations
+        // accumulate against the innermost enclosing span.
+        let mut child_us: Vec<u64> = vec![0; spans.len()];
+        let mut stack: Vec<(u64, usize)> = Vec::new();
+        for i in 0..spans.len() {
+            let (start, end) = (spans[i].t_us, spans[i].t_us + spans[i].dur_us);
+            while let Some(&(stack_end, _)) = stack.last() {
+                if start < stack_end {
+                    break;
+                }
+                stack.pop();
+            }
+            if let Some(&(_, parent)) = stack.last() {
+                child_us[parent] += spans[i].dur_us;
+            }
+            stack.push((end, i));
+        }
+        for (i, s) in spans.iter().enumerate() {
+            let stat = agg.entry(s.name.clone()).or_insert_with(|| SpanStat {
+                name: s.name.clone(),
+                count: 0,
+                total_us: 0,
+                self_us: 0,
+                max_us: 0,
+            });
+            stat.count += 1;
+            stat.total_us += s.dur_us;
+            stat.self_us += s.dur_us.saturating_sub(child_us[i]);
+            stat.max_us = stat.max_us.max(s.dur_us);
+        }
+    }
+    let mut spans: Vec<SpanStat> = agg.into_values().collect();
+    spans.sort_by(|a, b| b.self_us.cmp(&a.self_us).then(a.name.cmp(&b.name)));
+    Ok(Profile {
+        spans,
+        events: events.into_iter().collect(),
+        counters,
+        records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_spans_attribute_self_time_to_the_parent() {
+        let text = r#"
+{"ev":"meta","version":1}
+{"ev":"span","name":"inner","tid":0,"t_us":100,"dur_us":30}
+{"ev":"span","name":"inner","tid":0,"t_us":150,"dur_us":20}
+{"ev":"span","name":"outer","tid":0,"t_us":90,"dur_us":200}
+{"ev":"span","name":"outer","tid":1,"t_us":0,"dur_us":50}
+{"ev":"event","name":"tick","tid":0,"t_us":120}
+{"ev":"event","name":"tick","tid":0,"t_us":121}
+{"ev":"counters","counters":{"fista_iterations":7}}
+"#;
+        let p = profile_str(text).expect("profile");
+        assert_eq!(p.records, 8);
+        let outer = p.spans.iter().find(|s| s.name == "outer").unwrap();
+        let inner = p.spans.iter().find(|s| s.name == "inner").unwrap();
+        assert_eq!(outer.count, 2);
+        assert_eq!(outer.total_us, 250);
+        // tid 0 outer: 200 - (30 + 20) children; tid 1 outer: all self
+        assert_eq!(outer.self_us, 150 + 50);
+        assert_eq!(outer.max_us, 200);
+        assert_eq!(inner.count, 2);
+        assert_eq!(inner.total_us, 50);
+        assert_eq!(inner.self_us, 50);
+        assert_eq!(p.events, vec![("tick".to_string(), 2)]);
+        assert_eq!(p.counters, vec![("fista_iterations".to_string(), 7.0)]);
+    }
+
+    #[test]
+    fn spans_on_different_tids_do_not_nest() {
+        let text = concat!(
+            r#"{"ev":"span","name":"a","tid":0,"t_us":0,"dur_us":100}"#,
+            "\n",
+            r#"{"ev":"span","name":"b","tid":1,"t_us":10,"dur_us":50}"#,
+            "\n",
+        );
+        let p = profile_str(text).expect("profile");
+        let a = p.spans.iter().find(|s| s.name == "a").unwrap();
+        assert_eq!(a.self_us, 100, "a cross-thread span must not steal self-time");
+    }
+
+    #[test]
+    fn bad_json_is_an_error_blank_lines_are_not() {
+        assert!(profile_str("{not json}").is_err());
+        let p = profile_str("\n\n").expect("blank trace");
+        assert_eq!(p.records, 0);
+        assert!(p.spans.is_empty());
+    }
+}

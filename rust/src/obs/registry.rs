@@ -1,0 +1,235 @@
+//! Global counter/gauge registry.
+//!
+//! Every cell is a `static` [`Counter`] — a named, documented
+//! [`AtomicU64`] — listed in the [`ALL`] table. Registration is by
+//! static name at compile time: no locks, no lazy maps, no allocation on
+//! the update path. An update is one relaxed `fetch_add`/`store`, cheap
+//! enough to leave in the innermost kernels unconditionally (the
+//! tracing-off overhead gate in `benches/path_speed.rs` holds the line).
+//!
+//! Counters are monotonic event counts; gauges are levels (queue depth,
+//! in-flight jobs) written with [`Counter::set`]. The distinction only
+//! matters for exposition: Prometheus renders `# TYPE ... counter` with a
+//! `_total` suffix vs `# TYPE ... gauge`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Exposition kind: monotonic counter or level gauge.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Monotonically increasing event count.
+    Counter,
+    /// Instantaneous level; written with [`Counter::set`].
+    Gauge,
+}
+
+/// A named atomic cell in the global registry.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    kind: Kind,
+    cell: AtomicU64,
+}
+
+impl Counter {
+    /// A fresh cell (used by the `static` declarations below).
+    pub const fn new(name: &'static str, help: &'static str, kind: Kind) -> Counter {
+        Counter { name, help, kind, cell: AtomicU64::new(0) }
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n` (no-op for 0, so callers can pass computed work sizes
+    /// without branching themselves).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if n != 0 {
+            self.cell.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Set a gauge level.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.cell.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+
+    /// Registered name (snake_case, un-prefixed; exposition adds the
+    /// `slope_` namespace).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// One-line description (the Prometheus `# HELP` text).
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+
+    /// Counter or gauge.
+    pub fn kind(&self) -> Kind {
+        self.kind
+    }
+
+    /// Zero the cell. Benchmarks and tests measure deltas instead where
+    /// they can — this is process-global state.
+    pub fn reset(&self) {
+        self.cell.store(0, Ordering::Relaxed);
+    }
+}
+
+macro_rules! registry {
+    ($( $id:ident : $kind:ident, $name:literal, $help:literal; )*) => {
+        $(
+            #[doc = $help]
+            pub static $id: Counter = Counter::new($name, $help, Kind::$kind);
+        )*
+        /// Every registered cell, in declaration order.
+        pub static ALL: &[&Counter] = &[ $( &$id, )* ];
+    };
+}
+
+registry! {
+    // --- linalg kernels (gather engine: Design dispatch) ---
+    GEMV_CALLS: Counter, "linalg_gemv_calls", "full X*v kernel invocations";
+    GEMV_T_CALLS: Counter, "linalg_gemv_t_calls", "full X^T*v kernel invocations (the full-gradient sweep kernel)";
+    GEMV_SUBSET_CALLS: Counter, "linalg_gemv_subset_calls", "column-subset X*v kernel invocations";
+    GEMV_T_SUBSET_CALLS: Counter, "linalg_gemv_t_subset_calls", "column-subset X^T*v kernel invocations";
+    GATHER_CELLS: Counter, "linalg_gather_cells", "matrix cells touched by gather kernels (rows x cols per call)";
+    PACKED_GEMV_CALLS: Counter, "linalg_packed_gemv_calls", "packed-slab X*v kernel invocations";
+    PACKED_GEMV_T_CALLS: Counter, "linalg_packed_gemv_t_calls", "packed-slab X^T*v kernel invocations";
+    PACKED_CELLS: Counter, "linalg_packed_cells", "matrix cells touched by packed kernels (rows x cols per call)";
+    PARALLEL_CALLS: Counter, "linalg_parallel_calls", "kernel calls whose parallel plan split into >1 chunk";
+    SERIAL_CALLS: Counter, "linalg_serial_calls", "kernel calls that ran on the serial path";
+    // --- pack cache ---
+    PACK_CACHE_HITS: Counter, "pack_cache_hits", "screened-set slab reuses from the pack cache";
+    PACK_CACHE_MISSES: Counter, "pack_cache_misses", "pack-cache lookups that had to pack fresh";
+    PACK_CACHE_STORES: Counter, "pack_cache_stores", "slabs deposited into the pack cache";
+    PACK_CACHE_EVICTIONS: Counter, "pack_cache_evictions", "slabs evicted from the pack cache (count or byte bound)";
+    // --- serve registry (dataset/model caches) ---
+    REGISTRY_MODEL_HITS: Counter, "registry_model_hits", "fit requests answered from the model cache";
+    REGISTRY_MODEL_BUILDS: Counter, "registry_model_builds", "fit requests that built a model (cache miss)";
+    REGISTRY_COALESCED: Counter, "registry_coalesced_waits", "fit requests coalesced onto an identical in-flight build";
+    REGISTRY_DATASET_EVICTIONS: Counter, "registry_dataset_evictions", "interned datasets evicted past the registry cap";
+    // --- FISTA solver ---
+    FISTA_SOLVES: Counter, "fista_solves", "reduced-problem FISTA solves started";
+    FISTA_ITERATIONS: Counter, "fista_iterations", "FISTA iterations across all solves";
+    FISTA_PROX_CALLS: Counter, "fista_prox_calls", "sorted-L1 prox evaluations";
+    FISTA_BACKTRACKS: Counter, "fista_backtracks", "line-search backtracks (step-size halvings)";
+    // --- path driver & screening ---
+    PATH_STEPS: Counter, "path_steps", "path steps (sigma grid points) solved";
+    GRAD_FULL_SWEEPS: Counter, "grad_full_sweeps", "full p-column gradient sweeps (X^T r over every predictor)";
+    GRAD_PARTIAL_SWEEPS: Counter, "grad_partial_sweeps", "partial gradient sweeps over a screened universe";
+    GRAD_SWEEP_COLS: Counter, "grad_sweep_cols", "columns swept by full+partial gradient sweeps (p-equivalents = cols/p)";
+    SCREEN_RULE_COLS: Counter, "screen_rule_cols", "cumulative strong/previous rule set size across steps";
+    SCREEN_SAFE_COLS: Counter, "screen_safe_cols", "cumulative safe-region set size across steps";
+    SCREEN_UNIVERSE_COLS: Counter, "screen_universe_cols", "cumulative screening universe size across steps";
+    KKT_VIOLATIONS: Counter, "kkt_violations", "screened-out predictors that violated KKT on the check sweep";
+    KKT_REFITS: Counter, "kkt_refits", "safeguard refits after KKT violations";
+    // --- ingest ---
+    INGEST_PASSES: Counter, "ingest_passes", "streaming ingest passes over an input file";
+    INGEST_ROWS: Counter, "ingest_rows", "rows parsed by ingest passes";
+    // --- serve queue ---
+    SERVE_QUEUE_DEPTH: Gauge, "serve_queue_depth", "requests holding admission tickets but not yet admitted";
+    SERVE_IN_FLIGHT: Gauge, "serve_in_flight", "admitted (queued-on-pool or running) fit jobs";
+}
+
+/// Name/value pairs for every registered cell, in declaration order.
+pub fn snapshot() -> Vec<(&'static str, u64)> {
+    ALL.iter().map(|c| (c.name(), c.get())).collect()
+}
+
+/// Zero every cell. Sequential harnesses (benches) use this between
+/// measured sections; concurrent code should difference [`snapshot`]s.
+pub fn reset_all() {
+    for c in ALL {
+        c.reset();
+    }
+}
+
+/// Prometheus text exposition of the whole registry: `slope_` namespace,
+/// `_total` suffix on counters, `# HELP`/`# TYPE` headers.
+pub fn render_prometheus(out: &mut String) {
+    for c in ALL {
+        let (suffix, kind) = match c.kind() {
+            Kind::Counter => ("_total", "counter"),
+            Kind::Gauge => ("", "gauge"),
+        };
+        let name = format!("slope_{}{}", c.name(), suffix);
+        out.push_str("# HELP ");
+        out.push_str(&name);
+        out.push(' ');
+        out.push_str(c.help());
+        out.push('\n');
+        out.push_str("# TYPE ");
+        out.push_str(&name);
+        out.push(' ');
+        out.push_str(kind);
+        out.push('\n');
+        out.push_str(&name);
+        out.push(' ');
+        out.push_str(&c.get().to_string());
+        out.push('\n');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_snake_case() {
+        let mut seen = std::collections::BTreeSet::new();
+        for c in ALL {
+            assert!(seen.insert(c.name()), "duplicate counter name {}", c.name());
+            assert!(
+                c.name().chars().all(|ch| ch.is_ascii_lowercase() || ch.is_ascii_digit() || ch == '_'),
+                "non-snake-case counter name {}",
+                c.name()
+            );
+            assert!(!c.help().is_empty());
+        }
+    }
+
+    #[test]
+    fn inc_add_set_are_visible_in_snapshot() {
+        // Deltas, not absolutes: other tests in this process bump the
+        // same global cells concurrently.
+        let before = FISTA_SOLVES.get();
+        FISTA_SOLVES.inc();
+        FISTA_SOLVES.add(4);
+        FISTA_SOLVES.add(0);
+        assert!(FISTA_SOLVES.get() >= before + 5);
+        SERVE_QUEUE_DEPTH.set(17);
+        let snap = snapshot();
+        assert_eq!(snap.len(), ALL.len());
+        assert!(snap.iter().any(|&(n, _)| n == "fista_solves"));
+    }
+
+    #[test]
+    fn prometheus_rendering_has_help_type_and_value() {
+        let mut text = String::new();
+        render_prometheus(&mut text);
+        assert!(text.contains("# HELP slope_fista_iterations_total"));
+        assert!(text.contains("# TYPE slope_fista_iterations_total counter"));
+        assert!(text.contains("# TYPE slope_serve_queue_depth gauge"));
+        // every cell appears with a numeric value line
+        for c in ALL {
+            let suffix = if c.kind() == Kind::Counter { "_total " } else { " " };
+            assert!(
+                text.contains(&format!("slope_{}{}", c.name(), suffix)),
+                "missing exposition for {}",
+                c.name()
+            );
+        }
+    }
+}

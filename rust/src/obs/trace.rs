@@ -1,0 +1,377 @@
+//! Structured span/event tracer with a JSONL sink.
+//!
+//! Off by default: [`disabled`] is a single relaxed atomic load, and an
+//! inert [`Span`] is a no-op on field writes and drop, so trace points
+//! can live permanently in the path driver, ingest, and serve without
+//! costing the solver anything (the differential test in
+//! `tests/integration_obs.rs` proves fits are bitwise unaffected).
+//!
+//! When enabled (`--trace out.jsonl`), records are formatted with
+//! [`crate::jsonio`] and buffered in a per-thread `String`, drained to
+//! the process-global sink when the buffer passes a threshold, on
+//! [`flush`], on thread exit, and on [`disable`]. One record per line:
+//!
+//! ```text
+//! {"ev":"meta","clock":"monotonic_us","version":1}
+//! {"ev":"span","name":"path_step","tid":0,"t_us":412,"dur_us":1890,"sigma":0.73,...}
+//! {"ev":"event","name":"gap_check","tid":0,"t_us":911,"gap":1.3e-4,...}
+//! {"ev":"counters","counters":{"fista_iterations":5123,...}}
+//! ```
+//!
+//! Spans are emitted as single *completed* records (start `t_us` +
+//! `dur_us`) when the RAII guard drops — begin/end pairs carry the same
+//! information in twice the lines. `tid` is a small per-thread ordinal
+//! (assignment order, not the OS id), which is what the profile
+//! aggregator nests self-time within.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::jsonio::Json;
+
+/// Drain a thread's buffer to the sink once it holds this many bytes.
+const FLUSH_BYTES: usize = 8 * 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+/// The process trace epoch: all `t_us` timestamps are micros since this
+/// instant (first touched when tracing is first enabled).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct TlsBuf {
+    tid: u64,
+    buf: String,
+}
+
+impl Drop for TlsBuf {
+    fn drop(&mut self) {
+        if !self.buf.is_empty() {
+            write_to_sink(&std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<TlsBuf> = RefCell::new(TlsBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        buf: String::new(),
+    });
+}
+
+fn lock_sink() -> std::sync::MutexGuard<'static, Option<BufWriter<File>>> {
+    // A panic while holding the sink poisons the lock; tracing must keep
+    // working (or at worst drop records), never cascade the panic.
+    SINK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_to_sink(chunk: &str) {
+    if chunk.is_empty() {
+        return;
+    }
+    let mut guard = lock_sink();
+    if let Some(w) = guard.as_mut() {
+        let _ = w.write_all(chunk.as_bytes());
+    }
+}
+
+/// Fast-path check: `true` when tracing is off (the steady state). One
+/// relaxed load — callers branch on this before doing any span work.
+#[inline]
+pub fn disabled() -> bool {
+    !ENABLED.load(Ordering::Relaxed)
+}
+
+/// Open `path` (created/truncated) as the JSONL sink and enable tracing.
+/// Writes the `meta` header record. Re-enabling replaces the sink.
+pub fn enable_file(path: &Path) -> io::Result<()> {
+    let file = File::create(path)?;
+    let mut writer = BufWriter::new(file);
+    epoch(); // pin the timebase before any span can observe it
+    let meta = Json::obj(vec![
+        ("ev", Json::Str("meta".to_string())),
+        ("version", Json::Num(1.0)),
+        ("clock", Json::Str("monotonic_us".to_string())),
+    ]);
+    writer.write_all(meta.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    *lock_sink() = Some(writer);
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disable tracing, append a final `counters` record (the registry
+/// snapshot), flush, and close the sink. Buffers still held by *other*
+/// live threads are dropped — job boundaries call [`flush`] so this only
+/// loses records from threads killed mid-span.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+    let _ = TLS.try_with(|tls| {
+        let chunk = std::mem::take(&mut tls.borrow_mut().buf);
+        write_to_sink(&chunk);
+    });
+    let mut guard = lock_sink();
+    if let Some(mut w) = guard.take() {
+        let mut counters = BTreeMap::new();
+        for (name, value) in super::registry::snapshot() {
+            counters.insert(name.to_string(), Json::Num(value as f64));
+        }
+        let record = Json::obj(vec![
+            ("ev", Json::Str("counters".to_string())),
+            ("counters", Json::Obj(counters)),
+        ]);
+        let _ = w.write_all(record.to_string().as_bytes());
+        let _ = w.write_all(b"\n");
+        let _ = w.flush();
+    }
+}
+
+/// Drain the calling thread's buffer and flush the sink. Call at job
+/// boundaries (end of a serve request, end of a pool fit job) so
+/// long-lived worker threads don't sit on trace tails.
+pub fn flush() {
+    let _ = TLS.try_with(|tls| {
+        let chunk = std::mem::take(&mut tls.borrow_mut().buf);
+        write_to_sink(&chunk);
+    });
+    let mut guard = lock_sink();
+    if let Some(w) = guard.as_mut() {
+        let _ = w.flush();
+    }
+}
+
+fn emit(mut obj: BTreeMap<String, Json>) {
+    let wrote = TLS.try_with(|tls| {
+        let mut tls = tls.borrow_mut();
+        obj.insert("tid".to_string(), Json::Num(tls.tid as f64));
+        let line = Json::Obj(std::mem::take(&mut obj)).to_string();
+        tls.buf.push_str(&line);
+        tls.buf.push('\n');
+        if tls.buf.len() >= FLUSH_BYTES {
+            let chunk = std::mem::take(&mut tls.buf);
+            write_to_sink(&chunk);
+        }
+    });
+    if wrote.is_err() {
+        // TLS already destroyed (thread teardown): write the record
+        // directly rather than losing it.
+        let mut line = Json::Obj(obj).to_string();
+        line.push('\n');
+        write_to_sink(&line);
+    }
+}
+
+fn record_base(ev: &str, name: &str, t_us: u64) -> BTreeMap<String, Json> {
+    let mut obj = BTreeMap::new();
+    obj.insert("ev".to_string(), Json::Str(ev.to_string()));
+    obj.insert("name".to_string(), Json::Str(name.to_string()));
+    obj.insert("t_us".to_string(), Json::Num(t_us as f64));
+    obj
+}
+
+fn now_us() -> u64 {
+    Instant::now().saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// RAII span: records its start on construction and emits one completed
+/// record (start + duration + fields) when dropped. Inert (all methods
+/// no-ops) when tracing is disabled at construction time.
+pub struct Span {
+    name: &'static str,
+    start: Option<Instant>,
+    fields: Vec<(&'static str, Json)>,
+}
+
+impl Span {
+    /// Whether this span will emit a record (tracing was enabled when it
+    /// was opened). Callers can skip expensive field computation when
+    /// `false`.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.start.is_some()
+    }
+
+    /// Attach a float field.
+    #[inline]
+    pub fn f(&mut self, key: &'static str, value: f64) {
+        if self.active() {
+            self.fields.push((key, Json::Num(value)));
+        }
+    }
+
+    /// Attach an integer field.
+    #[inline]
+    pub fn u(&mut self, key: &'static str, value: u64) {
+        if self.active() {
+            self.fields.push((key, Json::Num(value as f64)));
+        }
+    }
+
+    /// Attach a string field.
+    #[inline]
+    pub fn s(&mut self, key: &'static str, value: &str) {
+        if self.active() {
+            self.fields.push((key, Json::Str(value.to_string())));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let t_us = start.saturating_duration_since(epoch()).as_micros() as u64;
+        let dur_us = start.elapsed().as_micros() as u64;
+        let mut obj = record_base("span", self.name, t_us);
+        obj.insert("dur_us".to_string(), Json::Num(dur_us as f64));
+        for (k, v) in self.fields.drain(..) {
+            obj.insert(k.to_string(), v);
+        }
+        emit(obj);
+    }
+}
+
+/// Open a span. `name` should be a stable, low-cardinality identifier
+/// (`"path_step"`, `"serve_request"`) — per-instance data goes in
+/// fields, not the name.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if disabled() {
+        return Span { name, start: None, fields: Vec::new() };
+    }
+    Span { name, start: Some(Instant::now()), fields: Vec::new() }
+}
+
+/// Emit a point event with fields. No-op when tracing is disabled.
+pub fn event(name: &'static str, fields: Vec<(&'static str, Json)>) {
+    if disabled() {
+        return;
+    }
+    let mut obj = record_base("event", name, now_us());
+    for (k, v) in fields {
+        obj.insert(k.to_string(), v);
+    }
+    emit(obj);
+}
+
+/// Serializes tests (and anything else) that toggle the process-global
+/// tracer, so concurrent tests in one test binary can't interleave
+/// enable/disable.
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("slope_trace_{}_{}.jsonl", std::process::id(), tag))
+    }
+
+    #[test]
+    fn disabled_spans_and_events_are_inert() {
+        let _g = test_guard();
+        assert!(disabled());
+        let mut sp = span("never");
+        assert!(!sp.active());
+        sp.f("x", 1.0);
+        sp.u("y", 2);
+        sp.s("z", "three");
+        drop(sp);
+        event("never_either", vec![("k", Json::Num(1.0))]);
+        // nothing to assert beyond "did not panic, wrote nothing":
+        // there is no sink, so any write would have been dropped anyway.
+    }
+
+    #[test]
+    fn round_trip_spans_events_and_counters() {
+        let _g = test_guard();
+        let path = tmp_path("roundtrip");
+        enable_file(&path).expect("enable");
+        {
+            let mut outer = span("outer");
+            outer.f("sigma", 0.5);
+            outer.s("label", "a\"b"); // must survive JSON escaping
+            {
+                let mut inner = span("inner");
+                inner.u("count", 3);
+            }
+            event("tick", vec![("gap", Json::Num(1e-4))]);
+        }
+        disable();
+        let text = std::fs::read_to_string(&path).expect("read trace");
+        let _ = std::fs::remove_file(&path);
+        let mut names = Vec::new();
+        let mut saw_meta = false;
+        let mut saw_counters = false;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line).expect("each line parses");
+            match j.field("ev").and_then(|e| e.as_str()) {
+                Some("meta") => saw_meta = true,
+                Some("counters") => {
+                    saw_counters = true;
+                    let c = j.field("counters").expect("counters object");
+                    assert!(c.field("fista_iterations").is_some());
+                }
+                Some("span") => {
+                    names.push(j.field("name").unwrap().as_str().unwrap().to_string());
+                    assert!(j.field("t_us").unwrap().as_f64().is_some());
+                    assert!(j.field("dur_us").unwrap().as_f64().is_some());
+                    assert!(j.field("tid").unwrap().as_f64().is_some());
+                }
+                Some("event") => {
+                    assert_eq!(j.field("name").unwrap().as_str(), Some("tick"));
+                    assert_eq!(j.field("gap").unwrap().as_f64(), Some(1e-4));
+                }
+                other => panic!("unexpected ev {other:?}"),
+            }
+        }
+        assert!(saw_meta && saw_counters);
+        // inner drops before outer, so it is emitted first
+        assert_eq!(names, vec!["inner".to_string(), "outer".to_string()]);
+        let outer_line = text.lines().find(|l| l.contains("\"outer\"")).unwrap();
+        let outer_json = Json::parse(outer_line).unwrap();
+        assert_eq!(outer_json.field("sigma").unwrap().as_f64(), Some(0.5));
+        assert_eq!(outer_json.field("label").unwrap().as_str(), Some("a\"b"));
+    }
+
+    #[test]
+    fn threads_get_distinct_tids() {
+        let _g = test_guard();
+        let path = tmp_path("tids");
+        enable_file(&path).expect("enable");
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                scope.spawn(|| {
+                    let _sp = span("worker");
+                    // TLS drop at thread exit drains the buffer
+                });
+            }
+        });
+        {
+            let _sp = span("main");
+        }
+        disable();
+        let text = std::fs::read_to_string(&path).expect("read trace");
+        let _ = std::fs::remove_file(&path);
+        let mut tids = std::collections::BTreeSet::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line).unwrap();
+            if j.field("ev").and_then(|e| e.as_str()) == Some("span") {
+                tids.insert(j.field("tid").unwrap().as_f64().unwrap() as u64);
+            }
+        }
+        assert!(tids.len() >= 3, "expected 3 distinct tids, got {tids:?}");
+    }
+}

@@ -1,6 +1,15 @@
-//! Serving metrics: request counters and per-op latency quantiles,
-//! reusing [`crate::benchkit::Timing`] for the summary statistics and
-//! rendered as JSON for the `stats` request.
+//! Serving metrics: request counters, bounded per-op latency reservoirs,
+//! and the process-wide [`crate::obs::registry`] snapshot, rendered as
+//! JSON (`stats` / `metrics` ops) or Prometheus text exposition
+//! (`metrics` with `format: "prometheus"`).
+//!
+//! Latency storage is a fixed-size uniform reservoir per op (Vitter's
+//! Algorithm R with a deterministic xorshift stream): under sustained
+//! load memory stays bounded at [`RESERVOIR`] samples while every sample
+//! ever recorded remains equally likely to be retained, so quantiles
+//! describe the whole run, not just the recent window. Totals (`count`,
+//! `sum`, `max`) are exact — only the quantiles are sampled. A snapshot
+//! clones at most the reservoir, never an unbounded history.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -9,10 +18,11 @@ use std::time::Instant;
 
 use crate::benchkit::Timing;
 use crate::jsonio::Json;
+use crate::obs;
 
-/// Cap on retained latency samples per op (oldest half dropped on
-/// overflow — the quantiles track recent behavior).
-const MAX_SAMPLES: usize = 4096;
+/// Retained latency samples per op (the reservoir size). Totals are
+/// exact regardless; this bounds only quantile-estimation memory.
+const RESERVOIR: usize = 4096;
 
 /// Monotonic request/cache counters.
 #[derive(Default)]
@@ -33,12 +43,65 @@ pub struct Counters {
     pub predictions: AtomicU64,
 }
 
-/// Server metrics: counters plus per-op latency histograms.
+impl Counters {
+    fn pairs(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.requests.load(Ordering::Relaxed)),
+            ("errors", self.errors.load(Ordering::Relaxed)),
+            ("cache_hits", self.cache_hits.load(Ordering::Relaxed)),
+            ("coalesced", self.coalesced.load(Ordering::Relaxed)),
+            ("cold_fits", self.cold_fits.load(Ordering::Relaxed)),
+            ("warm_fits", self.warm_fits.load(Ordering::Relaxed)),
+            ("predictions", self.predictions.load(Ordering::Relaxed)),
+        ]
+    }
+}
+
+/// Exact totals plus a bounded uniform sample of one op's latencies.
+struct OpStats {
+    count: u64,
+    sum: f64,
+    max: f64,
+    reservoir: Vec<f64>,
+    /// xorshift64 state for Algorithm R's replacement index — cheap,
+    /// lock-held, and deterministic given the record sequence.
+    rng: u64,
+}
+
+impl OpStats {
+    fn new(seed: u64) -> OpStats {
+        OpStats { count: 0, sum: 0.0, max: 0.0, reservoir: Vec::new(), rng: seed | 1 }
+    }
+
+    fn record(&mut self, seconds: f64) {
+        self.count += 1;
+        self.sum += seconds;
+        if seconds > self.max {
+            self.max = seconds;
+        }
+        if self.reservoir.len() < RESERVOIR {
+            self.reservoir.push(seconds);
+            return;
+        }
+        // Algorithm R: keep the new sample with probability R/count, at a
+        // uniform position — every sample so far survives with equal
+        // probability R/count.
+        self.rng ^= self.rng << 13;
+        self.rng ^= self.rng >> 7;
+        self.rng ^= self.rng << 17;
+        let j = self.rng % self.count;
+        if (j as usize) < RESERVOIR {
+            self.reservoir[j as usize] = seconds;
+        }
+    }
+}
+
+/// Server metrics: counters plus per-op latency reservoirs.
 pub struct Metrics {
     started: Instant,
     /// The counters (bumped directly by the server).
     pub counters: Counters,
-    latencies: Mutex<BTreeMap<String, Vec<f64>>>,
+    latencies: Mutex<BTreeMap<String, OpStats>>,
 }
 
 impl Metrics {
@@ -54,47 +117,91 @@ impl Metrics {
     /// Record one op latency in seconds.
     pub fn record(&self, op: &str, seconds: f64) {
         let mut map = self.latencies.lock().unwrap();
-        let samples = map.entry(op.to_string()).or_default();
-        if samples.len() >= MAX_SAMPLES {
-            samples.drain(..MAX_SAMPLES / 2);
-        }
-        samples.push(seconds);
+        let seed = 0x9e37_79b9_7f4a_7c15u64.wrapping_add(map.len() as u64);
+        map.entry(op.to_string()).or_insert_with(|| OpStats::new(seed)).record(seconds);
     }
 
-    /// JSON snapshot: uptime, counters, and per-op latency quantiles.
-    pub fn snapshot(&self) -> Json {
-        let c = &self.counters;
-        let counters = Json::obj(vec![
-            ("requests", Json::Num(c.requests.load(Ordering::Relaxed) as f64)),
-            ("errors", Json::Num(c.errors.load(Ordering::Relaxed) as f64)),
-            ("cache_hits", Json::Num(c.cache_hits.load(Ordering::Relaxed) as f64)),
-            ("coalesced", Json::Num(c.coalesced.load(Ordering::Relaxed) as f64)),
-            ("cold_fits", Json::Num(c.cold_fits.load(Ordering::Relaxed) as f64)),
-            ("warm_fits", Json::Num(c.warm_fits.load(Ordering::Relaxed) as f64)),
-            ("predictions", Json::Num(c.predictions.load(Ordering::Relaxed) as f64)),
-        ]);
+    /// Per-op latency summaries: exact `count`/`mean`/`max`, quantiles
+    /// from the bounded reservoir. The lock is held only to clone each
+    /// op's reservoir (≤ [`RESERVOIR`] values), never a full history.
+    fn latency_json(&self) -> Json {
         let mut ops = BTreeMap::new();
-        for (op, samples) in self.latencies.lock().unwrap().iter() {
-            if samples.is_empty() {
-                continue;
-            }
-            let t = Timing::from_samples(samples.clone());
+        let sampled: Vec<(String, u64, f64, f64, Vec<f64>)> = {
+            let map = self.latencies.lock().unwrap();
+            map.iter()
+                .filter(|(_, s)| s.count > 0)
+                .map(|(op, s)| (op.clone(), s.count, s.sum, s.max, s.reservoir.clone()))
+                .collect()
+        };
+        for (op, count, sum, max, reservoir) in sampled {
+            let t = Timing::from_samples(reservoir);
             ops.insert(
-                op.clone(),
+                op,
                 Json::obj(vec![
-                    ("count", Json::Num(samples.len() as f64)),
+                    ("count", Json::Num(count as f64)),
                     ("median_s", Json::Num(t.median())),
-                    ("mean_s", Json::Num(t.mean())),
+                    ("mean_s", Json::Num(sum / count as f64)),
                     ("p95_s", Json::Num(t.quantile(0.95))),
-                    ("max_s", Json::Num(t.quantile(1.0))),
+                    ("max_s", Json::Num(max)),
                 ]),
             );
         }
+        Json::Obj(ops)
+    }
+
+    /// JSON snapshot: uptime, serve counters, per-op latency quantiles,
+    /// and the global observability registry (kernel/cache/solver
+    /// counters, queue gauges).
+    pub fn snapshot(&self) -> Json {
+        let counters = Json::obj(
+            self.counters.pairs().into_iter().map(|(k, v)| (k, Json::Num(v as f64))).collect(),
+        );
+        let registry = Json::Obj(
+            obs::snapshot()
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(v as f64)))
+                .collect(),
+        );
         Json::obj(vec![
             ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
             ("counters", counters),
-            ("latency", Json::Obj(ops)),
+            ("latency", self.latency_json()),
+            ("registry", registry),
         ])
+    }
+
+    /// Prometheus text exposition: serve counters and per-op latency
+    /// summaries under `slope_serve_*`, then the whole observability
+    /// registry under `slope_*`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        out.push_str("# HELP slope_serve_uptime_seconds server uptime\n");
+        out.push_str("# TYPE slope_serve_uptime_seconds gauge\n");
+        out.push_str(&format!(
+            "slope_serve_uptime_seconds {}\n",
+            self.started.elapsed().as_secs_f64()
+        ));
+        for (name, value) in self.counters.pairs() {
+            let metric = format!("slope_serve_{name}_total");
+            out.push_str(&format!("# TYPE {metric} counter\n{metric} {value}\n"));
+        }
+        let totals: Vec<(String, u64, f64)> = {
+            let map = self.latencies.lock().unwrap();
+            map.iter().map(|(op, s)| (op.clone(), s.count, s.sum)).collect()
+        };
+        out.push_str("# HELP slope_serve_op_seconds per-op latency totals\n");
+        out.push_str("# TYPE slope_serve_op_seconds summary\n");
+        for (op, count, sum) in totals {
+            out.push_str(&format!("slope_serve_op_seconds_count{{op=\"{op}\"}} {count}\n"));
+            out.push_str(&format!("slope_serve_op_seconds_sum{{op=\"{op}\"}} {sum}\n"));
+        }
+        obs::registry::render_prometheus(&mut out);
+        out
+    }
+
+    #[cfg(test)]
+    fn reservoir_len(&self, op: &str) -> usize {
+        self.latencies.lock().unwrap().get(op).map_or(0, |s| s.reservoir.len())
     }
 }
 
@@ -122,25 +229,47 @@ mod tests {
         let fp = lat.field("fit_path").unwrap();
         assert_eq!(fp.field("count").unwrap().as_f64(), Some(2.0));
         assert_eq!(fp.field("median_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(fp.field("mean_s").unwrap().as_f64(), Some(1.0));
+        assert_eq!(fp.field("max_s").unwrap().as_f64(), Some(1.5));
         assert!(snap.field("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+        // the global registry rides along
+        let reg = snap.field("registry").unwrap();
+        assert!(reg.field("fista_iterations").unwrap().as_f64().is_some());
+        assert!(reg.field("serve_queue_depth").unwrap().as_f64().is_some());
     }
 
     #[test]
-    fn sample_buffer_is_bounded() {
+    fn reservoir_is_bounded_but_totals_are_exact() {
         let m = Metrics::new();
-        for i in 0..(MAX_SAMPLES + 100) {
+        let total = RESERVOIR + 1000;
+        for i in 0..total {
             m.record("op", i as f64);
         }
+        assert_eq!(m.reservoir_len("op"), RESERVOIR);
         let snap = m.snapshot();
-        let count = snap
-            .field("latency")
-            .unwrap()
-            .field("op")
-            .unwrap()
-            .field("count")
-            .unwrap()
-            .as_usize()
-            .unwrap();
-        assert!(count <= MAX_SAMPLES);
+        let op = snap.field("latency").unwrap().field("op").unwrap();
+        // count is the true total, not the retained-sample count
+        assert_eq!(op.field("count").unwrap().as_f64(), Some(total as f64));
+        // max is exact even if the max sample left the reservoir
+        assert_eq!(op.field("max_s").unwrap().as_f64(), Some((total - 1) as f64));
+        // exact mean of 0..total-1
+        let mean = op.field("mean_s").unwrap().as_f64().unwrap();
+        assert!((mean - (total - 1) as f64 / 2.0).abs() < 1e-9);
+        // the sampled median must land in the data range
+        let med = op.field("median_s").unwrap().as_f64().unwrap();
+        assert!(med >= 0.0 && med <= (total - 1) as f64);
+    }
+
+    #[test]
+    fn prometheus_exposition_includes_serve_and_registry_metrics() {
+        let m = Metrics::new();
+        m.counters.requests.fetch_add(2, Ordering::Relaxed);
+        m.record("fit_path", 0.25);
+        let text = m.prometheus();
+        assert!(text.contains("slope_serve_requests_total 2"));
+        assert!(text.contains("slope_serve_op_seconds_count{op=\"fit_path\"} 1"));
+        assert!(text.contains("# TYPE slope_serve_uptime_seconds gauge"));
+        assert!(text.contains("# TYPE slope_fista_iterations_total counter"));
+        assert!(text.contains("# TYPE slope_serve_queue_depth gauge"));
     }
 }

@@ -6,11 +6,13 @@
 //! or `{"id": ..., "ok": false, "error": "..."}`.
 //!
 //! Ops: `fit_path`, `fit_point`, `predict`, `dataset_from_file`, `stats`,
-//! `shutdown`. Fit ops carry a `dataset` spec (`synth`, `real`, `inline`
-//! or `file`) and model fields (`lambda`, `q`, `path_length`, `screen`);
-//! `fit_point` adds `sigma_ratio`; `predict` adds `x` (rows) and
-//! optionally `step`; `dataset_from_file` registers a server-side data
-//! file (content-fingerprinted) ahead of any fit.
+//! `metrics`, `shutdown`. Fit ops carry a `dataset` spec (`synth`,
+//! `real`, `inline` or `file`) and model fields (`lambda`, `q`,
+//! `path_length`, `screen`); `fit_point` adds `sigma_ratio`; `predict`
+//! adds `x` (rows) and optionally `step`; `dataset_from_file` registers a
+//! server-side data file (content-fingerprinted) ahead of any fit;
+//! `metrics` takes a `format` (`json` or `prometheus`) and returns the
+//! full observability exposition.
 
 use crate::data::real::RealDataset;
 use crate::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
@@ -552,6 +554,12 @@ pub enum Request {
     },
     /// Server/cache/latency statistics.
     Stats,
+    /// Full metrics exposition: serve counters, per-op latency quantiles
+    /// and the global observability registry, as JSON or Prometheus text.
+    Metrics {
+        /// `json` (default) or `prometheus`.
+        format: String,
+    },
     /// Stop the server after responding.
     Shutdown,
 }
@@ -622,11 +630,20 @@ fn parse_request(j: &Json) -> Result<Request, String> {
             Request::RegisterDataset { dataset }
         }
         "stats" => Request::Stats,
+        "metrics" => {
+            let format = str_field(j, "format", "json")?;
+            if format != "json" && format != "prometheus" {
+                return Err(format!(
+                    "unknown metrics format `{format}` (expected json|prometheus)"
+                ));
+            }
+            Request::Metrics { format }
+        }
         "shutdown" => Request::Shutdown,
         "" => return Err("request missing `op`".to_string()),
         other => {
             return Err(format!(
-                "unknown op `{other}` (expected fit_path|fit_point|predict|dataset_from_file|stats|shutdown)"
+                "unknown op `{other}` (expected fit_path|fit_point|predict|dataset_from_file|stats|metrics|shutdown)"
             ))
         }
     };
@@ -1054,6 +1071,21 @@ mod tests {
         let b = ModelSpec::parse(&j).unwrap();
         assert_ne!(a.key(), b.key());
         assert_eq!(a.point_key(), b.point_key());
+    }
+
+    #[test]
+    fn metrics_op_parses_with_format_validation() {
+        let env = Envelope::parse_line(r#"{"id": 4, "op": "metrics"}"#).unwrap();
+        match env.request {
+            Request::Metrics { format } => assert_eq!(format, "json"),
+            other => panic!("wrong request: {other:?}"),
+        }
+        let env =
+            Envelope::parse_line(r#"{"id": 4, "op": "metrics", "format": "prometheus"}"#).unwrap();
+        assert!(matches!(env.request, Request::Metrics { format } if format == "prometheus"));
+        let (_, msg) =
+            Envelope::parse_line(r#"{"id": 4, "op": "metrics", "format": "xml"}"#).unwrap_err();
+        assert!(msg.contains("unknown metrics format"), "{msg}");
     }
 
     #[test]

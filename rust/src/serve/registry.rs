@@ -24,6 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::linalg::packed::PackCache;
+use crate::obs::registry as obsreg;
 use crate::slope::family::Problem;
 use crate::slope::path::{PathFit, PathSeed};
 
@@ -287,6 +288,7 @@ impl Registry {
             while map.by_fp.len() > MAX_DATASETS {
                 if let Some(oldest) = map.order.pop_front() {
                     map.by_fp.remove(&oldest);
+                    obsreg::REGISTRY_DATASET_EVICTIONS.inc();
                 } else {
                     break;
                 }
@@ -305,6 +307,7 @@ impl Registry {
         build: impl FnOnce() -> Result<CachedModel, String>,
     ) -> Result<Fetched, String> {
         if !self.cache_enabled {
+            obsreg::REGISTRY_MODEL_BUILDS.inc();
             return build().map(|m| Fetched::Built(Arc::new(m)));
         }
         let gate = {
@@ -312,11 +315,13 @@ impl Registry {
             match models.get(key) {
                 Some(ModelSlot::Ready(m)) => {
                     m.hits.fetch_add(1, Ordering::Relaxed);
+                    obsreg::REGISTRY_MODEL_HITS.inc();
                     return Ok(Fetched::Hit(Arc::clone(m)));
                 }
                 Some(ModelSlot::Building(g)) => {
                     let g = Arc::clone(g);
                     drop(models);
+                    obsreg::REGISTRY_COALESCED.inc();
                     return match g.wait() {
                         Some(m) => Ok(Fetched::Coalesced(m)),
                         None => Err("coalesced fit failed; retry".to_string()),
@@ -329,6 +334,7 @@ impl Registry {
                 }
             }
         };
+        obsreg::REGISTRY_MODEL_BUILDS.inc();
         match build() {
             Ok(model) => {
                 let model = Arc::new(model);

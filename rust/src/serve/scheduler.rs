@@ -11,6 +11,7 @@
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::obs::registry as obsreg;
 use crate::pool::WorkerPool;
 use crate::slope::path::Strategy;
 
@@ -22,6 +23,17 @@ struct GateState {
     admitted: usize,
     next_ticket: u64,
     now_serving: u64,
+}
+
+impl GateState {
+    /// Publish the gate's levels as registry gauges (called under the
+    /// gate lock at every transition, so the published pair is always a
+    /// consistent snapshot). `next_ticket - now_serving` is the number of
+    /// requests parked on tickets; `admitted` is queued-on-pool+running.
+    fn publish(&self) {
+        obsreg::SERVE_QUEUE_DEPTH.set(self.next_ticket - self.now_serving);
+        obsreg::SERVE_IN_FLIGHT.set(self.admitted as u64);
+    }
 }
 
 /// Bounded-queue dispatcher over a worker pool.
@@ -98,11 +110,13 @@ impl Scheduler {
             let mut state = self.gate.0.lock().unwrap();
             let ticket = state.next_ticket;
             state.next_ticket += 1;
+            state.publish();
             while state.now_serving != ticket || state.admitted >= self.capacity {
                 state = self.gate.1.wait(state).unwrap();
             }
             state.admitted += 1;
             state.now_serving += 1;
+            state.publish();
             // Wake the next ticket holder (it may be admissible already).
             self.gate.1.notify_all();
         }
@@ -113,6 +127,7 @@ impl Scheduler {
             let _ = tx.send(outcome);
             let mut state = gate.0.lock().unwrap();
             state.admitted -= 1;
+            state.publish();
             gate.1.notify_all();
         });
         match rx.recv() {

@@ -112,28 +112,49 @@ impl Server {
     }
 
     /// Handle one request line; returns the response line (no newline).
+    ///
+    /// With tracing enabled, the whole lifecycle is one `serve_request`
+    /// span (op, id, status); the fit jobs it dispatches add their own
+    /// `fit_job` spans carrying the admission-queue wait, and cache
+    /// coalescing is a point event — so a trace shows where a slow
+    /// request spent its time: parked in the queue, fitting, or waiting
+    /// on someone else's identical fit.
     pub fn handle_line(&self, line: &str) -> String {
         self.metrics.counters.requests.fetch_add(1, Ordering::Relaxed);
         let t0 = Instant::now();
-        match Envelope::parse_line(line) {
+        let response = match Envelope::parse_line(line) {
             Err((id, e)) => {
                 self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
                 protocol::err_response(id, &e)
             }
             Ok(env) => {
                 let op = op_name(&env.request);
+                let mut req_span = crate::obs::trace::span("serve_request");
+                if req_span.active() {
+                    req_span.s("op", op);
+                    req_span.u("id", env.id);
+                }
                 match self.dispatch(env.request) {
                     Ok(result) => {
                         self.metrics.record(op, t0.elapsed().as_secs_f64());
+                        req_span.s("status", "ok");
                         protocol::ok_response(env.id, result)
                     }
                     Err(e) => {
                         self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                        req_span.s("status", "error");
                         protocol::err_response(env.id, &e)
                     }
                 }
             }
+        };
+        // Connection threads can idle indefinitely between requests:
+        // drain this thread's span buffer now so the trace tail is never
+        // parked in TLS.
+        if !crate::obs::trace::disabled() {
+            crate::obs::trace::flush();
         }
+        response
     }
 
     fn dispatch(&self, request: Request) -> Result<Json, String> {
@@ -147,6 +168,7 @@ impl Server {
             }
             Request::RegisterDataset { dataset } => self.do_register(&dataset),
             Request::Stats => Ok(self.do_stats()),
+            Request::Metrics { format } => Ok(self.do_metrics(&format)),
             Request::Shutdown => {
                 self.shutdown.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("shutting_down", Json::Bool(true))]))
@@ -184,9 +206,23 @@ impl Server {
                 opts = opts.with_col_norms(entry.col_norms(opts.par()));
             }
             let prob = Arc::clone(&entry.problem);
+            let t_enqueue = Instant::now();
             let fit = self.sched.run(move || {
-                let gradient = NativeGradient(prob.as_ref());
-                fit_path_seeded(prob.as_ref(), &opts, &gradient, warm_seed.as_ref())
+                let fit = {
+                    let mut job_span = crate::obs::trace::span("fit_job");
+                    if job_span.active() {
+                        job_span.s("op", "fit_path");
+                        job_span.u("queue_wait_us", t_enqueue.elapsed().as_micros() as u64);
+                    }
+                    let gradient = NativeGradient(prob.as_ref());
+                    fit_path_seeded(prob.as_ref(), &opts, &gradient, warm_seed.as_ref())
+                };
+                // Pool workers are long-lived: hand the job's trace tail
+                // to the sink instead of parking it in worker TLS.
+                if !crate::obs::trace::disabled() {
+                    crate::obs::trace::flush();
+                }
+                fit
             })?;
             if warm {
                 self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
@@ -209,6 +245,12 @@ impl Server {
             }
             Fetched::Coalesced(_) => {
                 self.metrics.counters.coalesced.fetch_add(1, Ordering::Relaxed);
+                if !crate::obs::trace::disabled() {
+                    crate::obs::trace::event(
+                        "coalesced_wait",
+                        vec![("model_key", Json::Str(key.clone()))],
+                    );
+                }
             }
             Fetched::Built(_) => {}
         }
@@ -287,18 +329,31 @@ impl Server {
             opts = opts.with_col_norms(entry.col_norms(opts.par()));
         }
         let prob = Arc::clone(&entry.problem);
+        let t_enqueue = Instant::now();
         let (point, sigma_max) = self.sched.run(move || {
-            let gradient = NativeGradient(prob.as_ref());
-            let (seed, sigma_max): (PathSeed, f64) = match prior {
-                Some(state) => (state.seed.clone(), state.sigma_max),
-                None => {
-                    let zero = zero_seed(prob.as_ref(), &opts, &gradient);
-                    let smax = zero.sigma;
-                    (zero, smax)
+            let out = {
+                let mut job_span = crate::obs::trace::span("fit_job");
+                if job_span.active() {
+                    job_span.s("op", "fit_point");
+                    job_span.u("queue_wait_us", t_enqueue.elapsed().as_micros() as u64);
                 }
+                let gradient = NativeGradient(prob.as_ref());
+                let (seed, sigma_max): (PathSeed, f64) = match prior {
+                    Some(state) => (state.seed.clone(), state.sigma_max),
+                    None => {
+                        let zero = zero_seed(prob.as_ref(), &opts, &gradient);
+                        let smax = zero.sigma;
+                        (zero, smax)
+                    }
+                };
+                let point =
+                    fit_point(prob.as_ref(), &opts, &gradient, sigma_max * sigma_ratio, &seed);
+                (point, sigma_max)
             };
-            let point = fit_point(prob.as_ref(), &opts, &gradient, sigma_max * sigma_ratio, &seed);
-            (point, sigma_max)
+            if !crate::obs::trace::disabled() {
+                crate::obs::trace::flush();
+            }
+            out
         })?;
         if warm {
             self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
@@ -456,6 +511,22 @@ impl Server {
         ])
     }
 
+    /// The `metrics` op: the full exposition (serve counters, per-op
+    /// latency quantiles, observability registry). `format: "json"`
+    /// returns it structured; `format: "prometheus"` returns the text
+    /// exposition in a `text` field so the transport stays
+    /// newline-delimited JSON either way.
+    fn do_metrics(&self, format: &str) -> Json {
+        if format == "prometheus" {
+            Json::obj(vec![
+                ("format", Json::Str("prometheus".to_string())),
+                ("text", Json::Str(self.metrics.prometheus())),
+            ])
+        } else {
+            self.metrics.snapshot()
+        }
+    }
+
     /// Serve newline-delimited requests from `reader`, writing responses
     /// to `writer` — the stdin/stdout transport, also used per-connection
     /// by the socket transport and directly by tests.
@@ -553,6 +624,7 @@ fn op_name(request: &Request) -> &'static str {
         Request::Predict { .. } => "predict",
         Request::RegisterDataset { .. } => "dataset_from_file",
         Request::Stats => "stats",
+        Request::Metrics { .. } => "metrics",
         Request::Shutdown => "shutdown",
     }
 }
@@ -949,6 +1021,36 @@ mod tests {
         assert!(!srv.is_shutdown());
         parse_ok(&srv.handle_line(r#"{"id": 2, "op": "shutdown"}"#));
         assert!(srv.is_shutdown());
+    }
+
+    #[test]
+    fn metrics_op_serves_json_and_prometheus() {
+        let srv = server();
+        parse_ok(&srv.handle_line(&fit_path_line(1, 51)));
+        // JSON form: full snapshot with serve counters, latency
+        // quantiles, and the observability registry
+        let snap = parse_ok(&srv.handle_line(r#"{"id": 2, "op": "metrics"}"#));
+        let counters = snap.field("counters").unwrap();
+        assert!(counters.field("requests").unwrap().as_usize().unwrap() >= 2);
+        let fit_lat = snap.field("latency").unwrap().field("fit_path").unwrap();
+        assert_eq!(fit_lat.field("count").unwrap().as_usize(), Some(1));
+        let reg = snap.field("registry").unwrap();
+        assert!(
+            reg.field("registry_model_builds").unwrap().as_usize().unwrap() >= 1,
+            "the fit above must be counted as a model build"
+        );
+        assert!(reg.field("fista_iterations").unwrap().as_usize().unwrap() >= 1);
+        // Prometheus form: text exposition wrapped in a JSON field
+        let prom =
+            parse_ok(&srv.handle_line(r#"{"id": 3, "op": "metrics", "format": "prometheus"}"#));
+        assert_eq!(prom.field("format").unwrap().as_str(), Some("prometheus"));
+        let text = prom.field("text").unwrap().as_str().unwrap();
+        assert!(text.contains("slope_serve_requests_total"));
+        assert!(text.contains("# TYPE slope_path_steps_total counter"));
+        assert!(text.contains("slope_serve_op_seconds_count{op=\"fit_path\"} 1"));
+        // bad format is an error response
+        let bad = srv.handle_line(r#"{"id": 4, "op": "metrics", "format": "xml"}"#);
+        assert_eq!(Json::parse(&bad).unwrap().field("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::linalg::ops::inf_norm;
 use crate::linalg::packed::{PackedDesign, PackedSet};
 use crate::linalg::ParConfig;
 use crate::slope::family::Problem;
+use crate::obs::registry as obsreg;
 use crate::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
 use crate::slope::sorted::sl1_norm;
 
@@ -389,6 +390,7 @@ pub fn solve(
         };
     }
 
+    obsreg::FISTA_SOLVES.inc();
     let mut beta: Vec<f64> = match warm {
         Some(w) => {
             debug_assert_eq!(w.len(), k);
@@ -439,6 +441,7 @@ pub fn solve(
 
     for iter in 0..cfg.max_iter {
         iterations = iter + 1;
+        obsreg::FISTA_ITERATIONS.inc();
         // Gradient at the extrapolated point z.
         let loss_z = prob.family.h_loss(&eta_z, &prob.y, &mut h);
         reduced.gradient(&h, &mut grad, &mut scratch);
@@ -451,6 +454,7 @@ pub fn solve(
                 step[i] = z[i] - grad[i] * inv_l;
                 lam_over_l[i] = lam[i] * inv_l;
             }
+            obsreg::FISTA_PROX_CALLS.inc();
             prox_sorted_l1_into(&step, &lam_over_l, &mut ws, &mut cand);
             reduced.eta(&cand, &mut eta_cand, &mut scratch);
             loss_cand = prob.family.h_loss(&eta_cand, &prob.y, &mut h);
@@ -465,6 +469,7 @@ pub fn solve(
             if loss_cand <= loss_z + lin + 0.5 * big_l * sq + 1e-12 * loss_z.abs().max(1.0) {
                 break;
             }
+            obsreg::FISTA_BACKTRACKS.inc();
             big_l *= 2.0;
             if big_l > 1e18 {
                 break; // numerical wall; accept and let KKT checks catch it

@@ -16,9 +16,11 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::jsonio::Json;
 use crate::linalg::ops::sq_norm;
 use crate::linalg::packed::PackCache;
 use crate::linalg::ParConfig;
+use crate::obs::registry as obsreg;
 use crate::slope::family::{Family, Problem};
 use crate::slope::fista::{solve, FistaConfig, Reduced};
 use crate::slope::lambda::{sigma_grid, sigma_max, PathConfig};
@@ -406,7 +408,15 @@ fn state_at_zero(
     let loss0 = prob.family.h_loss(eta, &prob.y, h);
     let zero_beta = vec![0.0; grad.len()];
     evaluator.full_grad_with(&zero_beta, h, grad, par);
+    note_full_sweep(grad.len());
     loss0
+}
+
+/// Count one full p-column gradient sweep in the registry.
+#[inline]
+fn note_full_sweep(pt: usize) {
+    obsreg::GRAD_FULL_SWEEPS.inc();
+    obsreg::GRAD_SWEEP_COLS.add(pt as u64);
 }
 
 /// The exact path state at `β = 0`: the full gradient at zero and
@@ -505,6 +515,7 @@ pub fn fit_point(
         // coefficient (the next request's screening reference).
         if !gs.grad_is_exact {
             evaluator.full_grad_with(&beta_full, &h, &mut grad, opts.par());
+            note_full_sweep(pt);
             out.sweeps += 1.0;
         }
         (out, rule_set, n_screened_rule)
@@ -576,6 +587,10 @@ pub fn fit_path_seeded(
     seed: Option<&PathSeed>,
 ) -> PathFit {
     let t_start = Instant::now();
+    // Whole-fit span: the per-step spans below nest inside it, so the
+    // trace profiler attributes driver overhead (grid setup, the closing
+    // sweep) to the fit rather than to any step.
+    let mut fit_span = crate::obs::trace::span("path_fit");
     let n = prob.n();
     let m_classes = prob.family.n_classes();
     let pt = prob.p_total();
@@ -680,6 +695,9 @@ pub fn fit_path_seeded(
     };
 
     for m in 1..sigmas_all.len() {
+        // One trace span per σ-step carrying the StepInfo fields; inert
+        // (a load + branch) unless `--trace` enabled the sink.
+        let mut step_span = crate::obs::trace::span("path_step");
         let sig_prev = sigmas_all[m - 1];
         let sig = sigmas_all[m];
         for i in 0..pt {
@@ -826,6 +844,35 @@ pub fn fit_path_seeded(
         });
         fit.total_violations += violations_total;
         fit.total_grad_sweeps += out.sweeps;
+        obsreg::PATH_STEPS.inc();
+        obsreg::SCREEN_RULE_COLS.add(n_screened_rule as u64);
+        if let Some(ns) = n_safe {
+            obsreg::SCREEN_SAFE_COLS.add(ns as u64);
+        }
+        obsreg::SCREEN_UNIVERSE_COLS.add(out.n_universe.unwrap_or(pt) as u64);
+        obsreg::KKT_VIOLATIONS.add(violations_total as u64);
+        obsreg::KKT_REFITS.add(refits as u64);
+        if step_span.active() {
+            step_span.u("step", m as u64);
+            step_span.f("sigma", sig);
+            step_span.u("n_active", active.len() as u64);
+            step_span.u("n_screened_rule", n_screened_rule as u64);
+            step_span.u("n_fitted", e_set.len() as u64);
+            step_span.u("violations", violations_total as u64);
+            step_span.u("refits", refits as u64);
+            step_span.u("solver_iterations", solver_iterations as u64);
+            step_span.f("dev_ratio", dev_ratio);
+            step_span.f("full_grad_sweeps", out.sweeps);
+            if let Some(nu) = out.n_universe {
+                step_span.u("n_universe", nu as u64);
+            }
+            if let Some(g) = out.gap {
+                step_span.f("gap", g);
+            }
+            step_span.f("t_screen", t_screen);
+            step_span.f("t_solve", t_solve);
+            step_span.f("t_kkt", t_kkt);
+        }
 
         // --- early termination (§3.1.2) ------------------------------------
         if opts.config.stop_on_saturation && unique_nonzero_magnitudes(&beta_full) > n {
@@ -852,6 +899,7 @@ pub fn fit_path_seeded(
     if let Some(gs) = &mut gap_state {
         if !gs.grad_is_exact {
             evaluator.full_grad_with(&beta_full, &h, &mut grad, par);
+            note_full_sweep(pt);
             gs.grad_is_exact = true;
             fit.total_grad_sweeps += 1.0;
         }
@@ -859,6 +907,15 @@ pub fn fit_path_seeded(
     fit.final_beta = beta_full;
     fit.final_grad = grad;
     fit.wall_time = t_start.elapsed().as_secs_f64();
+    if fit_span.active() {
+        fit_span.s("strategy", opts.strategy.name());
+        fit_span.u("p", pt as u64);
+        fit_span.u("n", n as u64);
+        fit_span.u("steps", fit.steps.len() as u64);
+        fit_span.u("total_violations", fit.total_violations as u64);
+        fit_span.f("total_grad_sweeps", fit.total_grad_sweeps);
+        fit_span.u("warm", seed.is_some() as u64);
+    }
     fit
 }
 
@@ -1061,6 +1118,7 @@ fn solve_with_safeguard(
         eta.copy_from_slice(&res.eta);
         prob.family.h_loss(eta, &prob.y, h);
         evaluator.full_grad_with(beta_full, h, grad, par);
+        note_full_sweep(pt);
         sweeps += 1.0;
 
         // Violation detection: Algorithm 1 on the true gradient
@@ -1437,6 +1495,7 @@ fn solve_with_gap(
             // take the full product and refresh the sphere reference for
             // every later bound, for free.
             evaluator.full_grad_with(beta_full, h, grad, par);
+            note_full_sweep(pt);
             sweeps += 1.0;
             gs.adopt_exact(h, grad, loss);
             force_full = false;
@@ -1451,6 +1510,8 @@ fn solve_with_gap(
                 &mut gs.cols,
                 &mut gs.coefs,
             );
+            obsreg::GRAD_PARTIAL_SWEEPS.inc();
+            obsreg::GRAD_SWEEP_COLS.add(universe.len() as u64);
             sweeps += universe.len() as f64 / pt.max(1) as f64;
             let d = gs.screener.ref_distance(h);
             for j in 0..pt {
@@ -1477,6 +1538,21 @@ fn solve_with_gap(
             lam_cur,
         );
         gap = gr.gap;
+        if !crate::obs::trace::disabled() {
+            // Gap trajectory: one point event per certificate check, so a
+            // trace replays how the working set converged within the step.
+            crate::obs::trace::event(
+                "gap_check",
+                vec![
+                    ("sigma", Json::Num(sig)),
+                    ("round", Json::Num(refits as f64)),
+                    ("gap", Json::Num(gap)),
+                    ("gap_abs", Json::Num(gap_abs)),
+                    ("n_fitted", Json::Num(e_set.len() as f64)),
+                    ("n_universe", Json::Num(universe.len() as f64)),
+                ],
+            );
+        }
         t_kkt += t2.elapsed().as_secs_f64();
 
         if gap <= gap_abs {

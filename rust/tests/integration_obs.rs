@@ -1,0 +1,130 @@
+//! Integration: the observability layer is invisible to the solver.
+//!
+//! The contract the tracing/counter subsystem sells is "leave the
+//! instrumentation in the hot path permanently": counters are relaxed
+//! atomics and spans branch on one load, so enabling a trace must change
+//! *nothing* about the arithmetic. This test proves it differentially —
+//! the same fit with tracing off and tracing on must be **bitwise**
+//! identical, across kernel thread counts — and then closes the loop on
+//! the trace artifact itself: the JSONL a real fit writes parses line by
+//! line, carries one span per σ-step, and aggregates through
+//! [`slope_screen::obs::profile`] into a non-empty self-time table.
+
+use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+use slope_screen::jsonio::Json;
+use slope_screen::obs::{profile, trace};
+use slope_screen::rng::Pcg64;
+use slope_screen::slope::family::{Family, Problem};
+use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+use slope_screen::slope::path::{fit_path, NativeGradient, PathFit, PathOptions, Strategy};
+
+fn problem() -> Problem {
+    SyntheticSpec {
+        n: 40,
+        p: 120,
+        rho: 0.2,
+        design: DesignKind::Compound,
+        beta: BetaSpec::PlusMinus { k: 8, scale: 2.0 },
+        family: Family::Gaussian,
+        noise_sd: 1.0,
+        standardize: true,
+    }
+    .generate(&mut Pcg64::new(2020))
+}
+
+fn fit(prob: &Problem, threads: usize) -> PathFit {
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+    cfg.length = 12;
+    let o = PathOptions::new(cfg)
+        .with_strategy(Strategy::StrongSet)
+        .with_threads(threads);
+    fit_path(prob, &o, &NativeGradient(prob))
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_and_the_trace_profiles() {
+    // The tracer is process-global: serialize against any other test
+    // that toggles it (unit tests in the library share the guard).
+    let _g = trace::test_guard();
+    let prob = problem();
+    let trace_path = std::env::temp_dir().join(format!(
+        "slope_obs_itest_{}.jsonl",
+        std::process::id()
+    ));
+
+    for &threads in &[1usize, 2, 7] {
+        assert!(trace::disabled(), "tracing must start disabled");
+        let plain = fit(&prob, threads);
+
+        trace::enable_file(&trace_path).expect("enable trace sink");
+        let traced = fit(&prob, threads);
+        trace::disable();
+        assert!(trace::disabled(), "disable() must turn tracing off");
+
+        // The differential core: not "close", *bitwise*. Any branch the
+        // instrumentation adds to the numeric path would show up here.
+        assert_eq!(plain.steps.len(), traced.steps.len(), "threads={threads}");
+        assert_eq!(
+            plain.total_violations, traced.total_violations,
+            "threads={threads}"
+        );
+        assert_eq!(plain.final_beta.len(), traced.final_beta.len());
+        for (i, (a, b)) in plain.final_beta.iter().zip(&traced.final_beta).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads}: coefficient {i} differs bitwise ({a} vs {b})"
+            );
+        }
+        for (x, y) in plain.final_grad.iter().zip(&traced.final_grad) {
+            assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}: gradient differs");
+        }
+
+        // The artifact: well-formed JSONL, a meta header, the closing
+        // counters record, and per-step spans under the path_fit span.
+        let text = std::fs::read_to_string(&trace_path).expect("trace file");
+        let mut path_steps = 0usize;
+        let mut path_fits = 0usize;
+        let mut saw_meta = false;
+        let mut saw_counters = false;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let j = Json::parse(line).expect("every trace line parses as JSON");
+            match j.field("ev").and_then(|e| e.as_str()) {
+                Some("meta") => saw_meta = true,
+                Some("counters") => saw_counters = true,
+                Some("span") => match j.field("name").and_then(|n| n.as_str()) {
+                    Some("path_step") => path_steps += 1,
+                    Some("path_fit") => path_fits += 1,
+                    _ => {}
+                },
+                _ => {}
+            }
+        }
+        assert!(saw_meta, "threads={threads}: missing meta header");
+        assert!(saw_counters, "threads={threads}: missing closing counters record");
+        assert_eq!(path_fits, 1, "threads={threads}: exactly one fit-level span");
+        // The β = 0 anchor step is recorded without a solve (no span);
+        // every solved step gets one.
+        assert!(
+            path_steps >= traced.steps.len().saturating_sub(1) && path_steps >= 1,
+            "threads={threads}: {path_steps} path_step spans for {} steps",
+            traced.steps.len()
+        );
+
+        // And the profile aggregator reads the same file back.
+        let prof = profile::profile_file(&trace_path).expect("profile the trace");
+        assert!(prof.records > 0);
+        assert!(
+            prof.spans.iter().any(|s| s.name == "path_step"),
+            "threads={threads}: profile lost the path_step spans"
+        );
+        assert!(
+            !prof.counters.is_empty(),
+            "threads={threads}: profile lost the counters record"
+        );
+        let step = prof.spans.iter().find(|s| s.name == "path_step").unwrap();
+        assert_eq!(step.count as usize, path_steps);
+        assert!(step.total_us >= step.self_us, "self-time cannot exceed total");
+    }
+    let _ = std::fs::remove_file(&trace_path);
+}
