@@ -61,6 +61,7 @@ use slope_screen::linalg::PackCache;
 use slope_screen::obs::registry as obsreg;
 use slope_screen::obs::trace;
 use slope_screen::rng::Pcg64;
+use slope_screen::slope::cancel::CancelToken;
 use slope_screen::slope::family::{Family, Problem};
 use slope_screen::slope::lambda::{LambdaKind, PathConfig};
 use slope_screen::slope::path::{
@@ -537,6 +538,58 @@ fn main() {
         }
     }
 
+    // Resilience contract (DESIGN.md §12): threading a live-but-never-
+    // firing deadline token through a fit must be near-free — the polls
+    // are one relaxed load per FISTA iteration and per σ-step — and
+    // bitwise invisible. Measured warm/parallel at the largest size,
+    // best of 3 per arm.
+    let cancel_overhead = {
+        let pi_max = ps.iter().position(|&p| p == p_max).expect("p_max in grid");
+        let prob = make_problem(n, p_max, k.min(p_max / 2).max(1), rho, seed + pi_max as u64);
+        let ng = NativeGradient(&prob);
+        let o_plain =
+            opts(q, path_length, threads, default_engine == "packed", Strategy::StrongSet);
+        // One hour out: the token is polled on every check but never fires.
+        let o_token = o_plain.clone().with_cancel(CancelToken::with_deadline_ms(3_600_000));
+        let warm_seed = fit_path(&prob, &o_plain, &ng).seed();
+        let best_of_3 = |o: &PathOptions| {
+            let mut best_s = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..3 {
+                let fit = fit_path_seeded(&prob, o, &ng, Some(&warm_seed));
+                best_s = best_s.min(fit.wall_time);
+                last = Some(fit);
+            }
+            (best_s, last.expect("three reps"))
+        };
+        let (plain_s, plain_fit) = best_of_3(&o_plain);
+        let (token_s, token_fit) = best_of_3(&o_token);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(
+            bits(&plain_fit.final_beta),
+            bits(&token_fit.final_beta),
+            "a never-firing cancel token must be bitwise invisible (beta)"
+        );
+        assert_eq!(
+            bits(&plain_fit.final_grad),
+            bits(&token_fit.final_grad),
+            "a never-firing cancel token must be bitwise invisible (grad)"
+        );
+        let overhead = token_s / plain_s.max(1e-12) - 1.0;
+        println!(
+            "cancellation-check overhead at p={p_max} (warm, parallel, best of 3): {:.2}% ({token_s:.4}s with token vs {plain_s:.4}s without)",
+            overhead * 100.0
+        );
+        if !smoke && threads >= 4 {
+            assert!(
+                overhead < 0.01,
+                "cancellation checks must cost < 1% on the warm parallel path at p={p_max}, got {:.2}%",
+                overhead * 100.0
+            );
+        }
+        overhead
+    };
+
     let mut speedup_fields = vec![
         ("p", Json::Num(p_max as f64)),
         ("engine", Json::Str(default_engine.to_string())),
@@ -592,6 +645,10 @@ fn main() {
             ),
         ),
         ("speedup", Json::obj(speedup_fields)),
+        (
+            "resilience",
+            Json::obj(vec![("cancel_check_overhead", Json::Num(cancel_overhead))]),
+        ),
         (
             "obs",
             Json::obj(vec![("disabled_span_ns", Json::Num(span_overhead_ns))]),

@@ -1,0 +1,229 @@
+//! Deterministic fault injection for the resilience test harness.
+//!
+//! A [`FaultPlan`] describes a small set of misbehaviors — panic at the
+//! n-th FISTA solve, sleep inside every solve, corrupt a gradient with
+//! NaN, drop a serve connection mid-stream — and a process-global
+//! registry arms it. Production code calls the `on_*` hooks at the
+//! matching sites; every hook opens with a single relaxed atomic load of
+//! the `ACTIVE` flag, so a disabled registry costs one predictable branch
+//! and touches no solver state (the chaos suite asserts fits are bitwise
+//! identical with the registry disarmed).
+//!
+//! The plan is seeded: the slow-solve jitter draws from a xorshift stream
+//! keyed by `seed`, so a chaos run replays identically. Counters reset on
+//! [`install`], so scenario ordering inside one test process is explicit
+//! rather than accidental.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::jsonio::Json;
+use crate::obs::registry as obsreg;
+
+/// What to break, and when. All triggers are optional; an empty plan is
+/// legal and injects nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Panic (with a recognizable payload) when the n-th FISTA solve of
+    /// the process starts, 1-based.
+    pub panic_at_solve: Option<u64>,
+    /// Sleep this many milliseconds (± seeded jitter) at the start of
+    /// every FISTA solve — the lever for deadline-expiry scenarios.
+    pub slow_solve_ms: u64,
+    /// Overwrite the first gradient entry with NaN on the n-th solve,
+    /// 1-based — exercises the non-finite bail + degradation ladder.
+    pub nan_grad_at_solve: Option<u64>,
+    /// Sever a serve connection after this many request lines.
+    pub drop_after_lines: Option<u64>,
+    /// Seed for the jitter stream.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse from the JSON schema documented in DESIGN.md §12:
+    /// `{"panic_at_solve": 3, "slow_solve_ms": 50, "nan_grad_at_solve": 1,
+    ///   "drop_after_lines": 2, "seed": 7}` — every field optional.
+    pub fn parse(json: &Json) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        if let Json::Obj(map) = json {
+            for key in map.keys() {
+                match key.as_str() {
+                    "panic_at_solve" | "slow_solve_ms" | "nan_grad_at_solve"
+                    | "drop_after_lines" | "seed" => {}
+                    other => return Err(format!("fault plan: unknown field `{other}`")),
+                }
+            }
+        } else {
+            return Err("fault plan: expected a JSON object".to_string());
+        }
+        let u64_field = |name: &str| -> Result<Option<u64>, String> {
+            match json.field(name) {
+                None | Some(Json::Null) => Ok(None),
+                Some(v) => {
+                    let n = v
+                        .as_f64()
+                        .ok_or_else(|| format!("fault plan: `{name}` must be a number"))?;
+                    if n < 0.0 || n.fract() != 0.0 {
+                        return Err(format!("fault plan: `{name}` must be a non-negative integer"));
+                    }
+                    Ok(Some(n as u64))
+                }
+            }
+        };
+        plan.panic_at_solve = u64_field("panic_at_solve")?;
+        plan.slow_solve_ms = u64_field("slow_solve_ms")?.unwrap_or(0);
+        plan.nan_grad_at_solve = u64_field("nan_grad_at_solve")?;
+        plan.drop_after_lines = u64_field("drop_after_lines")?;
+        plan.seed = u64_field("seed")?.unwrap_or(0x5EED);
+        Ok(plan)
+    }
+
+    /// Parse from a JSON source string (file contents or an inline CLI
+    /// argument).
+    pub fn parse_str(src: &str) -> Result<FaultPlan, String> {
+        let json = Json::parse(src).map_err(|e| format!("fault plan: {e}"))?;
+        FaultPlan::parse(&json)
+    }
+}
+
+/// One relaxed load on every hook; everything else lives behind it.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static SOLVE_COUNT: AtomicU64 = AtomicU64::new(0);
+static JITTER_STATE: AtomicU64 = AtomicU64::new(0);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+
+/// Is a fault plan armed? A single relaxed atomic load — the only cost
+/// production code pays when chaos is off.
+#[inline]
+pub fn enabled() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Arm `plan`. Resets the solve counter and re-seeds the jitter stream so
+/// scenarios replay deterministically.
+pub fn install(plan: FaultPlan) {
+    SOLVE_COUNT.store(0, Ordering::Relaxed);
+    JITTER_STATE.store(plan.seed | 1, Ordering::Relaxed);
+    *PLAN.lock().unwrap() = Some(plan);
+    ACTIVE.store(true, Ordering::Relaxed);
+}
+
+/// Disarm. Hooks become the single disabled-branch again.
+pub fn clear() {
+    ACTIVE.store(false, Ordering::Relaxed);
+    *PLAN.lock().unwrap() = None;
+    SOLVE_COUNT.store(0, Ordering::Relaxed);
+}
+
+/// A snapshot of the armed plan, if any.
+pub fn current() -> Option<FaultPlan> {
+    if !enabled() {
+        return None;
+    }
+    PLAN.lock().unwrap().clone()
+}
+
+fn next_jitter_ms(bound: u64) -> u64 {
+    if bound == 0 {
+        return 0;
+    }
+    // xorshift64 over a shared atomic: deterministic for the serialized
+    // chaos tests, and only ever touched while a plan is armed.
+    let mut x = JITTER_STATE.load(Ordering::Relaxed);
+    x ^= x << 13;
+    x ^= x >> 7;
+    x ^= x << 17;
+    JITTER_STATE.store(x, Ordering::Relaxed);
+    x % bound
+}
+
+/// Per-solve faults resolved by [`on_solve`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolveFaults {
+    /// Poison the first gradient entry of this solve with NaN.
+    pub corrupt_grad: bool,
+}
+
+/// Called at the top of every FISTA solve. May sleep (slow-solve plans)
+/// or panic (panic-at-nth-solve plans); otherwise reports which in-solve
+/// faults apply.
+#[inline]
+pub fn on_solve() -> SolveFaults {
+    if !enabled() {
+        return SolveFaults::default();
+    }
+    on_solve_armed()
+}
+
+#[cold]
+fn on_solve_armed() -> SolveFaults {
+    let Some(plan) = current() else { return SolveFaults::default() };
+    let nth = SOLVE_COUNT.fetch_add(1, Ordering::Relaxed) + 1;
+    if plan.slow_solve_ms > 0 {
+        obsreg::FAULT_INJECTIONS.inc();
+        let jitter = next_jitter_ms(plan.slow_solve_ms / 4 + 1);
+        std::thread::sleep(std::time::Duration::from_millis(plan.slow_solve_ms + jitter));
+    }
+    if plan.panic_at_solve == Some(nth) {
+        obsreg::FAULT_INJECTIONS.inc();
+        panic!("fault injection: planned panic at solve {nth}");
+    }
+    let corrupt_grad = plan.nan_grad_at_solve == Some(nth);
+    if corrupt_grad {
+        obsreg::FAULT_INJECTIONS.inc();
+    }
+    SolveFaults { corrupt_grad }
+}
+
+/// Connection-drop trigger for the serve loop: `Some(n)` means the
+/// handler should sever the stream after the n-th request line.
+#[inline]
+pub fn drop_after_lines() -> Option<u64> {
+    if !enabled() {
+        return None;
+    }
+    current().and_then(|p| p.drop_after_lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global; tests that arm it must serialize.
+    // The chaos integration suite holds its own lock — these unit tests
+    // share one too.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_hooks_are_inert() {
+        let _g = LOCK.lock().unwrap();
+        clear();
+        assert!(!enabled());
+        assert!(!on_solve().corrupt_grad);
+        assert_eq!(drop_after_lines(), None);
+    }
+
+    #[test]
+    fn parse_accepts_partial_plans_and_rejects_junk() {
+        let plan = FaultPlan::parse_str(r#"{"panic_at_solve": 2, "seed": 9}"#).unwrap();
+        assert_eq!(plan.panic_at_solve, Some(2));
+        assert_eq!(plan.slow_solve_ms, 0);
+        assert_eq!(plan.seed, 9);
+        assert!(FaultPlan::parse_str(r#"{"panic_at_solve": -1}"#).is_err());
+        assert!(FaultPlan::parse_str(r#"{"explode": true}"#).is_err());
+        assert!(FaultPlan::parse_str("[1,2]").is_err());
+    }
+
+    #[test]
+    fn nth_solve_triggers_fire_once_in_order() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan { nan_grad_at_solve: Some(2), ..FaultPlan::default() });
+        assert!(!on_solve().corrupt_grad, "solve 1 clean");
+        assert!(on_solve().corrupt_grad, "solve 2 poisoned");
+        assert!(!on_solve().corrupt_grad, "solve 3 clean again");
+        // Re-install resets the counter.
+        install(FaultPlan { nan_grad_at_solve: Some(1), ..FaultPlan::default() });
+        assert!(on_solve().corrupt_grad);
+        clear();
+    }
+}

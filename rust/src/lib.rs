@@ -30,6 +30,9 @@
 //!   over the hot seams (kernels, caches, solver, screening), an opt-in
 //!   span/event tracer with a JSONL sink (`--trace`), and the trace
 //!   profiler behind the `profile` subcommand (DESIGN.md §11).
+//! * [`fault`] — the deterministic fault-injection registry behind the
+//!   chaos test harness and `--fault-plan` (DESIGN.md §12); a single
+//!   disabled branch in production.
 //! * substrates built for the offline environment: [`rng`], [`linalg`],
 //!   [`pool`], [`cli`], [`jsonio`], [`check`] and [`benchkit`].
 //!
@@ -41,6 +44,7 @@ pub mod check;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod ingest;
 pub mod jsonio;
 pub mod linalg;

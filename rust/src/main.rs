@@ -61,6 +61,10 @@ fn main() {
         .opt("socket", "/tmp/slope-serve.sock", "serve/client: unix socket path")
         .opt("queue", "64", "serve: admission-queue capacity (backpressure bound)")
         .opt("fit-threads", "0", "serve: kernel threads per fit job (0 = threads split across the pool)")
+        .opt("deadline-ms", "0", "fit/serve: per-fit deadline in milliseconds (0 = none); an expired fit is a typed `deadline` error, never a silent partial result")
+        .opt("max-line-bytes", "16777216", "serve: byte cap on one NDJSON request line (oversized lines get a typed error)")
+        .opt("shed-queue", "0", "serve: reject fit requests with a typed `overload` error once this many are parked (0 = blocking backpressure)")
+        .opt("fault-plan", "", "serve: arm deterministic fault injection (a JSON file path or inline JSON; see DESIGN.md §12 — chaos testing only)")
         .opt("json", "", "client: a single request line to send")
         .opt("trace", "", "fit/cv/serve: write a JSONL span/event trace to this path (read it back with `profile`)")
         .flag("stdio", "serve: speak NDJSON over stdin/stdout instead of a socket")
@@ -206,7 +210,13 @@ fn build_opts(parsed: &slope_screen::cli::Parsed, prob: &Problem) -> PathOptions
 fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
     let prob = build_problem(parsed);
     // --threads routes to the parallel backend (0 = process default).
-    let opts = build_opts(parsed, &prob).with_threads(parsed.usize("threads"));
+    let mut opts = build_opts(parsed, &prob).with_threads(parsed.usize("threads"));
+    let deadline_ms = parsed.u64("deadline-ms");
+    if deadline_ms > 0 {
+        opts = opts.with_cancel(
+            slope_screen::slope::cancel::CancelToken::with_deadline_ms(deadline_ms),
+        );
+    }
     let use_xla = parsed.get("grad-engine") == "xla";
 
     let fit = if use_xla {
@@ -223,6 +233,14 @@ fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
     } else {
         fit_path(&prob, &opts, &NativeGradient(&prob))
     };
+
+    if fit.stopped_early == Some("cancelled") {
+        eprintln!(
+            "fit: deadline of {deadline_ms} ms expired after {} completed path steps; partial results are not reported",
+            fit.steps.len()
+        );
+        std::process::exit(1);
+    }
 
     println!(
         "path: {} steps (requested {}), strategy={}, wall={:.3}s{}",
@@ -245,6 +263,10 @@ fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
     let (ts, tv, tk) = slope_screen::slope::path::phase_totals(&fit);
     println!("phase totals: screen={ts:.4}s solve={tv:.4}s kkt={tk:.4}s");
     println!("full-gradient sweeps (p-equivalents): {:.2}", fit.total_grad_sweeps);
+    let degraded = fit.steps.iter().filter(|s| s.degraded_to.is_some()).count();
+    if degraded > 0 {
+        println!("degradation ladder: {degraded} step(s) rescued by a more conservative strategy");
+    }
     if fit.steps.iter().any(|s| !s.solver_converged) {
         println!("warning: some inner solves hit max_iter before certifying — tighten --gap-tol/--path-length or raise fista.max_iter");
     }
@@ -319,12 +341,16 @@ fn cmd_export(parsed: &slope_screen::cli::Parsed) {
 
 fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
     use slope_screen::serve::{Server, ServerConfig};
+    arm_fault_plan(parsed.get("fault-plan"));
     let cfg = ServerConfig {
         threads: parsed.usize("threads"),
         queue: parsed.usize("queue"),
         cache: !parsed.bool("no-cache"),
         fit_threads: parsed.usize("fit-threads"),
         gap_tol: parsed.f64("gap-tol"),
+        max_line_bytes: parsed.usize("max-line-bytes"),
+        deadline_ms: parsed.u64("deadline-ms"),
+        shed_queue: parsed.usize("shed-queue"),
     };
     let server = std::sync::Arc::new(Server::new(cfg));
     if parsed.bool("stdio") {
@@ -339,6 +365,33 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
         return;
     }
     serve_socket(parsed, &server);
+}
+
+/// Parse and install a `--fault-plan` (a JSON file path or inline JSON).
+/// Chaos testing only; a plan that fails to parse is a startup error, not
+/// a silently unarmed harness.
+fn arm_fault_plan(spec: &str) {
+    if spec.is_empty() {
+        return;
+    }
+    let src = if std::path::Path::new(spec).exists() {
+        std::fs::read_to_string(spec).unwrap_or_else(|e| {
+            eprintln!("--fault-plan {spec}: {e}");
+            std::process::exit(1);
+        })
+    } else {
+        spec.to_string()
+    };
+    match slope_screen::fault::FaultPlan::parse_str(&src) {
+        Ok(plan) => {
+            eprintln!("serve: FAULT INJECTION ARMED: {plan:?}");
+            slope_screen::fault::install(plan);
+        }
+        Err(e) => {
+            eprintln!("--fault-plan: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 #[cfg(unix)]
@@ -383,9 +436,12 @@ fn cmd_client(parsed: &slope_screen::cli::Parsed) {
             std::process::exit(1);
         }
     };
+    // Overload rejections and dropped connections back off and retry
+    // (idempotent ops only); other typed errors are answers, printed as-is.
+    let mut backoff = slope_screen::serve::client::Backoff::new(50, 5000, parsed.u64("seed"));
     let inline = parsed.get("json");
     if !inline.is_empty() {
-        match client.round_trip(inline) {
+        match client.round_trip_with_retry(inline, 5, &mut backoff) {
             Ok(resp) => println!("{resp}"),
             Err(e) => {
                 eprintln!("client: {e}");
@@ -407,7 +463,7 @@ fn cmd_client(parsed: &slope_screen::cli::Parsed) {
         if line.trim().is_empty() {
             continue;
         }
-        match client.round_trip(&line) {
+        match client.round_trip_with_retry(&line, 5, &mut backoff) {
             Ok(resp) => println!("{resp}"),
             Err(e) => {
                 eprintln!("client: {e}");
@@ -469,6 +525,13 @@ fn cmd_profile(parsed: &slope_screen::cli::Parsed) {
     {
         println!(
             "\ngradient sweeps: {full:.0} full + {partial:.0} partial, {cols:.0} columns touched"
+        );
+    }
+    if let (Some(degraded), Some(nonconverged)) =
+        (get("path_degraded_steps"), get("fista_nonconverged"))
+    {
+        println!(
+            "resilience: {degraded:.0} ladder-degraded path steps, {nonconverged:.0} uncertified FISTA solves"
         );
     }
 }

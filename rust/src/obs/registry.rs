@@ -141,6 +141,15 @@ registry! {
     // --- serve queue ---
     SERVE_QUEUE_DEPTH: Gauge, "serve_queue_depth", "requests holding admission tickets but not yet admitted";
     SERVE_IN_FLIGHT: Gauge, "serve_in_flight", "admitted (queued-on-pool or running) fit jobs";
+    // --- resilience (DESIGN.md §12) ---
+    SERVE_WORKER_PANICS: Counter, "serve_worker_panics", "fit jobs that panicked inside a worker (caught and quarantined)";
+    SERVE_DEADLINE_EXPIRED: Counter, "serve_deadline_expired", "requests cancelled by their deadline_ms budget";
+    SERVE_LOAD_SHED: Counter, "serve_load_shed", "requests rejected with retry_after_ms because the queue was full";
+    SERVE_SHUTDOWN_REJECTED: Counter, "serve_shutdown_rejected", "queued requests rejected during graceful drain";
+    REGISTRY_QUARANTINED: Counter, "registry_quarantined", "datasets evicted after repeated worker panics (strike-out)";
+    PATH_DEGRADED_STEPS: Counter, "path_degraded_steps", "path steps rescued by a more conservative strategy (degradation ladder)";
+    FISTA_NONCONVERGED: Counter, "fista_nonconverged", "FISTA solves that exhausted max_iter without certifying convergence";
+    FAULT_INJECTIONS: Counter, "fault_injections", "faults injected by an armed fault plan (chaos harness)";
 }
 
 /// Name/value pairs for every registered cell, in declaration order.

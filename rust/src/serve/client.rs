@@ -1,5 +1,72 @@
 //! Blocking newline-delimited JSON client for the serve socket transport
-//! (the `client` CLI subcommand and `examples/serving.rs` use it).
+//! (the `client` CLI subcommand and `examples/serving.rs` use it), plus
+//! [`Backoff`] — seeded, jittered exponential retry for the typed
+//! rejections the resilient server can answer with (DESIGN.md §12).
+
+/// Jittered exponential backoff policy for retryable serve rejections.
+///
+/// Deterministic: the jitter draws from a xorshift stream keyed by the
+/// seed, so a retry schedule replays in tests. The server's
+/// `retry_after_ms` hint, when present, takes precedence over the
+/// exponential base — the server knows its own queue depth.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    base_ms: u64,
+    cap_ms: u64,
+    attempt: u32,
+    state: u64,
+}
+
+impl Backoff {
+    /// Policy starting at `base_ms`, doubling per attempt, capped at
+    /// `cap_ms`, jittered from `seed`.
+    pub fn new(base_ms: u64, cap_ms: u64, seed: u64) -> Backoff {
+        Backoff { base_ms: base_ms.max(1), cap_ms: cap_ms.max(1), attempt: 0, state: seed | 1 }
+    }
+
+    /// Retries taken so far.
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    fn next_jitter(&mut self, bound: u64) -> u64 {
+        if bound == 0 {
+            return 0;
+        }
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x % bound
+    }
+
+    /// The next delay in milliseconds: `hint` (the server's
+    /// `retry_after_ms`, if it sent one) or the exponential base, plus
+    /// up to 25% jitter so a herd of rejected clients does not return in
+    /// lockstep.
+    pub fn next_delay_ms(&mut self, hint: Option<u64>) -> u64 {
+        let base = match hint {
+            Some(ms) => ms.max(1),
+            None => {
+                let exp = self.base_ms.saturating_mul(1u64 << self.attempt.min(16));
+                exp.min(self.cap_ms)
+            }
+        };
+        self.attempt += 1;
+        let capped = base.min(self.cap_ms);
+        capped + self.next_jitter(capped / 4 + 1)
+    }
+}
+
+/// Is `op` safe to retry after an overload rejection or a dropped
+/// connection? Everything the serve protocol offers is idempotent —
+/// fits are pure functions of (dataset, model) and registrations intern
+/// by fingerprint — except `shutdown`, where a retry could kill a
+/// freshly restarted server.
+pub fn idempotent_op(op: &str) -> bool {
+    op != "shutdown"
+}
 
 #[cfg(unix)]
 pub use unix_impl::{connect_with_retry, Client};
@@ -8,13 +75,18 @@ pub use unix_impl::{connect_with_retry, Client};
 mod unix_impl {
     use std::io::{BufRead, BufReader, Write};
     use std::os::unix::net::UnixStream;
-    use std::path::Path;
+    use std::path::{Path, PathBuf};
     use std::time::Duration;
+
+    use super::{idempotent_op, Backoff};
+    use crate::jsonio::Json;
 
     /// One connection to a serve socket.
     pub struct Client {
         reader: BufReader<UnixStream>,
         writer: UnixStream,
+        /// Socket path, kept for reconnects after a dropped connection.
+        path: PathBuf,
     }
 
     impl Client {
@@ -22,7 +94,14 @@ mod unix_impl {
         pub fn connect(path: &Path) -> std::io::Result<Client> {
             let stream = UnixStream::connect(path)?;
             let reader = BufReader::new(stream.try_clone()?);
-            Ok(Client { reader, writer: stream })
+            Ok(Client { reader, writer: stream, path: path.to_path_buf() })
+        }
+
+        /// Drop the current connection and dial the same socket again.
+        pub fn reconnect(&mut self) -> std::io::Result<()> {
+            let fresh = Client::connect(&self.path.clone())?;
+            *self = fresh;
+            Ok(())
         }
 
         /// Send one request line and read the matching response line.
@@ -39,6 +118,56 @@ mod unix_impl {
                 ));
             }
             Ok(line.trim_end().to_string())
+        }
+
+        /// [`Client::round_trip`] with resilience: overload rejections
+        /// back off (honoring the server's `retry_after_ms` hint) and
+        /// retry; dropped connections reconnect and retry. Only
+        /// idempotent ops are ever retried — a non-idempotent request
+        /// (`shutdown`) takes exactly one attempt. Non-retryable error
+        /// responses (deadline, panic, invalid, ...) are returned as-is:
+        /// they are answers, not transport failures.
+        pub fn round_trip_with_retry(
+            &mut self,
+            request: &str,
+            retries: u32,
+            backoff: &mut Backoff,
+        ) -> std::io::Result<String> {
+            let op = Json::parse(request.trim())
+                .ok()
+                .and_then(|j| j.field("op").and_then(|v| v.as_str().map(str::to_string)))
+                .unwrap_or_default();
+            let retryable_op = idempotent_op(&op);
+            let mut attempts_left = if retryable_op { retries } else { 0 };
+            loop {
+                match self.round_trip(request) {
+                    Ok(response) => {
+                        let hint = Json::parse(&response)
+                            .ok()
+                            .and_then(|j| j.field("retry_after_ms").and_then(Json::as_usize));
+                        match hint {
+                            Some(ms) if attempts_left > 0 => {
+                                attempts_left -= 1;
+                                let delay = backoff.next_delay_ms(Some(ms as u64));
+                                std::thread::sleep(Duration::from_millis(delay));
+                            }
+                            _ => return Ok(response),
+                        }
+                    }
+                    Err(e) if retryable_op && attempts_left > 0 => {
+                        attempts_left -= 1;
+                        let delay = backoff.next_delay_ms(None);
+                        std::thread::sleep(Duration::from_millis(delay));
+                        // A dead connection stays dead; redial before the
+                        // next attempt. If the server is still down the
+                        // reconnect error surfaces on the last attempt.
+                        if self.reconnect().is_err() && attempts_left == 0 {
+                            return Err(e);
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
         }
     }
 
@@ -61,5 +190,42 @@ mod unix_impl {
         Err(last_err.unwrap_or_else(|| {
             std::io::Error::new(std::io::ErrorKind::NotFound, "serve socket never appeared")
         }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_grows_honors_hints_and_replays() {
+        let mut a = Backoff::new(10, 1000, 42);
+        let d0 = a.next_delay_ms(None);
+        let d1 = a.next_delay_ms(None);
+        let d2 = a.next_delay_ms(None);
+        // exponential envelope with ≤25% jitter
+        assert!((10..=13).contains(&d0), "{d0}");
+        assert!((20..=26).contains(&d1), "{d1}");
+        assert!((40..=51).contains(&d2), "{d2}");
+        // a server hint overrides the exponential base
+        let hinted = a.next_delay_ms(Some(500));
+        assert!((500..=626).contains(&hinted), "{hinted}");
+        // same seed, same schedule
+        let mut b = Backoff::new(10, 1000, 42);
+        assert_eq!(b.next_delay_ms(None), d0);
+        assert_eq!(b.next_delay_ms(None), d1);
+        // the cap bounds runaway growth
+        let mut c = Backoff::new(100, 250, 7);
+        for _ in 0..10 {
+            assert!(c.next_delay_ms(None) <= 250 + 250 / 4 + 1);
+        }
+    }
+
+    #[test]
+    fn only_shutdown_is_non_idempotent() {
+        for op in ["fit_path", "fit_point", "predict", "dataset_from_file", "stats", "metrics"] {
+            assert!(idempotent_op(op), "{op}");
+        }
+        assert!(!idempotent_op("shutdown"));
     }
 }

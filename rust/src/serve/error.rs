@@ -1,0 +1,144 @@
+//! Typed serve errors (DESIGN.md §12).
+//!
+//! Every failure the serve stack can produce is one of these variants,
+//! so clients can branch on a stable `error_kind` string instead of
+//! parsing prose: deadlines carry partial progress, overload carries a
+//! `retry_after_ms` hint, worker panics carry the caught payload. The
+//! protocol layer renders them through
+//! [`crate::serve::protocol::error_response`].
+
+use std::fmt;
+
+/// A typed serve-layer failure.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// Malformed or semantically invalid request.
+    Invalid(String),
+    /// The request's `deadline_ms` budget expired before the fit
+    /// certified. Carries partial progress: path steps completed before
+    /// cancellation and the last certified duality gap, if any.
+    Deadline {
+        /// The budget that expired.
+        deadline_ms: u64,
+        /// Path steps completed before cancellation (0 for `fit_point`).
+        steps_done: usize,
+        /// Last certified duality gap, when a gap-driven solve got far
+        /// enough to evaluate one.
+        gap: Option<f64>,
+    },
+    /// The server is draining: the request was rejected before running.
+    Shutdown,
+    /// The admission queue is full; retry after the hinted delay.
+    Overload {
+        /// Client backoff hint, derived from the queue depth.
+        retry_after_ms: u64,
+    },
+    /// The fit job panicked inside a worker; the payload was caught and
+    /// the job quarantined.
+    Panic {
+        /// Panic payload, downcast from `catch_unwind`.
+        message: String,
+    },
+    /// An NDJSON request line exceeded the configured byte cap.
+    OversizedLine {
+        /// Bytes received before the line was abandoned.
+        bytes: usize,
+        /// The configured cap.
+        limit: usize,
+    },
+    /// Any other failure (build errors, coalesced-build failures, I/O).
+    Failed(String),
+}
+
+impl ServeError {
+    /// Stable machine-readable discriminator, surfaced as `error_kind`
+    /// in error responses.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Invalid(_) => "invalid",
+            ServeError::Deadline { .. } => "deadline",
+            ServeError::Shutdown => "shutdown",
+            ServeError::Overload { .. } => "overload",
+            ServeError::Panic { .. } => "panic",
+            ServeError::OversizedLine { .. } => "oversized_line",
+            ServeError::Failed(_) => "failed",
+        }
+    }
+
+    /// Human-readable message for the `error` field.
+    pub fn message(&self) -> String {
+        match self {
+            ServeError::Invalid(m) => m.clone(),
+            ServeError::Deadline { deadline_ms, steps_done, .. } => format!(
+                "deadline of {deadline_ms} ms expired after {steps_done} completed path steps"
+            ),
+            ServeError::Shutdown => "server is shutting down".to_string(),
+            ServeError::Overload { retry_after_ms } => {
+                format!("queue full; retry after {retry_after_ms} ms")
+            }
+            ServeError::Panic { message } => format!("fit job panicked: {message}"),
+            ServeError::OversizedLine { bytes, limit } => {
+                format!("request line exceeds {limit} bytes (got at least {bytes})")
+            }
+            ServeError::Failed(m) => m.clone(),
+        }
+    }
+
+    /// The backoff hint, when this error carries one.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        match self {
+            ServeError::Overload { retry_after_ms } => Some(*retry_after_ms),
+            _ => None,
+        }
+    }
+
+    /// Is it safe for a client to retry the *same* request? Deadline
+    /// expiries are excluded: the same budget would expire again.
+    pub fn retryable(&self) -> bool {
+        matches!(self, ServeError::Overload { .. })
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message())
+    }
+}
+
+// The pre-resilience serve layer reported `String` errors; these keep
+// internal call sites and tests terse while everything converges on the
+// typed enum.
+impl From<String> for ServeError {
+    fn from(m: String) -> Self {
+        ServeError::Failed(m)
+    }
+}
+
+impl From<&str> for ServeError {
+    fn from(m: &str) -> Self {
+        ServeError::Failed(m.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_hints_are_stable() {
+        assert_eq!(ServeError::Shutdown.kind(), "shutdown");
+        assert_eq!(ServeError::Invalid("x".into()).kind(), "invalid");
+        let over = ServeError::Overload { retry_after_ms: 120 };
+        assert_eq!(over.kind(), "overload");
+        assert_eq!(over.retry_after_ms(), Some(120));
+        assert!(over.retryable());
+        let dl = ServeError::Deadline { deadline_ms: 5, steps_done: 3, gap: Some(0.5) };
+        assert_eq!(dl.kind(), "deadline");
+        assert!(!dl.retryable());
+        assert!(dl.message().contains("5 ms"));
+        assert!(dl.message().contains("3 completed"));
+        let p = ServeError::Panic { message: "kaboom".into() };
+        assert!(p.message().contains("kaboom"));
+        assert_eq!(ServeError::from("nope").kind(), "failed");
+    }
+}

@@ -33,11 +33,16 @@
 //! * [`server`] — the transports: newline-delimited JSON over
 //!   stdin/stdout or a Unix-domain socket. Zero external crates.
 //! * [`client`] — a small blocking client for the socket transport (the
-//!   `client` CLI subcommand and the serving example use it).
+//!   `client` CLI subcommand and the serving example use it), with
+//!   jittered exponential backoff for retryable rejections.
+//! * [`error`] — the typed [`error::ServeError`] every layer reports:
+//!   deadlines with partial progress, overload with `retry_after_ms`,
+//!   caught panic payloads, drain rejections (DESIGN.md §12).
 //!
 //! See `DESIGN.md` §Serve for the protocol reference.
 
 pub mod client;
+pub mod error;
 pub mod metrics;
 pub mod protocol;
 pub mod registry;

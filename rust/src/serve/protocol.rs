@@ -17,6 +17,7 @@
 use crate::data::real::RealDataset;
 use crate::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
 use crate::jsonio::Json;
+use crate::serve::error::ServeError;
 use crate::linalg::{Design, Mat};
 use crate::rng::Pcg64;
 use crate::slope::family::{Family, Problem};
@@ -429,6 +430,12 @@ pub struct ModelSpec {
     /// the tolerance regime `(0, 1e-4]` so it stays a solver knob, and —
     /// like `screen`/`threads` — excluded from the cache identity.
     pub gap_tol: f64,
+    /// Per-request deadline in milliseconds (0 = the server-wide default,
+    /// which itself defaults to no deadline). A budget, not a model
+    /// parameter: like `screen`/`threads`/`gap_tol` it is excluded from
+    /// the cache identity — an expired request never caches a partial
+    /// fit, and a completed one is the same fit at any budget.
+    pub deadline_ms: u64,
 }
 
 impl ModelSpec {
@@ -441,6 +448,7 @@ impl ModelSpec {
             screen: str_field(j, "screen", "auto")?,
             threads: usize_field(j, "threads", 0)?,
             gap_tol: f64_field(j, "gap_tol", 0.0)?,
+            deadline_ms: usize_field(j, "deadline_ms", 0)? as u64,
         };
         if spec.path_length == 0 {
             return Err("path_length must be >= 1".to_string());
@@ -660,14 +668,36 @@ pub fn ok_response(id: u64, result: Json) -> String {
     .to_string()
 }
 
-/// Error response line (no trailing newline).
+/// Error response line (no trailing newline). Untyped legacy shape —
+/// everything serve-side now goes through [`error_response`]; this
+/// remains for parse-stage failures, which are always `invalid`.
 pub fn err_response(id: u64, message: &str) -> String {
-    Json::obj(vec![
+    error_response(id, &ServeError::Invalid(message.to_string()))
+}
+
+/// Typed error response line (no trailing newline).
+///
+/// Always `{"id", "ok": false, "error", "error_kind"}`; overload adds
+/// `retry_after_ms`, deadline expiry adds `partial` with `steps_done`
+/// and (when a gap-driven solve certified one) the last duality `gap`.
+pub fn error_response(id: u64, err: &ServeError) -> String {
+    let mut fields = vec![
         ("id", Json::Num(id as f64)),
         ("ok", Json::Bool(false)),
-        ("error", Json::Str(message.to_string())),
-    ])
-    .to_string()
+        ("error", Json::Str(err.message())),
+        ("error_kind", Json::Str(err.kind().to_string())),
+    ];
+    if let Some(ms) = err.retry_after_ms() {
+        fields.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    if let ServeError::Deadline { steps_done, gap, .. } = err {
+        let mut partial = vec![("steps_done", Json::Num(*steps_done as f64))];
+        if let Some(g) = gap {
+            partial.push(("gap", Json::Num(*g)));
+        }
+        fields.push(("partial", Json::obj(partial)));
+    }
+    Json::obj(fields).to_string()
 }
 
 /// Build a request line (client-side convenience).
@@ -1126,6 +1156,53 @@ mod tests {
         let j = Json::parse(&err).unwrap();
         assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
         assert_eq!(j.field("error").unwrap().as_str(), Some("boom"));
+        // the legacy helper is now typed under the hood
+        assert_eq!(j.field("error_kind").unwrap().as_str(), Some("invalid"));
+    }
+
+    #[test]
+    fn deadline_ms_is_a_perf_knob_not_an_identity() {
+        let a = ModelSpec::parse(&Json::parse(r#"{"lambda": "bh", "q": 0.05}"#).unwrap()).unwrap();
+        let b = ModelSpec::parse(
+            &Json::parse(r#"{"lambda": "bh", "q": 0.05, "deadline_ms": 250}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a.deadline_ms, 0);
+        assert_eq!(b.deadline_ms, 250);
+        assert_eq!(a.key(), b.key());
+        assert_eq!(a.point_key(), b.point_key());
+        // non-integer budgets are rejected, not truncated
+        assert!(ModelSpec::parse(
+            &Json::parse(r#"{"lambda": "bh", "q": 0.05, "deadline_ms": 1.5}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn typed_error_responses_carry_kind_hint_and_partial() {
+        let line = error_response(7, &ServeError::Overload { retry_after_ms: 150 });
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.field("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.field("error_kind").unwrap().as_str(), Some("overload"));
+        assert_eq!(j.field("retry_after_ms").unwrap().as_usize(), Some(150));
+
+        let line = error_response(
+            8,
+            &ServeError::Deadline { deadline_ms: 5, steps_done: 3, gap: Some(0.25) },
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.field("error_kind").unwrap().as_str(), Some("deadline"));
+        let partial = j.field("partial").unwrap();
+        assert_eq!(partial.field("steps_done").unwrap().as_usize(), Some(3));
+        assert_eq!(partial.field("gap").unwrap().as_f64(), Some(0.25));
+        // no hint on non-retryable errors
+        assert!(j.field("retry_after_ms").is_none());
+
+        let line = error_response(9, &ServeError::Shutdown);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.field("error_kind").unwrap().as_str(), Some("shutdown"));
+        assert!(j.field("partial").is_none());
     }
 
     #[test]

@@ -18,6 +18,14 @@
 //! Concurrent requests for the same (dataset, model) are **coalesced**:
 //! the first one fits, the rest block on a [`BuildGate`] and share the
 //! result — the serving analogue of fitting each path point once.
+//!
+//! **Panic quarantine** (DESIGN.md §12): fits that panic charge a strike
+//! against their dataset entry via [`Registry::record_panic`]; at
+//! [`QUARANTINE_STRIKES`] the entry — problem, cached models, point
+//! states and packed slabs — is evicted wholesale, so a poisoned
+//! materialization (or cache state that keeps re-triggering the same
+//! crash) cannot take the server down request after request. The next
+//! request re-materializes from the spec.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,10 +33,14 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use crate::linalg::packed::PackCache;
 use crate::obs::registry as obsreg;
+use crate::serve::error::ServeError;
 use crate::slope::family::Problem;
 use crate::slope::path::{PathFit, PathSeed};
 
 use super::protocol::{ColumnTransform, DatasetSpec};
+
+/// Worker panics charged to one dataset entry before it is quarantined.
+pub const QUARANTINE_STRIKES: u64 = 3;
 
 /// A fitted path cached with its warm-start state.
 pub struct CachedModel {
@@ -127,6 +139,9 @@ pub struct DatasetEntry {
     /// the gap-driven screens' sphere tests need them (fit-invariant, so
     /// per-request `fit_point` streams must not re-pay the O(n·p) pass).
     col_norms: Mutex<Option<Arc<Vec<f64>>>>,
+    /// Worker panics charged to this entry (quarantined at
+    /// [`QUARANTINE_STRIKES`]).
+    strikes: AtomicU64,
     models: Mutex<HashMap<String, ModelSlot>>,
     points: Mutex<HashMap<String, Arc<PointState>>>,
 }
@@ -247,14 +262,14 @@ impl Registry {
 
     /// Intern a dataset: materialize it on first sight, reuse afterwards.
     /// Past [`MAX_DATASETS`], the oldest interned dataset is evicted.
-    pub fn dataset(&self, spec: &DatasetSpec) -> Result<Arc<DatasetEntry>, String> {
+    pub fn dataset(&self, spec: &DatasetSpec) -> Result<Arc<DatasetEntry>, ServeError> {
         let fp = spec.fingerprint();
         if let Some(entry) = self.datasets.lock().unwrap().by_fp.get(&fp) {
             return Ok(Arc::clone(entry));
         }
         // Materialize outside the lock — generation can be slow, and two
         // racing materializations of the same spec are identical anyway.
-        let materialized = spec.materialize()?;
+        let materialized = spec.materialize().map_err(ServeError::Invalid)?;
         // File-backed specs are fingerprinted by *content*, and the file
         // is re-read by materialize: if it changed in between, the entry
         // would be permanently cached under the wrong key and serve fits
@@ -263,10 +278,10 @@ impl Registry {
         // are deterministic, so this recheck is only ever observable for
         // files — and costs one extra streamed read on a cold intern).
         if spec.fingerprint() != fp {
-            return Err(format!(
+            return Err(ServeError::Failed(format!(
                 "dataset `{}` changed while being registered; retry",
                 spec.label()
-            ));
+            )));
         }
         let entry = Arc::new(DatasetEntry {
             fingerprint: fp,
@@ -278,6 +293,7 @@ impl Registry {
                 PackCache::new(MAX_PACKS_PER_DATASET).with_max_bytes(MAX_PACK_BYTES_PER_DATASET),
             ),
             col_norms: Mutex::new(None),
+            strikes: AtomicU64::new(0),
             models: Mutex::new(HashMap::new()),
             points: Mutex::new(HashMap::new()),
         });
@@ -304,8 +320,8 @@ impl Registry {
         &self,
         entry: &DatasetEntry,
         key: &str,
-        build: impl FnOnce() -> Result<CachedModel, String>,
-    ) -> Result<Fetched, String> {
+        build: impl FnOnce() -> Result<CachedModel, ServeError>,
+    ) -> Result<Fetched, ServeError> {
         if !self.cache_enabled {
             obsreg::REGISTRY_MODEL_BUILDS.inc();
             return build().map(|m| Fetched::Built(Arc::new(m)));
@@ -324,7 +340,7 @@ impl Registry {
                     obsreg::REGISTRY_COALESCED.inc();
                     return match g.wait() {
                         Some(m) => Ok(Fetched::Coalesced(m)),
-                        None => Err("coalesced fit failed; retry".to_string()),
+                        None => Err(ServeError::Failed("coalesced fit failed; retry".to_string())),
                     };
                 }
                 None => {
@@ -373,6 +389,32 @@ impl Registry {
         let datasets = self.datasets.lock().unwrap();
         let models = datasets.by_fp.values().map(|e| e.ready_models()).sum();
         (datasets.by_fp.len(), models)
+    }
+
+    /// Charge a worker panic to `entry`. At [`QUARANTINE_STRIKES`] the
+    /// entry is quarantined: evicted from the registry (so the next
+    /// request re-materializes from the spec) and its model/point caches
+    /// cleared for any in-flight holders. Returns `true` when this call
+    /// quarantined the entry. In-flight `Arc`s stay valid — quarantine
+    /// never invalidates running work.
+    pub fn record_panic(&self, entry: &DatasetEntry) -> bool {
+        let strikes = entry.strikes.fetch_add(1, Ordering::SeqCst) + 1;
+        if strikes < QUARANTINE_STRIKES {
+            return false;
+        }
+        {
+            let mut map = self.datasets.lock().unwrap();
+            if map.by_fp.remove(&entry.fingerprint).is_some() {
+                map.order.retain(|&fp| fp != entry.fingerprint);
+            } else {
+                // Already quarantined by a racing striker; don't double-count.
+                return false;
+            }
+        }
+        entry.models.lock().unwrap().clear();
+        entry.points.lock().unwrap().clear();
+        obsreg::REGISTRY_QUARANTINED.inc();
+        true
     }
 }
 
@@ -451,10 +493,34 @@ mod tests {
     fn failed_build_clears_slot() {
         let reg = Registry::new(true);
         let entry = reg.dataset(&spec(5)).unwrap();
-        assert!(reg.model(&entry, "k", || Err("nope".to_string())).is_err());
+        assert!(reg.model(&entry, "k", || Err(ServeError::from("nope"))).is_err());
         // a later request can build successfully
         let ok = reg.model(&entry, "k", || Ok(build_model(&entry))).unwrap();
         assert_eq!(ok.source(), "fit");
+    }
+
+    #[test]
+    fn repeated_panics_quarantine_the_dataset() {
+        let reg = Registry::new(true);
+        let entry = reg.dataset(&spec(21)).unwrap();
+        reg.model(&entry, "k", || Ok(build_model(&entry))).unwrap();
+        assert_eq!(reg.counts(), (1, 1));
+        let before = obsreg::REGISTRY_QUARANTINED.get();
+        // two strikes: still serving
+        assert!(!reg.record_panic(&entry));
+        assert!(!reg.record_panic(&entry));
+        assert_eq!(reg.counts().0, 1);
+        // third strike: evicted, caches cleared, counter bumped
+        assert!(reg.record_panic(&entry));
+        assert_eq!(reg.counts(), (0, 0));
+        assert_eq!(entry.ready_models(), 0);
+        assert!(obsreg::REGISTRY_QUARANTINED.get() > before);
+        // a later striker on the stale Arc cannot double-quarantine
+        assert!(!reg.record_panic(&entry));
+        // the same spec re-interns fresh (zero strikes)
+        let fresh = reg.dataset(&spec(21)).unwrap();
+        assert!(!Arc::ptr_eq(&entry, &fresh));
+        assert_eq!(fresh.strikes.load(Ordering::SeqCst), 0);
     }
 
     #[test]

@@ -2,38 +2,89 @@
 //! backpressure in front of the [`crate::pool::WorkerPool`], plus the
 //! per-job screening-strategy policy.
 //!
-//! Request threads (one per connection) call [`Scheduler::run`] and block
-//! for their result; at most `capacity` jobs are admitted at once, so a
-//! burst of heavy fits queues here instead of oversubscribing the pool.
-//! Panics inside jobs are caught and surfaced as errors — a malformed
-//! problem must produce an error response, not a dead worker.
+//! Request threads (one per connection) call [`Scheduler::run_job`] and
+//! block for their result; at most `capacity` jobs are admitted at once,
+//! so a burst of heavy fits queues here instead of oversubscribing the
+//! pool. Failures are typed ([`ServeError`], DESIGN.md §12):
+//!
+//! * Panics inside jobs are caught and surfaced as
+//!   [`ServeError::Panic`] carrying the payload — a malformed problem
+//!   must produce an error response, not a dead worker.
+//! * A job whose [`CancelToken`] fires while *parked in the queue*
+//!   abandons its ticket and returns [`ServeError::Deadline`] with zero
+//!   steps done (deadline waiters park on a 10 ms `wait_timeout` so
+//!   expiry is noticed promptly; tokenless waiters block indefinitely,
+//!   exactly as before).
+//! * After [`Scheduler::begin_drain`], queued and new jobs are rejected
+//!   with [`ServeError::Shutdown`]; admitted jobs run to completion.
+//! * With an opt-in shed limit (off for a raw scheduler; the server
+//!   configures it), jobs arriving to a deep queue are rejected with
+//!   [`ServeError::Overload`] and a `retry_after_ms` hint instead of
+//!   parking — the default remains blocking backpressure.
 
+use std::collections::HashSet;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use crate::obs::registry as obsreg;
 use crate::pool::WorkerPool;
+use crate::serve::error::ServeError;
+use crate::slope::cancel::CancelToken;
 use crate::slope::path::Strategy;
+
+/// How often a deadline-carrying waiter re-checks its token while parked.
+const DEADLINE_POLL: Duration = Duration::from_millis(10);
 
 /// Admission-gate state: a ticket queue makes waiting strictly FIFO —
 /// under sustained load the longest-parked request is always admitted
-/// next (bare condvar wakeups carry no ordering guarantee).
+/// next (bare condvar wakeups carry no ordering guarantee). Tickets whose
+/// holders gave up (deadline expiry, drain) land in `abandoned` so the
+/// serving counter can skip over them.
 #[derive(Default)]
 struct GateState {
     admitted: usize,
     next_ticket: u64,
     now_serving: u64,
+    draining: bool,
+    abandoned: HashSet<u64>,
 }
 
 impl GateState {
+    /// Requests parked on tickets (abandoned ones excluded).
+    fn waiting(&self) -> u64 {
+        (self.next_ticket - self.now_serving).saturating_sub(self.abandoned.len() as u64)
+    }
+
+    /// Skip over abandoned tickets so the queue keeps moving after a
+    /// waiter gives up. Call whenever `now_serving` advances or a ticket
+    /// at the front is abandoned.
+    fn advance(&mut self) {
+        while self.abandoned.remove(&self.now_serving) {
+            self.now_serving += 1;
+        }
+    }
+
     /// Publish the gate's levels as registry gauges (called under the
     /// gate lock at every transition, so the published pair is always a
-    /// consistent snapshot). `next_ticket - now_serving` is the number of
-    /// requests parked on tickets; `admitted` is queued-on-pool+running.
+    /// consistent snapshot). `admitted` is queued-on-pool+running.
     fn publish(&self) {
-        obsreg::SERVE_QUEUE_DEPTH.set(self.next_ticket - self.now_serving);
+        obsreg::SERVE_QUEUE_DEPTH.set(self.waiting());
         obsreg::SERVE_IN_FLIGHT.set(self.admitted as u64);
     }
+}
+
+/// Per-job dispatch options.
+#[derive(Clone, Debug, Default)]
+pub struct JobOptions {
+    /// Deadline/cancellation token: checked while parked in the queue
+    /// (the job body is expected to poll it too, via
+    /// [`crate::slope::path::PathOptions::cancel`]).
+    pub cancel: Option<CancelToken>,
+    /// May this job be load-shed when the queue is deep? The server sets
+    /// this for fit jobs; cheap jobs (stats, metrics) bypass the
+    /// scheduler entirely.
+    pub shed: bool,
 }
 
 /// Bounded-queue dispatcher over a worker pool.
@@ -42,6 +93,7 @@ pub struct Scheduler {
     gate: Arc<(Mutex<GateState>, Condvar)>,
     capacity: usize,
     fit_threads: usize,
+    shed_limit: Option<usize>,
 }
 
 impl Scheduler {
@@ -61,6 +113,7 @@ impl Scheduler {
             gate: Arc::new((Mutex::new(GateState::default()), Condvar::new())),
             capacity: capacity.max(1),
             fit_threads,
+            shed_limit: None,
         }
     }
 
@@ -98,24 +151,108 @@ impl Scheduler {
         self.gate.0.lock().unwrap().admitted
     }
 
+    /// Opt into load-shedding: jobs submitted with `shed: true` while
+    /// `limit` or more requests are parked are rejected with
+    /// [`ServeError::Overload`] instead of blocking. `None` (the
+    /// default) keeps pure blocking backpressure.
+    pub fn set_shed_limit(&mut self, limit: Option<usize>) {
+        self.shed_limit = limit;
+    }
+
+    /// Begin a graceful drain: every parked and future submission is
+    /// rejected with [`ServeError::Shutdown`]; jobs already admitted run
+    /// to completion (await them with [`Scheduler::await_idle`]).
+    pub fn begin_drain(&self) {
+        let mut state = self.gate.0.lock().unwrap();
+        state.draining = true;
+        self.gate.1.notify_all();
+    }
+
+    /// Has a drain begun?
+    pub fn draining(&self) -> bool {
+        self.gate.0.lock().unwrap().draining
+    }
+
+    /// Block until no jobs are admitted (queued-on-pool or running).
+    pub fn await_idle(&self) {
+        let mut state = self.gate.0.lock().unwrap();
+        while state.admitted > 0 {
+            state = self.gate.1.wait(state).unwrap();
+        }
+    }
+
+    /// [`Scheduler::run_job`] with default options (no token, no shed).
+    pub fn run<T, F>(&self, f: F) -> Result<T, ServeError>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        self.run_job(JobOptions::default(), f)
+    }
+
     /// Run `f` on the pool and block for its result. Applies backpressure
     /// (blocks while `capacity` jobs are admitted; admission is FIFO by
-    /// arrival) and converts panics into `Err`.
-    pub fn run<T, F>(&self, f: F) -> Result<T, String>
+    /// arrival); converts panics, queue-time deadline expiry, drain and
+    /// overload into typed errors.
+    pub fn run_job<T, F>(&self, opts: JobOptions, f: F) -> Result<T, ServeError>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
         {
             let mut state = self.gate.0.lock().unwrap();
+            if state.draining {
+                obsreg::SERVE_SHUTDOWN_REJECTED.inc();
+                return Err(ServeError::Shutdown);
+            }
+            if opts.shed {
+                if let Some(limit) = self.shed_limit {
+                    let waiting = state.waiting() as usize;
+                    if waiting >= limit {
+                        obsreg::SERVE_LOAD_SHED.inc();
+                        let retry_after_ms = (waiting as u64 * 50).clamp(50, 5000);
+                        return Err(ServeError::Overload { retry_after_ms });
+                    }
+                }
+            }
             let ticket = state.next_ticket;
             state.next_ticket += 1;
             state.publish();
-            while state.now_serving != ticket || state.admitted >= self.capacity {
-                state = self.gate.1.wait(state).unwrap();
+            loop {
+                if state.draining {
+                    state.abandoned.insert(ticket);
+                    state.advance();
+                    state.publish();
+                    self.gate.1.notify_all();
+                    obsreg::SERVE_SHUTDOWN_REJECTED.inc();
+                    return Err(ServeError::Shutdown);
+                }
+                if let Some(tok) = opts.cancel.as_ref() {
+                    if tok.is_cancelled() {
+                        state.abandoned.insert(ticket);
+                        state.advance();
+                        state.publish();
+                        self.gate.1.notify_all();
+                        obsreg::SERVE_DEADLINE_EXPIRED.inc();
+                        return Err(ServeError::Deadline {
+                            deadline_ms: tok.deadline_ms().unwrap_or(0),
+                            steps_done: 0,
+                            gap: None,
+                        });
+                    }
+                }
+                if state.now_serving == ticket && state.admitted < self.capacity {
+                    break;
+                }
+                state = if opts.cancel.is_some() {
+                    self.gate.1.wait_timeout(state, DEADLINE_POLL).unwrap().0
+                } else {
+                    self.gate.1.wait(state).unwrap()
+                };
             }
             state.admitted += 1;
             state.now_serving += 1;
+            state.advance();
             state.publish();
             // Wake the next ticket holder (it may be admissible already).
             self.gate.1.notify_all();
@@ -133,16 +270,17 @@ impl Scheduler {
         match rx.recv() {
             Ok(Ok(value)) => Ok(value),
             Ok(Err(panic)) => {
-                let msg = if let Some(s) = panic.downcast_ref::<&str>() {
+                obsreg::SERVE_WORKER_PANICS.inc();
+                let message = if let Some(s) = panic.downcast_ref::<&str>() {
                     (*s).to_string()
                 } else if let Some(s) = panic.downcast_ref::<String>() {
                     s.clone()
                 } else {
                     "unknown panic".to_string()
                 };
-                Err(format!("job panicked: {msg}"))
+                Err(ServeError::Panic { message })
             }
-            Err(_) => Err("worker dropped the job result".to_string()),
+            Err(_) => Err(ServeError::Failed("worker dropped the job result".to_string())),
         }
     }
 }
@@ -189,10 +327,83 @@ mod tests {
     #[test]
     fn catches_panics() {
         let sched = Scheduler::new(1, 2);
+        let before = obsreg::SERVE_WORKER_PANICS.get();
         let err = sched.run(|| -> usize { panic!("kaboom {}", 7) }).unwrap_err();
-        assert!(err.contains("kaboom"), "{err}");
+        // typed, with the payload preserved and the counter bumped
+        assert_eq!(err.kind(), "panic");
+        assert!(err.message().contains("kaboom 7"), "{err}");
+        assert!(obsreg::SERVE_WORKER_PANICS.get() > before);
         // the pool survives the panic
         assert_eq!(sched.run(|| 1usize).unwrap(), 1);
+    }
+
+    #[test]
+    fn expired_token_abandons_its_queue_ticket() {
+        let sched = Scheduler::new(1, 1);
+        // Occupy the single admission slot with a slow job...
+        let slow = std::thread::scope(|scope| {
+            let sched = &sched;
+            let occupier = scope.spawn(move || {
+                sched.run(|| std::thread::sleep(std::time::Duration::from_millis(120)))
+            });
+            // ...give it time to be admitted, then park a pre-expired job.
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            let tok = CancelToken::with_deadline_ms(1);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let opts = JobOptions { cancel: Some(tok), shed: false };
+            let err = sched.run_job(opts, || 1usize).unwrap_err();
+            assert_eq!(err.kind(), "deadline");
+            if let ServeError::Deadline { steps_done, deadline_ms, .. } = err {
+                assert_eq!(steps_done, 0);
+                assert_eq!(deadline_ms, 1);
+            }
+            occupier.join().unwrap()
+        });
+        slow.unwrap();
+        // the abandoned ticket does not wedge the queue
+        assert_eq!(sched.run(|| 3usize).unwrap(), 3);
+    }
+
+    #[test]
+    fn drain_rejects_new_jobs_but_finishes_admitted_ones() {
+        let sched = Scheduler::new(2, 4);
+        let result = std::thread::scope(|scope| {
+            let sched = &sched;
+            let inflight = scope.spawn(move || {
+                sched.run(|| {
+                    std::thread::sleep(std::time::Duration::from_millis(60));
+                    41usize + 1
+                })
+            });
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            sched.begin_drain();
+            assert!(sched.draining());
+            // post-drain submissions get the typed rejection
+            let err = sched.run(|| 0usize).unwrap_err();
+            assert_eq!(err, ServeError::Shutdown);
+            inflight.join().unwrap()
+        });
+        // the admitted job ran to completion
+        assert_eq!(result.unwrap(), 42);
+        sched.await_idle();
+        assert_eq!(sched.in_flight(), 0);
+    }
+
+    #[test]
+    fn shed_limit_rejects_instead_of_parking() {
+        let mut sched = Scheduler::new(1, 1);
+        sched.set_shed_limit(Some(0)); // shed anything that would park
+        let err = sched
+            .run_job(JobOptions { cancel: None, shed: true }, || 1usize)
+            .unwrap_err();
+        assert_eq!(err.kind(), "overload");
+        let hint = err.retry_after_ms().unwrap();
+        assert!((50..=5000).contains(&hint), "hint {hint} out of range");
+        // shed-exempt jobs still run
+        assert_eq!(
+            sched.run_job(JobOptions { cancel: None, shed: false }, || 2usize).unwrap(),
+            2
+        );
     }
 
     #[test]

@@ -13,13 +13,16 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::jsonio::Json;
+use crate::obs::registry as obsreg;
+use crate::slope::cancel::CancelToken;
 use crate::slope::family::{sigmoid, Family};
 use crate::slope::path::{fit_path_seeded, fit_point, zero_seed, NativeGradient, PathSeed};
 
+use super::error::ServeError;
 use super::metrics::Metrics;
 use super::protocol::{self, DatasetSpec, Envelope, ModelSpec, Request};
 use super::registry::{CachedModel, DatasetEntry, Fetched, PointState, Registry};
-use super::scheduler::{choose_strategy, Scheduler};
+use super::scheduler::{choose_strategy, JobOptions, Scheduler};
 
 /// Server construction parameters.
 #[derive(Clone, Debug)]
@@ -42,11 +45,35 @@ pub struct ServerConfig {
     /// per-request parser does: a loose "tolerance" would change cached
     /// solutions.
     pub gap_tol: f64,
+    /// Byte cap on one NDJSON request line; oversized lines are drained
+    /// and answered with a typed `oversized_line` error instead of
+    /// buffering without bound. Default 16 MiB (roomy for inline
+    /// datasets, far below a memory-exhaustion payload).
+    pub max_line_bytes: usize,
+    /// Server-wide deadline for fit jobs in milliseconds (0 = none). A
+    /// per-request `deadline_ms` field overrides it. Expired fits return
+    /// a typed `deadline` error carrying partial progress and are never
+    /// cached.
+    pub deadline_ms: u64,
+    /// Load-shedding threshold: with this many requests parked in the
+    /// admission queue, further fit jobs are rejected with a typed
+    /// `overload` error and a `retry_after_ms` hint. 0 (the default)
+    /// keeps pure blocking backpressure.
+    pub shed_queue: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { threads: 0, queue: 64, cache: true, fit_threads: 0, gap_tol: 0.0 }
+        ServerConfig {
+            threads: 0,
+            queue: 64,
+            cache: true,
+            fit_threads: 0,
+            gap_tol: 0.0,
+            max_line_bytes: 16 << 20,
+            deadline_ms: 0,
+            shed_queue: 0,
+        }
     }
 }
 
@@ -59,6 +86,10 @@ pub struct Server {
     shutdown: AtomicBool,
     /// Server default for requests that leave `gap_tol` at 0.
     gap_tol: f64,
+    /// Byte cap on one NDJSON request line.
+    max_line_bytes: usize,
+    /// Server default for requests that leave `deadline_ms` at 0.
+    deadline_ms: u64,
 }
 
 impl Server {
@@ -78,13 +109,31 @@ impl Server {
         if cfg.fit_threads > 0 {
             sched.set_fit_threads(cfg.fit_threads);
         }
+        if cfg.shed_queue > 0 {
+            sched.set_shed_limit(Some(cfg.shed_queue));
+        }
         Server {
             registry: Registry::new(cfg.cache),
             sched,
             metrics: Metrics::new(),
             shutdown: AtomicBool::new(false),
             gap_tol: cfg.gap_tol,
+            max_line_bytes: cfg.max_line_bytes.max(1024),
+            deadline_ms: cfg.deadline_ms,
         }
+    }
+
+    /// The deadline one fit job runs under: the request's explicit
+    /// `deadline_ms` if given, else the server default; a fresh token per
+    /// job (deadlines are relative to admission attempt, not to server
+    /// start). `None` when neither sets a budget — the healthy path pays
+    /// nothing.
+    fn job_token(&self, model: &ModelSpec) -> Option<(CancelToken, u64)> {
+        let deadline = if model.deadline_ms > 0 { model.deadline_ms } else { self.deadline_ms };
+        if deadline == 0 {
+            return None;
+        }
+        Some((CancelToken::with_deadline_ms(deadline), deadline))
     }
 
     /// The kernel thread budget one fit job runs under: the request's
@@ -143,7 +192,8 @@ impl Server {
                     Err(e) => {
                         self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
                         req_span.s("status", "error");
-                        protocol::err_response(env.id, &e)
+                        req_span.s("error_kind", e.kind());
+                        protocol::error_response(env.id, &e)
                     }
                 }
             }
@@ -157,7 +207,7 @@ impl Server {
         response
     }
 
-    fn dispatch(&self, request: Request) -> Result<Json, String> {
+    fn dispatch(&self, request: Request) -> Result<Json, ServeError> {
         match request {
             Request::FitPath { dataset, model } => self.do_fit_path(&dataset, &model),
             Request::FitPoint { dataset, model, sigma_ratio } => {
@@ -170,6 +220,10 @@ impl Server {
             Request::Stats => Ok(self.do_stats()),
             Request::Metrics { format } => Ok(self.do_metrics(&format)),
             Request::Shutdown => {
+                // Graceful drain: parked fit jobs are rejected with typed
+                // `shutdown` errors; admitted ones run to completion (the
+                // transports wait for them before severing connections).
+                self.sched.begin_drain();
                 self.shutdown.store(true, Ordering::SeqCst);
                 Ok(Json::obj(vec![("shutting_down", Json::Bool(true))]))
             }
@@ -183,14 +237,15 @@ impl Server {
         &self,
         entry: &Arc<DatasetEntry>,
         model: &ModelSpec,
-    ) -> Result<(Arc<CachedModel>, &'static str), String> {
+    ) -> Result<(Arc<CachedModel>, &'static str), ServeError> {
         let key = model.key();
         let fetched = self.registry.model(entry, &key, || {
             let warm_seed = entry.any_ready_seed();
             let warm = warm_seed.is_some();
-            let strategy = choose_strategy(&model.screen, warm)?;
+            let strategy = choose_strategy(&model.screen, warm).map_err(ServeError::Invalid)?;
             let mut opts = model
-                .path_options(entry.problem.as_ref())?
+                .path_options(entry.problem.as_ref())
+                .map_err(ServeError::Invalid)?
                 .with_strategy(strategy)
                 .with_threads(self.job_threads(model))
                 .with_pack_cache(entry.pack_cache());
@@ -205,9 +260,14 @@ impl Server {
             if strategy.is_gap_driven() {
                 opts = opts.with_col_norms(entry.col_norms(opts.par()));
             }
+            let token = self.job_token(model);
+            if let Some((tok, _)) = &token {
+                opts = opts.with_cancel(tok.clone());
+            }
+            let job = JobOptions { cancel: token.as_ref().map(|(t, _)| t.clone()), shed: true };
             let prob = Arc::clone(&entry.problem);
             let t_enqueue = Instant::now();
-            let fit = self.sched.run(move || {
+            let fit = self.sched.run_job(job, move || {
                 let fit = {
                     let mut job_span = crate::obs::trace::span("fit_job");
                     if job_span.active() {
@@ -224,6 +284,18 @@ impl Server {
                 }
                 fit
             })?;
+            // An expired deadline is a typed error carrying partial
+            // progress; the partial fit is never cached (returning Err
+            // clears the build slot for the next attempt).
+            if fit.stopped_early == Some("cancelled") {
+                obsreg::SERVE_DEADLINE_EXPIRED.inc();
+                let deadline_ms = token.map(|(_, d)| d).unwrap_or(0);
+                return Err(ServeError::Deadline {
+                    deadline_ms,
+                    steps_done: fit.steps.len(),
+                    gap: fit.steps.last().and_then(|s| s.gap),
+                });
+            }
             if warm {
                 self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
             } else {
@@ -238,7 +310,19 @@ impl Server {
                 wall_time,
                 hits: std::sync::atomic::AtomicU64::new(0),
             })
-        })?;
+        });
+        let fetched = match fetched {
+            Ok(f) => f,
+            Err(e) => {
+                // Worker panics strike the dataset entry: repeated panics
+                // quarantine it so a poisoned materialization cannot take
+                // the server down request after request.
+                if matches!(e, ServeError::Panic { .. }) {
+                    self.registry.record_panic(entry);
+                }
+                return Err(e);
+            }
+        };
         match &fetched {
             Fetched::Hit(_) => {
                 self.metrics.counters.cache_hits.fetch_add(1, Ordering::Relaxed);
@@ -258,10 +342,11 @@ impl Server {
         Ok((Arc::clone(fetched.model()), source))
     }
 
-    fn do_fit_path(&self, dataset: &DatasetSpec, model: &ModelSpec) -> Result<Json, String> {
+    fn do_fit_path(&self, dataset: &DatasetSpec, model: &ModelSpec) -> Result<Json, ServeError> {
         let entry = self.registry.dataset(dataset)?;
         let (m, source) = self.fitted_model(&entry, model)?;
         let fit = &m.fit;
+        let degraded_steps = fit.steps.iter().filter(|s| s.degraded_to.is_some()).count();
         Ok(Json::obj(vec![
             ("dataset", Json::Str(entry.label.clone())),
             ("fingerprint", Json::Str(format!("{:016x}", entry.fingerprint))),
@@ -290,6 +375,7 @@ impl Server {
                 "solver_converged",
                 Json::Bool(fit.steps.iter().all(|s| s.solver_converged)),
             ),
+            ("degraded_steps", Json::Num(degraded_steps as f64)),
             ("fit_wall_s", Json::Num(m.wall_time)),
             (
                 "stopped_early",
@@ -306,14 +392,15 @@ impl Server {
         dataset: &DatasetSpec,
         model: &ModelSpec,
         sigma_ratio: f64,
-    ) -> Result<Json, String> {
+    ) -> Result<Json, ServeError> {
         let entry = self.registry.dataset(dataset)?;
         let key = model.point_key();
         let prior = entry.point_state(&key);
         let warm = prior.is_some();
-        let strategy = choose_strategy(&model.screen, warm)?;
+        let strategy = choose_strategy(&model.screen, warm).map_err(ServeError::Invalid)?;
         let mut opts = model
-            .path_options(entry.problem.as_ref())?
+            .path_options(entry.problem.as_ref())
+            .map_err(ServeError::Invalid)?
             .with_strategy(strategy)
             .with_threads(self.job_threads(model))
             .with_pack_cache(entry.pack_cache());
@@ -328,9 +415,14 @@ impl Server {
         if strategy.is_gap_driven() {
             opts = opts.with_col_norms(entry.col_norms(opts.par()));
         }
+        let token = self.job_token(model);
+        if let Some((tok, _)) = &token {
+            opts = opts.with_cancel(tok.clone());
+        }
+        let job = JobOptions { cancel: token.as_ref().map(|(t, _)| t.clone()), shed: true };
         let prob = Arc::clone(&entry.problem);
         let t_enqueue = Instant::now();
-        let (point, sigma_max) = self.sched.run(move || {
+        let result = self.sched.run_job(job, move || {
             let out = {
                 let mut job_span = crate::obs::trace::span("fit_job");
                 if job_span.active() {
@@ -354,7 +446,30 @@ impl Server {
                 crate::obs::trace::flush();
             }
             out
-        })?;
+        });
+        let (point, sigma_max) = match result {
+            Ok(v) => v,
+            Err(e) => {
+                if matches!(e, ServeError::Panic { .. }) {
+                    self.registry.record_panic(&entry);
+                }
+                return Err(e);
+            }
+        };
+        // A fit the deadline interrupted is an error with partial
+        // progress, and its state is never cached as a warm start.
+        if !point.solver_converged {
+            if let Some((tok, deadline_ms)) = &token {
+                if tok.is_cancelled() {
+                    obsreg::SERVE_DEADLINE_EXPIRED.inc();
+                    return Err(ServeError::Deadline {
+                        deadline_ms: *deadline_ms,
+                        steps_done: 0,
+                        gap: point.gap,
+                    });
+                }
+            }
+        }
         if warm {
             self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -383,6 +498,13 @@ impl Server {
             ("violations", Json::Num(point.violations as f64)),
             ("solver_iterations", Json::Num(point.solver_iterations as f64)),
             ("solver_converged", Json::Bool(point.solver_converged)),
+            (
+                "degraded_to",
+                match point.degraded_to {
+                    Some(s) => Json::Str(s.to_string()),
+                    None => Json::Null,
+                },
+            ),
             ("full_grad_sweeps", Json::Num(point.full_grad_sweeps)),
             (
                 "gap",
@@ -404,7 +526,7 @@ impl Server {
         model: &ModelSpec,
         x: &[Vec<f64>],
         step: Option<usize>,
-    ) -> Result<Json, String> {
+    ) -> Result<Json, ServeError> {
         let entry = self.registry.dataset(dataset)?;
         let (m, source) = self.fitted_model(&entry, model)?;
         let prob = entry.problem.as_ref();
@@ -413,11 +535,16 @@ impl Server {
         let n_steps = m.fit.betas.len();
         let step = step.unwrap_or(n_steps.saturating_sub(1));
         if step >= n_steps {
-            return Err(format!("step {step} out of range (path has {n_steps} steps)"));
+            return Err(ServeError::Invalid(format!(
+                "step {step} out of range (path has {n_steps} steps)"
+            )));
         }
         for (i, row) in x.iter().enumerate() {
             if row.len() != p {
-                return Err(format!("prediction row {i} has {} features, expected {p}", row.len()));
+                return Err(ServeError::Invalid(format!(
+                    "prediction row {i} has {} features, expected {p}",
+                    row.len()
+                )));
             }
         }
         let beta = m.fit.beta_at(step, prob.p_total());
@@ -472,7 +599,7 @@ impl Server {
     /// fingerprint, so subsequent fit/predict requests naming the same
     /// file skip materialization and share the entry's warm-start and
     /// pack caches.
-    fn do_register(&self, dataset: &DatasetSpec) -> Result<Json, String> {
+    fn do_register(&self, dataset: &DatasetSpec) -> Result<Json, ServeError> {
         let entry = self.registry.dataset(dataset)?;
         let prob = entry.problem.as_ref();
         let sparse = matches!(prob.x, crate::linalg::Design::Sparse(_));
@@ -530,14 +657,49 @@ impl Server {
     /// Serve newline-delimited requests from `reader`, writing responses
     /// to `writer` — the stdin/stdout transport, also used per-connection
     /// by the socket transport and directly by tests.
-    pub fn serve_lines<R: BufRead, W: Write>(&self, reader: R, mut writer: W) -> std::io::Result<()> {
-        for line in reader.lines() {
-            let line = line?;
+    ///
+    /// Lines are read through a byte cap ([`ServerConfig::max_line_bytes`]):
+    /// an oversized line is drained (never buffered whole) and answered
+    /// with a typed `oversized_line` error, and the connection keeps
+    /// serving. With a connection-drop fault armed ([`crate::fault`]),
+    /// the stream is severed without a response after the planned number
+    /// of requests — the chaos harness' stand-in for a client vanishing
+    /// mid-conversation.
+    pub fn serve_lines<R: BufRead, W: Write>(
+        &self,
+        mut reader: R,
+        mut writer: W,
+    ) -> std::io::Result<()> {
+        let drop_after = crate::fault::drop_after_lines();
+        let mut lines_handled: u64 = 0;
+        let mut buf: Vec<u8> = Vec::new();
+        loop {
+            match read_line_capped(&mut reader, &mut buf, self.max_line_bytes)? {
+                LineRead::Eof => break,
+                LineRead::Oversized(bytes) => {
+                    self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+                    let err =
+                        ServeError::OversizedLine { bytes, limit: self.max_line_bytes };
+                    writer.write_all(protocol::error_response(0, &err).as_bytes())?;
+                    writer.write_all(b"\n")?;
+                    writer.flush()?;
+                    continue;
+                }
+                LineRead::Line => {}
+            }
+            let line = String::from_utf8_lossy(&buf);
             let trimmed = line.trim();
             if trimmed.is_empty() {
                 continue;
             }
+            if let Some(limit) = drop_after {
+                if lines_handled >= limit {
+                    obsreg::FAULT_INJECTIONS.inc();
+                    return Ok(());
+                }
+            }
             let response = self.handle_line(trimmed);
+            lines_handled += 1;
             writer.write_all(response.as_bytes())?;
             writer.write_all(b"\n")?;
             writer.flush()?;
@@ -601,10 +763,17 @@ impl Server {
             }
             handlers.retain(|h| !h.is_finished());
         }
-        // Give the handler that received `shutdown` a moment to flush its
-        // response to the wire, then unblock handlers still parked in a
-        // read on an idle connection: without the close, joining would
-        // wait forever on clients that never hang up.
+        // Graceful drain: jobs already admitted when the drain began run
+        // to completion — their handler threads still hold live
+        // connections and write the response. Everything parked in the
+        // queue was rejected with a typed `shutdown` error by
+        // `begin_drain`, so every accepted request gets exactly one
+        // response.
+        self.sched.await_idle();
+        // Give handlers a moment to flush their final responses to the
+        // wire, then unblock handlers still parked in a read on an idle
+        // connection: without the close, joining would wait forever on
+        // clients that never hang up.
         std::thread::sleep(std::time::Duration::from_millis(50));
         for stream in live.lock().unwrap().values() {
             let _ = stream.shutdown(std::net::Shutdown::Both);
@@ -614,6 +783,73 @@ impl Server {
         }
         let _ = std::fs::remove_file(path);
         Ok(())
+    }
+}
+
+/// Outcome of one capped line read.
+enum LineRead {
+    /// Stream ended before any byte of a new line.
+    Eof,
+    /// A complete line is in the buffer (newline excluded).
+    Line,
+    /// The line exceeded the cap; carries the bytes seen. The excess was
+    /// drained (never buffered) up to its terminating newline or EOF,
+    /// so the next read starts on a fresh line.
+    Oversized(usize),
+}
+
+/// Read one newline-terminated line into `buf`, refusing to buffer more
+/// than `cap` bytes — the defense against a single unbounded request
+/// line exhausting server memory.
+fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    buf: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    buf.clear();
+    let mut line_len = 0usize;
+    let mut overflowed = false;
+    loop {
+        let (used, terminated, eof) = {
+            let chunk = reader.fill_buf()?;
+            if chunk.is_empty() {
+                (0, false, true)
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        if !overflowed && line_len + pos <= cap {
+                            buf.extend_from_slice(&chunk[..pos]);
+                        } else {
+                            overflowed = true;
+                        }
+                        line_len += pos;
+                        (pos + 1, true, false)
+                    }
+                    None => {
+                        let len = chunk.len();
+                        if !overflowed && line_len + len <= cap {
+                            buf.extend_from_slice(chunk);
+                        } else {
+                            overflowed = true;
+                        }
+                        line_len += len;
+                        (len, false, false)
+                    }
+                }
+            }
+        };
+        reader.consume(used);
+        if eof || terminated {
+            if eof && line_len == 0 {
+                return Ok(LineRead::Eof);
+            }
+            return Ok(if overflowed {
+                buf.clear();
+                LineRead::Oversized(line_len)
+            } else {
+                LineRead::Line
+            });
+        }
     }
 }
 
@@ -1051,6 +1287,67 @@ mod tests {
         // bad format is an error response
         let bad = srv.handle_line(r#"{"id": 4, "op": "metrics", "format": "xml"}"#);
         assert_eq!(Json::parse(&bad).unwrap().field("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn oversized_lines_get_a_typed_error_and_the_connection_survives() {
+        let srv = Server::new(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            max_line_bytes: 4096,
+            ..Default::default()
+        });
+        let big = format!(
+            "{{\"id\": 1, \"op\": \"stats\", \"pad\": \"{}\"}}",
+            "x".repeat(10_000)
+        );
+        let input = format!(
+            "{big}\n{}\n{}\n",
+            r#"{"id": 2, "op": "stats"}"#,
+            r#"{"id": 3, "op": "shutdown"}"#
+        );
+        let mut out: Vec<u8> = Vec::new();
+        srv.serve_lines(std::io::Cursor::new(input.into_bytes()), &mut out)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "oversized + stats + shutdown: {text}");
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(first.field("error_kind").unwrap().as_str(), Some("oversized_line"));
+        assert!(first.field("error").unwrap().as_str().unwrap().contains("4096"));
+        // the oversized line was drained, not parsed: the next request
+        // on the same connection is served normally
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.field("ok"), Some(&Json::Bool(true)));
+        assert_eq!(second.field("id").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn expired_deadline_is_a_typed_error_and_never_cached() {
+        let srv = server();
+        let fields = |id: u64, deadline: Option<f64>| {
+            let mut f = vec![
+                ("dataset", protocol::synth_dataset_json(150, 3000, 10, 0.2, "gaussian", 13)),
+                ("q", Json::Num(0.1)),
+                ("path_length", Json::Num(40.0)),
+            ];
+            if let Some(ms) = deadline {
+                f.push(("deadline_ms", Json::Num(ms)));
+            }
+            protocol::request_line(id, "fit_path", f)
+        };
+        let resp = Json::parse(&srv.handle_line(&fields(1, Some(1.0)))).unwrap();
+        assert_eq!(resp.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.field("error_kind").unwrap().as_str(), Some("deadline"));
+        let partial = resp.field("partial").unwrap();
+        assert!(partial.field("steps_done").unwrap().as_usize().is_some());
+        // the partial fit was not cached: a later unbounded request on
+        // the same (dataset, model) fits fresh and succeeds
+        let ok = parse_ok(&srv.handle_line(&fields(2, None)));
+        assert_eq!(ok.field("source").unwrap().as_str(), Some("fit"));
+        assert!(ok.field("steps").unwrap().as_usize().unwrap() >= 2);
     }
 
     #[test]

@@ -375,6 +375,7 @@ mod tests {
                             tol: 1e-8,
                             kkt_tol_abs: None,
                             gap_tol_abs: Some(gap_tol),
+                            cancel: None,
                         };
                         let res = solve(&red, &lam, None, &cfg);
                         if !res.converged {
@@ -408,6 +409,7 @@ mod tests {
                 tol: 1e-10,
                 kkt_tol_abs: None,
                 gap_tol_abs: Some(1e-10),
+                cancel: None,
             };
             let res = solve(&red, &lam, None, &cfg);
             let g_end = full_gap(&prob, &res.beta, &lam, 1);

@@ -13,13 +13,14 @@ use std::sync::Arc;
 use crate::linalg::ops::inf_norm;
 use crate::linalg::packed::{PackedDesign, PackedSet};
 use crate::linalg::ParConfig;
+use crate::slope::cancel::CancelToken;
 use crate::slope::family::Problem;
 use crate::obs::registry as obsreg;
 use crate::slope::prox::{prox_sorted_l1_into, ProxWorkspace};
 use crate::slope::sorted::sl1_norm;
 
 /// Solver configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct FistaConfig {
     /// Iteration cap.
     pub max_iter: usize,
@@ -42,11 +43,17 @@ pub struct FistaConfig {
     /// product per check, no extra design product for η. The certified
     /// gap is reported in [`FistaResult::gap`].
     pub gap_tol_abs: Option<f64>,
+    /// Cooperative cancellation: when set, the solver polls the token at
+    /// the top of every iteration and exits *non-converged* once it
+    /// fires. A fired token never interrupts mid-iteration arithmetic, so
+    /// the returned partial iterate is always internally consistent
+    /// (β, η(β) and the reported loss agree).
+    pub cancel: Option<CancelToken>,
 }
 
 impl Default for FistaConfig {
     fn default() -> Self {
-        Self { max_iter: 10_000, tol: 1e-7, kkt_tol_abs: None, gap_tol_abs: None }
+        Self { max_iter: 10_000, tol: 1e-7, kkt_tol_abs: None, gap_tol_abs: None, cancel: None }
     }
 }
 
@@ -391,6 +398,10 @@ pub fn solve(
     }
 
     obsreg::FISTA_SOLVES.inc();
+    // Fault-injection hook (chaos harness): one relaxed load when no plan
+    // is armed. May sleep or panic per the armed plan; `corrupt_grad`
+    // poisons this solve's first gradient below.
+    let mut poison_grad = crate::fault::on_solve().corrupt_grad;
     let mut beta: Vec<f64> = match warm {
         Some(w) => {
             debug_assert_eq!(w.len(), k);
@@ -439,12 +450,26 @@ pub fn solve(
     // once, so the certificate checks stay off the allocator too.
     let mut mag_buf: Vec<f64> = Vec::with_capacity(if cfg.gap_tol_abs.is_some() { k } else { 0 });
 
+    let mut cancelled = false;
+    let mut numeric_abort = false;
     for iter in 0..cfg.max_iter {
+        // Cooperative cancellation: poll between iterations so a fired
+        // token never leaves β/η(β) mid-update.
+        if let Some(tok) = cfg.cancel.as_ref() {
+            if tok.is_cancelled() {
+                cancelled = true;
+                break;
+            }
+        }
         iterations = iter + 1;
         obsreg::FISTA_ITERATIONS.inc();
         // Gradient at the extrapolated point z.
         let loss_z = prob.family.h_loss(&eta_z, &prob.y, &mut h);
         reduced.gradient(&h, &mut grad, &mut scratch);
+        if poison_grad {
+            poison_grad = false;
+            grad[0] = f64::NAN;
+        }
 
         // Backtracking line search on L.
         let mut loss_cand;
@@ -458,6 +483,12 @@ pub fn solve(
             prox_sorted_l1_into(&step, &lam_over_l, &mut ws, &mut cand);
             reduced.eta(&cand, &mut eta_cand, &mut scratch);
             loss_cand = prob.family.h_loss(&eta_cand, &prob.y, &mut h);
+            // Non-finite loss (NaN gradient, overflow): no amount of
+            // backtracking recovers, so stop searching immediately — the
+            // outer bail below exits the solve non-converged.
+            if !loss_cand.is_finite() {
+                break;
+            }
             // Majorization check: f(cand) ≤ f(z) + ⟨∇f(z), cand−z⟩ + L/2‖cand−z‖².
             let mut lin = 0.0;
             let mut sq = 0.0;
@@ -474,6 +505,15 @@ pub fn solve(
             if big_l > 1e18 {
                 break; // numerical wall; accept and let KKT checks catch it
             }
+        }
+
+        // Poisoned arithmetic bail: exit *before* the momentum update so
+        // β/η(β) keep their last finite values and the returned partial
+        // result stays coherent. The caller (path safeguard, degradation
+        // ladder) sees `converged: false` and recovers.
+        if !loss_z.is_finite() || !loss_cand.is_finite() {
+            numeric_abort = true;
+            break;
         }
 
         // Convergence: the proximal-gradient step displacement at z,
@@ -560,6 +600,13 @@ pub fn solve(
         let _ = loss_cand;
     }
 
+    // Genuine iteration-budget exhaustion (not cancellation, not a
+    // poisoned-arithmetic bail) is the signal the degradation ladder and
+    // the profile subcommand watch.
+    if !converged && !cancelled && !numeric_abort {
+        obsreg::FISTA_NONCONVERGED.inc();
+    }
+
     // Final loss/objective at beta. `eta_beta` is η(β) from a direct
     // kernel product at every exit (warm entry included), so no closing
     // recomputation is needed.
@@ -642,6 +689,7 @@ mod tests {
             tol: 1e-9,
             kkt_tol_abs: None,
             gap_tol_abs: Some(1e-10),
+            cancel: None,
         };
         let gap_res = solve(&red, &lam, None, &gap_cfg);
         assert!(gap_res.converged, "gap mode must converge");
@@ -652,6 +700,7 @@ mod tests {
             tol: 1e-9,
             kkt_tol_abs: Some(1e-8),
             gap_tol_abs: None,
+            cancel: None,
         };
         let kkt_res = solve(&red, &lam, None, &kkt_cfg);
         assert!(kkt_res.gap.is_none(), "kkt mode must not report a gap");
@@ -664,6 +713,7 @@ mod tests {
             tol: 1e-9,
             kkt_tol_abs: Some(1e-8),
             gap_tol_abs: Some(1e-10),
+            cancel: None,
         };
         let both = solve(&red, &lam, None, &both_cfg);
         assert!(both.converged);
@@ -684,6 +734,7 @@ mod tests {
             tol: 1e-9,
             kkt_tol_abs: None,
             gap_tol_abs: Some(-1.0), // below weak duality: unreachable
+            cancel: None,
         };
         let res = solve(&red, &lam, None, &cfg);
         assert!(!res.converged);

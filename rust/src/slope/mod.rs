@@ -23,8 +23,14 @@
 //!   displacement, KKT-verified and gap-certified stopping modes.
 //! * [`path`] — the regularization-path driver with the no-screening,
 //!   strong-set (Algorithm 3), previous-set (Algorithm 4), safe-only and
-//!   gap-hybrid (safe + strong working set) strategies.
+//!   gap-hybrid (safe + strong working set) strategies, plus the
+//!   degradation ladder that rescues non-converged steps under
+//!   progressively more conservative strategies.
+//! * [`cancel`] — the cooperative [`cancel::CancelToken`] checked every
+//!   FISTA iteration and every path σ-step; backs per-request deadlines
+//!   in the serve layer.
 
+pub mod cancel;
 pub mod dual;
 pub mod family;
 pub mod fista;

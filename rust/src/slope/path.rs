@@ -21,6 +21,7 @@ use crate::linalg::ops::sq_norm;
 use crate::linalg::packed::PackCache;
 use crate::linalg::ParConfig;
 use crate::obs::registry as obsreg;
+use crate::slope::cancel::CancelToken;
 use crate::slope::family::{Family, Problem};
 use crate::slope::fista::{solve, FistaConfig, Reduced};
 use crate::slope::lambda::{sigma_grid, sigma_max, PathConfig};
@@ -161,6 +162,19 @@ pub struct PathOptions {
     /// serve registry caches one copy per dataset). Must belong to this
     /// problem's design; a wrong-length vector is ignored.
     pub col_norms: Option<Arc<Vec<f64>>>,
+    /// Cooperative cancellation: polled at the top of every σ-step and
+    /// propagated into every inner FISTA solve, so a fired token (an
+    /// expired serve deadline, a client disconnect) stops the fit within
+    /// one solver iteration. A cancelled fit returns normally with
+    /// [`PathFit::stopped_early`] = `Some("cancelled")` and whatever
+    /// steps completed — partial progress, never torn state.
+    pub cancel: Option<CancelToken>,
+    /// Degradation ladder (DESIGN.md §12): when a step's solve fails its
+    /// certificate, retry it under the next-most-conservative strategy
+    /// (hybrid/previous → strong → full) before reporting
+    /// non-convergence. On by default; tests that *study* loose solves
+    /// turn it off.
+    pub degrade: bool,
 }
 
 impl PathOptions {
@@ -177,7 +191,23 @@ impl PathOptions {
             pack_cache: None,
             gap_tol: 1e-10,
             col_norms: None,
+            cancel: None,
+            degrade: true,
         }
+    }
+
+    /// Builder: attach a cooperative cancellation token (see
+    /// [`PathOptions::cancel`]).
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = Some(cancel);
+        self
+    }
+
+    /// Has this fit's token (on the options or the inner solver config)
+    /// fired?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().map_or(false, |t| t.is_cancelled())
+            || self.fista.cancel.as_ref().map_or(false, |t| t.is_cancelled())
     }
 
     /// Builder: set strategy.
@@ -274,6 +304,11 @@ pub struct StepInfo {
     /// Certified duality gap at the accepted solution (gap-driven
     /// strategies only).
     pub gap: Option<f64>,
+    /// When the step's first solve failed its certificate and the
+    /// degradation ladder rescued it, the name of the (more
+    /// conservative) strategy that produced the accepted solution —
+    /// `None` on the healthy path. See DESIGN.md §12.
+    pub degraded_to: Option<&'static str>,
 }
 
 /// Result of a full path fit.
@@ -380,6 +415,10 @@ pub struct PointFit {
     pub full_grad_sweeps: f64,
     /// Certified duality gap at the solution (gap-driven strategies only).
     pub gap: Option<f64>,
+    /// Strategy name the degradation ladder rescued this fit under, when
+    /// the requested strategy failed to converge (see
+    /// [`StepInfo::degraded_to`]).
+    pub degraded_to: Option<&'static str>,
 }
 
 impl PointFit {
@@ -473,7 +512,7 @@ pub fn fit_point(
     }
     let mut screen_ws = StrongWorkspace::default();
     let prev_support = support(&beta_full);
-    let (out, rule_set, n_screened_rule) = if opts.strategy.is_gap_driven() {
+    let (mut out, rule_set, n_screened_rule) = if opts.strategy.is_gap_driven() {
         // Establish the dual state at the seed: η/h/loss at `seed.beta`,
         // with `seed.grad` as the (exact) sphere reference. For warm
         // seeds this is what turns per-step safe screening into
@@ -548,6 +587,59 @@ pub fn fit_point(
         (out, rule_set, n_screened_rule)
     };
 
+    // Degradation ladder, mirroring the path driver's: a non-converged
+    // single-σ fit is retried from the (immutable) seed under the
+    // next-most-conservative strategy before being reported. Cancelled
+    // fits are never rescued.
+    let mut degraded_to: Option<&'static str> = None;
+    let mut rung = opts.strategy;
+    while opts.degrade && !out.converged && !opts.is_cancelled() {
+        let next = match ladder_next(rung) {
+            Some(s) => s,
+            None => break,
+        };
+        rung = next;
+        beta_full.copy_from_slice(&seed.beta);
+        grad.copy_from_slice(&seed.grad);
+        // Re-rank on the restored gradient — the workspace still holds
+        // the failed attempt's ordering.
+        screen_ws.rank(&grad);
+        let rescue_opts = PathOptions { strategy: next, ..opts.clone() };
+        let (r_rule, _r_n, r_e) = screening_sets(
+            next,
+            pt,
+            &grad,
+            &lam_prev,
+            &lam_cur,
+            &prev_support,
+            &mut screen_ws,
+        );
+        let mut rescue = solve_with_safeguard(
+            prob,
+            &rescue_opts,
+            evaluator,
+            &lambda_base,
+            sigma,
+            &lam_cur,
+            &r_rule,
+            &prev_support,
+            r_e,
+            &mut beta_full,
+            &mut eta,
+            &mut h,
+            &mut grad,
+            &mut screen_ws,
+        );
+        obsreg::PATH_DEGRADED_STEPS.inc();
+        degraded_to = Some(next.name());
+        rescue.solver_iterations += out.solver_iterations;
+        rescue.refits += out.refits;
+        rescue.sweeps += out.sweeps;
+        rescue.t_solve += out.t_solve;
+        rescue.t_kkt += out.t_kkt;
+        out = rescue;
+    }
+
     let rule_cover = union_sorted(&rule_set, &prev_support);
     let violations = diff_sorted(&out.added_by_kkt, &rule_cover)
         .iter()
@@ -572,6 +664,7 @@ pub fn fit_point(
         solver_converged: out.converged,
         full_grad_sweeps: out.sweeps,
         gap: out.gap,
+        degraded_to,
     }
 }
 
@@ -643,6 +736,7 @@ pub fn fit_path_seeded(
         full_grad_sweeps: 1.0,
         n_universe: None,
         gap: None,
+        degraded_to: None,
     });
     fit.total_grad_sweeps += 1.0;
 
@@ -693,8 +787,23 @@ pub fn fit_path_seeded(
     } else {
         Vec::new()
     };
+    // Pre-step snapshot buffers for the degradation ladder: a
+    // non-converged solve is retried from the *previous* point under a
+    // more conservative strategy, so the state it mutated must be
+    // restorable. Allocated once; per step the cost is four memcpys —
+    // no arithmetic touched, so healthy fits stay bitwise identical.
+    let mut snap_beta = vec![0.0; pt];
+    let mut snap_grad = vec![0.0; pt];
+    let mut snap_eta = vec![0.0; n * m_classes];
+    let mut snap_h = vec![0.0; n * m_classes];
 
     for m in 1..sigmas_all.len() {
+        // Cooperative cancellation between σ-steps: a fired token (an
+        // expired deadline) keeps every step already recorded and stops.
+        if opts.is_cancelled() {
+            fit.stopped_early = Some("cancelled");
+            break;
+        }
         // One trace span per σ-step carrying the StepInfo fields; inert
         // (a load + branch) unless `--trace` enabled the sink.
         let mut step_span = crate::obs::trace::span("path_step");
@@ -766,7 +875,11 @@ pub fn fit_path_seeded(
         let t_screen = t0.elapsed().as_secs_f64();
 
         // --- solve + certificate loop -------------------------------------
-        let out = match (&mut gap_state, gap_screen) {
+        snap_beta.copy_from_slice(&beta_full);
+        snap_grad.copy_from_slice(&grad);
+        snap_eta.copy_from_slice(&eta);
+        snap_h.copy_from_slice(&h);
+        let mut out = match (&mut gap_state, gap_screen) {
             (Some(gs), Some(sc)) => solve_with_gap(
                 prob,
                 opts,
@@ -801,6 +914,74 @@ pub fn fit_path_seeded(
                 &mut screen_ws,
             ),
         };
+        // --- degradation ladder (DESIGN.md §12) ---------------------------
+        // A step whose certificate stalled (the MAX_GAP_ROUNDS bail) or
+        // whose inner solves exhausted max_iter is retried from the
+        // pre-step snapshot under the next-most-conservative strategy, so
+        // a heuristic failure degrades into a slower-but-sound solve
+        // instead of surfacing as a non-converged step. Cancelled fits
+        // are never rescued — their deadline already fired.
+        let mut degraded_to: Option<&'static str> = None;
+        let mut rung = opts.strategy;
+        while opts.degrade && !out.converged && !opts.is_cancelled() {
+            let next = match ladder_next(rung) {
+                Some(s) => s,
+                None => break, // already at the full solve: report honestly
+            };
+            rung = next;
+            beta_full.copy_from_slice(&snap_beta);
+            grad.copy_from_slice(&snap_grad);
+            eta.copy_from_slice(&snap_eta);
+            h.copy_from_slice(&snap_h);
+            // The workspace ranking tracks the *failed* attempt's
+            // gradient; re-rank on the restored one before re-screening.
+            screen_ws.rank(&grad);
+            let rescue_opts = PathOptions { strategy: next, ..opts.clone() };
+            let (r_rule, _r_n, r_e) = screening_sets(
+                next,
+                pt,
+                &grad,
+                &lam_prev,
+                &lam_cur,
+                &prev_support,
+                &mut screen_ws,
+            );
+            let mut rescue = solve_with_safeguard(
+                prob,
+                &rescue_opts,
+                evaluator,
+                &lambda_base,
+                sig,
+                &lam_cur,
+                &r_rule,
+                &prev_support,
+                r_e,
+                &mut beta_full,
+                &mut eta,
+                &mut h,
+                &mut grad,
+                &mut screen_ws,
+            );
+            obsreg::PATH_DEGRADED_STEPS.inc();
+            degraded_to = Some(next.name());
+            // Work accounting stays cumulative across attempts; the
+            // failed attempt's set bookkeeping is discarded with its
+            // solution (it described a state that no longer exists).
+            rescue.solver_iterations += out.solver_iterations;
+            rescue.refits += out.refits;
+            rescue.sweeps += out.sweeps;
+            rescue.t_solve += out.t_solve;
+            rescue.t_kkt += out.t_kkt;
+            out = rescue;
+        }
+        if degraded_to.is_some() {
+            if let Some(gs) = &mut gap_state {
+                // The rescue ran outside the gap machinery; its closing
+                // full-gradient sweep left `grad` exact at the accepted
+                // solution, so re-anchor the dual state there.
+                gs.adopt_exact(&h, &grad, out.loss);
+            }
+        }
         let loss = out.loss;
         let e_set = out.e_set;
         let (refits, solver_iterations) = (out.refits, out.solver_iterations);
@@ -841,6 +1022,7 @@ pub fn fit_path_seeded(
             full_grad_sweeps: out.sweeps,
             n_universe: out.n_universe,
             gap: out.gap,
+            degraded_to,
         });
         fit.total_violations += violations_total;
         fit.total_grad_sweeps += out.sweeps;
@@ -868,6 +1050,9 @@ pub fn fit_path_seeded(
             }
             if let Some(g) = out.gap {
                 step_span.f("gap", g);
+            }
+            if let Some(d) = degraded_to {
+                step_span.s("degraded_to", d);
             }
             step_span.f("t_screen", t_screen);
             step_span.f("t_solve", t_solve);
@@ -1062,6 +1247,7 @@ fn solve_with_safeguard(
     grad: &mut [f64],
     ws: &mut StrongWorkspace,
 ) -> SolveOutcome {
+    let pt = prob.p_total();
     let mut t_kkt = 0.0;
     // Predictors added by failed KKT checks; a *violation* in the
     // paper's sense (§2.2.3) is such a predictor that is genuinely
@@ -1085,15 +1271,27 @@ fn solve_with_safeguard(
     let mut widened = false;
     let mut loss;
     loop {
+        // Cooperative cancellation between safeguard rounds: every
+        // completed round leaves (β, η, h, ∇f) mutually consistent, so
+        // breaking here returns coherent partial state. The first round
+        // always runs (its inner solve exits within one iteration once
+        // the token has fired), keeping `loss` and `grad` initialized.
+        if refits > 0 && opts.is_cancelled() {
+            converged = false;
+            break;
+        }
         refits += 1;
         let t1 = Instant::now();
         let warm: Vec<f64> = reduced.coefs.iter().map(|&c| beta_full[c]).collect();
         // The inner solve must be at least as accurate as the
         // violation threshold, else solver noise shows up as phantom
         // violations (§2.2.3 counts would be meaningless).
-        let mut fista_cfg = opts.fista;
+        let mut fista_cfg = opts.fista.clone();
         if fista_cfg.kkt_tol_abs.is_none() {
             fista_cfg.kkt_tol_abs = Some(kkt_thresh);
+        }
+        if fista_cfg.cancel.is_none() {
+            fista_cfg.cancel = opts.cancel.clone();
         }
         let res = solve(
             &reduced,
@@ -1198,6 +1396,20 @@ fn solve_with_safeguard(
 /// failure then surfaces as `solver_converged = false`, never as a
 /// silent bad certificate.
 const MAX_GAP_ROUNDS: usize = 40;
+
+/// The degradation ladder (DESIGN.md §12): the next-most-conservative
+/// strategy to retry a non-converged step under. Order:
+/// hybrid/previous → strong → full (no-screening). The last rung fits
+/// every predictor under the KKT safeguard — trivially sound, since
+/// nothing is discarded — so there is nowhere further to go: `None`
+/// means the non-convergence must be reported as-is.
+fn ladder_next(s: Strategy) -> Option<Strategy> {
+    match s {
+        Strategy::GapHybrid | Strategy::PreviousSet => Some(Strategy::StrongSet),
+        Strategy::StrongSet | Strategy::SafeOnly => Some(Strategy::NoScreening),
+        Strategy::NoScreening => None,
+    }
+}
 
 /// Cross-step dual state of the gap-driven strategies: the sphere-test
 /// screener (reference dual point + cached reference magnitudes), the
@@ -1462,6 +1674,13 @@ fn solve_with_gap(
     let mut loss;
     let mut gap;
     loop {
+        // Cancellation between certificate rounds, mirroring the
+        // safeguarded loop: round 1 always runs so `loss`/`gap` are
+        // initialized, later rounds bail as soon as the token fires.
+        if refits > 0 && opts.is_cancelled() {
+            converged = false;
+            break;
+        }
         refits += 1;
         let t1 = Instant::now();
         let warm: Vec<f64> = reduced.coefs.iter().map(|&c| beta_full[c]).collect();
@@ -1469,9 +1688,12 @@ fn solve_with_gap(
         // tolerance the safeguarded strategies demand (so gap-hybrid
         // solutions are interchangeable with strong-rule solutions) plus
         // the inner gap that drives the global certificate.
-        let mut fista_cfg = opts.fista;
+        let mut fista_cfg = opts.fista.clone();
         if fista_cfg.kkt_tol_abs.is_none() {
             fista_cfg.kkt_tol_abs = Some(kkt_thresh);
+        }
+        if fista_cfg.cancel.is_none() {
+            fista_cfg.cancel = opts.cancel.clone();
         }
         fista_cfg.gap_tol_abs = Some(inner_abs);
         let res = solve(
@@ -1555,6 +1777,14 @@ fn solve_with_gap(
         }
         t_kkt += t2.elapsed().as_secs_f64();
 
+        // Poisoned arithmetic (a NaN gradient, an overflowed loss): no
+        // later round can certify from a non-finite gap — bail out
+        // non-converged and let the degradation ladder retry the step
+        // from its snapshot.
+        if !gap.is_finite() {
+            converged = false;
+            break;
+        }
         if gap <= gap_abs {
             break;
         }
@@ -2458,5 +2688,108 @@ mod tests {
         assert_eq!(flagged, vec![0]);
         let none = kkt_flagged(&[0.5, 0.1, 0.05], &lam, 1e-12);
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn gap_stall_is_rescued_by_the_degradation_ladder() {
+        // A gap tolerance below the numeric floor makes every hybrid
+        // step stall at MAX_GAP_ROUNDS; the ladder must rescue each one
+        // under the strong strategy and report both the rescue and a
+        // *converged* fit — never a silently non-converged one.
+        let prob = gaussian_problem(44, 30, 40, 4);
+        let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::GapHybrid, 5);
+        o.fista.max_iter = 2_000; // ample for the rescue, cheap for the doomed rounds
+        o.gap_tol = f64::MIN_POSITIVE; // unreachable certificate
+        let before = obsreg::PATH_DEGRADED_STEPS.get();
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        for (m, s) in fit.steps.iter().enumerate().skip(1) {
+            assert_eq!(s.degraded_to, Some("strong"), "step {m} not rescued");
+            assert!(s.solver_converged, "rescued step {m} must converge");
+        }
+        assert!(
+            obsreg::PATH_DEGRADED_STEPS.get() >= before + (fit.steps.len() - 1) as u64,
+            "every rescued step must be counted"
+        );
+        // The rescued fit solves the same problems the strong strategy
+        // solves directly — solutions must agree to solver tolerance.
+        let strong = fit_path(
+            &prob,
+            &opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 5),
+            &NativeGradient(&prob),
+        );
+        let steps = fit.steps.len().min(strong.steps.len());
+        for m in 0..steps {
+            let a = fit.beta_at(m, prob.p_total());
+            let b = strong.beta_at(m, prob.p_total());
+            for i in 0..prob.p_total() {
+                assert!((a[i] - b[i]).abs() < 1e-4, "step {m} coef {i}: {} vs {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn ladder_off_surfaces_the_stall() {
+        let prob = gaussian_problem(44, 30, 40, 4);
+        let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::GapHybrid, 5);
+        o.fista.max_iter = 2_000;
+        o.gap_tol = f64::MIN_POSITIVE;
+        o.degrade = false;
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert!(fit.steps.iter().skip(1).all(|s| !s.solver_converged));
+        assert!(fit.steps.iter().all(|s| s.degraded_to.is_none()));
+    }
+
+    #[test]
+    fn pre_fired_token_stops_the_path_at_the_bootstrap() {
+        let prob = gaussian_problem(45, 30, 40, 4);
+        let tok = CancelToken::new();
+        tok.cancel();
+        let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10);
+        o.cancel = Some(tok);
+        let fit = fit_path(&prob, &o, &NativeGradient(&prob));
+        assert_eq!(fit.stopped_early, Some("cancelled"));
+        assert_eq!(fit.steps.len(), 1, "only the β = 0 bootstrap step runs");
+        // Partial state keeps the warm-start contract: β and ∇f(β) agree.
+        assert_eq!(fit.final_beta.len(), prob.p_total());
+        assert_eq!(fit.final_grad.len(), prob.p_total());
+    }
+
+    #[test]
+    fn unfired_token_is_bitwise_invisible() {
+        // The zero-cost-when-healthy contract at the unit level: a token
+        // that never fires must not perturb a single bit of the fit.
+        let prob = gaussian_problem(46, 40, 60, 5);
+        for strategy in [Strategy::StrongSet, Strategy::GapHybrid] {
+            let o = opts(LambdaKind::Bh { q: 0.1 }, strategy, 10);
+            let plain = fit_path(&prob, &o, &NativeGradient(&prob));
+            let mut o_tok = opts(LambdaKind::Bh { q: 0.1 }, strategy, 10);
+            o_tok.cancel = Some(CancelToken::with_deadline_ms(3_600_000));
+            let tokened = fit_path(&prob, &o_tok, &NativeGradient(&prob));
+            assert_eq!(plain.steps.len(), tokened.steps.len());
+            for (a, b) in plain.final_beta.iter().zip(&tokened.final_beta) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: beta drift", strategy.name());
+            }
+            for (a, b) in plain.final_grad.iter().zip(&tokened.final_grad) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: grad drift", strategy.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fit_point_rescues_a_gap_stall() {
+        let prob = gaussian_problem(47, 30, 40, 4);
+        let mut o = opts(LambdaKind::Bh { q: 0.1 }, Strategy::GapHybrid, 5);
+        o.fista.max_iter = 2_000;
+        o.gap_tol = f64::MIN_POSITIVE;
+        let seed = zero_seed(&prob, &o, &NativeGradient(&prob));
+        let point = fit_point(&prob, &o, &NativeGradient(&prob), 0.5 * seed.sigma, &seed);
+        assert!(point.solver_converged);
+        assert_eq!(point.degraded_to, Some("strong"));
+        // The rescue's closing sweep keeps the seed contract: the
+        // returned gradient is the true full gradient at the solution.
+        let (_, grad) = prob.loss_grad(&point.beta);
+        for (a, b) in grad.iter().zip(&point.grad) {
+            assert!((a - b).abs() < 1e-10, "seed gradient drift: {a} vs {b}");
+        }
     }
 }

@@ -1,0 +1,358 @@
+//! Chaos harness (DESIGN.md §12): every [`FaultPlan`] scenario must end
+//! in a typed error or a ladder-degraded *converged* fit. The server
+//! never dies, and a clean request after the fault always succeeds.
+//!
+//! The fault registry is process-global, so every test that arms it (or
+//! reads the global resilience counters) serializes on [`CHAOS`].
+
+use std::sync::Mutex;
+
+use slope_screen::fault::{self, FaultPlan};
+use slope_screen::jsonio::Json;
+use slope_screen::obs::registry as obsreg;
+use slope_screen::serve::protocol;
+use slope_screen::serve::{Server, ServerConfig};
+
+static CHAOS: Mutex<()> = Mutex::new(());
+
+/// Serialize and recover from a poisoned lock — a failed chaos test must
+/// not cascade into every later scenario.
+fn chaos_lock() -> std::sync::MutexGuard<'static, ()> {
+    CHAOS.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn server() -> Server {
+    Server::new(ServerConfig { threads: 2, queue: 8, cache: true, ..Default::default() })
+}
+
+/// A small-but-real path fit: a few dozen FISTA solves, ~tens of ms.
+fn fit_line(id: u64, seed: u64) -> String {
+    protocol::request_line(
+        id,
+        "fit_path",
+        vec![
+            ("dataset", protocol::synth_dataset_json(40, 120, 5, 0.2, "gaussian", seed)),
+            ("q", Json::Num(0.1)),
+            ("path_length", Json::Num(8.0)),
+        ],
+    )
+}
+
+fn parse(response: &str) -> Json {
+    Json::parse(response).unwrap_or_else(|e| panic!("unparseable response {response}: {e}"))
+}
+
+fn assert_ok(resp: &Json) {
+    assert_eq!(resp.field("ok"), Some(&Json::Bool(true)), "expected success: {resp:?}");
+}
+
+fn error_kind(resp: &Json) -> String {
+    assert_eq!(resp.field("ok"), Some(&Json::Bool(false)), "expected an error: {resp:?}");
+    resp.field("error_kind")
+        .and_then(|k| k.as_str())
+        .unwrap_or_else(|| panic!("error without error_kind: {resp:?}"))
+        .to_string()
+}
+
+#[test]
+fn planned_panic_is_typed_and_the_server_survives() {
+    let _g = chaos_lock();
+    fault::clear();
+    let srv = server();
+    let panics_before = obsreg::SERVE_WORKER_PANICS.get();
+
+    fault::install(FaultPlan { panic_at_solve: Some(1), ..FaultPlan::default() });
+    let resp = parse(&srv.handle_line(&fit_line(1, 21)));
+    assert_eq!(error_kind(&resp), "panic");
+    let msg = resp.field("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("planned panic"), "panic payload lost: {msg}");
+    assert!(obsreg::SERVE_WORKER_PANICS.get() > panics_before);
+    fault::clear();
+
+    // One strike is not a quarantine, and the same server keeps serving
+    // the same dataset.
+    let clean = parse(&srv.handle_line(&fit_line(2, 21)));
+    assert_ok(&clean);
+    assert_eq!(clean.field("result").unwrap().field("source").unwrap().as_str(), Some("fit"));
+}
+
+#[test]
+fn repeated_panics_quarantine_then_reintern_cleanly() {
+    let _g = chaos_lock();
+    fault::clear();
+    let srv = server();
+    let quarantined_before = obsreg::REGISTRY_QUARANTINED.get();
+
+    for id in 0..3 {
+        // Re-installing resets the solve counter, so each request's first
+        // solve panics.
+        fault::install(FaultPlan { panic_at_solve: Some(1), ..FaultPlan::default() });
+        let resp = parse(&srv.handle_line(&fit_line(id, 33)));
+        assert_eq!(error_kind(&resp), "panic", "strike {}", id + 1);
+    }
+    fault::clear();
+    assert_eq!(
+        obsreg::REGISTRY_QUARANTINED.get(),
+        quarantined_before + 1,
+        "three strikes must evict the dataset exactly once"
+    );
+
+    // The evicted dataset re-interns from scratch with a clean record.
+    let clean = parse(&srv.handle_line(&fit_line(9, 33)));
+    assert_ok(&clean);
+}
+
+#[test]
+fn slow_solve_against_a_deadline_is_a_typed_deadline_error() {
+    let _g = chaos_lock();
+    fault::clear();
+    let srv = server();
+    let expired_before = obsreg::SERVE_DEADLINE_EXPIRED.get();
+
+    fault::install(FaultPlan { slow_solve_ms: 60, seed: 7, ..FaultPlan::default() });
+    let line = protocol::request_line(
+        1,
+        "fit_path",
+        vec![
+            ("dataset", protocol::synth_dataset_json(40, 120, 5, 0.2, "gaussian", 44)),
+            ("q", Json::Num(0.1)),
+            ("path_length", Json::Num(8.0)),
+            ("deadline_ms", Json::Num(20.0)),
+        ],
+    );
+    let resp = parse(&srv.handle_line(&line));
+    assert_eq!(error_kind(&resp), "deadline");
+    let msg = resp.field("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("deadline"), "{msg}");
+    // Partial progress rides along in the error, never in the cache.
+    let partial = resp.field("partial").expect("deadline errors carry partial progress");
+    assert!(partial.field("steps_done").unwrap().as_usize().is_some());
+    assert!(obsreg::SERVE_DEADLINE_EXPIRED.get() > expired_before);
+    fault::clear();
+
+    // The same model without a deadline must be a full fresh fit — an
+    // expired request must not have cached a partial result.
+    let clean = parse(&srv.handle_line(&fit_line(2, 44)));
+    assert_ok(&clean);
+    let result = clean.field("result").unwrap();
+    assert_eq!(result.field("source").unwrap().as_str(), Some("fit"));
+    assert!(result.field("steps").unwrap().as_usize().unwrap() >= 2);
+}
+
+#[test]
+fn nan_gradient_degrades_to_a_converged_fit() {
+    let _g = chaos_lock();
+    fault::clear();
+    let srv = server();
+    let degraded_before = obsreg::PATH_DEGRADED_STEPS.get();
+
+    fault::install(FaultPlan { nan_grad_at_solve: Some(1), ..FaultPlan::default() });
+    let resp = parse(&srv.handle_line(&fit_line(1, 55)));
+    fault::clear();
+
+    // A poisoned gradient is not an error: the degradation ladder retries
+    // the step under a more conservative strategy and reports a
+    // *converged* fit with the rescue on the record.
+    assert_ok(&resp);
+    let result = resp.field("result").unwrap();
+    assert_eq!(result.field("solver_converged"), Some(&Json::Bool(true)));
+    assert!(
+        result.field("degraded_steps").unwrap().as_usize().unwrap() >= 1,
+        "the rescue must be visible in the response: {result:?}"
+    );
+    assert!(obsreg::PATH_DEGRADED_STEPS.get() > degraded_before);
+}
+
+#[test]
+fn disarmed_plans_are_bitwise_invisible() {
+    use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+    use slope_screen::rng::Pcg64;
+    use slope_screen::slope::family::Family;
+    use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+    use slope_screen::slope::path::{fit_path, NativeGradient, PathOptions};
+
+    let _g = chaos_lock();
+    fault::clear();
+    let prob = SyntheticSpec {
+        n: 40,
+        p: 80,
+        rho: 0.2,
+        design: DesignKind::Compound,
+        beta: BetaSpec::PlusMinus { k: 5, scale: 2.0 },
+        family: Family::Gaussian,
+        noise_sd: 1.0,
+        standardize: true,
+    }
+    .generate(&mut Pcg64::new(3));
+    let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+    cfg.length = 6;
+    let opts = PathOptions::new(cfg);
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+
+    let baseline = fit_path(&prob, &opts, &NativeGradient(&prob));
+
+    // An armed-but-empty plan must not perturb a single bit...
+    fault::install(FaultPlan::default());
+    let armed_empty = fit_path(&prob, &opts, &NativeGradient(&prob));
+    // ...and neither must the disarmed registry after a clear.
+    fault::clear();
+    let cleared = fit_path(&prob, &opts, &NativeGradient(&prob));
+
+    for (label, fit) in [("armed-empty", &armed_empty), ("cleared", &cleared)] {
+        assert_eq!(fit.sigmas.len(), baseline.sigmas.len(), "{label}");
+        assert_eq!(bits(&fit.final_beta), bits(&baseline.final_beta), "{label}: beta drifted");
+        assert_eq!(bits(&fit.final_grad), bits(&baseline.final_grad), "{label}: grad drifted");
+        assert_eq!(bits(&fit.sigmas), bits(&baseline.sigmas), "{label}: grid drifted");
+    }
+}
+
+#[cfg(unix)]
+mod socket {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    use slope_screen::serve::client::{connect_with_retry, Client};
+
+    fn socket_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("slope-chaos-{}-{name}.sock", std::process::id()))
+    }
+
+    fn spawn_server(
+        cfg: ServerConfig,
+        path: &std::path::Path,
+    ) -> (Arc<Server>, std::thread::JoinHandle<std::io::Result<()>>) {
+        let server = Arc::new(Server::new(cfg));
+        let srv = Arc::clone(&server);
+        let sock = path.to_path_buf();
+        let handle = std::thread::spawn(move || srv.serve_unix(&sock));
+        (server, handle)
+    }
+
+    /// Join the server thread under a watchdog — a drain that hangs must
+    /// fail the test, not wedge the suite.
+    fn join_within(handle: std::thread::JoinHandle<std::io::Result<()>>, secs: u64, what: &str) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = tx.send(handle.join());
+        });
+        match rx.recv_timeout(Duration::from_secs(secs)) {
+            Ok(joined) => {
+                joined.expect(what).unwrap_or_else(|e| panic!("{what}: transport error {e}"));
+            }
+            Err(_) => panic!("{what}: server thread did not join within {secs}s"),
+        }
+    }
+
+    fn connect(path: &std::path::Path) -> Client {
+        connect_with_retry(path, 80, 25).expect("serve socket")
+    }
+
+    #[test]
+    fn connection_drop_mid_stream_then_clean_reconnect() {
+        let _g = chaos_lock();
+        fault::clear();
+        let sock = socket_path("drop");
+        let (_server, handle) =
+            spawn_server(ServerConfig { threads: 2, ..Default::default() }, &sock);
+
+        // Arm before connecting: the per-connection trigger is read when
+        // the handler starts.
+        fault::install(FaultPlan { drop_after_lines: Some(1), ..FaultPlan::default() });
+        let mut client = connect(&sock);
+        let stats = protocol::request_line(1, "stats", vec![]);
+        let first = client.round_trip(&stats).expect("line 1 is served before the drop");
+        assert_ok(&parse(&first));
+        // The second line on the same connection is severed mid-stream.
+        let second = client.round_trip(&stats);
+        assert!(second.is_err(), "expected a dropped connection, got {second:?}");
+        fault::clear();
+
+        // The server itself is healthy: reconnect and keep working.
+        client.reconnect().expect("reconnect after the drop");
+        let again = client.round_trip(&stats).expect("clean request after reconnect");
+        assert_ok(&parse(&again));
+
+        let _ = client.round_trip(&protocol::request_line(9, "shutdown", vec![]));
+        join_within(handle, 30, "drop scenario shutdown");
+    }
+
+    #[test]
+    fn shutdown_while_busy_drains_exactly_once() {
+        let _g = chaos_lock();
+        fault::clear();
+        let sock = socket_path("drain");
+        let (_server, handle) = spawn_server(
+            ServerConfig { threads: 2, cache: false, ..Default::default() },
+            &sock,
+        );
+
+        // Slow every solve so the fit is reliably still in flight when
+        // the shutdown lands.
+        fault::install(FaultPlan { slow_solve_ms: 30, seed: 11, ..FaultPlan::default() });
+        let sock_a = sock.clone();
+        let busy = std::thread::spawn(move || {
+            let mut a = connect(&sock_a);
+            let line = protocol::request_line(
+                1,
+                "fit_path",
+                vec![
+                    ("dataset", protocol::synth_dataset_json(40, 120, 5, 0.2, "gaussian", 66)),
+                    ("q", Json::Num(0.1)),
+                    ("path_length", Json::Num(12.0)),
+                ],
+            );
+            let first = a.round_trip(&line);
+            // After the drain the connection must be closed: no second
+            // response ever arrives.
+            let after = a.round_trip(&protocol::request_line(2, "stats", vec![]));
+            (first, after)
+        });
+
+        std::thread::sleep(Duration::from_millis(100));
+        let mut b = connect(&sock);
+        let bye = b.round_trip(&protocol::request_line(9, "shutdown", vec![])).unwrap();
+        assert_ok(&parse(&bye));
+        join_within(handle, 30, "busy drain");
+        fault::clear();
+
+        let (first, after) = busy.join().unwrap();
+        // Exactly one response for the accepted request: either the
+        // completed fit (admitted before the drain) or a typed shutdown
+        // rejection (still queued when the drain began) — never silence,
+        // never two answers.
+        let first = first.expect("the in-flight request gets exactly one response");
+        let resp = parse(&first);
+        if resp.field("ok") == Some(&Json::Bool(true)) {
+            let result = resp.field("result").unwrap();
+            assert_eq!(result.field("solver_converged"), Some(&Json::Bool(true)));
+        } else {
+            assert_eq!(error_kind(&resp), "shutdown");
+        }
+        assert!(after.is_err(), "no responses after the drain, got {after:?}");
+    }
+
+    #[test]
+    fn oversized_line_over_the_socket_is_survivable() {
+        let _g = chaos_lock();
+        fault::clear();
+        let sock = socket_path("oversize");
+        let (_server, handle) = spawn_server(
+            ServerConfig { max_line_bytes: 2048, ..Default::default() },
+            &sock,
+        );
+
+        let mut client = connect(&sock);
+        let huge = format!(r#"{{"id":1,"op":"stats","pad":"{}"}}"#, "x".repeat(4096));
+        let resp = parse(&client.round_trip(&huge).expect("typed error, not a hangup"));
+        assert_eq!(error_kind(&resp), "oversized_line");
+        assert!(resp.field("error").unwrap().as_str().unwrap().contains("2048"));
+
+        // The connection survives the oversized line.
+        let ok = client.round_trip(&protocol::request_line(2, "stats", vec![])).unwrap();
+        assert_ok(&parse(&ok));
+
+        let _ = client.round_trip(&protocol::request_line(9, "shutdown", vec![]));
+        join_within(handle, 30, "oversize scenario shutdown");
+    }
+}

@@ -153,6 +153,7 @@ fn saturation_stop_fires_for_loose_solves() {
     o.fista.max_iter = 300;
     o.fista.kkt_tol_abs = Some(f64::INFINITY); // disable KKT-verified mode
     o.kkt_tol = 1e6; // and the violation safeguard (it would refit forever)
+    o.degrade = false; // the ladder would mask the loose solves under study
     let fit = fit_path(&prob, &o, &NativeGradient(&prob));
     assert_eq!(fit.stopped_early, Some("unique magnitudes exceed n"));
 }
