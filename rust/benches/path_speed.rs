@@ -65,7 +65,8 @@ use slope_screen::slope::cancel::CancelToken;
 use slope_screen::slope::family::{Family, Problem};
 use slope_screen::slope::lambda::{LambdaKind, PathConfig};
 use slope_screen::slope::path::{
-    fit_path, fit_path_seeded, NativeGradient, PathFit, PathOptions, Strategy,
+    fit_path, fit_path_checkpointed, fit_path_seeded, CheckpointConfig, NativeGradient, PathFit,
+    PathOptions, Strategy,
 };
 
 /// Registry counters a bench cell cares about, captured as deltas around
@@ -590,6 +591,68 @@ fn main() {
         overhead
     };
 
+    // Durable-state contract (DESIGN.md §13): snapshotting every 5 σ-steps
+    // — the default `fit --checkpoint` cadence — must be near-free next to
+    // the solve it protects, and bitwise invisible: a checkpointed fit is
+    // the same fit, plus files. Measured warm/parallel at the largest
+    // size, best of 3 per arm, like the cancellation cell above.
+    let checkpoint_overhead = {
+        let pi_max = ps.iter().position(|&p| p == p_max).expect("p_max in grid");
+        let prob = make_problem(n, p_max, k.min(p_max / 2).max(1), rho, seed + pi_max as u64);
+        let ng = NativeGradient(&prob);
+        let o = opts(q, path_length, threads, default_engine == "packed", Strategy::StrongSet);
+        let warm_seed = fit_path(&prob, &o, &ng).seed();
+        let ckpt = CheckpointConfig {
+            path: std::env::temp_dir()
+                .join(format!("slope-bench-ckpt-{}.bin", std::process::id())),
+            every: 5,
+            dataset_fingerprint: 0xBE7C_0CCE,
+        };
+        let best_of_3 = |f: &dyn Fn() -> PathFit| {
+            let mut best_s = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..3 {
+                let fit = f();
+                best_s = best_s.min(fit.wall_time);
+                last = Some(fit);
+            }
+            (best_s, last.expect("three reps"))
+        };
+        let (plain_s, plain_fit) =
+            best_of_3(&|| fit_path_seeded(&prob, &o, &ng, Some(&warm_seed)));
+        let (ckpt_s, ckpt_fit) =
+            best_of_3(&|| fit_path_checkpointed(&prob, &o, &ng, Some(&warm_seed), &ckpt));
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(
+            bits(&plain_fit.final_beta),
+            bits(&ckpt_fit.final_beta),
+            "checkpointing must be bitwise invisible (beta)"
+        );
+        assert_eq!(
+            bits(&plain_fit.final_grad),
+            bits(&ckpt_fit.final_grad),
+            "checkpointing must be bitwise invisible (grad)"
+        );
+        for suffix in ["", ".prev", ".tmp"] {
+            let mut p = ckpt.path.clone().into_os_string();
+            p.push(suffix);
+            let _ = std::fs::remove_file(std::path::PathBuf::from(p));
+        }
+        let overhead = ckpt_s / plain_s.max(1e-12) - 1.0;
+        println!(
+            "checkpoint overhead at p={p_max} (every 5 steps, warm, parallel, best of 3): {:.2}% ({ckpt_s:.4}s with snapshots vs {plain_s:.4}s without)",
+            overhead * 100.0
+        );
+        if !smoke && threads >= 4 {
+            assert!(
+                overhead < 0.02,
+                "checkpointing every 5 steps must cost < 2% at p={p_max}, got {:.2}%",
+                overhead * 100.0
+            );
+        }
+        overhead
+    };
+
     let mut speedup_fields = vec![
         ("p", Json::Num(p_max as f64)),
         ("engine", Json::Str(default_engine.to_string())),
@@ -647,7 +710,10 @@ fn main() {
         ("speedup", Json::obj(speedup_fields)),
         (
             "resilience",
-            Json::obj(vec![("cancel_check_overhead", Json::Num(cancel_overhead))]),
+            Json::obj(vec![
+                ("cancel_check_overhead", Json::Num(cancel_overhead)),
+                ("checkpoint_overhead", Json::Num(checkpoint_overhead)),
+            ]),
         ),
         (
             "obs",

@@ -35,6 +35,16 @@ pub struct FaultPlan {
     pub nan_grad_at_solve: Option<u64>,
     /// Sever a serve connection after this many request lines.
     pub drop_after_lines: Option<u64>,
+    /// Kill the process-side path loop by panicking right after the n-th
+    /// σ-step completes (1-based, counting from the first non-trivial
+    /// step) — the kill-and-resume chaos lever. The panic fires *after*
+    /// the step's checkpoint write, so a checkpointed fit always leaves a
+    /// resumable snapshot behind.
+    pub kill_after_step: Option<u64>,
+    /// Truncate the freshly written checkpoint file to half its length
+    /// after the n-th checkpoint write, 1-based — a torn write that must
+    /// be caught by the digest and recovered via the previous snapshot.
+    pub truncate_checkpoint: Option<u64>,
     /// Seed for the jitter stream.
     pub seed: u64,
 }
@@ -49,7 +59,8 @@ impl FaultPlan {
             for key in map.keys() {
                 match key.as_str() {
                     "panic_at_solve" | "slow_solve_ms" | "nan_grad_at_solve"
-                    | "drop_after_lines" | "seed" => {}
+                    | "drop_after_lines" | "kill_after_step" | "truncate_checkpoint"
+                    | "seed" => {}
                     other => return Err(format!("fault plan: unknown field `{other}`")),
                 }
             }
@@ -74,6 +85,8 @@ impl FaultPlan {
         plan.slow_solve_ms = u64_field("slow_solve_ms")?.unwrap_or(0);
         plan.nan_grad_at_solve = u64_field("nan_grad_at_solve")?;
         plan.drop_after_lines = u64_field("drop_after_lines")?;
+        plan.kill_after_step = u64_field("kill_after_step")?;
+        plan.truncate_checkpoint = u64_field("truncate_checkpoint")?;
         plan.seed = u64_field("seed")?.unwrap_or(0x5EED);
         Ok(plan)
     }
@@ -89,6 +102,7 @@ impl FaultPlan {
 /// One relaxed load on every hook; everything else lives behind it.
 static ACTIVE: AtomicBool = AtomicBool::new(false);
 static SOLVE_COUNT: AtomicU64 = AtomicU64::new(0);
+static CKPT_WRITE_COUNT: AtomicU64 = AtomicU64::new(0);
 static JITTER_STATE: AtomicU64 = AtomicU64::new(0);
 static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
 
@@ -103,6 +117,7 @@ pub fn enabled() -> bool {
 /// scenarios replay deterministically.
 pub fn install(plan: FaultPlan) {
     SOLVE_COUNT.store(0, Ordering::Relaxed);
+    CKPT_WRITE_COUNT.store(0, Ordering::Relaxed);
     JITTER_STATE.store(plan.seed | 1, Ordering::Relaxed);
     *PLAN.lock().unwrap() = Some(plan);
     ACTIVE.store(true, Ordering::Relaxed);
@@ -113,6 +128,7 @@ pub fn clear() {
     ACTIVE.store(false, Ordering::Relaxed);
     *PLAN.lock().unwrap() = None;
     SOLVE_COUNT.store(0, Ordering::Relaxed);
+    CKPT_WRITE_COUNT.store(0, Ordering::Relaxed);
 }
 
 /// A snapshot of the armed plan, if any.
@@ -185,6 +201,55 @@ pub fn drop_after_lines() -> Option<u64> {
     current().and_then(|p| p.drop_after_lines)
 }
 
+/// Called by the path driver after σ-step `step` (1-based) completes —
+/// and, in a checkpointed fit, after that step's snapshot is on disk.
+/// Panics when an armed plan says to kill here: the unwind crosses
+/// `main`, so the CLI process dies non-zero, while in-process chaos tests
+/// catch it with `catch_unwind`.
+#[inline]
+pub fn on_path_step(step: u64) {
+    if !enabled() {
+        return;
+    }
+    on_path_step_armed(step);
+}
+
+#[cold]
+fn on_path_step_armed(step: u64) {
+    let Some(plan) = current() else { return };
+    if plan.kill_after_step == Some(step) {
+        obsreg::FAULT_INJECTIONS.inc();
+        panic!("fault injection: planned kill after path step {step}");
+    }
+}
+
+/// Called by the checkpoint writer after each successful atomic write.
+/// On the n-th write of an armed `truncate_checkpoint` plan, truncates
+/// the fresh snapshot to half its length — simulating a torn write the
+/// loader must reject by digest and recover from via `<path>.prev`.
+#[inline]
+pub fn on_checkpoint_write(path: &std::path::Path) {
+    if !enabled() {
+        return;
+    }
+    on_checkpoint_write_armed(path);
+}
+
+#[cold]
+fn on_checkpoint_write_armed(path: &std::path::Path) {
+    let Some(plan) = current() else { return };
+    let Some(nth) = plan.truncate_checkpoint else { return };
+    let count = CKPT_WRITE_COUNT.fetch_add(1, Ordering::Relaxed) + 1;
+    if count == nth {
+        obsreg::FAULT_INJECTIONS.inc();
+        if let Ok(meta) = std::fs::metadata(path) {
+            if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+                let _ = f.set_len(meta.len() / 2);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +277,47 @@ mod tests {
         assert!(FaultPlan::parse_str(r#"{"panic_at_solve": -1}"#).is_err());
         assert!(FaultPlan::parse_str(r#"{"explode": true}"#).is_err());
         assert!(FaultPlan::parse_str("[1,2]").is_err());
+    }
+
+    #[test]
+    fn kill_after_step_panics_at_the_named_step_only() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan { kill_after_step: Some(3), ..FaultPlan::default() });
+        on_path_step(1);
+        on_path_step(2);
+        let hit = std::panic::catch_unwind(|| on_path_step(3));
+        clear();
+        let err = hit.expect_err("step 3 must kill");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("planned kill after path step 3"), "got: {msg}");
+    }
+
+    #[test]
+    fn truncate_checkpoint_halves_the_nth_write() {
+        let _g = LOCK.lock().unwrap();
+        let dir = std::env::temp_dir().join(format!("slope-fault-{}-trunc", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.bin");
+        install(FaultPlan { truncate_checkpoint: Some(2), ..FaultPlan::default() });
+        std::fs::write(&path, vec![7u8; 64]).unwrap();
+        on_checkpoint_write(&path);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 64, "write 1 untouched");
+        std::fs::write(&path, vec![7u8; 64]).unwrap();
+        on_checkpoint_write(&path);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 32, "write 2 truncated");
+        std::fs::write(&path, vec![7u8; 64]).unwrap();
+        on_checkpoint_write(&path);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 64, "write 3 untouched");
+        clear();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_accepts_checkpoint_fault_fields() {
+        let plan =
+            FaultPlan::parse_str(r#"{"kill_after_step": 3, "truncate_checkpoint": 1}"#).unwrap();
+        assert_eq!(plan.kill_after_step, Some(3));
+        assert_eq!(plan.truncate_checkpoint, Some(1));
     }
 
     #[test]

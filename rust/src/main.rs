@@ -12,6 +12,8 @@
 //! Examples:
 //!   slope-screen fit --n 200 --p 5000 --rho 0.4 --family gaussian
 //!   slope-screen fit --n 200 --p 5000 --trace /tmp/fit.jsonl
+//!   slope-screen fit --n 200 --p 5000 --checkpoint /tmp/fit.ckpt --resume
+//!   slope-screen serve --socket /tmp/slope-serve.sock --state-dir /var/lib/slope
 //!   slope-screen profile /tmp/fit.jsonl
 //!   slope-screen fit --dataset golub --screen previous
 //!   slope-screen fit --data genes.csv --family binomial
@@ -64,7 +66,11 @@ fn main() {
         .opt("deadline-ms", "0", "fit/serve: per-fit deadline in milliseconds (0 = none); an expired fit is a typed `deadline` error, never a silent partial result")
         .opt("max-line-bytes", "16777216", "serve: byte cap on one NDJSON request line (oversized lines get a typed error)")
         .opt("shed-queue", "0", "serve: reject fit requests with a typed `overload` error once this many are parked (0 = blocking backpressure)")
-        .opt("fault-plan", "", "serve: arm deterministic fault injection (a JSON file path or inline JSON; see DESIGN.md §12 — chaos testing only)")
+        .opt("fault-plan", "", "fit/serve: arm deterministic fault injection (a JSON file path or inline JSON; see DESIGN.md §12 — chaos testing only)")
+        .opt("checkpoint", "", "fit: write crash-safe path snapshots to this file (DESIGN.md §13)")
+        .opt("checkpoint-every", "5", "fit: snapshot cadence in path steps (rescue events always snapshot)")
+        .flag("resume", "fit: resume from --checkpoint if it holds a valid snapshot of this dataset (falls back to a cold start otherwise)")
+        .opt("state-dir", "", "serve: journal dataset registrations, warm-start seeds and quarantine strikes here and restore them on boot")
         .opt("json", "", "client: a single request line to send")
         .opt("trace", "", "fit/cv/serve: write a JSONL span/event trace to this path (read it back with `profile`)")
         .flag("stdio", "serve: speak NDJSON over stdin/stdout instead of a socket")
@@ -111,7 +117,14 @@ fn main() {
     }
 }
 
-fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
+/// Build the problem for `fit`/`cv`, plus a content fingerprint of the
+/// dataset it came from. The fingerprint is stamped into checkpoints so
+/// a snapshot can never be resumed against the wrong data: file data
+/// uses ingest's streamed content hash, named stand-ins and synthetic
+/// specs use a canonical-identity hash (deterministic generators — the
+/// identity *is* the content).
+fn build_problem(parsed: &slope_screen::cli::Parsed) -> (Problem, u64) {
+    use slope_screen::ingest::{fnv1a, FNV_BASIS};
     let data = parsed.get("data");
     if !data.is_empty() {
         use slope_screen::ingest::{load_path, IngestOptions};
@@ -135,7 +148,7 @@ fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
             prob.family.name(),
             ing.fingerprint
         );
-        return prob;
+        return (prob, ing.fingerprint);
     }
     let dataset = parsed.get("dataset");
     if !dataset.is_empty() {
@@ -151,7 +164,8 @@ fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
             prob.p(),
             prob.family.name()
         );
-        return prob;
+        let fp = fnv1a(FNV_BASIS, format!("real:{}", ds.name()).as_bytes());
+        return (prob, fp);
     }
     let family = Family::parse(parsed.get("family"), parsed.usize("classes"))
         .unwrap_or_else(|e| panic!("--family: {e}"));
@@ -175,7 +189,22 @@ fn build_problem(parsed: &slope_screen::cli::Parsed) -> Problem {
         noise_sd: 1.0,
         standardize: true,
     };
-    spec.generate(&mut Pcg64::new(parsed.u64("seed")))
+    let fp = fnv1a(
+        FNV_BASIS,
+        format!(
+            "synth:n={},p={},k={},rho={},design={},family={},classes={},seed={}",
+            spec.n,
+            spec.p,
+            k,
+            spec.rho,
+            parsed.get("design"),
+            parsed.get("family"),
+            parsed.usize("classes"),
+            parsed.u64("seed"),
+        )
+        .as_bytes(),
+    );
+    (spec.generate(&mut Pcg64::new(parsed.u64("seed"))), fp)
 }
 
 fn build_opts(parsed: &slope_screen::cli::Parsed, prob: &Problem) -> PathOptions {
@@ -207,8 +236,50 @@ fn build_opts(parsed: &slope_screen::cli::Parsed, prob: &Problem) -> PathOptions
     opts
 }
 
+/// Run the path fit, honoring `--checkpoint`/`--resume` when given: a
+/// valid snapshot of *this* dataset continues bitwise-identically from
+/// its recorded step; anything else (missing, corrupt, wrong data) logs
+/// the typed error and starts cold — resumption is best-effort, the fit
+/// itself never is.
+fn run_fit(
+    parsed: &slope_screen::cli::Parsed,
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    dataset_fp: u64,
+) -> slope_screen::slope::path::PathFit {
+    use slope_screen::slope::path::{fit_path_checkpointed, resume_path, CheckpointConfig};
+    let ckpt = parsed.get("checkpoint");
+    if ckpt.is_empty() {
+        if parsed.bool("resume") {
+            eprintln!("fit: --resume requires --checkpoint <path>");
+            std::process::exit(2);
+        }
+        return fit_path(prob, opts, evaluator);
+    }
+    let cfg = CheckpointConfig {
+        path: std::path::PathBuf::from(ckpt),
+        every: parsed.usize("checkpoint-every"),
+        dataset_fingerprint: dataset_fp,
+    };
+    if parsed.bool("resume") {
+        match resume_path(prob, opts, evaluator, &cfg) {
+            Ok((fit, start)) => {
+                println!(
+                    "resumed from checkpoint {} at path step {start}",
+                    cfg.path.display()
+                );
+                return fit;
+            }
+            Err(e) => eprintln!("checkpoint: {e} (kind: {}); starting cold", e.kind()),
+        }
+    }
+    fit_path_checkpointed(prob, opts, evaluator, None, &cfg)
+}
+
 fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
-    let prob = build_problem(parsed);
+    arm_fault_plan(parsed.get("fault-plan"));
+    let (prob, dataset_fp) = build_problem(parsed);
     // --threads routes to the parallel backend (0 = process default).
     let mut opts = build_opts(parsed, &prob).with_threads(parsed.usize("threads"));
     let deadline_ms = parsed.u64("deadline-ms");
@@ -229,9 +300,9 @@ fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
             grad.bucket(),
             grad.padding_overhead()
         );
-        fit_path(&prob, &opts, &grad)
+        run_fit(parsed, &prob, &opts, &grad, dataset_fp)
     } else {
-        fit_path(&prob, &opts, &NativeGradient(&prob))
+        run_fit(parsed, &prob, &opts, &NativeGradient(&prob), dataset_fp)
     };
 
     if fit.stopped_early == Some("cancelled") {
@@ -273,7 +344,7 @@ fn cmd_fit(parsed: &slope_screen::cli::Parsed) {
 }
 
 fn cmd_cv(parsed: &slope_screen::cli::Parsed) {
-    let prob = build_problem(parsed);
+    let (prob, _fp) = build_problem(parsed);
     let opts = build_opts(parsed, &prob);
     let cfg = CvConfig {
         folds: parsed.usize("folds"),
@@ -351,6 +422,10 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
         max_line_bytes: parsed.usize("max-line-bytes"),
         deadline_ms: parsed.u64("deadline-ms"),
         shed_queue: parsed.usize("shed-queue"),
+        state_dir: {
+            let dir = parsed.get("state-dir");
+            (!dir.is_empty()).then(|| std::path::PathBuf::from(dir))
+        },
     };
     let server = std::sync::Arc::new(Server::new(cfg));
     if parsed.bool("stdio") {
@@ -384,7 +459,7 @@ fn arm_fault_plan(spec: &str) {
     };
     match slope_screen::fault::FaultPlan::parse_str(&src) {
         Ok(plan) => {
-            eprintln!("serve: FAULT INJECTION ARMED: {plan:?}");
+            eprintln!("FAULT INJECTION ARMED: {plan:?}");
             slope_screen::fault::install(plan);
         }
         Err(e) => {

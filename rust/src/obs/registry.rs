@@ -150,6 +150,13 @@ registry! {
     PATH_DEGRADED_STEPS: Counter, "path_degraded_steps", "path steps rescued by a more conservative strategy (degradation ladder)";
     FISTA_NONCONVERGED: Counter, "fista_nonconverged", "FISTA solves that exhausted max_iter without certifying convergence";
     FAULT_INJECTIONS: Counter, "fault_injections", "faults injected by an armed fault plan (chaos harness)";
+    // --- durable state (DESIGN.md §13) ---
+    CKPT_WRITES: Counter, "checkpoint_writes", "path-fit snapshots written atomically to disk";
+    CKPT_BYTES: Counter, "checkpoint_bytes", "bytes written across all checkpoint snapshots";
+    CKPT_RESUMES: Counter, "checkpoint_resumes", "path fits resumed from a validated snapshot";
+    CKPT_CORRUPT_SKIPS: Counter, "checkpoint_corrupt_skips", "snapshots or journal records rejected as corrupt/torn and skipped";
+    JOURNAL_RECORDS: Counter, "journal_records", "records appended to the serve registry journal";
+    JOURNAL_RESTORED: Counter, "journal_restored", "journal records successfully replayed on registry boot";
 }
 
 /// Name/value pairs for every registered cell, in declaration order.

@@ -26,11 +26,26 @@
 //! materialization (or cache state that keeps re-triggering the same
 //! crash) cannot take the server down request after request. The next
 //! request re-materializes from the spec.
+//!
+//! **Durable state** (DESIGN.md §13): with [`Registry::with_state_dir`]
+//! the registry journals interned dataset specs, warm-start seeds of
+//! built models, and strike counts to `<dir>/registry.journal` —
+//! length-prefixed, FNV-digested records, appended and fsynced. On boot
+//! the journal replays: datasets re-materialize from their specs, seeds
+//! prime [`DatasetEntry::any_ready_seed`] (a restarted server warm-starts
+//! instead of refitting cold), and the strike ledger survives — a
+//! crash-looping dataset cannot launder its quarantine strikes by
+//! restarting the server. Corrupt or torn records are detected, logged
+//! and skipped — never trusted.
 
 use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::ingest::{fnv1a, FNV_BASIS};
+use crate::jsonio::Json;
 use crate::linalg::packed::PackCache;
 use crate::obs::registry as obsreg;
 use crate::serve::error::ServeError;
@@ -142,6 +157,10 @@ pub struct DatasetEntry {
     /// Worker panics charged to this entry (quarantined at
     /// [`QUARANTINE_STRIKES`]).
     strikes: AtomicU64,
+    /// Warm-start seed restored from the journal of a previous process;
+    /// consulted by [`DatasetEntry::any_ready_seed`] when no model has
+    /// been built *this* process yet.
+    restored_seed: Mutex<Option<PathSeed>>,
     models: Mutex<HashMap<String, ModelSlot>>,
     points: Mutex<HashMap<String, Arc<PointState>>>,
 }
@@ -187,13 +206,17 @@ impl DatasetEntry {
     /// (used to prime a fit under a *different* model spec — the
     /// "refined request" case).
     pub fn any_ready_seed(&self) -> Option<PathSeed> {
-        let models = self.models.lock().unwrap();
-        for slot in models.values() {
-            if let ModelSlot::Ready(m) = slot {
-                return Some(m.seed.clone());
+        {
+            let models = self.models.lock().unwrap();
+            for slot in models.values() {
+                if let ModelSlot::Ready(m) = slot {
+                    return Some(m.seed.clone());
+                }
             }
         }
-        None
+        // Nothing built this process: fall back to a seed journaled by a
+        // previous one, so a restarted server warm-starts its first fit.
+        self.restored_seed.lock().unwrap().clone()
     }
 
     /// Number of fully-built cached models.
@@ -246,13 +269,78 @@ struct DatasetMap {
 pub struct Registry {
     datasets: Mutex<DatasetMap>,
     cache_enabled: bool,
+    /// Append handle to `<state-dir>/registry.journal`; `None` when the
+    /// server runs without durable state (and during boot replay, which
+    /// is what keeps replay from re-journaling what it restores).
+    journal: Option<Mutex<std::fs::File>>,
+    /// Strike counts by dataset fingerprint. Outlives the entry itself
+    /// (FIFO eviction, restart) so a crash-looping dataset cannot reset
+    /// its quarantine count by cycling through the cache or rebooting
+    /// the server. Quarantine clears the ledger: the post-quarantine
+    /// re-intern is a deliberate fresh start.
+    strike_ledger: Mutex<HashMap<u64, u64>>,
+    /// Warm-start seeds restored from the journal, adopted by the entry
+    /// when its dataset is (re-)interned.
+    restored_seeds: Mutex<HashMap<u64, PathSeed>>,
 }
 
 impl Registry {
     /// New registry; `cache_enabled = false` turns every lookup into a
     /// rebuild (the cold baseline the throughput bench compares against).
     pub fn new(cache_enabled: bool) -> Registry {
-        Registry { datasets: Mutex::new(DatasetMap::default()), cache_enabled }
+        Registry::with_state_dir(cache_enabled, None)
+    }
+
+    /// New registry with opt-in durable state: when `state_dir` is set,
+    /// `<dir>/registry.journal` is replayed (datasets re-interned from
+    /// their specs, seeds and strike counts restored) and then opened
+    /// for append, so everything registered from here on survives a
+    /// restart. Journal IO failures degrade to an in-memory registry
+    /// with a log line — serving never blocks on durability.
+    pub fn with_state_dir(cache_enabled: bool, state_dir: Option<&Path>) -> Registry {
+        let mut reg = Registry {
+            datasets: Mutex::new(DatasetMap::default()),
+            cache_enabled,
+            journal: None,
+            strike_ledger: Mutex::new(HashMap::new()),
+            restored_seeds: Mutex::new(HashMap::new()),
+        };
+        let Some(dir) = state_dir else { return reg };
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("registry: cannot create state dir {}: {e}; running in-memory", dir.display());
+            return reg;
+        }
+        let path = dir.join("registry.journal");
+        // Replay while `journal` is still None: restoring a dataset goes
+        // through `dataset()`, and a live journal there would append a
+        // duplicate record for every record replayed.
+        let valid = reg.replay_journal(&path);
+        // A torn tail must be cut before appending: a new record written
+        // after the tear would be unreachable by every future replay
+        // (which stops at the first broken frame).
+        match std::fs::metadata(&path) {
+            Ok(meta) if meta.len() > valid => {
+                if let Err(e) = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|f| f.set_len(valid))
+                {
+                    eprintln!(
+                        "registry: cannot truncate torn journal {}: {e}; running in-memory",
+                        path.display()
+                    );
+                    return reg;
+                }
+            }
+            _ => {}
+        }
+        match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            Ok(f) => reg.journal = Some(Mutex::new(f)),
+            Err(e) => {
+                eprintln!("registry: cannot open journal {}: {e}; running in-memory", path.display())
+            }
+        }
+        reg
     }
 
     /// Whether result caching is on.
@@ -283,34 +371,54 @@ impl Registry {
                 spec.label()
             )));
         }
+        let problem = Arc::new(materialized.problem);
+        // Strikes carry over from the ledger (never from the evicted
+        // entry's Arc): eviction or a restart must not launder them.
+        let carried_strikes =
+            self.strike_ledger.lock().unwrap().get(&fp).copied().unwrap_or(0);
+        // A journaled seed only fits if its dimensions still match the
+        // re-materialized problem; anything else is stale and dropped.
+        let restored = self.restored_seeds.lock().unwrap().get(&fp).and_then(|s| {
+            (s.beta.len() == problem.p_total() && s.grad.len() == problem.p_total())
+                .then(|| s.clone())
+        });
         let entry = Arc::new(DatasetEntry {
             fingerprint: fp,
             label: spec.label(),
-            problem: Arc::new(materialized.problem),
+            problem,
             transform: materialized.transform,
             intercept: materialized.intercept,
             packs: Arc::new(
                 PackCache::new(MAX_PACKS_PER_DATASET).with_max_bytes(MAX_PACK_BYTES_PER_DATASET),
             ),
             col_norms: Mutex::new(None),
-            strikes: AtomicU64::new(0),
+            strikes: AtomicU64::new(carried_strikes),
+            restored_seed: Mutex::new(restored),
             models: Mutex::new(HashMap::new()),
             points: Mutex::new(HashMap::new()),
         });
-        let mut map = self.datasets.lock().unwrap();
-        if !map.by_fp.contains_key(&fp) {
-            map.by_fp.insert(fp, entry);
-            map.order.push_back(fp);
-            while map.by_fp.len() > MAX_DATASETS {
-                if let Some(oldest) = map.order.pop_front() {
-                    map.by_fp.remove(&oldest);
-                    obsreg::REGISTRY_DATASET_EVICTIONS.inc();
-                } else {
-                    break;
+        let mut newly_interned = false;
+        let entry = {
+            let mut map = self.datasets.lock().unwrap();
+            if !map.by_fp.contains_key(&fp) {
+                map.by_fp.insert(fp, entry);
+                map.order.push_back(fp);
+                newly_interned = true;
+                while map.by_fp.len() > MAX_DATASETS {
+                    if let Some(oldest) = map.order.pop_front() {
+                        map.by_fp.remove(&oldest);
+                        obsreg::REGISTRY_DATASET_EVICTIONS.inc();
+                    } else {
+                        break;
+                    }
                 }
             }
+            Arc::clone(map.by_fp.get(&fp).expect("just interned"))
+        };
+        if newly_interned {
+            self.journal_dataset(spec);
         }
-        Ok(Arc::clone(map.by_fp.get(&fp).expect("just interned")))
+        Ok(entry)
     }
 
     /// Look up a fitted model, building (at most once, concurrently) via
@@ -374,6 +482,7 @@ impl Registry {
                     models.insert(key.to_string(), ModelSlot::Ready(Arc::clone(&model)));
                 }
                 gate.complete(Some(Arc::clone(&model)));
+                self.journal_seed(entry.fingerprint, key, &model.seed);
                 Ok(Fetched::Built(model))
             }
             Err(e) => {
@@ -400,6 +509,8 @@ impl Registry {
     pub fn record_panic(&self, entry: &DatasetEntry) -> bool {
         let strikes = entry.strikes.fetch_add(1, Ordering::SeqCst) + 1;
         if strikes < QUARANTINE_STRIKES {
+            self.strike_ledger.lock().unwrap().insert(entry.fingerprint, strikes);
+            self.journal_strikes(entry.fingerprint, strikes);
             return false;
         }
         {
@@ -413,8 +524,261 @@ impl Registry {
         }
         entry.models.lock().unwrap().clear();
         entry.points.lock().unwrap().clear();
+        // Quarantine clears the ledger — journaled as an explicit zero so
+        // a restart replays the clean slate, not the pre-quarantine count.
+        self.strike_ledger.lock().unwrap().remove(&entry.fingerprint);
+        self.journal_strikes(entry.fingerprint, 0);
         obsreg::REGISTRY_QUARANTINED.inc();
         true
+    }
+
+    // --- durable-state journal (DESIGN.md §13) ---------------------------
+
+    /// Append one JSON record, framed `[u32 len][u64 fnv1a(payload)][payload]`
+    /// and fsynced. No-op without a journal; IO errors log and drop the
+    /// record rather than failing the serving path that triggered it.
+    fn append_record(&self, record: &Json) {
+        let Some(journal) = &self.journal else { return };
+        let payload = record.to_string();
+        let bytes = payload.as_bytes();
+        let mut frame = Vec::with_capacity(bytes.len() + 12);
+        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&fnv1a(FNV_BASIS, bytes).to_le_bytes());
+        frame.extend_from_slice(bytes);
+        let mut f = journal.lock().unwrap();
+        match f.write_all(&frame).and_then(|_| f.sync_data()) {
+            Ok(()) => obsreg::JOURNAL_RECORDS.inc(),
+            Err(e) => eprintln!("registry: journal append failed: {e}"),
+        }
+    }
+
+    fn journal_dataset(&self, spec: &DatasetSpec) {
+        if self.journal.is_none() {
+            return;
+        }
+        match spec_to_json(spec) {
+            Some(sj) => self.append_record(&Json::obj(vec![
+                ("kind", Json::Str("dataset".to_string())),
+                ("spec", sj),
+            ])),
+            // Inline payloads can be arbitrarily large and the client
+            // re-sends them anyway; registration is intentionally not
+            // durable for them.
+            None => eprintln!(
+                "registry: inline dataset `{}` not journaled (re-register after restart)",
+                spec.label()
+            ),
+        }
+    }
+
+    fn journal_seed(&self, fp: u64, key: &str, seed: &PathSeed) {
+        if self.journal.is_none() {
+            return;
+        }
+        self.append_record(&Json::obj(vec![
+            ("kind", Json::Str("model".to_string())),
+            ("fp", Json::Str(fp_hex(fp))),
+            ("key", Json::Str(key.to_string())),
+            ("sigma", Json::Num(seed.sigma)),
+            ("beta", Json::nums(&seed.beta)),
+            ("grad", Json::nums(&seed.grad)),
+        ]));
+    }
+
+    fn journal_strikes(&self, fp: u64, count: u64) {
+        if self.journal.is_none() {
+            return;
+        }
+        self.append_record(&Json::obj(vec![
+            ("kind", Json::Str("strikes".to_string())),
+            ("fp", Json::Str(fp_hex(fp))),
+            ("count", Json::Num(count as f64)),
+        ]));
+    }
+
+    /// Replay `<state-dir>/registry.journal` into this (pre-journal)
+    /// registry. Torn tails stop the replay (everything before them is
+    /// kept); records with a bad digest or shape are skipped and counted
+    /// — a corrupt journal degrades to a partial restore, never a panic
+    /// and never trusted bytes. Returns the byte length of the valid
+    /// frame prefix, so the caller can cut a torn tail before appending.
+    fn replay_journal(&self, path: &Path) -> u64 {
+        let buf = match std::fs::read(path) {
+            Ok(buf) => buf,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return 0,
+            Err(e) => {
+                eprintln!("registry: cannot read journal {}: {e}", path.display());
+                return 0;
+            }
+        };
+        let mut off = 0usize;
+        while off < buf.len() {
+            if buf.len() - off < 12 {
+                eprintln!("registry: journal has a torn tail at byte {off}; ignoring it");
+                obsreg::CKPT_CORRUPT_SKIPS.inc();
+                return off as u64;
+            }
+            let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+            let digest = u64::from_le_bytes(buf[off + 4..off + 12].try_into().unwrap());
+            let start = off + 12;
+            let Some(end) = start.checked_add(len).filter(|&e| e <= buf.len()) else {
+                // A record that claims to extend past EOF is a torn final
+                // append (the only kind a crash can produce mid-frame).
+                eprintln!("registry: journal has a torn record at byte {off}; ignoring it");
+                obsreg::CKPT_CORRUPT_SKIPS.inc();
+                return off as u64;
+            };
+            let payload = &buf[start..end];
+            off = end;
+            if fnv1a(FNV_BASIS, payload) != digest {
+                // Damaged in place but the frame is intact: skip just it.
+                eprintln!("registry: journal record with bad digest skipped");
+                obsreg::CKPT_CORRUPT_SKIPS.inc();
+                continue;
+            }
+            let parsed = std::str::from_utf8(payload)
+                .ok()
+                .and_then(|s| Json::parse(s).ok());
+            let Some(rec) = parsed else {
+                eprintln!("registry: unparseable journal record skipped");
+                obsreg::CKPT_CORRUPT_SKIPS.inc();
+                continue;
+            };
+            if self.apply_journal_record(&rec) {
+                obsreg::JOURNAL_RESTORED.inc();
+            } else {
+                obsreg::CKPT_CORRUPT_SKIPS.inc();
+            }
+        }
+        buf.len() as u64
+    }
+
+    /// Apply one verified journal record; `false` means the record was
+    /// well-framed but semantically unusable (unknown kind, missing
+    /// fields, failed re-materialization) and was skipped.
+    fn apply_journal_record(&self, rec: &Json) -> bool {
+        match rec.field("kind").and_then(Json::as_str) {
+            Some("dataset") => {
+                let Some(sj) = rec.field("spec") else { return false };
+                let spec = match DatasetSpec::parse(sj) {
+                    Ok(spec) => spec,
+                    Err(e) => {
+                        eprintln!("registry: journaled dataset spec rejected: {e}");
+                        return false;
+                    }
+                };
+                match self.dataset(&spec) {
+                    Ok(_) => true,
+                    Err(e) => {
+                        // e.g. a file-backed dataset whose file changed or
+                        // vanished since it was journaled.
+                        eprintln!("registry: journaled dataset `{}` not restored: {e}", spec.label());
+                        false
+                    }
+                }
+            }
+            Some("strikes") => {
+                let Some(fp) = rec.field("fp").and_then(Json::as_str).and_then(parse_fp_hex)
+                else {
+                    return false;
+                };
+                let Some(count) = rec.field("count").and_then(Json::as_usize) else {
+                    return false;
+                };
+                let count = count as u64;
+                if count == 0 {
+                    self.strike_ledger.lock().unwrap().remove(&fp);
+                } else {
+                    self.strike_ledger.lock().unwrap().insert(fp, count);
+                }
+                // The dataset record replays before its strikes; patch an
+                // already-interned entry so the live count matches too.
+                if let Some(entry) = self.datasets.lock().unwrap().by_fp.get(&fp) {
+                    entry.strikes.store(count, Ordering::SeqCst);
+                }
+                true
+            }
+            Some("model") => {
+                let Some(fp) = rec.field("fp").and_then(Json::as_str).and_then(parse_fp_hex)
+                else {
+                    return false;
+                };
+                let Some(sigma) = rec.field("sigma").and_then(Json::as_f64) else { return false };
+                let (Some(beta), Some(grad)) =
+                    (rec.field("beta").and_then(json_f64s), rec.field("grad").and_then(json_f64s))
+                else {
+                    return false;
+                };
+                if beta.is_empty() || beta.len() != grad.len() {
+                    return false;
+                }
+                let seed = PathSeed { sigma, beta, grad };
+                if let Some(entry) = self.datasets.lock().unwrap().by_fp.get(&fp) {
+                    if seed.beta.len() == entry.problem.p_total() {
+                        *entry.restored_seed.lock().unwrap() = Some(seed.clone());
+                    }
+                }
+                // Keep it keyed too, for an entry interned after replay
+                // (or re-interned post-eviction). Last record wins: it is
+                // the most recent successful build.
+                self.restored_seeds.lock().unwrap().insert(fp, seed);
+                true
+            }
+            _ => {
+                eprintln!("registry: journal record with unknown kind skipped");
+                false
+            }
+        }
+    }
+}
+
+/// Fingerprints are 64-bit and routinely exceed 2^53, so they journal as
+/// hex strings — `Json::Num(f64)` would silently round them.
+fn fp_hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+fn parse_fp_hex(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn json_f64s(j: &Json) -> Option<Vec<f64>> {
+    let items = j.items();
+    let vals: Vec<f64> = items.iter().filter_map(Json::as_f64).collect();
+    (vals.len() == items.len()).then_some(vals)
+}
+
+/// Serialize a spec for the journal in the exact shape
+/// [`DatasetSpec::parse`] reads back. Inline specs return `None`: their
+/// payload is client-owned and unbounded, so they are deliberately not
+/// durable.
+fn spec_to_json(spec: &DatasetSpec) -> Option<Json> {
+    match spec {
+        DatasetSpec::Synth { n, p, k, rho, design, family, classes, seed } => {
+            Some(Json::obj(vec![
+                ("kind", Json::Str("synth".to_string())),
+                ("n", Json::Num(*n as f64)),
+                ("p", Json::Num(*p as f64)),
+                ("k", Json::Num(*k as f64)),
+                ("rho", Json::Num(*rho)),
+                ("design", Json::Str(design.clone())),
+                ("family", Json::Str(family.clone())),
+                ("classes", Json::Num(*classes as f64)),
+                ("seed", Json::Num(*seed as f64)),
+            ]))
+        }
+        DatasetSpec::Real { name } => Some(Json::obj(vec![
+            ("kind", Json::Str("real".to_string())),
+            ("name", Json::Str(name.clone())),
+        ])),
+        DatasetSpec::File { path, family, classes, standardize } => Some(Json::obj(vec![
+            ("kind", Json::Str("file".to_string())),
+            ("path", Json::Str(path.clone())),
+            ("family", Json::Str(family.clone())),
+            ("classes", Json::Num(*classes as f64)),
+            ("standardize", Json::Bool(*standardize)),
+        ])),
+        DatasetSpec::Inline { .. } => None,
     }
 }
 
@@ -614,5 +978,152 @@ mod tests {
         reg.model(&entry, "a", || Ok(build_model(&entry))).unwrap();
         let seed = entry.any_ready_seed().unwrap();
         assert_eq!(seed.beta.len(), entry.problem.p_total());
+    }
+
+    /// Fresh per-test state dir (process id + tag keeps parallel test
+    /// binaries and parallel tests apart).
+    fn state_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("slope-registry-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn journal_restores_datasets_and_seeds_across_restart() {
+        let dir = state_dir("restore");
+        let expected_p = {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            let entry = reg.dataset(&spec(101)).unwrap();
+            reg.model(&entry, "k1", || Ok(build_model(&entry))).unwrap();
+            entry.problem.p_total()
+        }; // "server" exits; only the journal survives
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        assert_eq!(reg2.counts().0, 1, "dataset must be interned from the journal on boot");
+        let entry = reg2.dataset(&spec(101)).unwrap();
+        let seed = entry.any_ready_seed().expect("journaled seed must warm-start the restart");
+        assert_eq!(seed.beta.len(), expected_p);
+        assert!(seed.beta.iter().chain(&seed.grad).all(|v| v.is_finite()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journaled_seed_round_trips_bitwise() {
+        let dir = state_dir("bitwise");
+        let original = {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            let entry = reg.dataset(&spec(102)).unwrap();
+            let built = reg.model(&entry, "k", || Ok(build_model(&entry))).unwrap();
+            built.model().seed.clone()
+        };
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        let entry = reg2.dataset(&spec(102)).unwrap();
+        let restored = entry.any_ready_seed().unwrap();
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(restored.sigma.to_bits(), original.sigma.to_bits());
+        assert_eq!(bits(&restored.beta), bits(&original.beta));
+        assert_eq!(bits(&restored.grad), bits(&original.grad));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn strikes_survive_restart_but_quarantine_clears_them() {
+        let dir = state_dir("strikes");
+        {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            let entry = reg.dataset(&spec(103)).unwrap();
+            assert!(!reg.record_panic(&entry));
+            assert!(!reg.record_panic(&entry));
+        }
+        // Restart: the two strikes must still be charged — a crash-looping
+        // dataset cannot launder its count by bouncing the server.
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        let entry = reg2.dataset(&spec(103)).unwrap();
+        assert_eq!(entry.strikes.load(Ordering::SeqCst), 2);
+        // One more panic quarantines...
+        assert!(reg2.record_panic(&entry));
+        drop(reg2);
+        // ...and the *next* restart replays the explicit zero: the spec
+        // re-interns as a deliberate fresh start.
+        let reg3 = Registry::with_state_dir(true, Some(&dir));
+        let fresh = reg3.dataset(&spec(103)).unwrap();
+        assert_eq!(fresh.strikes.load(Ordering::SeqCst), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_does_not_launder_strikes() {
+        // In-memory ledger alone must carry strikes across FIFO eviction.
+        let reg = Registry::new(true);
+        let victim = reg.dataset(&spec(200)).unwrap();
+        assert!(!reg.record_panic(&victim));
+        for seed in 201..(201 + MAX_DATASETS as u64) {
+            reg.dataset(&spec(seed)).unwrap(); // push the victim out
+        }
+        let again = reg.dataset(&spec(200)).unwrap();
+        assert!(!Arc::ptr_eq(&victim, &again), "victim must have been evicted");
+        assert_eq!(again.strikes.load(Ordering::SeqCst), 1, "strike must survive eviction");
+    }
+
+    #[test]
+    fn corrupt_journal_records_are_skipped_never_trusted() {
+        let dir = state_dir("corrupt");
+        {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            reg.dataset(&spec(104)).unwrap();
+            reg.dataset(&spec(105)).unwrap();
+        }
+        let path = dir.join("registry.journal");
+        let mut buf = std::fs::read(&path).unwrap();
+        // Flip one payload bit inside the first record: its digest check
+        // must fail and only that record be dropped.
+        buf[14] ^= 0x01;
+        // Torn tail: half a frame header from an append cut off mid-crash.
+        buf.extend_from_slice(&[0xAA; 5]);
+        std::fs::write(&path, &buf).unwrap();
+        let skips_before = obsreg::CKPT_CORRUPT_SKIPS.get();
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        assert_eq!(reg2.counts().0, 1, "the intact record must restore, the corrupt one skip");
+        assert!(
+            obsreg::CKPT_CORRUPT_SKIPS.get() >= skips_before + 2,
+            "bit flip and torn tail must both be counted"
+        );
+        // The surviving journal handle still appends: new interns after a
+        // partially-corrupt replay remain durable.
+        reg2.dataset(&spec(106)).unwrap();
+        drop(reg2);
+        let reg3 = Registry::with_state_dir(true, Some(&dir));
+        assert_eq!(reg3.counts().0, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn inline_specs_are_not_journaled() {
+        let dir = state_dir("inline");
+        {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            let inline = DatasetSpec::Inline {
+                x: vec![vec![1.0, 0.0], vec![0.0, 1.0], vec![1.0, 1.0]],
+                y: vec![1.0, 2.0, 3.0],
+                family: "gaussian".to_string(),
+                classes: 3,
+                standardize: false,
+            };
+            reg.dataset(&inline).unwrap();
+            reg.dataset(&spec(107)).unwrap();
+            assert_eq!(reg.counts().0, 2);
+        }
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        // Only the synth spec survives: inline data is client-owned.
+        assert_eq!(reg2.counts().0, 1);
+        assert_eq!(reg2.dataset(&spec(107)).unwrap().fingerprint, spec(107).fingerprint());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn no_state_dir_means_no_journal_files() {
+        let reg = Registry::new(true);
+        assert!(reg.journal.is_none());
+        reg.dataset(&spec(108)).unwrap(); // must not touch the filesystem
     }
 }

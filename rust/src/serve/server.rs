@@ -60,6 +60,11 @@ pub struct ServerConfig {
     /// `overload` error and a `retry_after_ms` hint. 0 (the default)
     /// keeps pure blocking backpressure.
     pub shed_queue: usize,
+    /// Opt-in durable state (DESIGN.md §13): when set, the registry
+    /// journals dataset registrations, warm-start seeds and quarantine
+    /// strikes to `<dir>/registry.journal` and restores them on boot.
+    /// `None` (the default) keeps the registry purely in-memory.
+    pub state_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +78,7 @@ impl Default for ServerConfig {
             max_line_bytes: 16 << 20,
             deadline_ms: 0,
             shed_queue: 0,
+            state_dir: None,
         }
     }
 }
@@ -113,7 +119,7 @@ impl Server {
             sched.set_shed_limit(Some(cfg.shed_queue));
         }
         Server {
-            registry: Registry::new(cfg.cache),
+            registry: Registry::with_state_dir(cfg.cache, cfg.state_dir.as_deref()),
             sched,
             metrics: Metrics::new(),
             shutdown: AtomicBool::new(false),
@@ -912,6 +918,33 @@ mod tests {
             srv.metrics.counters.cache_hits.load(Ordering::Relaxed),
             1
         );
+    }
+
+    #[test]
+    fn restart_with_state_dir_restores_datasets() {
+        let dir =
+            std::env::temp_dir().join(format!("slope-server-state-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = || ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            state_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        {
+            let srv = Server::new(cfg());
+            parse_ok(&srv.handle_line(&fit_path_line(1, 77)));
+        } // "crash": only the journal survives the first server
+        let srv2 = Server::new(cfg());
+        // The dataset is interned on boot, no re-registration needed...
+        let stats = parse_ok(&srv2.handle_line(r#"{"id": 2, "op": "stats"}"#));
+        assert_eq!(stats.field("datasets").unwrap().as_usize(), Some(1));
+        // ...and a fit against it works immediately (fresh model cache,
+        // warm-started from the journaled seed).
+        let refit = parse_ok(&srv2.handle_line(&fit_path_line(3, 77)));
+        assert_eq!(refit.field("source").unwrap().as_str(), Some("fit"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

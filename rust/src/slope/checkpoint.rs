@@ -1,0 +1,843 @@
+//! Durable path-fit state: crash-safe snapshots of regularization-path
+//! progress (DESIGN.md §13).
+//!
+//! A [`Snapshot`] captures everything the σ-loop of
+//! [`crate::slope::path::fit_path_seeded`] holds at a step boundary —
+//! solution, gradient, linear predictor, working residual, the per-step
+//! records accumulated so far, and (for the gap-driven strategies) the
+//! sphere-test reference state — so a killed fit can re-enter the loop at
+//! the next σ index and continue **bitwise identically** to an
+//! uninterrupted run. The contract has three layers:
+//!
+//! 1. **Atomic writes.** A snapshot is serialized to `<path>.tmp`,
+//!    fsynced, and renamed over `<path>`; the previous good snapshot is
+//!    kept at `<path>.prev` first. A crash mid-write can therefore tear
+//!    only the temp file — `<path>` always holds a complete snapshot,
+//!    and `<path>.prev` one more behind it.
+//! 2. **Integrity.** The payload is length-prefixed and carries a
+//!    trailing FNV-1a 64 digest; magic and version lead the file. A
+//!    short file, a flipped bit, or a snapshot from a future format
+//!    version each decode to a typed [`CheckpointError`] — never a
+//!    panic, never a silently wrong resume.
+//! 3. **Identity.** The snapshot embeds the dataset content fingerprint
+//!    from ingest (or the synthetic spec's canonical fingerprint, which
+//!    includes the RNG seed), a problem fingerprint over the response
+//!    bits and shapes (covering the standardized `ColumnStats`
+//!    coordinates the response was produced in), and a grid fingerprint
+//!    over the λ sequence and σ grid. Resume validates the whole chain;
+//!    a checkpoint can never be replayed against the wrong data, the
+//!    wrong grid, or the wrong strategy.
+//!
+//! Floating-point payloads are encoded as IEEE-754 bit patterns
+//! (`to_bits`), not decimal text: the resume contract is `to_bits`
+//! equality, so the serialization must be exact by construction.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::ingest::{fnv1a, FNV_BASIS};
+use crate::obs::registry as obsreg;
+use crate::slope::family::Problem;
+
+/// Leading magic bytes of every checkpoint file.
+pub const MAGIC: [u8; 8] = *b"SLPCKPT1";
+
+/// Current snapshot format version. Bump on any layout change; readers
+/// reject anything newer with [`CheckpointError::FutureVersion`].
+pub const VERSION: u32 = 1;
+
+/// A typed checkpoint failure. Every corrupt, torn, stale or
+/// future-format snapshot maps to one of these — the resume path
+/// surfaces them and falls back (previous snapshot, then cold start)
+/// instead of trusting bad state.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying filesystem failure.
+    Io(std::io::Error),
+    /// File shorter than its own framing claims (torn write).
+    Truncated {
+        /// Bytes the framing requires.
+        expected: u64,
+        /// Bytes actually present.
+        found: u64,
+    },
+    /// Leading magic bytes are not a checkpoint's.
+    BadMagic,
+    /// Snapshot written by a newer format version.
+    FutureVersion {
+        /// Version found in the file.
+        found: u32,
+        /// Newest version this build reads.
+        supported: u32,
+    },
+    /// Payload digest mismatch (bit rot or a torn/overwritten payload).
+    Corrupt {
+        /// Digest recorded in the file.
+        expected: u64,
+        /// Digest of the payload as read.
+        found: u64,
+    },
+    /// Snapshot was taken against different data.
+    DatasetMismatch {
+        /// Fingerprint of the data being resumed on.
+        expected: u64,
+        /// Fingerprint recorded in the snapshot.
+        found: u64,
+    },
+    /// Snapshot is internally valid but does not match the fit being
+    /// resumed (grid, strategy, problem shape).
+    Incompatible(String),
+}
+
+impl CheckpointError {
+    /// Stable short name per variant, for logs and test assertions.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CheckpointError::Io(_) => "io",
+            CheckpointError::Truncated { .. } => "truncated",
+            CheckpointError::BadMagic => "bad_magic",
+            CheckpointError::FutureVersion { .. } => "future_version",
+            CheckpointError::Corrupt { .. } => "corrupt",
+            CheckpointError::DatasetMismatch { .. } => "dataset_mismatch",
+            CheckpointError::Incompatible(_) => "incompatible",
+        }
+    }
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint I/O error: {e}"),
+            CheckpointError::Truncated { expected, found } => {
+                write!(f, "checkpoint truncated: need {expected} bytes, found {found}")
+            }
+            CheckpointError::BadMagic => write!(f, "not a checkpoint file (bad magic)"),
+            CheckpointError::FutureVersion { found, supported } => write!(
+                f,
+                "checkpoint format v{found} is newer than supported v{supported}"
+            ),
+            CheckpointError::Corrupt { expected, found } => write!(
+                f,
+                "checkpoint payload corrupt: digest {found:016x} != recorded {expected:016x}"
+            ),
+            CheckpointError::DatasetMismatch { expected, found } => write!(
+                f,
+                "checkpoint belongs to dataset {found:016x}, not {expected:016x}"
+            ),
+            CheckpointError::Incompatible(msg) => write!(f, "checkpoint incompatible: {msg}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// One recorded path step, mirroring
+/// [`crate::slope::path::StepInfo`] with owned/encodable field types
+/// (the `&'static str` strategy name travels as a string and is mapped
+/// back on restore).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepRec {
+    /// σ at this step.
+    pub sigma: f64,
+    /// Active coefficients.
+    pub n_active: u64,
+    /// Raw strong-rule screened-set size.
+    pub n_screened_rule: u64,
+    /// Final fitted set size.
+    pub n_fitted: u64,
+    /// Gap-safe screened-set size, if recorded.
+    pub n_safe: Option<u64>,
+    /// KKT violations.
+    pub violations: u64,
+    /// Solve/refit rounds.
+    pub refits: u64,
+    /// Inner FISTA iterations.
+    pub solver_iterations: u64,
+    /// Model deviance.
+    pub deviance: f64,
+    /// Fraction of null deviance explained.
+    pub dev_ratio: f64,
+    /// Seconds in screening.
+    pub t_screen: f64,
+    /// Seconds in the reduced solver.
+    pub t_solve: f64,
+    /// Seconds in full-gradient + KKT checks.
+    pub t_kkt: f64,
+    /// Whether every inner solve certified.
+    pub solver_converged: bool,
+    /// Full-design-equivalent gradient sweeps.
+    pub full_grad_sweeps: f64,
+    /// Safe-universe size (gap-driven only).
+    pub n_universe: Option<u64>,
+    /// Certified duality gap (gap-driven only).
+    pub gap: Option<f64>,
+    /// Ladder rescue strategy name, if the step degraded.
+    pub degraded_to: Option<String>,
+}
+
+/// Cross-step dual state of the gap-driven strategies at the snapshot
+/// point: the sphere reference (working residual + cached gradient
+/// magnitudes at the last exact full sweep), the current
+/// per-coefficient magnitude bounds, the loss there, and whether the
+/// caller's gradient buffer was exact over every coefficient.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GapSnap {
+    /// Working residual at the sphere reference (length `n·m`).
+    pub ref_h: Vec<f64>,
+    /// `|x_jᵀ h_ref|` per coefficient at the reference (length `p·m`).
+    pub ref_gmag: Vec<f64>,
+    /// Current gradient-magnitude upper bounds (length `p·m`).
+    pub grad_bound: Vec<f64>,
+    /// `f(β)` at the snapshot point.
+    pub loss: f64,
+    /// Whether the gradient buffer was exact over every coefficient.
+    pub grad_is_exact: bool,
+}
+
+/// Full path-fit state at one σ-step boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Dataset content fingerprint (ingest / canonical spec).
+    pub dataset_fp: u64,
+    /// Problem fingerprint ([`problem_fingerprint`]).
+    pub problem_fp: u64,
+    /// Grid fingerprint ([`grid_fingerprint`]).
+    pub grid_fp: u64,
+    /// Strategy name the fit ran under.
+    pub strategy: String,
+    /// σ index the resumed loop enters at (= completed steps).
+    pub next_step: u64,
+    /// Total coefficients `p·m`.
+    pub pt: u64,
+    /// Residual length `n·m`.
+    pub nm: u64,
+    /// Dense solution at the boundary.
+    pub beta: Vec<f64>,
+    /// Gradient buffer as the loop held it (exact for the heuristic
+    /// strategies; exact-on-universe for gap-driven ones).
+    pub grad: Vec<f64>,
+    /// Linear predictor as the last solve left it.
+    pub eta: Vec<f64>,
+    /// Working residual at `eta`.
+    pub h: Vec<f64>,
+    /// Violations accumulated so far.
+    pub total_violations: u64,
+    /// Gradient sweeps accumulated so far.
+    pub total_grad_sweeps: f64,
+    /// σ values visited (including step 0).
+    pub sigmas: Vec<f64>,
+    /// Sparse per-step solutions.
+    pub betas: Vec<Vec<(u64, f64)>>,
+    /// Per-step records (parallel to `sigmas`).
+    pub steps: Vec<StepRec>,
+    /// Gap-driven dual state, present iff the strategy is gap-driven.
+    pub gap: Option<GapSnap>,
+}
+
+/// Fingerprint of the problem a fit runs on: family, shapes, and the
+/// response bits. The response is produced in the standardized column
+/// coordinates ingest recorded, so this pins the `ColumnStats` identity
+/// of the fit alongside the dataset content fingerprint.
+pub fn problem_fingerprint(prob: &Problem) -> u64 {
+    let mut fp = fnv1a(FNV_BASIS, prob.family.name().as_bytes());
+    fp = fnv1a(fp, &(prob.n() as u64).to_le_bytes());
+    fp = fnv1a(fp, &(prob.p() as u64).to_le_bytes());
+    fp = fnv1a(fp, &(prob.family.n_classes() as u64).to_le_bytes());
+    for &v in &prob.y {
+        fp = fnv1a(fp, &v.to_bits().to_le_bytes());
+    }
+    fp
+}
+
+/// Fingerprint of the penalty grid: λ sequence bits and the σ grid bits.
+/// The grid is recomputed deterministically from the β = 0 gradient on
+/// resume; matching fingerprints prove the recomputation landed on the
+/// same grid the snapshot was taken on.
+pub fn grid_fingerprint(lambda_base: &[f64], sigmas: &[f64]) -> u64 {
+    let mut fp = fnv1a(FNV_BASIS, &(lambda_base.len() as u64).to_le_bytes());
+    for &l in lambda_base {
+        fp = fnv1a(fp, &l.to_bits().to_le_bytes());
+    }
+    fp = fnv1a(fp, &(sigmas.len() as u64).to_le_bytes());
+    for &s in sigmas {
+        fp = fnv1a(fp, &s.to_bits().to_le_bytes());
+    }
+    fp
+}
+
+// ---------------------------------------------------------------------
+// binary encoding
+// ---------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_str(&mut self, v: Option<&str>) {
+        match v {
+            Some(s) => {
+                self.u8(1);
+                self.str(s);
+            }
+            None => self.u8(0),
+        }
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.pos + n > self.b.len() {
+            return Err(CheckpointError::Truncated {
+                expected: (self.pos + n) as u64,
+                found: self.b.len() as u64,
+            });
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().expect("8-byte slice")))
+    }
+    fn f64(&mut self) -> Result<f64, CheckpointError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn bool(&mut self) -> Result<bool, CheckpointError> {
+        Ok(self.u8()? != 0)
+    }
+    /// Bounded length read: a corrupted length field must surface as
+    /// `Truncated`, not as a capacity panic on a garbage allocation.
+    fn len(&mut self) -> Result<usize, CheckpointError> {
+        let n = self.u64()?;
+        let remaining = (self.b.len() - self.pos) as u64;
+        if n > remaining {
+            return Err(CheckpointError::Truncated {
+                expected: self.pos as u64 + n,
+                found: self.b.len() as u64,
+            });
+        }
+        Ok(n as usize)
+    }
+    fn str(&mut self) -> Result<String, CheckpointError> {
+        let n = self.len()?;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec())
+            .map_err(|_| CheckpointError::Incompatible("non-UTF8 string field".to_string()))
+    }
+    fn vec_f64(&mut self) -> Result<Vec<f64>, CheckpointError> {
+        let n = self.len()?;
+        let mut v = Vec::with_capacity(n.min(self.b.len() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>, CheckpointError> {
+        Ok(if self.u8()? != 0 { Some(self.u64()?) } else { None })
+    }
+    fn opt_f64(&mut self) -> Result<Option<f64>, CheckpointError> {
+        Ok(if self.u8()? != 0 { Some(self.f64()?) } else { None })
+    }
+    fn opt_str(&mut self) -> Result<Option<String>, CheckpointError> {
+        Ok(if self.u8()? != 0 { Some(self.str()?) } else { None })
+    }
+}
+
+impl Snapshot {
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.dataset_fp);
+        e.u64(self.problem_fp);
+        e.u64(self.grid_fp);
+        e.str(&self.strategy);
+        e.u64(self.next_step);
+        e.u64(self.pt);
+        e.u64(self.nm);
+        e.vec_f64(&self.beta);
+        e.vec_f64(&self.grad);
+        e.vec_f64(&self.eta);
+        e.vec_f64(&self.h);
+        e.u64(self.total_violations);
+        e.f64(self.total_grad_sweeps);
+        e.vec_f64(&self.sigmas);
+        e.u64(self.betas.len() as u64);
+        for step in &self.betas {
+            e.u64(step.len() as u64);
+            for &(i, v) in step {
+                e.u64(i);
+                e.f64(v);
+            }
+        }
+        e.u64(self.steps.len() as u64);
+        for s in &self.steps {
+            e.f64(s.sigma);
+            e.u64(s.n_active);
+            e.u64(s.n_screened_rule);
+            e.u64(s.n_fitted);
+            e.opt_u64(s.n_safe);
+            e.u64(s.violations);
+            e.u64(s.refits);
+            e.u64(s.solver_iterations);
+            e.f64(s.deviance);
+            e.f64(s.dev_ratio);
+            e.f64(s.t_screen);
+            e.f64(s.t_solve);
+            e.f64(s.t_kkt);
+            e.bool(s.solver_converged);
+            e.f64(s.full_grad_sweeps);
+            e.opt_u64(s.n_universe);
+            e.opt_f64(s.gap);
+            e.opt_str(s.degraded_to.as_deref());
+        }
+        match &self.gap {
+            Some(g) => {
+                e.u8(1);
+                e.vec_f64(&g.ref_h);
+                e.vec_f64(&g.ref_gmag);
+                e.vec_f64(&g.grad_bound);
+                e.f64(g.loss);
+                e.bool(g.grad_is_exact);
+            }
+            None => e.u8(0),
+        }
+        e.buf
+    }
+
+    fn decode_payload(payload: &[u8]) -> Result<Snapshot, CheckpointError> {
+        let mut d = Dec::new(payload);
+        let dataset_fp = d.u64()?;
+        let problem_fp = d.u64()?;
+        let grid_fp = d.u64()?;
+        let strategy = d.str()?;
+        let next_step = d.u64()?;
+        let pt = d.u64()?;
+        let nm = d.u64()?;
+        let beta = d.vec_f64()?;
+        let grad = d.vec_f64()?;
+        let eta = d.vec_f64()?;
+        let h = d.vec_f64()?;
+        let total_violations = d.u64()?;
+        let total_grad_sweeps = d.f64()?;
+        let sigmas = d.vec_f64()?;
+        let n_betas = d.len()?;
+        let mut betas = Vec::with_capacity(n_betas.min(payload.len() + 1));
+        for _ in 0..n_betas {
+            let n = d.len()?;
+            let mut step = Vec::with_capacity(n.min(payload.len() / 16 + 1));
+            for _ in 0..n {
+                let i = d.u64()?;
+                let v = d.f64()?;
+                step.push((i, v));
+            }
+            betas.push(step);
+        }
+        let n_steps = d.len()?;
+        let mut steps = Vec::with_capacity(n_steps.min(payload.len() + 1));
+        for _ in 0..n_steps {
+            steps.push(StepRec {
+                sigma: d.f64()?,
+                n_active: d.u64()?,
+                n_screened_rule: d.u64()?,
+                n_fitted: d.u64()?,
+                n_safe: d.opt_u64()?,
+                violations: d.u64()?,
+                refits: d.u64()?,
+                solver_iterations: d.u64()?,
+                deviance: d.f64()?,
+                dev_ratio: d.f64()?,
+                t_screen: d.f64()?,
+                t_solve: d.f64()?,
+                t_kkt: d.f64()?,
+                solver_converged: d.bool()?,
+                full_grad_sweeps: d.f64()?,
+                n_universe: d.opt_u64()?,
+                gap: d.opt_f64()?,
+                degraded_to: d.opt_str()?,
+            });
+        }
+        let gap = if d.u8()? != 0 {
+            Some(GapSnap {
+                ref_h: d.vec_f64()?,
+                ref_gmag: d.vec_f64()?,
+                grad_bound: d.vec_f64()?,
+                loss: d.f64()?,
+                grad_is_exact: d.bool()?,
+            })
+        } else {
+            None
+        };
+        Ok(Snapshot {
+            dataset_fp,
+            problem_fp,
+            grid_fp,
+            strategy,
+            next_step,
+            pt,
+            nm,
+            beta,
+            grad,
+            eta,
+            h,
+            total_violations,
+            total_grad_sweeps,
+            sigmas,
+            betas,
+            steps,
+            gap,
+        })
+    }
+
+    /// Serialize to the on-disk framing: magic, version, payload length,
+    /// payload, trailing FNV-1a digest.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.encode_payload();
+        let mut out = Vec::with_capacity(payload.len() + 32);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let digest = fnv1a(FNV_BASIS, &payload);
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&digest.to_le_bytes());
+        out
+    }
+
+    /// Decode from the on-disk framing, verifying magic, version, length
+    /// and digest. Every malformation is a typed [`CheckpointError`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Snapshot, CheckpointError> {
+        if bytes.len() < MAGIC.len() + 4 + 8 + 8 {
+            return Err(CheckpointError::Truncated {
+                expected: (MAGIC.len() + 4 + 8 + 8) as u64,
+                found: bytes.len() as u64,
+            });
+        }
+        if bytes[..8] != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+        if version > VERSION {
+            return Err(CheckpointError::FutureVersion { found: version, supported: VERSION });
+        }
+        let plen = u64::from_le_bytes(bytes[12..20].try_into().expect("8 bytes"));
+        let need = 20u64 + plen + 8;
+        if (bytes.len() as u64) < need {
+            return Err(CheckpointError::Truncated { expected: need, found: bytes.len() as u64 });
+        }
+        let payload = &bytes[20..20 + plen as usize];
+        let recorded =
+            u64::from_le_bytes(bytes[20 + plen as usize..28 + plen as usize].try_into().expect("8"));
+        let digest = fnv1a(FNV_BASIS, payload);
+        if digest != recorded {
+            return Err(CheckpointError::Corrupt { expected: recorded, found: digest });
+        }
+        Snapshot::decode_payload(payload)
+    }
+}
+
+/// The rotated previous-snapshot path: `<path>.prev`.
+pub fn prev_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".prev");
+    PathBuf::from(s)
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_os_string();
+    s.push(".tmp");
+    PathBuf::from(s)
+}
+
+/// Write `snap` atomically: serialize to `<path>.tmp`, fsync, rotate the
+/// current snapshot to `<path>.prev`, rename the temp over `<path>`, and
+/// (on Unix) fsync the directory so the rename itself is durable.
+/// Returns the byte count written. Bumps the `checkpoint_writes` /
+/// `checkpoint_bytes` counters.
+pub fn write_atomic(path: &Path, snap: &Snapshot) -> Result<u64, CheckpointError> {
+    let bytes = snap.to_bytes();
+    let tmp = tmp_path(path);
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    if path.exists() {
+        // Keep one good snapshot behind the new one: a torn *rename* (or
+        // a fault-injected truncation of the fresh file) falls back here.
+        fs::rename(path, prev_path(path))?;
+    }
+    fs::rename(&tmp, path)?;
+    #[cfg(unix)]
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    obsreg::CKPT_WRITES.inc();
+    obsreg::CKPT_BYTES.add(bytes.len() as u64);
+    Ok(bytes.len() as u64)
+}
+
+/// Load and verify the snapshot at `path`.
+pub fn load(path: &Path) -> Result<Snapshot, CheckpointError> {
+    let bytes = fs::read(path)?;
+    Snapshot::from_bytes(&bytes)
+}
+
+/// Load `path`, falling back to `<path>.prev` when the primary snapshot
+/// is missing or fails verification. A failed primary is logged and
+/// counted (`checkpoint_corrupt_skips`) unless it simply does not exist.
+/// Returns the snapshot plus whether it came from the fallback; when
+/// both fail, the *primary's* error is returned (the more recent state
+/// is the one the caller asked about).
+pub fn load_with_fallback(path: &Path) -> Result<(Snapshot, bool), CheckpointError> {
+    match load(path) {
+        Ok(snap) => Ok((snap, false)),
+        Err(primary) => {
+            if !matches!(&primary, CheckpointError::Io(e) if e.kind() == std::io::ErrorKind::NotFound)
+            {
+                obsreg::CKPT_CORRUPT_SKIPS.inc();
+                eprintln!(
+                    "checkpoint: {} unusable ({primary}); trying previous snapshot",
+                    path.display()
+                );
+            }
+            match load(&prev_path(path)) {
+                Ok(snap) => Ok((snap, true)),
+                Err(_) => Err(primary),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Design, Mat};
+    use crate::slope::family::Family;
+
+    fn sample_snapshot(gap: bool) -> Snapshot {
+        Snapshot {
+            dataset_fp: 0xfeed_beef_dead_cafe,
+            problem_fp: 0x1234_5678_9abc_def0,
+            grid_fp: 42,
+            strategy: "hybrid".to_string(),
+            next_step: 3,
+            pt: 4,
+            nm: 2,
+            beta: vec![0.0, -1.5, 3.25, f64::MIN_POSITIVE],
+            grad: vec![1.0, 2.0, -0.0, 4.0],
+            eta: vec![0.5, -0.5],
+            h: vec![0.25, -0.25],
+            total_violations: 7,
+            total_grad_sweeps: 5.5,
+            sigmas: vec![1.0, 0.9, 0.8],
+            betas: vec![Vec::new(), vec![(1, -1.5)], vec![(1, -1.5), (2, 3.25)]],
+            steps: vec![
+                StepRec {
+                    sigma: 1.0,
+                    n_active: 0,
+                    n_screened_rule: 0,
+                    n_fitted: 0,
+                    n_safe: None,
+                    violations: 0,
+                    refits: 0,
+                    solver_iterations: 0,
+                    deviance: 2.0,
+                    dev_ratio: 0.0,
+                    t_screen: 0.0,
+                    t_solve: 0.0,
+                    t_kkt: 0.0,
+                    solver_converged: true,
+                    full_grad_sweeps: 1.0,
+                    n_universe: None,
+                    gap: None,
+                    degraded_to: None,
+                },
+                StepRec {
+                    sigma: 0.9,
+                    n_active: 1,
+                    n_screened_rule: 2,
+                    n_fitted: 2,
+                    n_safe: Some(3),
+                    violations: 1,
+                    refits: 2,
+                    solver_iterations: 40,
+                    deviance: 1.5,
+                    dev_ratio: 0.25,
+                    t_screen: 1e-4,
+                    t_solve: 2e-3,
+                    t_kkt: 3e-4,
+                    solver_converged: true,
+                    full_grad_sweeps: 1.5,
+                    n_universe: Some(4),
+                    gap: Some(1e-7),
+                    degraded_to: Some("strong".to_string()),
+                },
+            ],
+            gap: gap.then(|| GapSnap {
+                ref_h: vec![0.25, -0.25],
+                ref_gmag: vec![1.0, 2.0, 0.0, 4.0],
+                grad_bound: vec![1.0, 2.5, 0.5, 4.0],
+                loss: 0.75,
+                grad_is_exact: false,
+            }),
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_exact() {
+        for gap in [false, true] {
+            let snap = sample_snapshot(gap);
+            let back = Snapshot::from_bytes(&snap.to_bytes()).expect("roundtrip");
+            assert_eq!(back, snap);
+            // -0.0 and subnormals survive as bits, not just values
+            assert_eq!(back.grad[2].to_bits(), (-0.0f64).to_bits());
+            assert_eq!(back.beta[3].to_bits(), f64::MIN_POSITIVE.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_file_is_typed_never_a_panic() {
+        let bytes = sample_snapshot(true).to_bytes();
+        // every prefix length must yield a typed error, not a panic
+        for cut in [0, 4, 11, 19, 20, bytes.len() / 2, bytes.len() - 1] {
+            let err = Snapshot::from_bytes(&bytes[..cut]).expect_err("truncated must fail");
+            assert!(
+                matches!(err, CheckpointError::Truncated { .. }),
+                "cut at {cut}: got {}",
+                err.kind()
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flip_in_payload_is_corrupt() {
+        let mut bytes = sample_snapshot(false).to_bytes();
+        let mid = 20 + (bytes.len() - 28) / 2;
+        bytes[mid] ^= 0x40;
+        let err = Snapshot::from_bytes(&bytes).expect_err("flip must fail");
+        assert_eq!(err.kind(), "corrupt");
+    }
+
+    #[test]
+    fn future_version_and_bad_magic_are_typed() {
+        let mut bytes = sample_snapshot(false).to_bytes();
+        bytes[8..12].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        assert_eq!(Snapshot::from_bytes(&bytes).unwrap_err().kind(), "future_version");
+        let mut bytes = sample_snapshot(false).to_bytes();
+        bytes[0] = b'X';
+        assert_eq!(Snapshot::from_bytes(&bytes).unwrap_err().kind(), "bad_magic");
+    }
+
+    #[test]
+    fn corrupted_length_field_cannot_over_allocate() {
+        let mut bytes = sample_snapshot(false).to_bytes();
+        // vec length fields live inside the payload; blow one up to a
+        // huge value and fix the digest so the framing passes — decode
+        // must fail bounded (Truncated), not attempt a 2^60 allocation.
+        let beta_len_off = 20 + 8 + 8 + 8 + (8 + "hybrid".len()) + 8 + 8 + 8;
+        bytes[beta_len_off..beta_len_off + 8].copy_from_slice(&(1u64 << 60).to_le_bytes());
+        let plen = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        let digest = fnv1a(FNV_BASIS, &bytes[20..20 + plen]);
+        let dpos = 20 + plen;
+        bytes[dpos..dpos + 8].copy_from_slice(&digest.to_le_bytes());
+        let err = Snapshot::from_bytes(&bytes).expect_err("bogus length must fail");
+        assert_eq!(err.kind(), "truncated");
+    }
+
+    #[test]
+    fn atomic_write_rotates_previous_snapshot() {
+        let dir = std::env::temp_dir().join(format!("slope-ckpt-{}-rotate", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fit.ckpt");
+        let mut snap = sample_snapshot(false);
+        write_atomic(&path, &snap).unwrap();
+        snap.next_step = 4;
+        write_atomic(&path, &snap).unwrap();
+        let (cur, from_prev) = load_with_fallback(&path).unwrap();
+        assert!(!from_prev);
+        assert_eq!(cur.next_step, 4);
+        let prev = load(&prev_path(&path)).unwrap();
+        assert_eq!(prev.next_step, 3);
+        // corrupt the primary: fallback serves the previous snapshot
+        std::fs::write(&path, b"SLPCKPT1garbage").unwrap();
+        let (fell_back, from_prev) = load_with_fallback(&path).unwrap();
+        assert!(from_prev);
+        assert_eq!(fell_back.next_step, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprints_separate_problems_and_grids() {
+        let x = Mat::from_rows(&[&[1.0, 0.5], &[-0.5, 1.0]]);
+        let p1 = Problem::new(Design::Dense(x.clone()), vec![1.0, 2.0], Family::Gaussian);
+        let p2 = Problem::new(Design::Dense(x), vec![1.0, 2.5], Family::Gaussian);
+        assert_ne!(problem_fingerprint(&p1), problem_fingerprint(&p2));
+        assert_eq!(problem_fingerprint(&p1), problem_fingerprint(&p1));
+        let g1 = grid_fingerprint(&[1.0, 0.5], &[1.0, 0.9]);
+        let g2 = grid_fingerprint(&[1.0, 0.5], &[1.0, 0.8]);
+        assert_ne!(g1, g2);
+    }
+}

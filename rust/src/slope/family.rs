@@ -101,7 +101,13 @@ impl Family {
             Family::Poisson => {
                 let mut loss = 0.0;
                 for i in 0..n {
-                    let mu = eta[i].exp();
+                    // exp(η) overflows to inf past η ≈ 709.78, and an inf
+                    // loss/gradient feeds the degradation ladder a NaN
+                    // after the first subtraction. Clamp the rate at
+                    // exp(EXP_CLAMP): the clamped gradient still points
+                    // steeply downhill, so the solver backs off exactly as
+                    // it would with the true (astronomically large) value.
+                    let mu = eta[i].min(EXP_CLAMP).exp();
                     loss += mu - y[i] * eta[i];
                     h[i] = mu - y[i];
                 }
@@ -175,6 +181,14 @@ impl Family {
         self.deviance(loss, y)
     }
 }
+
+/// Linear-predictor clamp for exponential links: `exp(709.79)` is the
+/// last finite double, so Poisson rates are evaluated at
+/// `exp(min(η, EXP_CLAMP))`. Anything past this bound is numerically
+/// "infinite rate" anyway; clamping keeps losses and gradients finite so
+/// extreme predictors degrade gracefully instead of poisoning the fit
+/// with inf/NaN.
+pub const EXP_CLAMP: f64 = 700.0;
 
 /// Numerically stable logistic function.
 #[inline]
@@ -395,6 +409,50 @@ mod tests {
                     grad[c]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn binomial_finite_at_eta_1e3() {
+        // |η| far past exp() overflow: losses and working residuals must
+        // stay finite (log1p-exp form + stable sigmoid).
+        let fam = Family::Binomial;
+        let mut h = [0.0; 4];
+        let loss = fam.h_loss(&[1e3, -1e3, 750.0, -750.0], &[0.0, 1.0, 1.0, 0.0], &mut h);
+        assert!(loss.is_finite(), "binomial loss at |eta|=1e3 must be finite, got {loss}");
+        assert!(h.iter().all(|v| v.is_finite()), "binomial h must be finite: {h:?}");
+        // the misclassified extremes carry ~|η| loss each
+        assert!(loss > 1.9e3 && loss < 4e3, "loss {loss}");
+        assert!((h[0] - 1.0).abs() < 1e-12 && (h[1] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_finite_at_eta_1e3() {
+        // Unclamped exp(1e3) = inf; the clamped link keeps loss, h and
+        // the deviance pipeline finite.
+        let fam = Family::Poisson;
+        let mut h = [0.0; 3];
+        let loss = fam.h_loss(&[1e3, 700.0, -1e3], &[2.0, 0.0, 1.0], &mut h);
+        assert!(loss.is_finite(), "poisson loss at eta=1e3 must be finite, got {loss}");
+        assert!(h.iter().all(|v| v.is_finite()), "poisson h must be finite: {h:?}");
+        // clamped rate is huge but finite and still monotone in η below
+        // the clamp: gradient keeps its sign and magnitude ordering
+        assert!(h[0] > 0.0 && h[1] > 0.0 && h[0] >= h[1]);
+        // η far negative: rate ~ 0, h → −y
+        assert!((h[2] + 1.0).abs() < 1e-12);
+        assert!(fam.deviance(loss, &[2.0, 0.0, 1.0]).is_finite());
+    }
+
+    #[test]
+    fn poisson_clamp_is_inactive_in_normal_range() {
+        // Bitwise identity below the clamp: hardening must not perturb
+        // well-conditioned fits.
+        let fam = Family::Poisson;
+        let etas = [-30.0, -1.0, 0.0, 2.5, 100.0, EXP_CLAMP];
+        for e in etas {
+            let mut h = [0.0; 1];
+            fam.h_loss(&[e], &[1.0], &mut h);
+            assert_eq!(h[0].to_bits(), (e.exp() - 1.0).to_bits());
         }
     }
 

@@ -29,8 +29,13 @@
 //! * [`cancel`] — the cooperative [`cancel::CancelToken`] checked every
 //!   FISTA iteration and every path σ-step; backs per-request deadlines
 //!   in the serve layer.
+//! * [`checkpoint`] — crash-safe path-fit snapshots: atomic
+//!   fsync-and-rename writes, FNV-digested framing, a dataset/problem/
+//!   grid fingerprint chain, and typed corruption errors backing the
+//!   resume entry points in [`path`] (DESIGN.md §13).
 
 pub mod cancel;
+pub mod checkpoint;
 pub mod dual;
 pub mod family;
 pub mod fista;

@@ -13,10 +13,13 @@
 //! (pure Rust) or by the AOT-compiled JAX/Pallas artifact through the PJRT
 //! runtime (`crate::runtime`).
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::fault;
 use crate::jsonio::Json;
+use crate::slope::checkpoint::{self, CheckpointError, GapSnap, Snapshot, StepRec};
 use crate::linalg::ops::sq_norm;
 use crate::linalg::packed::PackCache;
 use crate::linalg::ParConfig;
@@ -679,6 +682,217 @@ pub fn fit_path_seeded(
     evaluator: &dyn FullGradient,
     seed: Option<&PathSeed>,
 ) -> PathFit {
+    fit_path_driver(prob, opts, evaluator, seed, None, None)
+        .expect("a fit without a resume snapshot is infallible")
+}
+
+/// Durable-state configuration for a checkpointed fit (DESIGN.md §13).
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// Snapshot file; `<path>.prev` holds the rotated previous snapshot
+    /// and `<path>.tmp` is the atomic-write staging name.
+    pub path: PathBuf,
+    /// Snapshot cadence in σ-steps (degradation/rescue events always
+    /// snapshot regardless). Clamped to ≥ 1 by the driver.
+    pub every: usize,
+    /// Content fingerprint of the dataset this fit runs on (from ingest,
+    /// or the canonical synthetic-spec fingerprint). Stamped into every
+    /// snapshot and validated on resume.
+    pub dataset_fingerprint: u64,
+}
+
+/// [`fit_path_seeded`] plus crash safety: the identical fit, with an
+/// atomic on-disk [`Snapshot`] every `cfg.every` σ-steps and at every
+/// degradation event. Snapshots never touch fit state — the bench
+/// `resilience.checkpoint_overhead` cell holds checkpointed ≡ plain
+/// bitwise.
+pub fn fit_path_checkpointed(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    seed: Option<&PathSeed>,
+    cfg: &CheckpointConfig,
+) -> PathFit {
+    fit_path_driver(prob, opts, evaluator, seed, Some(cfg), None)
+        .expect("a fit without a resume snapshot is infallible")
+}
+
+/// Resume a checkpointed fit from its last good snapshot (falling back to
+/// `<path>.prev` when the primary is corrupt or torn). Validates the full
+/// fingerprint chain — dataset, problem, grid, strategy, shapes — then
+/// re-enters the σ-loop at the snapshot's `next_step` and continues
+/// **bitwise identically** to an uninterrupted fit. Returns the completed
+/// fit and the σ index it resumed at. Keeps checkpointing under `cfg` as
+/// it goes, so a resumed fit can itself be killed and resumed.
+pub fn resume_path(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    cfg: &CheckpointConfig,
+) -> Result<(PathFit, usize), CheckpointError> {
+    let (snap, _from_prev) = checkpoint::load_with_fallback(&cfg.path)?;
+    if snap.dataset_fp != cfg.dataset_fingerprint {
+        return Err(CheckpointError::DatasetMismatch {
+            expected: cfg.dataset_fingerprint,
+            found: snap.dataset_fp,
+        });
+    }
+    let start = snap.next_step as usize;
+    let fit = fit_path_driver(prob, opts, evaluator, None, Some(cfg), Some(snap))?;
+    Ok((fit, start))
+}
+
+/// [`StepInfo`] → its serializable mirror.
+fn step_to_rec(s: &StepInfo) -> StepRec {
+    StepRec {
+        sigma: s.sigma,
+        n_active: s.n_active as u64,
+        n_screened_rule: s.n_screened_rule as u64,
+        n_fitted: s.n_fitted as u64,
+        n_safe: s.n_safe.map(|v| v as u64),
+        violations: s.violations as u64,
+        refits: s.refits as u64,
+        solver_iterations: s.solver_iterations as u64,
+        deviance: s.deviance,
+        dev_ratio: s.dev_ratio,
+        t_screen: s.t_screen,
+        t_solve: s.t_solve,
+        t_kkt: s.t_kkt,
+        solver_converged: s.solver_converged,
+        full_grad_sweeps: s.full_grad_sweeps,
+        n_universe: s.n_universe.map(|v| v as u64),
+        gap: s.gap,
+        degraded_to: s.degraded_to.map(str::to_string),
+    }
+}
+
+/// Serialized mirror → [`StepInfo`], mapping the degradation strategy
+/// name back to its interned `&'static str` (an unknown name is a typed
+/// incompatibility, never a panic).
+fn rec_to_step(r: &StepRec) -> Result<StepInfo, CheckpointError> {
+    let degraded_to = match r.degraded_to.as_deref() {
+        None => None,
+        Some(name) => Some(strategy_static_name(name).ok_or_else(|| {
+            CheckpointError::Incompatible(format!("unknown degraded_to strategy `{name}`"))
+        })?),
+    };
+    Ok(StepInfo {
+        sigma: r.sigma,
+        n_active: r.n_active as usize,
+        n_screened_rule: r.n_screened_rule as usize,
+        n_fitted: r.n_fitted as usize,
+        n_safe: r.n_safe.map(|v| v as usize),
+        violations: r.violations as usize,
+        refits: r.refits as usize,
+        solver_iterations: r.solver_iterations as usize,
+        deviance: r.deviance,
+        dev_ratio: r.dev_ratio,
+        t_screen: r.t_screen,
+        t_solve: r.t_solve,
+        t_kkt: r.t_kkt,
+        solver_converged: r.solver_converged,
+        full_grad_sweeps: r.full_grad_sweeps,
+        n_universe: r.n_universe.map(|v| v as usize),
+        gap: r.gap,
+        degraded_to,
+    })
+}
+
+/// The interned `&'static str` for a strategy name, if it names one.
+fn strategy_static_name(name: &str) -> Option<&'static str> {
+    [
+        Strategy::NoScreening,
+        Strategy::StrongSet,
+        Strategy::PreviousSet,
+        Strategy::SafeOnly,
+        Strategy::GapHybrid,
+    ]
+    .iter()
+    .map(|s| s.name())
+    .find(|n| *n == name)
+}
+
+/// Resume-time validation of the snapshot against the fit about to run:
+/// fingerprint chain, strategy, shapes, prefix consistency. Every
+/// mismatch is a typed error — a snapshot is never trusted past this.
+/// (The dataset fingerprint was already checked by [`resume_path`].)
+fn validate_snapshot(
+    snap: &Snapshot,
+    opts: &PathOptions,
+    problem_fp: u64,
+    grid_fp: u64,
+    pt: usize,
+    nm: usize,
+    grid_len: usize,
+) -> Result<(), CheckpointError> {
+    let fail = |msg: String| Err(CheckpointError::Incompatible(msg));
+    if snap.problem_fp != problem_fp {
+        return fail(format!(
+            "problem fingerprint {:016x} != expected {problem_fp:016x} (different y/family/shape)",
+            snap.problem_fp
+        ));
+    }
+    if snap.grid_fp != grid_fp {
+        return fail(format!(
+            "grid fingerprint {:016x} != expected {grid_fp:016x} (different lambda/sigma grid)",
+            snap.grid_fp
+        ));
+    }
+    if snap.strategy != opts.strategy.name() {
+        return fail(format!(
+            "snapshot strategy `{}` != requested `{}`",
+            snap.strategy,
+            opts.strategy.name()
+        ));
+    }
+    if snap.pt as usize != pt || snap.nm as usize != nm {
+        return fail(format!(
+            "shape mismatch: snapshot (p·m {}, n·m {}) != problem (p·m {pt}, n·m {nm})",
+            snap.pt, snap.nm
+        ));
+    }
+    if snap.beta.len() != pt || snap.grad.len() != pt || snap.eta.len() != nm || snap.h.len() != nm
+    {
+        return fail("state vector lengths do not match the recorded shapes".to_string());
+    }
+    let steps = snap.next_step as usize;
+    if steps == 0 || steps > grid_len {
+        return fail(format!("next_step {steps} outside the σ grid (len {grid_len})"));
+    }
+    if snap.sigmas.len() != steps || snap.betas.len() != steps || snap.steps.len() != steps {
+        return fail(format!(
+            "recorded prefix ({}/{}/{} entries) inconsistent with next_step {steps}",
+            snap.sigmas.len(),
+            snap.betas.len(),
+            snap.steps.len()
+        ));
+    }
+    if opts.strategy.is_gap_driven() {
+        match &snap.gap {
+            None => return fail("gap-driven strategy but snapshot has no gap state".to_string()),
+            Some(g) => {
+                if g.ref_h.len() != nm || g.ref_gmag.len() != pt || g.grad_bound.len() != pt {
+                    return fail("gap state vector lengths do not match the problem".to_string());
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The single σ-loop behind [`fit_path_seeded`], [`fit_path_checkpointed`]
+/// and [`resume_path`] — one code path, so a resumed fit replays the
+/// exact arithmetic an uninterrupted fit runs. `Err` is reachable only
+/// when `resume` is `Some` (snapshot validation); plain fits are
+/// infallible.
+fn fit_path_driver(
+    prob: &Problem,
+    opts: &PathOptions,
+    evaluator: &dyn FullGradient,
+    seed: Option<&PathSeed>,
+    ckpt: Option<&CheckpointConfig>,
+    resume: Option<Snapshot>,
+) -> Result<PathFit, CheckpointError> {
     let t_start = Instant::now();
     // Whole-fit span: the per-step spans below nest inside it, so the
     // trace profiler attributes driver overhead (grid setup, the closing
@@ -714,8 +928,10 @@ pub fn fit_path_seeded(
         total_grad_sweeps: 0.0,
     };
 
-    // Step 0: β = 0 by construction of σ_max. Its recorded sweep is the
-    // bootstrap full gradient `state_at_zero` just paid.
+    // Step 0 (cold fits only — a resumed fit adopts its recorded prefix
+    // below instead): β = 0 by construction of σ_max. Its recorded sweep
+    // is the bootstrap full gradient `state_at_zero` just paid.
+    if resume.is_none() {
     fit.sigmas.push(sigmas_all[0]);
     fit.betas.push(Vec::new());
     fit.steps.push(StepInfo {
@@ -739,9 +955,11 @@ pub fn fit_path_seeded(
         degraded_to: None,
     });
     fit.total_grad_sweeps += 1.0;
+    }
 
     // Gap-driven strategies carry a dual state across steps: the sphere
-    // reference starts at the exact β = 0 gradient just computed.
+    // reference starts at the exact β = 0 gradient just computed (a
+    // resumed fit re-anchors it from the snapshot below).
     let mut gap_state = if opts.strategy.is_gap_driven() {
         Some(GapState::new(prob, opts, &h, &grad, loss0))
     } else {
@@ -757,8 +975,9 @@ pub fn fit_path_seeded(
     // or refined requests. σ_max and the grid were already computed from
     // the β = 0 gradient above, so the grid is identical to a cold fit's.
     // (Skipped for single-point grids: with no step to solve, the final
-    // state must remain the consistent β = 0 / ∇f(0) pair at σ_max.)
-    if sigmas_all.len() > 1 {
+    // state must remain the consistent β = 0 / ∇f(0) pair at σ_max.
+    // Skipped on resume too: the snapshot IS the warm state.)
+    if resume.is_none() && sigmas_all.len() > 1 {
         if let Some(s) = seed {
             if s.beta.len() == pt && s.grad.len() == pt {
                 beta_full.copy_from_slice(&s.beta);
@@ -797,7 +1016,56 @@ pub fn fit_path_seeded(
     let mut snap_eta = vec![0.0; n * m_classes];
     let mut snap_h = vec![0.0; n * m_classes];
 
-    for m in 1..sigmas_all.len() {
+    // Fingerprints pinning what a snapshot may be written for / resumed
+    // against; computed only when durable state is in play, so plain
+    // fits pay nothing here.
+    let idents = if ckpt.is_some() || resume.is_some() {
+        Some((
+            checkpoint::problem_fingerprint(prob),
+            checkpoint::grid_fingerprint(&lambda_base, &sigmas_all),
+        ))
+    } else {
+        None
+    };
+
+    // --- resume (DESIGN.md §13) -------------------------------------------
+    // Adopt the snapshot's recorded prefix and loop state wholesale, so
+    // the σ-loop below continues exactly as if it had just finished step
+    // `next_step − 1` itself. Every restored quantity is either copied
+    // bitwise or (the screen-workspace ranking) recomputed by a pure
+    // function of restored state.
+    let start_m = if let Some(snap) = &resume {
+        let (problem_fp, grid_fp) = idents.expect("resume always computes fingerprints");
+        validate_snapshot(snap, opts, problem_fp, grid_fp, pt, n * m_classes, sigmas_all.len())?;
+        fit.sigmas = snap.sigmas.clone();
+        fit.betas = snap
+            .betas
+            .iter()
+            .map(|s| s.iter().map(|&(i, v)| (i as usize, v)).collect())
+            .collect();
+        fit.steps = snap.steps.iter().map(rec_to_step).collect::<Result<_, _>>()?;
+        fit.total_violations = snap.total_violations as usize;
+        fit.total_grad_sweeps = snap.total_grad_sweeps;
+        beta_full.copy_from_slice(&snap.beta);
+        grad.copy_from_slice(&snap.grad);
+        eta.copy_from_slice(&snap.eta);
+        h.copy_from_slice(&snap.h);
+        prev_dev = fit.steps.last().map_or(dev_null, |s| s.deviance);
+        // Between steps the workspace always holds the ranking of the
+        // current gradient (the step's last KKT sweep ranked it); `rank`
+        // is a pure function of `grad`, so this reproduces it bitwise.
+        screen_ws.rank(&grad);
+        if let Some(gs) = &mut gap_state {
+            let gsnap = snap.gap.as_ref().expect("validated: gap-driven snapshot carries gap state");
+            gs.restore_snapshot(gsnap);
+        }
+        obsreg::CKPT_RESUMES.inc();
+        snap.next_step as usize
+    } else {
+        1
+    };
+
+    for m in start_m..sigmas_all.len() {
         // Cooperative cancellation between σ-steps: a fired token (an
         // expired deadline) keeps every step already recorded and stops.
         if opts.is_cancelled() {
@@ -1060,19 +1328,75 @@ pub fn fit_path_seeded(
         }
 
         // --- early termination (§3.1.2) ------------------------------------
+        // Decided before the snapshot below: a checkpoint's `next_step`
+        // promises more work, and an early-stopped fit is already
+        // complete — snapshotting it would make a resume run *past* the
+        // stop an uninterrupted fit honored.
+        let mut stop: Option<&'static str> = None;
         if opts.config.stop_on_saturation && unique_nonzero_magnitudes(&beta_full) > n {
-            fit.stopped_early = Some("unique magnitudes exceed n");
-            break;
-        }
-        if opts.config.stop_on_dev_change
+            stop = Some("unique magnitudes exceed n");
+        } else if opts.config.stop_on_dev_change
             && dev_null > 0.0
             && ((prev_dev - dev) / dev_null).abs() < 1e-5
         {
-            fit.stopped_early = Some("deviance change < 1e-5");
-            break;
+            stop = Some("deviance change < 1e-5");
+        } else if opts.config.stop_on_dev_ratio && dev_ratio > 0.995 {
+            stop = Some("deviance ratio > 0.995");
         }
-        if opts.config.stop_on_dev_ratio && dev_ratio > 0.995 {
-            fit.stopped_early = Some("deviance ratio > 0.995");
+
+        // --- durable snapshot (DESIGN.md §13) ------------------------------
+        // Cadence writes every `every` steps; a degradation event always
+        // snapshots (that state is exactly what a post-mortem wants, and
+        // the next crash may be related). The write only *reads* fit
+        // state, so checkpointed fits stay bitwise identical to plain
+        // ones; a failed write is logged, not fatal — the previous
+        // snapshot (if any) remains valid.
+        if stop.is_none() {
+            if let Some(cfg) = ckpt {
+                if m % cfg.every.max(1) == 0 || degraded_to.is_some() {
+                    let (problem_fp, grid_fp) = idents.expect("ckpt always computes fingerprints");
+                    let snap = Snapshot {
+                        dataset_fp: cfg.dataset_fingerprint,
+                        problem_fp,
+                        grid_fp,
+                        strategy: opts.strategy.name().to_string(),
+                        next_step: (m + 1) as u64,
+                        pt: pt as u64,
+                        nm: (n * m_classes) as u64,
+                        beta: beta_full.clone(),
+                        grad: grad.clone(),
+                        eta: eta.clone(),
+                        h: h.clone(),
+                        total_violations: fit.total_violations as u64,
+                        total_grad_sweeps: fit.total_grad_sweeps,
+                        sigmas: fit.sigmas.clone(),
+                        betas: fit
+                            .betas
+                            .iter()
+                            .map(|s| s.iter().map(|&(i, v)| (i as u64, v)).collect())
+                            .collect(),
+                        steps: fit.steps.iter().map(step_to_rec).collect(),
+                        gap: gap_state.as_ref().map(GapState::snapshot),
+                    };
+                    let mut ck_span = crate::obs::trace::span("checkpoint");
+                    match checkpoint::write_atomic(&cfg.path, &snap) {
+                        Ok(bytes) => {
+                            if ck_span.active() {
+                                ck_span.u("step", m as u64);
+                                ck_span.u("bytes", bytes);
+                            }
+                            fault::on_checkpoint_write(&cfg.path);
+                        }
+                        Err(e) => eprintln!("checkpoint: write failed at step {m}: {e}"),
+                    }
+                }
+            }
+            // Chaos kill point: fires after the step — and, in a
+            // checkpointed fit, after its snapshot — has landed.
+            fault::on_path_step(m as u64);
+        }
+        if let Some(why) = stop {
+            fit.stopped_early = Some(why);
             break;
         }
         prev_dev = dev;
@@ -1100,8 +1424,9 @@ pub fn fit_path_seeded(
         fit_span.u("total_violations", fit.total_violations as u64);
         fit_span.f("total_grad_sweeps", fit.total_grad_sweeps);
         fit_span.u("warm", seed.is_some() as u64);
+        fit_span.u("resumed", resume.is_some() as u64);
     }
-    fit
+    Ok(fit)
 }
 
 /// The screening-phase set selection shared by the path driver and
@@ -1476,6 +1801,31 @@ impl GapState {
         }
         self.loss = loss;
         self.grad_is_exact = true;
+    }
+
+    /// Serializable copy of the dual state for a checkpoint (scratch
+    /// buffers excluded — they carry no cross-step information).
+    fn snapshot(&self) -> GapSnap {
+        let (ref_h, ref_gmag) =
+            self.screener.reference().expect("gap state always holds a reference");
+        GapSnap {
+            ref_h: ref_h.to_vec(),
+            ref_gmag: ref_gmag.to_vec(),
+            grad_bound: self.grad_bound.clone(),
+            loss: self.loss,
+            grad_is_exact: self.grad_is_exact,
+        }
+    }
+
+    /// Restore from a checkpointed [`GapSnap`]. `set_reference` passes
+    /// the magnitudes through `|·|` again — idempotent on the stored
+    /// absolute values — so the reconstructed screener is bitwise
+    /// identical to the one that was snapshotted.
+    fn restore_snapshot(&mut self, g: &GapSnap) {
+        self.screener.set_reference(&g.ref_h, &g.ref_gmag);
+        self.grad_bound.copy_from_slice(&g.grad_bound);
+        self.loss = g.loss;
+        self.grad_is_exact = g.grad_is_exact;
     }
 }
 

@@ -82,6 +82,19 @@ impl SafeScreener {
         self.xt_abs_ref.extend(grad.iter().map(|g| g.abs()));
     }
 
+    /// The stored reference point, if any: `(h_ref, |x_jᵀh_ref|)`. The
+    /// magnitudes are already absolute values, so feeding them back
+    /// through [`SafeScreener::set_reference`] (which takes `|·|` again —
+    /// idempotent) reconstructs this screener's state bitwise. Backs the
+    /// checkpoint serialization of the gap-driven path strategies.
+    pub fn reference(&self) -> Option<(&[f64], &[f64])> {
+        if self.has_reference() {
+            Some((&self.h_ref, &self.xt_abs_ref))
+        } else {
+            None
+        }
+    }
+
     /// `‖h − h_ref‖₂` — the only quantity a bound refresh needs, and it
     /// lives in `R^{n·m}`, independent of `p`.
     pub fn ref_distance(&self, h: &[f64]) -> f64 {

@@ -206,6 +206,184 @@ fn disarmed_plans_are_bitwise_invisible() {
     }
 }
 
+mod checkpointing {
+    use super::*;
+    use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+    use slope_screen::rng::Pcg64;
+    use slope_screen::slope::checkpoint::CheckpointError;
+    use slope_screen::slope::family::{Family, Problem};
+    use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+    use slope_screen::slope::path::{
+        fit_path, fit_path_checkpointed, resume_path, CheckpointConfig, NativeGradient,
+        PathOptions, Strategy,
+    };
+
+    fn problem(seed: u64) -> Problem {
+        SyntheticSpec {
+            n: 40,
+            p: 120,
+            rho: 0.2,
+            design: DesignKind::Compound,
+            beta: BetaSpec::PlusMinus { k: 5, scale: 2.0 },
+            family: Family::Gaussian,
+            noise_sd: 1.0,
+            standardize: true,
+        }
+        .generate(&mut Pcg64::new(seed))
+    }
+
+    /// Early stopping off: the kill sweep below must visit *every* σ-step
+    /// boundary, and a data-dependent stop would hide the tail.
+    fn options(strategy: Strategy, threads: usize) -> PathOptions {
+        let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+        cfg.length = 8;
+        cfg = cfg.without_early_stopping();
+        PathOptions::new(cfg).with_strategy(strategy).with_threads(threads)
+    }
+
+    fn ckpt(tag: &str) -> CheckpointConfig {
+        CheckpointConfig {
+            path: std::env::temp_dir()
+                .join(format!("slope-chaos-ckpt-{tag}-{}.bin", std::process::id())),
+            every: 1,
+            dataset_fingerprint: 0xDA7A_F00D,
+        }
+    }
+
+    fn scrub(cfg: &CheckpointConfig) {
+        for suffix in ["", ".prev", ".tmp"] {
+            let mut p = cfg.path.clone().into_os_string();
+            p.push(suffix);
+            let _ = std::fs::remove_file(std::path::PathBuf::from(p));
+        }
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The resume contract (ISSUE acceptance): killing the process at ANY
+    /// σ-step boundary and resuming must reproduce the uninterrupted fit
+    /// bit for bit — across thread counts and screening strategies.
+    #[test]
+    fn resumed_fit_matches_uninterrupted_bitwise() {
+        let _g = chaos_lock();
+        fault::clear();
+        for strategy in [Strategy::StrongSet, Strategy::GapHybrid] {
+            for threads in [1usize, 2, 7] {
+                let prob = problem(77);
+                let opts = options(strategy, threads);
+                let baseline = fit_path(&prob, &opts, &NativeGradient(&prob));
+                let n_steps = baseline.sigmas.len();
+                assert!(n_steps >= 4, "path too short to exercise the kill sweep");
+                for kill_at in 1..n_steps as u64 {
+                    let cfg = ckpt("bitwise");
+                    scrub(&cfg);
+                    fault::install(FaultPlan {
+                        kill_after_step: Some(kill_at),
+                        ..FaultPlan::default()
+                    });
+                    let killed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        fit_path_checkpointed(&prob, &opts, &NativeGradient(&prob), None, &cfg)
+                    }));
+                    fault::clear();
+                    assert!(
+                        killed.is_err(),
+                        "{} t{threads}: the planned kill at step {kill_at} must fire",
+                        strategy.name()
+                    );
+                    let (resumed, start) =
+                        resume_path(&prob, &opts, &NativeGradient(&prob), &cfg)
+                            .unwrap_or_else(|e| {
+                                panic!(
+                                    "{} t{threads} kill@{kill_at}: resume failed: {e}",
+                                    strategy.name()
+                                )
+                            });
+                    let label =
+                        format!("{} t{threads} kill@{kill_at}", strategy.name());
+                    assert_eq!(start as u64, kill_at + 1, "{label}: wrong resume step");
+                    assert_eq!(resumed.sigmas.len(), n_steps, "{label}: step count");
+                    assert_eq!(
+                        bits(&resumed.final_beta),
+                        bits(&baseline.final_beta),
+                        "{label}: final_beta drifted"
+                    );
+                    assert_eq!(
+                        bits(&resumed.final_grad),
+                        bits(&baseline.final_grad),
+                        "{label}: final_grad drifted"
+                    );
+                    assert_eq!(
+                        resumed.total_violations, baseline.total_violations,
+                        "{label}: violation count drifted"
+                    );
+                    scrub(&cfg);
+                }
+            }
+        }
+    }
+
+    /// A snapshot torn mid-write (the `truncate_checkpoint` fault halves
+    /// the freshly-landed file) must be detected, counted, and recovered
+    /// from via the rotated `.prev` snapshot — still bitwise identical.
+    #[test]
+    fn truncated_snapshot_falls_back_to_the_previous_good_one() {
+        let _g = chaos_lock();
+        fault::clear();
+        let prob = problem(88);
+        let opts = options(Strategy::StrongSet, 2);
+        let baseline = fit_path(&prob, &opts, &NativeGradient(&prob));
+        let cfg = ckpt("truncate");
+        scrub(&cfg);
+        // Truncate the 3rd snapshot the moment it lands, then kill: disk
+        // now holds a torn primary and an intact step-2 `.prev`.
+        fault::install(FaultPlan {
+            truncate_checkpoint: Some(3),
+            kill_after_step: Some(3),
+            ..FaultPlan::default()
+        });
+        let killed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fit_path_checkpointed(&prob, &opts, &NativeGradient(&prob), None, &cfg)
+        }));
+        fault::clear();
+        assert!(killed.is_err(), "the planned kill must fire");
+        let skips_before = obsreg::CKPT_CORRUPT_SKIPS.get();
+        let (resumed, start) = resume_path(&prob, &opts, &NativeGradient(&prob), &cfg)
+            .expect("the .prev snapshot must rescue the resume");
+        assert!(
+            obsreg::CKPT_CORRUPT_SKIPS.get() > skips_before,
+            "the torn primary must be counted as a corrupt skip"
+        );
+        assert_eq!(start, 3, "fallback resumes from the step-2 snapshot");
+        assert_eq!(bits(&resumed.final_beta), bits(&baseline.final_beta));
+        assert_eq!(bits(&resumed.final_grad), bits(&baseline.final_grad));
+        scrub(&cfg);
+    }
+
+    /// A checkpoint of dataset A must refuse to resume a fit of dataset
+    /// B with a typed mismatch — never by silently continuing.
+    #[test]
+    fn resume_against_the_wrong_dataset_is_a_typed_mismatch() {
+        let _g = chaos_lock();
+        fault::clear();
+        let prob = problem(99);
+        let opts = options(Strategy::StrongSet, 1);
+        let cfg = ckpt("mismatch");
+        scrub(&cfg);
+        fit_path_checkpointed(&prob, &opts, &NativeGradient(&prob), None, &cfg);
+        let wrong =
+            CheckpointConfig { dataset_fingerprint: cfg.dataset_fingerprint ^ 1, ..cfg.clone() };
+        match resume_path(&prob, &opts, &NativeGradient(&prob), &wrong) {
+            Err(e @ CheckpointError::DatasetMismatch { .. }) => {
+                assert_eq!(e.kind(), "dataset_mismatch");
+            }
+            other => panic!("expected a dataset mismatch, got {other:?}"),
+        }
+        scrub(&cfg);
+    }
+}
+
 #[cfg(unix)]
 mod socket {
     use super::*;

@@ -748,3 +748,165 @@ fn path_screening_never_loses_active_predictors() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// checkpoint codec (DESIGN.md §13)
+// ---------------------------------------------------------------------
+
+/// A structurally-plausible snapshot with adversarial float content:
+/// signed zeros, subnormal-adjacent values, infinities and NaN payloads
+/// all have to survive the trip, because β/gradient buffers can carry
+/// any of them after an overflowing solve.
+fn random_snapshot(rng: &mut Pcg64) -> slope_screen::slope::checkpoint::Snapshot {
+    use slope_screen::slope::checkpoint::{GapSnap, Snapshot, StepRec};
+    const SPECIALS: [f64; 9] = [
+        0.0,
+        -0.0,
+        f64::MIN_POSITIVE,
+        f64::MAX,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+        1e-300,
+        -3.25,
+    ];
+    fn val(rng: &mut Pcg64) -> f64 {
+        if rng.below(4) == 0 {
+            SPECIALS[rng.below(SPECIALS.len() as u64) as usize]
+        } else {
+            4.0 * rng.next_f64() - 2.0
+        }
+    }
+    fn vec(rng: &mut Pcg64, len: usize) -> Vec<f64> {
+        (0..len).map(|_| val(rng)).collect()
+    }
+    let pt = 1 + rng.below(40) as usize;
+    let nm = 1 + rng.below(30) as usize;
+    let n_done = 1 + rng.below(6) as usize;
+    let gap_driven = rng.below(2) == 0;
+    let steps: Vec<StepRec> = (0..n_done)
+        .map(|i| StepRec {
+            sigma: val(rng),
+            n_active: rng.below(pt as u64 + 1),
+            n_screened_rule: rng.below(pt as u64 + 1),
+            n_fitted: rng.below(pt as u64 + 1),
+            n_safe: gap_driven.then(|| rng.below(pt as u64 + 1)),
+            violations: rng.below(4),
+            refits: 1 + rng.below(3),
+            solver_iterations: rng.below(500),
+            deviance: val(rng),
+            dev_ratio: rng.next_f64(),
+            t_screen: rng.next_f64(),
+            t_solve: rng.next_f64(),
+            t_kkt: rng.next_f64(),
+            solver_converged: rng.below(8) != 0,
+            full_grad_sweeps: rng.next_f64() * 3.0,
+            n_universe: gap_driven.then(|| rng.below(pt as u64 + 1)),
+            gap: gap_driven.then(|| rng.next_f64()),
+            degraded_to: (i == n_done - 1 && rng.below(4) == 0)
+                .then(|| "previous".to_string()),
+        })
+        .collect();
+    Snapshot {
+        dataset_fp: rng.next_u64(),
+        problem_fp: rng.next_u64(),
+        grid_fp: rng.next_u64(),
+        strategy: ["strong", "hybrid", "safe", "previous", "none"]
+            [rng.below(5) as usize]
+            .to_string(),
+        next_step: n_done as u64,
+        pt: pt as u64,
+        nm: nm as u64,
+        beta: vec(rng, pt),
+        grad: vec(rng, pt),
+        eta: vec(rng, nm),
+        h: vec(rng, nm),
+        total_violations: rng.below(10),
+        total_grad_sweeps: rng.next_f64() * 10.0,
+        sigmas: vec(rng, n_done),
+        betas: (0..n_done)
+            .map(|_| {
+                let nnz = rng.below(pt as u64 + 1) as usize;
+                (0..nnz).map(|j| (j as u64, val(rng))).collect()
+            })
+            .collect(),
+        steps,
+        gap: gap_driven.then(|| GapSnap {
+            ref_h: vec(rng, nm),
+            ref_gmag: vec(rng, pt),
+            grad_bound: vec(rng, pt),
+            loss: val(rng),
+            grad_is_exact: rng.below(2) == 0,
+        }),
+    }
+}
+
+/// Encode → decode → re-encode is the identity on the byte level, which
+/// is the strongest statement of bitwise fidelity (NaN payloads and -0.0
+/// included — `PartialEq` on floats cannot express it).
+#[test]
+fn checkpoint_roundtrip_is_bitwise() {
+    use slope_screen::slope::checkpoint::Snapshot;
+    forall(
+        Config { cases: 200, seed: 0xC4_01 },
+        random_snapshot,
+        |snap| {
+            let bytes = snap.to_bytes();
+            let back = Snapshot::from_bytes(&bytes).map_err(|e| format!("decode failed: {e}"))?;
+            ensure(back.to_bytes() == bytes, "re-encode drifted from the original bytes")?;
+            ensure(
+                back.beta.iter().zip(&snap.beta).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "beta bits drifted",
+            )
+        },
+    );
+}
+
+/// Cutting a snapshot anywhere — header, payload, digest — is a typed
+/// error, never a panic and never a silently-decoded prefix.
+#[test]
+fn checkpoint_truncation_is_always_a_typed_error() {
+    use slope_screen::slope::checkpoint::Snapshot;
+    forall(
+        Config { cases: 200, seed: 0xC4_02 },
+        |rng| {
+            let snap = random_snapshot(rng);
+            let bytes = snap.to_bytes();
+            let cut = rng.below(bytes.len() as u64) as usize;
+            (bytes, cut)
+        },
+        |(bytes, cut)| match Snapshot::from_bytes(&bytes[..*cut]) {
+            Err(e) => ensure(!e.kind().is_empty(), "error must carry a kind"),
+            Ok(_) => Err(format!("truncation to {cut} of {} decoded", bytes.len())),
+        },
+    );
+}
+
+/// Flipping any bit of the magic, payload or digest is a typed error:
+/// the digest covers the payload, and the magic gate covers itself. (The
+/// version/length header fields are exercised by the unit-level golden
+/// fixtures in `slope::checkpoint`.)
+#[test]
+fn checkpoint_bit_flips_are_always_typed_errors() {
+    use slope_screen::slope::checkpoint::Snapshot;
+    forall(
+        Config { cases: 300, seed: 0xC4_03 },
+        |rng| {
+            let snap = random_snapshot(rng);
+            let mut bytes = snap.to_bytes();
+            // byte index within magic [0, 8) or payload+digest [20, len)
+            let idx = if rng.below(4) == 0 {
+                rng.below(8) as usize
+            } else {
+                20 + rng.below(bytes.len() as u64 - 20) as usize
+            };
+            let bit = rng.below(8) as u8;
+            bytes[idx] ^= 1 << bit;
+            (bytes, idx)
+        },
+        |(bytes, idx)| match Snapshot::from_bytes(bytes) {
+            Err(e) => ensure(!e.kind().is_empty(), "error must carry a kind"),
+            Ok(_) => Err(format!("bit flip at byte {idx} went undetected")),
+        },
+    );
+}
