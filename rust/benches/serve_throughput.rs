@@ -1,20 +1,27 @@
 //! Serve-layer throughput: requests/sec through the in-process server
 //! core for cold fits (cache off) vs warm-start-cached repeats (cache
-//! on), for both `fit_path` and `fit_point`, plus a concurrent burst that
-//! exercises request coalescing and the bounded scheduler.
+//! on), for both `fit_path` and `fit_point`, a concurrent burst that
+//! exercises request coalescing, and the cross-request batching axis
+//! (DESIGN.md §14): Zipf-popular warm `fit_point` traffic from
+//! concurrent clients against a gather window of 0 (batching off) vs
+//! 2 ms (batching on), with p50/p99 latency.
 //!
 //! Writes `results/serve_throughput.csv` and the machine-readable
 //! `BENCH_serve.json` at the repository root — the serve perf trajectory
 //! is tracked from this file.
 //!
 //! Run: `cargo bench --bench serve_throughput -- --requests 20`
+//! CI:  `cargo bench --bench serve_throughput -- --smoke`
+//! (`--smoke` shrinks every dimension and skips the perf gates — it
+//! checks the harness, not the machine.)
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use slope_screen::benchkit::Table;
-use slope_screen::cli::Args;
+use slope_screen::benchkit::{Table, Timing};
 use slope_screen::jsonio::Json;
+use slope_screen::obs::registry as obsreg;
+use slope_screen::cli::Args;
 use slope_screen::serve::protocol::{request_line, synth_dataset_json};
 use slope_screen::serve::{Server, ServerConfig};
 
@@ -42,8 +49,131 @@ fn drive(server: &Server, lines: &[String]) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// Inverse-CDF sampler over a Zipf(s) popularity law on `n` items —
+/// item 0 is the hot head (~45% of draws at s=1.1, n=6). The xorshift
+/// stream is seeded, so a run replays.
+struct Zipf {
+    cum: Vec<f64>,
+    state: u64,
+}
+
+impl Zipf {
+    fn new(n: usize, s: f64, seed: u64) -> Zipf {
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0;
+        for i in 0..n {
+            total += 1.0 / ((i + 1) as f64).powf(s);
+            cum.push(total);
+        }
+        for c in cum.iter_mut() {
+            *c /= total;
+        }
+        Zipf { cum, state: seed | 1 }
+    }
+
+    fn next(&mut self) -> usize {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+        self.cum.iter().position(|&c| u < c).unwrap_or(self.cum.len() - 1)
+    }
+}
+
+/// One side of the batched-vs-unbatched axis.
+struct ZipfOutcome {
+    requests: usize,
+    total_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    batches: u64,
+    batched_requests: u64,
+}
+
+impl ZipfOutcome {
+    fn req_per_s(&self) -> f64 {
+        self.requests as f64 / self.total_s.max(1e-12)
+    }
+}
+
+/// Warm same-dataset traffic under a Zipf popularity law: `clients`
+/// concurrent closed-loop threads each fire `per_client` `fit_point`
+/// requests, dataset drawn Zipf(1.1) from a pool of `datasets`, σ-ratio
+/// sweeping a descending grid (the request pattern a path explorer
+/// produces). Every dataset is pre-warmed so the measured window is all
+/// warm traffic — the regime the gather window is built for.
+#[allow(clippy::too_many_arguments)]
+fn zipf_load(
+    server: &Arc<Server>,
+    clients: usize,
+    per_client: usize,
+    datasets: usize,
+    n: usize,
+    p: usize,
+    k: usize,
+    q: f64,
+    seed: u64,
+) -> ZipfOutcome {
+    let line = |id: u64, d: usize, ratio: f64| {
+        request_line(
+            id,
+            "fit_point",
+            vec![
+                ("dataset", synth_dataset_json(n, p, k, 0.2, "gaussian", seed + d as u64)),
+                ("q", Json::Num(q)),
+                ("sigma_ratio", Json::Num(ratio)),
+            ],
+        )
+    };
+    const GRID: [f64; 5] = [0.5, 0.45, 0.4, 0.35, 0.3];
+    // Pre-warm: one point fit per dataset seeds the warm-start cache.
+    for d in 0..datasets {
+        let resp = server.handle_line(&line(d as u64, d, GRID[0]));
+        assert!(resp.contains("\"ok\":true"), "warmup failed: {resp}");
+    }
+    let batches0 = obsreg::SERVE_BATCHES.get();
+    let members0 = obsreg::SERVE_BATCHED_REQUESTS.get();
+    let t0 = Instant::now();
+    let mut samples: Vec<f64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let server = Arc::clone(server);
+                let line = &line;
+                scope.spawn(move || {
+                    let mut zipf = Zipf::new(datasets, 1.1, seed ^ (c as u64 + 1) * 0x9E37);
+                    let mut lat = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let d = zipf.next();
+                        let req =
+                            line((1000 + c * per_client + i) as u64, d, GRID[i % GRID.len()]);
+                        let t = Instant::now();
+                        let resp = server.handle_line(&req);
+                        lat.push(t.elapsed().as_secs_f64());
+                        assert!(resp.contains("\"ok\":true"), "zipf request failed: {resp}");
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let total_s = t0.elapsed().as_secs_f64();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let timing = Timing::from_samples(samples);
+    ZipfOutcome {
+        requests: clients * per_client,
+        total_s,
+        p50_ms: timing.quantile(0.5) * 1e3,
+        p99_ms: timing.quantile(0.99) * 1e3,
+        batches: obsreg::SERVE_BATCHES.get() - batches0,
+        batched_requests: obsreg::SERVE_BATCHED_REQUESTS.get() - members0,
+    }
+}
+
 fn main() {
-    let parsed = Args::new("serve throughput: warm-start cache on vs off")
+    let parsed = Args::new("serve throughput: warm-start cache and cross-request batching")
         .opt("n", "100", "observations")
         .opt("p", "1000", "predictors")
         .opt("k", "10", "true support size")
@@ -51,16 +181,24 @@ fn main() {
         .opt("q", "0.05", "BH parameter")
         .opt("path-length", "20", "path length for fit_path scenarios")
         .opt("threads", "0", "server worker threads (0 = auto)")
+        .opt("clients", "8", "concurrent client threads for the Zipf axis (gate needs >= 4)")
+        .opt("zipf-requests", "30", "requests per client on the Zipf axis")
+        .opt("zipf-datasets", "6", "dataset pool size for the Zipf axis")
         .opt("seed", "2020", "dataset seed")
+        .flag("smoke", "tiny sizes, perf gates skipped (CI harness check)")
         .flag("bench", "(cargo bench compatibility)")
         .parse();
-    let n = parsed.usize("n");
-    let p = parsed.usize("p");
-    let k = parsed.usize("k");
-    let requests = parsed.usize("requests").max(2);
+    let smoke = parsed.bool("smoke");
+    let n = if smoke { 40 } else { parsed.usize("n") };
+    let p = if smoke { 120 } else { parsed.usize("p") };
+    let k = if smoke { 4 } else { parsed.usize("k") };
+    let requests = if smoke { 4 } else { parsed.usize("requests").max(2) };
     let q = parsed.f64("q");
-    let path_length = parsed.usize("path-length");
+    let path_length = if smoke { 6 } else { parsed.usize("path-length") };
     let threads = parsed.usize("threads");
+    let clients = if smoke { 4 } else { parsed.usize("clients").max(1) };
+    let zipf_requests = if smoke { 4 } else { parsed.usize("zipf-requests").max(1) };
+    let zipf_datasets = if smoke { 3 } else { parsed.usize("zipf-datasets").max(1) };
     let seed = parsed.u64("seed");
 
     let dataset = || synth_dataset_json(n, p, k, 0.2, "gaussian", seed);
@@ -143,6 +281,28 @@ fn main() {
         scenarios.push(Scenario { name: "fit_path_burst4_coalesced", requests: 4, total_s });
     }
 
+    // The batching axis: identical Zipf traffic against a gather window
+    // of 0 (every request its own job) vs 2 ms (same-dataset
+    // coalescing). Same seeds, same request streams — only the window
+    // differs.
+    let zipf_cfg = |gather_window_ms: u64| ServerConfig {
+        threads,
+        queue: 64,
+        cache: true,
+        fit_threads: 0,
+        gather_window_ms,
+        max_batch: 32,
+        ..Default::default()
+    };
+    let unbatched = {
+        let server = Arc::new(Server::new(zipf_cfg(0)));
+        zipf_load(&server, clients, zipf_requests, zipf_datasets, n, p, k, q, seed)
+    };
+    let batched = {
+        let server = Arc::new(Server::new(zipf_cfg(2)));
+        zipf_load(&server, clients, zipf_requests, zipf_datasets, n, p, k, q, seed)
+    };
+
     let mut table = Table::new(
         &format!("serve throughput (n={n}, p={p}, {requests} requests/scenario)"),
         &["scenario", "requests", "total_s", "req_per_s"],
@@ -155,7 +315,28 @@ fn main() {
             format!("{:.2}", s.req_per_s()),
         ]);
     }
+    for (name, z) in [("zipf_unbatched", &unbatched), ("zipf_batched_2ms", &batched)] {
+        table.row(vec![
+            name.to_string(),
+            z.requests.to_string(),
+            format!("{:.4}", z.total_s),
+            format!("{:.2}", z.req_per_s()),
+        ]);
+    }
     table.print();
+    println!(
+        "zipf ({clients} clients x {zipf_requests} reqs, {zipf_datasets} datasets): \
+         unbatched {:.2} req/s p50 {:.1}ms p99 {:.1}ms | batched {:.2} req/s p50 {:.1}ms p99 {:.1}ms \
+         ({} batches, {} coalesced members)",
+        unbatched.req_per_s(),
+        unbatched.p50_ms,
+        unbatched.p99_ms,
+        batched.req_per_s(),
+        batched.p50_ms,
+        batched.p99_ms,
+        batched.batches,
+        batched.batched_requests,
+    );
     let csv = table.write_csv("serve_throughput").expect("csv");
     println!("\nwrote {}", csv.display());
 
@@ -163,14 +344,42 @@ fn main() {
     let path_speedup = find("fit_path_warm_cache").req_per_s() / find("fit_path_cold").req_per_s();
     let point_speedup =
         find("fit_point_warm_cache").req_per_s() / find("fit_point_cold").req_per_s();
+    let batch_speedup = batched.req_per_s() / unbatched.req_per_s().max(1e-12);
     println!(
-        "speedup: fit_path warm-cache {path_speedup:.1}x, fit_point warm-cache {point_speedup:.1}x"
+        "speedup: fit_path warm-cache {path_speedup:.1}x, fit_point warm-cache {point_speedup:.1}x, \
+         zipf batched-over-unbatched {batch_speedup:.2}x"
     );
-    assert!(
-        path_speedup > 1.0,
-        "warm-start cache must beat cold fits (got {path_speedup:.2}x)"
-    );
+    if !smoke {
+        assert!(
+            path_speedup > 1.0,
+            "warm-start cache must beat cold fits (got {path_speedup:.2}x)"
+        );
+        // The batching acceptance gate: on warm same-dataset Zipf
+        // traffic from >= 4 concurrent clients, coalescing must at
+        // least double throughput. Under --smoke the sizes are too
+        // small for the ratio to mean anything, so only the full run
+        // gates.
+        assert!(
+            clients >= 4,
+            "the batching gate needs >= 4 concurrent clients (got {clients})"
+        );
+        assert!(
+            batch_speedup >= 2.0,
+            "batched Zipf traffic must run >= 2x unbatched (got {batch_speedup:.2}x)"
+        );
+    }
 
+    let zipf_json = |z: &ZipfOutcome| {
+        Json::obj(vec![
+            ("requests", Json::Num(z.requests as f64)),
+            ("total_s", Json::Num(z.total_s)),
+            ("req_per_s", Json::Num(z.req_per_s())),
+            ("p50_ms", Json::Num(z.p50_ms)),
+            ("p99_ms", Json::Num(z.p99_ms)),
+            ("batches", Json::Num(z.batches as f64)),
+            ("batched_requests", Json::Num(z.batched_requests as f64)),
+        ])
+    };
     let payload = Json::obj(vec![
         ("bench", Json::Str("serve_throughput".to_string())),
         (
@@ -182,6 +391,10 @@ fn main() {
                 ("q", Json::Num(q)),
                 ("path_length", Json::Num(path_length as f64)),
                 ("requests", Json::Num(requests as f64)),
+                ("clients", Json::Num(clients as f64)),
+                ("zipf_requests", Json::Num(zipf_requests as f64)),
+                ("zipf_datasets", Json::Num(zipf_datasets as f64)),
+                ("smoke", Json::Bool(smoke)),
             ]),
         ),
         (
@@ -201,10 +414,19 @@ fn main() {
             ),
         ),
         (
+            "zipf",
+            Json::obj(vec![
+                ("unbatched", zipf_json(&unbatched)),
+                ("batched_2ms", zipf_json(&batched)),
+                ("batched_over_unbatched", Json::Num(batch_speedup)),
+            ]),
+        ),
+        (
             "speedup",
             Json::obj(vec![
                 ("fit_path_warm_over_cold", Json::Num(path_speedup)),
                 ("fit_point_warm_over_cold", Json::Num(point_speedup)),
+                ("zipf_batched_over_unbatched", Json::Num(batch_speedup)),
             ]),
         ),
         ("table", table.to_json()),

@@ -328,6 +328,54 @@ fn dot4(cols: [&[f64]; 4], v: &[f64]) -> [f64; 4] {
     out
 }
 
+/// Score a stacked batch of prediction rows against one coefficient
+/// class: `out[r] = intercept + Σ_j rows[r·p + j] · beta[j]`, four rows
+/// per pass so `beta` streams from cache once per quad instead of once
+/// per row. `rows` is row-major (`r·p..(r+1)·p` is row `r`).
+///
+/// **Ordering contract** (same doctrine as the packed kernels): each
+/// row's score is its own scalar accumulator, seeded with `intercept`
+/// and receiving `row[j] · beta[j]` contributions in strictly ascending
+/// `j` — exactly the serve layer's one-row-at-a-time loop — so scoring a
+/// coalesced batch is bitwise identical to scoring its rows one request
+/// at a time, regardless of how many rows share the pass.
+pub fn score_rows(rows: &[f64], p: usize, beta: &[f64], intercept: f64, out: &mut [f64]) {
+    assert_eq!(beta.len(), p, "beta length must match the row width");
+    assert_eq!(rows.len(), p * out.len(), "rows slab must be out.len() × p");
+    let nrows = out.len();
+    note_packed(&obsreg::PACKED_GEMV_CALLS, nrows, p, 1);
+    let mut r = 0;
+    while r + 4 <= nrows {
+        let r0 = &rows[r * p..(r + 1) * p];
+        let r1 = &rows[(r + 1) * p..(r + 2) * p];
+        let r2 = &rows[(r + 2) * p..(r + 3) * p];
+        let r3 = &rows[(r + 3) * p..(r + 4) * p];
+        let (mut a0, mut a1, mut a2, mut a3) = (intercept, intercept, intercept, intercept);
+        for (j, &b) in beta.iter().enumerate() {
+            // Independent accumulators, one per row: lane j of each chain
+            // is `+ row[j]·beta[j]`, the per-request loop's exact order.
+            a0 += r0[j] * b;
+            a1 += r1[j] * b;
+            a2 += r2[j] * b;
+            a3 += r3[j] * b;
+        }
+        out[r] = a0;
+        out[r + 1] = a1;
+        out[r + 2] = a2;
+        out[r + 3] = a3;
+        r += 4;
+    }
+    while r < nrows {
+        let row = &rows[r * p..(r + 1) * p];
+        let mut s = intercept;
+        for (j, &b) in beta.iter().enumerate() {
+            s += row[j] * b;
+        }
+        out[r] = s;
+        r += 1;
+    }
+}
+
 /// Copy screened columns into a pre-sized destination slab, parallel over
 /// column blocks (disjoint `chunks_mut` spans — bitwise deterministic).
 fn fill_columns(design: &Design, cols: &[usize], dst: &mut [f64], nrows: usize, par: ParConfig) {
@@ -730,5 +778,48 @@ mod tests {
         let design = random_design(9, 7, 5, false);
         let pack = PackedDesign::pack(&design, &[0, 2, 4], ParConfig::serial());
         assert_eq!(pack.bytes(), 7 * 3 * 8);
+    }
+
+    /// The serve layer's one-row scoring loop, verbatim — the reference
+    /// `score_rows` must match bitwise.
+    fn score_one(row: &[f64], beta: &[f64], intercept: f64) -> f64 {
+        let mut s = intercept;
+        for (j, &v) in row.iter().enumerate() {
+            s += v * beta[j];
+        }
+        s
+    }
+
+    #[test]
+    fn score_rows_bitwise_matches_per_row_loop() {
+        let mut rng = Pcg64::new(11);
+        // Row counts straddling the quad boundary (tail of 0..3 rows) and
+        // widths straddling any lane assumptions.
+        for &(nrows, p) in &[(1usize, 7usize), (3, 16), (4, 5), (5, 1), (7, 33), (12, 8)] {
+            let rows: Vec<f64> = (0..nrows * p).map(|_| rng.normal()).collect();
+            let beta: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+            let intercept = rng.normal();
+            let mut out = vec![0.0; nrows];
+            score_rows(&rows, p, &beta, intercept, &mut out);
+            for r in 0..nrows {
+                let want = score_one(&rows[r * p..(r + 1) * p], &beta, intercept);
+                assert_eq!(
+                    out[r].to_bits(),
+                    want.to_bits(),
+                    "row {r} of {nrows}×{p} must match the per-row loop bitwise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_rows_degenerate_shapes() {
+        // no rows: nothing written, no panic
+        let mut out: Vec<f64> = Vec::new();
+        score_rows(&[], 4, &[1.0, 2.0, 3.0, 4.0], 0.5, &mut out);
+        // zero-width rows: every score is exactly the intercept
+        let mut out = vec![0.0; 3];
+        score_rows(&[], 0, &[], 2.25, &mut out);
+        assert_eq!(out, vec![2.25; 3]);
     }
 }

@@ -5,7 +5,7 @@
 //!   cv      repeated k-fold cross-validation over the path
 //!   export  write a simulated stand-in as a .csv/.svm ingest fixture
 //!   info    show the AOT artifact manifest and PJRT platform
-//!   serve   run the fit server (Unix socket or stdio transport)
+//!   serve   run the fit server (Unix socket, TCP or stdio transport)
 //!   client  send newline-delimited JSON requests to a running server
 //!   profile summarize a `--trace` JSONL file (self-time, events, counters)
 //!
@@ -22,6 +22,7 @@
 //!   slope-screen cv --n 200 --p 1000 --folds 5 --repeats 2
 //!   slope-screen export --dataset golub --out /tmp/standins
 //!   slope-screen serve --socket /tmp/slope-serve.sock
+//!   slope-screen serve --tcp 127.0.0.1:7878 --gather-window-ms 2
 //!   slope-screen client --json '{"id":1,"op":"stats"}'
 
 use slope_screen::cli::Args;
@@ -61,7 +62,11 @@ fn main() {
         .opt("seed", "42", "rng seed")
         .flag("no-early-stop", "disable the path termination rules")
         .opt("socket", "/tmp/slope-serve.sock", "serve/client: unix socket path")
+        .opt("tcp", "", "serve/client: TCP endpoint HOST:PORT (overrides --socket; serve announces the resolved address on stderr, so :0 picks a free port)")
         .opt("queue", "64", "serve: admission-queue capacity (backpressure bound)")
+        .opt("max-conns", "0", "serve: accept-time connection cap, both transports (0 = 1024); excess connections get a typed `overload` response and a close")
+        .opt("gather-window-ms", "0", "serve: coalesce same-dataset fit_point/predict requests arriving within this window into one batched solve (0 = off; DESIGN.md §14)")
+        .opt("max-batch", "32", "serve: most requests one gather window may coalesce (a full batch closes early)")
         .opt("fit-threads", "0", "serve: kernel threads per fit job (0 = threads split across the pool)")
         .opt("deadline-ms", "0", "fit/serve: per-fit deadline in milliseconds (0 = none); an expired fit is a typed `deadline` error, never a silent partial result")
         .opt("max-line-bytes", "16777216", "serve: byte cap on one NDJSON request line (oversized lines get a typed error)")
@@ -426,6 +431,9 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
             let dir = parsed.get("state-dir");
             (!dir.is_empty()).then(|| std::path::PathBuf::from(dir))
         },
+        max_conns: parsed.usize("max-conns"),
+        gather_window_ms: parsed.u64("gather-window-ms"),
+        max_batch: parsed.usize("max-batch"),
     };
     let server = std::sync::Arc::new(Server::new(cfg));
     if parsed.bool("stdio") {
@@ -439,7 +447,52 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
         eprintln!("slope-screen serve: shut down cleanly");
         return;
     }
+    if !parsed.get("tcp").is_empty() {
+        serve_tcp(parsed, &server);
+        return;
+    }
     serve_socket(parsed, &server);
+}
+
+/// Bind the TCP transport. The listener is bound *here*, before the
+/// announcement, so `--tcp 127.0.0.1:0` prints the kernel-chosen port —
+/// scripts (the CI smoke test among them) parse it from stderr.
+#[cfg(unix)]
+fn serve_tcp(parsed: &slope_screen::cli::Parsed, server: &std::sync::Arc<slope_screen::serve::Server>) {
+    let addr = parsed.get("tcp");
+    let listener = match std::net::TcpListener::bind(addr) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve: cannot bind {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    match listener.local_addr() {
+        Ok(local) => eprintln!(
+            "slope-screen serve: listening on {} ({} worker threads, queue {})",
+            local,
+            parsed.usize("threads"),
+            parsed.usize("queue")
+        ),
+        Err(e) => {
+            eprintln!("serve: cannot resolve local address of {addr}: {e}");
+            std::process::exit(1);
+        }
+    }
+    if let Err(e) = slope_screen::serve::net::serve_tcp_listener(server, listener) {
+        eprintln!("serve: tcp error: {e}");
+        std::process::exit(1);
+    }
+    eprintln!("slope-screen serve: shut down cleanly");
+}
+
+#[cfg(not(unix))]
+fn serve_tcp(
+    _parsed: &slope_screen::cli::Parsed,
+    _server: &std::sync::Arc<slope_screen::serve::Server>,
+) {
+    eprintln!("serve: the poll(2) TCP transport is unix-only; use --stdio");
+    std::process::exit(2);
 }
 
 /// Parse and install a `--fault-plan` (a JSON file path or inline JSON).
@@ -494,23 +547,40 @@ fn serve_socket(
     std::process::exit(2);
 }
 
-#[cfg(not(unix))]
-fn cmd_client(_parsed: &slope_screen::cli::Parsed) {
-    eprintln!("client: requires unix-domain sockets, unavailable on this platform");
-    std::process::exit(2);
+/// Dial the serve endpoint the flags name: `--tcp HOST:PORT` on any
+/// platform, else the `--socket` Unix path.
+fn dial_client(parsed: &slope_screen::cli::Parsed) -> slope_screen::serve::client::Client {
+    let tcp = parsed.get("tcp");
+    if !tcp.is_empty() {
+        return match slope_screen::serve::client::connect_tcp_with_retry(tcp, 20, 50) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("client: cannot connect to {tcp}: {e}");
+                std::process::exit(1);
+            }
+        };
+    }
+    #[cfg(unix)]
+    {
+        let path = std::path::PathBuf::from(parsed.get("socket"));
+        return match slope_screen::serve::client::connect_with_retry(&path, 20, 50) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("client: cannot connect to {}: {e}", path.display());
+                std::process::exit(1);
+            }
+        };
+    }
+    #[cfg(not(unix))]
+    {
+        eprintln!("client: unix sockets are unavailable on this platform; use --tcp HOST:PORT");
+        std::process::exit(2);
+    }
 }
 
-#[cfg(unix)]
 fn cmd_client(parsed: &slope_screen::cli::Parsed) {
     use std::io::BufRead as _;
-    let path = std::path::PathBuf::from(parsed.get("socket"));
-    let mut client = match slope_screen::serve::client::connect_with_retry(&path, 20, 50) {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("client: cannot connect to {}: {e}", path.display());
-            std::process::exit(1);
-        }
-    };
+    let mut client = dial_client(parsed);
     // Overload rejections and dropped connections back off and retry
     // (idempotent ops only); other typed errors are answers, printed as-is.
     let mut backoff = slope_screen::serve::client::Backoff::new(50, 5000, parsed.u64("seed"));

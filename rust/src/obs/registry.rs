@@ -157,6 +157,13 @@ registry! {
     CKPT_CORRUPT_SKIPS: Counter, "checkpoint_corrupt_skips", "snapshots or journal records rejected as corrupt/torn and skipped";
     JOURNAL_RECORDS: Counter, "journal_records", "records appended to the serve registry journal";
     JOURNAL_RESTORED: Counter, "journal_restored", "journal records successfully replayed on registry boot";
+    // --- network transport & cross-request batching (DESIGN.md §14) ---
+    SERVE_TCP_ACCEPTS: Counter, "serve_tcp_accepts", "TCP connections accepted by the poll-loop transport";
+    SERVE_OPEN_CONNS: Gauge, "serve_open_conns", "connections currently open on the poll-loop transport";
+    SERVE_CONN_LIMIT_REJECTED: Counter, "serve_conn_limit_rejected", "connections refused at accept because max_conns was reached";
+    SERVE_WRITE_BACKPRESSURE: Counter, "serve_write_backpressure", "times a connection's reads were paused because its write buffer was full";
+    SERVE_BATCHES: Counter, "serve_batches", "coalesced cross-request batches gathered and executed";
+    SERVE_BATCHED_REQUESTS: Counter, "serve_batched_requests", "requests that joined an open batch instead of running alone";
 }
 
 /// Name/value pairs for every registered cell, in declaration order.

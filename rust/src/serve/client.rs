@@ -1,7 +1,8 @@
-//! Blocking newline-delimited JSON client for the serve socket transport
-//! (the `client` CLI subcommand and `examples/serving.rs` use it), plus
-//! [`Backoff`] — seeded, jittered exponential retry for the typed
-//! rejections the resilient server can answer with (DESIGN.md §12).
+//! Blocking newline-delimited JSON client for the serve socket
+//! transports — Unix domain or TCP (the `client` CLI subcommand and
+//! `examples/serving.rs` use it) — plus [`Backoff`] — seeded, jittered
+//! exponential retry for the typed rejections the resilient server can
+//! answer with (DESIGN.md §12).
 
 /// Jittered exponential backoff policy for retryable serve rejections.
 ///
@@ -68,38 +69,118 @@ pub fn idempotent_op(op: &str) -> bool {
     op != "shutdown"
 }
 
+pub use imp::{connect_tcp_with_retry, Client};
 #[cfg(unix)]
-pub use unix_impl::{connect_with_retry, Client};
+pub use imp::connect_with_retry;
 
-#[cfg(unix)]
-mod unix_impl {
-    use std::io::{BufRead, BufReader, Write};
+mod imp {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+    #[cfg(unix)]
     use std::os::unix::net::UnixStream;
+    #[cfg(unix)]
     use std::path::{Path, PathBuf};
     use std::time::Duration;
 
     use super::{idempotent_op, Backoff};
     use crate::jsonio::Json;
 
-    /// One connection to a serve socket.
+    /// Where a client dials — kept for reconnects after a dropped
+    /// connection.
+    #[derive(Clone)]
+    enum Target {
+        #[cfg(unix)]
+        Unix(PathBuf),
+        Tcp(String),
+    }
+
+    /// A connected stream on either transport; the client logic above it
+    /// is transport-blind.
+    enum StreamKind {
+        #[cfg(unix)]
+        Unix(UnixStream),
+        Tcp(TcpStream),
+    }
+
+    impl StreamKind {
+        fn try_clone(&self) -> std::io::Result<StreamKind> {
+            Ok(match self {
+                #[cfg(unix)]
+                StreamKind::Unix(s) => StreamKind::Unix(s.try_clone()?),
+                StreamKind::Tcp(s) => StreamKind::Tcp(s.try_clone()?),
+            })
+        }
+    }
+
+    impl Read for StreamKind {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match self {
+                #[cfg(unix)]
+                StreamKind::Unix(s) => s.read(buf),
+                StreamKind::Tcp(s) => s.read(buf),
+            }
+        }
+    }
+
+    impl Write for StreamKind {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            match self {
+                #[cfg(unix)]
+                StreamKind::Unix(s) => s.write(buf),
+                StreamKind::Tcp(s) => s.write(buf),
+            }
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            match self {
+                #[cfg(unix)]
+                StreamKind::Unix(s) => s.flush(),
+                StreamKind::Tcp(s) => s.flush(),
+            }
+        }
+    }
+
+    /// One connection to a serve endpoint (Unix socket or TCP).
     pub struct Client {
-        reader: BufReader<UnixStream>,
-        writer: UnixStream,
-        /// Socket path, kept for reconnects after a dropped connection.
-        path: PathBuf,
+        reader: BufReader<StreamKind>,
+        writer: StreamKind,
+        target: Target,
     }
 
     impl Client {
-        /// Connect to a serve socket.
-        pub fn connect(path: &Path) -> std::io::Result<Client> {
-            let stream = UnixStream::connect(path)?;
-            let reader = BufReader::new(stream.try_clone()?);
-            Ok(Client { reader, writer: stream, path: path.to_path_buf() })
+        fn dial(target: &Target) -> std::io::Result<StreamKind> {
+            match target {
+                #[cfg(unix)]
+                Target::Unix(path) => Ok(StreamKind::Unix(UnixStream::connect(path)?)),
+                Target::Tcp(addr) => {
+                    let stream = TcpStream::connect(addr.as_str())?;
+                    // Request lines are small; Nagle only adds latency.
+                    let _ = stream.set_nodelay(true);
+                    Ok(StreamKind::Tcp(stream))
+                }
+            }
         }
 
-        /// Drop the current connection and dial the same socket again.
+        fn from_target(target: Target) -> std::io::Result<Client> {
+            let stream = Client::dial(&target)?;
+            let reader = BufReader::new(stream.try_clone()?);
+            Ok(Client { reader, writer: stream, target })
+        }
+
+        /// Connect to a serve Unix socket.
+        #[cfg(unix)]
+        pub fn connect(path: &Path) -> std::io::Result<Client> {
+            Client::from_target(Target::Unix(path.to_path_buf()))
+        }
+
+        /// Connect to a serve TCP endpoint (`host:port`).
+        pub fn connect_tcp(addr: &str) -> std::io::Result<Client> {
+            Client::from_target(Target::Tcp(addr.to_string()))
+        }
+
+        /// Drop the current connection and dial the same target again.
         pub fn reconnect(&mut self) -> std::io::Result<()> {
-            let fresh = Client::connect(&self.path.clone())?;
+            let fresh = Client::from_target(self.target.clone())?;
             *self = fresh;
             Ok(())
         }
@@ -171,15 +252,34 @@ mod unix_impl {
         }
     }
 
-    /// Connect with retries — for clients racing a just-spawned server.
+    /// Connect to a Unix socket with retries — for clients racing a
+    /// just-spawned server.
+    #[cfg(unix)]
     pub fn connect_with_retry(
         path: &Path,
         attempts: usize,
         delay_ms: u64,
     ) -> std::io::Result<Client> {
+        retry(attempts, delay_ms, || Client::connect(path))
+    }
+
+    /// [`connect_with_retry`] for the TCP transport.
+    pub fn connect_tcp_with_retry(
+        addr: &str,
+        attempts: usize,
+        delay_ms: u64,
+    ) -> std::io::Result<Client> {
+        retry(attempts, delay_ms, || Client::connect_tcp(addr))
+    }
+
+    fn retry(
+        attempts: usize,
+        delay_ms: u64,
+        mut dial: impl FnMut() -> std::io::Result<Client>,
+    ) -> std::io::Result<Client> {
         let mut last_err = None;
         for _ in 0..attempts.max(1) {
-            match Client::connect(path) {
+            match dial() {
                 Ok(client) => return Ok(client),
                 Err(e) => {
                     last_err = Some(e);
@@ -188,7 +288,7 @@ mod unix_impl {
             }
         }
         Err(last_err.unwrap_or_else(|| {
-            std::io::Error::new(std::io::ErrorKind::NotFound, "serve socket never appeared")
+            std::io::Error::new(std::io::ErrorKind::NotFound, "serve endpoint never appeared")
         }))
     }
 }

@@ -30,11 +30,22 @@
 //!   the previous-set guess (Algorithm 4) cheap and accurate.
 //! * [`metrics`] — request counters and latency quantiles (reusing
 //!   [`crate::benchkit::Timing`]), exposed through the `stats` request.
-//! * [`server`] — the transports: newline-delimited JSON over
-//!   stdin/stdout or a Unix-domain socket. Zero external crates.
-//! * [`client`] — a small blocking client for the socket transport (the
-//!   `client` CLI subcommand and the serving example use it), with
-//!   jittered exponential backoff for retryable rejections.
+//! * [`server`] — the request core plus the blocking transports:
+//!   newline-delimited JSON over stdin/stdout or a Unix-domain socket
+//!   (thread per connection, drain-latch shutdown handshake). Zero
+//!   external crates. With a gather window configured, concurrent
+//!   `fit_point`/`predict` requests against the same dataset
+//!   fingerprint and option regime coalesce into one packed solve / one
+//!   stacked-row gemv, bitwise-identical to sequential handling
+//!   (DESIGN.md §14).
+//! * [`net`] — the event-driven TCP transport: a non-blocking `poll(2)`
+//!   loop owns every connection (readiness-driven read/write buffers,
+//!   accept-time connection limits, per-connection write backpressure),
+//!   with a bounded dispatcher pool running the handlers.
+//! * [`client`] — a small blocking client for the socket transports
+//!   (Unix or TCP; the `client` CLI subcommand and the serving example
+//!   use it), with jittered exponential backoff for retryable
+//!   rejections.
 //! * [`error`] — the typed [`error::ServeError`] every layer reports:
 //!   deadlines with partial progress, overload with `retry_after_ms`,
 //!   caught panic payloads, drain rejections (DESIGN.md §12).
@@ -44,6 +55,8 @@
 pub mod client;
 pub mod error;
 pub mod metrics;
+#[cfg(unix)]
+pub mod net;
 pub mod protocol;
 pub mod registry;
 pub mod scheduler;

@@ -504,6 +504,28 @@ impl ModelSpec {
         format!("{}:q={}", self.lambda, self.q)
     }
 
+    /// Coalescing key for cross-request batching (DESIGN.md §14).
+    /// Requests may share one batched solve only when *everything* that
+    /// could alter their handling matches: the dataset (its
+    /// fingerprint), the penalty identity (`op_key` — [`ModelSpec::point_key`]
+    /// for `fit_point`, [`ModelSpec::key`] plus the step for `predict`),
+    /// and the full tolerance/performance regime. Note the asymmetry
+    /// with the cache keys: `screen`/`threads`/`gap_tol`/`deadline_ms`
+    /// are excluded from cache identity (any regime produces the same
+    /// solution) but **included** here, because a batch runs its members
+    /// under one shared option set — members must agree on it so each is
+    /// handled exactly as it would have been alone.
+    pub fn batch_key(&self, fingerprint: u64, op_key: &str) -> u64 {
+        let canon = format!(
+            "{fingerprint:016x}:{op_key}:screen={}:threads={}:gap_tol={:016x}:deadline={}",
+            self.screen,
+            self.threads,
+            self.gap_tol.to_bits(),
+            self.deadline_ms
+        );
+        fnv1a(FNV_BASIS, canon.as_bytes())
+    }
+
     /// Build the path options (strategy is chosen later, per job).
     pub fn path_options(&self, prob: &Problem) -> Result<PathOptions, String> {
         let kind = match self.lambda.as_str() {
@@ -827,6 +849,41 @@ mod tests {
         .unwrap();
         assert_eq!(a.fingerprint(), a2.fingerprint());
         assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn batch_key_separates_regimes_but_not_sigmas() {
+        let base = ModelSpec {
+            lambda: "bh".to_string(),
+            q: 0.1,
+            path_length: 50,
+            screen: "auto".to_string(),
+            threads: 0,
+            gap_tol: 0.0,
+            deadline_ms: 0,
+        };
+        let fp = 0xdead_beef_u64;
+        let k = base.batch_key(fp, &base.point_key());
+        // Same spec, same key — sigma_ratio is NOT in the key (batching
+        // across σ is the whole point).
+        assert_eq!(k, base.batch_key(fp, &base.point_key()));
+        // Different dataset, penalty, or any regime knob splits the batch.
+        assert_ne!(k, base.batch_key(fp + 1, &base.point_key()));
+        let q2 = ModelSpec { q: 0.2, ..base.clone() };
+        assert_ne!(k, q2.batch_key(fp, &q2.point_key()));
+        let strong = ModelSpec { screen: "strong".to_string(), ..base.clone() };
+        assert_ne!(k, strong.batch_key(fp, &strong.point_key()));
+        let threads = ModelSpec { threads: 2, ..base.clone() };
+        assert_ne!(k, threads.batch_key(fp, &threads.point_key()));
+        let tol = ModelSpec { gap_tol: 1e-6, ..base.clone() };
+        assert_ne!(k, tol.batch_key(fp, &tol.point_key()));
+        let dl = ModelSpec { deadline_ms: 100, ..base.clone() };
+        assert_ne!(k, dl.batch_key(fp, &dl.point_key()));
+        // predict keys (model key + step) stay apart from fit_point keys.
+        assert_ne!(
+            base.batch_key(fp, &format!("predict:{}:step=3", base.key())),
+            base.batch_key(fp, &base.point_key())
+        );
     }
 
     #[test]

@@ -532,6 +532,21 @@ impl Registry {
         true
     }
 
+    /// [`Registry::record_panic`], `count` times — the batched-solve
+    /// path, where one worker panic fails every member of the batch and
+    /// sequential handling would have charged one strike per request.
+    /// Keeping strike parity means coalescing can't slow (or hasten) a
+    /// poisoned dataset's quarantine. Returns `true` if any strike
+    /// quarantined the entry (later strikes on an evicted entry are
+    /// no-ops by `record_panic`'s own race guard).
+    pub fn record_panics(&self, entry: &DatasetEntry, count: usize) -> bool {
+        let mut quarantined = false;
+        for _ in 0..count {
+            quarantined |= self.record_panic(entry);
+        }
+        quarantined
+    }
+
     // --- durable-state journal (DESIGN.md §13) ---------------------------
 
     /// Append one JSON record, framed `[u32 len][u64 fnv1a(payload)][payload]`

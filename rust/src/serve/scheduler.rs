@@ -21,11 +21,17 @@
 //!   configures it), jobs arriving to a deep queue are rejected with
 //!   [`ServeError::Overload`] and a `retry_after_ms` hint instead of
 //!   parking — the default remains blocking backpressure.
+//!
+//! The module also hosts the cross-request [`Batcher`] (DESIGN.md §14):
+//! a keyed gather queue that coalesces requests sharing a batch key
+//! (dataset fingerprint + tolerance regime) arriving within a small
+//! window into one leader-executed batch, per-request results handed
+//! back through [`BatchGate`]s.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::obs::registry as obsreg;
 use crate::pool::WorkerPool;
@@ -285,6 +291,157 @@ impl Scheduler {
     }
 }
 
+/// One request's seat in a coalesced batch: the leader executes the
+/// batch and delivers every member's result here; the member blocks in
+/// [`BatchGate::wait`]. One-shot — a second deliver replaces an untaken
+/// result, which no correct leader does.
+pub struct BatchGate<R> {
+    slot: Mutex<Option<Result<R, ServeError>>>,
+    cv: Condvar,
+}
+
+impl<R> BatchGate<R> {
+    fn new() -> Arc<BatchGate<R>> {
+        Arc::new(BatchGate { slot: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    /// Hand this member its result and wake it.
+    pub fn deliver(&self, result: Result<R, ServeError>) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+
+    /// Block until the leader delivers this member's result.
+    pub fn wait(&self) -> Result<R, ServeError> {
+        let mut slot = self.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.cv.wait(slot).unwrap();
+        }
+    }
+}
+
+/// What [`Batcher::submit`] made of a request: the first arrival under a
+/// key becomes the **leader** (it must call [`Batcher::gather`] and
+/// execute the batch); later arrivals within the window are **joiners**
+/// that park on their gate until the leader delivers.
+pub enum Submitted<R> {
+    /// Execute the batch: gather with the returned `(key, gen)`, run the
+    /// items, deliver every gate. The leader's own item is the first one
+    /// gathered (arrival order is preserved).
+    Leader { key: u64, gen: u64 },
+    /// Wait on the gate; some leader owns this request now.
+    Joiner(Arc<BatchGate<R>>),
+}
+
+/// An open batch: members in arrival order. `closed` flips when the
+/// batch fills to `max_batch` (the leader's gather returns immediately)
+/// or when the leader's window expires.
+struct OpenBatch<I, R> {
+    closed: bool,
+    items: Vec<(I, Arc<BatchGate<R>>)>,
+}
+
+struct BatchMap<I, R> {
+    /// All un-gathered batches, keyed by `(batch key, generation)` — the
+    /// generation distinguishes successive batches under one key.
+    batches: HashMap<(u64, u64), OpenBatch<I, R>>,
+    /// The currently joinable generation per key. A key absent here means
+    /// the next arrival starts a fresh batch (and leads it).
+    current: HashMap<u64, u64>,
+    next_gen: u64,
+}
+
+/// Keyed gather queue for cross-request coalescing. `submit` is
+/// non-blocking and lock-scoped; the leader alone pays the gather-window
+/// wait. Correctness does not depend on timing: a batch is just the set
+/// of requests the leader happened to collect, and the executor runs
+/// them in arrival order — any gather outcome is a valid sequential
+/// serialization (DESIGN.md §14).
+pub struct Batcher<I, R> {
+    inner: Mutex<BatchMap<I, R>>,
+    cv: Condvar,
+    window: Duration,
+    max_batch: usize,
+}
+
+impl<I, R> Batcher<I, R> {
+    /// A batcher gathering for `window_ms` with at most `max_batch`
+    /// members per batch (a full batch closes early).
+    pub fn new(window_ms: u64, max_batch: usize) -> Batcher<I, R> {
+        Batcher {
+            inner: Mutex::new(BatchMap {
+                batches: HashMap::new(),
+                current: HashMap::new(),
+                next_gen: 0,
+            }),
+            cv: Condvar::new(),
+            window: Duration::from_millis(window_ms),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Enqueue one request under its batch key. First arrival leads;
+    /// later arrivals join until the batch closes (gathered or full).
+    pub fn submit(&self, key: u64, item: I) -> Submitted<R> {
+        let gate = BatchGate::new();
+        let mut map = self.inner.lock().unwrap();
+        if let Some(&gen) = map.current.get(&key) {
+            let batch = map
+                .batches
+                .get_mut(&(key, gen))
+                .expect("current generation must have an open batch");
+            batch.items.push((item, Arc::clone(&gate)));
+            obsreg::SERVE_BATCHED_REQUESTS.inc();
+            if batch.items.len() >= self.max_batch {
+                batch.closed = true;
+                map.current.remove(&key);
+                self.cv.notify_all();
+            }
+            return Submitted::Joiner(gate);
+        }
+        let gen = map.next_gen;
+        map.next_gen += 1;
+        map.batches
+            .insert((key, gen), OpenBatch { closed: false, items: vec![(item, gate)] });
+        map.current.insert(key, gen);
+        Submitted::Leader { key, gen }
+    }
+
+    /// Leader side: park for the gather window (or until the batch
+    /// fills), then take the batch. Returns the members in arrival order
+    /// — the leader's own item first.
+    pub fn gather(&self, key: u64, gen: u64) -> Vec<(I, Arc<BatchGate<R>>)> {
+        let deadline = Instant::now() + self.window;
+        let mut map = self.inner.lock().unwrap();
+        loop {
+            let closed = map
+                .batches
+                .get(&(key, gen))
+                .expect("leader's batch cannot disappear before gather")
+                .closed;
+            if closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                // Window over: close the batch ourselves so no further
+                // joiner slips in after we release the lock.
+                if map.current.get(&key) == Some(&gen) {
+                    map.current.remove(&key);
+                }
+                break;
+            }
+            map = self.cv.wait_timeout(map, deadline - now).unwrap().0;
+        }
+        let batch = map.batches.remove(&(key, gen)).expect("gather takes the batch once");
+        obsreg::SERVE_BATCHES.inc();
+        batch.items
+    }
+}
+
 /// Screening-strategy policy: explicit request wins; `auto` uses the
 /// previous-set algorithm (Algorithm 4) when a cached warm-start seed
 /// exists — the previous support is then a good guess and the strong set
@@ -443,6 +600,80 @@ mod tests {
         sched.set_fit_threads(0);
         // (compared loosely: another test may race the global setting)
         assert!(sched.fit_threads() >= 1);
+    }
+
+    #[test]
+    fn batcher_coalesces_and_demuxes_in_arrival_order() {
+        let batcher: Arc<Batcher<u32, u32>> = Arc::new(Batcher::new(2000, 8));
+        let lead = match batcher.submit(7, 100) {
+            Submitted::Leader { key, gen } => (key, gen),
+            Submitted::Joiner(_) => panic!("first arrival must lead"),
+        };
+        let joiners: Vec<_> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..3u32)
+                .map(|i| {
+                    let batcher = Arc::clone(&batcher);
+                    scope.spawn(move || match batcher.submit(7, 101 + i) {
+                        Submitted::Joiner(gate) => gate.wait(),
+                        Submitted::Leader { .. } => panic!("open batch must absorb arrivals"),
+                    })
+                })
+                .collect();
+            // Let the joiners enqueue, then gather and execute: result =
+            // item · 2, delivered per member.
+            std::thread::sleep(Duration::from_millis(100));
+            let items = batcher.gather(lead.0, lead.1);
+            assert_eq!(items.len(), 4);
+            assert_eq!(items[0].0, 100, "leader's item comes first");
+            for (item, gate) in &items {
+                gate.deliver(Ok(item * 2));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut got: Vec<u32> = joiners.into_iter().map(|r| r.unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![202, 204, 206]);
+    }
+
+    #[test]
+    fn full_batch_closes_before_the_window() {
+        let batcher: Arc<Batcher<u32, u32>> = Arc::new(Batcher::new(60_000, 2));
+        let lead = match batcher.submit(1, 0) {
+            Submitted::Leader { key, gen } => (key, gen),
+            Submitted::Joiner(_) => panic!("first arrival must lead"),
+        };
+        let gate = match batcher.submit(1, 1) {
+            Submitted::Joiner(gate) => gate,
+            Submitted::Leader { .. } => panic!("second arrival must join"),
+        };
+        // max_batch reached: gather returns far inside the 60 s window...
+        let t0 = Instant::now();
+        let items = batcher.gather(lead.0, lead.1);
+        assert!(t0.elapsed() < Duration::from_secs(10), "gather must not wait the window out");
+        assert_eq!(items.len(), 2);
+        // ...and the key is free again — the next arrival leads a new batch.
+        assert!(matches!(batcher.submit(1, 2), Submitted::Leader { .. }));
+        for (item, g) in &items {
+            g.deliver(Ok(*item));
+        }
+        assert_eq!(gate.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_coalesce_and_errors_fan_out() {
+        let batcher: Batcher<u32, u32> = Batcher::new(0, 8);
+        let a = batcher.submit(10, 0);
+        let b = batcher.submit(11, 1);
+        assert!(matches!(a, Submitted::Leader { .. }));
+        assert!(matches!(b, Submitted::Leader { .. }));
+        // A zero window gathers immediately: a batch of one, and a typed
+        // error delivered through the gate round-trips.
+        if let Submitted::Leader { key, gen } = a {
+            let items = batcher.gather(key, gen);
+            assert_eq!(items.len(), 1);
+            items[0].1.deliver(Err(ServeError::Panic { message: "boom".into() }));
+            assert_eq!(items[0].1.wait().unwrap_err().kind(), "panic");
+        }
     }
 
     #[test]

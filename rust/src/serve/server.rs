@@ -9,20 +9,23 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::jsonio::Json;
+use crate::linalg::packed::score_rows;
 use crate::obs::registry as obsreg;
 use crate::slope::cancel::CancelToken;
 use crate::slope::family::{sigmoid, Family};
-use crate::slope::path::{fit_path_seeded, fit_point, zero_seed, NativeGradient, PathSeed};
+use crate::slope::path::{
+    fit_path_seeded, fit_point_batch, zero_seed, NativeGradient, PathSeed, PointFit, Strategy,
+};
 
 use super::error::ServeError;
 use super::metrics::Metrics;
 use super::protocol::{self, DatasetSpec, Envelope, ModelSpec, Request};
 use super::registry::{CachedModel, DatasetEntry, Fetched, PointState, Registry};
-use super::scheduler::{choose_strategy, JobOptions, Scheduler};
+use super::scheduler::{choose_strategy, Batcher, JobOptions, Scheduler, Submitted};
 
 /// Server construction parameters.
 #[derive(Clone, Debug)]
@@ -65,6 +68,20 @@ pub struct ServerConfig {
     /// strikes to `<dir>/registry.journal` and restores them on boot.
     /// `None` (the default) keeps the registry purely in-memory.
     pub state_dir: Option<std::path::PathBuf>,
+    /// Open-connection cap shared by the socket transports (Unix and
+    /// TCP): connections past the cap are refused at accept with a typed
+    /// `overload` close instead of spawning state the load-shedder never
+    /// sees. 0 falls back to the default (1024).
+    pub max_conns: usize,
+    /// Cross-request batching gather window in milliseconds (DESIGN.md
+    /// §14): `fit_point`/`predict` requests sharing a dataset
+    /// fingerprint and tolerance regime that arrive within this window
+    /// of each other coalesce into one solve. 0 (the default) disables
+    /// batching — every request runs alone, exactly as before.
+    pub gather_window_ms: u64,
+    /// Most requests one batch may absorb (a full batch closes its
+    /// gather window early). Ignored while batching is disabled.
+    pub max_batch: usize,
 }
 
 impl Default for ServerConfig {
@@ -79,8 +96,19 @@ impl Default for ServerConfig {
             deadline_ms: 0,
             shed_queue: 0,
             state_dir: None,
+            max_conns: 0,
+            gather_window_ms: 0,
+            max_batch: 32,
         }
     }
+}
+
+/// The cross-request batchers, present only while batching is enabled.
+/// `fit_point` members are their `sigma_ratio`s; `predict` members are
+/// their raw row blocks. Results are fully built response objects.
+struct Batching {
+    point: Batcher<f64, Json>,
+    predict: Batcher<Vec<Vec<f64>>, Json>,
 }
 
 /// A running SLOPE fit server (transport-independent core).
@@ -96,6 +124,10 @@ pub struct Server {
     max_line_bytes: usize,
     /// Server default for requests that leave `deadline_ms` at 0.
     deadline_ms: u64,
+    /// Open-connection cap for the socket transports.
+    max_conns: usize,
+    /// Cross-request batching (None = disabled).
+    batching: Option<Batching>,
 }
 
 impl Server {
@@ -118,6 +150,10 @@ impl Server {
         if cfg.shed_queue > 0 {
             sched.set_shed_limit(Some(cfg.shed_queue));
         }
+        let batching = (cfg.gather_window_ms > 0).then(|| Batching {
+            point: Batcher::new(cfg.gather_window_ms, cfg.max_batch),
+            predict: Batcher::new(cfg.gather_window_ms, cfg.max_batch),
+        });
         Server {
             registry: Registry::with_state_dir(cfg.cache, cfg.state_dir.as_deref()),
             sched,
@@ -126,7 +162,34 @@ impl Server {
             gap_tol: cfg.gap_tol,
             max_line_bytes: cfg.max_line_bytes.max(1024),
             deadline_ms: cfg.deadline_ms,
+            max_conns: if cfg.max_conns == 0 { 1024 } else { cfg.max_conns },
+            batching,
         }
+    }
+
+    /// Open-connection cap shared by the socket transports.
+    pub(crate) fn max_conns(&self) -> usize {
+        self.max_conns
+    }
+
+    /// Byte cap on one NDJSON request line (the TCP framing layer
+    /// enforces the same bound the BufRead transports do).
+    pub(crate) fn max_line_bytes(&self) -> usize {
+        self.max_line_bytes
+    }
+
+    /// Count and render a typed `oversized_line` error response (shared
+    /// by the BufRead and poll-loop framings).
+    pub(crate) fn oversized_response(&self, bytes: usize) -> String {
+        self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
+        let err = ServeError::OversizedLine { bytes, limit: self.max_line_bytes };
+        protocol::error_response(0, &err)
+    }
+
+    /// Block until every admitted fit job has finished (the transports'
+    /// graceful-drain step).
+    pub(crate) fn await_jobs_idle(&self) {
+        self.sched.await_idle();
     }
 
     /// The deadline one fit job runs under: the request's explicit
@@ -220,7 +283,7 @@ impl Server {
                 self.do_fit_point(&dataset, &model, sigma_ratio)
             }
             Request::Predict { dataset, model, x, step } => {
-                self.do_predict(&dataset, &model, &x, step)
+                self.do_predict(&dataset, &model, x, step)
             }
             Request::RegisterDataset { dataset } => self.do_register(&dataset),
             Request::Stats => Ok(self.do_stats()),
@@ -393,6 +456,11 @@ impl Server {
         ]))
     }
 
+    /// One `fit_point` request: without batching it is a singleton batch;
+    /// with batching enabled it joins (or leads) the open batch for its
+    /// `(fingerprint, point identity, option regime)` key, and the leader
+    /// runs the gathered batch as one scheduler job, demultiplexing the
+    /// per-member responses back through each joiner's gate.
     fn do_fit_point(
         &self,
         dataset: &DatasetSpec,
@@ -400,90 +468,199 @@ impl Server {
         sigma_ratio: f64,
     ) -> Result<Json, ServeError> {
         let entry = self.registry.dataset(dataset)?;
+        let Some(batching) = &self.batching else {
+            return self
+                .run_point_batch(&entry, model, &[sigma_ratio])
+                .pop()
+                .expect("singleton batch produces one result");
+        };
+        // Requests may only coalesce when they would solve the same
+        // problem under the same option regime: the batch key covers the
+        // dataset fingerprint, the point-cache identity, and every
+        // perf/tolerance knob the cache identity deliberately excludes.
+        let key = model.batch_key(entry.fingerprint, &model.point_key());
+        match batching.point.submit(key, sigma_ratio) {
+            Submitted::Joiner(gate) => gate.wait(),
+            Submitted::Leader { key, gen } => {
+                let members = batching.point.gather(key, gen);
+                let (ratios, gates): (Vec<_>, Vec<_>) = members.into_iter().unzip();
+                let mut results = self.run_point_batch(&entry, model, &ratios);
+                let own = results.remove(0);
+                for (gate, result) in gates.into_iter().skip(1).zip(results) {
+                    gate.deliver(result);
+                }
+                own
+            }
+        }
+    }
+
+    /// Run a coalesced batch of point fits as ONE scheduler job.
+    ///
+    /// Items execute sequentially inside the job in arrival order and are
+    /// chained through the warm-start cycle exactly as back-to-back
+    /// requests would be (item k stores its seed, item k+1 reads it), so
+    /// on the healthy path the batch's responses are bitwise-identical to
+    /// the sequential serialization. The batch shares one deadline token;
+    /// once it fires, every unconverged member reports `deadline` (n
+    /// separate tokens would attribute the expiry per-request, which is
+    /// the one place batch error attribution is coarser). A panic fails
+    /// every member with a typed `panic` error and charges one quarantine
+    /// strike per member — the ledger lands where the sequential replays
+    /// would have left it.
+    fn run_point_batch(
+        &self,
+        entry: &Arc<DatasetEntry>,
+        model: &ModelSpec,
+        ratios: &[f64],
+    ) -> Vec<Result<Json, ServeError>> {
+        let n = ratios.len();
+        let fan = |e: ServeError| -> Vec<Result<Json, ServeError>> {
+            (0..n).map(|_| Err(e.clone())).collect()
+        };
         let key = model.point_key();
         let prior = entry.point_state(&key);
         let warm = prior.is_some();
-        let strategy = choose_strategy(&model.screen, warm).map_err(ServeError::Invalid)?;
-        let mut opts = model
-            .path_options(entry.problem.as_ref())
-            .map_err(ServeError::Invalid)?
-            .with_strategy(strategy)
-            .with_threads(self.job_threads(model))
-            .with_pack_cache(entry.pack_cache());
+        // Chaining replicates the store/read cycle, which only exists
+        // while the warm-start cache is on; with it off, every item is
+        // the same independent cold fit a sequential client would get.
+        let chain = self.registry.cache_enabled();
+        let strategy_first = match choose_strategy(&model.screen, warm) {
+            Ok(s) => s,
+            Err(e) => return fan(ServeError::Invalid(e)),
+        };
+        // Item k>0 chains off item k-1's stored seed, so it is warm no
+        // matter how the batch started.
+        let strategy_rest = if chain {
+            match choose_strategy(&model.screen, true) {
+                Ok(s) => s,
+                Err(e) => return fan(ServeError::Invalid(e)),
+            }
+        } else {
+            strategy_first
+        };
+        let base_opts = match model.path_options(entry.problem.as_ref()) {
+            Ok(o) => o,
+            Err(e) => return fan(ServeError::Invalid(e)),
+        };
+        let token = self.job_token(model);
         // Same precedence as the path-fit site: per-request gap_tol was
         // applied by `path_options`; the server default fills unset
         // requests, and gap-driven point fits reuse the dataset's cached
         // column norms (the per-request fit_point stream is exactly the
         // case where re-sweeping norms per call would cancel the win).
-        if model.gap_tol == 0.0 && self.gap_tol > 0.0 {
-            opts = opts.with_gap_tol(self.gap_tol);
-        }
-        if strategy.is_gap_driven() {
-            opts = opts.with_col_norms(entry.col_norms(opts.par()));
-        }
-        let token = self.job_token(model);
-        if let Some((tok, _)) = &token {
-            opts = opts.with_cancel(tok.clone());
-        }
+        let build_opts = |strategy: Strategy| {
+            let mut opts = base_opts
+                .clone()
+                .with_strategy(strategy)
+                .with_threads(self.job_threads(model))
+                .with_pack_cache(entry.pack_cache());
+            if model.gap_tol == 0.0 && self.gap_tol > 0.0 {
+                opts = opts.with_gap_tol(self.gap_tol);
+            }
+            if strategy.is_gap_driven() {
+                opts = opts.with_col_norms(entry.col_norms(opts.par()));
+            }
+            if let Some((tok, _)) = &token {
+                opts = opts.with_cancel(tok.clone());
+            }
+            opts
+        };
+        let opts_first = build_opts(strategy_first);
+        let opts_rest = build_opts(strategy_rest);
         let job = JobOptions { cancel: token.as_ref().map(|(t, _)| t.clone()), shed: true };
         let prob = Arc::clone(&entry.problem);
+        let sigma_ratios: Vec<f64> = ratios.to_vec();
         let t_enqueue = Instant::now();
         let result = self.sched.run_job(job, move || {
             let out = {
                 let mut job_span = crate::obs::trace::span("fit_job");
                 if job_span.active() {
                     job_span.s("op", "fit_point");
+                    job_span.u("batch", sigma_ratios.len() as u64);
                     job_span.u("queue_wait_us", t_enqueue.elapsed().as_micros() as u64);
                 }
                 let gradient = NativeGradient(prob.as_ref());
                 let (seed, sigma_max): (PathSeed, f64) = match prior {
                     Some(state) => (state.seed.clone(), state.sigma_max),
                     None => {
-                        let zero = zero_seed(prob.as_ref(), &opts, &gradient);
+                        let zero = zero_seed(prob.as_ref(), &opts_first, &gradient);
                         let smax = zero.sigma;
                         (zero, smax)
                     }
                 };
-                let point =
-                    fit_point(prob.as_ref(), &opts, &gradient, sigma_max * sigma_ratio, &seed);
-                (point, sigma_max)
+                let sigmas: Vec<f64> = sigma_ratios.iter().map(|r| sigma_max * r).collect();
+                let points = fit_point_batch(
+                    prob.as_ref(),
+                    &opts_first,
+                    &opts_rest,
+                    &gradient,
+                    &seed,
+                    &sigmas,
+                    chain,
+                );
+                (points, sigma_max)
             };
             if !crate::obs::trace::disabled() {
                 crate::obs::trace::flush();
             }
             out
         });
-        let (point, sigma_max) = match result {
+        let (points, sigma_max) = match result {
             Ok(v) => v,
             Err(e) => {
                 if matches!(e, ServeError::Panic { .. }) {
-                    self.registry.record_panic(&entry);
+                    self.registry.record_panics(entry, n);
                 }
-                return Err(e);
+                return fan(e);
             }
         };
-        // A fit the deadline interrupted is an error with partial
-        // progress, and its state is never cached as a warm start.
-        if !point.solver_converged {
-            if let Some((tok, deadline_ms)) = &token {
-                if tok.is_cancelled() {
-                    obsreg::SERVE_DEADLINE_EXPIRED.inc();
-                    return Err(ServeError::Deadline {
-                        deadline_ms: *deadline_ms,
-                        steps_done: 0,
-                        gap: point.gap,
-                    });
+        let mut out = Vec::with_capacity(n);
+        let mut last_store: Option<&PointFit> = None;
+        for (k, point) in points.iter().enumerate() {
+            // A fit the deadline interrupted is an error with partial
+            // progress, and its state is never cached as a warm start.
+            if !point.solver_converged {
+                if let Some((tok, deadline_ms)) = &token {
+                    if tok.is_cancelled() {
+                        obsreg::SERVE_DEADLINE_EXPIRED.inc();
+                        out.push(Err(ServeError::Deadline {
+                            deadline_ms: *deadline_ms,
+                            steps_done: 0,
+                            gap: point.gap,
+                        }));
+                        continue;
+                    }
                 }
             }
+            let warm_k = warm || (chain && k > 0);
+            if warm_k {
+                self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.metrics.counters.cold_fits.fetch_add(1, Ordering::Relaxed);
+            }
+            let strategy_k = if chain && k > 0 { strategy_rest } else { strategy_first };
+            last_store = Some(point);
+            out.push(Ok(Self::point_response(entry, point, sigma_max, warm_k, strategy_k)));
         }
-        if warm {
-            self.metrics.counters.warm_fits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.metrics.counters.cold_fits.fetch_add(1, Ordering::Relaxed);
-        }
+        // Sequentially each item would store its seed and the next would
+        // read it back; the net registry state is the last stored item's,
+        // written once.
         if self.registry.cache_enabled() {
-            entry.store_point_state(&key, PointState { seed: point.seed(), sigma_max });
+            if let Some(point) = last_store {
+                entry.store_point_state(&key, PointState { seed: point.seed(), sigma_max });
+            }
         }
+        out
+    }
+
+    /// The `fit_point` response object (shared by every batch member).
+    fn point_response(
+        entry: &DatasetEntry,
+        point: &PointFit,
+        sigma_max: f64,
+        warm: bool,
+        strategy: Strategy,
+    ) -> Json {
         let nonzeros: Vec<Json> = point
             .beta
             .iter()
@@ -492,7 +669,7 @@ impl Server {
             .take(100)
             .map(|(i, &v)| Json::Arr(vec![Json::Num(i as f64), Json::Num(v)]))
             .collect();
-        Ok(Json::obj(vec![
+        Json::obj(vec![
             ("dataset", Json::Str(entry.label.clone())),
             ("sigma", Json::Num(point.sigma)),
             ("sigma_max", Json::Num(sigma_max)),
@@ -523,81 +700,151 @@ impl Server {
             ("dev_ratio", Json::Num(point.dev_ratio)),
             ("wall_s", Json::Num(point.wall_time)),
             ("nonzeros", Json::Arr(nonzeros)),
-        ]))
+        ])
     }
 
+    /// One `predict` request: without batching it is a singleton batch;
+    /// with batching enabled, requests against the same fitted model and
+    /// step within the gather window stack their row blocks into one
+    /// blocked gemv per class and the responses are demultiplexed by row
+    /// span.
     fn do_predict(
         &self,
         dataset: &DatasetSpec,
         model: &ModelSpec,
-        x: &[Vec<f64>],
+        x: Vec<Vec<f64>>,
         step: Option<usize>,
     ) -> Result<Json, ServeError> {
         let entry = self.registry.dataset(dataset)?;
-        let (m, source) = self.fitted_model(&entry, model)?;
+        let Some(batching) = &self.batching else {
+            return self
+                .run_predict_batch(&entry, model, step, vec![x])
+                .pop()
+                .expect("singleton batch produces one result");
+        };
+        // Predict identity is the full fitted path plus the step, so the
+        // op key uses `model.key()` (which includes `path_length`), not
+        // the point identity.
+        let op_key = format!("{}:step={}", model.key(), step.map_or(-1, |s| s as i64));
+        let key = model.batch_key(entry.fingerprint, &op_key);
+        match batching.predict.submit(key, x) {
+            Submitted::Joiner(gate) => gate.wait(),
+            Submitted::Leader { key, gen } => {
+                let members = batching.predict.gather(key, gen);
+                let (blocks, gates): (Vec<_>, Vec<_>) = members.into_iter().unzip();
+                let mut results = self.run_predict_batch(&entry, model, step, blocks);
+                let own = results.remove(0);
+                for (gate, result) in gates.into_iter().skip(1).zip(results) {
+                    gate.deliver(result);
+                }
+                own
+            }
+        }
+    }
+
+    /// Score a coalesced batch of predict requests with one stacked-row
+    /// pass per class.
+    ///
+    /// Every member's rows (transformed into model coordinates where the
+    /// design was standardized server-side) are packed into one row slab;
+    /// [`score_rows`] streams `beta` once across four rows at a time with
+    /// per-row scalar accumulators seeded by the dataset intercept, so
+    /// each score is bitwise-identical to the sequential per-row loop it
+    /// replaces. A member with a malformed row gets its own typed error
+    /// while the rest of the batch proceeds, exactly as sequential
+    /// handling would.
+    fn run_predict_batch(
+        &self,
+        entry: &Arc<DatasetEntry>,
+        model: &ModelSpec,
+        step: Option<usize>,
+        blocks: Vec<Vec<Vec<f64>>>,
+    ) -> Vec<Result<Json, ServeError>> {
+        let nblocks = blocks.len();
+        let fan = |e: ServeError| -> Vec<Result<Json, ServeError>> {
+            (0..nblocks).map(|_| Err(e.clone())).collect()
+        };
+        let (m, source) = match self.fitted_model(entry, model) {
+            Ok(v) => v,
+            Err(e) => return fan(e),
+        };
         let prob = entry.problem.as_ref();
         let p = prob.p();
         let classes = prob.family.n_classes();
         let n_steps = m.fit.betas.len();
         let step = step.unwrap_or(n_steps.saturating_sub(1));
         if step >= n_steps {
-            return Err(ServeError::Invalid(format!(
+            return fan(ServeError::Invalid(format!(
                 "step {step} out of range (path has {n_steps} steps)"
             )));
         }
-        for (i, row) in x.iter().enumerate() {
-            if row.len() != p {
-                return Err(ServeError::Invalid(format!(
-                    "prediction row {i} has {} features, expected {p}",
-                    row.len()
-                )));
-            }
-        }
         let beta = m.fit.beta_at(step, prob.p_total());
-        let mut eta_rows = Vec::with_capacity(x.len());
-        let mut prob_rows = Vec::with_capacity(x.len());
-        for row in x {
-            // Map raw client rows into the model's coordinates when the
-            // design was standardized server-side (inline data).
-            let transformed;
-            let model_row: &[f64] = match &entry.transform {
-                Some(t) => {
-                    transformed = t.apply(row);
-                    transformed.as_slice()
-                }
-                None => row.as_slice(),
-            };
-            let mut scores = Vec::with_capacity(classes);
-            for l in 0..classes {
-                let base = l * p;
-                // entry.intercept restores the y-centering removed before
-                // a gaussian fit (0 for every other dataset kind).
-                let mut s = entry.intercept;
-                for (j, &v) in model_row.iter().enumerate() {
-                    s += v * beta[base + j];
-                }
-                scores.push(s);
+        // Pack each member's rows into the shared slab, recording its
+        // `(first_row, n_rows)` span for demultiplexing; malformed
+        // members record their error instead and contribute no rows.
+        let mut slab: Vec<f64> = Vec::new();
+        let mut spans: Vec<Result<(usize, usize), ServeError>> = Vec::with_capacity(nblocks);
+        let mut total_rows = 0usize;
+        for x in &blocks {
+            let bad = x.iter().enumerate().find_map(|(i, row)| {
+                (row.len() != p).then(|| {
+                    ServeError::Invalid(format!(
+                        "prediction row {i} has {} features, expected {p}",
+                        row.len()
+                    ))
+                })
+            });
+            if let Some(e) = bad {
+                spans.push(Err(e));
+                continue;
             }
-            if prob.family == Family::Binomial {
-                prob_rows.push(Json::Num(sigmoid(scores[0])));
+            for row in x {
+                // Map raw client rows into the model's coordinates when
+                // the design was standardized server-side (inline data).
+                match &entry.transform {
+                    Some(t) => slab.extend_from_slice(&t.apply(row)),
+                    None => slab.extend_from_slice(row),
+                }
             }
-            eta_rows.push(Json::nums(&scores));
+            spans.push(Ok((total_rows, x.len())));
+            total_rows += x.len();
         }
-        self.metrics
-            .counters
-            .predictions
-            .fetch_add(x.len() as u64, Ordering::Relaxed);
-        let mut fields = vec![
-            ("dataset", Json::Str(entry.label.clone())),
-            ("source", Json::Str(source.to_string())),
-            ("step", Json::Num(step as f64)),
-            ("sigma", Json::Num(m.fit.sigmas[step])),
-            ("eta", Json::Arr(eta_rows)),
-        ];
-        if prob.family == Family::Binomial {
-            fields.push(("prob", Json::Arr(prob_rows)));
+        // One blocked gemv per class over the whole slab. entry.intercept
+        // restores the y-centering removed before a gaussian fit (0 for
+        // every other dataset kind).
+        let mut class_scores: Vec<Vec<f64>> = Vec::with_capacity(classes);
+        for l in 0..classes {
+            let mut scores = vec![0.0; total_rows];
+            score_rows(&slab, p, &beta[l * p..(l + 1) * p], entry.intercept, &mut scores);
+            class_scores.push(scores);
         }
-        Ok(Json::obj(fields))
+        spans
+            .into_iter()
+            .map(|span| {
+                let (first, nrows) = span?;
+                let mut eta_rows = Vec::with_capacity(nrows);
+                let mut prob_rows = Vec::with_capacity(nrows);
+                for r in first..first + nrows {
+                    let scores: Vec<f64> = (0..classes).map(|l| class_scores[l][r]).collect();
+                    if prob.family == Family::Binomial {
+                        prob_rows.push(Json::Num(sigmoid(scores[0])));
+                    }
+                    eta_rows.push(Json::nums(&scores));
+                }
+                self.metrics.counters.predictions.fetch_add(nrows as u64, Ordering::Relaxed);
+                let mut fields = vec![
+                    ("dataset", Json::Str(entry.label.clone())),
+                    ("source", Json::Str(source.to_string())),
+                    ("step", Json::Num(step as f64)),
+                    ("sigma", Json::Num(m.fit.sigmas[step])),
+                    ("eta", Json::Arr(eta_rows)),
+                ];
+                if prob.family == Family::Binomial {
+                    fields.push(("prob", Json::Arr(prob_rows)));
+                }
+                Ok(Json::obj(fields))
+            })
+            .collect()
     }
 
     /// Intern a file-backed dataset ahead of any fit: the file is
@@ -671,10 +918,19 @@ impl Server {
     /// the stream is severed without a response after the planned number
     /// of requests — the chaos harness' stand-in for a client vanishing
     /// mid-conversation.
-    pub fn serve_lines<R: BufRead, W: Write>(
+    pub fn serve_lines<R: BufRead, W: Write>(&self, reader: R, writer: W) -> std::io::Result<()> {
+        self.serve_lines_inner(reader, writer, None)
+    }
+
+    /// [`Server::serve_lines`] with an optional drain latch: socket
+    /// transports pass one so shutdown can wait for the exact moment
+    /// every in-flight response has been flushed instead of sleeping a
+    /// guessed interval and hoping the flushes fit inside it.
+    pub(crate) fn serve_lines_inner<R: BufRead, W: Write>(
         &self,
         mut reader: R,
         mut writer: W,
+        latch: Option<&DrainLatch>,
     ) -> std::io::Result<()> {
         let drop_after = crate::fault::drop_after_lines();
         let mut lines_handled: u64 = 0;
@@ -683,10 +939,8 @@ impl Server {
             match read_line_capped(&mut reader, &mut buf, self.max_line_bytes)? {
                 LineRead::Eof => break,
                 LineRead::Oversized(bytes) => {
-                    self.metrics.counters.errors.fetch_add(1, Ordering::Relaxed);
-                    let err =
-                        ServeError::OversizedLine { bytes, limit: self.max_line_bytes };
-                    writer.write_all(protocol::error_response(0, &err).as_bytes())?;
+                    let _busy = BusyGuard::new(latch);
+                    writer.write_all(self.oversized_response(bytes).as_bytes())?;
                     writer.write_all(b"\n")?;
                     writer.flush()?;
                     continue;
@@ -704,11 +958,16 @@ impl Server {
                     return Ok(());
                 }
             }
+            // Busy from "request read" to "response flushed" — the drain
+            // latch's definition of an in-flight request; the RAII guard
+            // keeps the count balanced across the early `?` returns.
+            let busy = BusyGuard::new(latch);
             let response = self.handle_line(trimmed);
             lines_handled += 1;
             writer.write_all(response.as_bytes())?;
             writer.write_all(b"\n")?;
             writer.flush()?;
+            drop(busy);
             if self.is_shutdown() {
                 break;
             }
@@ -717,21 +976,47 @@ impl Server {
     }
 
     /// Serve over a Unix-domain socket, one handler thread per
-    /// connection, until a `shutdown` request arrives. Removes any stale
-    /// socket file first and cleans up on exit; open connections are
-    /// actively closed on shutdown so idle clients cannot wedge the
-    /// server in its handler join.
+    /// connection, until a `shutdown` request arrives.
+    ///
+    /// Binding probes an existing socket file first: if something
+    /// answers, a second server is live and the bind is refused
+    /// (`AddrInUse`) instead of silently stealing its socket; only a
+    /// stale, unanswering file is removed. Connections past the
+    /// `max_conns` cap are refused at accept with a typed `overload`
+    /// close. Shutdown drains deterministically: admitted jobs finish,
+    /// the drain latch waits for every in-flight response to be flushed,
+    /// and only then are open connections severed and handlers joined —
+    /// idle clients cannot wedge the join, and finished handles are
+    /// pruned each loop turn so short-lived connections do not
+    /// accumulate fds.
     #[cfg(unix)]
     pub fn serve_unix(self: &Arc<Self>, path: &std::path::Path) -> std::io::Result<()> {
         use std::collections::HashMap;
         use std::os::unix::net::{UnixListener, UnixStream};
-        let _ = std::fs::remove_file(path);
+        if path.exists() {
+            match UnixStream::connect(path) {
+                // A live server answered the probe: refuse to steal its
+                // socket (the old unconditional remove_file silently
+                // orphaned a running instance).
+                Ok(_) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::AddrInUse,
+                        format!(
+                            "socket {} is answering: another server is already live",
+                            path.display()
+                        ),
+                    ));
+                }
+                Err(_) => {
+                    let _ = std::fs::remove_file(path);
+                }
+            }
+        }
         let listener = UnixListener::bind(path)?;
         listener.set_nonblocking(true)?;
+        let latch = Arc::new(DrainLatch::new());
         // Live connection registry: each handler removes its own entry on
-        // exit (closing the duplicated fd), and finished JoinHandles are
-        // pruned each loop turn — a long-running server does not
-        // accumulate fds or handles from short-lived connections.
+        // exit (closing the duplicated fd).
         let live: Arc<Mutex<HashMap<u64, UnixStream>>> = Arc::new(Mutex::new(HashMap::new()));
         let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
         let mut next_id = 0u64;
@@ -739,6 +1024,18 @@ impl Server {
             match listener.accept() {
                 Ok((stream, _addr)) => {
                     let _ = stream.set_nonblocking(false);
+                    // Accept-time admission control: past the cap, answer
+                    // with a typed `overload` close instead of spawning
+                    // handler state the load-shedder never sees.
+                    if live.lock().unwrap().len() >= self.max_conns {
+                        obsreg::SERVE_CONN_LIMIT_REJECTED.inc();
+                        let mut stream = stream;
+                        let err = ServeError::Overload { retry_after_ms: 1000 };
+                        let _ = stream.write_all(protocol::error_response(0, &err).as_bytes());
+                        let _ = stream.write_all(b"\n");
+                        let _ = stream.flush();
+                        continue;
+                    }
                     match stream.try_clone() {
                         Ok(tracked) => {
                             let id = next_id;
@@ -746,9 +1043,14 @@ impl Server {
                             live.lock().unwrap().insert(id, tracked);
                             let server = Arc::clone(self);
                             let live_for_handler = Arc::clone(&live);
+                            let latch_for_handler = Arc::clone(&latch);
                             handlers.push(std::thread::spawn(move || {
                                 if let Ok(s) = stream.try_clone() {
-                                    let _ = server.serve_lines(BufReader::new(s), stream);
+                                    let _ = server.serve_lines_inner(
+                                        BufReader::new(s),
+                                        stream,
+                                        Some(&latch_for_handler),
+                                    );
                                 }
                                 live_for_handler.lock().unwrap().remove(&id);
                             }));
@@ -774,13 +1076,13 @@ impl Server {
         // connections and write the response. Everything parked in the
         // queue was rejected with a typed `shutdown` error by
         // `begin_drain`, so every accepted request gets exactly one
-        // response.
+        // response. The latch then waits for the exact moment every one
+        // of those responses has been flushed (bounded, so a wedged peer
+        // cannot hold shutdown hostage) before idle connections are
+        // severed — severing is what unblocks handlers parked in a read
+        // on clients that never hang up.
         self.sched.await_idle();
-        // Give handlers a moment to flush their final responses to the
-        // wire, then unblock handlers still parked in a read on an idle
-        // connection: without the close, joining would wait forever on
-        // clients that never hang up.
-        std::thread::sleep(std::time::Duration::from_millis(50));
+        let _ = latch.wait_idle(Duration::from_secs(30));
         for stream in live.lock().unwrap().values() {
             let _ = stream.shutdown(std::net::Shutdown::Both);
         }
@@ -789,6 +1091,72 @@ impl Server {
         }
         let _ = std::fs::remove_file(path);
         Ok(())
+    }
+}
+
+/// Deterministic drain handshake for the socket transports: each handler
+/// counts itself busy from the moment a request line is read to the
+/// moment its response is flushed, and shutdown waits for the count to
+/// hit zero instead of sleeping a fixed interval (the old 50 ms pause
+/// dropped final responses whenever a flush outlasted it).
+pub(crate) struct DrainLatch {
+    busy: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl DrainLatch {
+    pub(crate) fn new() -> DrainLatch {
+        DrainLatch { busy: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn enter(&self) {
+        *self.busy.lock().unwrap() += 1;
+    }
+
+    fn exit(&self) {
+        let mut n = self.busy.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Wait until no handler is between reading a request and flushing
+    /// its response. Bounded: returns `false` on timeout so a peer that
+    /// stops reading its socket cannot hold shutdown hostage.
+    pub(crate) fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut n = self.busy.lock().unwrap();
+        while *n > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(n, deadline - now).unwrap();
+            n = guard;
+        }
+        true
+    }
+}
+
+/// RAII busy marker for [`DrainLatch`]; a `None` latch (the stdio
+/// transport, tests) makes it free.
+pub(crate) struct BusyGuard<'a>(Option<&'a DrainLatch>);
+
+impl<'a> BusyGuard<'a> {
+    pub(crate) fn new(latch: Option<&'a DrainLatch>) -> BusyGuard<'a> {
+        if let Some(l) = latch {
+            l.enter();
+        }
+        BusyGuard(latch)
+    }
+}
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(l) = self.0 {
+            l.exit();
+        }
     }
 }
 
@@ -1422,5 +1790,190 @@ mod tests {
         drop(cl);
         handle.join().unwrap().unwrap();
         assert!(!sock.exists());
+    }
+
+    #[test]
+    fn batched_fit_point_matches_sequential_responses_bitwise() {
+        let batched = Arc::new(Server::new(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            gather_window_ms: 1500,
+            max_batch: 3,
+            ..Default::default()
+        }));
+        let sequential = server();
+        // Intern the dataset first so the racing requests go straight to
+        // the batcher instead of serializing on dataset ingest.
+        let register = protocol::request_line(
+            0,
+            "dataset_from_file",
+            vec![("dataset", protocol::synth_dataset_json(30, 80, 4, 0.1, "gaussian", 7))],
+        );
+        parse_ok(&batched.handle_line(&register));
+        let threads: Vec<_> = (1..=3u64)
+            .map(|id| {
+                let srv = Arc::clone(&batched);
+                std::thread::spawn(move || parse_ok(&srv.handle_line(&fit_point_line(id, 7, 0.4))))
+            })
+            .collect();
+        let mut got: Vec<Json> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        // Reference: the same three requests back to back.
+        let seq: Vec<Json> = (1..=3u64)
+            .map(|id| parse_ok(&sequential.handle_line(&fit_point_line(id, 7, 0.4))))
+            .collect();
+        // Arrival order inside the batch is whatever the race produced,
+        // but exactly one member was cold and the rest chained warm — the
+        // same multiset sequential handling yields. Sort the cold
+        // response first to line the two sides up.
+        got.sort_by_key(|r| r.field("warm") == Some(&Json::Bool(true)));
+        assert_eq!(got[0].field("warm"), Some(&Json::Bool(false)));
+        for (g, s) in got.iter().zip(&seq) {
+            assert_eq!(g.field("warm"), s.field("warm"));
+            assert_eq!(g.field("strategy"), s.field("strategy"));
+            assert_eq!(g.field("violations"), s.field("violations"));
+            assert_eq!(g.field("n_active"), s.field("n_active"));
+            assert_eq!(g.field("n_fitted"), s.field("n_fitted"));
+            let gb = g.field("nonzeros").unwrap().items();
+            let sb = s.field("nonzeros").unwrap().items();
+            assert_eq!(gb.len(), sb.len());
+            for (a, b) in gb.iter().zip(sb) {
+                let (ai, av) = (a.items()[0].as_f64().unwrap(), a.items()[1].as_f64().unwrap());
+                let (bi, bv) = (b.items()[0].as_f64().unwrap(), b.items()[1].as_f64().unwrap());
+                assert_eq!(ai, bi);
+                // coefficient identity is exact, not approximate
+                assert_eq!(av.to_bits(), bv.to_bits(), "coefficient {ai} differs");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_predict_demuxes_members_bitwise() {
+        let batched = Arc::new(Server::new(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            gather_window_ms: 1500,
+            max_batch: 2,
+            ..Default::default()
+        }));
+        let plain = server();
+        let p = 40;
+        let row = |i: usize| (0..p).map(|j| ((i + j) % 5) as f64 * 0.1).collect::<Vec<f64>>();
+        let line = |id: u64, rows: &[usize]| {
+            protocol::request_line(
+                id,
+                "predict",
+                vec![
+                    ("dataset", protocol::synth_dataset_json(25, p, 3, 0.0, "gaussian", 11)),
+                    ("q", Json::Num(0.1)),
+                    ("path_length", Json::Num(6.0)),
+                    ("x", Json::Arr(rows.iter().map(|&i| Json::nums(&row(i))).collect())),
+                ],
+            )
+        };
+        // Fit once on each server so the racing predicts hit the model
+        // cache and actually coalesce.
+        parse_ok(&batched.handle_line(&line(0, &[0])));
+        parse_ok(&plain.handle_line(&line(0, &[0])));
+        let (srv_a, srv_b) = (Arc::clone(&batched), Arc::clone(&batched));
+        let line_a = line(1, &[1, 2]);
+        let line_b = line(2, &[3, 4, 5]);
+        let ta = std::thread::spawn(move || parse_ok(&srv_a.handle_line(&line_a)));
+        let tb = std::thread::spawn(move || parse_ok(&srv_b.handle_line(&line_b)));
+        let (ra, rb) = (ta.join().unwrap(), tb.join().unwrap());
+        // Each member got exactly its own rows back...
+        assert_eq!(ra.field("eta").unwrap().items().len(), 2);
+        assert_eq!(rb.field("eta").unwrap().items().len(), 3);
+        // ...and each score is bit-identical to unbatched handling.
+        for (got, reference) in
+            [(&ra, plain.handle_line(&line(1, &[1, 2]))), (&rb, plain.handle_line(&line(2, &[3, 4, 5])))]
+        {
+            let want = parse_ok(&reference);
+            let ge = got.field("eta").unwrap().items();
+            let we = want.field("eta").unwrap().items();
+            assert_eq!(ge.len(), we.len());
+            for (grow, wrow) in ge.iter().zip(we) {
+                for (gv, wv) in grow.items().iter().zip(wrow.items()) {
+                    assert_eq!(
+                        gv.as_f64().unwrap().to_bits(),
+                        wv.as_f64().unwrap().to_bits(),
+                        "batched prediction diverged from sequential"
+                    );
+                }
+            }
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn conn_limit_is_enforced_at_accept_with_typed_overload() {
+        use super::super::client;
+        let sock = std::env::temp_dir()
+            .join(format!("slope-serve-connlimit-{}.sock", std::process::id()));
+        let srv = Arc::new(Server::new(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            max_conns: 1,
+            ..Default::default()
+        }));
+        let srv2 = Arc::clone(&srv);
+        let sock2 = sock.clone();
+        let handle = std::thread::spawn(move || srv2.serve_unix(&sock2));
+        let mut first = client::connect_with_retry(&sock, 100, 10).expect("connect");
+        // Prove the first connection is registered before racing a second.
+        let resp = first.round_trip(r#"{"id": 1, "op": "stats"}"#).unwrap();
+        assert_eq!(Json::parse(&resp).unwrap().field("ok"), Some(&Json::Bool(true)));
+        // The second connection is answered with a typed overload close
+        // instead of a silent hang or an untracked handler thread.
+        let second = std::os::unix::net::UnixStream::connect(&sock).unwrap();
+        let mut line = String::new();
+        BufReader::new(second).read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.field("error_kind").unwrap().as_str(), Some("overload"));
+        let resp = first.round_trip(r#"{"id": 2, "op": "shutdown"}"#).unwrap();
+        assert!(Json::parse(&resp).is_ok());
+        drop(first);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn live_socket_bind_is_refused_and_stale_socket_is_reclaimed() {
+        use super::super::client;
+        let sock =
+            std::env::temp_dir().join(format!("slope-serve-probe-{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&sock);
+        let srv = Arc::new(server());
+        let srv2 = Arc::clone(&srv);
+        let sock2 = sock.clone();
+        let handle = std::thread::spawn(move || srv2.serve_unix(&sock2));
+        let mut cl = client::connect_with_retry(&sock, 100, 10).expect("connect");
+        // A second server probing the same path finds it answering and
+        // refuses to steal the socket out from under the live instance.
+        let other = Arc::new(server());
+        let err = other.serve_unix(&sock).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::AddrInUse);
+        // The first server is unharmed by the probe.
+        let resp = cl.round_trip(r#"{"id": 1, "op": "stats"}"#).unwrap();
+        assert_eq!(Json::parse(&resp).unwrap().field("ok"), Some(&Json::Bool(true)));
+        let _ = cl.round_trip(r#"{"id": 2, "op": "shutdown"}"#).unwrap();
+        drop(cl);
+        handle.join().unwrap().unwrap();
+        // A stale socket file (nothing listening behind it) is reclaimed.
+        {
+            let _stale = std::os::unix::net::UnixListener::bind(&sock).unwrap();
+        } // dropped: the file stays on disk, nothing answers
+        assert!(sock.exists());
+        let srv3 = Arc::new(server());
+        let srv4 = Arc::clone(&srv3);
+        let sock3 = sock.clone();
+        let handle = std::thread::spawn(move || srv4.serve_unix(&sock3));
+        let mut cl = client::connect_with_retry(&sock, 100, 10).expect("reclaim stale socket");
+        let _ = cl.round_trip(r#"{"id": 3, "op": "shutdown"}"#).unwrap();
+        drop(cl);
+        handle.join().unwrap().unwrap();
     }
 }

@@ -671,6 +671,51 @@ pub fn fit_point(
     }
 }
 
+/// Solve a coalesced batch of single-σ requests over one problem: one
+/// [`fit_point`] per entry of `sigmas`, executed **in order** inside the
+/// caller's single job. This is the serve layer's cross-request batching
+/// entry (DESIGN.md §14): because the items run sequentially, the batch
+/// is by construction bitwise identical to the serialization in which
+/// its members arrived back-to-back — coalescing changes scheduling,
+/// never arithmetic.
+///
+/// `chain` replicates the registry's warm-start store/read cycle: when
+/// set (the cache-enabled server), item `k+1` is seeded from item `k`'s
+/// returned state — exactly what sequential handling would have read
+/// back from the point cache — except after an item the deadline
+/// cancelled mid-solve, whose state sequential handling never stores
+/// (the previous usable seed carries forward instead). With `chain`
+/// false (cache-disabled server), every item starts from the shared
+/// `seed`, matching a sequence of independent cold requests.
+///
+/// `opts_first` carries the strategy chosen from the *pre-batch* warm
+/// state; `opts_rest` the warm follow-up strategy items `1..` would have
+/// been handled under once item 0's state was stored. With `chain` off,
+/// `opts_first` applies to every item.
+pub fn fit_point_batch(
+    prob: &Problem,
+    opts_first: &PathOptions,
+    opts_rest: &PathOptions,
+    evaluator: &dyn FullGradient,
+    seed: &PathSeed,
+    sigmas: &[f64],
+    chain: bool,
+) -> Vec<PointFit> {
+    let mut out = Vec::with_capacity(sigmas.len());
+    let mut cur = seed.clone();
+    for (k, &sigma) in sigmas.iter().enumerate() {
+        let opts = if chain && k > 0 { opts_rest } else { opts_first };
+        let fit = fit_point(prob, opts, evaluator, sigma, if chain { &cur } else { seed });
+        // A cancelled, non-converged item is the one whose state the
+        // sequential server refuses to cache — don't chain from it.
+        if chain && !(opts.is_cancelled() && !fit.solver_converged) {
+            cur = fit.seed();
+        }
+        out.push(fit);
+    }
+    out
+}
+
 /// Fit a full SLOPE regularization path, optionally warm-started from the
 /// state of a prior fit on the same problem (`seed.beta` primes the first
 /// reduced solves; the σ grid itself is recomputed from the gradient at
@@ -2565,6 +2610,38 @@ mod tests {
             );
         }
         assert!(point.n_fitted >= point.n_active);
+    }
+
+    #[test]
+    fn fit_point_batch_bitwise_matches_sequential_chain() {
+        let prob = gaussian_problem(12, 30, 50, 4);
+        let ng = NativeGradient(&prob);
+        let cold = opts(LambdaKind::Bh { q: 0.1 }, Strategy::StrongSet, 10);
+        let warm = PathOptions { strategy: Strategy::PreviousSet, ..cold.clone() };
+        let zero = zero_seed(&prob, &cold, &ng);
+        let sigmas = [zero.sigma * 0.6, zero.sigma * 0.4, zero.sigma * 0.45, zero.sigma * 0.3];
+        // Chained batch vs the literal store/read sequence a cache-enabled
+        // server would run: must be bitwise identical per item.
+        let batch = fit_point_batch(&prob, &cold, &warm, &ng, &zero, &sigmas, true);
+        let mut seed = zero.clone();
+        for (k, &sigma) in sigmas.iter().enumerate() {
+            let o = if k == 0 { &cold } else { &warm };
+            let want = fit_point(&prob, o, &ng, sigma, &seed);
+            assert_eq!(batch[k].violations, want.violations, "item {k} violations");
+            assert_eq!(batch[k].n_fitted, want.n_fitted, "item {k} n_fitted");
+            for (i, (a, b)) in batch[k].beta.iter().zip(&want.beta).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "item {k} coef {i}");
+            }
+            seed = want.seed();
+        }
+        // Unchained batch vs independent cold requests from the shared seed.
+        let batch = fit_point_batch(&prob, &cold, &warm, &ng, &zero, &sigmas, false);
+        for (k, &sigma) in sigmas.iter().enumerate() {
+            let want = fit_point(&prob, &cold, &ng, sigma, &zero);
+            for (a, b) in batch[k].beta.iter().zip(&want.beta) {
+                assert_eq!(a.to_bits(), b.to_bits(), "unchained item {k}");
+            }
+        }
     }
 
     #[test]

@@ -139,6 +139,69 @@ fn slow_solve_against_a_deadline_is_a_typed_deadline_error() {
     assert!(result.field("steps").unwrap().as_usize().unwrap() >= 2);
 }
 
+/// Cross-request batching (DESIGN.md §14): a panic inside a batched
+/// solve must fail *that batch* — every coalesced member gets the typed
+/// `panic` error — and nothing else. The server survives, two strikes
+/// do not quarantine the dataset, and a clean follow-up point fit on
+/// the same dataset succeeds.
+#[test]
+fn panic_in_a_batched_solve_fails_every_member_typed_and_server_survives() {
+    let _g = chaos_lock();
+    fault::clear();
+    let srv = Server::new(ServerConfig {
+        threads: 2,
+        queue: 8,
+        cache: true,
+        gather_window_ms: 500,
+        max_batch: 2,
+        ..Default::default()
+    });
+    let point_line = |id: u64, ratio: f64| {
+        protocol::request_line(
+            id,
+            "fit_point",
+            vec![
+                ("dataset", protocol::synth_dataset_json(30, 80, 4, 0.1, "gaussian", 77)),
+                ("q", Json::Num(0.1)),
+                ("sigma_ratio", Json::Num(ratio)),
+            ],
+        )
+    };
+    let panics_before = obsreg::SERVE_WORKER_PANICS.get();
+    // Interning the dataset and computing σ_max run no FISTA solves, so
+    // the armed panic fires inside the coalesced batch job itself.
+    fault::install(FaultPlan { panic_at_solve: Some(1), ..FaultPlan::default() });
+    let barrier = std::sync::Barrier::new(2);
+    let (first, second) = std::thread::scope(|s| {
+        let a = s.spawn(|| {
+            barrier.wait();
+            srv.handle_line(&point_line(1, 0.5))
+        });
+        let b = s.spawn(|| {
+            barrier.wait();
+            srv.handle_line(&point_line(2, 0.35))
+        });
+        (a.join().unwrap(), b.join().unwrap())
+    });
+    fault::clear();
+
+    for resp in [parse(&first), parse(&second)] {
+        assert_eq!(error_kind(&resp), "panic", "every batch member fails typed: {resp:?}");
+        let msg = resp.field("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("planned panic"), "panic payload lost: {msg}");
+    }
+    assert!(obsreg::SERVE_WORKER_PANICS.get() > panics_before);
+
+    // Two strikes (one per member) are not a quarantine: the same
+    // server keeps serving the same dataset.
+    let clean = parse(&srv.handle_line(&point_line(3, 0.5)));
+    assert_ok(&clean);
+    assert_eq!(
+        clean.field("result").unwrap().field("solver_converged"),
+        Some(&Json::Bool(true))
+    );
+}
+
 #[test]
 fn nan_gradient_degrades_to_a_converged_fit() {
     let _g = chaos_lock();
@@ -508,6 +571,58 @@ mod socket {
             assert_eq!(error_kind(&resp), "shutdown");
         }
         assert!(after.is_err(), "no responses after the drain, got {after:?}");
+    }
+
+    /// The drain handshake regression (ISSUE satellite): shutdown must
+    /// wait for every busy handler to *flush its response*, not for a
+    /// fixed grace period. Slow every solve well past the old 50 ms
+    /// sleep — the in-flight fit's complete response still arrives
+    /// before the transport is severed.
+    #[test]
+    fn drain_flushes_the_inflight_response_under_slow_solves() {
+        let _g = chaos_lock();
+        fault::clear();
+        let sock = socket_path("slowdrain");
+        let (_server, handle) = spawn_server(
+            ServerConfig { threads: 2, cache: false, ..Default::default() },
+            &sock,
+        );
+
+        fault::install(FaultPlan { slow_solve_ms: 150, seed: 13, ..FaultPlan::default() });
+        let sock_a = sock.clone();
+        let busy = std::thread::spawn(move || {
+            let mut a = connect(&sock_a);
+            let line = protocol::request_line(
+                1,
+                "fit_path",
+                vec![
+                    ("dataset", protocol::synth_dataset_json(40, 120, 5, 0.2, "gaussian", 91)),
+                    ("q", Json::Num(0.1)),
+                    ("path_length", Json::Num(6.0)),
+                ],
+            );
+            a.round_trip(&line)
+        });
+        // The fit is admitted and mid-solve (each solve sleeps ≥150 ms)
+        // when the shutdown lands on a second connection.
+        std::thread::sleep(Duration::from_millis(250));
+        let mut b = connect(&sock);
+        let bye = b.round_trip(&protocol::request_line(9, "shutdown", vec![])).unwrap();
+        assert_ok(&parse(&bye));
+        join_within(handle, 30, "slow-solve drain");
+        fault::clear();
+
+        // The handshake held the socket open until the handler flushed:
+        // a complete, parseable fit response — never a torn line, never
+        // a bare hangup.
+        let first =
+            busy.join().unwrap().expect("response must be flushed before the drain severs");
+        let resp = parse(&first);
+        assert_ok(&resp);
+        assert_eq!(
+            resp.field("result").unwrap().field("solver_converged"),
+            Some(&Json::Bool(true))
+        );
     }
 
     #[test]

@@ -749,6 +749,98 @@ fn path_screening_never_loses_active_predictors() {
     );
 }
 
+/// Cross-request batching (DESIGN.md §14): a coalesced `fit_point`
+/// batch is bitwise identical to the sequential serialization it
+/// replaces — both chained (the cache-enabled server's warm-start
+/// store/read cycle, replayed here by hand) and independent
+/// (cache-disabled) — across kernel thread counts, because a batch is
+/// one job running its members in arrival order.
+#[test]
+fn fit_point_batch_matches_sequential_bitwise_across_threads() {
+    use slope_screen::data::synth::{BetaSpec, DesignKind, SyntheticSpec};
+    use slope_screen::slope::family::Family;
+    use slope_screen::slope::lambda::{LambdaKind, PathConfig};
+    use slope_screen::slope::path::{
+        fit_point, fit_point_batch, zero_seed, NativeGradient, PathOptions, Strategy,
+    };
+    forall(
+        Config { cases: 6, seed: 0x214 },
+        |rng| {
+            let n = 25 + rng.below(25) as usize;
+            let p = 40 + rng.below(60) as usize;
+            let rho = rng.next_f64() * 0.5;
+            let members = 2 + rng.below(3) as usize;
+            let ratios: Vec<f64> = (0..members).map(|_| 0.2 + 0.7 * rng.next_f64()).collect();
+            let chain = rng.below(2) == 0;
+            (n, p, rho, ratios, chain, rng.next_u64())
+        },
+        |(n, p, rho, ratios, chain, seed)| {
+            let prob = SyntheticSpec {
+                n: *n,
+                p: *p,
+                rho: *rho,
+                design: DesignKind::Compound,
+                beta: BetaSpec::PlusMinus { k: 4, scale: 2.0 },
+                family: Family::Gaussian,
+                noise_sd: 1.0,
+                standardize: true,
+            }
+            .generate(&mut Pcg64::new(*seed));
+            let grad = NativeGradient(&prob);
+            for threads in [1usize, 2, 7] {
+                let mut cfg = PathConfig::new(LambdaKind::Bh { q: 0.1 });
+                cfg.length = 8;
+                let opts_first = PathOptions::new(cfg.clone())
+                    .with_strategy(Strategy::StrongSet)
+                    .with_threads(threads);
+                let opts_rest = PathOptions::new(cfg)
+                    .with_strategy(Strategy::PreviousSet)
+                    .with_threads(threads);
+                let seed0 = zero_seed(&prob, &opts_first, &grad);
+                let sigmas: Vec<f64> = ratios.iter().map(|r| seed0.sigma * r).collect();
+                // Sequential reference: one request at a time, item k+1
+                // warm-started from the state item k stored (chain), or
+                // every item cold from the shared seed (no cache).
+                let mut cur = seed0.clone();
+                let mut reference = Vec::new();
+                for (k, &sigma) in sigmas.iter().enumerate() {
+                    let o = if *chain && k > 0 { &opts_rest } else { &opts_first };
+                    let fit =
+                        fit_point(&prob, o, &grad, sigma, if *chain { &cur } else { &seed0 });
+                    if *chain {
+                        cur = fit.seed();
+                    }
+                    reference.push(fit);
+                }
+                let batch = fit_point_batch(
+                    &prob, &opts_first, &opts_rest, &grad, &seed0, &sigmas, *chain,
+                );
+                ensure(batch.len() == reference.len(), "batch length")?;
+                for (k, (b, r)) in batch.iter().zip(&reference).enumerate() {
+                    let label = format!("t={threads} member {k} chain={chain}");
+                    ensure(
+                        b.beta.iter().zip(&r.beta).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        format!("{label}: beta drifted"),
+                    )?;
+                    ensure(
+                        b.grad.iter().zip(&r.grad).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        format!("{label}: gradient drifted"),
+                    )?;
+                    ensure(
+                        b.violations == r.violations
+                            && b.n_active == r.n_active
+                            && b.n_fitted == r.n_fitted
+                            && b.solver_iterations == r.solver_iterations
+                            && b.solver_converged == r.solver_converged,
+                        format!("{label}: counters drifted"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 // ---------------------------------------------------------------------
 // checkpoint codec (DESIGN.md §13)
 // ---------------------------------------------------------------------
