@@ -45,6 +45,11 @@ pub struct FaultPlan {
     /// after the n-th checkpoint write, 1-based — a torn write that must
     /// be caught by the digest and recovered via the previous snapshot.
     pub truncate_checkpoint: Option<u64>,
+    /// Flip one digest bit in the n-th journal record shipped to
+    /// replication subscribers, 1-based. The on-disk journal keeps the
+    /// good frame; only the wire copy is corrupted — the standby must
+    /// skip it by digest and never apply it.
+    pub repl_flip_digest_at: Option<u64>,
     /// Seed for the jitter stream.
     pub seed: u64,
 }
@@ -60,7 +65,7 @@ impl FaultPlan {
                 match key.as_str() {
                     "panic_at_solve" | "slow_solve_ms" | "nan_grad_at_solve"
                     | "drop_after_lines" | "kill_after_step" | "truncate_checkpoint"
-                    | "seed" => {}
+                    | "repl_flip_digest_at" | "seed" => {}
                     other => return Err(format!("fault plan: unknown field `{other}`")),
                 }
             }
@@ -87,6 +92,7 @@ impl FaultPlan {
         plan.drop_after_lines = u64_field("drop_after_lines")?;
         plan.kill_after_step = u64_field("kill_after_step")?;
         plan.truncate_checkpoint = u64_field("truncate_checkpoint")?;
+        plan.repl_flip_digest_at = u64_field("repl_flip_digest_at")?;
         plan.seed = u64_field("seed")?.unwrap_or(0x5EED);
         Ok(plan)
     }
@@ -103,6 +109,7 @@ impl FaultPlan {
 static ACTIVE: AtomicBool = AtomicBool::new(false);
 static SOLVE_COUNT: AtomicU64 = AtomicU64::new(0);
 static CKPT_WRITE_COUNT: AtomicU64 = AtomicU64::new(0);
+static REPL_SHIP_COUNT: AtomicU64 = AtomicU64::new(0);
 static JITTER_STATE: AtomicU64 = AtomicU64::new(0);
 static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
 
@@ -118,6 +125,7 @@ pub fn enabled() -> bool {
 pub fn install(plan: FaultPlan) {
     SOLVE_COUNT.store(0, Ordering::Relaxed);
     CKPT_WRITE_COUNT.store(0, Ordering::Relaxed);
+    REPL_SHIP_COUNT.store(0, Ordering::Relaxed);
     JITTER_STATE.store(plan.seed | 1, Ordering::Relaxed);
     *PLAN.lock().unwrap() = Some(plan);
     ACTIVE.store(true, Ordering::Relaxed);
@@ -129,6 +137,7 @@ pub fn clear() {
     *PLAN.lock().unwrap() = None;
     SOLVE_COUNT.store(0, Ordering::Relaxed);
     CKPT_WRITE_COUNT.store(0, Ordering::Relaxed);
+    REPL_SHIP_COUNT.store(0, Ordering::Relaxed);
 }
 
 /// A snapshot of the armed plan, if any.
@@ -250,6 +259,29 @@ fn on_checkpoint_write_armed(path: &std::path::Path) {
     }
 }
 
+/// Called by the registry once per journal record shipped to replication
+/// subscribers. Returns `true` when an armed `repl_flip_digest_at` plan
+/// says this shipment's digest should be corrupted on the wire.
+#[inline]
+pub fn on_repl_ship() -> bool {
+    if !enabled() {
+        return false;
+    }
+    on_repl_ship_armed()
+}
+
+#[cold]
+fn on_repl_ship_armed() -> bool {
+    let Some(plan) = current() else { return false };
+    let Some(nth) = plan.repl_flip_digest_at else { return false };
+    let count = REPL_SHIP_COUNT.fetch_add(1, Ordering::Relaxed) + 1;
+    if count == nth {
+        obsreg::FAULT_INJECTIONS.inc();
+        return true;
+    }
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -318,6 +350,17 @@ mod tests {
             FaultPlan::parse_str(r#"{"kill_after_step": 3, "truncate_checkpoint": 1}"#).unwrap();
         assert_eq!(plan.kill_after_step, Some(3));
         assert_eq!(plan.truncate_checkpoint, Some(1));
+    }
+
+    #[test]
+    fn repl_ship_flips_the_nth_shipment_only() {
+        let _g = LOCK.lock().unwrap();
+        install(FaultPlan { repl_flip_digest_at: Some(2), ..FaultPlan::default() });
+        assert!(!on_repl_ship(), "shipment 1 clean");
+        assert!(on_repl_ship(), "shipment 2 corrupted");
+        assert!(!on_repl_ship(), "shipment 3 clean again");
+        clear();
+        assert!(!on_repl_ship(), "disarmed registry is inert");
     }
 
     #[test]

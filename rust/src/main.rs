@@ -62,7 +62,7 @@ fn main() {
         .opt("seed", "42", "rng seed")
         .flag("no-early-stop", "disable the path termination rules")
         .opt("socket", "/tmp/slope-serve.sock", "serve/client: unix socket path")
-        .opt("tcp", "", "serve/client: TCP endpoint HOST:PORT (overrides --socket; serve announces the resolved address on stderr, so :0 picks a free port)")
+        .opt("tcp", "", "serve/client: TCP endpoint HOST:PORT (overrides --socket; serve announces the resolved address on stderr, so :0 picks a free port); client accepts a comma-separated list and fails over across it")
         .opt("queue", "64", "serve: admission-queue capacity (backpressure bound)")
         .opt("max-conns", "0", "serve: accept-time connection cap, both transports (0 = 1024); excess connections get a typed `overload` response and a close")
         .opt("gather-window-ms", "0", "serve: coalesce same-dataset fit_point/predict requests arriving within this window into one batched solve (0 = off; DESIGN.md §14)")
@@ -76,6 +76,9 @@ fn main() {
         .opt("checkpoint-every", "5", "fit: snapshot cadence in path steps (rescue events always snapshot)")
         .flag("resume", "fit: resume from --checkpoint if it holds a valid snapshot of this dataset (falls back to a cold start otherwise)")
         .opt("state-dir", "", "serve: journal dataset registrations, warm-start seeds and quarantine strikes here and restore them on boot")
+        .opt("standby", "", "serve: start as a warm standby replicating from this primary (comma-separated HOST:PORT list, tried in rotation); writes are fenced until promotion (DESIGN.md §15)")
+        .opt("promote-on-loss", "0", "serve: standby self-promotes after this many consecutive missed heartbeats (0 = only the explicit `promote` op promotes)")
+        .opt("idle-timeout-ms", "300000", "serve: reap TCP connections idle this long (0 = never; replication subscribers are exempt)")
         .opt("json", "", "client: a single request line to send")
         .opt("trace", "", "fit/cv/serve: write a JSONL span/event trace to this path (read it back with `profile`)")
         .flag("stdio", "serve: speak NDJSON over stdin/stdout instead of a socket")
@@ -434,8 +437,34 @@ fn cmd_serve(parsed: &slope_screen::cli::Parsed) {
         max_conns: parsed.usize("max-conns"),
         gather_window_ms: parsed.u64("gather-window-ms"),
         max_batch: parsed.usize("max-batch"),
+        standby: !parsed.get("standby").is_empty(),
+        idle_timeout_ms: parsed.u64("idle-timeout-ms"),
     };
     let server = std::sync::Arc::new(Server::new(cfg));
+    let standby = parsed.get("standby");
+    if !standby.is_empty() {
+        let primaries: Vec<String> = standby
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+        if primaries.is_empty() {
+            eprintln!("serve: --standby needs at least one HOST:PORT");
+            std::process::exit(1);
+        }
+        eprintln!("slope-screen serve: standby replicating from {}", primaries.join(", "));
+        // Detached: the loop exits on shutdown or promotion.
+        let _ = slope_screen::serve::replica::spawn_standby(
+            std::sync::Arc::clone(&server),
+            slope_screen::serve::replica::StandbyConfig {
+                primaries,
+                promote_after_misses: parsed.u64("promote-on-loss"),
+                seed: parsed.u64("seed"),
+                ..Default::default()
+            },
+        );
+    }
     if parsed.bool("stdio") {
         eprintln!("slope-screen serve: NDJSON on stdin/stdout (send {{\"op\":\"shutdown\"}} to stop)");
         let stdin = std::io::stdin();

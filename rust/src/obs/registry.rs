@@ -164,6 +164,19 @@ registry! {
     SERVE_WRITE_BACKPRESSURE: Counter, "serve_write_backpressure", "times a connection's reads were paused because its write buffer was full";
     SERVE_BATCHES: Counter, "serve_batches", "coalesced cross-request batches gathered and executed";
     SERVE_BATCHED_REQUESTS: Counter, "serve_batched_requests", "requests that joined an open batch instead of running alone";
+    // --- replication & failover (DESIGN.md §15) ---
+    REPL_RECORDS_SHIPPED: Counter, "repl_records_shipped", "journal records queued to replication subscribers (per record per subscriber)";
+    REPL_RECORDS_APPLIED: Counter, "repl_records_applied", "replicated journal records applied by a standby";
+    REPL_DIGEST_SKIPS: Counter, "repl_digest_skips", "replication stream records rejected by the digest check and skipped";
+    REPL_LAG_RECORDS: Gauge, "repl_lag_records", "replication lag in journal records (primary: worst subscriber backlog; standby: records behind the primary)";
+    REPL_SUBSCRIBERS: Gauge, "repl_subscribers", "replication subscribers currently attached to this primary";
+    REPL_EPOCH: Gauge, "repl_epoch", "failover epoch this server last promoted itself to";
+    REPL_HEARTBEATS_MISSED: Counter, "repl_heartbeats_missed", "heartbeat windows a standby waited out without hearing from its primary";
+    REPL_PROMOTIONS: Counter, "repl_promotions", "standby-to-primary promotions (explicit op or promote-on-loss)";
+    SERVE_FENCED_REJECTS: Counter, "serve_fenced_rejects", "write requests rejected because this server is a standby or a fenced ex-primary";
+    SERVE_IDLE_REAPED: Counter, "serve_idle_reaped", "connections closed by the idle-timeout reaper for lack of read/write progress";
+    JOURNAL_COMPACTIONS: Counter, "journal_compactions", "registry journal compactions (snapshot rewrite of the live state)";
+    JOURNAL_BYTES_RECLAIMED: Counter, "journal_bytes_reclaimed", "journal bytes reclaimed by compaction (old size minus snapshot size)";
 }
 
 /// Name/value pairs for every registered cell, in declaration order.

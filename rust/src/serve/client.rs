@@ -86,12 +86,16 @@ mod imp {
     use crate::jsonio::Json;
 
     /// Where a client dials — kept for reconnects after a dropped
-    /// connection.
+    /// connection. The TCP form holds *every* endpoint the caller gave
+    /// (`--tcp primary:port,standby:port`): `current` remembers which
+    /// one answered last, and a reconnect rotates past it, so a client
+    /// parked on a dead primary fails over to the standby instead of
+    /// redialing a corpse.
     #[derive(Clone)]
     enum Target {
         #[cfg(unix)]
         Unix(PathBuf),
-        Tcp(String),
+        Tcp { endpoints: Vec<String>, current: usize },
     }
 
     /// A connected stream on either transport; the client logic above it
@@ -148,21 +152,46 @@ mod imp {
     }
 
     impl Client {
-        fn dial(target: &Target) -> std::io::Result<StreamKind> {
-            match target {
-                #[cfg(unix)]
-                Target::Unix(path) => Ok(StreamKind::Unix(UnixStream::connect(path)?)),
-                Target::Tcp(addr) => {
-                    let stream = TcpStream::connect(addr.as_str())?;
-                    // Request lines are small; Nagle only adds latency.
-                    let _ = stream.set_nodelay(true);
-                    Ok(StreamKind::Tcp(stream))
-                }
-            }
+        fn dial_tcp(addr: &str) -> std::io::Result<StreamKind> {
+            let stream = TcpStream::connect(addr)?;
+            // Request lines are small; Nagle only adds latency.
+            let _ = stream.set_nodelay(true);
+            Ok(StreamKind::Tcp(stream))
         }
 
-        fn from_target(target: Target) -> std::io::Result<Client> {
-            let stream = Client::dial(&target)?;
+        /// Dial the target; the TCP form tries endpoints in rotation
+        /// starting at `current` and records the one that answered.
+        fn from_target(mut target: Target) -> std::io::Result<Client> {
+            let stream = match &mut target {
+                #[cfg(unix)]
+                Target::Unix(path) => StreamKind::Unix(UnixStream::connect(path)?),
+                Target::Tcp { endpoints, current } => {
+                    let mut dialed = None;
+                    let mut last_err = None;
+                    for k in 0..endpoints.len() {
+                        let idx = (*current + k) % endpoints.len();
+                        match Client::dial_tcp(&endpoints[idx]) {
+                            Ok(s) => {
+                                *current = idx;
+                                dialed = Some(s);
+                                break;
+                            }
+                            Err(e) => last_err = Some(e),
+                        }
+                    }
+                    match dialed {
+                        Some(s) => s,
+                        None => {
+                            return Err(last_err.unwrap_or_else(|| {
+                                std::io::Error::new(
+                                    std::io::ErrorKind::InvalidInput,
+                                    "no TCP endpoint given",
+                                )
+                            }))
+                        }
+                    }
+                }
+            };
             let reader = BufReader::new(stream.try_clone()?);
             Ok(Client { reader, writer: stream, target })
         }
@@ -173,14 +202,33 @@ mod imp {
             Client::from_target(Target::Unix(path.to_path_buf()))
         }
 
-        /// Connect to a serve TCP endpoint (`host:port`).
+        /// Connect to one or more serve TCP endpoints — a comma-separated
+        /// `host:port` list. The first reachable endpoint answers;
+        /// later reconnects rotate through the rest (failover).
         pub fn connect_tcp(addr: &str) -> std::io::Result<Client> {
-            Client::from_target(Target::Tcp(addr.to_string()))
+            let endpoints: Vec<String> =
+                addr.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+            if endpoints.is_empty() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "no TCP endpoint given",
+                ));
+            }
+            Client::from_target(Target::Tcp { endpoints, current: 0 })
         }
 
-        /// Drop the current connection and dial the same target again.
+        /// Drop the current connection and dial again. With multiple TCP
+        /// endpoints the rotation starts at the *next* one — the old
+        /// connection just died, so its endpoint goes to the back of the
+        /// line (it is still retried last if the others are down too).
         pub fn reconnect(&mut self) -> std::io::Result<()> {
-            let fresh = Client::from_target(self.target.clone())?;
+            let mut target = self.target.clone();
+            if let Target::Tcp { endpoints, current } = &mut target {
+                if endpoints.len() > 1 {
+                    *current = (*current + 1) % endpoints.len();
+                }
+            }
+            let fresh = Client::from_target(target)?;
             *self = fresh;
             Ok(())
         }
@@ -223,8 +271,25 @@ mod imp {
             loop {
                 match self.round_trip(request) {
                     Ok(response) => {
-                        let hint = Json::parse(&response)
-                            .ok()
+                        let parsed = Json::parse(&response).ok();
+                        // A fenced answer means this endpoint is (now) a
+                        // standby or a deposed primary: rotate to the
+                        // next endpoint and retry there. Honored before
+                        // the overload hint — waiting out a fence on the
+                        // same endpoint gets us nowhere.
+                        let fenced = parsed
+                            .as_ref()
+                            .and_then(|j| j.field("error_kind").and_then(Json::as_str))
+                            == Some("fenced");
+                        if fenced && retryable_op && attempts_left > 0 {
+                            attempts_left -= 1;
+                            let delay = backoff.next_delay_ms(None);
+                            std::thread::sleep(Duration::from_millis(delay));
+                            let _ = self.reconnect();
+                            continue;
+                        }
+                        let hint = parsed
+                            .as_ref()
                             .and_then(|j| j.field("retry_after_ms").and_then(Json::as_usize));
                         match hint {
                             Some(ms) if attempts_left > 0 => {
@@ -319,6 +384,39 @@ mod tests {
         for _ in 0..10 {
             assert!(c.next_delay_ms(None) <= 250 + 250 / 4 + 1);
         }
+    }
+
+    #[test]
+    fn tcp_client_rotates_across_endpoints() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::net::TcpListener;
+
+        // A dead endpoint: bind, learn the port, drop the listener.
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        // A live endpoint answering one NDJSON line per connection.
+        let live_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let live = live_listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = live_listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let mut w = stream;
+            w.write_all(b"{\"id\": 1, \"ok\": true, \"result\": {}}\n").unwrap();
+        });
+
+        // The dead endpoint is listed first; connect must fall through
+        // to the live one and the round trip must succeed.
+        let mut client = Client::connect_tcp(&format!("{dead} , {live}")).unwrap();
+        let response = client.round_trip("{\"id\": 1, \"op\": \"stats\"}").unwrap();
+        assert!(response.contains("\"ok\": true"), "{response}");
+        server.join().unwrap();
+
+        // An endpoint list with nothing in it is an input error.
+        assert!(Client::connect_tcp(" , ").is_err());
     }
 
     #[test]

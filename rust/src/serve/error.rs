@@ -39,6 +39,15 @@ pub enum ServeError {
         /// Panic payload, downcast from `catch_unwind`.
         message: String,
     },
+    /// This server is not the primary (a standby, or an ex-primary that
+    /// observed a higher failover epoch): write requests are fenced.
+    /// Clients with more than one endpoint should rotate and retry.
+    Fenced {
+        /// The role that rejected the write (`standby` or `fenced`).
+        role: String,
+        /// The failover epoch this server last observed.
+        epoch: u64,
+    },
     /// An NDJSON request line exceeded the configured byte cap.
     OversizedLine {
         /// Bytes received before the line was abandoned.
@@ -60,6 +69,7 @@ impl ServeError {
             ServeError::Shutdown => "shutdown",
             ServeError::Overload { .. } => "overload",
             ServeError::Panic { .. } => "panic",
+            ServeError::Fenced { .. } => "fenced",
             ServeError::OversizedLine { .. } => "oversized_line",
             ServeError::Failed(_) => "failed",
         }
@@ -77,6 +87,9 @@ impl ServeError {
                 format!("queue full; retry after {retry_after_ms} ms")
             }
             ServeError::Panic { message } => format!("fit job panicked: {message}"),
+            ServeError::Fenced { role, epoch } => {
+                format!("server is {role} at epoch {epoch}: writes are fenced (not the primary)")
+            }
             ServeError::OversizedLine { bytes, limit } => {
                 format!("request line exceeds {limit} bytes (got at least {bytes})")
             }
@@ -139,6 +152,10 @@ mod tests {
         assert!(dl.message().contains("3 completed"));
         let p = ServeError::Panic { message: "kaboom".into() };
         assert!(p.message().contains("kaboom"));
+        let fenced = ServeError::Fenced { role: "standby".into(), epoch: 4 };
+        assert_eq!(fenced.kind(), "fenced");
+        assert!(!fenced.retryable(), "rotation, not same-connection retry");
+        assert!(fenced.message().contains("epoch 4"));
         assert_eq!(ServeError::from("nope").kind(), "failed");
     }
 }

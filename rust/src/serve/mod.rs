@@ -42,6 +42,10 @@
 //!   loop owns every connection (readiness-driven read/write buffers,
 //!   accept-time connection limits, per-connection write backpressure),
 //!   with a bounded dispatcher pool running the handlers.
+//! * [`replica`] — the warm-standby replication loop: a standby dials
+//!   the primary, handshakes with `repl_subscribe`, and applies the
+//!   journal-shipped record stream (digest-checked, epoch-fenced) so a
+//!   promotion serves warm from the first request (DESIGN.md §15).
 //! * [`client`] — a small blocking client for the socket transports
 //!   (Unix or TCP; the `client` CLI subcommand and the serving example
 //!   use it), with jittered exponential backoff for retryable
@@ -59,7 +63,8 @@ pub mod metrics;
 pub mod net;
 pub mod protocol;
 pub mod registry;
+pub mod replica;
 pub mod scheduler;
 pub mod server;
 
-pub use server::{Server, ServerConfig};
+pub use server::{Role, Server, ServerConfig};

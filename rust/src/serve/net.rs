@@ -38,15 +38,21 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::jsonio::Json;
 use crate::obs::registry as obsreg;
 
 use super::error::ServeError;
 use super::protocol;
+use super::registry::{self, ReplSubscriber};
 use super::server::Server;
 
 /// Poll timeout: bounds how stale the shutdown/drain check can get when
 /// no fd is ready.
 const POLL_TICK_MS: i32 = 50;
+/// Heartbeat cadence on replication connections: often enough that a
+/// standby's loss detector (multiples of its own timeout) reacts within
+/// a couple of seconds, rare enough to be free.
+const HEARTBEAT_MS: u64 = 500;
 /// Read chunk size per `read()` call.
 const READ_CHUNK: usize = 64 << 10;
 /// Reads per connection per tick — bounds how long one flooding peer
@@ -130,6 +136,14 @@ struct Conn {
     /// Fault plan captured at accept, mirroring the blocking transport
     /// reading it once per connection.
     drop_after: Option<u64>,
+    /// A `repl_subscribe` handshake succeeded: this connection carries
+    /// raw journal frames from this queue instead of NDJSON responses.
+    replica: Option<Arc<ReplSubscriber>>,
+    /// Last heartbeat frame queued (replica connections only).
+    last_hb: Instant,
+    /// Last observed traffic in either direction — the idle reaper's
+    /// clock.
+    last_activity: Instant,
 }
 
 impl Conn {
@@ -147,6 +161,9 @@ impl Conn {
             dead: false,
             lines_handled: 0,
             drop_after: crate::fault::drop_after_lines(),
+            replica: None,
+            last_hb: Instant::now(),
+            last_activity: Instant::now(),
         }
     }
 
@@ -157,6 +174,7 @@ impl Conn {
     fn push_response(&mut self, line: &str) {
         self.outbuf.extend_from_slice(line.as_bytes());
         self.outbuf.push(b'\n');
+        self.last_activity = Instant::now();
     }
 
     /// Drain readable bytes (bounded per tick) and split complete items.
@@ -168,7 +186,10 @@ impl Conn {
                     self.read_closed = true;
                     return;
                 }
-                Ok(n) => self.ingest(&chunk[..n], max_line),
+                Ok(n) => {
+                    self.last_activity = Instant::now();
+                    self.ingest(&chunk[..n], max_line);
+                }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == ErrorKind::Interrupted => continue,
                 Err(_) => {
@@ -323,6 +344,19 @@ pub fn serve_tcp(server: &Arc<Server>, addr: &str) -> std::io::Result<()> {
 /// it can announce the resolved address (`:0` picks an ephemeral port),
 /// and tests bind on port 0.
 pub fn serve_tcp_listener(server: &Arc<Server>, listener: TcpListener) -> std::io::Result<()> {
+    serve_tcp_listener_abortable(server, listener, &Arc::new(AtomicBool::new(false)))
+}
+
+/// [`serve_tcp_listener`] with a hard-abort flag: when `abort` flips,
+/// the poll loop returns immediately — no drain, no response flush, no
+/// graceful anything. In-process chaos tests use it to emulate a
+/// `kill -9` of the primary without forking; production entry points go
+/// through [`serve_tcp`], whose flag never flips.
+pub fn serve_tcp_listener_abortable(
+    server: &Arc<Server>,
+    listener: TcpListener,
+    abort: &Arc<AtomicBool>,
+) -> std::io::Result<()> {
     listener.set_nonblocking(true)?;
     let (wake_tx, wake_rx) = UnixStream::pair()?;
     wake_tx.set_nonblocking(true)?;
@@ -334,13 +368,20 @@ pub fn serve_tcp_listener(server: &Arc<Server>, listener: TcpListener) -> std::i
         wake: Mutex::new(wake_tx),
         stop: AtomicBool::new(false),
     });
+    // Journal appends happen on dispatcher threads; the wake hook gets
+    // a shipped record onto the wire this tick instead of parking it
+    // until the next 50 ms poll boundary.
+    {
+        let sh = Arc::clone(&shared);
+        server.registry().set_repl_wake(Box::new(move || sh.wake()));
+    }
     let mut workers = Vec::new();
     for _ in 0..dispatcher_count() {
         let srv = Arc::clone(server);
         let sh = Arc::clone(&shared);
         workers.push(std::thread::spawn(move || dispatcher(srv, sh)));
     }
-    let result = poll_loop(server, &listener, &wake_rx, &shared);
+    let result = poll_loop(server, &listener, &wake_rx, &shared, abort);
     shared.stop.store(true, Ordering::SeqCst);
     shared.cv.notify_all();
     for w in workers {
@@ -349,11 +390,39 @@ pub fn serve_tcp_listener(server: &Arc<Server>, listener: TcpListener) -> std::i
     result
 }
 
+/// If `line` is a `repl_subscribe` handshake, answer it inline on the
+/// poll loop: the ok response must hit the wire *before* any journal
+/// frame from the subscriber queue, and the dispatcher pool cannot
+/// guarantee that ordering. `None` means "not a subscribe — dispatch
+/// normally".
+fn try_repl_subscribe(
+    server: &Server,
+    line: &str,
+) -> Option<Result<(String, Arc<ReplSubscriber>), String>> {
+    // Cheap reject before paying for a parse on every request line.
+    if !line.contains("repl_subscribe") {
+        return None;
+    }
+    let j = Json::parse(line).ok()?;
+    if j.field("op").and_then(Json::as_str) != Some("repl_subscribe") {
+        return None;
+    }
+    let id = j.field("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let epoch = j.field("epoch").and_then(Json::as_usize).unwrap_or(0) as u64;
+    Some(server.accept_replica(id, epoch))
+}
+
 /// Feed ready-to-run items into the dispatcher queue, keeping at most
 /// one request per connection in flight. Oversized markers are answered
 /// inline (they never ran a handler on the blocking transports either)
 /// but still in arrival order relative to real requests.
 fn pump_pending(c: &mut Conn, id: u64, server: &Server, shared: &Shared) {
+    if c.replica.is_some() {
+        // Past the handshake the peer sends nothing meaningful; any
+        // stray bytes are discarded rather than parsed as NDJSON.
+        c.pending.clear();
+        return;
+    }
     while !c.inflight && !c.dead {
         match c.pending.pop_front() {
             Some(Item::Oversized(bytes)) => {
@@ -361,6 +430,24 @@ fn pump_pending(c: &mut Conn, id: u64, server: &Server, shared: &Shared) {
                 c.push_response(&response);
             }
             Some(Item::Line(line)) => {
+                match try_repl_subscribe(server, &line) {
+                    Some(Ok((response, sub))) => {
+                        // Handshake accepted: ok line first, then the
+                        // connection leaves NDJSON mode for good —
+                        // anything pipelined behind it is void.
+                        c.push_response(&response);
+                        c.replica = Some(sub);
+                        c.pending.clear();
+                        return;
+                    }
+                    Some(Err(response)) => {
+                        // Refused (fenced / not primary / no journal):
+                        // the connection stays a normal NDJSON client.
+                        c.push_response(&response);
+                        continue;
+                    }
+                    None => {}
+                }
                 if let Some(limit) = c.drop_after {
                     if c.lines_handled >= limit {
                         // Injected connection drop: sever without a
@@ -385,12 +472,25 @@ fn poll_loop(
     listener: &TcpListener,
     wake_rx: &UnixStream,
     shared: &Shared,
+    abort: &Arc<AtomicBool>,
 ) -> std::io::Result<()> {
     let mut conns: HashMap<u64, Conn> = HashMap::new();
     let mut next_id: u64 = 0;
     let mut draining = false;
     let mut drain_deadline = Instant::now();
     loop {
+        if abort.load(Ordering::SeqCst) {
+            // Emulated kill -9: drop everything on the floor. Every
+            // subscriber is marked gone so the registry stops queueing
+            // for connections that no longer exist.
+            for c in conns.values() {
+                if let Some(sub) = &c.replica {
+                    sub.mark_gone();
+                }
+            }
+            obsreg::SERVE_OPEN_CONNS.set(0);
+            return Ok(());
+        }
         if !draining && server.is_shutdown() {
             draining = true;
             drain_deadline = Instant::now() + DRAIN_LIMIT;
@@ -440,6 +540,38 @@ fn poll_loop(
                 c.push_response(&response);
                 c.try_write();
                 c.update_backpressure();
+            }
+        }
+        // Replication fan-out: drain each subscriber's queue into its
+        // connection buffer (bounded by the write high-water mark — a
+        // standby that stops reading parks its records in the queue,
+        // whose own byte cap eventually marks it gone), plus a
+        // heartbeat frame on a fixed cadence so an idle primary still
+        // proves liveness and publishes its epoch.
+        if !draining {
+            for c in conns.values_mut() {
+                let Some(sub) = &c.replica else { continue };
+                if sub.is_gone() {
+                    c.dead = true;
+                    continue;
+                }
+                while c.out_len() < HIGH_WATER {
+                    match sub.pop() {
+                        Some(chunk) => c.outbuf.extend_from_slice(&chunk),
+                        None => break,
+                    }
+                }
+                if c.last_hb.elapsed() >= Duration::from_millis(HEARTBEAT_MS) {
+                    c.last_hb = Instant::now();
+                    let frame = registry::heartbeat_frame(
+                        server.epoch(),
+                        server.registry().journal_records_total(),
+                    );
+                    c.outbuf.extend_from_slice(&frame);
+                }
+                if c.out_len() > 0 {
+                    c.try_write();
+                }
             }
         }
         if !draining && fds[1].revents != 0 {
@@ -493,6 +625,7 @@ fn poll_loop(
             }
             c.update_backpressure();
         }
+        let idle_ms = server.idle_timeout_ms();
         let mut gone: Vec<u64> = Vec::new();
         for (&id, c) in conns.iter_mut() {
             if !draining {
@@ -502,10 +635,29 @@ fn poll_loop(
                 gone.push(id);
             } else if c.read_closed && !c.inflight && c.pending.is_empty() && c.out_len() == 0 {
                 gone.push(id);
+            } else if idle_ms > 0
+                && !draining
+                && !c.inflight
+                && c.replica.is_none()
+                && c.pending.is_empty()
+                && c.out_len() == 0
+                && c.last_activity.elapsed() >= Duration::from_millis(idle_ms)
+            {
+                // Idle reaper: a connection with nothing read, queued,
+                // or owed for the whole window is closed so abandoned
+                // peers cannot accumulate fds. Requests in flight are
+                // exempt (a slow fit is not idleness) and replication
+                // connections keep themselves warm via heartbeats.
+                obsreg::SERVE_IDLE_REAPED.inc();
+                gone.push(id);
             }
         }
         for id in gone {
-            conns.remove(&id);
+            if let Some(c) = conns.remove(&id) {
+                if let Some(sub) = c.replica {
+                    sub.mark_gone();
+                }
+            }
         }
         obsreg::SERVE_OPEN_CONNS.set(conns.len() as u64);
     }
@@ -652,6 +804,46 @@ mod tests {
         first_writer.write_all(b"{\"id\": 2, \"op\": \"shutdown\"}\n").unwrap();
         line.clear();
         first_reader.read_line(&mut line).unwrap();
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn idle_connections_are_reaped() {
+        let (_srv, addr, handle) = spawn_server(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            idle_timeout_ms: 150,
+            ..Default::default()
+        });
+        let reaped_before = obsreg::SERVE_IDLE_REAPED.get();
+        let idle = TcpStream::connect(addr).unwrap();
+        let mut idle_reader = BufReader::new(idle.try_clone().unwrap());
+        let mut idle_writer = idle;
+        // One served request proves the connection is live, then it goes
+        // quiet past the timeout.
+        idle_writer.write_all(b"{\"id\": 1, \"op\": \"stats\"}\n").unwrap();
+        let mut line = String::new();
+        idle_reader.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().field("ok"), Some(&Json::Bool(true)));
+        // The reaper closes it: the next read is a clean EOF (or a reset
+        // if the close raced our probe), never a hang.
+        line.clear();
+        let got = idle_reader.read_line(&mut line);
+        assert!(matches!(got, Ok(0) | Err(_)), "expected reaped connection, got {line:?}");
+        assert!(
+            obsreg::SERVE_IDLE_REAPED.get() > reaped_before,
+            "reap must be counted"
+        );
+        // A fresh connection still gets served — reaping is per-idle-
+        // connection, not a server state.
+        let fresh = TcpStream::connect(addr).unwrap();
+        let mut fresh_reader = BufReader::new(fresh.try_clone().unwrap());
+        let mut fresh_writer = fresh;
+        fresh_writer.write_all(b"{\"id\": 2, \"op\": \"shutdown\"}\n").unwrap();
+        line.clear();
+        fresh_reader.read_line(&mut line).unwrap();
+        assert_eq!(Json::parse(line.trim()).unwrap().field("ok"), Some(&Json::Bool(true)));
         handle.join().unwrap().unwrap();
     }
 }

@@ -590,6 +590,21 @@ pub enum Request {
         /// `json` (default) or `prometheus`.
         format: String,
     },
+    /// Role, epoch, replication lag and readiness — the probe op
+    /// (DESIGN.md §15). Always served, whatever the role.
+    Health,
+    /// Promote this server to primary: bump the failover epoch and start
+    /// accepting writes. Idempotent on a server that is already primary.
+    Promote,
+    /// Subscribe to the primary's journal stream (replication). Parsed
+    /// here for a total grammar, but only the TCP transport serves it —
+    /// after the handshake response the connection stops speaking
+    /// NDJSON and carries raw journal frames.
+    ReplSubscribe {
+        /// The subscriber's own epoch; a primary with a lower epoch must
+        /// fence itself instead of streaming.
+        epoch: u64,
+    },
     /// Stop the server after responding.
     Shutdown,
 }
@@ -669,11 +684,16 @@ fn parse_request(j: &Json) -> Result<Request, String> {
             }
             Request::Metrics { format }
         }
+        "health" => Request::Health,
+        "promote" => Request::Promote,
+        "repl_subscribe" => {
+            Request::ReplSubscribe { epoch: usize_field(j, "epoch", 0)? as u64 }
+        }
         "shutdown" => Request::Shutdown,
         "" => return Err("request missing `op`".to_string()),
         other => {
             return Err(format!(
-                "unknown op `{other}` (expected fit_path|fit_point|predict|dataset_from_file|stats|metrics|shutdown)"
+                "unknown op `{other}` (expected fit_path|fit_point|predict|dataset_from_file|stats|metrics|health|promote|repl_subscribe|shutdown)"
             ))
         }
     };
@@ -1173,6 +1193,19 @@ mod tests {
         let (_, msg) =
             Envelope::parse_line(r#"{"id": 4, "op": "metrics", "format": "xml"}"#).unwrap_err();
         assert!(msg.contains("unknown metrics format"), "{msg}");
+    }
+
+    #[test]
+    fn failover_ops_parse() {
+        let env = Envelope::parse_line(r#"{"id": 1, "op": "health"}"#).unwrap();
+        assert!(matches!(env.request, Request::Health));
+        let env = Envelope::parse_line(r#"{"id": 2, "op": "promote"}"#).unwrap();
+        assert!(matches!(env.request, Request::Promote));
+        let env = Envelope::parse_line(r#"{"id": 3, "op": "repl_subscribe", "epoch": 7}"#).unwrap();
+        assert!(matches!(env.request, Request::ReplSubscribe { epoch: 7 }));
+        // epoch defaults to 0 for a never-promoted standby
+        let env = Envelope::parse_line(r#"{"id": 4, "op": "repl_subscribe"}"#).unwrap();
+        assert!(matches!(env.request, Request::ReplSubscribe { epoch: 0 }));
     }
 
     #[test]

@@ -37,11 +37,20 @@
 //! crash-looping dataset cannot launder its quarantine strikes by
 //! restarting the server. Corrupt or torn records are detected, logged
 //! and skipped — never trusted.
+//!
+//! **Replication** (DESIGN.md §15): the same journal doubles as a
+//! replication log. Standbys attach a [`ReplSubscriber`]; every
+//! [`Registry::append_record`] fans the framed record out to them under
+//! the journal lock (so subscribers observe journal order exactly), and
+//! the standby applies records via [`Registry::apply_replicated`]. A
+//! [`Registry::snapshot_records`] rewrite compacts the append-only
+//! journal in place once it outgrows its threshold, and a u64 failover
+//! epoch — journaled like any other record — fences stale primaries.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::Write as _;
-use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::ingest::{fnv1a, FNV_BASIS};
@@ -56,6 +65,15 @@ use super::protocol::{ColumnTransform, DatasetSpec};
 
 /// Worker panics charged to one dataset entry before it is quarantined.
 pub const QUARANTINE_STRIKES: u64 = 3;
+
+/// Journal size (bytes) past which an append triggers a compaction
+/// rewrite. Tests lower it via [`Registry::set_compact_bytes`].
+const JOURNAL_COMPACT_BYTES: u64 = 8 << 20;
+
+/// Byte cap on one replication subscriber's unsent queue. A standby that
+/// falls this far behind is dropped — it reconnects and re-snapshots —
+/// instead of growing the primary's memory without bound.
+const REPL_MAX_QUEUE_BYTES: u64 = 64 << 20;
 
 /// A fitted path cached with its warm-start state.
 pub struct CachedModel {
@@ -157,10 +175,17 @@ pub struct DatasetEntry {
     /// Worker panics charged to this entry (quarantined at
     /// [`QUARANTINE_STRIKES`]).
     strikes: AtomicU64,
-    /// Warm-start seed restored from the journal of a previous process;
-    /// consulted by [`DatasetEntry::any_ready_seed`] when no model has
-    /// been built *this* process yet.
+    /// Warm-start seed restored from the journal of a previous process
+    /// (or shipped by replication, or deposited by the latest local
+    /// build on a durable server); consulted by
+    /// [`DatasetEntry::any_ready_seed`] when no model has been built
+    /// *this* process yet, and by `fit_point` streams with no prior
+    /// point state.
     restored_seed: Mutex<Option<PathSeed>>,
+    /// The journal form of this entry's spec (`None` for inline specs,
+    /// which are deliberately not durable) — what a compaction snapshot
+    /// re-emits.
+    spec_json: Option<Json>,
     models: Mutex<HashMap<String, ModelSlot>>,
     points: Mutex<HashMap<String, Arc<PointState>>>,
 }
@@ -219,6 +244,13 @@ impl DatasetEntry {
         self.restored_seed.lock().unwrap().clone()
     }
 
+    /// The journal-restored (or replication-shipped) warm-start seed, if
+    /// any — what a `fit_point` with no prior point state warms from on
+    /// a durable or failed-over server (DESIGN.md §15).
+    pub fn restored_seed(&self) -> Option<PathSeed> {
+        self.restored_seed.lock().unwrap().clone()
+    }
+
     /// Number of fully-built cached models.
     pub fn ready_models(&self) -> usize {
         self.models
@@ -265,6 +297,79 @@ struct DatasetMap {
     order: VecDeque<u64>,
 }
 
+/// One attached replication subscriber: framed journal records queued by
+/// [`Registry::append_record`], drained into the standby's connection by
+/// the owning transport (the net.rs poll loop). Queue depth is the
+/// primary-side backpressure signal — `REPL_LAG_RECORDS` reports the
+/// worst queue — and a subscriber more than [`REPL_MAX_QUEUE_BYTES`]
+/// behind is dropped (it reconnects and re-snapshots).
+pub struct ReplSubscriber {
+    chunks: Mutex<VecDeque<(Vec<u8>, u64)>>,
+    queued_records: AtomicU64,
+    queued_bytes: AtomicU64,
+    gone: AtomicBool,
+}
+
+impl ReplSubscriber {
+    /// A fresh, not-yet-attached subscriber.
+    pub fn new() -> ReplSubscriber {
+        ReplSubscriber {
+            chunks: Mutex::new(VecDeque::new()),
+            queued_records: AtomicU64::new(0),
+            queued_bytes: AtomicU64::new(0),
+            gone: AtomicBool::new(false),
+        }
+    }
+
+    /// Queue `records` journal records serialized as `bytes`.
+    fn push(&self, bytes: Vec<u8>, records: u64) {
+        if self.is_gone() {
+            return;
+        }
+        self.queued_records.fetch_add(records, Ordering::SeqCst);
+        let total =
+            self.queued_bytes.fetch_add(bytes.len() as u64, Ordering::SeqCst) + bytes.len() as u64;
+        self.chunks.lock().unwrap().push_back((bytes, records));
+        if total > REPL_MAX_QUEUE_BYTES {
+            eprintln!(
+                "registry: replication subscriber {total} bytes behind; dropping it \
+                 (it will reconnect and re-snapshot)"
+            );
+            self.mark_gone();
+        }
+    }
+
+    /// Pop the next queued chunk for the wire, or `None` when drained.
+    pub fn pop(&self) -> Option<Vec<u8>> {
+        let (bytes, records) = self.chunks.lock().unwrap().pop_front()?;
+        self.queued_records.fetch_sub(records, Ordering::SeqCst);
+        self.queued_bytes.fetch_sub(bytes.len() as u64, Ordering::SeqCst);
+        Some(bytes)
+    }
+
+    /// Records queued but not yet handed to the transport.
+    pub fn lag_records(&self) -> u64 {
+        self.queued_records.load(Ordering::SeqCst)
+    }
+
+    /// Detach: the registry stops queueing and drops this subscriber on
+    /// its next ship; the transport closes the connection.
+    pub fn mark_gone(&self) {
+        self.gone.store(true, Ordering::Release);
+    }
+
+    /// Has this subscriber been detached (dead connection, hopeless lag)?
+    pub fn is_gone(&self) -> bool {
+        self.gone.load(Ordering::Acquire)
+    }
+}
+
+impl Default for ReplSubscriber {
+    fn default() -> Self {
+        ReplSubscriber::new()
+    }
+}
+
 /// The server-wide registry.
 pub struct Registry {
     datasets: Mutex<DatasetMap>,
@@ -273,15 +378,41 @@ pub struct Registry {
     /// server runs without durable state (and during boot replay, which
     /// is what keeps replay from re-journaling what it restores).
     journal: Option<Mutex<std::fs::File>>,
+    /// The journal file's path — compaction's atomic rewrite and the
+    /// subscribe-time snapshot read need it.
+    journal_path: Option<PathBuf>,
+    /// Bytes currently in the journal file (appends add, compaction
+    /// resets) — the compaction trigger.
+    journal_bytes: AtomicU64,
+    /// Intact framed records in the journal (replayed + appended) — the
+    /// primary side of replication-lag accounting.
+    journal_records: AtomicU64,
+    /// Compaction threshold; tests lower it to force rewrites.
+    compact_bytes: AtomicU64,
+    /// Failover epoch: the highest promotion epoch this registry has
+    /// journaled or observed (DESIGN.md §15). Journaled on every raise,
+    /// so fencing survives a restart.
+    epoch: AtomicU64,
+    /// Live replication subscribers fed by `append_record`.
+    repl_subs: Mutex<Vec<Arc<ReplSubscriber>>>,
+    /// Fast-path flag: with no subscribers, `append_record` pays one
+    /// relaxed load and nothing else.
+    repl_active: AtomicBool,
+    /// Transport nudge, called after frames are queued so the poll loop
+    /// drains them now instead of on its next 50 ms tick.
+    repl_wake: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
     /// Strike counts by dataset fingerprint. Outlives the entry itself
     /// (FIFO eviction, restart) so a crash-looping dataset cannot reset
     /// its quarantine count by cycling through the cache or rebooting
     /// the server. Quarantine clears the ledger: the post-quarantine
     /// re-intern is a deliberate fresh start.
     strike_ledger: Mutex<HashMap<u64, u64>>,
-    /// Warm-start seeds restored from the journal, adopted by the entry
-    /// when its dataset is (re-)interned.
-    restored_seeds: Mutex<HashMap<u64, PathSeed>>,
+    /// Warm-start seeds `(model key, seed)` restored from the journal or
+    /// deposited by the latest local build, adopted by the entry when
+    /// its dataset is (re-)interned. Mirrors replay's last-record-wins
+    /// semantics, so a compaction snapshot of this map is equivalent to
+    /// the journal it replaces.
+    restored_seeds: Mutex<HashMap<u64, (String, PathSeed)>>,
 }
 
 impl Registry {
@@ -302,6 +433,14 @@ impl Registry {
             datasets: Mutex::new(DatasetMap::default()),
             cache_enabled,
             journal: None,
+            journal_path: None,
+            journal_bytes: AtomicU64::new(0),
+            journal_records: AtomicU64::new(0),
+            compact_bytes: AtomicU64::new(JOURNAL_COMPACT_BYTES),
+            epoch: AtomicU64::new(0),
+            repl_subs: Mutex::new(Vec::new()),
+            repl_active: AtomicBool::new(false),
+            repl_wake: Mutex::new(None),
             strike_ledger: Mutex::new(HashMap::new()),
             restored_seeds: Mutex::new(HashMap::new()),
         };
@@ -311,6 +450,20 @@ impl Registry {
             return reg;
         }
         let path = dir.join("registry.journal");
+        // A crash between compaction's two renames leaves no journal but
+        // a complete `.prev` (the pre-compaction log, which replays to
+        // the same state): restore it rather than booting empty.
+        if !path.exists() {
+            let prev = sibling(&path, ".prev");
+            if prev.exists() {
+                if let Err(e) = std::fs::rename(&prev, &path) {
+                    eprintln!(
+                        "registry: cannot restore {} from its .prev: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
         // Replay while `journal` is still None: restoring a dataset goes
         // through `dataset()`, and a live journal there would append a
         // duplicate record for every record replayed.
@@ -335,7 +488,11 @@ impl Registry {
             _ => {}
         }
         match std::fs::OpenOptions::new().create(true).append(true).open(&path) {
-            Ok(f) => reg.journal = Some(Mutex::new(f)),
+            Ok(f) => {
+                reg.journal = Some(Mutex::new(f));
+                reg.journal_path = Some(path);
+                reg.journal_bytes.store(valid, Ordering::SeqCst);
+            }
             Err(e) => {
                 eprintln!("registry: cannot open journal {}: {e}; running in-memory", path.display())
             }
@@ -378,7 +535,7 @@ impl Registry {
             self.strike_ledger.lock().unwrap().get(&fp).copied().unwrap_or(0);
         // A journaled seed only fits if its dimensions still match the
         // re-materialized problem; anything else is stale and dropped.
-        let restored = self.restored_seeds.lock().unwrap().get(&fp).and_then(|s| {
+        let restored = self.restored_seeds.lock().unwrap().get(&fp).and_then(|(_, s)| {
             (s.beta.len() == problem.p_total() && s.grad.len() == problem.p_total())
                 .then(|| s.clone())
         });
@@ -394,6 +551,7 @@ impl Registry {
             col_norms: Mutex::new(None),
             strikes: AtomicU64::new(carried_strikes),
             restored_seed: Mutex::new(restored),
+            spec_json: spec_to_json(spec),
             models: Mutex::new(HashMap::new()),
             points: Mutex::new(HashMap::new()),
         });
@@ -550,21 +708,264 @@ impl Registry {
     // --- durable-state journal (DESIGN.md §13) ---------------------------
 
     /// Append one JSON record, framed `[u32 len][u64 fnv1a(payload)][payload]`
-    /// and fsynced. No-op without a journal; IO errors log and drop the
-    /// record rather than failing the serving path that triggered it.
+    /// and fsynced, then fan it out to replication subscribers (still
+    /// under the journal lock, so subscribers see exact journal order)
+    /// and compact if the file outgrew its threshold. No-op without a
+    /// journal; IO errors log and drop the record rather than failing
+    /// the serving path that triggered it.
     fn append_record(&self, record: &Json) {
         let Some(journal) = &self.journal else { return };
-        let payload = record.to_string();
-        let bytes = payload.as_bytes();
-        let mut frame = Vec::with_capacity(bytes.len() + 12);
-        frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&fnv1a(FNV_BASIS, bytes).to_le_bytes());
-        frame.extend_from_slice(bytes);
+        let frame = frame_record(record);
         let mut f = journal.lock().unwrap();
         match f.write_all(&frame).and_then(|_| f.sync_data()) {
-            Ok(()) => obsreg::JOURNAL_RECORDS.inc(),
+            Ok(()) => {
+                obsreg::JOURNAL_RECORDS.inc();
+                self.journal_records.fetch_add(1, Ordering::SeqCst);
+                let bytes = self.journal_bytes.fetch_add(frame.len() as u64, Ordering::SeqCst)
+                    + frame.len() as u64;
+                self.ship_frame(frame);
+                if bytes >= self.compact_bytes.load(Ordering::Relaxed) {
+                    self.compact_locked(&mut f);
+                }
+            }
             Err(e) => eprintln!("registry: journal append failed: {e}"),
         }
+    }
+
+    // --- replication (DESIGN.md §15) -------------------------------------
+
+    /// Fan one framed record out to every live subscriber. Called with
+    /// the journal lock held. Zero subscribers cost one relaxed load —
+    /// the replication-disabled fast path.
+    fn ship_frame(&self, frame: Vec<u8>) {
+        if !self.repl_active.load(Ordering::Acquire) {
+            return;
+        }
+        let mut frame = frame;
+        if crate::fault::on_repl_ship() {
+            // Corrupt the wire copy's digest only: the on-disk journal
+            // already holds the good frame.
+            frame[4] ^= 0x01;
+        }
+        let mut max_lag = 0u64;
+        let live = {
+            let mut subs = self.repl_subs.lock().unwrap();
+            subs.retain(|s| !s.is_gone());
+            for sub in subs.iter() {
+                sub.push(frame.clone(), 1);
+                obsreg::REPL_RECORDS_SHIPPED.inc();
+                max_lag = max_lag.max(sub.lag_records());
+            }
+            if subs.is_empty() {
+                self.repl_active.store(false, Ordering::Release);
+            }
+            subs.len()
+        };
+        obsreg::REPL_SUBSCRIBERS.set(live as u64);
+        obsreg::REPL_LAG_RECORDS.set(max_lag);
+        if live > 0 {
+            if let Some(wake) = &*self.repl_wake.lock().unwrap() {
+                wake();
+            }
+        }
+    }
+
+    /// Attach a replication subscriber: under the journal lock (so no
+    /// append can interleave), queue the entire on-disk journal as the
+    /// catch-up snapshot, then register for every future
+    /// `append_record` fan-out — no record is lost or reordered between
+    /// snapshot and stream. Returns the number of intact records in the
+    /// snapshot, for the standby's lag accounting.
+    pub fn attach_subscriber(&self, sub: Arc<ReplSubscriber>) -> Result<u64, String> {
+        let Some(journal) = &self.journal else {
+            return Err("replication requires --state-dir (no journal to ship)".to_string());
+        };
+        let path = self.journal_path.as_ref().expect("journal implies a path");
+        let _append_guard = journal.lock().unwrap();
+        let snapshot = std::fs::read(path)
+            .map_err(|e| format!("cannot read journal for replication snapshot: {e}"))?;
+        let records = self.journal_records.load(Ordering::SeqCst);
+        if !snapshot.is_empty() {
+            sub.push(snapshot, records);
+        }
+        let mut subs = self.repl_subs.lock().unwrap();
+        subs.retain(|s| !s.is_gone());
+        subs.push(sub);
+        obsreg::REPL_SUBSCRIBERS.set(subs.len() as u64);
+        self.repl_active.store(true, Ordering::Release);
+        Ok(records)
+    }
+
+    /// Install the transport nudge called whenever replication frames
+    /// are queued (the TCP poll loop's self-pipe).
+    pub fn set_repl_wake(&self, wake: Box<dyn Fn() + Send + Sync>) {
+        *self.repl_wake.lock().unwrap() = Some(wake);
+    }
+
+    /// `(live subscribers, worst queued-record lag)` for `health`.
+    pub fn subscriber_stats(&self) -> (usize, u64) {
+        let subs = self.repl_subs.lock().unwrap();
+        let live: Vec<_> = subs.iter().filter(|s| !s.is_gone()).collect();
+        let lag = live.iter().map(|s| s.lag_records()).max().unwrap_or(0);
+        (live.len(), lag)
+    }
+
+    /// Intact records in this registry's journal (heartbeats carry it so
+    /// standbys can account lag against the primary).
+    pub fn journal_records_total(&self) -> u64 {
+        self.journal_records.load(Ordering::SeqCst)
+    }
+
+    /// The failover epoch this registry last journaled or observed.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// Record a remotely-observed epoch, keeping the max; the raise is
+    /// journaled so fencing survives a restart. Returns `true` when the
+    /// epoch actually rose.
+    pub fn bump_epoch_to(&self, epoch: u64) -> bool {
+        let prev = self.epoch.fetch_max(epoch, Ordering::SeqCst);
+        if epoch > prev {
+            self.append_record(&epoch_record(epoch));
+            return true;
+        }
+        false
+    }
+
+    /// Bump the epoch for a promotion and journal it; returns the new
+    /// epoch. An ex-primary fenced at epoch N promotes to N+1 — above
+    /// everything it has observed.
+    pub fn advance_epoch(&self) -> u64 {
+        let epoch = self.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+        self.append_record(&epoch_record(epoch));
+        epoch
+    }
+
+    /// Apply one replicated journal record on a standby, making it
+    /// durable in the standby's own journal. Dataset records journal
+    /// themselves inside [`Registry::dataset`] on a fresh intern; every
+    /// other kind is re-appended explicitly after a successful apply.
+    /// Returns `false` for records that were skipped.
+    pub fn apply_replicated(&self, rec: &Json) -> bool {
+        let is_dataset = rec.field("kind").and_then(Json::as_str) == Some("dataset");
+        let applied = self.apply_journal_record(rec);
+        if applied && !is_dataset {
+            self.append_record(rec);
+        }
+        applied
+    }
+
+    // --- journal compaction (DESIGN.md §15) ------------------------------
+
+    /// Force a compaction rewrite now (tests; production compacts
+    /// automatically past the size threshold). No-op without a journal.
+    pub fn compact_journal(&self) {
+        let Some(journal) = &self.journal else { return };
+        let mut f = journal.lock().unwrap();
+        self.compact_locked(&mut f);
+    }
+
+    /// Lower (or raise) the automatic compaction threshold in bytes.
+    pub fn set_compact_bytes(&self, bytes: u64) {
+        self.compact_bytes.store(bytes.max(1), Ordering::Relaxed);
+    }
+
+    /// The live registry state as a minimal record stream: replaying it
+    /// into a fresh registry reproduces exactly what replaying the full
+    /// journal would (last-record-wins seeds, the strike ledger, the
+    /// epoch, every durable dataset spec). It is both the compaction
+    /// payload and the state-equality witness in tests. Deterministic:
+    /// the epoch leads, then datasets, strikes and seeds sorted by
+    /// fingerprint.
+    pub fn snapshot_records(&self) -> Vec<Json> {
+        let mut recs = Vec::new();
+        let epoch = self.epoch();
+        if epoch > 0 {
+            recs.push(epoch_record(epoch));
+        }
+        let mut specs: Vec<(u64, Json)> = {
+            let map = self.datasets.lock().unwrap();
+            map.by_fp
+                .iter()
+                .filter_map(|(fp, e)| e.spec_json.clone().map(|sj| (*fp, sj)))
+                .collect()
+        };
+        specs.sort_by_key(|(fp, _)| *fp);
+        for (_, sj) in specs {
+            recs.push(Json::obj(vec![("kind", Json::Str("dataset".to_string())), ("spec", sj)]));
+        }
+        let mut strikes: Vec<(u64, u64)> =
+            self.strike_ledger.lock().unwrap().iter().map(|(&fp, &c)| (fp, c)).collect();
+        strikes.sort_unstable();
+        for (fp, count) in strikes {
+            recs.push(Json::obj(vec![
+                ("kind", Json::Str("strikes".to_string())),
+                ("fp", Json::Str(fp_hex(fp))),
+                ("count", Json::Num(count as f64)),
+            ]));
+        }
+        let mut seeds: Vec<(u64, String, PathSeed)> = self
+            .restored_seeds
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&fp, (key, seed))| (fp, key.clone(), seed.clone()))
+            .collect();
+        seeds.sort_by(|a, b| a.0.cmp(&b.0));
+        for (fp, key, seed) in seeds {
+            recs.push(seed_record(fp, &key, &seed));
+        }
+        recs
+    }
+
+    /// Rewrite the journal as a snapshot of the live state, following
+    /// checkpoint.rs's atomic-write discipline: tmp + fsync, rotate the
+    /// old journal to `.prev`, rename the snapshot into place, fsync the
+    /// directory, reopen for append. Called with the journal lock held;
+    /// on any IO error the old handle and file stay authoritative.
+    fn compact_locked(&self, f: &mut std::fs::File) {
+        let Some(path) = &self.journal_path else { return };
+        let recs = self.snapshot_records();
+        let mut payload = Vec::new();
+        for rec in &recs {
+            payload.extend_from_slice(&frame_record(rec));
+        }
+        let tmp = sibling(path, ".tmp");
+        let prev = sibling(path, ".prev");
+        let rewrite = || -> std::io::Result<()> {
+            let mut out = std::fs::File::create(&tmp)?;
+            out.write_all(&payload)?;
+            out.sync_all()?;
+            std::fs::rename(path, &prev)?;
+            std::fs::rename(&tmp, path)?;
+            if let Some(dir) = path.parent() {
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
+            Ok(())
+        };
+        if let Err(e) = rewrite() {
+            eprintln!("registry: journal compaction failed: {e}; keeping the append-only journal");
+            return;
+        }
+        match std::fs::OpenOptions::new().append(true).open(path) {
+            Ok(fresh) => *f = fresh,
+            Err(e) => {
+                // The snapshot is in place but can't be appended to; keep
+                // the old handle (now `.prev`). New records land there and
+                // a restart replays only the snapshot — degraded
+                // durability, never corruption. The next compaction
+                // attempt re-squares it.
+                eprintln!("registry: cannot reopen compacted journal: {e}");
+                return;
+            }
+        }
+        let old = self.journal_bytes.swap(payload.len() as u64, Ordering::SeqCst);
+        self.journal_records.store(recs.len() as u64, Ordering::SeqCst);
+        obsreg::JOURNAL_COMPACTIONS.inc();
+        obsreg::JOURNAL_BYTES_RECLAIMED.add(old.saturating_sub(payload.len() as u64));
     }
 
     fn journal_dataset(&self, spec: &DatasetSpec) {
@@ -590,14 +991,18 @@ impl Registry {
         if self.journal.is_none() {
             return;
         }
-        self.append_record(&Json::obj(vec![
-            ("kind", Json::Str("model".to_string())),
-            ("fp", Json::Str(fp_hex(fp))),
-            ("key", Json::Str(key.to_string())),
-            ("sigma", Json::Num(seed.sigma)),
-            ("beta", Json::nums(&seed.beta)),
-            ("grad", Json::nums(&seed.grad)),
-        ]));
+        self.append_record(&seed_record(fp, key, seed));
+        // Mirror the append into the restored-seed state: replay's
+        // last-record-wins rule says this build is now the seed a
+        // restart (or a compaction snapshot, or a standby applying this
+        // very record) would restore — keeping the live registry and
+        // its journal equivalent.
+        if let Some(entry) = self.datasets.lock().unwrap().by_fp.get(&fp) {
+            if seed.beta.len() == entry.problem.p_total() {
+                *entry.restored_seed.lock().unwrap() = Some(seed.clone());
+            }
+        }
+        self.restored_seeds.lock().unwrap().insert(fp, (key.to_string(), seed.clone()));
     }
 
     fn journal_strikes(&self, fp: u64, count: u64) {
@@ -645,6 +1050,11 @@ impl Registry {
             };
             let payload = &buf[start..end];
             off = end;
+            // Every complete frame counts toward the record total — a
+            // replication snapshot ships them all, digest-bad included
+            // (the standby skips those itself), so lag accounting must
+            // agree on what "a record" is.
+            self.journal_records.fetch_add(1, Ordering::SeqCst);
             if fnv1a(FNV_BASIS, payload) != digest {
                 // Damaged in place but the frame is intact: skip just it.
                 eprintln!("registry: journal record with bad digest skipped");
@@ -727,6 +1137,7 @@ impl Registry {
                 if beta.is_empty() || beta.len() != grad.len() {
                     return false;
                 }
+                let key = rec.field("key").and_then(Json::as_str).unwrap_or("").to_string();
                 let seed = PathSeed { sigma, beta, grad };
                 if let Some(entry) = self.datasets.lock().unwrap().by_fp.get(&fp) {
                     if seed.beta.len() == entry.problem.p_total() {
@@ -736,7 +1147,16 @@ impl Registry {
                 // Keep it keyed too, for an entry interned after replay
                 // (or re-interned post-eviction). Last record wins: it is
                 // the most recent successful build.
-                self.restored_seeds.lock().unwrap().insert(fp, seed);
+                self.restored_seeds.lock().unwrap().insert(fp, (key, seed));
+                true
+            }
+            Some("epoch") => {
+                let Some(epoch) = rec.field("epoch").and_then(Json::as_usize) else {
+                    return false;
+                };
+                // Max-merge: replaying an old journal (or a duplicated
+                // replication stream) can never lower the fence.
+                self.epoch.fetch_max(epoch as u64, Ordering::SeqCst);
                 true
             }
             _ => {
@@ -745,6 +1165,56 @@ impl Registry {
             }
         }
     }
+}
+
+/// Frame one journal record for disk or wire:
+/// `[u32 len (LE)][u64 fnv1a(payload) (LE)][JSON payload]`.
+pub fn frame_record(record: &Json) -> Vec<u8> {
+    let payload = record.to_string();
+    let bytes = payload.as_bytes();
+    let mut frame = Vec::with_capacity(bytes.len() + 12);
+    frame.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a(FNV_BASIS, bytes).to_le_bytes());
+    frame.extend_from_slice(bytes);
+    frame
+}
+
+/// A replication heartbeat frame: the primary's epoch and record count,
+/// so a standby can account lag and detect a silent primary. Framed like
+/// a journal record but never journaled by either side.
+pub fn heartbeat_frame(epoch: u64, records: u64) -> Vec<u8> {
+    frame_record(&Json::obj(vec![
+        ("kind", Json::Str("heartbeat".to_string())),
+        ("epoch", Json::Num(epoch as f64)),
+        ("records", Json::Num(records as f64)),
+    ]))
+}
+
+/// The journal form of an epoch raise. Epochs are small promotion
+/// counters — nowhere near 2^53 — so a plain JSON number is exact.
+fn epoch_record(epoch: u64) -> Json {
+    Json::obj(vec![("kind", Json::Str("epoch".to_string())), ("epoch", Json::Num(epoch as f64))])
+}
+
+/// The journal form of a built model's warm-start seed.
+fn seed_record(fp: u64, key: &str, seed: &PathSeed) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str("model".to_string())),
+        ("fp", Json::Str(fp_hex(fp))),
+        ("key", Json::Str(key.to_string())),
+        ("sigma", Json::Num(seed.sigma)),
+        ("beta", Json::nums(&seed.beta)),
+        ("grad", Json::nums(&seed.grad)),
+    ])
+}
+
+/// `<path><suffix>` as a sibling file (`registry.journal` →
+/// `registry.journal.prev`); `Path::with_extension` would eat the
+/// `.journal` part.
+fn sibling(path: &Path, suffix: &str) -> PathBuf {
+    let mut s = path.as_os_str().to_owned();
+    s.push(suffix);
+    PathBuf::from(s)
 }
 
 /// Fingerprints are 64-bit and routinely exceed 2^53, so they journal as
@@ -1140,5 +1610,129 @@ mod tests {
         let reg = Registry::new(true);
         assert!(reg.journal.is_none());
         reg.dataset(&spec(108)).unwrap(); // must not touch the filesystem
+    }
+
+    fn render(recs: &[Json]) -> String {
+        recs.iter().map(Json::to_string).collect::<Vec<_>>().join("\n")
+    }
+
+    #[test]
+    fn compacted_journal_replays_to_identical_registry() {
+        let dir = state_dir("compact");
+        let path = dir.join("registry.journal");
+        let snap = {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            let entry = reg.dataset(&spec(110)).unwrap();
+            reg.model(&entry, "k", || Ok(build_model(&entry))).unwrap();
+            let other = reg.dataset(&spec(111)).unwrap();
+            assert!(!reg.record_panic(&other));
+            // Redundant appends a snapshot folds into one record each.
+            assert!(reg.bump_epoch_to(2));
+            assert!(reg.bump_epoch_to(3));
+            assert!(reg.bump_epoch_to(4));
+            let snap = render(&reg.snapshot_records());
+            let old_len = std::fs::metadata(&path).unwrap().len();
+            let compactions = obsreg::JOURNAL_COMPACTIONS.get();
+            let reclaimed = obsreg::JOURNAL_BYTES_RECLAIMED.get();
+            reg.compact_journal();
+            assert!(obsreg::JOURNAL_COMPACTIONS.get() > compactions);
+            assert!(obsreg::JOURNAL_BYTES_RECLAIMED.get() > reclaimed);
+            let new_len = std::fs::metadata(&path).unwrap().len();
+            assert!(new_len < old_len, "snapshot must shrink the journal: {old_len} -> {new_len}");
+            assert!(dir.join("registry.journal.prev").exists(), "old journal rotates to .prev");
+            assert_eq!(render(&reg.snapshot_records()), snap, "compaction must not change state");
+            // The reopened handle still appends durably.
+            assert!(reg.bump_epoch_to(6));
+            snap.replace("\"epoch\":4", "\"epoch\":6")
+        };
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        assert_eq!(render(&reg2.snapshot_records()), snap, "replay of compacted journal");
+        assert_eq!(reg2.counts().0, 2);
+        assert_eq!(reg2.epoch(), 6);
+        let entry = reg2.dataset(&spec(110)).unwrap();
+        assert!(entry.restored_seed().is_some(), "seed survives compaction + restart");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn size_triggered_compaction_fires_on_append() {
+        let dir = state_dir("autocompact");
+        let reg = Registry::with_state_dir(true, Some(&dir));
+        reg.dataset(&spec(112)).unwrap();
+        let before = obsreg::JOURNAL_COMPACTIONS.get();
+        reg.set_compact_bytes(1);
+        assert!(reg.bump_epoch_to(1)); // any append past the threshold compacts
+        assert!(obsreg::JOURNAL_COMPACTIONS.get() > before);
+        drop(reg);
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        assert_eq!(reg2.counts().0, 1);
+        assert_eq!(reg2.epoch(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn epoch_raises_are_journaled_and_never_lower() {
+        let dir = state_dir("epoch");
+        {
+            let reg = Registry::with_state_dir(true, Some(&dir));
+            assert_eq!(reg.epoch(), 0);
+            assert_eq!(reg.advance_epoch(), 1);
+            assert!(reg.bump_epoch_to(5));
+            assert!(!reg.bump_epoch_to(3), "a stale epoch must not lower the fence");
+            assert_eq!(reg.epoch(), 5);
+        }
+        let reg2 = Registry::with_state_dir(true, Some(&dir));
+        assert_eq!(reg2.epoch(), 5, "fencing must survive a restart");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Split a drained subscriber byte stream back into JSON records,
+    /// checking each digest — the standby-side framing in miniature.
+    fn parse_frames(buf: &[u8]) -> Vec<Json> {
+        let mut recs = Vec::new();
+        let mut off = 0;
+        while off + 12 <= buf.len() {
+            let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap()) as usize;
+            let digest = u64::from_le_bytes(buf[off + 4..off + 12].try_into().unwrap());
+            let payload = &buf[off + 12..off + 12 + len];
+            assert_eq!(fnv1a(FNV_BASIS, payload), digest, "frame digest");
+            recs.push(Json::parse(std::str::from_utf8(payload).unwrap()).unwrap());
+            off += 12 + len;
+        }
+        assert_eq!(off, buf.len(), "no partial frame");
+        recs
+    }
+
+    #[test]
+    fn subscribers_get_snapshot_then_live_appends_in_order() {
+        let dir = state_dir("repl");
+        let reg = Registry::with_state_dir(true, Some(&dir));
+        reg.dataset(&spec(120)).unwrap();
+        let sub = Arc::new(ReplSubscriber::new());
+        let records = reg.attach_subscriber(Arc::clone(&sub)).unwrap();
+        assert_eq!(records, 1, "snapshot carries the pre-subscribe intern");
+        assert_eq!(sub.lag_records(), 1);
+        reg.dataset(&spec(121)).unwrap();
+        assert!(reg.bump_epoch_to(1));
+        let mut buf = Vec::new();
+        while let Some(chunk) = sub.pop() {
+            buf.extend_from_slice(&chunk);
+        }
+        assert_eq!(sub.lag_records(), 0, "drained queue means zero lag");
+        let recs = parse_frames(&buf);
+        assert_eq!(recs.len(), 3);
+        // A fresh registry applying the stream converges to the same state.
+        let replica = Registry::new(true);
+        for rec in &recs {
+            assert!(replica.apply_replicated(rec), "{rec}");
+        }
+        assert_eq!(replica.counts().0, 2);
+        assert_eq!(replica.epoch(), 1);
+        // A detached subscriber stops receiving and drops from stats.
+        sub.mark_gone();
+        reg.dataset(&spec(122)).unwrap();
+        assert_eq!(reg.subscriber_stats().0, 0);
+        assert!(sub.pop().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

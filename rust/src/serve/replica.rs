@@ -1,0 +1,357 @@
+//! The warm-standby replication loop (DESIGN.md §15).
+//!
+//! A standby server (`serve --standby <primary>`) runs this loop next
+//! to its own transport: connect to the primary, send one
+//! `repl_subscribe` NDJSON handshake, then read raw journal frames for
+//! the rest of the connection — first the catch-up snapshot (the
+//! primary's journal as of the handshake, taken under its journal lock
+//! so nothing is lost or reordered), then live appends in exact journal
+//! order. Every record is digest-checked and applied through the same
+//! [`Registry::apply_replicated`](super::registry::Registry::apply_replicated)
+//! machinery boot-time replay uses — datasets intern, seeds go hot,
+//! strikes carry, epochs max-merge — and re-journaled locally, so the
+//! standby's own state dir is a valid journal at every instant and a
+//! promotion needs no catch-up work at all.
+//!
+//! Heartbeat frames carry the primary's epoch and journal record count:
+//! the standby folds the epoch (a primary that somehow fell behind a
+//! newer epoch fences itself via
+//! [`Server::observe_remote_epoch`](super::server::Server::observe_remote_epoch)),
+//! publishes the lag, and uses the heartbeats' *absence* as the loss
+//! detector — after [`StandbyConfig::promote_after_misses`] consecutive
+//! read timeouts or failed reconnects, the standby promotes itself when
+//! `--promote-on-loss` armed it. The default leaves self-promotion off:
+//! an operator (or orchestrator) issues the `promote` op explicitly.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::ingest::{fnv1a, FNV_BASIS};
+use crate::jsonio::Json;
+use crate::obs::registry as obsreg;
+
+use super::client::Backoff;
+use super::server::{Role, Server};
+
+/// Cap on one replication frame — matches the primary's per-subscriber
+/// queue bound, so any larger claimed length is stream corruption, not
+/// a real record.
+const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Standby loop configuration (the `serve` CLI fills it from flags).
+#[derive(Clone, Debug)]
+pub struct StandbyConfig {
+    /// Primary endpoints (`host:port`), tried in rotation.
+    pub primaries: Vec<String>,
+    /// Read timeout while waiting for a frame; one elapsed timeout with
+    /// no bytes is one missed heartbeat. Should be a small multiple of
+    /// the primary's ~500 ms heartbeat cadence.
+    pub heartbeat_timeout_ms: u64,
+    /// Missed heartbeats (or failed connects) before self-promotion.
+    /// 0 (the default) disables promotion on loss — a network partition
+    /// between the pair must not mint a second primary unless the
+    /// operator opted into that trade.
+    pub promote_after_misses: u64,
+    /// Reconnect backoff base in milliseconds.
+    pub reconnect_base_ms: u64,
+    /// Backoff jitter seed (deterministic schedules in tests).
+    pub seed: u64,
+}
+
+impl Default for StandbyConfig {
+    fn default() -> StandbyConfig {
+        StandbyConfig {
+            primaries: Vec::new(),
+            heartbeat_timeout_ms: 2_000,
+            promote_after_misses: 0,
+            reconnect_base_ms: 100,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Why one replication session ended.
+enum SessionEnd {
+    /// The server is shutting down or left the standby role.
+    Stop,
+    /// The primary refused the handshake (fenced us, or is itself a
+    /// standby): rotate and back off.
+    Refused,
+    /// Connection failed, timed out past tolerance, or the stream
+    /// corrupted beyond resync.
+    Lost,
+}
+
+/// Spawn the standby loop on its own thread. It exits when the server
+/// shuts down, is promoted (by the `promote` op or its own loss
+/// detector), or was never configured with a primary.
+pub fn spawn_standby(server: Arc<Server>, cfg: StandbyConfig) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || run_standby(&server, &cfg))
+}
+
+fn run_standby(server: &Arc<Server>, cfg: &StandbyConfig) {
+    if cfg.primaries.is_empty() {
+        return;
+    }
+    let mut backoff = Backoff::new(cfg.reconnect_base_ms.max(1), 5_000, cfg.seed);
+    let mut misses: u64 = 0;
+    let mut which = 0usize;
+    loop {
+        if server.is_shutdown() || server.role() != Role::Standby {
+            return;
+        }
+        let addr = &cfg.primaries[which % cfg.primaries.len()];
+        which += 1;
+        match run_once(server, cfg, addr, &mut misses, &mut backoff) {
+            SessionEnd::Stop => return,
+            SessionEnd::Refused | SessionEnd::Lost => {
+                if maybe_promote(server, cfg, misses) {
+                    return;
+                }
+                let delay = backoff.next_delay_ms(None);
+                std::thread::sleep(Duration::from_millis(delay));
+            }
+        }
+    }
+}
+
+/// Promote when the loss detector is armed and tripped. Returns whether
+/// this call promoted.
+fn maybe_promote(server: &Server, cfg: &StandbyConfig, misses: u64) -> bool {
+    if cfg.promote_after_misses == 0 || misses < cfg.promote_after_misses {
+        return false;
+    }
+    eprintln!("serve: standby lost the primary ({misses} missed heartbeats): promoting");
+    server.promote();
+    true
+}
+
+/// One replication session: handshake, then stream frames until the
+/// connection dies or the server leaves the standby role.
+fn run_once(
+    server: &Arc<Server>,
+    cfg: &StandbyConfig,
+    addr: &str,
+    misses: &mut u64,
+    backoff: &mut Backoff,
+) -> SessionEnd {
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            *misses += 1;
+            obsreg::REPL_HEARTBEATS_MISSED.inc();
+            return SessionEnd::Lost;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream
+        .set_read_timeout(Some(Duration::from_millis(cfg.heartbeat_timeout_ms.max(1))));
+    let hello =
+        format!("{{\"id\": 0, \"op\": \"repl_subscribe\", \"epoch\": {}}}\n", server.epoch());
+    if stream.write_all(hello.as_bytes()).is_err() {
+        *misses += 1;
+        return SessionEnd::Lost;
+    }
+    // Read the handshake line byte-by-byte: a buffered reader would
+    // swallow the head of the framed stream that follows the newline.
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let mut b = [0u8; 1];
+        match stream.read(&mut b) {
+            Ok(0) => {
+                *misses += 1;
+                return SessionEnd::Lost;
+            }
+            Ok(_) if b[0] == b'\n' => break,
+            Ok(_) => {
+                line.push(b[0]);
+                if line.len() > 1 << 20 {
+                    return SessionEnd::Refused;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                *misses += 1;
+                obsreg::REPL_HEARTBEATS_MISSED.inc();
+                return SessionEnd::Lost;
+            }
+        }
+    }
+    let Ok(resp) = Json::parse(&String::from_utf8_lossy(&line)) else {
+        return SessionEnd::Refused;
+    };
+    if resp.field("ok") != Some(&Json::Bool(true)) {
+        eprintln!(
+            "serve: primary {addr} refused replication: {}",
+            resp.field("error").and_then(Json::as_str).unwrap_or("unparseable handshake")
+        );
+        return SessionEnd::Refused;
+    }
+    let remote_epoch = resp
+        .field("result")
+        .and_then(|r| r.field("epoch"))
+        .and_then(Json::as_usize)
+        .unwrap_or(0) as u64;
+    // The primary vouched for an epoch at least ours (it fences anything
+    // newer than itself); adopt it before applying its records.
+    server.observe_remote_epoch(remote_epoch);
+    eprintln!("serve: replicating from {addr} (epoch {remote_epoch})");
+    // Subscribed: the connection is live, so the loss counter and the
+    // reconnect backoff both restart from zero.
+    *misses = 0;
+    *backoff = Backoff::new(cfg.reconnect_base_ms.max(1), 5_000, cfg.seed);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = vec![0u8; 64 << 10];
+    // Journal frames consumed this session (heartbeats excluded, bad
+    // digests included — the primary's record count includes those too).
+    let mut seen: u64 = 0;
+    loop {
+        if server.is_shutdown() || server.role() != Role::Standby {
+            return SessionEnd::Stop;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                *misses += 1;
+                obsreg::REPL_HEARTBEATS_MISSED.inc();
+                return SessionEnd::Lost;
+            }
+            Ok(n) => {
+                *misses = 0;
+                buf.extend_from_slice(&chunk[..n]);
+                loop {
+                    match take_frame(&mut buf) {
+                        FrameOutcome::Need => break,
+                        FrameOutcome::Corrupt => {
+                            // Frame boundaries are gone; only a fresh
+                            // handshake (and snapshot) can resync.
+                            eprintln!("serve: replication stream corrupted; resubscribing");
+                            return SessionEnd::Lost;
+                        }
+                        FrameOutcome::BadDigest => {
+                            // Damaged in flight: skip exactly this
+                            // record, never apply it. The journal's
+                            // last-record-wins semantics make the next
+                            // clean record for the same key heal it.
+                            seen += 1;
+                            obsreg::REPL_DIGEST_SKIPS.inc();
+                        }
+                        FrameOutcome::Record(rec) => {
+                            if rec.field("kind").and_then(Json::as_str) == Some("heartbeat") {
+                                let epoch = rec
+                                    .field("epoch")
+                                    .and_then(Json::as_usize)
+                                    .unwrap_or(0)
+                                    as u64;
+                                server.observe_remote_epoch(epoch);
+                                let records = rec
+                                    .field("records")
+                                    .and_then(Json::as_usize)
+                                    .unwrap_or(0)
+                                    as u64;
+                                server.set_repl_lag(records.saturating_sub(seen));
+                            } else {
+                                seen += 1;
+                                if server.registry().apply_replicated(&rec) {
+                                    obsreg::REPL_RECORDS_APPLIED.inc();
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // A read timeout is one missed heartbeat: the primary
+            // proves liveness every ~500 ms even when idle.
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+            {
+                *misses += 1;
+                obsreg::REPL_HEARTBEATS_MISSED.inc();
+                if maybe_promote(server, cfg, *misses) {
+                    return SessionEnd::Stop;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                *misses += 1;
+                obsreg::REPL_HEARTBEATS_MISSED.inc();
+                return SessionEnd::Lost;
+            }
+        }
+    }
+}
+
+/// Outcome of one attempt to take a frame off the stream buffer.
+enum FrameOutcome {
+    /// Not enough buffered bytes for a complete frame yet.
+    Need,
+    /// A complete frame whose digest and JSON both checked out.
+    Record(Json),
+    /// A complete frame whose payload did not match its digest (or
+    /// didn't parse) — the boundary was sound, the stream continues.
+    BadDigest,
+    /// An implausible frame length: boundaries are unrecoverable.
+    Corrupt,
+}
+
+/// Take one `[u32 len][u64 fnv1a][payload]` frame off the front of
+/// `buf`, partial-read-safe (the caller accumulates whatever sizes the
+/// kernel hands it).
+fn take_frame(buf: &mut Vec<u8>) -> FrameOutcome {
+    if buf.len() < 12 {
+        return FrameOutcome::Need;
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return FrameOutcome::Corrupt;
+    }
+    if buf.len() < 12 + len {
+        return FrameOutcome::Need;
+    }
+    let digest = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let payload: Vec<u8> = buf[12..12 + len].to_vec();
+    buf.drain(..12 + len);
+    if fnv1a(FNV_BASIS, &payload) != digest {
+        return FrameOutcome::BadDigest;
+    }
+    match std::str::from_utf8(&payload).ok().and_then(|s| Json::parse(s).ok()) {
+        Some(rec) => FrameOutcome::Record(rec),
+        None => FrameOutcome::BadDigest,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::frame_record;
+
+    #[test]
+    fn take_frame_parses_skips_flipped_digests_and_rejects_garbage() {
+        let rec = Json::obj(vec![
+            ("kind", Json::Str("strikes".to_string())),
+            ("fp", Json::Str("00000000000000aa".to_string())),
+            ("count", Json::Num(2.0)),
+        ]);
+        let mut stream = frame_record(&rec);
+        let mut flipped = frame_record(&rec);
+        flipped[4] ^= 0x01; // the digest flip the wire fault injects
+        stream.extend_from_slice(&flipped);
+        stream.extend_from_slice(&frame_record(&rec));
+        stream.extend_from_slice(&[7, 0, 0]); // torn tail
+        let first = take_frame(&mut stream);
+        match first {
+            FrameOutcome::Record(j) => {
+                assert_eq!(j.field("kind").and_then(Json::as_str), Some("strikes"));
+            }
+            _ => panic!("expected a clean record first"),
+        }
+        assert!(matches!(take_frame(&mut stream), FrameOutcome::BadDigest));
+        assert!(matches!(take_frame(&mut stream), FrameOutcome::Record(_)));
+        assert!(matches!(take_frame(&mut stream), FrameOutcome::Need));
+        assert_eq!(stream.len(), 3, "torn tail stays buffered for the next read");
+        // an implausible length can never resync
+        let mut garbage = vec![0xffu8; 16];
+        assert!(matches!(take_frame(&mut garbage), FrameOutcome::Corrupt));
+    }
+}

@@ -157,6 +157,12 @@ impl Scheduler {
         self.gate.0.lock().unwrap().admitted
     }
 
+    /// Requests parked in the admission queue right now (abandoned
+    /// tickets excluded) — the `health` op's queue-depth figure.
+    pub fn queue_depth(&self) -> usize {
+        self.gate.0.lock().unwrap().waiting() as usize
+    }
+
     /// Opt into load-shedding: jobs submitted with `shed: true` while
     /// `limit` or more requests are parked are rejected with
     /// [`ServeError::Overload`] instead of blocking. `None` (the

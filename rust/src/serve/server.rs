@@ -8,7 +8,7 @@
 //! without touching the pool at all.
 
 use std::io::{BufRead, BufReader, Write};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -82,6 +82,18 @@ pub struct ServerConfig {
     /// Most requests one batch may absorb (a full batch closes its
     /// gather window early). Ignored while batching is disabled.
     pub max_batch: usize,
+    /// Boot as a warm standby (DESIGN.md §15): write requests are
+    /// fenced with a typed `fenced` error until a `promote` op (or the
+    /// standby loop's loss detector) promotes this server. The
+    /// replication stream itself is wired by the transport layer
+    /// (`serve --standby`).
+    pub standby: bool,
+    /// Idle-connection reaper threshold for the TCP transport in
+    /// milliseconds (0 = off, default 5 minutes). Connections with no
+    /// traffic for this long are closed and counted
+    /// (`serve_idle_reaped`); connections with a request in flight and
+    /// replication subscribers are exempt.
+    pub idle_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -99,6 +111,41 @@ impl Default for ServerConfig {
             max_conns: 0,
             gather_window_ms: 0,
             max_batch: 32,
+            standby: false,
+            idle_timeout_ms: 300_000,
+        }
+    }
+}
+
+/// The failover role one server currently holds (DESIGN.md §15). Stored
+/// as an `AtomicU8` on [`Server`] so every request checks it without a
+/// lock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Accepts writes; ships its journal to subscribed standbys.
+    Primary = 0,
+    /// Replicates a primary's journal; fences writes until promoted.
+    Standby = 1,
+    /// An ex-primary that observed a higher failover epoch: it fences
+    /// writes permanently (restart it as a standby to rejoin).
+    Fenced = 2,
+}
+
+impl Role {
+    fn from_u8(v: u8) -> Role {
+        match v {
+            1 => Role::Standby,
+            2 => Role::Fenced,
+            _ => Role::Primary,
+        }
+    }
+
+    /// Stable lowercase name (`health` responses, fenced errors).
+    pub fn name(self) -> &'static str {
+        match self {
+            Role::Primary => "primary",
+            Role::Standby => "standby",
+            Role::Fenced => "fenced",
         }
     }
 }
@@ -128,6 +175,13 @@ pub struct Server {
     max_conns: usize,
     /// Cross-request batching (None = disabled).
     batching: Option<Batching>,
+    /// Failover role ([`Role`] as `u8`).
+    role: AtomicU8,
+    /// Replication lag in records, as last reported by the standby
+    /// apply loop; a primary reports its subscriber queues instead.
+    repl_lag: AtomicU64,
+    /// Idle-connection reaper threshold for the poll-loop transport.
+    idle_timeout_ms: u64,
 }
 
 impl Server {
@@ -164,6 +218,117 @@ impl Server {
             deadline_ms: cfg.deadline_ms,
             max_conns: if cfg.max_conns == 0 { 1024 } else { cfg.max_conns },
             batching,
+            role: AtomicU8::new(if cfg.standby { Role::Standby } else { Role::Primary } as u8),
+            repl_lag: AtomicU64::new(0),
+            idle_timeout_ms: cfg.idle_timeout_ms,
+        }
+    }
+
+    /// Direct registry access for the replication layer (the standby
+    /// apply loop and the transports' subscriber plumbing).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// This server's current failover role.
+    pub fn role(&self) -> Role {
+        Role::from_u8(self.role.load(Ordering::SeqCst))
+    }
+
+    /// The failover epoch this server last observed. Journaled on every
+    /// raise, so it survives restarts.
+    pub fn epoch(&self) -> u64 {
+        self.registry.epoch()
+    }
+
+    /// Idle-connection reaper threshold for the TCP transport (0 = off).
+    pub(crate) fn idle_timeout_ms(&self) -> u64 {
+        self.idle_timeout_ms
+    }
+
+    /// Record the replication lag the standby loop last computed from a
+    /// primary heartbeat; surfaced by the `health` op.
+    pub fn set_repl_lag(&self, records: u64) {
+        self.repl_lag.store(records, Ordering::Relaxed);
+        obsreg::REPL_LAG_RECORDS.set(records);
+    }
+
+    /// Promote this server to primary, bumping (and journaling) the
+    /// failover epoch so the old primary can be fenced by anything that
+    /// later shows it the new epoch. Returns the epoch now in force and
+    /// whether a promotion actually happened — a `promote` against a
+    /// server that is already primary is a no-op reporting its epoch,
+    /// so retried promotions cannot burn epochs.
+    pub fn promote(&self) -> (u64, bool) {
+        if self.role() == Role::Primary {
+            return (self.epoch(), false);
+        }
+        let epoch = self.registry.advance_epoch();
+        self.role.store(Role::Primary as u8, Ordering::SeqCst);
+        obsreg::REPL_PROMOTIONS.inc();
+        obsreg::REPL_EPOCH.set(epoch);
+        eprintln!("serve: promoted to primary at epoch {epoch}");
+        (epoch, true)
+    }
+
+    /// Adopt an epoch observed on the wire (journaling any raise). An
+    /// epoch ahead of ours while we hold the primary role is proof a
+    /// newer primary exists — this server lost a failover it didn't
+    /// witness — so it fences its own writes rather than split-brain.
+    /// Returns `true` when this call fenced.
+    pub fn observe_remote_epoch(&self, remote: u64) -> bool {
+        let raised = self.registry.bump_epoch_to(remote);
+        if !raised {
+            return false;
+        }
+        obsreg::REPL_EPOCH.set(self.epoch());
+        if self.role() == Role::Primary {
+            self.role.store(Role::Fenced as u8, Ordering::SeqCst);
+            eprintln!("serve: observed epoch {remote} ahead of ours: fencing writes");
+            return true;
+        }
+        false
+    }
+
+    /// Handle one `repl_subscribe` handshake for the transport layer.
+    ///
+    /// A subscriber presenting an epoch ahead of ours fences us (see
+    /// [`Server::observe_remote_epoch`]) and is refused with a typed
+    /// `fenced` error; a non-primary refuses too (the replication chain
+    /// is depth one). Otherwise the subscriber is attached under the
+    /// journal lock — snapshot first, then live appends, no gap — and
+    /// the ok response carries our role, epoch and snapshot record
+    /// count. Returns the rendered response either way; `Ok` also hands
+    /// the transport the queue to drain into the connection.
+    pub(crate) fn accept_replica(
+        &self,
+        id: u64,
+        remote_epoch: u64,
+    ) -> Result<(String, Arc<super::registry::ReplSubscriber>), String> {
+        if remote_epoch > self.epoch() {
+            self.observe_remote_epoch(remote_epoch);
+            obsreg::SERVE_FENCED_REJECTS.inc();
+            let err =
+                ServeError::Fenced { role: self.role().name().to_string(), epoch: self.epoch() };
+            return Err(protocol::error_response(id, &err));
+        }
+        if self.role() != Role::Primary {
+            obsreg::SERVE_FENCED_REJECTS.inc();
+            let err =
+                ServeError::Fenced { role: self.role().name().to_string(), epoch: self.epoch() };
+            return Err(protocol::error_response(id, &err));
+        }
+        let sub = Arc::new(super::registry::ReplSubscriber::new());
+        match self.registry.attach_subscriber(Arc::clone(&sub)) {
+            Ok(records) => {
+                let body = Json::obj(vec![
+                    ("role", Json::Str(self.role().name().to_string())),
+                    ("epoch", Json::Num(self.epoch() as f64)),
+                    ("records", Json::Num(records as f64)),
+                ]);
+                Ok((protocol::ok_response(id, body), sub))
+            }
+            Err(e) => Err(protocol::error_response(id, &ServeError::Invalid(e))),
         }
     }
 
@@ -277,6 +442,27 @@ impl Server {
     }
 
     fn dispatch(&self, request: Request) -> Result<Json, ServeError> {
+        // Write fencing (DESIGN.md §15): a standby, or an ex-primary
+        // that observed a higher failover epoch, rejects anything that
+        // mutates fit or registry state — two servers can never both
+        // act as the primary within one epoch. Reads (stats, metrics,
+        // health) stay available so a fenced server can still be
+        // inspected.
+        if self.role() != Role::Primary
+            && matches!(
+                request,
+                Request::FitPath { .. }
+                    | Request::FitPoint { .. }
+                    | Request::Predict { .. }
+                    | Request::RegisterDataset { .. }
+            )
+        {
+            obsreg::SERVE_FENCED_REJECTS.inc();
+            return Err(ServeError::Fenced {
+                role: self.role().name().to_string(),
+                epoch: self.epoch(),
+            });
+        }
         match request {
             Request::FitPath { dataset, model } => self.do_fit_path(&dataset, &model),
             Request::FitPoint { dataset, model, sigma_ratio } => {
@@ -288,6 +474,21 @@ impl Server {
             Request::RegisterDataset { dataset } => self.do_register(&dataset),
             Request::Stats => Ok(self.do_stats()),
             Request::Metrics { format } => Ok(self.do_metrics(&format)),
+            Request::Health => Ok(self.do_health()),
+            Request::Promote => {
+                let (epoch, promoted) = self.promote();
+                Ok(Json::obj(vec![
+                    ("promoted", Json::Bool(promoted)),
+                    ("role", Json::Str(self.role().name().to_string())),
+                    ("epoch", Json::Num(epoch as f64)),
+                ]))
+            }
+            // The subscribe handshake switches the connection to raw
+            // journal frames, which only the poll-loop TCP transport
+            // can carry; it intercepts the op before dispatch.
+            Request::ReplSubscribe { .. } => Err(ServeError::Invalid(
+                "repl_subscribe is only served on the TCP transport".to_string(),
+            )),
             Request::Shutdown => {
                 // Graceful drain: parked fit jobs are rejected with typed
                 // `shutdown` errors; admitted ones run to completion (the
@@ -519,7 +720,14 @@ impl Server {
         };
         let key = model.point_key();
         let prior = entry.point_state(&key);
-        let warm = prior.is_some();
+        // No in-memory point state (a fresh boot, or a standby promoted
+        // after journal-shipped replication): fall back to the last
+        // journaled seed, so the first failed-over fit warm-starts from
+        // the exact coefficients the old primary last stored. On a
+        // server without a state dir `restored_seed()` is always None —
+        // the non-durable path is bit-for-bit what it was.
+        let restored = if prior.is_none() { entry.restored_seed() } else { None };
+        let warm = prior.is_some() || restored.is_some();
         // Chaining replicates the store/read cycle, which only exists
         // while the warm-start cache is on; with it off, every item is
         // the same independent cold fit a sequential client would get.
@@ -583,9 +791,12 @@ impl Server {
                 let (seed, sigma_max): (PathSeed, f64) = match prior {
                     Some(state) => (state.seed.clone(), state.sigma_max),
                     None => {
+                        // σ_max always comes from the zero seed — the
+                        // restored seed sits at whatever σ the primary
+                        // last fit, which is not the path scale.
                         let zero = zero_seed(prob.as_ref(), &opts_first, &gradient);
                         let smax = zero.sigma;
-                        (zero, smax)
+                        (restored.unwrap_or(zero), smax)
                     }
                 };
                 let sigmas: Vec<f64> = sigma_ratios.iter().map(|r| sigma_max * r).collect();
@@ -905,6 +1116,45 @@ impl Server {
         } else {
             self.metrics.snapshot()
         }
+    }
+
+    /// The `health` op: one cheap summary of this server's failover
+    /// state — role, epoch, replication lag, queue depth — plus a
+    /// pre-rendered one-line `text` form so a shell probe can `grep`
+    /// it without a JSON parser.
+    fn do_health(&self) -> Json {
+        let role = self.role();
+        let epoch = self.epoch();
+        let (subs, primary_lag) = self.registry.subscriber_stats();
+        // A primary's lag is its slowest subscriber queue; a standby's
+        // is what its apply loop last computed from a heartbeat.
+        let lag = match role {
+            Role::Primary => primary_lag,
+            _ => self.repl_lag.load(Ordering::Relaxed),
+        };
+        let queue = self.sched.queue_depth();
+        let state = if self.is_shutdown() {
+            "draining"
+        } else if role == Role::Fenced {
+            "degraded"
+        } else {
+            "ready"
+        };
+        let text = format!(
+            "role={} epoch={epoch} lag={lag} queue={queue} subscribers={subs} state={state}",
+            role.name()
+        );
+        Json::obj(vec![
+            ("role", Json::Str(role.name().to_string())),
+            ("epoch", Json::Num(epoch as f64)),
+            ("journal_records", Json::Num(self.registry.journal_records_total() as f64)),
+            ("replication_lag", Json::Num(lag as f64)),
+            ("subscribers", Json::Num(subs as f64)),
+            ("queue_depth", Json::Num(queue as f64)),
+            ("in_flight", Json::Num(self.sched.in_flight() as f64)),
+            ("state", Json::Str(state.to_string())),
+            ("text", Json::Str(text)),
+        ])
     }
 
     /// Serve newline-delimited requests from `reader`, writing responses
@@ -1235,6 +1485,9 @@ fn op_name(request: &Request) -> &'static str {
         Request::RegisterDataset { .. } => "dataset_from_file",
         Request::Stats => "stats",
         Request::Metrics { .. } => "metrics",
+        Request::Health => "health",
+        Request::Promote => "promote",
+        Request::ReplSubscribe { .. } => "repl_subscribe",
         Request::Shutdown => "shutdown",
     }
 }
@@ -1975,5 +2228,69 @@ mod tests {
         let _ = cl.round_trip(r#"{"id": 3, "op": "shutdown"}"#).unwrap();
         drop(cl);
         handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn health_reports_role_epoch_and_queue() {
+        let srv = server();
+        let h = parse_ok(&srv.handle_line(r#"{"id": 1, "op": "health"}"#));
+        assert_eq!(h.field("role").unwrap().as_str(), Some("primary"));
+        assert_eq!(h.field("epoch").unwrap().as_usize(), Some(0));
+        assert_eq!(h.field("state").unwrap().as_str(), Some("ready"));
+        assert_eq!(h.field("queue_depth").unwrap().as_usize(), Some(0));
+        assert_eq!(h.field("subscribers").unwrap().as_usize(), Some(0));
+        let text = h.field("text").unwrap().as_str().unwrap();
+        assert!(
+            text.contains("role=primary") && text.contains("state=ready"),
+            "one-line form must be grep-able: {text}"
+        );
+    }
+
+    #[test]
+    fn standby_fences_writes_until_promoted() {
+        let srv = Server::new(ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            standby: true,
+            ..Default::default()
+        });
+        let resp = Json::parse(&srv.handle_line(&fit_path_line(1, 5))).unwrap();
+        assert_eq!(resp.field("ok"), Some(&Json::Bool(false)));
+        assert_eq!(resp.field("error_kind").unwrap().as_str(), Some("fenced"));
+        assert!(obsreg::SERVE_FENCED_REJECTS.get() >= 1);
+        // reads stay available on a standby
+        parse_ok(&srv.handle_line(r#"{"id": 2, "op": "stats"}"#));
+        let h = parse_ok(&srv.handle_line(r#"{"id": 3, "op": "health"}"#));
+        assert_eq!(h.field("role").unwrap().as_str(), Some("standby"));
+        assert_eq!(h.field("state").unwrap().as_str(), Some("ready"));
+        // promotion bumps the epoch and opens writes
+        let p = parse_ok(&srv.handle_line(r#"{"id": 4, "op": "promote"}"#));
+        assert_eq!(p.field("promoted"), Some(&Json::Bool(true)));
+        assert_eq!(p.field("role").unwrap().as_str(), Some("primary"));
+        assert_eq!(p.field("epoch").unwrap().as_usize(), Some(1));
+        parse_ok(&srv.handle_line(&fit_path_line(5, 5)));
+        // a retried promote is a no-op at the same epoch
+        let p2 = parse_ok(&srv.handle_line(r#"{"id": 6, "op": "promote"}"#));
+        assert_eq!(p2.field("promoted"), Some(&Json::Bool(false)));
+        assert_eq!(p2.field("epoch").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn observing_a_higher_epoch_fences_a_primary() {
+        let srv = server();
+        assert_eq!(srv.role(), Role::Primary);
+        assert!(srv.observe_remote_epoch(3), "higher epoch must fence");
+        assert_eq!(srv.role(), Role::Fenced);
+        assert_eq!(srv.epoch(), 3);
+        let resp = Json::parse(&srv.handle_line(&fit_path_line(1, 5))).unwrap();
+        assert_eq!(resp.field("error_kind").unwrap().as_str(), Some("fenced"));
+        assert!(resp.field("error").unwrap().as_str().unwrap().contains("epoch 3"));
+        let h = parse_ok(&srv.handle_line(r#"{"id": 2, "op": "health"}"#));
+        assert_eq!(h.field("state").unwrap().as_str(), Some("degraded"));
+        // an older epoch seen later neither un-fences nor regresses
+        assert!(!srv.observe_remote_epoch(2));
+        assert_eq!(srv.role(), Role::Fenced);
+        assert_eq!(srv.epoch(), 3);
     }
 }

@@ -447,6 +447,296 @@ mod checkpointing {
     }
 }
 
+/// Replication failover chaos (DESIGN.md §15): kill -9 the primary and
+/// the promoted standby answers warm and bitwise-identical; a deposed
+/// primary is fenced; corrupted replication frames are skipped, never
+/// applied.
+#[cfg(unix)]
+mod replication {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use slope_screen::serve::client::{connect_tcp_with_retry, Client};
+    use slope_screen::serve::{net, replica};
+
+    fn state_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("slope-repl-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn cfg_with(state: &std::path::Path, standby: bool) -> ServerConfig {
+        ServerConfig {
+            threads: 2,
+            queue: 8,
+            cache: true,
+            standby,
+            state_dir: Some(state.to_path_buf()),
+            ..Default::default()
+        }
+    }
+
+    /// Bind a TCP transport on a kernel-chosen port and run it on its
+    /// own thread. The abort flag is the kill switch: flipping it makes
+    /// the poll loop return on its next tick with no drain and no
+    /// goodbye — as close to `kill -9` as one process can get.
+    fn spawn_tcp(
+        server: &Arc<Server>,
+    ) -> (String, Arc<AtomicBool>, std::thread::JoinHandle<std::io::Result<()>>) {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let abort = Arc::new(AtomicBool::new(false));
+        let srv = Arc::clone(server);
+        let flag = Arc::clone(&abort);
+        let handle =
+            std::thread::spawn(move || net::serve_tcp_listener_abortable(&srv, listener, &flag));
+        (addr, abort, handle)
+    }
+
+    fn connect(addr: &str) -> Client {
+        connect_tcp_with_retry(addr, 80, 25).expect("serve TCP endpoint")
+    }
+
+    fn wait_for(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// The model key of the (single-fingerprint) restored seed a server
+    /// holds, via the same snapshot stream compaction writes.
+    fn seed_key(server: &Server) -> Option<String> {
+        server.registry().snapshot_records().iter().find_map(|r| {
+            if r.field("kind").and_then(Json::as_str) == Some("model") {
+                Some(r.field("key").and_then(Json::as_str).unwrap_or("").to_string())
+            } else {
+                None
+            }
+        })
+    }
+
+    fn point_line(id: u64, seed: u64) -> String {
+        protocol::request_line(
+            id,
+            "fit_point",
+            vec![
+                ("dataset", protocol::synth_dataset_json(40, 120, 5, 0.2, "gaussian", seed)),
+                ("q", Json::Num(0.1)),
+                ("sigma_ratio", Json::Num(0.4)),
+            ],
+        )
+    }
+
+    /// The tentpole acceptance test: fit on the primary, kill it with no
+    /// drain, promote the standby, and the *same* `fit_point` through
+    /// the client's endpoint rotation must come back warm and
+    /// bitwise-identical (wall time aside) — the replicated journal kept
+    /// the standby's seed cache hot.
+    #[test]
+    fn primary_death_fails_over_to_warm_standby_bitwise() {
+        let _g = chaos_lock();
+        fault::clear();
+        let dir_a = state_dir("primary-a");
+        let dir_b = state_dir("standby-a");
+        let primary = Arc::new(Server::new(cfg_with(&dir_a, false)));
+        let (paddr, pabort, phandle) = spawn_tcp(&primary);
+        let standby = Arc::new(Server::new(cfg_with(&dir_b, true)));
+        let (saddr, sabort, shandle) = spawn_tcp(&standby);
+        let repl = replica::spawn_standby(
+            Arc::clone(&standby),
+            replica::StandbyConfig {
+                primaries: vec![paddr.clone()],
+                heartbeat_timeout_ms: 250,
+                ..Default::default()
+            },
+        );
+
+        let mut client = connect(&paddr);
+        let fit = parse(&client.round_trip(&fit_line(1, 321)).unwrap());
+        assert_ok(&fit);
+        let reference = parse(&client.round_trip(&point_line(2, 321)).unwrap());
+        assert_ok(&reference);
+        let rref = reference.field("result").unwrap();
+        assert_eq!(
+            rref.field("warm"),
+            Some(&Json::Bool(true)),
+            "the primary itself warms from the journaled path seed"
+        );
+
+        // The journal ships asynchronously; wait until the standby holds
+        // the replicated seed before pulling the plug.
+        wait_for("the seed to replicate", || seed_key(&standby).is_some());
+
+        // kill -9: the primary's transport vanishes mid-heartbeat.
+        pabort.store(true, Ordering::SeqCst);
+        phandle.join().unwrap().unwrap();
+
+        let mut sclient = connect(&saddr);
+        let promoted = parse(
+            &sclient.round_trip(&protocol::request_line(3, "promote", vec![])).unwrap(),
+        );
+        assert_ok(&promoted);
+        let pr = promoted.field("result").unwrap();
+        assert_eq!(pr.field("promoted"), Some(&Json::Bool(true)));
+        assert_eq!(pr.field("epoch").and_then(Json::as_usize), Some(1));
+
+        // A fresh client lists the dead primary first: the connect must
+        // rotate past it, and the failed-over fit must be the bitwise
+        // answer the primary would have given.
+        let mut failover = Client::connect_tcp(&format!("{paddr},{saddr}")).unwrap();
+        let fo = parse(&failover.round_trip(&point_line(4, 321)).unwrap());
+        assert_ok(&fo);
+        let rfo = fo.field("result").unwrap();
+        assert_eq!(rfo.field("warm"), Some(&Json::Bool(true)), "standby seed cache was cold");
+        let bits = |r: &Json, f: &str| {
+            r.field(f)
+                .and_then(Json::as_f64)
+                .unwrap_or_else(|| panic!("missing field {f}"))
+                .to_bits()
+        };
+        for f in ["sigma", "sigma_max", "deviance", "dev_ratio"] {
+            assert_eq!(bits(rfo, f), bits(rref, f), "{f} drifted across failover");
+        }
+        assert_eq!(rfo.field("nonzeros"), rref.field("nonzeros"), "support drifted");
+
+        let health = parse(
+            &failover.round_trip(&protocol::request_line(5, "health", vec![])).unwrap(),
+        );
+        assert_ok(&health);
+        let h = health.field("result").unwrap();
+        assert_eq!(h.field("role").and_then(Json::as_str), Some("primary"));
+        assert_eq!(h.field("epoch").and_then(Json::as_usize), Some(1));
+        assert_eq!(h.field("state").and_then(Json::as_str), Some("ready"));
+
+        sabort.store(true, Ordering::SeqCst);
+        shandle.join().unwrap().unwrap();
+        repl.join().unwrap();
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    /// Epoch fencing: once any node has been promoted past it, the old
+    /// primary must refuse writes — split-brain protection. The deposed
+    /// node still answers health (degraded) and stats.
+    #[test]
+    fn stale_epoch_ex_primary_is_fenced() {
+        use std::io::{BufRead, BufReader, Write};
+
+        let _g = chaos_lock();
+        fault::clear();
+        let dir = state_dir("fence");
+        let primary = Arc::new(Server::new(cfg_with(&dir, false)));
+        let (addr, abort, handle) = spawn_tcp(&primary);
+
+        // A standby promoted elsewhere (epoch 5) announces itself; the
+        // subscription is refused *and* the refusal deposes this node.
+        let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+        raw.write_all(b"{\"id\": 1, \"op\": \"repl_subscribe\", \"epoch\": 5}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(raw.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let refusal = parse(&line);
+        assert_eq!(error_kind(&refusal), "fenced");
+
+        let mut client = connect(&addr);
+        let refused = parse(&client.round_trip(&fit_line(2, 77)).unwrap());
+        assert_eq!(error_kind(&refused), "fenced");
+        assert!(
+            refused.field("error").unwrap().as_str().unwrap().contains("epoch 5"),
+            "{refused:?}"
+        );
+
+        let health = parse(
+            &client.round_trip(&protocol::request_line(3, "health", vec![])).unwrap(),
+        );
+        assert_ok(&health);
+        let h = health.field("result").unwrap();
+        assert_eq!(h.field("role").and_then(Json::as_str), Some("fenced"));
+        assert_eq!(h.field("epoch").and_then(Json::as_usize), Some(5));
+        assert_eq!(h.field("state").and_then(Json::as_str), Some("degraded"));
+        // Reads survive the fence.
+        assert_ok(&parse(&client.round_trip(&protocol::request_line(4, "stats", vec![])).unwrap()));
+
+        abort.store(true, Ordering::SeqCst);
+        handle.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A replication frame corrupted in flight (armed digest flip) must
+    /// be skipped and counted on the standby — never applied — and the
+    /// next clean record for the same fingerprint heals the gap.
+    #[test]
+    fn corrupt_replication_frames_are_skipped_never_applied() {
+        let _g = chaos_lock();
+        fault::clear();
+        let dir_p = state_dir("flip-p");
+        let dir_s = state_dir("flip-s");
+        let primary = Arc::new(Server::new(cfg_with(&dir_p, false)));
+        let (paddr, pabort, phandle) = spawn_tcp(&primary);
+        let standby = Arc::new(Server::new(cfg_with(&dir_s, true)));
+        let repl = replica::spawn_standby(
+            Arc::clone(&standby),
+            replica::StandbyConfig {
+                primaries: vec![paddr.clone()],
+                heartbeat_timeout_ms: 250,
+                ..Default::default()
+            },
+        );
+        let mut client = connect(&paddr);
+        // Three path fits on one dataset, distinct model keys; the
+        // restored seed is last-record-wins per fingerprint, so the
+        // standby's seed key tells exactly which record it applied last.
+        let fit_q = |id: u64, q: f64| {
+            protocol::request_line(
+                id,
+                "fit_path",
+                vec![
+                    ("dataset", protocol::synth_dataset_json(40, 120, 5, 0.2, "gaussian", 555)),
+                    ("q", Json::Num(q)),
+                    ("path_length", Json::Num(6.0)),
+                ],
+            )
+        };
+        assert_ok(&parse(&client.round_trip(&fit_q(1, 0.1)).unwrap()));
+        let key1 = seed_key(&primary).expect("the primary journaled its seed");
+        wait_for("the first seed to replicate", || seed_key(&standby).as_ref() == Some(&key1));
+
+        // Arm the wire fault: the next shipped record's digest is
+        // flipped in flight.
+        let skips_before = obsreg::REPL_DIGEST_SKIPS.get();
+        fault::install(FaultPlan { repl_flip_digest_at: Some(1), ..FaultPlan::default() });
+        assert_ok(&parse(&client.round_trip(&fit_q(2, 0.2)).unwrap()));
+        let key2 = seed_key(&primary).expect("second seed journaled");
+        assert_ne!(key2, key1, "distinct model keys are the point of this test");
+        wait_for("the flipped frame to be counted", || {
+            obsreg::REPL_DIGEST_SKIPS.get() > skips_before
+        });
+        fault::clear();
+        assert_eq!(
+            seed_key(&standby).as_ref(),
+            Some(&key1),
+            "a record with a bad digest must never be applied"
+        );
+
+        // A clean later record heals the standby.
+        assert_ok(&parse(&client.round_trip(&fit_q(3, 0.05)).unwrap()));
+        let key3 = seed_key(&primary).expect("third seed journaled");
+        wait_for("the clean seed to replicate", || seed_key(&standby).as_ref() == Some(&key3));
+
+        // Shut the standby's loop down before the primary vanishes.
+        assert_ok(&parse(&standby.handle_line("{\"id\": 9, \"op\": \"shutdown\"}")));
+        repl.join().unwrap();
+        pabort.store(true, Ordering::SeqCst);
+        phandle.join().unwrap().unwrap();
+        let _ = std::fs::remove_dir_all(&dir_p);
+        let _ = std::fs::remove_dir_all(&dir_s);
+    }
+}
+
 #[cfg(unix)]
 mod socket {
     use super::*;
